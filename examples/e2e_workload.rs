@@ -1,0 +1,175 @@
+//! End-to-end driver: all layers composed on a real small workload.
+//!
+//! 1. Loads the AOT-compiled JAX/Pallas CNN training artifact
+//!    (`artifacts/cnn_train.hlo.txt`, built by `make artifacts`) into the
+//!    rust PJRT runtime — Python is NOT running here.
+//! 2. Trains the CNN for a few hundred SGD steps on synthetic data
+//!    (separable class blobs) and logs the loss curve.
+//! 3. Describes the same CNN to the workload layer, profiles its memory
+//!    behaviour, pushes its address trace through the GPGPU-Sim
+//!    substitute, and reports the paper's headline metric — EDP vs SRAM —
+//!    for STT-MRAM and SOT-MRAM L2 caches running *this* workload.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_workload`
+
+use deepnvm::analysis::evaluate;
+use deepnvm::device::bitcell::BitcellKind;
+use deepnvm::gpusim::{capacity_sweep, dnn_trace};
+use deepnvm::nvsim::optimizer::tuned_cache;
+use deepnvm::runtime::{Runtime, TensorF32};
+use deepnvm::util::rng::Rng;
+use deepnvm::util::table::{fnum, Table};
+use deepnvm::util::units::MB;
+use deepnvm::workloads::dnn::{DnnBuilder, Shape};
+use deepnvm::workloads::memstats::{dnn_stats, Phase};
+
+const BATCH: usize = 32; // must match aot.py --batch
+const IMAGE: usize = 16;
+const CLASSES: usize = 10;
+const STEPS: usize = 300;
+
+/// Parameter shapes, mirroring python/compile/model.py::param_shapes().
+fn param_shapes() -> Vec<Vec<i64>> {
+    vec![
+        vec![3, 3, 1, 8],
+        vec![8],
+        vec![3, 3, 8, 16],
+        vec![16],
+        vec![6 * 6 * 16, CLASSES as i64],
+        vec![CLASSES as i64],
+    ]
+}
+
+fn he_init(rng: &mut Rng, dims: &[i64]) -> TensorF32 {
+    let numel: i64 = dims.iter().product();
+    if dims.len() == 1 {
+        return TensorF32::zeros(dims.to_vec());
+    }
+    let fan_in: i64 = dims[..dims.len() - 1].iter().product();
+    let scale = (2.0 / fan_in as f64).sqrt();
+    let data = (0..numel)
+        .map(|_| {
+            // Box-Muller from the deterministic PRNG.
+            let u1 = rng.f64().max(1e-12);
+            let u2 = rng.f64();
+            ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos() * scale) as f32
+        })
+        .collect();
+    TensorF32::new(dims.to_vec(), data)
+}
+
+/// Synthetic separable data: class k gets a blob at a class-specific
+/// location; labels one-hot.
+fn synth_batch(rng: &mut Rng) -> (TensorF32, TensorF32) {
+    let mut x = vec![0.0f32; BATCH * IMAGE * IMAGE];
+    let mut y = vec![0.0f32; BATCH * CLASSES];
+    for b in 0..BATCH {
+        let class = rng.usize_in(0, CLASSES);
+        y[b * CLASSES + class] = 1.0;
+        let (cy, cx) = (2 + (class / 5) * 8, 2 + (class % 5) * 2);
+        for dy in 0..4 {
+            for dx in 0..4 {
+                let noise = (rng.f64() * 0.4) as f32;
+                x[b * IMAGE * IMAGE + (cy + dy) * IMAGE + (cx + dx)] = 1.0 + noise;
+            }
+        }
+        for p in 0..IMAGE * IMAGE {
+            x[b * IMAGE * IMAGE + p] += (rng.f64() * 0.1) as f32;
+        }
+    }
+    (
+        TensorF32::new(vec![BATCH as i64, IMAGE as i64, IMAGE as i64, 1], x),
+        TensorF32::new(vec![BATCH as i64, CLASSES as i64], y),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Layer check: artifacts present? ---
+    let artifact = "artifacts/cnn_train.hlo.txt";
+    if !std::path::Path::new(artifact).exists() {
+        eprintln!("missing {artifact}; run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // --- 1. PJRT runtime: load + compile the training step ---
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let train = rt.load(artifact)?;
+    println!("compiled {artifact}");
+
+    // --- 2. Train: a few hundred SGD steps on synthetic data ---
+    let mut rng = Rng::new(42);
+    let mut params: Vec<TensorF32> = param_shapes().iter().map(|s| he_init(&mut rng, s)).collect();
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    let t0 = std::time::Instant::now();
+    for step in 0..STEPS {
+        let (x, y) = synth_batch(&mut rng);
+        let mut inputs = params.clone();
+        inputs.push(x);
+        inputs.push(y);
+        let outputs = train.run(&inputs)?;
+        last_loss = outputs.last().unwrap().data[0];
+        params = outputs[..outputs.len() - 1].to_vec();
+        if first_loss.is_none() {
+            first_loss = Some(last_loss);
+        }
+        if step % 50 == 0 || step == STEPS - 1 {
+            println!("step {step:>4}  loss {last_loss:.4}");
+        }
+    }
+    let first = first_loss.unwrap();
+    println!(
+        "trained {STEPS} steps in {:.1}s: loss {first:.4} -> {last_loss:.4}",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(
+        last_loss < first * 0.5,
+        "training must reduce loss ({first} -> {last_loss})"
+    );
+
+    // --- 3. Cross-layer analysis of this exact workload ---
+    let cnn = DnnBuilder::new("MiniCNN", 0.0, Shape::new(1, IMAGE as u64, IMAGE as u64))
+        .conv("conv1", 8, 3, 1, 0)
+        .conv("conv2", 16, 3, 1, 0)
+        .pool("pool", 2, 2, 0)
+        .fc("fc", CLASSES as u64)
+        .build();
+    let stats = dnn_stats(&cnn, Phase::Training, BATCH as u64, 3 * MB);
+    println!(
+        "\nMiniCNN-T memory statistics: {} L2 reads / {} writes (R/W {:.2})",
+        stats.l2_reads,
+        stats.l2_writes,
+        stats.rw_ratio()
+    );
+
+    // GPGPU-Sim substitute on the same network.
+    let trace = dnn_trace(&cnn, BATCH as u64);
+    let sweep = capacity_sweep(&trace, &[7 * MB, 10 * MB]);
+    for p in &sweep[1..] {
+        println!(
+            "  L2 {}MB: DRAM accesses {} ({:+.1}% vs 3MB)",
+            p.result.l2_bytes / MB,
+            p.result.dram_accesses(),
+            -p.dram_reduction_pct
+        );
+    }
+
+    // Headline metric for this workload.
+    let mut t = Table::new(
+        "MiniCNN training: EDP vs SRAM (3MB iso-capacity)",
+        &["tech", "EDP (norm)", "reduction"],
+    );
+    let base = evaluate(&tuned_cache(BitcellKind::Sram, 3 * MB).ppa, &stats).edp_with_dram();
+    for kind in [BitcellKind::SttMram, BitcellKind::SotMram] {
+        let e = evaluate(&tuned_cache(kind, 3 * MB).ppa, &stats).edp_with_dram();
+        t.row(&[
+            kind.name().into(),
+            fnum(e / base, 3),
+            format!("{:.2}x", base / e),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!("e2e OK: PJRT training + profiling + simulation + roll-up all composed.");
+    Ok(())
+}

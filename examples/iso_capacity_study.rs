@@ -1,0 +1,17 @@
+//! Iso-capacity study (paper §4.1): regenerate Figs 4–6 and print the
+//! headline paper-vs-measured comparison.
+//!
+//! Run: `cargo run --release --example iso_capacity_study`
+
+use deepnvm::coordinator::{run_one, RunnerConfig};
+
+fn main() {
+    let cfg = RunnerConfig::default();
+    for id in ["fig4", "fig5", "fig6"] {
+        let report = run_one(id, &cfg).expect("registered experiment");
+        for h in &report.headlines {
+            eprintln!("HEADLINE {h}");
+        }
+    }
+    eprintln!("series CSVs written under results/");
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the DeepNVM++ pipeline in ~40 lines.
+//!
+//! Characterizes the three bitcells (Table 1), EDAP-tunes a 3MB cache for
+//! each (Table 2's iso-capacity columns), and evaluates one workload
+//! (AlexNet inference) on all three — the paper's core loop.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use deepnvm::analysis::evaluate;
+use deepnvm::device::bitcell::BitcellKind;
+use deepnvm::nvsim::optimizer::tuned_cache;
+use deepnvm::util::table::{fnum, Table};
+use deepnvm::util::units::{to_mm2, to_mw, to_nj, to_ns, MB};
+use deepnvm::workloads::memstats::Phase;
+use deepnvm::workloads::profiler::{profile, Workload, PROFILE_L2};
+
+fn main() {
+    // 1. Device + cache layers: EDAP-tuned 3MB L2 per technology.
+    let mut t = Table::new(
+        "EDAP-tuned 3MB L2 caches",
+        &["tech", "RL (ns)", "WL (ns)", "RE (nJ)", "WE (nJ)", "leak (mW)", "area (mm2)"],
+    );
+    let mut caches = Vec::new();
+    for kind in BitcellKind::ALL {
+        let c = tuned_cache(kind, 3 * MB);
+        t.row(&[
+            kind.name().into(),
+            fnum(to_ns(c.ppa.read_latency), 2),
+            fnum(to_ns(c.ppa.write_latency), 2),
+            fnum(to_nj(c.ppa.read_energy), 3),
+            fnum(to_nj(c.ppa.write_energy), 3),
+            fnum(to_mw(c.ppa.leakage_power), 0),
+            fnum(to_mm2(c.ppa.area), 2),
+        ]);
+        caches.push(c.ppa);
+    }
+    println!("{}", t.render());
+
+    // 2. Workload layer: profile AlexNet inference (batch 4, per paper).
+    let alexnet = Workload::Dnn { index: 0, phase: Phase::Inference };
+    let stats = profile(alexnet, 4, PROFILE_L2).stats;
+    println!(
+        "AlexNet-I memory statistics: {} L2 reads, {} L2 writes (R/W {:.2})\n",
+        stats.l2_reads,
+        stats.l2_writes,
+        stats.rw_ratio()
+    );
+
+    // 3. Cross-layer roll-up: energy/EDP per technology.
+    let mut t = Table::new(
+        "AlexNet-I on each technology (3MB L2)",
+        &["tech", "cache energy (mJ)", "EDP vs SRAM"],
+    );
+    let base = evaluate(&caches[0], &stats).edp_with_dram();
+    for (kind, ppa) in BitcellKind::ALL.iter().zip(&caches) {
+        let e = evaluate(ppa, &stats);
+        t.row(&[
+            kind.name().into(),
+            fnum(e.cache_energy() * 1e3, 1),
+            fnum(e.edp_with_dram() / base, 3),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("Next: `repro list` for every paper table/figure generator.");
+}

@@ -1,0 +1,17 @@
+//! Scalability study (paper §4.3): regenerate Figs 10–13 — every
+//! technology EDAP-tuned at 1..32MB, workload suite evaluated per point.
+//!
+//! Run: `cargo run --release --example scalability_study`
+
+use deepnvm::coordinator::{run_one, RunnerConfig};
+
+fn main() {
+    let cfg = RunnerConfig::default();
+    for id in ["fig10", "fig11", "fig12", "fig13"] {
+        let report = run_one(id, &cfg).expect("registered experiment");
+        for h in &report.headlines {
+            eprintln!("HEADLINE {h}");
+        }
+    }
+    eprintln!("series CSVs written under results/");
+}

@@ -1,0 +1,110 @@
+"""AOT compilation: lower the L2 entry points to HLO **text** artifacts.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under --out-dir, default ../artifacts):
+  kernel_matmul.hlo.txt   the L1 matmul kernel alone (256×512 @ 512×192)
+  cnn_infer.hlo.txt       CNN logits:  (6 params, x[N,16,16,1]) -> (logits,)
+  cnn_train.hlo.txt       SGD step:    (6 params, x, onehot) -> (6 params, loss)
+  manifest.json           input/output shapes per artifact (for rust)
+
+Usage: python -m compile.aot [--out-dir DIR] [--batch N]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.matmul import matmul
+
+DEFAULT_BATCH = 32
+KERNEL_DIMS = (256, 512, 192)  # (M, K, N) for the standalone kernel artifact
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts(batch):
+    """Return {name: (lowered, input_shapes, output_shapes)}."""
+    pshapes = model.param_shapes()
+    x_shape = (batch, model.IMAGE, model.IMAGE, 1)
+    y_shape = (batch, model.CLASSES)
+
+    m, k, n = KERNEL_DIMS
+    kernel_lowered = jax.jit(lambda a, b: (matmul(a, b),)).lower(
+        _spec((m, k)), _spec((k, n))
+    )
+
+    infer_args = tuple(_spec(s) for s in pshapes) + (_spec(x_shape),)
+    infer_lowered = jax.jit(
+        lambda *args: model.infer(args[:-1], args[-1])
+    ).lower(*infer_args)
+
+    train_args = tuple(_spec(s) for s in pshapes) + (_spec(x_shape), _spec(y_shape))
+    train_lowered = jax.jit(
+        lambda *args: model.train_step(args[:-2], args[-2], args[-1])
+    ).lower(*train_args)
+
+    return {
+        "kernel_matmul": (
+            kernel_lowered,
+            [list((m, k)), list((k, n))],
+            [list((m, n))],
+        ),
+        "cnn_infer": (
+            infer_lowered,
+            [list(s) for s in pshapes] + [list(x_shape)],
+            [[batch, model.CLASSES]],
+        ),
+        "cnn_train": (
+            train_lowered,
+            [list(s) for s in pshapes] + [list(x_shape), list(y_shape)],
+            [list(s) for s in pshapes] + [[]],
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"batch": args.batch, "artifacts": {}}
+    for name, (lowered, in_shapes, out_shapes) in build_artifacts(args.batch).items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": in_shapes,
+            "outputs": out_shapes,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

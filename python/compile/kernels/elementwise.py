@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: fused bias + ReLU epilogue.
+
+The GPU kernels the paper profiles fuse the conv bias/activation into the
+GEMM epilogue; on TPU the same fusion is a VPU elementwise pass over the
+MXU output tile while it is still in VMEM. Kept as a separate kernel here
+so the epilogue can be reused by both the matmul and conv paths.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+BLOCK_C = 128
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...], 0.0)
+
+
+def _pad_to(x, multiple, axis):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _bias_relu_impl(x, b, interpret=True):
+    r, c = x.shape
+    assert b.shape == (c,), f"bias {b.shape} vs {x.shape}"
+    xp = _pad_to(_pad_to(x, BLOCK_R, 0), BLOCK_C, 1)
+    bp = _pad_to(b[None, :], BLOCK_C, 1)
+    rp, cp = xp.shape
+    out = pl.pallas_call(
+        _bias_relu_kernel,
+        grid=(rp // BLOCK_R, cp // BLOCK_C),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK_C), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), x.dtype),
+        interpret=interpret,
+    )(xp, bp)
+    return out[:r, :c]
+
+
+@jax.custom_vjp
+def bias_relu(x, b):
+    """``relu(x + b)`` with ``b`` broadcast over rows, differentiable.
+
+    Args:
+      x: f32[R, C]
+      b: f32[C]
+    """
+    return _bias_relu_impl(x, b)
+
+
+def _bias_relu_fwd(x, b):
+    out = _bias_relu_impl(x, b)
+    return out, out
+
+
+def _bias_relu_bwd(out, g):
+    dx = jnp.where(out > 0, g, 0.0)
+    return dx, jnp.sum(dx, axis=0)
+
+
+bias_relu.defvjp(_bias_relu_fwd, _bias_relu_bwd)

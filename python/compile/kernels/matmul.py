@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernel: tiled matmul (the DNN workloads' compute hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's workloads
+run CUDA sgemm kernels tiled for GPU threadblocks/shared memory. On TPU the
+same insight — keep a working tile in fast on-chip memory and stream the K
+dimension — maps to BlockSpec-driven HBM→VMEM staging with MXU-aligned
+(128×128) blocks and an fp32 VMEM accumulator scratch. The grid is ordered
+(m, n, k) with k innermost so the accumulator tile stays resident while K
+streams (double-buffer friendly).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret mode lowers to plain HLO, which is what the
+rust runtime executes. Real-TPU performance is estimated from the VMEM
+footprint / MXU utilization in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned block edges. VMEM footprint per grid step:
+# (BM*BK + BK*BN + BM*BN) * 4B = 192 KiB at 128³ — comfortably inside the
+# ~16 MiB VMEM with room for double buffering.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps):
+    """One (m, n, k) grid step: acc += x_tile @ y_tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # fp32 accumulation on the MXU.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x, multiple, axis):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _matmul_impl(x, y, interpret=True):
+    """``x @ y`` via the Pallas kernel, padding ragged edges to the blocks."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    xp = _pad_to(_pad_to(x, BLOCK_M, 0), BLOCK_K, 1)
+    yp = _pad_to(_pad_to(y, BLOCK_K, 0), BLOCK_N, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    k_steps = kp // BLOCK_K
+    grid = (mp // BLOCK_M, np_ // BLOCK_N, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, BLOCK_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BLOCK_K, BLOCK_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu_vmem((BLOCK_M, BLOCK_N), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """``x @ y`` on the Pallas kernel, differentiable.
+
+    The backward pass reuses the same kernel (dX = dO·Yᵀ, dY = Xᵀ·dO), so
+    training lowers to three Pallas GEMMs per matmul — exactly the
+    fwd/dgrad/wgrad structure the workload traffic model assumes.
+    """
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return _matmul_impl(g, y.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation, tolerant of pallas API versions."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - older/newer API fallback
+        return pl.MemorySpace.ANY  # type: ignore[attr-defined]

@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is deliberately naive jax.numpy — no pallas, no custom
+tiling — so pytest can assert the kernels against an independent
+implementation (the repo's core correctness signal).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, y):
+    """Oracle for kernels.matmul: plain jnp matmul in fp32."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def ref_bias_relu(x, b):
+    """Oracle for kernels.bias_relu."""
+    return jnp.maximum(x + b[None, :], 0.0)
+
+
+def ref_im2col(x, kh, kw, stride=1):
+    """Unroll NHWC input patches into im2col rows.
+
+    Args:
+      x: f32[N, H, W, C]
+    Returns:
+      f32[N*OH*OW, KH*KW*C]
+    """
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            cols.append(patch.reshape(n * oh * ow, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def ref_conv2d(x, w, stride=1):
+    """Oracle VALID conv, NHWC × HWIO → NHWC, via explicit loops over taps."""
+    n, h, wd, _ = x.shape
+    kh, kw, _, oc = w.shape
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    out = jnp.zeros((n, oh, ow, oc), dtype=jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            out = out + jnp.einsum("nhwc,co->nhwo", patch, w[i, j])
+    return out
+
+
+def ref_softmax_xent(logits, onehot):
+    """Mean softmax cross-entropy."""
+    logp = logits - jnp.log(jnp.sum(jnp.exp(logits), axis=-1, keepdims=True))
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))

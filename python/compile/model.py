@@ -1,0 +1,102 @@
+"""Layer-2 JAX model: a small CNN (AlexNet-mini) built on the L1 kernels.
+
+Forward pass: two VALID convs (im2col gather feeding the Pallas matmul,
+with the Pallas bias+ReLU epilogue), 2×2 average pooling, and a linear
+classifier head; loss is softmax cross-entropy. The backward pass comes
+from ``jax.grad`` through the kernels (interpret-mode pallas is
+differentiable), and the SGD train step is a pure function of
+(params, batch) so `aot.py` can lower inference and training entry points
+to self-contained HLO artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.elementwise import bias_relu
+from .kernels.matmul import matmul
+from .kernels.ref import ref_im2col, ref_softmax_xent
+
+# Model geometry (small enough that the rust e2e driver trains it in
+# seconds under interpret-mode pallas, big enough to be a real CNN).
+IMAGE = 16  # 16×16 grayscale synthetic images
+C1 = 8  # conv1 output channels (3×3)
+C2 = 16  # conv2 output channels (3×3)
+CLASSES = 10
+LEARNING_RATE = 0.05
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "wf", "bf")
+
+
+def param_shapes():
+    """Shapes of the flat parameter tuple, in PARAM_NAMES order."""
+    # After conv1 (VALID 3x3): 14x14xC1; conv2: 12x12xC2; avgpool2: 6x6xC2.
+    flat = 6 * 6 * C2
+    return (
+        (3, 3, 1, C1),
+        (C1,),
+        (3, 3, C1, C2),
+        (C2,),
+        (flat, CLASSES),
+        (CLASSES,),
+    )
+
+
+def init_params(seed=0):
+    """He-ish initialization as a flat tuple of f32 arrays."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(PARAM_NAMES))
+    shapes = param_shapes()
+    params = []
+    for key, shape in zip(keys, shapes):
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(
+                jax.random.normal(key, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+            )
+    return tuple(params)
+
+
+def _conv_block(x, w, b):
+    """VALID conv via im2col + Pallas matmul, Pallas bias+ReLU epilogue."""
+    n, h, wd, _ = x.shape
+    kh, kw, _, oc = w.shape
+    oh, ow = h - kh + 1, wd - kw + 1
+    cols = ref_im2col(x, kh, kw)  # [N*OH*OW, KH*KW*C]
+    flat = matmul(cols, w.reshape(-1, oc))
+    act = bias_relu(flat, b)
+    return act.reshape(n, oh, ow, oc)
+
+
+def _avg_pool2(x):
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def forward(params, x):
+    """Logits for a batch of images ``x: f32[N, 16, 16, 1]``."""
+    w1, b1, w2, b2, wf, bf = params
+    h = _conv_block(x, w1, b1)
+    h = _conv_block(h, w2, b2)
+    h = _avg_pool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return matmul(h, wf) + bf[None, :]
+
+
+def loss_fn(params, x, onehot):
+    """Mean softmax cross-entropy."""
+    return ref_softmax_xent(forward(params, x), onehot)
+
+
+def train_step(params, x, onehot):
+    """One SGD step; returns (new_params..., loss). Pure — AOT-friendly."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, onehot)
+    new_params = tuple(p - LEARNING_RATE * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+def infer(params, x):
+    """Inference entry point; returns a 1-tuple of logits."""
+    return (forward(params, x),)

@@ -1,0 +1,75 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+hypothesis sweeps the matmul/bias_relu shapes (including ragged,
+non-block-aligned edges) and asserts allclose against the pure-jnp
+oracles in ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.elementwise import bias_relu
+from compile.kernels.matmul import matmul, BLOCK_K, BLOCK_M, BLOCK_N
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+dims = st.integers(min_value=1, max_value=200)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_oracle(m, k, n, seed):
+    x = _rand((m, k), seed)
+    y = _rand((k, n), seed + 1)
+    got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.ref_matmul(jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (BLOCK_M, BLOCK_K, BLOCK_N),  # exactly one block
+        (BLOCK_M * 2, BLOCK_K * 3, BLOCK_N * 2),  # multi-block grid
+        (BLOCK_M + 1, BLOCK_K - 1, BLOCK_N + 7),  # ragged edges
+        (1, 1, 1),  # degenerate
+    ],
+)
+def test_matmul_block_boundaries(m, k, n):
+    x = _rand((m, k), 7)
+    y = _rand((k, n), 8)
+    got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(got, x @ y, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=dims, c=dims, seed=st.integers(0, 2**31 - 1))
+def test_bias_relu_matches_oracle(r, c, seed):
+    x = _rand((r, c), seed)
+    b = _rand((c,), seed + 2)
+    got = np.asarray(bias_relu(jnp.asarray(x), jnp.asarray(b)))
+    want = np.asarray(ref.ref_bias_relu(jnp.asarray(x), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    assert (got >= 0).all(), "ReLU output must be nonnegative"
+
+
+def test_im2col_oracle_reshapes_consistently():
+    x = _rand((2, 6, 6, 3), 1)
+    cols = np.asarray(ref.ref_im2col(jnp.asarray(x), 3, 3))
+    assert cols.shape == (2 * 4 * 4, 3 * 3 * 3)
+
+
+def test_conv_oracle_matches_manual_tap():
+    # Single tap kernel == shifted identity.
+    x = _rand((1, 5, 5, 1), 3)
+    w = np.zeros((3, 3, 1, 1), np.float32)
+    w[1, 1, 0, 0] = 1.0
+    out = np.asarray(ref.ref_conv2d(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(out[0, :, :, 0], x[0, 1:4, 1:4, 0], rtol=1e-6)

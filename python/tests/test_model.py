@@ -1,0 +1,80 @@
+"""L2 model correctness: shapes, loss behaviour, training progress, and
+the AOT artifact manifest."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import build_artifacts, to_hlo_text
+from compile.kernels import ref
+
+
+def _batch(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, model.IMAGE, model.IMAGE, 1), dtype=np.float32)
+    labels = rng.integers(0, model.CLASSES, size=n)
+    onehot = np.eye(model.CLASSES, dtype=np.float32)[labels]
+    return jnp.asarray(x), jnp.asarray(onehot)
+
+
+def test_forward_shapes():
+    params = model.init_params()
+    x, _ = _batch(4)
+    logits = model.forward(params, x)
+    assert logits.shape == (4, model.CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_conv_block_matches_conv_oracle():
+    # The im2col+matmul conv path must equal the direct conv oracle
+    # (pre-activation), i.e. bias=0 and positive inputs to bypass ReLU.
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(abs(rng.standard_normal((2, 8, 8, 3))).astype(np.float32))
+    w = jnp.asarray(abs(rng.standard_normal((3, 3, 3, 5))).astype(np.float32))
+    got = model._conv_block(x, w, jnp.zeros((5,), jnp.float32))
+    want = ref.ref_conv2d(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_loss_decreases_over_steps():
+    params = model.init_params(3)
+    x, y = _batch(16, seed=5)
+    step = jax.jit(lambda p, xx, yy: model.train_step(p, xx, yy))
+    first = None
+    loss = None
+    for _ in range(12):
+        out = step(params, x, y)
+        params, loss = tuple(out[:-1]), float(out[-1])
+        if first is None:
+            first = loss
+    assert loss < first * 0.9, f"loss must fall: {first} -> {loss}"
+
+
+def test_train_step_is_pure_and_deterministic():
+    params = model.init_params(7)
+    x, y = _batch(4, seed=9)
+    a = model.train_step(params, x, y)
+    b = model.train_step(params, x, y)
+    for ta, tb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+def test_aot_manifest_shapes_are_consistent():
+    arts = build_artifacts(batch=4)
+    assert set(arts) == {"kernel_matmul", "cnn_infer", "cnn_train"}
+    _, infer_in, infer_out = arts["cnn_infer"]
+    assert infer_in[-1] == [4, model.IMAGE, model.IMAGE, 1]
+    assert infer_out == [[4, model.CLASSES]]
+    _, train_in, train_out = arts["cnn_train"]
+    assert len(train_in) == len(model.PARAM_NAMES) + 2
+    assert train_out[-1] == []  # scalar loss
+
+
+def test_hlo_text_is_parseable_looking():
+    arts = build_artifacts(batch=2)
+    lowered, _, _ = arts["kernel_matmul"]
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32" in text
+    assert len(text) > 1000

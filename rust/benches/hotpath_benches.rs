@@ -1,0 +1,88 @@
+//! Hot-path microbenchmarks (custom harness; §Perf baseline/record).
+//!
+//! Covers the pipeline's measured bottlenecks:
+//!   * gpusim cache access loop (dominates Fig 7 / the e2e trace replay)
+//!   * NVSim exhaustive EDAP tuning of one (tech, capacity) point
+//!   * device-level transient characterization
+//!   * workload memstats derivation
+//!   * analysis roll-up over the 13-workload suite
+//!
+//! Results feed EXPERIMENTS.md §Perf (before/after table).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use deepnvm::analysis::evaluate;
+use deepnvm::device::bitcell::BitcellKind;
+use deepnvm::device::characterize::characterize_kind;
+use deepnvm::gpusim::cache::Cache;
+use deepnvm::gpusim::{dnn_trace, simulate, GpuConfig};
+use deepnvm::nvsim::optimizer::{explore, tuned_cache};
+use deepnvm::util::rng::Rng;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::memstats::{dnn_stats, Phase};
+use deepnvm::workloads::nets;
+use deepnvm::workloads::profiler::{profile_suite, PROFILE_L2};
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per >= 1.0 {
+        format!("{per:.2} s")
+    } else if per >= 1e-3 {
+        format!("{:.2} ms", per * 1e3)
+    } else if per >= 1e-6 {
+        format!("{:.2} µs", per * 1e6)
+    } else {
+        format!("{:.0} ns", per * 1e9)
+    };
+    println!("{name:<44} {unit:>12}/iter  ({iters} iters)");
+}
+
+fn main() {
+    println!("== hot-path microbenchmarks ==");
+
+    // Synthetic random access stream for the raw cache loop.
+    let mut rng = Rng::new(1);
+    let stream: Vec<(u64, bool)> = (0..1_000_000)
+        .map(|_| (rng.gen_range(1 << 20) * 128, rng.chance(0.3)))
+        .collect();
+    bench("gpusim: cache access loop (1M accesses)", 10, || {
+        let mut c = Cache::new(3 * MB, 128, 16);
+        for &(a, w) in &stream {
+            black_box(c.access(a, w));
+        }
+        black_box(c.hits);
+    });
+
+    let trace = dnn_trace(&nets::alexnet(), 4);
+    println!("alexnet batch-4 trace: {} accesses", trace.len());
+    bench("gpusim: AlexNet trace through 3MB L2", 3, || {
+        black_box(simulate(&trace, &GpuConfig::gtx_1080_ti()));
+    });
+
+    bench("nvsim: EDAP explore SOT 3MB (full grid)", 5, || {
+        black_box(explore(BitcellKind::SotMram, 3 * MB));
+    });
+
+    bench("device: STT full characterization sweep", 3, || {
+        black_box(characterize_kind(BitcellKind::SttMram));
+    });
+
+    bench("workloads: VGG-16 training memstats", 50, || {
+        black_box(dnn_stats(&nets::vgg16(), Phase::Training, 64, 3 * MB));
+    });
+
+    let ppa = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
+    let suite = profile_suite(PROFILE_L2);
+    bench("analysis: evaluate 13-workload suite", 200, || {
+        for p in &suite {
+            black_box(evaluate(&ppa, &p.stats));
+        }
+    });
+}

@@ -1,0 +1,34 @@
+//! `cargo bench` harness (custom, offline-friendly): regenerates every
+//! paper table and figure and reports wall time + headline per artifact.
+//!
+//! This is the "one bench per paper table/figure" requirement: each row
+//! below is a full regeneration of that artifact through the real
+//! pipeline (device → nvsim → workloads → gpusim → analysis).
+
+use std::time::Instant;
+
+use deepnvm::coordinator::{run_one, RunnerConfig};
+use deepnvm::experiments::registry;
+
+fn main() {
+    let cfg = RunnerConfig {
+        results_dir: "results".into(),
+        print_tables: false,
+    };
+    println!("== paper artifact regeneration bench ==");
+    println!("{:<8} {:>10}  headline", "id", "time");
+    let mut total = 0.0;
+    for exp in registry() {
+        let t0 = Instant::now();
+        let report = run_one(exp.id, &cfg).expect("registered");
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        let headline = report
+            .headlines
+            .first()
+            .cloned()
+            .unwrap_or_else(|| exp.title.to_string());
+        println!("{:<8} {:>9.3}s  {}", exp.id, dt, headline);
+    }
+    println!("total: {total:.2}s for 16 artifacts (results/ refreshed)");
+}

@@ -1,0 +1,92 @@
+//! Batch-size study (paper §4.1, Fig 6): AlexNet training and inference
+//! EDP (normalized to SRAM) as the batch size sweeps.
+
+use crate::device::bitcell::BitcellKind;
+use crate::nvsim::optimizer::tuned_cache;
+use crate::util::units::MB;
+use crate::workloads::memstats::Phase;
+use crate::workloads::profiler::{profile, Workload, PROFILE_L2};
+use super::model::evaluate;
+
+/// Batch sizes swept in Fig 6.
+pub const BATCHES: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// One Fig 6 point: normalized EDP (with DRAM) for [STT, SOT] at a batch.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPoint {
+    pub batch: u64,
+    pub edp_norm: [f64; 2],
+}
+
+/// Sweep one phase of AlexNet over the batch sizes.
+pub fn batch_sweep(phase: Phase) -> Vec<BatchPoint> {
+    let caps = [
+        tuned_cache(BitcellKind::Sram, 3 * MB).ppa,
+        tuned_cache(BitcellKind::SttMram, 3 * MB).ppa,
+        tuned_cache(BitcellKind::SotMram, 3 * MB).ppa,
+    ];
+    let alexnet = Workload::Dnn { index: 0, phase };
+    BATCHES
+        .iter()
+        .map(|&batch| {
+            let stats = profile(alexnet, batch, PROFILE_L2).stats;
+            let e: Vec<f64> = caps
+                .iter()
+                .map(|c| evaluate(c, &stats).edp_with_dram())
+                .collect();
+            BatchPoint {
+                batch,
+                edp_norm: [e[1] / e[0], e[2] / e[0]],
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_stt_improves_with_batch() {
+        // Fig 6 top: STT 2.3×→4.6× EDP reduction as batch grows.
+        let sweep = batch_sweep(Phase::Training);
+        let first = 1.0 / sweep.first().unwrap().edp_norm[0];
+        let last = 1.0 / sweep.last().unwrap().edp_norm[0];
+        assert!(
+            last > first * 1.3,
+            "STT training reduction must grow: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn training_sot_is_flat_and_high() {
+        // Fig 6 top: SOT ~7.2×–7.6× across batch sizes (variation small
+        // relative to its level).
+        let sweep = batch_sweep(Phase::Training);
+        let reds: Vec<f64> = sweep.iter().map(|p| 1.0 / p.edp_norm[1]).collect();
+        let min = reds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = reds.iter().cloned().fold(0.0, f64::max);
+        assert!(min > 2.5, "SOT training reduction floor {min}");
+        assert!(max / min < 2.0, "SOT training spread {min}..{max}");
+    }
+
+    #[test]
+    fn inference_reductions_stay_in_band() {
+        // Fig 6 bottom: STT 4.1–5.4×, SOT 7.1–7.3× — both phases see
+        // substantial, relatively stable reductions.
+        let sweep = batch_sweep(Phase::Inference);
+        for p in &sweep {
+            let stt = 1.0 / p.edp_norm[0];
+            let sot = 1.0 / p.edp_norm[1];
+            assert!(stt > 1.5, "batch {}: STT {stt}", p.batch);
+            assert!(sot > stt, "batch {}: SOT {sot} <= STT {stt}", p.batch);
+        }
+    }
+
+    #[test]
+    fn sweep_covers_all_batches_in_order() {
+        let sweep = batch_sweep(Phase::Inference);
+        let batches: Vec<u64> = sweep.iter().map(|p| p.batch).collect();
+        assert_eq!(batches, BATCHES.to_vec());
+    }
+}

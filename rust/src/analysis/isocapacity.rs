@@ -1,0 +1,117 @@
+//! Iso-capacity analysis (paper §4.1 → Figs 4 and 5): all three
+//! technologies at the GTX 1080 Ti's 3MB, driven by the profiled suite.
+
+use crate::device::bitcell::BitcellKind;
+use crate::nvsim::optimizer::tuned_cache;
+use crate::util::units::MB;
+use crate::workloads::profiler::{profile_suite, PROFILE_L2};
+use super::model::{evaluate, Evaluation};
+
+/// Per-workload, per-technology iso-capacity results, all normalized to
+/// the SRAM baseline (the paper's bar heights; <1 is better for MRAM).
+#[derive(Debug, Clone)]
+pub struct IsoCapacityRow {
+    pub label: String,
+    /// [STT, SOT] normalized dynamic energy (Fig 4 top).
+    pub dynamic: [f64; 2],
+    /// [STT, SOT] normalized leakage energy (Fig 4 bottom).
+    pub leakage: [f64; 2],
+    /// [STT, SOT] normalized total cache energy (Fig 5 top).
+    pub energy: [f64; 2],
+    /// [STT, SOT] normalized EDP incl. DRAM (Fig 5 bottom).
+    pub edp: [f64; 2],
+    /// Raw evaluations [SRAM, STT, SOT] for downstream consumers.
+    pub raw: [Evaluation; 3],
+}
+
+/// Run the iso-capacity analysis over the full Fig 4 suite.
+pub fn iso_capacity() -> Vec<IsoCapacityRow> {
+    let caps = [
+        tuned_cache(BitcellKind::Sram, 3 * MB).ppa,
+        tuned_cache(BitcellKind::SttMram, 3 * MB).ppa,
+        tuned_cache(BitcellKind::SotMram, 3 * MB).ppa,
+    ];
+    profile_suite(PROFILE_L2)
+        .into_iter()
+        .map(|p| {
+            let raw = [
+                evaluate(&caps[0], &p.stats),
+                evaluate(&caps[1], &p.stats),
+                evaluate(&caps[2], &p.stats),
+            ];
+            let norm = |f: &dyn Fn(&Evaluation) -> f64| [f(&raw[1]) / f(&raw[0]), f(&raw[2]) / f(&raw[0])];
+            IsoCapacityRow {
+                label: p.label,
+                dynamic: norm(&|e| e.dynamic_energy),
+                leakage: norm(&|e| e.leakage_energy),
+                energy: norm(&|e| e.cache_energy()),
+                edp: norm(&|e| e.edp_with_dram()),
+                raw,
+            }
+        })
+        .collect()
+}
+
+/// Headline scalars from the iso-capacity run: the best (max) EDP
+/// reduction factor per technology — the abstract's "up to 3.8× and 4.7×".
+pub fn headline_edp_reduction(rows: &[IsoCapacityRow]) -> [f64; 2] {
+    let mut best = [0.0f64; 2];
+    for row in rows {
+        for t in 0..2 {
+            best[t] = best[t].max(1.0 / row.edp[t]);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn headline_edp_reductions_match_paper_band() {
+        // Paper: up to 3.8× (STT) and 4.7× (SOT).
+        let rows = iso_capacity();
+        let [stt, sot] = headline_edp_reduction(&rows);
+        assert!((2.8..5.2).contains(&stt), "STT max EDP reduction {stt}");
+        assert!((3.5..7.5).contains(&sot), "SOT max EDP reduction {sot}");
+        assert!(sot > stt, "SOT beats STT");
+    }
+
+    #[test]
+    fn average_energy_reduction_matches_paper_band() {
+        // Paper: 5.3× (STT) and 8.6× (SOT) mean cache-energy reduction.
+        let rows = iso_capacity();
+        let stt: Vec<f64> = rows.iter().map(|r| 1.0 / r.energy[0]).collect();
+        let sot: Vec<f64> = rows.iter().map(|r| 1.0 / r.energy[1]).collect();
+        let (ms, mo) = (mean(&stt), mean(&sot));
+        assert!((3.8..7.0).contains(&ms), "STT mean energy reduction {ms}");
+        assert!((6.2..11.0).contains(&mo), "SOT mean energy reduction {mo}");
+    }
+
+    #[test]
+    fn stt_dynamic_energy_is_worse_sot_mildly_worse() {
+        // Fig 4 top: STT ≈2.2×, SOT ≈1.3× SRAM.
+        let rows = iso_capacity();
+        let stt = mean(&rows.iter().map(|r| r.dynamic[0]).collect::<Vec<_>>());
+        let sot = mean(&rows.iter().map(|r| r.dynamic[1]).collect::<Vec<_>>());
+        assert!(stt > 1.4 && stt < 3.0, "STT dyn {stt}");
+        assert!(sot > 1.0 && sot < 1.9, "SOT dyn {sot}");
+    }
+
+    #[test]
+    fn every_workload_sees_mram_energy_win() {
+        for row in iso_capacity() {
+            assert!(row.energy[0] < 1.0, "{}: STT energy {}", row.label, row.energy[0]);
+            assert!(row.energy[1] < 1.0, "{}: SOT energy {}", row.label, row.energy[1]);
+        }
+    }
+
+    #[test]
+    fn suite_rows_match_profiler_labels() {
+        let rows = iso_capacity();
+        assert_eq!(rows.len(), 13);
+        assert_eq!(rows[0].label, "AlexNet-I");
+    }
+}

@@ -1,0 +1,19 @@
+//! Cross-layer analysis (paper §4): combines the NVSim-tuned cache PPA
+//! with the profiled workload memory statistics into the paper's energy,
+//! latency and EDP results.
+//!
+//! * [`model`] — the roll-up itself: serial transaction-latency time,
+//!   leakage integration, DRAM bandwidth/energy model, cycle quantization.
+//! * [`isocapacity`] — §4.1, Figs 4–5 (3MB, all technologies).
+//! * [`batch`] — §4.1, Fig 6 (AlexNet batch-size sweep).
+//! * [`isoarea`] — §4.2, Figs 8–9 (STT 7MB / SOT 10MB in the SRAM
+//!   footprint, with capacity-dependent DRAM traffic).
+//! * [`scalability`] — §4.3, Figs 10–13 (1–32MB, EDAP-tuned per point).
+
+pub mod batch;
+pub mod isoarea;
+pub mod isocapacity;
+pub mod model;
+pub mod scalability;
+
+pub use model::{evaluate, Evaluation};

@@ -1,0 +1,171 @@
+//! The cross-layer energy/latency roll-up (paper §4).
+//!
+//! Follows the paper's stated methodology exactly: "we used a simple model
+//! where we multiply the number of read and write transactions by the
+//! corresponding latency and energy values for those operations" — i.e.
+//! the workload's cache time is the *serial* sum of its transactions at
+//! the technology's (cycle-quantized) latencies, leakage energy is the
+//! leakage power integrated over that time, and the DRAM contribution
+//! (included in the EDP figures) adds a bandwidth-model delay and a
+//! per-transaction energy.
+
+use crate::nvsim::cache::CachePpa;
+use crate::workloads::memstats::MemStats;
+
+/// GPU L2 clock (Table 4) — latencies are quantized to whole cycles
+/// ("we convert read and write latencies to clock cycles based on 1080
+/// Ti GPU's clock frequency").
+pub const L2_CLOCK_HZ: f64 = 1481.0e6;
+
+/// Effective DRAM bandwidth of the GTX 1080 Ti (GDDR5X, 484 GB/s).
+pub const DRAM_BW: f64 = 484.0e9;
+
+/// DRAM energy per 32-byte transaction (J): ~15 pJ/bit at the device plus
+/// I/O — the "DRAM access is 200× a MAC" regime the paper cites.
+pub const DRAM_E_PER_TRANS: f64 = 4.0e-9;
+
+/// Bytes per transaction (nvprof sector).
+pub const TRANS_BYTES: f64 = 32.0;
+
+/// Quantize a latency up to whole L2 cycles.
+pub fn to_cycles_latency(lat: f64) -> f64 {
+    let cycle = 1.0 / L2_CLOCK_HZ;
+    (lat / cycle).ceil() * cycle
+}
+
+/// Energy/latency evaluation of one workload on one cache design.
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    /// Dynamic (read + write) cache energy (J).
+    pub dynamic_energy: f64,
+    /// Leakage energy over the workload's cache time (J).
+    pub leakage_energy: f64,
+    /// DRAM energy (J).
+    pub dram_energy: f64,
+    /// Serial cache time (s).
+    pub cache_time: f64,
+    /// DRAM transfer time (s).
+    pub dram_time: f64,
+}
+
+impl Evaluation {
+    /// Cache-only energy (the paper's Fig 4/5-top quantity).
+    pub fn cache_energy(&self) -> f64 {
+        self.dynamic_energy + self.leakage_energy
+    }
+
+    /// Total energy including DRAM.
+    pub fn total_energy(&self) -> f64 {
+        self.cache_energy() + self.dram_energy
+    }
+
+    /// Total delay including DRAM.
+    pub fn total_time(&self) -> f64 {
+        self.cache_time + self.dram_time
+    }
+
+    /// EDP without the DRAM contribution (Fig 9-top).
+    pub fn edp_cache(&self) -> f64 {
+        self.cache_energy() * self.cache_time
+    }
+
+    /// EDP with DRAM energy and latency (Fig 5-bottom, Fig 9-bottom).
+    pub fn edp_with_dram(&self) -> f64 {
+        self.total_energy() * self.total_time()
+    }
+}
+
+/// Evaluate `stats` on a cache with PPA `ppa`.
+pub fn evaluate(ppa: &CachePpa, stats: &MemStats) -> Evaluation {
+    let rl = to_cycles_latency(ppa.read_latency);
+    let wl = to_cycles_latency(ppa.write_latency);
+    let dynamic_energy =
+        stats.l2_reads as f64 * ppa.read_energy + stats.l2_writes as f64 * ppa.write_energy;
+    let cache_time = stats.l2_reads as f64 * rl + stats.l2_writes as f64 * wl;
+    let leakage_energy = ppa.leakage_power * cache_time;
+    let dram_trans = (stats.dram_reads + stats.dram_writes) as f64;
+    let dram_energy = dram_trans * DRAM_E_PER_TRANS;
+    let dram_time = dram_trans * TRANS_BYTES / DRAM_BW;
+    Evaluation {
+        dynamic_energy,
+        leakage_energy,
+        dram_energy,
+        cache_time,
+        dram_time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::bitcell::BitcellKind;
+    use crate::nvsim::optimizer::tuned_cache;
+    use crate::workloads::profiler::{profile_suite, PROFILE_L2};
+    use crate::util::units::MB;
+
+    fn eval_suite(kind: BitcellKind) -> Vec<Evaluation> {
+        let ppa = tuned_cache(kind, 3 * MB).ppa;
+        profile_suite(PROFILE_L2)
+            .iter()
+            .map(|p| evaluate(&ppa, &p.stats))
+            .collect()
+    }
+
+    #[test]
+    fn latencies_quantize_up_to_cycles() {
+        let cycle = 1.0 / L2_CLOCK_HZ;
+        assert!((to_cycles_latency(cycle * 2.2) - 3.0 * cycle).abs() < 1e-15);
+        assert!((to_cycles_latency(cycle * 3.0) - 3.0 * cycle).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sram_leakage_dominates_its_total_energy() {
+        // The paper's central observation behind Fig 5.
+        for e in eval_suite(BitcellKind::Sram) {
+            assert!(e.leakage_energy > e.dynamic_energy);
+        }
+    }
+
+    #[test]
+    fn stt_dynamic_energy_exceeds_sram() {
+        // Fig 4: STT ~2.2× SRAM dynamic energy on average.
+        let sram = eval_suite(BitcellKind::Sram);
+        let stt = eval_suite(BitcellKind::SttMram);
+        let ratios: Vec<f64> = sram
+            .iter()
+            .zip(&stt)
+            .map(|(s, t)| t.dynamic_energy / s.dynamic_energy)
+            .collect();
+        let mean = crate::util::stats::mean(&ratios);
+        assert!((1.5..3.0).contains(&mean), "mean STT dyn ratio {mean}");
+    }
+
+    #[test]
+    fn mram_leakage_energy_is_far_lower() {
+        // Fig 4 bottom: 6.3× (STT) and 10× (SOT) lower on average.
+        let sram = eval_suite(BitcellKind::Sram);
+        let stt = eval_suite(BitcellKind::SttMram);
+        let sot = eval_suite(BitcellKind::SotMram);
+        let mean_ratio = |xs: &[Evaluation]| {
+            let r: Vec<f64> = sram
+                .iter()
+                .zip(xs)
+                .map(|(s, m)| s.leakage_energy / m.leakage_energy)
+                .collect();
+            crate::util::stats::mean(&r)
+        };
+        let stt_r = mean_ratio(&stt);
+        let sot_r = mean_ratio(&sot);
+        assert!((4.5..9.0).contains(&stt_r), "STT leak advantage {stt_r}");
+        assert!((7.5..14.0).contains(&sot_r), "SOT leak advantage {sot_r}");
+        assert!(sot_r > stt_r);
+    }
+
+    #[test]
+    fn edp_with_dram_exceeds_cache_edp() {
+        for e in eval_suite(BitcellKind::SotMram) {
+            assert!(e.edp_with_dram() > e.edp_cache());
+            assert!(e.total_energy() > e.cache_energy());
+        }
+    }
+}

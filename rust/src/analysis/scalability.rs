@@ -1,0 +1,183 @@
+//! Scalability analysis (paper §4.3 → Figs 10–13): every technology
+//! EDAP-tuned independently at each capacity from 1 to 32 MB, then the
+//! workload suite evaluated on each design.
+
+use crate::device::bitcell::BitcellKind;
+use crate::nvsim::cache::CachePpa;
+use crate::nvsim::optimizer::tuned_cache;
+use crate::util::pool::par_map;
+use crate::util::stats::{mean, stddev};
+use crate::util::units::MB;
+use crate::workloads::memstats::Phase;
+use crate::workloads::profiler::{paper_suite, profile_default, Workload};
+use super::model::evaluate;
+
+/// The capacity grid of Algorithm 1 / Fig 10 (MB).
+pub const CAPACITIES_MB: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Fig 10: the tuned PPA of each technology at each capacity.
+#[derive(Debug, Clone)]
+pub struct PpaCurvePoint {
+    pub capacity_mb: u64,
+    /// [SRAM, STT, SOT].
+    pub ppa: [CachePpa; 3],
+}
+
+/// Compute the Fig 10 PPA-vs-capacity curves (tuning runs in parallel).
+pub fn ppa_curves() -> Vec<PpaCurvePoint> {
+    par_map(&CAPACITIES_MB, |&mb| PpaCurvePoint {
+        capacity_mb: mb,
+        ppa: [
+            tuned_cache(BitcellKind::Sram, mb * MB).ppa,
+            tuned_cache(BitcellKind::SttMram, mb * MB).ppa,
+            tuned_cache(BitcellKind::SotMram, mb * MB).ppa,
+        ],
+    })
+}
+
+/// Figs 11–13: normalized mean ± stddev across workloads of one phase.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub capacity_mb: u64,
+    /// [STT, SOT] mean normalized energy across workloads.
+    pub energy_mean: [f64; 2],
+    pub energy_std: [f64; 2],
+    /// [STT, SOT] mean normalized latency.
+    pub latency_mean: [f64; 2],
+    pub latency_std: [f64; 2],
+    /// [STT, SOT] mean normalized EDP.
+    pub edp_mean: [f64; 2],
+    pub edp_std: [f64; 2],
+}
+
+fn phase_workloads(phase: Phase) -> Vec<Workload> {
+    paper_suite()
+        .into_iter()
+        .filter(|w| match w {
+            Workload::Dnn { phase: p, .. } => *p == phase,
+            // HPCG joins the inference chart (single-phase workload).
+            Workload::Hpcg(_) => phase == Phase::Inference,
+        })
+        .collect()
+}
+
+/// Scaling study for one phase: at each capacity, tune all three
+/// technologies and evaluate the phase's workloads.
+pub fn scaling_study(phase: Phase) -> Vec<ScalingPoint> {
+    let workloads = phase_workloads(phase);
+    par_map(&CAPACITIES_MB, |&mb| {
+        let caps = [
+            tuned_cache(BitcellKind::Sram, mb * MB).ppa,
+            tuned_cache(BitcellKind::SttMram, mb * MB).ppa,
+            tuned_cache(BitcellKind::SotMram, mb * MB).ppa,
+        ];
+        let mut energy = [Vec::new(), Vec::new()];
+        let mut latency = [Vec::new(), Vec::new()];
+        let mut edp = [Vec::new(), Vec::new()];
+        for &w in &workloads {
+            let stats = profile_default(w, mb * MB).stats;
+            let evals: Vec<_> = caps.iter().map(|c| evaluate(c, &stats)).collect();
+            for t in 0..2 {
+                energy[t].push(evals[t + 1].total_energy() / evals[0].total_energy());
+                latency[t].push(evals[t + 1].total_time() / evals[0].total_time());
+                edp[t].push(evals[t + 1].edp_with_dram() / evals[0].edp_with_dram());
+            }
+        }
+        ScalingPoint {
+            capacity_mb: mb,
+            energy_mean: [mean(&energy[0]), mean(&energy[1])],
+            energy_std: [stddev(&energy[0]), stddev(&energy[1])],
+            latency_mean: [mean(&latency[0]), mean(&latency[1])],
+            latency_std: [stddev(&latency[0]), stddev(&latency[1])],
+            edp_mean: [mean(&edp[0]), mean(&edp[1])],
+            edp_std: [stddev(&edp[0]), stddev(&edp[1])],
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{MM2, NS};
+
+    #[test]
+    fn fig10_area_gap_widens_with_capacity() {
+        let curves = ppa_curves();
+        let ratio = |p: &PpaCurvePoint, t: usize| p.ppa[0].area / p.ppa[t].area;
+        let first = &curves[0];
+        let last = curves.last().unwrap();
+        for t in 1..3 {
+            assert!(
+                ratio(last, t) > ratio(first, t) * 0.9,
+                "area advantage should persist/widen (tech {t})"
+            );
+            assert!(ratio(last, t) > 1.8, "MRAM clearly denser at 32MB");
+        }
+        // Absolute sanity: SRAM 32MB is tens of mm².
+        assert!(last.ppa[0].area / MM2 > 30.0);
+    }
+
+    #[test]
+    fn fig10_latency_crossover_exists() {
+        // Paper: SRAM reads faster below ~3MB; MRAM wins beyond ~4MB.
+        let curves = ppa_curves();
+        let small = &curves[0]; // 1MB
+        let large = curves.last().unwrap(); // 32MB
+        assert!(
+            small.ppa[0].read_latency < small.ppa[1].read_latency,
+            "1MB: SRAM read faster"
+        );
+        assert!(
+            large.ppa[0].read_latency > large.ppa[1].read_latency,
+            "32MB: STT read faster ({} vs {} ns)",
+            large.ppa[0].read_latency / NS,
+            large.ppa[1].read_latency / NS
+        );
+    }
+
+    #[test]
+    fn fig10_stt_write_latency_always_worst() {
+        for p in ppa_curves() {
+            assert!(p.ppa[1].write_latency > p.ppa[0].write_latency);
+            assert!(p.ppa[1].write_latency > p.ppa[2].write_latency);
+        }
+    }
+
+    #[test]
+    fn fig13_edp_reductions_grow_to_orders_of_magnitude() {
+        // Paper: up to 65× (STT) and 95× (SOT) at large capacities.
+        let pts = scaling_study(Phase::Inference);
+        let last = pts.last().unwrap();
+        let stt = 1.0 / last.edp_mean[0];
+        let sot = 1.0 / last.edp_mean[1];
+        assert!(stt > 7.0, "STT 32MB EDP reduction {stt}");
+        assert!(sot > 25.0, "SOT 32MB EDP reduction {sot}");
+        assert!(sot > stt);
+        // And the trend is monotone-ish: 32MB beats 1MB by a lot.
+        let first_stt = 1.0 / pts[0].edp_mean[0];
+        assert!(stt > 4.0 * first_stt);
+    }
+
+    #[test]
+    fn fig11_energy_reduction_grows_with_capacity() {
+        // Paper: up to 31.2× / 36.4× energy reduction.
+        for phase in [Phase::Inference, Phase::Training] {
+            let pts = scaling_study(phase);
+            let first = 1.0 / pts[0].energy_mean[1];
+            let last = 1.0 / pts.last().unwrap().energy_mean[1];
+            assert!(last > first, "{phase:?}: SOT energy advantage must grow");
+            assert!(last > 10.0, "{phase:?}: SOT 32MB energy reduction {last}");
+        }
+    }
+
+    #[test]
+    fn error_bars_are_finite_and_nonnegative() {
+        let pts = scaling_study(Phase::Training);
+        for p in &pts {
+            for t in 0..2 {
+                assert!(p.energy_std[t] >= 0.0 && p.energy_std[t].is_finite());
+                assert!(p.edp_std[t] >= 0.0 && p.edp_std[t].is_finite());
+            }
+        }
+    }
+}

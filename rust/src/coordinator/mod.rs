@@ -1,0 +1,12 @@
+//! L3 coordination: the DeepNVM++ pipeline runner.
+//!
+//! The paper's contribution is a *framework* (Fig 2): device
+//! characterization → cache tuning → workload profiling → roll-up →
+//! tables/figures. This module owns that pipeline end to end: the
+//! experiment runner (with parallel execution across experiments and
+//! persisted CSV results), the progress/timing report, and the run
+//! manifest.
+
+pub mod runner;
+
+pub use runner::{run_all, run_one, RunReport, RunnerConfig};

@@ -1,0 +1,153 @@
+//! Experiment runner: executes registry entries, persists CSVs, renders
+//! tables, and emits a run manifest + headline summary.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::experiments::{by_id, registry, Output};
+use crate::util::pool::par_map;
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct RunnerConfig {
+    /// Directory for CSV outputs + manifest.
+    pub results_dir: PathBuf,
+    /// Print tables to stdout.
+    pub print_tables: bool,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        RunnerConfig {
+            results_dir: PathBuf::from("results"),
+            print_tables: true,
+        }
+    }
+}
+
+/// Result record of one executed experiment.
+#[derive(Debug)]
+pub struct RunReport {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub seconds: f64,
+    pub csv_files: Vec<PathBuf>,
+    pub headlines: Vec<String>,
+    pub rendered_tables: Vec<String>,
+}
+
+fn persist(output: &Output, id: &str, cfg: &RunnerConfig) -> Vec<PathBuf> {
+    let mut files = Vec::new();
+    for (name, csv) in &output.csvs {
+        let path = cfg.results_dir.join(format!("{name}.csv"));
+        if let Err(e) = csv.write(&path) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            files.push(path);
+        }
+    }
+    let _ = id;
+    files
+}
+
+/// Run a single experiment by id. Returns `None` for unknown ids.
+pub fn run_one(id: &str, cfg: &RunnerConfig) -> Option<RunReport> {
+    let exp = by_id(id)?;
+    let start = Instant::now();
+    let output = (exp.run)();
+    let seconds = start.elapsed().as_secs_f64();
+    let csv_files = persist(&output, exp.id, cfg);
+    let rendered: Vec<String> = output.tables.iter().map(|t| t.render()).collect();
+    if cfg.print_tables {
+        for r in &rendered {
+            println!("{r}");
+        }
+        for h in &output.headlines {
+            println!("  ↳ {h}");
+        }
+        println!("  [{id} completed in {seconds:.2}s]\n");
+    }
+    Some(RunReport {
+        id: exp.id,
+        title: exp.title,
+        seconds,
+        csv_files,
+        headlines: output.headlines,
+        rendered_tables: rendered,
+    })
+}
+
+/// Run the full registry. Experiments execute in parallel (they share the
+/// memoized cache-tuning results); tables print in registry order.
+pub fn run_all(cfg: &RunnerConfig) -> Vec<RunReport> {
+    let ids: Vec<&'static str> = registry().iter().map(|e| e.id).collect();
+    let quiet = RunnerConfig {
+        print_tables: false,
+        ..cfg.clone()
+    };
+    let reports = par_map(&ids, |id| run_one(id, &quiet).expect("registry id"));
+    if cfg.print_tables {
+        for r in &reports {
+            for t in &r.rendered_tables {
+                println!("{t}");
+            }
+            for h in &r.headlines {
+                println!("  ↳ {h}");
+            }
+            println!("  [{} completed in {:.2}s]\n", r.id, r.seconds);
+        }
+    }
+    write_manifest(&reports, cfg);
+    reports
+}
+
+/// Persist the run manifest (headlines per experiment) for EXPERIMENTS.md.
+fn write_manifest(reports: &[RunReport], cfg: &RunnerConfig) {
+    let path = cfg.results_dir.join("manifest.txt");
+    if let Some(parent) = Path::new(&path).parent() {
+        let _ = fs::create_dir_all(parent);
+    }
+    if let Ok(mut f) = fs::File::create(&path) {
+        for r in reports {
+            let _ = writeln!(f, "[{}] {} ({:.2}s)", r.id, r.title, r.seconds);
+            for h in &r.headlines {
+                let _ = writeln!(f, "    {h}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> RunnerConfig {
+        RunnerConfig {
+            results_dir: std::env::temp_dir().join("deepnvm_runner_test"),
+            print_tables: false,
+        }
+    }
+
+    #[test]
+    fn unknown_id_returns_none() {
+        assert!(run_one("fig99", &test_cfg()).is_none());
+    }
+
+    #[test]
+    fn table3_runs_and_persists_csv() {
+        let cfg = test_cfg();
+        let r = run_one("table3", &cfg).unwrap();
+        assert_eq!(r.id, "table3");
+        assert!(!r.csv_files.is_empty());
+        assert!(r.csv_files[0].exists());
+        let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    }
+
+    #[test]
+    fn fig1_report_carries_rendered_table() {
+        let r = run_one("fig1", &test_cfg()).unwrap();
+        assert!(r.rendered_tables[0].contains("1080 Ti"));
+    }
+}

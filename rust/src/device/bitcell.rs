@@ -1,0 +1,160 @@
+//! Bitcell assembly and layout-rule area formulations.
+//!
+//! Area follows the fin-grid formulation used by the paper's reference
+//! [Seo & Roy, TVLSI'18]: a cell occupies `(active fins + dummy) ×
+//! fin-pitch` in width and a per-topology number of contacted-poly pitches
+//! in height. The height factors are calibrated so the normalized areas
+//! land on Table 1 (STT 0.34×, SOT 0.29× of the foundry SRAM cell) — the
+//! paper's own values are likewise normalized against a proprietary
+//! foundry cell.
+
+use super::finfet::card;
+use crate::util::units::UM2;
+
+/// Memory technology of a bitcell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BitcellKind {
+    Sram,
+    SttMram,
+    SotMram,
+}
+
+impl BitcellKind {
+    /// All kinds, in the paper's presentation order.
+    pub const ALL: [BitcellKind; 3] = [BitcellKind::Sram, BitcellKind::SttMram, BitcellKind::SotMram];
+
+    /// Display name as used in the paper's tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BitcellKind::Sram => "SRAM",
+            BitcellKind::SttMram => "STT-MRAM",
+            BitcellKind::SotMram => "SOT-MRAM",
+        }
+    }
+
+    /// Whether the technology is non-volatile (zero cell retention power).
+    pub fn non_volatile(&self) -> bool {
+        !matches!(self, BitcellKind::Sram)
+    }
+}
+
+/// Foundry 16nm high-density 6T SRAM bitcell area (m²). Public 16nm
+/// foundry cells are 0.070–0.074 µm²; the paper normalizes against one.
+pub const SRAM_CELL_AREA: f64 = 0.074 * UM2;
+
+/// Cell-height factors in contacted-poly pitches, per topology.
+/// Calibrated to Table 1's normalized areas (see module docs).
+const STT_HEIGHT_CPP: f64 = 1.165; // 1T1R: wide MTJ via + source contact
+const SOT_HEIGHT_CPP: f64 = 0.995; // 2T1R shared-rail layout (Seo & Roy)
+
+/// Layout area (m²) of a 1T1R STT cell with `write_fins` access fins
+/// (read shares the same device).
+pub fn stt_cell_area(write_fins: u32) -> f64 {
+    ((write_fins + 1) as f64 * card::FIN_PITCH) * (STT_HEIGHT_CPP * card::CPP)
+}
+
+/// Layout area (m²) of a 2T1R SOT cell with separate write and read
+/// devices (plus one dummy fin between them).
+pub fn sot_cell_area(write_fins: u32, read_fins: u32) -> f64 {
+    ((write_fins + read_fins + 1) as f64 * card::FIN_PITCH) * (SOT_HEIGHT_CPP * card::CPP)
+}
+
+/// Full electrical + physical characterization record for one bitcell —
+/// exactly the Table 1 rows, in SI units. Consumed by [`crate::nvsim`].
+#[derive(Debug, Clone)]
+pub struct BitcellParams {
+    pub kind: BitcellKind,
+    /// Sense (read) latency (s).
+    pub sense_latency: f64,
+    /// Sense (read) energy (J).
+    pub sense_energy: f64,
+    /// Write latency, set direction (s). For SRAM set == reset.
+    pub write_latency_set: f64,
+    /// Write latency, reset direction (s).
+    pub write_latency_reset: f64,
+    /// Write energy, set direction (J).
+    pub write_energy_set: f64,
+    /// Write energy, reset direction (J).
+    pub write_energy_reset: f64,
+    /// Access-device fins on the write path.
+    pub write_fins: u32,
+    /// Access-device fins on the read path (same device for SRAM/STT).
+    pub read_fins: u32,
+    /// Cell layout area (m²).
+    pub area: f64,
+    /// Static leakage power per cell (W); zero for the MRAM flavors.
+    pub cell_leakage: f64,
+}
+
+impl BitcellParams {
+    /// Worst-direction write latency (s) — what a cache write must budget.
+    pub fn write_latency(&self) -> f64 {
+        self.write_latency_set.max(self.write_latency_reset)
+    }
+
+    /// Mean write energy across directions (J) — writes are direction-
+    /// agnostic at the cache level (half the bits flip each way on average).
+    pub fn write_energy(&self) -> f64 {
+        0.5 * (self.write_energy_set + self.write_energy_reset)
+    }
+
+    /// Area normalized to the foundry SRAM cell (the Table 1 last row).
+    pub fn area_rel_sram(&self) -> f64 {
+        self.area / SRAM_CELL_AREA
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_normalized_areas() {
+        // STT with 4 write fins → 0.34×; SOT with 3+1 fins → 0.29×.
+        let stt = stt_cell_area(4) / SRAM_CELL_AREA;
+        let sot = sot_cell_area(3, 1) / SRAM_CELL_AREA;
+        assert!((stt - 0.34).abs() < 0.02, "stt rel area {stt}");
+        assert!((sot - 0.29).abs() < 0.02, "sot rel area {sot}");
+    }
+
+    #[test]
+    fn mram_cells_are_denser_than_sram() {
+        assert!(stt_cell_area(4) < SRAM_CELL_AREA);
+        assert!(sot_cell_area(3, 1) < SRAM_CELL_AREA);
+    }
+
+    #[test]
+    fn area_monotone_in_fins() {
+        assert!(stt_cell_area(5) > stt_cell_area(3));
+        assert!(sot_cell_area(4, 1) > sot_cell_area(2, 1));
+        assert!(sot_cell_area(3, 2) > sot_cell_area(3, 1));
+    }
+
+    #[test]
+    fn kind_metadata() {
+        assert!(BitcellKind::SttMram.non_volatile());
+        assert!(!BitcellKind::Sram.non_volatile());
+        assert_eq!(BitcellKind::SotMram.name(), "SOT-MRAM");
+        assert_eq!(BitcellKind::ALL.len(), 3);
+    }
+
+    #[test]
+    fn write_helpers() {
+        let p = BitcellParams {
+            kind: BitcellKind::SttMram,
+            sense_latency: 1.0,
+            sense_energy: 1.0,
+            write_latency_set: 2.0,
+            write_latency_reset: 3.0,
+            write_energy_set: 1.0,
+            write_energy_reset: 3.0,
+            write_fins: 4,
+            read_fins: 4,
+            area: SRAM_CELL_AREA * 0.34,
+            cell_leakage: 0.0,
+        };
+        assert_eq!(p.write_latency(), 3.0);
+        assert_eq!(p.write_energy(), 2.0);
+        assert!((p.area_rel_sram() - 0.34).abs() < 1e-12);
+    }
+}

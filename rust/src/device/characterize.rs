@@ -1,0 +1,379 @@
+//! The paper's §3.1 characterization procedure, end to end.
+//!
+//! For each MRAM flavor: sweep access-device fin counts, run
+//! pulse-width-to-failure bisection for both write directions at the
+//! worst-delay corner, measure write energy at the minimal pulse at the
+//! worst-power corner, time the bitline sense to the 25 mV margin, and
+//! pick the fin count minimizing the per-bitcell EDAP (energy × delay ×
+//! area) — "the optimal balance between the latency, energy, and area".
+//!
+//! Calibration constants (`cal`) stand in for the proprietary parts of the
+//! paper's flow (PDK parasitics, write-driver topology). They are fixed
+//! once, documented, and regression-tested: `table1_regression` asserts the
+//! chosen cells land within a few percent of the paper's Table 1.
+
+use super::bitcell::{sot_cell_area, stt_cell_area, BitcellKind, BitcellParams, SRAM_CELL_AREA};
+use super::circuit::{pulse_to_failure, simulate_sense, simulate_write};
+use super::finfet::{card, Corner, FinFet};
+use super::mtj::{Mtj, WriteDir};
+
+/// Calibration card: the constants the paper gets from its commercial PDK
+/// and driver design, fixed here against public 16nm data + Table 1.
+pub mod cal {
+    /// Bitline capacitance on the STT (shared read/write) sense path (F):
+    /// a 512-row bitline (drain caps + wire) at 16nm.
+    pub const C_BITLINE_STT: f64 = 40.0e-15;
+    /// Bitline capacitance on the SOT dedicated read port (F): lighter
+    /// line (small 1-fin read drains).
+    pub const C_BITLINE_SOT: f64 = 25.0e-15;
+    /// Read bias across the STT cell branch (V) — limited by read disturb:
+    /// the read current crosses the junction, so bias must stay well below
+    /// the switching threshold.
+    pub const V_READ_STT: f64 = 0.12;
+    /// Read bias for SOT (V) — the dedicated read port cannot disturb the
+    /// free layer (paper §2), so a higher bias is safe and recovers the
+    /// drive lost to the small 1-fin read device.
+    pub const V_READ_SOT: f64 = 0.30;
+    /// Sense-amp latch resolution time (s).
+    pub const T_SA: f64 = 200.0e-12;
+    /// Sense-path energy overhead: bitline-pair precharge + SA latch swing
+    /// as a multiple of `C_BITLINE·VDD²`. STT pays a full-rail precharge on
+    /// the shared read/write bitline; SOT's dedicated read port precharges
+    /// a lighter, lower-swing line.
+    pub const SENSE_OVERHEAD: [f64; 2] = [2.91, 0.99]; // [STT, SOT]
+    /// Write-driver + bitline/wordline charging overhead as a multiplier
+    /// on the cell loop energy. STT's reset direction needs the boosted
+    /// source-line driver (highest factor).
+    pub const WRITE_OVERHEAD_STT: [f64; 2] = [2.05, 3.41]; // [set, reset]
+    pub const WRITE_OVERHEAD_SOT: [f64; 2] = [1.48, 1.91];
+    /// Drive derate for the source-degenerated STT set direction (the
+    /// access NMOS sees its source lifted by the MTJ drop).
+    pub const STT_SET_DERATE: f64 = 0.80;
+    /// MTJ oxide breakdown limit (V): any write transient whose junction
+    /// voltage exceeds this at the design (worst-delay) corner is an
+    /// invalid design point. This is what bounds the STT access device at
+    /// 4 fins — more drive pushes the end-of-set junction voltage past the
+    /// thin-oxide limit.
+    pub const V_MTJ_BREAKDOWN: f64 = 0.58;
+    /// Electromigration current limit of the SOT heavy-metal rail (A):
+    /// the β-W strip is thin; sustained write current density above this
+    /// violates EM lifetime. Bounds the SOT write device at 3 fins.
+    pub const RAIL_EM_LIMIT: f64 = 160.0e-6;
+    /// SRAM: effective leaking fins per 6T cell (two cross-coupled
+    /// inverters + pass gates, low-VT performance cell as in the GPU L2).
+    pub const SRAM_LEAK_FINS: f64 = 4.0;
+    /// SRAM write-driver strength (fins) for the full-swing bitline drive.
+    pub const SRAM_WRITE_DRIVER_FINS: u32 = 8;
+    /// Fin counts to sweep for access devices ("we swept a range of fin
+    /// counts ... to find the optimal balance").
+    pub const FIN_SWEEP: std::ops::RangeInclusive<u32> = 1..=6;
+}
+
+/// One point of the fin-count sweep.
+#[derive(Debug, Clone)]
+pub struct FinSweepPoint {
+    pub write_fins: u32,
+    pub read_fins: u32,
+    /// `None` when the device cannot exceed the critical current.
+    pub params: Option<BitcellParams>,
+    /// Per-bitcell EDAP metric used for the pick (J·s·m²); `f64::INFINITY`
+    /// for unswitchable points.
+    pub edap: f64,
+}
+
+/// Full report for one technology: the sweep and the chosen cell.
+#[derive(Debug, Clone)]
+pub struct CharacterizationReport {
+    pub kind: BitcellKind,
+    pub sweep: Vec<FinSweepPoint>,
+    pub chosen: BitcellParams,
+}
+
+fn mtj_for(kind: BitcellKind) -> Mtj {
+    match kind {
+        BitcellKind::SttMram => Mtj::stt(),
+        BitcellKind::SotMram => Mtj::sot(),
+        BitcellKind::Sram => unreachable!("SRAM has no MTJ"),
+    }
+}
+
+/// Characterize one MRAM bitcell at a given fin configuration. Returns
+/// `None` if either write direction cannot complete within 100 ns, or the
+/// design point violates a reliability limit at the design corner (MTJ
+/// oxide breakdown for STT, heavy-metal rail electromigration for SOT).
+fn characterize_mram(kind: BitcellKind, write_fins: u32, read_fins: u32) -> Option<BitcellParams> {
+    let mtj = mtj_for(kind);
+    // Worst-delay corner for latency, per the paper.
+    let wd_access = FinFet::nmos(write_fins, Corner::WorstDelay);
+    let (derate_set, derate_reset) = match kind {
+        BitcellKind::SttMram => (cal::STT_SET_DERATE, 1.0),
+        _ => (1.0, 1.0),
+    };
+    let t_set = pulse_to_failure(&wd_access, &mtj, WriteDir::Set, 1e-12, 100e-9, derate_set)?;
+    let t_reset =
+        pulse_to_failure(&wd_access, &mtj, WriteDir::Reset, 1e-12, 100e-9, derate_reset)?;
+
+    // Reliability screens at the design corner.
+    let set_tr = simulate_write(&wd_access, &mtj, WriteDir::Set, t_set, derate_set);
+    let reset_tr = simulate_write(&wd_access, &mtj, WriteDir::Reset, t_reset, derate_reset);
+    match kind {
+        BitcellKind::SttMram => {
+            if set_tr.v_mtj_peak > cal::V_MTJ_BREAKDOWN
+                || reset_tr.v_mtj_peak > cal::V_MTJ_BREAKDOWN
+            {
+                return None; // oxide breakdown
+            }
+        }
+        BitcellKind::SotMram => {
+            if set_tr.i_peak > cal::RAIL_EM_LIMIT || reset_tr.i_peak > cal::RAIL_EM_LIMIT {
+                return None; // rail electromigration
+            }
+        }
+        BitcellKind::Sram => unreachable!(),
+    }
+
+    // Worst-power corner for energy, at the worst-delay pulse width (the
+    // driver must budget the slow-corner pulse).
+    let wp_access = FinFet::nmos(write_fins, Corner::WorstPower);
+    let e_loop_set = simulate_write(&wp_access, &mtj, WriteDir::Set, t_set, derate_set).loop_energy;
+    let e_loop_reset =
+        simulate_write(&wp_access, &mtj, WriteDir::Reset, t_reset, derate_reset).loop_energy;
+    let ovh = match kind {
+        BitcellKind::SttMram => cal::WRITE_OVERHEAD_STT,
+        _ => cal::WRITE_OVERHEAD_SOT,
+    };
+
+    // Sense path: STT reads through the (shared) write access device; SOT
+    // through its dedicated read device at a higher, disturb-free bias.
+    let (c_bl, v_read) = match kind {
+        BitcellKind::SttMram => (cal::C_BITLINE_STT, cal::V_READ_STT),
+        _ => (cal::C_BITLINE_SOT, cal::V_READ_SOT),
+    };
+    let read_dev = FinFet::nmos(read_fins, Corner::WorstDelay);
+    let sense = simulate_sense(c_bl, v_read, read_dev.ron(), mtj.r_p, mtj.r_ap, cal::T_SA);
+    let ovh_idx = if kind == BitcellKind::SttMram { 0 } else { 1 };
+    let sense_energy = sense.energy + cal::SENSE_OVERHEAD[ovh_idx] * c_bl * card::VDD * card::VDD;
+
+    let area = match kind {
+        BitcellKind::SttMram => stt_cell_area(write_fins),
+        BitcellKind::SotMram => sot_cell_area(write_fins, read_fins),
+        BitcellKind::Sram => unreachable!(),
+    };
+
+    Some(BitcellParams {
+        kind,
+        sense_latency: sense.t_sense,
+        sense_energy,
+        write_latency_set: t_set,
+        write_latency_reset: t_reset,
+        write_energy_set: e_loop_set * ovh[0],
+        write_energy_reset: e_loop_reset * ovh[1],
+        write_fins,
+        read_fins,
+        area,
+        cell_leakage: 0.0, // non-volatile: no retention path to supply
+    })
+}
+
+/// Analytic characterization of the foundry 6T SRAM cell (the baseline is
+/// a given, not a design variable — the paper uses the foundry cell).
+fn characterize_sram() -> BitcellParams {
+    let pd = FinFet::nmos(1, Corner::WorstDelay);
+    // Read: single-fin pull-down discharges the bitline to the margin.
+    let i_read = pd.ion();
+    let t_margin = cal::C_BITLINE_STT * super::circuit::SENSE_MARGIN / i_read;
+    let sense_latency = t_margin + cal::T_SA;
+    // Small-swing read: precharge + SA, shared-bitline overhead like STT.
+    let sense_energy = cal::V_READ_STT * i_read * t_margin
+        + 0.9 * cal::C_BITLINE_STT * card::VDD * card::VDD;
+    // Write: full-swing differential bitline pair driven by a sized write
+    // driver, plus cell flip (~half an SA delay).
+    let driver = FinFet::nmos(cal::SRAM_WRITE_DRIVER_FINS, Corner::WorstDelay);
+    let write_latency = 1.4 * cal::T_SA + cal::C_BITLINE_STT * card::VDD / driver.ion();
+    let write_energy = 1.10 * cal::C_BITLINE_STT * card::VDD * card::VDD;
+    let leak = FinFet::nmos(1, Corner::WorstPower).leakage_power() * cal::SRAM_LEAK_FINS;
+    BitcellParams {
+        kind: BitcellKind::Sram,
+        sense_latency,
+        sense_energy,
+        write_latency_set: write_latency,
+        write_latency_reset: write_latency,
+        write_energy_set: write_energy,
+        write_energy_reset: write_energy,
+        write_fins: 1,
+        read_fins: 1,
+        area: SRAM_CELL_AREA,
+        cell_leakage: leak,
+    }
+}
+
+fn edap_of(p: &BitcellParams) -> f64 {
+    let e = 0.5 * (p.write_energy() + p.sense_energy);
+    let d = 0.5 * (p.write_latency() + p.sense_latency);
+    e * d * p.area
+}
+
+/// Characterize one technology: sweep fins, pick the per-bitcell
+/// EDAP-optimal configuration.
+pub fn characterize_kind(kind: BitcellKind) -> CharacterizationReport {
+    if kind == BitcellKind::Sram {
+        let chosen = characterize_sram();
+        return CharacterizationReport {
+            kind,
+            sweep: vec![FinSweepPoint {
+                write_fins: 1,
+                read_fins: 1,
+                edap: edap_of(&chosen),
+                params: Some(chosen.clone()),
+            }],
+            chosen,
+        };
+    }
+    let mut sweep = Vec::new();
+    for wf in cal::FIN_SWEEP {
+        // SOT reads through a dedicated minimum device; STT shares.
+        let rf = if kind == BitcellKind::SotMram { 1 } else { wf };
+        let params = characterize_mram(kind, wf, rf);
+        let edap = params.as_ref().map(edap_of).unwrap_or(f64::INFINITY);
+        sweep.push(FinSweepPoint {
+            write_fins: wf,
+            read_fins: rf,
+            params,
+            edap,
+        });
+    }
+    let chosen = sweep
+        .iter()
+        .min_by(|a, b| a.edap.partial_cmp(&b.edap).unwrap())
+        .and_then(|p| p.params.clone())
+        .expect("at least one fin count must switch the cell");
+    CharacterizationReport { kind, sweep, chosen }
+}
+
+/// Characterize all three technologies (SRAM, STT-MRAM, SOT-MRAM), in the
+/// paper's order. This is the module's main entry point; results feed the
+/// NVSim-level cache exploration.
+pub fn characterize() -> [BitcellParams; 3] {
+    [
+        characterize_kind(BitcellKind::Sram).chosen,
+        characterize_kind(BitcellKind::SttMram).chosen,
+        characterize_kind(BitcellKind::SotMram).chosen,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{PJ, PS};
+
+    fn within(x: f64, target: f64, tol: f64) -> bool {
+        (x - target).abs() <= tol * target
+    }
+
+    /// The headline regression: chosen cells match the paper's Table 1.
+    #[test]
+    fn table1_regression() {
+        let [_, stt, sot] = characterize();
+
+        // STT-MRAM column.
+        assert_eq!(stt.write_fins, 4, "paper: 4 fins (read/write)");
+        assert!(
+            within(stt.sense_latency, 650.0 * PS, 0.10),
+            "stt sense latency {} ps",
+            stt.sense_latency / PS
+        );
+        assert!(
+            within(stt.sense_energy, 0.076 * PJ, 0.15),
+            "stt sense energy {} pJ",
+            stt.sense_energy / PJ
+        );
+        assert!(
+            within(stt.write_latency_set, 8400.0 * PS, 0.12),
+            "stt set latency {} ps",
+            stt.write_latency_set / PS
+        );
+        assert!(
+            within(stt.write_latency_reset, 7780.0 * PS, 0.12),
+            "stt reset latency {} ps",
+            stt.write_latency_reset / PS
+        );
+        assert!(
+            within(stt.write_energy_set, 1.1 * PJ, 0.15),
+            "stt set energy {} pJ",
+            stt.write_energy_set / PJ
+        );
+        assert!(
+            within(stt.write_energy_reset, 2.2 * PJ, 0.15),
+            "stt reset energy {} pJ",
+            stt.write_energy_reset / PJ
+        );
+        assert!(within(stt.area_rel_sram(), 0.34, 0.06));
+
+        // SOT-MRAM column.
+        assert_eq!(sot.write_fins, 3, "paper: 3 write fins");
+        assert_eq!(sot.read_fins, 1, "paper: 1 read fin");
+        assert!(
+            within(sot.sense_latency, 650.0 * PS, 0.10),
+            "sot sense latency {} ps",
+            sot.sense_latency / PS
+        );
+        assert!(
+            within(sot.sense_energy, 0.020 * PJ, 0.20),
+            "sot sense energy {} pJ",
+            sot.sense_energy / PJ
+        );
+        assert!(
+            within(sot.write_latency_set, 313.0 * PS, 0.15),
+            "sot set latency {} ps",
+            sot.write_latency_set / PS
+        );
+        assert!(
+            within(sot.write_latency_reset, 243.0 * PS, 0.15),
+            "sot reset latency {} ps",
+            sot.write_latency_reset / PS
+        );
+        assert!(
+            within(sot.write_energy_set, 0.08 * PJ, 0.25),
+            "sot set energy {} pJ",
+            sot.write_energy_set / PJ
+        );
+        assert!(within(sot.area_rel_sram(), 0.29, 0.06));
+    }
+
+    #[test]
+    fn sram_is_fast_and_leaky() {
+        let [sram, stt, sot] = characterize();
+        assert!(sram.write_latency() < stt.write_latency());
+        assert!(sram.sense_latency < stt.sense_latency * 1.05);
+        assert!(sram.cell_leakage > 0.0);
+        assert_eq!(stt.cell_leakage, 0.0);
+        assert_eq!(sot.cell_leakage, 0.0);
+    }
+
+    #[test]
+    fn sweep_reports_unswitchable_small_devices() {
+        let rep = characterize_kind(BitcellKind::SttMram);
+        // 1-fin STT cannot exceed Ic → infinite EDAP.
+        let one_fin = rep.sweep.iter().find(|p| p.write_fins == 1).unwrap();
+        assert!(one_fin.edap.is_infinite());
+        // Chosen point is the finite minimum of the sweep.
+        let min = rep
+            .sweep
+            .iter()
+            .filter(|p| p.edap.is_finite())
+            .map(|p| p.edap)
+            .fold(f64::INFINITY, f64::min);
+        assert!((edap_of(&rep.chosen) - min).abs() < 1e-30 * 1.0_f64.max(min));
+    }
+
+    #[test]
+    fn sot_write_beats_stt_write_by_an_order() {
+        let [_, stt, sot] = characterize();
+        assert!(stt.write_latency() / sot.write_latency() > 10.0);
+        assert!(stt.write_energy() / sot.write_energy() > 5.0);
+    }
+
+    fn edap_of(p: &BitcellParams) -> f64 {
+        super::edap_of(p)
+    }
+}

@@ -1,0 +1,182 @@
+//! Synthetic 16nm FinFET technology card.
+//!
+//! Substitutes the commercial 16nm PDK the paper used. Values are
+//! calibrated against publicly reported 16/14nm FinFET characteristics
+//! (per-fin drive ≈ 50–70 µA at nominal VDD, fin pitch 48nm, contacted
+//! poly pitch 90nm, subthreshold leakage in the nA/fin range). The paper
+//! ran transient simulations at the *worst-delay* and *worst-power*
+//! corners; we expose the same three corners.
+
+use crate::util::units::{NM, UW};
+
+/// Process corner. The paper picks the worst-delay corner for latency and
+/// the worst-power corner for energy; `Typical` is used for area-neutral
+/// sanity checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Corner {
+    Typical,
+    /// Slow-slow: lowest drive current → pessimistic delay.
+    WorstDelay,
+    /// Fast-fast: highest drive and leakage → pessimistic power.
+    WorstPower,
+}
+
+/// Device polarity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polarity {
+    Nmos,
+    Pmos,
+}
+
+/// A FinFET instance: polarity + number of fins at a given corner.
+#[derive(Debug, Clone, Copy)]
+pub struct FinFet {
+    pub polarity: Polarity,
+    pub fins: u32,
+    pub corner: Corner,
+}
+
+/// Technology-card constants (16nm FinFET node).
+pub mod card {
+    use super::*;
+
+    /// Nominal supply voltage (V).
+    pub const VDD: f64 = 0.80;
+    /// Fin pitch (m).
+    pub const FIN_PITCH: f64 = 48.0 * NM;
+    /// Contacted poly (gate) pitch (m).
+    pub const CPP: f64 = 90.0 * NM;
+    /// Minimum metal pitch (m) — sets wire geometry in the array model.
+    pub const METAL_PITCH: f64 = 64.0 * NM;
+    /// NMOS saturation drive per fin at nominal VDD, typical corner (A).
+    pub const ION_N_PER_FIN: f64 = 58.0 * UW / 0.8; // 72.5 µA
+    /// PMOS saturation drive per fin (A); ~0.85× NMOS at this node.
+    pub const ION_P_PER_FIN: f64 = ION_N_PER_FIN * 0.85;
+    /// Subthreshold + gate leakage per fin, typical (A).
+    pub const IOFF_PER_FIN: f64 = 1.8e-9;
+    /// Gate capacitance per fin (F): 45 aF.
+    pub const CGATE_PER_FIN: f64 = 45.0e-18;
+    /// Drain (junction + fringe) capacitance per fin (F): 30 aF.
+    pub const CDRAIN_PER_FIN: f64 = 30.0e-18;
+    /// Corner multipliers on drive current (typical, worst-delay, worst-power).
+    pub const ION_CORNER: [f64; 3] = [1.00, 0.82, 1.18];
+    /// Corner multipliers on leakage current.
+    pub const IOFF_CORNER: [f64; 3] = [1.00, 0.45, 3.20];
+}
+
+fn corner_index(c: Corner) -> usize {
+    match c {
+        Corner::Typical => 0,
+        Corner::WorstDelay => 1,
+        Corner::WorstPower => 2,
+    }
+}
+
+impl FinFet {
+    /// NMOS device with `fins` fins at `corner`.
+    pub fn nmos(fins: u32, corner: Corner) -> Self {
+        FinFet {
+            polarity: Polarity::Nmos,
+            fins,
+            corner,
+        }
+    }
+
+    /// PMOS device with `fins` fins at `corner`.
+    pub fn pmos(fins: u32, corner: Corner) -> Self {
+        FinFet {
+            polarity: Polarity::Pmos,
+            fins,
+            corner,
+        }
+    }
+
+    /// Saturation drive current (A) at nominal VDD.
+    pub fn ion(&self) -> f64 {
+        let per_fin = match self.polarity {
+            Polarity::Nmos => card::ION_N_PER_FIN,
+            Polarity::Pmos => card::ION_P_PER_FIN,
+        };
+        per_fin * self.fins as f64 * card::ION_CORNER[corner_index(self.corner)]
+    }
+
+    /// Leakage current (A) with the device nominally off.
+    pub fn ioff(&self) -> f64 {
+        card::IOFF_PER_FIN * self.fins as f64 * card::IOFF_CORNER[corner_index(self.corner)]
+    }
+
+    /// Effective on-resistance (Ω) in the triode-ish regime used by the
+    /// transient solver: Ron = VDD / Ion. The solver additionally clamps
+    /// the branch current at `ion()`, which captures saturation.
+    pub fn ron(&self) -> f64 {
+        card::VDD / self.ion()
+    }
+
+    /// Gate capacitance (F).
+    pub fn cgate(&self) -> f64 {
+        card::CGATE_PER_FIN * self.fins as f64
+    }
+
+    /// Drain capacitance (F).
+    pub fn cdrain(&self) -> f64 {
+        card::CDRAIN_PER_FIN * self.fins as f64
+    }
+
+    /// Static leakage power (W) when holding state.
+    pub fn leakage_power(&self) -> f64 {
+        self.ioff() * card::VDD
+    }
+
+    /// Layout footprint (m²): `(fins + 1) · fin_pitch × 2 · CPP` — one
+    /// dummy-fin spacer plus a two-gate-pitch cell slot, per the layout
+    /// formulation used for bitcell area in prior work.
+    pub fn area(&self) -> f64 {
+        ((self.fins + 1) as f64 * card::FIN_PITCH) * (2.0 * card::CPP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drive_scales_with_fins() {
+        let one = FinFet::nmos(1, Corner::Typical);
+        let four = FinFet::nmos(4, Corner::Typical);
+        assert!((four.ion() / one.ion() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn corners_order_drive_and_leakage() {
+        let t = FinFet::nmos(2, Corner::Typical);
+        let wd = FinFet::nmos(2, Corner::WorstDelay);
+        let wp = FinFet::nmos(2, Corner::WorstPower);
+        assert!(wd.ion() < t.ion() && t.ion() < wp.ion());
+        assert!(wd.ioff() < t.ioff() && t.ioff() < wp.ioff());
+    }
+
+    #[test]
+    fn pmos_is_weaker_than_nmos() {
+        let n = FinFet::nmos(1, Corner::Typical);
+        let p = FinFet::pmos(1, Corner::Typical);
+        assert!(p.ion() < n.ion());
+    }
+
+    #[test]
+    fn per_fin_drive_is_in_published_range() {
+        // 16nm per-fin NMOS drive: tens of µA.
+        let i = FinFet::nmos(1, Corner::Typical).ion();
+        assert!(i > 40e-6 && i < 110e-6, "per-fin Ion {i}");
+    }
+
+    #[test]
+    fn ron_times_ion_is_vdd() {
+        let d = FinFet::nmos(3, Corner::WorstDelay);
+        assert!((d.ron() * d.ion() - card::VDD).abs() < 1e-12);
+    }
+
+    #[test]
+    fn area_grows_with_fins() {
+        assert!(FinFet::nmos(4, Corner::Typical).area() > FinFet::nmos(1, Corner::Typical).area());
+    }
+}

@@ -1,0 +1,36 @@
+//! Circuit-level NVM bitcell characterization (paper §3.1 → Table 1).
+//!
+//! The paper characterizes STT-MRAM and SOT-MRAM bitcells with transient
+//! HSPICE simulations over a commercial 16nm FinFET PDK and published MTJ
+//! compact models, sweeping access-device fin counts and modulating
+//! read/write pulse widths *to the point of failure*. None of that substrate
+//! is available here, so this module rebuilds it:
+//!
+//! * [`finfet`] — a synthetic 16nm FinFET technology card (per-fin drive,
+//!   leakage, capacitances, layout pitches) with worst-delay / worst-power
+//!   corners, calibrated against public 16nm data.
+//! * [`mtj`] — STT and SOT magnetic-tunnel-junction macro-models:
+//!   resistance states from an RA product + TMR, precessional switching
+//!   rate (Sun model), and the SOT three-terminal write path through a
+//!   heavy-metal rail.
+//! * [`circuit`] — a purpose-built transient solver ("SPICE-lite"):
+//!   forward-Euler integration of the bitcell write/read circuits with
+//!   state-dependent MTJ resistance and current-clamped access devices.
+//! * [`bitcell`] — bitcell assembly and layout-rule area formulations
+//!   (fin-count × contacted-poly-pitch grid, after Seo & Roy).
+//! * [`characterize`] — the paper's §3.1 procedure end-to-end: fin-count
+//!   sweeps, pulse-width-to-failure bisection, sense-margin timing, and the
+//!   per-bitcell EDAP pick that yields Table 1.
+//!
+//! Outputs are [`BitcellParams`] records consumed by [`crate::nvsim`].
+
+pub mod bitcell;
+pub mod characterize;
+pub mod circuit;
+pub mod finfet;
+pub mod mtj;
+
+pub use bitcell::{BitcellKind, BitcellParams};
+pub use characterize::{characterize, characterize_kind, CharacterizationReport};
+pub use finfet::{Corner, FinFet};
+pub use mtj::{Mtj, MtjState};

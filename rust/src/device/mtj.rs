@@ -1,0 +1,195 @@
+//! Magnetic-tunnel-junction macro-models (STT and SOT flavors).
+//!
+//! Follows the structure of the compact models the paper simulates
+//! ([Kim CICC'15] for STT, [Kazemi TED'16] for SOT):
+//!
+//! * Resistance from an RA product over the junction area plus TMR, with
+//!   the resistance interpolated along the switching coordinate `s ∈ [0,1]`
+//!   (`s = 0` → initial state, `s = 1` → fully switched), which is what
+//!   makes the write transient self-consistent: as the free layer rotates
+//!   the loop current changes.
+//! * Precessional switching rate (Sun model): above the critical current,
+//!   `ds/dt = (I/Ic − 1) / τ0`; below it the cell holds state (the
+//!   thermally-activated regime is irrelevant at write pulse widths).
+//! * Direction-asymmetric critical currents: for STT, P→AP ("set") needs
+//!   more torque than AP→P ("reset"); for SOT the write current flows
+//!   through the heavy-metal rail, never the junction, so both directions
+//!   see the same low-impedance path and the asymmetry is small.
+
+/// Magnetization state of the free layer relative to the pinned layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjState {
+    /// Low-resistance state.
+    Parallel,
+    /// High-resistance state.
+    AntiParallel,
+}
+
+/// Write direction, named as in the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteDir {
+    /// P → AP.
+    Set,
+    /// AP → P.
+    Reset,
+}
+
+/// MTJ technology flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjKind {
+    Stt,
+    Sot,
+}
+
+/// An MTJ device instance (geometry + materials collapsed into electrical
+/// parameters).
+#[derive(Debug, Clone)]
+pub struct Mtj {
+    pub kind: MtjKind,
+    /// Parallel-state resistance (Ω).
+    pub r_p: f64,
+    /// Anti-parallel-state resistance (Ω).
+    pub r_ap: f64,
+    /// Critical switching current for P→AP (A).
+    pub ic_set: f64,
+    /// Critical switching current for AP→P (A).
+    pub ic_reset: f64,
+    /// Characteristic switching time constant τ0 (s).
+    pub tau0: f64,
+    /// SOT only: heavy-metal write-rail resistance (Ω). 0 for STT.
+    pub r_rail: f64,
+}
+
+impl Mtj {
+    /// STT MTJ calibrated to the paper's device stack: RA ≈ 8 Ω·µm² on a
+    /// ~45nm junction with TMR ≈ 100%; Ic in the tens of µA; τ0 in the ns
+    /// range (precessional STT switching is slow — Table 1's 7.8–8.4 ns).
+    pub fn stt() -> Self {
+        Mtj {
+            kind: MtjKind::Stt,
+            r_p: 4_000.0,
+            r_ap: 8_000.0,
+            ic_set: 60.0e-6,
+            ic_reset: 64.0e-6,
+            tau0: 2.06e-9,
+            r_rail: 0.0,
+        }
+    }
+
+    /// SOT MTJ: same junction stack for the read path; the write path is
+    /// the heavy-metal rail (β-W, ~600 Ω) and spin-Hall torque gives a much
+    /// smaller τ0 — Table 1's 240–310 ps writes.
+    pub fn sot() -> Self {
+        Mtj {
+            kind: MtjKind::Sot,
+            r_p: 4_000.0,
+            r_ap: 8_000.0,
+            ic_set: 120.0e-6,
+            ic_reset: 112.0e-6,
+            tau0: 97.0e-12,
+            r_rail: 600.0,
+        }
+    }
+
+    /// Junction resistance at switching progress `s` for a write in
+    /// direction `dir` (resistance slews from the initial state's value to
+    /// the final state's as the free layer rotates).
+    pub fn resistance_during(&self, dir: WriteDir, s: f64) -> f64 {
+        let s = s.clamp(0.0, 1.0);
+        match dir {
+            WriteDir::Set => self.r_p + (self.r_ap - self.r_p) * s,
+            WriteDir::Reset => self.r_ap + (self.r_p - self.r_ap) * s,
+        }
+    }
+
+    /// Static junction resistance in a settled state.
+    pub fn resistance(&self, state: MtjState) -> f64 {
+        match state {
+            MtjState::Parallel => self.r_p,
+            MtjState::AntiParallel => self.r_ap,
+        }
+    }
+
+    /// Resistance seen by the *write* current: the junction for STT
+    /// (two-terminal), the heavy-metal rail for SOT (three-terminal).
+    pub fn write_path_resistance(&self, dir: WriteDir, s: f64) -> f64 {
+        match self.kind {
+            MtjKind::Stt => self.resistance_during(dir, s),
+            MtjKind::Sot => self.r_rail,
+        }
+    }
+
+    /// Critical current for a write direction (A).
+    pub fn ic(&self, dir: WriteDir) -> f64 {
+        match dir {
+            WriteDir::Set => self.ic_set,
+            WriteDir::Reset => self.ic_reset,
+        }
+    }
+
+    /// Switching rate ds/dt (1/s) at drive current `i` (A) in direction
+    /// `dir`. Zero below the critical current.
+    pub fn switching_rate(&self, dir: WriteDir, i: f64) -> f64 {
+        let ic = self.ic(dir);
+        if i <= ic {
+            0.0
+        } else {
+            (i / ic - 1.0) / self.tau0
+        }
+    }
+
+    /// Tunnel magnetoresistance ratio (RAP − RP)/RP.
+    pub fn tmr(&self) -> f64 {
+        (self.r_ap - self.r_p) / self.r_p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tmr_is_about_100_percent() {
+        assert!((Mtj::stt().tmr() - 1.0).abs() < 0.05);
+        assert!((Mtj::sot().tmr() - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn no_switching_below_critical_current() {
+        let m = Mtj::stt();
+        assert_eq!(m.switching_rate(WriteDir::Set, m.ic_set * 0.99), 0.0);
+        assert!(m.switching_rate(WriteDir::Set, m.ic_set * 1.5) > 0.0);
+    }
+
+    #[test]
+    fn rate_increases_with_overdrive() {
+        let m = Mtj::sot();
+        let r1 = m.switching_rate(WriteDir::Reset, m.ic_reset * 1.2);
+        let r2 = m.switching_rate(WriteDir::Reset, m.ic_reset * 1.5);
+        assert!(r2 > r1);
+    }
+
+    #[test]
+    fn resistance_slews_between_states() {
+        let m = Mtj::stt();
+        assert_eq!(m.resistance_during(WriteDir::Set, 0.0), m.r_p);
+        assert_eq!(m.resistance_during(WriteDir::Set, 1.0), m.r_ap);
+        assert_eq!(m.resistance_during(WriteDir::Reset, 0.0), m.r_ap);
+        assert_eq!(m.resistance_during(WriteDir::Reset, 1.0), m.r_p);
+        // Clamped outside [0,1].
+        assert_eq!(m.resistance_during(WriteDir::Set, 2.0), m.r_ap);
+    }
+
+    #[test]
+    fn sot_write_path_bypasses_junction() {
+        let m = Mtj::sot();
+        assert_eq!(m.write_path_resistance(WriteDir::Set, 0.5), m.r_rail);
+        let stt = Mtj::stt();
+        assert!(stt.write_path_resistance(WriteDir::Set, 0.5) > 1_000.0);
+    }
+
+    #[test]
+    fn sot_switches_orders_of_magnitude_faster() {
+        assert!(Mtj::stt().tau0 / Mtj::sot().tau0 > 10.0);
+    }
+}

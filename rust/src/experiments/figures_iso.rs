@@ -1,0 +1,193 @@
+//! Figure generators: iso-capacity (Figs 4–6) and iso-area (Figs 8–9).
+
+use crate::analysis::batch::batch_sweep;
+#[cfg(test)]
+use crate::analysis::batch::BATCHES;
+use crate::analysis::isoarea::{iso_area, mean_edp_reduction};
+use crate::analysis::isocapacity::{headline_edp_reduction, iso_capacity};
+use crate::util::csv::Csv;
+use crate::util::stats::mean;
+use crate::util::table::{fnum, Table};
+use crate::workloads::memstats::Phase;
+use super::Output;
+
+/// Fig 4: iso-capacity dynamic + leakage energy, normalized to SRAM.
+pub fn fig4() -> Output {
+    let rows = iso_capacity();
+    let mut t = Table::new(
+        "Fig 4: iso-capacity (3MB) dynamic and leakage energy vs SRAM",
+        &["workload", "dyn STT", "dyn SOT", "leak STT", "leak SOT"],
+    );
+    let mut csv = Csv::new(&["workload", "dyn_stt", "dyn_sot", "leak_stt", "leak_sot"]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            fnum(r.dynamic[0], 2),
+            fnum(r.dynamic[1], 2),
+            fnum(r.leakage[0], 3),
+            fnum(r.leakage[1], 3),
+        ]);
+        csv.rowd(&[&r.label, &r.dynamic[0], &r.dynamic[1], &r.leakage[0], &r.leakage[1]]);
+    }
+    let dyn_stt = mean(&rows.iter().map(|r| r.dynamic[0]).collect::<Vec<_>>());
+    let dyn_sot = mean(&rows.iter().map(|r| r.dynamic[1]).collect::<Vec<_>>());
+    let leak_stt = mean(&rows.iter().map(|r| 1.0 / r.leakage[0]).collect::<Vec<_>>());
+    let leak_sot = mean(&rows.iter().map(|r| 1.0 / r.leakage[1]).collect::<Vec<_>>());
+    Output::default().table(t).csv("fig4_isocap_energy", csv).headline(format!(
+        "Fig 4: dyn energy STT {:.1}x / SOT {:.1}x SRAM (paper 2.2/1.3); leak advantage {:.1}x/{:.1}x (paper 6.3/10)",
+        dyn_stt, dyn_sot, leak_stt, leak_sot
+    ))
+}
+
+/// Fig 5: iso-capacity total energy and EDP (with DRAM), normalized.
+pub fn fig5() -> Output {
+    let rows = iso_capacity();
+    let mut t = Table::new(
+        "Fig 5: iso-capacity (3MB) energy and EDP vs SRAM (EDP incl. DRAM)",
+        &["workload", "energy STT", "energy SOT", "EDP STT", "EDP SOT"],
+    );
+    let mut csv = Csv::new(&["workload", "energy_stt", "energy_sot", "edp_stt", "edp_sot"]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            fnum(r.energy[0], 3),
+            fnum(r.energy[1], 3),
+            fnum(r.edp[0], 3),
+            fnum(r.edp[1], 3),
+        ]);
+        csv.rowd(&[&r.label, &r.energy[0], &r.energy[1], &r.edp[0], &r.edp[1]]);
+    }
+    let [stt, sot] = headline_edp_reduction(&rows);
+    let e_stt = mean(&rows.iter().map(|r| 1.0 / r.energy[0]).collect::<Vec<_>>());
+    let e_sot = mean(&rows.iter().map(|r| 1.0 / r.energy[1]).collect::<Vec<_>>());
+    Output::default().table(t).csv("fig5_isocap_edp", csv).headline(format!(
+        "Fig 5: energy reduction {:.1}x/{:.1}x avg (paper 5.3/8.6); EDP reduction up to {:.1}x/{:.1}x (paper 3.8/4.7)",
+        e_stt, e_sot, stt, sot
+    ))
+}
+
+/// Fig 6: batch-size impact on EDP, AlexNet training (top) and
+/// inference (bottom).
+pub fn fig6() -> Output {
+    let mut out = Output::default();
+    let mut headline_parts = Vec::new();
+    for (phase, tag) in [(Phase::Training, "training"), (Phase::Inference, "inference")] {
+        let sweep = batch_sweep(phase);
+        let mut t = Table::new(
+            format!("Fig 6 ({tag}): AlexNet EDP vs SRAM across batch sizes"),
+            &["batch", "EDP STT", "EDP SOT", "reduction STT", "reduction SOT"],
+        );
+        let mut csv = Csv::new(&["batch", "edp_stt", "edp_sot"]);
+        for p in &sweep {
+            t.row(&[
+                p.batch.to_string(),
+                fnum(p.edp_norm[0], 3),
+                fnum(p.edp_norm[1], 3),
+                fnum(1.0 / p.edp_norm[0], 2),
+                fnum(1.0 / p.edp_norm[1], 2),
+            ]);
+            csv.rowd(&[&p.batch, &p.edp_norm[0], &p.edp_norm[1]]);
+        }
+        headline_parts.push(format!(
+            "{tag}: STT {:.1}x..{:.1}x, SOT {:.1}x..{:.1}x",
+            1.0 / sweep.first().unwrap().edp_norm[0],
+            1.0 / sweep.last().unwrap().edp_norm[0],
+            1.0 / sweep.first().unwrap().edp_norm[1],
+            1.0 / sweep.last().unwrap().edp_norm[1],
+        ));
+        out = out.table(t).csv(&format!("fig6_batch_{tag}"), csv);
+    }
+    out.headline(format!(
+        "Fig 6: {} (paper: training STT 2.3->4.6x, SOT 7.2-7.6x; inference STT 4.1-5.4x, SOT 7.1-7.3x)",
+        headline_parts.join("; ")
+    ))
+}
+
+/// Fig 8: iso-area dynamic + leakage energy, normalized to SRAM.
+pub fn fig8() -> Output {
+    let rows = iso_area();
+    let mut t = Table::new(
+        "Fig 8: iso-area (STT 7MB / SOT 10MB) dynamic and leakage energy vs SRAM",
+        &["workload", "dyn STT", "dyn SOT", "leak STT", "leak SOT"],
+    );
+    let mut csv = Csv::new(&["workload", "dyn_stt", "dyn_sot", "leak_stt", "leak_sot"]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            fnum(r.dynamic[0], 2),
+            fnum(r.dynamic[1], 2),
+            fnum(r.leakage[0], 3),
+            fnum(r.leakage[1], 3),
+        ]);
+        csv.rowd(&[&r.label, &r.dynamic[0], &r.dynamic[1], &r.leakage[0], &r.leakage[1]]);
+    }
+    let dyn_stt = mean(&rows.iter().map(|r| r.dynamic[0]).collect::<Vec<_>>());
+    let dyn_sot = mean(&rows.iter().map(|r| r.dynamic[1]).collect::<Vec<_>>());
+    let leak_stt = mean(&rows.iter().map(|r| 1.0 / r.leakage[0]).collect::<Vec<_>>());
+    let leak_sot = mean(&rows.iter().map(|r| 1.0 / r.leakage[1]).collect::<Vec<_>>());
+    Output::default().table(t).csv("fig8_isoarea_energy", csv).headline(format!(
+        "Fig 8: dyn energy STT {:.1}x / SOT {:.1}x SRAM (paper 2.5/1.5); leak advantage {:.1}x/{:.1}x (paper 2.2/2.3)",
+        dyn_stt, dyn_sot, leak_stt, leak_sot
+    ))
+}
+
+/// Fig 9: iso-area EDP without (top) and with (bottom) DRAM.
+pub fn fig9() -> Output {
+    let rows = iso_area();
+    let mut t = Table::new(
+        "Fig 9: iso-area EDP vs SRAM, without and with DRAM",
+        &["workload", "EDP STT (no DRAM)", "EDP SOT (no DRAM)", "EDP STT (+DRAM)", "EDP SOT (+DRAM)"],
+    );
+    let mut csv = Csv::new(&["workload", "edp_stt_cache", "edp_sot_cache", "edp_stt_dram", "edp_sot_dram"]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            fnum(r.edp_cache[0], 3),
+            fnum(r.edp_cache[1], 3),
+            fnum(r.edp_dram[0], 3),
+            fnum(r.edp_dram[1], 3),
+        ]);
+        csv.rowd(&[&r.label, &r.edp_cache[0], &r.edp_cache[1], &r.edp_dram[0], &r.edp_dram[1]]);
+    }
+    let [stt, sot] = mean_edp_reduction(&rows);
+    Output::default().table(t).csv("fig9_isoarea_edp", csv).headline(format!(
+        "Fig 9: iso-area EDP reduction with DRAM {:.1}x/{:.1}x avg (paper 2.0/2.3)",
+        stt, sot
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_and_fig5_cover_the_suite() {
+        assert_eq!(fig4().tables[0].len(), 13);
+        assert_eq!(fig5().tables[0].len(), 13);
+    }
+
+    #[test]
+    fn fig6_emits_both_phases() {
+        let out = fig6();
+        assert_eq!(out.tables.len(), 2);
+        assert_eq!(out.csvs.len(), 2);
+        assert_eq!(out.tables[0].len(), BATCHES.len());
+    }
+
+    #[test]
+    fn fig9_mram_wins_iso_area_edp_both_ways() {
+        // Paper: MRAM wins iso-area EDP once DRAM is counted (its
+        // cache-only win is marginal, ~1.2×). In our substrate the MRAM
+        // iso-area caches already win at the cache level, so DRAM
+        // inclusion only has to preserve the win — the deviation is
+        // documented in EXPERIMENTS.md §Fig 9.
+        let rows = iso_area();
+        let with: f64 = mean(&rows.iter().map(|r| r.edp_dram[1]).collect::<Vec<_>>());
+        let without: f64 = mean(&rows.iter().map(|r| r.edp_cache[1]).collect::<Vec<_>>());
+        assert!(with < 1.0, "SOT iso-area EDP with DRAM must beat SRAM: {with}");
+        assert!(without < 1.0, "and without DRAM too: {without}");
+        // DRAM inclusion changes the picture by at most ~35%.
+        assert!((with / without - 1.0).abs() < 0.35);
+        assert_eq!(fig9().tables[0].len(), 13);
+    }
+}

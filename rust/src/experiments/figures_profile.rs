@@ -1,0 +1,81 @@
+//! Figure generators: Fig 1 (GPU L2 trend) and Fig 3 (R/W ratios).
+
+use crate::util::csv::Csv;
+use crate::util::table::{fnum, Table};
+use crate::workloads::profiler::{profile_suite, PROFILE_L2};
+use super::Output;
+
+/// Public L2-capacity data behind the paper's Fig 1 (NVIDIA GeForce
+/// flagships by generation, from the public GPU lists the paper cites).
+pub const GPU_L2_TREND: [(&str, u32, f64); 8] = [
+    ("GTX 580 (Fermi)", 2010, 0.75),
+    ("GTX 680 (Kepler)", 2012, 0.5),
+    ("GTX 780 Ti (Kepler)", 2013, 1.5),
+    ("GTX 980 Ti (Maxwell)", 2015, 3.0),
+    ("GTX 1080 Ti (Pascal)", 2017, 3.0),
+    ("RTX 2080 Ti (Turing)", 2018, 5.5),
+    ("Titan RTX (Turing)", 2018, 6.0),
+    ("RTX 3090 (Ampere)", 2020, 6.0),
+];
+
+/// Fig 1: the L2 capacity trend motivating the scalability study.
+pub fn fig1() -> Output {
+    let mut t = Table::new("Fig 1: L2 cache capacity in recent NVIDIA GPUs", &["GPU", "year", "L2 (MB)"]);
+    let mut csv = Csv::new(&["gpu", "year", "l2_mb"]);
+    for (gpu, year, mb) in GPU_L2_TREND {
+        t.row(&[gpu.to_string(), year.to_string(), fnum(mb, 2)]);
+        csv.rowd(&[&gpu, &year, &mb]);
+    }
+    Output::default().table(t).csv("fig1_l2_trend", csv).headline(
+        "Fig 1: flagship L2 grows 0.75MB (2010) -> 6MB (2020), the trend motivating NVM LLCs",
+    )
+}
+
+/// Fig 3: L2 read/write transaction ratios across the workload suite.
+pub fn fig3() -> Output {
+    let profiles = profile_suite(PROFILE_L2);
+    let mut t = Table::new(
+        "Fig 3: L2 read/write transaction ratio (nvprof substitute)",
+        &["workload", "L2 reads", "L2 writes", "R/W ratio"],
+    );
+    let mut csv = Csv::new(&["workload", "l2_reads", "l2_writes", "ratio"]);
+    let mut min = f64::INFINITY;
+    let mut max = 0.0f64;
+    for p in &profiles {
+        let r = p.stats.rw_ratio();
+        min = min.min(r);
+        max = max.max(r);
+        t.row(&[
+            p.label.clone(),
+            p.stats.l2_reads.to_string(),
+            p.stats.l2_writes.to_string(),
+            fnum(r, 2),
+        ]);
+        csv.rowd(&[&p.label, &p.stats.l2_reads, &p.stats.l2_writes, &r]);
+    }
+    Output::default().table(t).csv("fig3_rw_ratios", csv).headline(format!(
+        "Fig 3: R/W ratio spans {:.1}..{:.1} across the suite (paper: 2..26)",
+        min, max
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_trend_is_upward_overall() {
+        let first = GPU_L2_TREND[0].2;
+        let last = GPU_L2_TREND.last().unwrap().2;
+        assert!(last > 4.0 * first);
+        assert_eq!(fig1().tables[0].len(), GPU_L2_TREND.len());
+    }
+
+    #[test]
+    fn fig3_covers_thirteen_workloads() {
+        let out = fig3();
+        assert_eq!(out.tables[0].len(), 13);
+        assert_eq!(out.csvs[0].1.len(), 13);
+        assert!(out.headlines[0].contains("R/W ratio"));
+    }
+}

@@ -1,0 +1,189 @@
+//! Figure generators: Fig 7 (GPGPU-Sim capacity sweep) and the
+//! scalability figures 10–13.
+
+use crate::analysis::scalability::{ppa_curves, scaling_study};
+use crate::gpusim::{capacity_sweep, dnn_trace, fig7_capacities};
+use crate::util::csv::Csv;
+use crate::util::table::{fnum, Table};
+use crate::util::units::{to_mm2, to_mw, to_nj, to_ns, MB};
+use crate::workloads::memstats::Phase;
+use crate::workloads::nets;
+use super::Output;
+
+/// Fig 7: DRAM-access reduction vs L2 capacity (AlexNet trace through the
+/// trace-driven simulator).
+pub fn fig7() -> Output {
+    let trace = dnn_trace(&nets::alexnet(), 4);
+    let sweep = capacity_sweep(&trace, &fig7_capacities());
+    let mut t = Table::new(
+        "Fig 7: DRAM access reduction vs L2 capacity (AlexNet)",
+        &["L2 (MB)", "DRAM accesses", "L2 hit rate", "reduction (%)"],
+    );
+    let mut csv = Csv::new(&["l2_mb", "dram_accesses", "hit_rate", "reduction_pct"]);
+    let mut stt = 0.0;
+    let mut sot = 0.0;
+    for p in &sweep {
+        let mb = p.result.l2_bytes / MB;
+        if mb == 7 {
+            stt = p.dram_reduction_pct;
+        }
+        if mb == 10 {
+            sot = p.dram_reduction_pct;
+        }
+        t.row(&[
+            mb.to_string(),
+            p.result.dram_accesses().to_string(),
+            fnum(p.result.l2_hit_rate(), 3),
+            fnum(p.dram_reduction_pct, 1),
+        ]);
+        csv.rowd(&[&mb, &p.result.dram_accesses(), &p.result.l2_hit_rate(), &p.dram_reduction_pct]);
+    }
+    Output::default().table(t).csv("fig7_dram_reduction", csv).headline(format!(
+        "Fig 7: DRAM reduction {:.1}% at 7MB / {:.1}% at 10MB (paper 14.6/19.8)",
+        stt, sot
+    ))
+}
+
+/// Fig 10: tuned-cache PPA vs capacity for all three technologies.
+pub fn fig10() -> Output {
+    let curves = ppa_curves();
+    let mut t = Table::new(
+        "Fig 10: cache capacity scaling (EDAP-tuned per point)",
+        &[
+            "MB", "area S/T/O (mm2)", "RL S/T/O (ns)", "WL S/T/O (ns)", "RE S/T/O (nJ)",
+            "WE S/T/O (nJ)", "leak S/T/O (mW)",
+        ],
+    );
+    let mut csv = Csv::new(&[
+        "capacity_mb", "tech", "area_mm2", "rl_ns", "wl_ns", "re_nj", "we_nj", "leak_mw",
+    ]);
+    for p in &curves {
+        let f3 = |f: &dyn Fn(usize) -> f64, d: usize| {
+            format!("{} / {} / {}", fnum(f(0), d), fnum(f(1), d), fnum(f(2), d))
+        };
+        t.row(&[
+            p.capacity_mb.to_string(),
+            f3(&|i| to_mm2(p.ppa[i].area), 2),
+            f3(&|i| to_ns(p.ppa[i].read_latency), 2),
+            f3(&|i| to_ns(p.ppa[i].write_latency), 2),
+            f3(&|i| to_nj(p.ppa[i].read_energy), 2),
+            f3(&|i| to_nj(p.ppa[i].write_energy), 2),
+            f3(&|i| to_mw(p.ppa[i].leakage_power), 0),
+        ]);
+        for (i, tech) in ["SRAM", "STT", "SOT"].iter().enumerate() {
+            csv.rowd(&[
+                &p.capacity_mb,
+                tech,
+                &to_mm2(p.ppa[i].area),
+                &to_ns(p.ppa[i].read_latency),
+                &to_ns(p.ppa[i].write_latency),
+                &to_nj(p.ppa[i].read_energy),
+                &to_nj(p.ppa[i].write_energy),
+                &to_mw(p.ppa[i].leakage_power),
+            ]);
+        }
+    }
+    let last = curves.last().unwrap();
+    Output::default().table(t).csv("fig10_ppa_scaling", csv).headline(format!(
+        "Fig 10: at 32MB area SRAM/STT/SOT = {:.0}/{:.0}/{:.0} mm2; SRAM read latency crosses above MRAM beyond ~4MB",
+        to_mm2(last.ppa[0].area),
+        to_mm2(last.ppa[1].area),
+        to_mm2(last.ppa[2].area)
+    ))
+}
+
+fn scaling_figure(
+    id: &str,
+    title: &str,
+    metric: &dyn Fn(&crate::analysis::scalability::ScalingPoint) -> ([f64; 2], [f64; 2]),
+    paper_note: &str,
+) -> Output {
+    let mut out = Output::default();
+    let mut at32 = [0.0f64; 2];
+    for (phase, tag) in [(Phase::Inference, "inference"), (Phase::Training, "training")] {
+        let pts = scaling_study(phase);
+        let mut t = Table::new(
+            format!("{title} ({tag})"),
+            &["MB", "STT mean", "STT std", "SOT mean", "SOT std"],
+        );
+        let mut csv = Csv::new(&["capacity_mb", "stt_mean", "stt_std", "sot_mean", "sot_std"]);
+        for p in &pts {
+            let (m, s) = metric(p);
+            t.row(&[
+                p.capacity_mb.to_string(),
+                fnum(m[0], 4),
+                fnum(s[0], 4),
+                fnum(m[1], 4),
+                fnum(s[1], 4),
+            ]);
+            csv.rowd(&[&p.capacity_mb, &m[0], &s[0], &m[1], &s[1]]);
+            if p.capacity_mb == 32 && phase == Phase::Inference {
+                at32 = m;
+            }
+        }
+        out = out.table(t).csv(&format!("{id}_{tag}"), csv);
+    }
+    out.headline(format!(
+        "{title}: at 32MB STT {:.1}x / SOT {:.1}x reduction ({paper_note})",
+        1.0 / at32[0],
+        1.0 / at32[1]
+    ))
+}
+
+/// Fig 11: mean normalized energy vs capacity.
+pub fn fig11() -> Output {
+    scaling_figure(
+        "fig11_energy",
+        "Fig 11: mean energy vs SRAM",
+        &|p| (p.energy_mean, p.energy_std),
+        "paper: up to 31.2x/36.4x",
+    )
+}
+
+/// Fig 12: mean normalized latency vs capacity.
+pub fn fig12() -> Output {
+    scaling_figure(
+        "fig12_latency",
+        "Fig 12: mean latency vs SRAM",
+        &|p| (p.latency_mean, p.latency_std),
+        "paper: up to 2.1x/2.6x at large capacity",
+    )
+}
+
+/// Fig 13: mean normalized EDP vs capacity.
+pub fn fig13() -> Output {
+    scaling_figure(
+        "fig13_edp",
+        "Fig 13: mean EDP vs SRAM",
+        &|p| (p.edp_mean, p.edp_std),
+        "paper: up to 65x/95x",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_covers_baseline_plus_sweep() {
+        let out = fig7();
+        assert_eq!(out.tables[0].len(), 6); // 3,6,7,10,12,24 MB
+        assert!(out.headlines[0].contains("7MB"));
+    }
+
+    #[test]
+    fn fig10_covers_six_capacities_three_techs() {
+        let out = fig10();
+        assert_eq!(out.tables[0].len(), 6);
+        assert_eq!(out.csvs[0].1.len(), 18);
+    }
+
+    #[test]
+    fn scaling_figures_emit_both_phases() {
+        for out in [fig11(), fig12(), fig13()] {
+            assert_eq!(out.tables.len(), 2);
+            assert_eq!(out.csvs.len(), 2);
+            assert_eq!(out.tables[0].len(), 6);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Experiment registry: one generator per paper table and figure.
+//!
+//! Every experiment renders (a) terminal tables shaped like the paper's
+//! artifact and (b) CSV series with the exact numbers, written under
+//! `results/` by the coordinator. `repro experiment <id>` runs one;
+//! `repro all` runs the whole registry.
+
+pub mod figures_iso;
+pub mod figures_profile;
+pub mod figures_scale;
+pub mod tables;
+
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Output of one experiment.
+#[derive(Debug, Default)]
+pub struct Output {
+    /// Paper-shaped tables, printed to the terminal.
+    pub tables: Vec<Table>,
+    /// CSV name (without extension) → data, persisted under `results/`.
+    pub csvs: Vec<(String, Csv)>,
+    /// Headline lines (paper-vs-measured one-liners for EXPERIMENTS.md).
+    pub headlines: Vec<String>,
+}
+
+impl Output {
+    pub fn table(mut self, t: Table) -> Self {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn csv(mut self, name: &str, c: Csv) -> Self {
+        self.csvs.push((name.to_string(), c));
+        self
+    }
+
+    pub fn headline(mut self, s: impl Into<String>) -> Self {
+        self.headlines.push(s.into());
+        self
+    }
+}
+
+/// A registered experiment.
+pub struct Experiment {
+    /// Registry id ("table1" … "fig13").
+    pub id: &'static str,
+    /// Paper artifact it regenerates.
+    pub title: &'static str,
+    pub run: fn() -> Output,
+}
+
+/// The full registry, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "table1",
+            title: "STT/SOT bitcell parameters after device-level characterization",
+            run: tables::table1,
+        },
+        Experiment {
+            id: "table2",
+            title: "Cache latency/energy/area for SRAM, STT, SOT (iso-capacity + iso-area)",
+            run: tables::table2,
+        },
+        Experiment {
+            id: "table3",
+            title: "DNN configurations under consideration",
+            run: tables::table3,
+        },
+        Experiment {
+            id: "table4",
+            title: "GPGPU-Sim configuration (GTX 1080 Ti)",
+            run: tables::table4,
+        },
+        Experiment {
+            id: "fig1",
+            title: "L2 cache capacity trend in NVIDIA GPUs",
+            run: figures_profile::fig1,
+        },
+        Experiment {
+            id: "fig3",
+            title: "L2 read/write transaction ratio across workloads",
+            run: figures_profile::fig3,
+        },
+        Experiment {
+            id: "fig4",
+            title: "Iso-capacity dynamic + leakage energy (normalized to SRAM)",
+            run: figures_iso::fig4,
+        },
+        Experiment {
+            id: "fig5",
+            title: "Iso-capacity energy + EDP (normalized to SRAM)",
+            run: figures_iso::fig5,
+        },
+        Experiment {
+            id: "fig6",
+            title: "Batch-size impact on EDP (AlexNet, training + inference)",
+            run: figures_iso::fig6,
+        },
+        Experiment {
+            id: "fig7",
+            title: "DRAM access reduction vs L2 capacity (GPGPU-Sim substitute)",
+            run: figures_scale::fig7,
+        },
+        Experiment {
+            id: "fig8",
+            title: "Iso-area dynamic + leakage energy (normalized to SRAM)",
+            run: figures_iso::fig8,
+        },
+        Experiment {
+            id: "fig9",
+            title: "Iso-area EDP without/with DRAM (normalized to SRAM)",
+            run: figures_iso::fig9,
+        },
+        Experiment {
+            id: "fig10",
+            title: "Cache capacity scaling: area / latency / energy",
+            run: figures_scale::fig10,
+        },
+        Experiment {
+            id: "fig11",
+            title: "Mean energy vs capacity (normalized to SRAM)",
+            run: figures_scale::fig11,
+        },
+        Experiment {
+            id: "fig12",
+            title: "Mean latency vs capacity (normalized to SRAM)",
+            run: figures_scale::fig12,
+        },
+        Experiment {
+            id: "fig13",
+            title: "Mean EDP vs capacity (normalized to SRAM)",
+            run: figures_scale::fig13,
+        },
+    ]
+}
+
+/// Look up one experiment by id.
+pub fn by_id(id: &str) -> Option<Experiment> {
+    registry().into_iter().find(|e| e.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_paper_artifacts() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        for want in [
+            "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "fig5", "fig6",
+            "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+        assert_eq!(ids.len(), 16);
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 16);
+    }
+
+    #[test]
+    fn lookup_finds_and_misses() {
+        assert!(by_id("fig5").is_some());
+        assert!(by_id("fig2").is_none(), "fig2 is the flow diagram, not data");
+    }
+}

@@ -1,0 +1,262 @@
+//! Table generators: paper Tables 1–4.
+
+use crate::device::bitcell::BitcellKind;
+use crate::device::characterize::characterize_kind;
+use crate::gpusim::config::GpuConfig;
+use crate::nvsim::optimizer::tuned_cache;
+use crate::util::csv::Csv;
+use crate::util::table::{fnum, Table};
+use crate::util::units::{fmt_bytes, to_mm2, to_mw, to_nj, to_ns, to_ps, MB};
+use crate::workloads::nets::all_networks;
+use super::Output;
+
+/// Table 1: bitcell parameters after device-level characterization.
+pub fn table1() -> Output {
+    let stt = characterize_kind(BitcellKind::SttMram).chosen;
+    let sot = characterize_kind(BitcellKind::SotMram).chosen;
+    let mut t = Table::new(
+        "Table 1: STT-MRAM and SOT-MRAM bitcell parameters",
+        &["", "STT-MRAM", "SOT-MRAM"],
+    );
+    t.row(&[
+        "Sense Latency (ps)".into(),
+        fnum(to_ps(stt.sense_latency), 0),
+        fnum(to_ps(sot.sense_latency), 0),
+    ]);
+    t.row(&[
+        "Sense Energy (pJ)".into(),
+        fnum(stt.sense_energy * 1e12, 3),
+        fnum(sot.sense_energy * 1e12, 3),
+    ]);
+    t.row(&[
+        "Write Latency (ps)".into(),
+        format!(
+            "{} (set) / {} (reset)",
+            fnum(to_ps(stt.write_latency_set), 0),
+            fnum(to_ps(stt.write_latency_reset), 0)
+        ),
+        format!(
+            "{} (set) / {} (reset)",
+            fnum(to_ps(sot.write_latency_set), 0),
+            fnum(to_ps(sot.write_latency_reset), 0)
+        ),
+    ]);
+    t.row(&[
+        "Write Energy (pJ)".into(),
+        format!(
+            "{} (set) / {} (reset)",
+            fnum(stt.write_energy_set * 1e12, 2),
+            fnum(stt.write_energy_reset * 1e12, 2)
+        ),
+        format!(
+            "{} (set) / {} (reset)",
+            fnum(sot.write_energy_set * 1e12, 2),
+            fnum(sot.write_energy_reset * 1e12, 2)
+        ),
+    ]);
+    t.row(&[
+        "Fin Counts".into(),
+        format!("{} (read/write)", stt.write_fins),
+        format!("{} (write) + {} (read)", sot.write_fins, sot.read_fins),
+    ]);
+    t.row(&[
+        "Area (normalized)".into(),
+        fnum(stt.area_rel_sram(), 2),
+        fnum(sot.area_rel_sram(), 2),
+    ]);
+
+    let mut csv = Csv::new(&["param", "stt", "sot"]);
+    csv.rowd(&[&"sense_latency_ps", &to_ps(stt.sense_latency), &to_ps(sot.sense_latency)]);
+    csv.rowd(&[&"sense_energy_pj", &(stt.sense_energy * 1e12), &(sot.sense_energy * 1e12)]);
+    csv.rowd(&[
+        &"write_latency_set_ps",
+        &to_ps(stt.write_latency_set),
+        &to_ps(sot.write_latency_set),
+    ]);
+    csv.rowd(&[
+        &"write_latency_reset_ps",
+        &to_ps(stt.write_latency_reset),
+        &to_ps(sot.write_latency_reset),
+    ]);
+    csv.rowd(&[
+        &"write_energy_set_pj",
+        &(stt.write_energy_set * 1e12),
+        &(sot.write_energy_set * 1e12),
+    ]);
+    csv.rowd(&[&"area_norm", &stt.area_rel_sram(), &sot.area_rel_sram()]);
+
+    Output::default()
+        .table(t)
+        .csv("table1_bitcells", csv)
+        .headline(format!(
+            "Table 1: STT write {:.0}/{:.0}ps (paper 8400/7780), SOT {:.0}/{:.0}ps (paper 313/243), areas {:.2}/{:.2} (paper 0.34/0.29)",
+            to_ps(stt.write_latency_set),
+            to_ps(stt.write_latency_reset),
+            to_ps(sot.write_latency_set),
+            to_ps(sot.write_latency_reset),
+            stt.area_rel_sram(),
+            sot.area_rel_sram()
+        ))
+}
+
+/// Table 2: tuned cache PPA, iso-capacity (3MB) and iso-area (7/10MB).
+pub fn table2() -> Output {
+    let sram = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
+    let stt3 = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
+    let stt7 = tuned_cache(BitcellKind::SttMram, 7 * MB).ppa;
+    let sot3 = tuned_cache(BitcellKind::SotMram, 3 * MB).ppa;
+    let sot10 = tuned_cache(BitcellKind::SotMram, 10 * MB).ppa;
+    let cols = [
+        ("SRAM", &sram),
+        ("STT iso-cap", &stt3),
+        ("STT iso-area", &stt7),
+        ("SOT iso-cap", &sot3),
+        ("SOT iso-area", &sot10),
+    ];
+    let mut t = Table::new(
+        "Table 2: cache latency/energy/area (EDAP-tuned)",
+        &["", "SRAM", "STT 3MB", "STT 7MB", "SOT 3MB", "SOT 10MB"],
+    );
+    let row = |name: &str, f: &dyn Fn(&crate::nvsim::cache::CachePpa) -> f64, d: usize| {
+        let mut cells = vec![name.to_string()];
+        for (_, p) in &cols {
+            cells.push(fnum(f(p), d));
+        }
+        cells
+    };
+    t.row(&row("Capacity (MB)", &|p| p.capacity as f64 / MB as f64, 0));
+    t.row(&row("Read Latency (ns)", &|p| to_ns(p.read_latency), 2));
+    t.row(&row("Write Latency (ns)", &|p| to_ns(p.write_latency), 2));
+    t.row(&row("Read Energy (nJ)", &|p| to_nj(p.read_energy), 2));
+    t.row(&row("Write Energy (nJ)", &|p| to_nj(p.write_energy), 2));
+    t.row(&row("Leakage Power (mW)", &|p| to_mw(p.leakage_power), 0));
+    t.row(&row("Area (mm^2)", &|p| to_mm2(p.area), 2));
+
+    let mut csv = Csv::new(&["config", "cap_mb", "rl_ns", "wl_ns", "re_nj", "we_nj", "leak_mw", "area_mm2"]);
+    for (name, p) in &cols {
+        csv.rowd(&[
+            name,
+            &(p.capacity as f64 / MB as f64),
+            &to_ns(p.read_latency),
+            &to_ns(p.write_latency),
+            &to_nj(p.read_energy),
+            &to_nj(p.write_energy),
+            &to_mw(p.leakage_power),
+            &to_mm2(p.area),
+        ]);
+    }
+    Output::default().table(t).csv("table2_caches", csv).headline(format!(
+        "Table 2: SRAM {:.2}ns/{:.2}nJ/{:.0}mW/{:.2}mm2 (paper 2.91/0.35/6442/5.53); iso-area STT 7MB, SOT 10MB (paper 7/10)",
+        to_ns(sram.read_latency),
+        to_nj(sram.read_energy),
+        to_mw(sram.leakage_power),
+        to_mm2(sram.area)
+    ))
+}
+
+/// Table 3: DNN configurations.
+pub fn table3() -> Output {
+    let nets = all_networks();
+    let mut t = Table::new(
+        "Table 3: DNN configurations",
+        &["", "AlexNet", "GoogLeNet", "VGG-16", "ResNet-18", "SqueezeNet"],
+    );
+    let row = |name: &str, f: &dyn Fn(&crate::workloads::dnn::Dnn) -> String| {
+        let mut cells = vec![name.to_string()];
+        for n in &nets {
+            cells.push(f(n));
+        }
+        cells
+    };
+    t.row(&row("Top-5 Error (%)", &|n| fnum(n.top5_error, 2)));
+    t.row(&row("CONV Layers", &|n| n.conv_layers().to_string()));
+    t.row(&row("FC Layers", &|n| n.fc_layers().to_string()));
+    t.row(&row("Total Weights", &|n| {
+        format!("{:.1}M", n.total_weights() as f64 / 1e6)
+    }));
+    t.row(&row("Total MACs", &|n| {
+        let m = n.total_macs() as f64;
+        if m >= 1e9 {
+            format!("{:.2}G", m / 1e9)
+        } else {
+            format!("{:.0}M", m / 1e6)
+        }
+    }));
+    let mut csv = Csv::new(&["net", "top5_err", "conv", "fc", "weights", "macs"]);
+    for n in &nets {
+        csv.rowd(&[
+            &n.name,
+            &n.top5_error,
+            &n.conv_layers(),
+            &n.fc_layers(),
+            &n.total_weights(),
+            &n.total_macs(),
+        ]);
+    }
+    Output::default().table(t).csv("table3_dnns", csv)
+}
+
+/// Table 4: the GPU configuration used by the simulator.
+pub fn table4() -> Output {
+    let g = GpuConfig::gtx_1080_ti();
+    let mut t = Table::new("Table 4: GPGPU-Sim configuration (GTX 1080 Ti)", &["parameter", "value"]);
+    t.row_str(&["Number of Cores", &g.cores.to_string()]);
+    t.row_str(&["Threads / Core", &g.threads_per_core.to_string()]);
+    t.row_str(&["Registers / Core", &g.registers_per_core.to_string()]);
+    t.row_str(&[
+        "L1 Data Cache",
+        &format!("{}, {} B line, {}-way LRU", fmt_bytes(g.l1_bytes), g.l1_line, g.l1_assoc),
+    ]);
+    t.row_str(&[
+        "L2 Data Cache",
+        &format!("{}, {} B line, {}-way LRU", fmt_bytes(g.l2_bytes), g.l2_line, g.l2_assoc),
+    ]);
+    t.row_str(&["Instruction Cache", &fmt_bytes(g.icache_bytes)]);
+    t.row_str(&["Schedulers / Core", &g.schedulers_per_core.to_string()]);
+    t.row_str(&["Core Frequency", &format!("{:.0} MHz", g.core_clock / 1e6)]);
+    t.row_str(&[
+        "Interconnect Frequency",
+        &format!("{:.0} MHz", g.interconnect_clock / 1e6),
+    ]);
+    t.row_str(&["L2 Frequency", &format!("{:.0} MHz", g.l2_clock / 1e6)]);
+    t.row_str(&["Memory Frequency", &format!("{:.0} MHz", g.memory_clock / 1e6)]);
+    Output::default().table(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_six_rows_two_techs() {
+        let out = table1();
+        assert_eq!(out.tables.len(), 1);
+        assert_eq!(out.tables[0].len(), 6);
+        assert!(!out.csvs.is_empty());
+        assert!(!out.headlines.is_empty());
+    }
+
+    #[test]
+    fn table2_renders_five_configs() {
+        let out = table2();
+        let rendered = out.tables[0].render();
+        assert!(rendered.contains("SOT 10MB"));
+        assert!(rendered.contains("Leakage Power"));
+        assert_eq!(out.csvs[0].1.len(), 5);
+    }
+
+    #[test]
+    fn table3_matches_paper_layer_counts() {
+        let out = table3();
+        let rendered = out.tables[0].render();
+        assert!(rendered.contains("57"), "GoogLeNet conv count");
+        assert!(rendered.contains("SqueezeNet"));
+    }
+
+    #[test]
+    fn table4_lists_core_frequency() {
+        let rendered = table4().tables[0].render();
+        assert!(rendered.contains("1481 MHz"));
+        assert!(rendered.contains("28"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Set-associative cache model with true-LRU replacement and write-back /
+//! write-allocate policy — the L1/L2 building block of the trace-driven
+//! simulator.
+//!
+//! Performance note (this is the simulator's hot path): sets are flat
+//! arrays of `(tag, lru_counter)` pairs; a lookup scans at most `assoc`
+//! entries. With 16 ways that beats any pointer-chasing LRU list at these
+//! sizes, and the layout is cache-friendly for the *host* CPU.
+
+/// Access outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Hit,
+    /// Miss; evicted line was clean (or set had an empty way).
+    Miss,
+    /// Miss that evicted a dirty line (costs a write-back).
+    MissDirtyEvict,
+}
+
+/// Invalid-way sentinel in the tag array.
+const EMPTY: u64 = u64::MAX;
+
+/// A set-associative write-back cache.
+///
+/// Perf (§Perf in EXPERIMENTS.md): structure-of-arrays layout — the tag
+/// probe is a branch-light scan over a contiguous `u64` slice the
+/// compiler vectorizes, with LRU counters and dirty bits in side arrays
+/// touched only on their respective paths. ~25% faster trace replay than
+/// the array-of-structs `(tag, lru, valid, dirty)` version.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    assoc: usize,
+    line: u64,
+    /// Line tag per way (`EMPTY` = invalid), `sets × assoc`.
+    tags: Vec<u64>,
+    /// LRU timestamp per way.
+    lru: Vec<u64>,
+    /// Dirty bitmask per set (bit i = way i), assoc ≤ 64.
+    dirty: Vec<u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// Build a cache of `capacity` bytes with `line`-byte lines and
+    /// `assoc` ways. Capacity must divide evenly into sets.
+    pub fn new(capacity: u64, line: u64, assoc: u64) -> Cache {
+        let lines = capacity / line;
+        assert!(lines >= assoc && assoc > 0, "degenerate cache geometry");
+        assert!(assoc <= 64, "dirty bitmask holds at most 64 ways");
+        let sets = (lines / assoc) as usize;
+        Cache {
+            sets,
+            assoc: assoc as usize,
+            line,
+            tags: vec![EMPTY; sets * assoc as usize],
+            lru: vec![0; sets * assoc as usize],
+            dirty: vec![0; sets],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> (usize, u64) {
+        let line_addr = addr / self.line;
+        let set = (line_addr % self.sets as u64) as usize;
+        (set, line_addr)
+    }
+
+    /// Access `addr`; returns the outcome and updates LRU/dirty state.
+    #[inline]
+    pub fn access(&mut self, addr: u64, is_write: bool) -> Outcome {
+        self.tick += 1;
+        let (set, tag) = self.set_of(addr);
+        let base = set * self.assoc;
+        let tags = &mut self.tags[base..base + self.assoc];
+        let lru = &mut self.lru[base..base + self.assoc];
+
+        // Hit + victim in one fused scan over the SoA slices (branch-lean:
+        // the victim bookkeeping is two compares on already-loaded words).
+        let mut victim = 0usize;
+        let mut victim_lru = u64::MAX;
+        for (i, (&t, &l)) in tags.iter().zip(lru.iter()).enumerate() {
+            if t == tag {
+                lru[i] = self.tick;
+                if is_write {
+                    self.dirty[set] |= 1 << i;
+                }
+                self.hits += 1;
+                return Outcome::Hit;
+            }
+            let key = if t == EMPTY { 0 } else { l };
+            if key < victim_lru {
+                victim_lru = key;
+                victim = i;
+            }
+        }
+        self.misses += 1;
+        let was_valid = tags[victim] != EMPTY;
+        let dirty_evict = was_valid && (self.dirty[set] >> victim) & 1 == 1;
+        if dirty_evict {
+            self.writebacks += 1;
+        }
+        tags[victim] = tag;
+        lru[victim] = self.tick;
+        if is_write {
+            self.dirty[set] |= 1 << victim;
+        } else {
+            self.dirty[set] &= !(1 << victim);
+        }
+        if dirty_evict {
+            Outcome::MissDirtyEvict
+        } else {
+            Outcome::Miss
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        self.misses as f64 / self.accesses().max(1) as f64
+    }
+
+    /// Reset counters (state retained) — used between warmup and measure.
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(1024, 64, 4);
+        assert_eq!(c.access(0, false), Outcome::Miss);
+        assert_eq!(c.access(0, false), Outcome::Hit);
+        assert_eq!(c.access(63, false), Outcome::Hit, "same line");
+        assert_eq!(c.access(64, false), Outcome::Miss, "next line");
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        // 2-way, map everything to one set: 2 lines of 64B, sets=1.
+        let mut c = Cache::new(128, 64, 2);
+        c.access(0, false); // A
+        c.access(64, false); // B
+        c.access(0, false); // touch A
+        c.access(128, false); // C evicts B (LRU)
+        assert_eq!(c.access(0, false), Outcome::Hit, "A survived");
+        assert_eq!(c.access(64, false), Outcome::Miss, "B evicted");
+    }
+
+    #[test]
+    fn dirty_eviction_counts_writeback() {
+        let mut c = Cache::new(128, 64, 2);
+        c.access(0, true); // dirty A
+        c.access(64, false); // B
+        let out = c.access(128, false); // evicts dirty A
+        assert_eq!(out, Outcome::MissDirtyEvict);
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn working_set_fitting_has_only_compulsory_misses() {
+        let mut c = Cache::new(64 * 1024, 128, 16);
+        for pass in 0..3 {
+            for line in 0..256u64 {
+                let out = c.access(line * 128, false);
+                if pass > 0 {
+                    assert_eq!(out, Outcome::Hit);
+                }
+            }
+        }
+        assert_eq!(c.misses, 256);
+        assert_eq!(c.hits, 512);
+    }
+
+    #[test]
+    fn streaming_larger_than_cache_always_misses() {
+        let mut c = Cache::new(8 * 1024, 128, 4);
+        for pass in 0..2 {
+            let _ = pass;
+            for line in 0..1024u64 {
+                // 128KB stream through an 8KB cache.
+                assert_ne!(c.access(line * 128, false), Outcome::Hit);
+            }
+        }
+        assert_eq!(c.miss_rate(), 1.0);
+    }
+
+    #[test]
+    fn counters_reset_keeps_contents() {
+        let mut c = Cache::new(1024, 64, 4);
+        c.access(0, true);
+        c.reset_counters();
+        assert_eq!(c.accesses(), 0);
+        assert_eq!(c.access(0, false), Outcome::Hit, "state retained");
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_assoc_panics() {
+        let _ = Cache::new(1024, 64, 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! GPU model configuration — paper Table 4 (NVIDIA GTX 1080 Ti).
+
+use crate::util::units::{KB, MB};
+
+/// Table 4, verbatim.
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    /// Number of streaming multiprocessors.
+    pub cores: u32,
+    /// Threads per core.
+    pub threads_per_core: u32,
+    /// Registers per core.
+    pub registers_per_core: u32,
+    /// L1 data cache per core: capacity / line / associativity.
+    pub l1_bytes: u64,
+    pub l1_line: u64,
+    pub l1_assoc: u64,
+    /// Shared L2: capacity / line / associativity.
+    pub l2_bytes: u64,
+    pub l2_line: u64,
+    pub l2_assoc: u64,
+    /// Instruction cache (modeled for completeness; traces are data-only).
+    pub icache_bytes: u64,
+    /// Warp schedulers per core.
+    pub schedulers_per_core: u32,
+    /// Clocks (Hz).
+    pub core_clock: f64,
+    pub interconnect_clock: f64,
+    pub l2_clock: f64,
+    pub memory_clock: f64,
+}
+
+impl GpuConfig {
+    /// The paper's GTX 1080 Ti configuration with a 3MB L2
+    /// ("for GPGPU-Sim compatibility, we set L2 cache capacity to 3MB").
+    pub fn gtx_1080_ti() -> GpuConfig {
+        GpuConfig {
+            cores: 28,
+            threads_per_core: 2048,
+            registers_per_core: 65536,
+            l1_bytes: 48 * KB,
+            l1_line: 128,
+            l1_assoc: 6,
+            l2_bytes: 3 * MB,
+            l2_line: 128,
+            l2_assoc: 16,
+            icache_bytes: 8 * KB,
+            schedulers_per_core: 4,
+            core_clock: 1481.0e6,
+            interconnect_clock: 2962.0e6,
+            l2_clock: 1481.0e6,
+            memory_clock: 2750.0e6,
+        }
+    }
+
+    /// Same GPU with an enlarged L2 (the paper's iso-area what-if).
+    pub fn with_l2(mut self, l2_bytes: u64) -> GpuConfig {
+        self.l2_bytes = l2_bytes;
+        self
+    }
+
+    /// L2 cycle time (s).
+    pub fn l2_cycle(&self) -> f64 {
+        1.0 / self.l2_clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_values() {
+        let g = GpuConfig::gtx_1080_ti();
+        assert_eq!(g.cores, 28);
+        assert_eq!(g.threads_per_core, 2048);
+        assert_eq!(g.registers_per_core, 65536);
+        assert_eq!(g.l1_bytes, 48 * KB);
+        assert_eq!(g.l1_assoc, 6);
+        assert_eq!(g.l2_bytes, 3 * MB);
+        assert_eq!(g.l2_line, 128);
+        assert_eq!(g.l2_assoc, 16);
+        assert_eq!(g.schedulers_per_core, 4);
+        assert!((g.core_clock - 1.481e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn with_l2_scales_capacity_only() {
+        let g = GpuConfig::gtx_1080_ti().with_l2(24 * MB);
+        assert_eq!(g.l2_bytes, 24 * MB);
+        assert_eq!(g.cores, 28);
+    }
+}

@@ -1,0 +1,23 @@
+//! Trace-driven GPU memory-hierarchy simulator (paper §3.4 → Fig 7) —
+//! the stand-in for the extended GPGPU-Sim + DarkNet stack.
+//!
+//! The paper's iso-area question is: *if the L2 were bigger (same area,
+//! denser MRAM cells), how much DRAM traffic disappears?* GPGPU-Sim
+//! answers it by simulating AlexNet at L2 capacities from 3MB (the real
+//! GTX 1080 Ti) doubled up to 24MB. Here:
+//!
+//! * [`config`] — the Table 4 GPU configuration.
+//! * [`cache`] — a set-associative write-back cache with true LRU.
+//! * [`trace`] — address-trace generation from the DNN layer descriptors
+//!   (im2col + tiled sgemm, Caffe/DarkNet-style).
+//! * [`sim`] — the simulation loop and the Fig 7 capacity sweep.
+
+pub mod cache;
+pub mod config;
+pub mod sim;
+pub mod trace;
+
+pub use cache::{Cache, Outcome};
+pub use config::GpuConfig;
+pub use sim::{capacity_sweep, fig7_capacities, simulate, SimResult, SweepPoint};
+pub use trace::{dnn_trace, Access};

@@ -1,0 +1,42 @@
+//! # DeepNVM++ — cross-layer NVM cache modeling for deep-learning workloads
+//!
+//! Reproduction of *"Efficient Deep Learning Using Non-Volatile Memory
+//! Technology"* (Inci, Isgenc, Marculescu). The library models, characterizes
+//! and analyzes last-level caches built from conventional SRAM and emerging
+//! STT-MRAM / SOT-MRAM in GPU architectures, driven by the memory behaviour
+//! of real deep-learning workloads.
+//!
+//! The crate is organized as the paper's cross-layer flow (Fig 2):
+//!
+//! 1. [`device`] — circuit-level bitcell characterization: a transient
+//!    "SPICE-lite" solver over synthetic 16nm FinFET and MTJ compact models
+//!    produces the Table 1 bitcell parameters.
+//! 2. [`nvsim`] — microarchitecture-level cache design exploration: an
+//!    NVSim-class analytical PPA model plus the EDAP-optimal cache tuning
+//!    search (paper Algorithm 1) produce the Table 2 cache configurations.
+//! 3. [`workloads`] — architecture-level workload characterization: exact
+//!    layer descriptors of the paper's five DNNs plus HPCG, with an
+//!    analytical L2/DRAM transaction model standing in for nvprof.
+//! 4. [`gpusim`] — a trace-driven GPU memory-hierarchy simulator standing in
+//!    for GPGPU-Sim; quantifies DRAM-access reduction at iso-area capacities.
+//! 5. [`analysis`] — the cross-layer roll-up: dynamic/leakage energy,
+//!    latency, and EDP for iso-capacity, iso-area, batch-size and
+//!    scalability studies.
+//! 6. [`experiments`] — one generator per paper table/figure, with renderers.
+//! 7. [`coordinator`] — orchestration: experiment DAG, memoizing cache,
+//!    thread-pool sweep engine.
+//! 8. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas workloads
+//!    (build-time Python; never on the analysis hot path).
+
+pub mod analysis;
+pub mod coordinator;
+pub mod device;
+pub mod experiments;
+pub mod gpusim;
+pub mod nvsim;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

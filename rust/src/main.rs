@@ -1,0 +1,233 @@
+//! `repro` — the DeepNVM++ command-line interface.
+//!
+//! Subcommands:
+//!   list                      list all registered experiments
+//!   experiment <id> [..]      run specific experiments (table1..fig13)
+//!   all                       run the whole registry, write results/
+//!   bitcells                  print the device-level characterization sweep
+//!   tune --kind K --cap MB    EDAP-tune one cache and print its design
+//!   profile [--l2 MB]         print the workload suite's memory statistics
+//!   runtime <artifact.hlo.txt>  smoke-run an AOT artifact via PJRT
+
+use deepnvm::coordinator::{run_all, run_one, RunnerConfig};
+use deepnvm::device::bitcell::BitcellKind;
+use deepnvm::device::characterize::characterize_kind;
+use deepnvm::experiments::registry;
+use deepnvm::nvsim::optimizer::explore;
+use deepnvm::runtime::{Runtime, TensorF32};
+use deepnvm::util::cli::Args;
+use deepnvm::util::table::{fnum, Table};
+use deepnvm::util::units::{to_mm2, to_mw, to_nj, to_ns, to_ps, MB};
+use deepnvm::workloads::profiler::profile_suite;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("list") => cmd_list(),
+        Some("experiment") => cmd_experiment(&args),
+        Some("all") => cmd_all(&args),
+        Some("bitcells") => cmd_bitcells(),
+        Some("tune") => cmd_tune(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand: {other}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    println!(
+        "repro — DeepNVM++ reproduction\n\
+         usage: repro <list|experiment <id..>|all|bitcells|tune|profile|runtime> [options]\n\
+         \n\
+         examples:\n\
+           repro experiment table2 fig5\n\
+           repro all --results results/\n\
+           repro tune --kind sot --cap 10\n\
+           repro profile --l2 7\n\
+           repro runtime artifacts/mlp_infer.hlo.txt"
+    );
+}
+
+fn runner_cfg(args: &Args) -> RunnerConfig {
+    RunnerConfig {
+        results_dir: args.get("results").unwrap_or("results").into(),
+        print_tables: !args.flag("quiet"),
+    }
+}
+
+fn cmd_list() -> i32 {
+    let mut t = Table::new("Registered experiments", &["id", "regenerates"]);
+    for e in registry() {
+        t.row_str(&[e.id, e.title]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    if args.positional.is_empty() {
+        eprintln!("experiment: need at least one id (see `repro list`)");
+        return 2;
+    }
+    let cfg = runner_cfg(args);
+    for id in &args.positional {
+        if run_one(id, &cfg).is_none() {
+            eprintln!("unknown experiment id: {id}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_all(args: &Args) -> i32 {
+    let cfg = runner_cfg(args);
+    let reports = run_all(&cfg);
+    println!("== run summary ==");
+    for r in &reports {
+        println!("  [{}] {:.2}s — {}", r.id, r.seconds, r.title);
+    }
+    println!(
+        "results written to {}/ (manifest.txt has the paper-vs-measured headlines)",
+        cfg.results_dir.display()
+    );
+    0
+}
+
+fn kind_from(s: &str) -> Option<BitcellKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "sram" => Some(BitcellKind::Sram),
+        "stt" | "stt-mram" => Some(BitcellKind::SttMram),
+        "sot" | "sot-mram" => Some(BitcellKind::SotMram),
+        _ => None,
+    }
+}
+
+fn cmd_bitcells() -> i32 {
+    for kind in BitcellKind::ALL {
+        let rep = characterize_kind(kind);
+        let mut t = Table::new(
+            format!("{} fin-count sweep", kind.name()),
+            &["write fins", "read fins", "t_set (ps)", "t_reset (ps)", "E_set (pJ)", "sense (ps)", "rel area", "status"],
+        );
+        for p in &rep.sweep {
+            match &p.params {
+                Some(b) => t.row(&[
+                    p.write_fins.to_string(),
+                    p.read_fins.to_string(),
+                    fnum(to_ps(b.write_latency_set), 0),
+                    fnum(to_ps(b.write_latency_reset), 0),
+                    fnum(b.write_energy_set * 1e12, 3),
+                    fnum(to_ps(b.sense_latency), 0),
+                    fnum(b.area_rel_sram(), 3),
+                    (if b.write_fins == rep.chosen.write_fins { "CHOSEN" } else { "ok" }).into(),
+                ]),
+                None => t.row(&[
+                    p.write_fins.to_string(),
+                    p.read_fins.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "infeasible".into(),
+                ]),
+            };
+        }
+        println!("{}", t.render());
+    }
+    0
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    let kind = match args.get("kind").and_then(kind_from) {
+        Some(k) => k,
+        None => {
+            eprintln!("tune: --kind must be sram|stt|sot");
+            return 2;
+        }
+    };
+    let cap_mb: u64 = match args.get_parse("cap", 3u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let tuned = explore(kind, cap_mb * MB);
+    println!(
+        "{} {}MB EDAP-optimal design:\n  organization: {:?}\n  access type: {:?} (sizing target {})\n  RL {} ns  WL {} ns  RE {} nJ  WE {} nJ  leak {} mW  area {} mm2",
+        kind.name(),
+        cap_mb,
+        tuned.org,
+        tuned.access,
+        tuned.sizing,
+        fnum(to_ns(tuned.ppa.read_latency), 2),
+        fnum(to_ns(tuned.ppa.write_latency), 2),
+        fnum(to_nj(tuned.ppa.read_energy), 3),
+        fnum(to_nj(tuned.ppa.write_energy), 3),
+        fnum(to_mw(tuned.ppa.leakage_power), 0),
+        fnum(to_mm2(tuned.ppa.area), 2),
+    );
+    0
+}
+
+fn cmd_profile(args: &Args) -> i32 {
+    let l2_mb: u64 = match args.get_parse("l2", 3u64) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut t = Table::new(
+        format!("Workload memory statistics at {l2_mb}MB L2 (32B transactions)"),
+        &["workload", "L2 reads", "L2 writes", "R/W", "DRAM reads", "DRAM writes"],
+    );
+    for p in profile_suite(l2_mb * MB) {
+        t.row(&[
+            p.label.clone(),
+            p.stats.l2_reads.to_string(),
+            p.stats.l2_writes.to_string(),
+            fnum(p.stats.rw_ratio(), 2),
+            p.stats.dram_reads.to_string(),
+            p.stats.dram_writes.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_runtime(args: &Args) -> i32 {
+    let Some(path) = args.positional.first() else {
+        eprintln!("runtime: need an artifact path");
+        return 2;
+    };
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT init failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    match rt.load(path) {
+        Ok(_exe) => {
+            println!("compiled {path} OK");
+            let _ = TensorF32::zeros(vec![1]);
+            0
+        }
+        Err(e) => {
+            eprintln!("load failed: {e:#}");
+            1
+        }
+    }
+}

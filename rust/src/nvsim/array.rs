@@ -1,0 +1,260 @@
+//! Subarray-level PPA: the innermost tile of the NVSim decomposition.
+//!
+//! A subarray is `rows × cols` bitcells with a row decoder + wordline
+//! drivers on one edge and column mux + sense amps + write drivers on the
+//! other. Delay and energy combine the technology file's wire RC with the
+//! bitcell card from [`crate::device`]; the bitcell's sense quantities were
+//! characterized at a 512-row bitline, so they rescale linearly with the
+//! subarray's actual row count (bitline capacitance ∝ rows).
+
+use crate::device::bitcell::{BitcellKind, BitcellParams};
+use crate::device::characterize::cal as devcal;
+use crate::device::finfet::card;
+use super::tech;
+
+/// Rows at which the device layer characterized the sense path.
+pub const REFERENCE_ROWS: f64 = 512.0;
+
+/// Per-technology calibration card for the cache-level model — the
+/// constants NVSim reads from its (here: proprietary) tech+cell files.
+#[derive(Debug, Clone, Copy)]
+pub struct KindCal {
+    /// Cache-array cell area multiplier over the bitcell layout area.
+    /// SRAM L2 arrays use logic-rule performance cells (~2× the foundry
+    /// high-density cell the Table 1 normalization uses); MRAM arrays add
+    /// MTJ via landing overhead.
+    pub cell_area_mult: f64,
+    /// Cell aspect ratio (width/height) for wire-length geometry.
+    pub cell_aspect: f64,
+    /// Write-driver circuitry area per column, per ampere of write drive
+    /// (m²/A): MRAM columns need large current-mode drivers + charge pump
+    /// rails; SRAM needs only small full-swing drivers.
+    pub wd_area_per_amp: f64,
+    /// Leakage density of the write-driver circuitry (W/m²) — high-VT,
+    /// power-gated when idle, so much lower than the SA/decoder logic.
+    pub wd_leak_density: f64,
+    /// Hot-operation multiplier on cell leakage (L2 junction temperature
+    /// vs the room-temperature device characterization).
+    pub temp_leak_mult: f64,
+}
+
+impl KindCal {
+    /// Calibration for each technology (regressed against Table 2).
+    pub fn for_kind(kind: BitcellKind) -> KindCal {
+        match kind {
+            BitcellKind::Sram => KindCal {
+                cell_area_mult: 1.97,
+                cell_aspect: 2.0,
+                wd_area_per_amp: 1.0e-12 / 1.0e-3, // 1 µm² per mA
+                wd_leak_density: 1.0e6,
+                temp_leak_mult: 12.0,
+            },
+            BitcellKind::SttMram => KindCal {
+                cell_area_mult: 2.00,
+                cell_aspect: 1.3,
+                wd_area_per_amp: 200.0e-12 / 1.0e-3, // 200 µm² per mA
+                wd_leak_density: 1.80e6,
+                temp_leak_mult: 1.0,
+            },
+            BitcellKind::SotMram => KindCal {
+                cell_area_mult: 1.80,
+                cell_aspect: 1.3,
+                // SOT write drivers see the low-impedance rail: smaller
+                // devices than STT's junction drivers, but biased rails
+                // leak more per area.
+                wd_area_per_amp: 120.0e-12 / 1.0e-3,
+                wd_leak_density: 1.55e6,
+                temp_leak_mult: 1.0,
+            },
+        }
+    }
+}
+
+/// Redundancy + ECC + dummy row/column overhead on the cell array.
+pub const ARRAY_OVERHEAD: f64 = 1.20;
+
+/// Fixed per-subarray area (m²): decoder block, control, strap cells —
+/// independent of row count. Penalizes pathologically small subarrays.
+pub const SUBARRAY_FIXED_AREA: f64 = 250.0e-12; // 250 µm²
+
+/// Wordline driver drive current (A) at nominal sizing.
+pub const WL_DRIVER_ION: f64 = 500.0e-6;
+
+/// Fraction of a full sense-energy a non-selected (precharged-only)
+/// column burns per access.
+pub const PRECHARGE_FRACTION: f64 = 0.25;
+
+/// Floor on the MRAM bitline margin time (s) — see `subarray_ppa`.
+pub const MRAM_SENSE_FLOOR: f64 = 0.42e-9;
+
+/// Subarray PPA at a given geometry. All quantities are per-subarray,
+/// per-access unless stated.
+#[derive(Debug, Clone, Copy)]
+pub struct SubarrayPpa {
+    /// Row path delay: decoder + wordline (s).
+    pub t_row: f64,
+    /// Bitline sense delay (s), rescaled to this row count.
+    pub t_sense: f64,
+    /// Cell write time (s) — MTJ switching or SRAM cell flip + bitline drive.
+    pub t_write_cell: f64,
+    /// Energy to activate the row (decoder + wordline swing) (J).
+    pub e_row: f64,
+    /// Read energy for the selected bits (J) + precharge of unselected.
+    pub e_read: f64,
+    /// Write energy for the selected bits (J).
+    pub e_write: f64,
+    /// Static leakage (W).
+    pub leakage: f64,
+    /// Layout area (m²).
+    pub area: f64,
+}
+
+/// Compute subarray PPA for `bitcell` at `rows × cols` with column-mux
+/// degree `mux`.
+pub fn subarray_ppa(bitcell: &BitcellParams, rows: u64, cols: u64, mux: u64) -> SubarrayPpa {
+    let cal = KindCal::for_kind(bitcell.kind);
+    let (rows_f, cols_f) = (rows as f64, cols as f64);
+    let bits_accessed = (cols / mux) as f64;
+
+    // --- geometry ---
+    let cell_area = bitcell.area * cal.cell_area_mult;
+    let cell_w = (cell_area * cal.cell_aspect).sqrt();
+
+    // --- row path: decoder + wordline ---
+    let wl_len = cols_f * cell_w;
+    let r_wl = tech::WIRE_R_PER_M * wl_len;
+    let c_wl = tech::WIRE_C_PER_M * wl_len
+        + cols_f * card::CGATE_PER_FIN * bitcell.write_fins as f64;
+    let t_dec = tech::DEC_BASE + tech::DEC_PER_GATE * (rows_f.log2());
+    let t_wl = 0.38 * r_wl * c_wl + c_wl * card::VDD / WL_DRIVER_ION;
+    let t_row = t_dec + t_wl;
+    let e_row = tech::DEC_ENERGY_BASE + c_wl * card::VDD * card::VDD;
+
+    // --- bitline sense, rescaled from the 512-row characterization ---
+    // MRAM current sensing has a floor set by the CSA's offset-cancelled
+    // settling on the small TMR differential — shorter bitlines stop
+    // helping below it. SRAM's full-swing differential keeps scaling.
+    let row_scale = rows_f / REFERENCE_ROWS;
+    let t_margin = (bitcell.sense_latency - devcal::T_SA) * row_scale;
+    let t_margin = if bitcell.kind == BitcellKind::Sram {
+        t_margin
+    } else {
+        t_margin.max(MRAM_SENSE_FLOOR)
+    };
+    let t_sense = t_margin + devcal::T_SA;
+    let e_sense_bit = bitcell.sense_energy * row_scale;
+
+    // --- write path ---
+    // Bitline charging before the cell write proper (scales with rows).
+    let t_bl_write = 0.10e-9 * row_scale;
+    let t_write_cell = bitcell.write_latency() + t_bl_write;
+    let e_write_bit = bitcell.write_energy() * row_scale.max(0.5);
+
+    // --- per-access energy ---
+    let unselected = (cols - cols / mux) as f64;
+    let e_read = bits_accessed * e_sense_bit + unselected * PRECHARGE_FRACTION * e_sense_bit;
+    let e_write = bits_accessed * e_write_bit + unselected * PRECHARGE_FRACTION * e_sense_bit;
+
+    // --- area ---
+    let a_cells = rows_f * cols_f * cell_area * ARRAY_OVERHEAD;
+    let a_row_periph = rows_f * tech::ROW_PERIPH_AREA_PER_ROW;
+    let n_sa = (cols / mux) as f64;
+    let a_sa = n_sa * tech::SA_AREA;
+    // Write drivers: one per SA column, sized for the write current.
+    let i_write = match bitcell.kind {
+        BitcellKind::Sram => 0.4e-3,
+        // MTJ write loop current at the worst-power corner ~ 2× Ic.
+        BitcellKind::SttMram => 220.0e-6,
+        BitcellKind::SotMram => 215.0e-6,
+    };
+    let a_wd = n_sa * cal.wd_area_per_amp * i_write;
+    let area = a_cells + a_row_periph + a_sa + a_wd + SUBARRAY_FIXED_AREA;
+
+    // --- leakage ---
+    let cell_leak =
+        rows_f * cols_f * bitcell.cell_leakage * cal.temp_leak_mult;
+    let periph_leak = tech::PERIPH_LEAK_DENSITY * (a_row_periph + a_sa)
+        + cal.wd_leak_density * a_wd
+        + n_sa * tech::SA_LEAK;
+    let leakage = cell_leak + periph_leak;
+
+    SubarrayPpa {
+        t_row,
+        t_sense,
+        t_write_cell,
+        e_row,
+        e_read,
+        e_write,
+        leakage,
+        area,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::characterize;
+
+    fn cells() -> [BitcellParams; 3] {
+        characterize::characterize()
+    }
+
+    #[test]
+    fn sense_slows_with_more_rows() {
+        let [_, stt, _] = cells();
+        let small = subarray_ppa(&stt, 128, 512, 4);
+        let big = subarray_ppa(&stt, 1024, 512, 4);
+        assert!(big.t_sense > small.t_sense);
+        assert!(big.area > small.area * 3.0);
+    }
+
+    #[test]
+    fn stt_write_dominated_by_cell() {
+        let [_, stt, _] = cells();
+        let p = subarray_ppa(&stt, 512, 512, 4);
+        assert!(p.t_write_cell > 8.0e-9, "MTJ write dominates: {p:?}");
+        assert!(p.t_row < 1.0e-9);
+    }
+
+    #[test]
+    fn sram_leaks_mram_does_not_at_cell_level() {
+        let [sram, stt, sot] = cells();
+        let ps = subarray_ppa(&sram, 512, 512, 4);
+        let pt = subarray_ppa(&stt, 512, 512, 4);
+        let po = subarray_ppa(&sot, 512, 512, 4);
+        // SRAM subarray leakage must be dominated by cells and far exceed
+        // the MRAM (peripheral-only) leakage.
+        assert!(ps.leakage > 4.0 * pt.leakage, "sram {} stt {}", ps.leakage, pt.leakage);
+        assert!(pt.leakage > 0.0 && po.leakage > 0.0);
+    }
+
+    #[test]
+    fn mram_cells_pack_denser_per_subarray() {
+        let [sram, stt, _] = cells();
+        let ps = subarray_ppa(&sram, 512, 512, 4);
+        let pt = subarray_ppa(&stt, 512, 512, 4);
+        assert!(pt.area < ps.area);
+    }
+
+    #[test]
+    fn higher_mux_reads_fewer_bits_cheaper() {
+        let [_, _, sot] = cells();
+        let m1 = subarray_ppa(&sot, 512, 512, 1);
+        let m8 = subarray_ppa(&sot, 512, 512, 8);
+        assert!(m8.e_read < m1.e_read);
+        assert!(m8.leakage < m1.leakage, "fewer SAs leak less");
+    }
+
+    #[test]
+    fn energies_and_delays_are_positive_and_finite() {
+        for cell in cells() {
+            let p = subarray_ppa(&cell, 256, 1024, 2);
+            for v in [
+                p.t_row, p.t_sense, p.t_write_cell, p.e_row, p.e_read, p.e_write, p.leakage,
+                p.area,
+            ] {
+                assert!(v.is_finite() && v > 0.0, "{p:?}");
+            }
+        }
+    }
+}

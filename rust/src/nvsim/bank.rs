@@ -1,0 +1,125 @@
+//! Mat / bank assembly and the H-tree global interconnect.
+//!
+//! A mat is 2×2 subarrays around a central spine; a bank tiles its mats on
+//! an H-tree that carries address inward and a 128-byte line outward. The
+//! H-tree trunk is a repeated (buffered) wire, so its delay is linear in
+//! length; its length scales with the square root of the tiled area —
+//! this is the mechanism behind the paper's Fig 10(b): SRAM's larger
+//! cell makes every wire longer, so beyond ~4MB its latency loses to the
+//! denser MRAM arrays.
+
+use super::array::SubarrayPpa;
+use super::geometry::{Organization, SUBARRAYS_PER_MAT};
+use super::tech;
+
+/// Spine/strap overhead of a mat over its four subarrays.
+pub const MAT_SPINE_OVERHEAD: f64 = 1.03;
+
+/// Bank-level PPA for the data array of one organization.
+#[derive(Debug, Clone, Copy)]
+pub struct BankPpa {
+    /// Address-in + data-out H-tree delay, bank + global (s).
+    pub t_htree: f64,
+    /// H-tree energy per line transferred (J).
+    pub e_htree: f64,
+    /// One-bank area (m²).
+    pub bank_area: f64,
+    /// Whole-data-array area (m²), all banks + global wiring.
+    pub total_area: f64,
+    /// Whole-data-array leakage (W), all banks.
+    pub leakage: f64,
+}
+
+/// Assemble bank-level quantities from the subarray PPA and organization.
+pub fn bank_ppa(org: &Organization, sub: &SubarrayPpa, line_bits: f64) -> BankPpa {
+    let mat_area = sub.area * SUBARRAYS_PER_MAT as f64 * MAT_SPINE_OVERHEAD;
+    let bank_area_mats = mat_area * org.mats as f64;
+    let bank_area = bank_area_mats * (1.0 + tech::HTREE_AREA_OVERHEAD) + tech::BANK_CTRL_AREA;
+    let total_area = bank_area * org.banks as f64;
+
+    // H-tree length: to the farthest mat within the bank (~1.5·side) plus
+    // the global trunk across the bank tiling (~1.0·side of the whole).
+    let l_bank = 1.5 * bank_area.sqrt();
+    let l_global = if org.banks > 1 {
+        1.0 * total_area.sqrt()
+    } else {
+        0.25 * bank_area.sqrt()
+    };
+    let l_total = l_bank + l_global;
+    // Bank-internal routes are repeated; the top-level trunk crosses the
+    // whole die over the cells and can only be partially repeated, so a
+    // fraction of its delay grows as distributed RC (∝ length², i.e. ∝
+    // total area). This is what makes the physically larger SRAM array
+    // increasingly slow at 8–32MB (paper Fig 10b / Fig 12).
+    let trunk_rc = 0.38 * (tech::WIRE_R_PER_M * l_global) * (tech::WIRE_C_PER_M * l_global);
+    let t_htree =
+        tech::REPEATED_WIRE_DELAY_PER_M * l_total + tech::TRUNK_RC_FRACTION * trunk_rc;
+    // The full line (plus address, ~5%) toggles on the tree.
+    let e_htree = tech::REPEATED_WIRE_ENERGY_PER_M * l_total * line_bits * 1.05 * 0.5;
+
+    // Leakage: every subarray in every bank leaks all the time, plus the
+    // per-bank controller and the H-tree repeaters (∝ length·width).
+    let n_sub = (org.banks * org.mats * SUBARRAYS_PER_MAT) as f64;
+    let repeater_leak = 0.9e-3 * (l_total / 1.0e-3) * (line_bits / 1024.0);
+    let leakage =
+        n_sub * sub.leakage + org.banks as f64 * tech::BANK_CTRL_LEAK + repeater_leak;
+
+    BankPpa {
+        t_htree,
+        e_htree,
+        bank_area,
+        total_area,
+        leakage,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::characterize;
+    use crate::nvsim::array::subarray_ppa;
+    use crate::util::units::MB;
+
+    fn org_for(cap_mb: u64) -> Organization {
+        // Deterministic representative organization.
+        crate::nvsim::geometry::enumerate(cap_mb * MB)
+            .into_iter()
+            .find(|o| o.rows == 512 && o.cols == 512 && o.banks == 4)
+            .expect("representative organization exists")
+    }
+
+    #[test]
+    fn htree_delay_grows_with_capacity() {
+        let [sram, _, _] = characterize::characterize();
+        let o1 = org_for(1);
+        let o8 = org_for(8);
+        let s1 = subarray_ppa(&sram, o1.rows, o1.cols, o1.mux);
+        let s8 = subarray_ppa(&sram, o8.rows, o8.cols, o8.mux);
+        let b1 = bank_ppa(&o1, &s1, 1024.0);
+        let b8 = bank_ppa(&o8, &s8, 1024.0);
+        assert!(b8.t_htree > b1.t_htree);
+        assert!(b8.total_area > 6.0 * b1.total_area);
+    }
+
+    #[test]
+    fn sram_bank_has_longer_wires_than_stt() {
+        let [sram, stt, _] = characterize::characterize();
+        let o = org_for(4);
+        let ss = subarray_ppa(&sram, o.rows, o.cols, o.mux);
+        let st = subarray_ppa(&stt, o.rows, o.cols, o.mux);
+        let bs = bank_ppa(&o, &ss, 1024.0);
+        let bt = bank_ppa(&o, &st, 1024.0);
+        assert!(bs.t_htree > bt.t_htree, "denser cells → shorter tree");
+        assert!(bs.total_area > bt.total_area);
+    }
+
+    #[test]
+    fn leakage_sums_over_all_subarrays() {
+        let [sram, _, _] = characterize::characterize();
+        let o = org_for(2);
+        let s = subarray_ppa(&sram, o.rows, o.cols, o.mux);
+        let b = bank_ppa(&o, &s, 1024.0);
+        let n_sub = (o.banks * o.mats * SUBARRAYS_PER_MAT) as f64;
+        assert!(b.leakage > n_sub * s.leakage, "periph adds on top of cells");
+    }
+}

@@ -1,0 +1,345 @@
+//! Full-cache assembly: tag + data arrays and NVSim's access types.
+//!
+//! Latency model (read): row path → bitline precharge+sense → H-tree out,
+//! with the tag lookup either serialized (`Sequential`) or overlapped
+//! (`Normal` / `Fast`). Write latency reports the data-array write path
+//! (tag check and fill buffering are off the critical path, as in NVSim —
+//! hence SRAM's write latency being *below* its read latency in Table 2).
+//!
+//! STT-MRAM data arrays use differential (read-modify) writes: with write
+//! energies of ~1–2 pJ/bit, writing only the bits that actually flip is
+//! the standard design point; it puts a sense phase in front of the MTJ
+//! write (visible in Table 2's 9.3 ns STT write) and scales write energy
+//! by the toggle fraction.
+
+use crate::device::bitcell::{BitcellKind, BitcellParams};
+use super::array::{subarray_ppa, KindCal, SubarrayPpa};
+use super::bank::{bank_ppa, BankPpa};
+use super::geometry::Organization;
+use super::tech;
+
+/// Cache associativity used throughout (GTX 1080 Ti L2, Table 4).
+pub const ASSOC: u64 = 16;
+
+/// Comparator delay after tag sense (s).
+const T_COMPARE: f64 = 0.15e-9;
+
+/// Bitline precharge: driver-limited constant plus a rows-dependent RC
+/// term (at the 512-row reference).
+const T_PRECHARGE_BASE: f64 = 0.45e-9;
+const T_PRECHARGE_REF: f64 = 0.25e-9;
+
+/// Average fraction of bits that actually toggle on a differential write.
+pub const DIFF_WRITE_TOGGLE: f64 = 0.05;
+
+/// NVSim cache access types (the `A` set in Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessType {
+    /// Tag and data in parallel; data array reads all ways, late select.
+    Normal,
+    /// Like Normal with an upsized output path: lowest latency, extra
+    /// energy and area.
+    Fast,
+    /// Tag first, then only the matching way: lowest energy.
+    Sequential,
+}
+
+impl AccessType {
+    pub const ALL: [AccessType; 3] = [AccessType::Normal, AccessType::Fast, AccessType::Sequential];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccessType::Normal => "Normal",
+            AccessType::Fast => "Fast",
+            AccessType::Sequential => "Sequential",
+        }
+    }
+}
+
+/// Cache-level power/performance/area — the Table 2 row for one design.
+#[derive(Debug, Clone, Copy)]
+pub struct CachePpa {
+    /// Data capacity (bytes).
+    pub capacity: u64,
+    /// Read latency (s): address-in to line-out.
+    pub read_latency: f64,
+    /// Write latency (s): data-array write path.
+    pub write_latency: f64,
+    /// Read energy per line access (J).
+    pub read_energy: f64,
+    /// Write energy per line access (J).
+    pub write_energy: f64,
+    /// Total static leakage power (W).
+    pub leakage_power: f64,
+    /// Total area (m²), tag + data.
+    pub area: f64,
+}
+
+impl CachePpa {
+    /// Energy-delay-area product — Algorithm 1's objective (J·s·m²),
+    /// using the mean of read/write energy and latency.
+    pub fn edap(&self) -> f64 {
+        let e = 0.5 * (self.read_energy + self.write_energy);
+        let d = 0.5 * (self.read_latency + self.write_latency);
+        e * d * self.area
+    }
+
+    /// Read energy-delay product (J·s).
+    pub fn read_edp(&self) -> f64 {
+        self.read_energy * self.read_latency
+    }
+
+    /// Write energy-delay product (J·s).
+    pub fn write_edp(&self) -> f64 {
+        self.write_energy * self.write_latency
+    }
+}
+
+/// Tag-array quantities for a cache of `lines` lines.
+struct TagPpa {
+    /// Sizing-scalable part of the tag read path (row decode).
+    t_row: f64,
+    /// Device-limited part (precharge + sense + compare).
+    t_rest: f64,
+    e_read: f64,
+    e_write: f64,
+    leakage: f64,
+    area: f64,
+}
+
+/// Model the tag array as a small array in the same technology: one row
+/// per set, all ways' tags (+state) on the row, sensed in parallel.
+fn tag_ppa(bitcell: &BitcellParams, lines: u64) -> TagPpa {
+    let sets = (lines / ASSOC).max(1);
+    let tag_cols = ASSOC * tech::TAG_BITS_PER_LINE;
+    let rows_per_sub = sets.min(512).max(64);
+    let n_sub = sets.div_ceil(rows_per_sub);
+    let sub = subarray_ppa(bitcell, rows_per_sub, tag_cols, 1);
+    let t_pre_tag = if bitcell.kind == BitcellKind::Sram {
+        precharge(rows_per_sub)
+    } else {
+        0.0
+    };
+    TagPpa {
+        t_row: sub.t_row,
+        t_rest: t_pre_tag + sub.t_sense + T_COMPARE,
+        e_read: sub.e_row + sub.e_read,
+        // Tag update: one way's tag/state bits.
+        e_write: sub.e_row + sub.e_write / ASSOC as f64,
+        leakage: sub.leakage * n_sub as f64,
+        area: sub.area * n_sub as f64,
+    }
+}
+
+fn precharge(rows: u64) -> f64 {
+    T_PRECHARGE_BASE + T_PRECHARGE_REF * rows as f64 / super::array::REFERENCE_ROWS
+}
+
+/// Evaluate the full-cache PPA of `org` built from `bitcell`, accessed as
+/// `access`, with the peripheral sizing target `(d_mult, e_mult, a_mult)`
+/// applied to the peripheral (non-cell) contributions.
+pub fn cache_ppa(
+    bitcell: &BitcellParams,
+    org: &Organization,
+    access: AccessType,
+    sizing: (f64, f64, f64),
+) -> CachePpa {
+    let (d_mult, e_mult, a_mult) = sizing;
+    let cal = KindCal::for_kind(bitcell.kind);
+    let capacity = org.data_bits() / 8;
+    let lines = capacity / tech::LINE_BYTES;
+    let line_bits = (tech::LINE_BYTES * 8) as f64;
+
+    let sub: SubarrayPpa = subarray_ppa(bitcell, org.rows, org.cols, org.mux);
+    let bank: BankPpa = bank_ppa(org, &sub, line_bits);
+    let tag = tag_ppa(bitcell, lines);
+
+    let active_subarrays = (org.active_mats() * super::geometry::SUBARRAYS_PER_MAT) as f64;
+
+    // --- data-array read path ---
+    // SRAM precharges its bitlines to VDD before every access; the MRAM
+    // flavors current-sense and skip the rail precharge.
+    let t_pre = if bitcell.kind == BitcellKind::Sram {
+        precharge(org.rows)
+    } else {
+        0.0
+    };
+    let mux_levels = (org.mux as f64).log2().max(1.0);
+    let t_mux = tech::MUX_PER_LEVEL * mux_levels;
+    // SOT's dedicated 1-fin read port delivers a tiny differential
+    // current; the cache-level CSA double-samples (offset cancellation),
+    // and its shared write rail needs a bipolar bias settle before the
+    // cell write — both fixed adders at the cache level.
+    let (t_read_extra, t_write_extra) = match bitcell.kind {
+        BitcellKind::SotMram => (1.15e-9, 0.45e-9),
+        _ => (0.0, 0.0),
+    };
+    // Sizing scales the row decode + mux drive; precharge, sensing and
+    // the H-tree are device/wire-limited.
+    let t_data_read =
+        (sub.t_row + t_mux) * d_mult + t_pre + sub.t_sense + t_read_extra + bank.t_htree;
+
+    // Per-bit sense energy at this row count, plus the current-sense
+    // amplifier / reference-path overhead for the MRAM flavors.
+    let e_data_read_way = (active_subarrays * (sub.e_row + sub.e_read)
+        + line_bits * csa_overhead(bitcell.kind))
+        * e_mult
+        + bank.e_htree;
+
+    // --- data-array write path ---
+    // The MTJ switching time is device-limited — peripheral sizing scales
+    // only the row path. SRAM pays a bitline precharge-restore after the
+    // full-swing write. STT's differential-write read phase is pipelined
+    // with the row decode of the following access (energy counted below).
+    let diff_write = bitcell.kind == BitcellKind::SttMram;
+    let t_data_write =
+        sub.t_row * d_mult + t_pre + t_write_extra + sub.t_write_cell + bank.t_htree;
+    let toggle = if diff_write { DIFF_WRITE_TOGGLE } else { 1.0 };
+    let e_rmw = if diff_write {
+        // Sector-masked verify read before the differential write.
+        0.5 * active_subarrays * sub.e_read
+    } else {
+        0.0
+    };
+    let e_data_write = (active_subarrays * sub.e_row
+        + toggle * active_subarrays * sub.e_write
+        + e_rmw)
+        * e_mult
+        + bank.e_htree;
+
+    // --- compose with the tag path per access type ---
+    let t_tag = tag.t_row * d_mult + tag.t_rest;
+    let (read_latency, read_energy) = match access {
+        AccessType::Sequential => (
+            t_tag + t_data_read,
+            tag.e_read * e_mult + e_data_read_way,
+        ),
+        AccessType::Normal => (
+            t_tag.max(t_data_read) + tech::MUX_PER_LEVEL * 4.0,
+            tag.e_read * e_mult + ASSOC as f64 * e_data_read_way,
+        ),
+        AccessType::Fast => (
+            t_tag.max(t_data_read),
+            (tag.e_read * e_mult + ASSOC as f64 * e_data_read_way) * 1.15,
+        ),
+    };
+    // Writes: tag check is buffered off the critical path (NVSim).
+    let write_latency = t_data_write;
+    let write_energy = tag.e_write * e_mult + e_data_write;
+
+    // --- totals ---
+    let periph_area_scale = a_mult;
+    let area = (bank.total_area + tag.area) * periph_area_scale
+        * if access == AccessType::Fast { 1.05 } else { 1.0 };
+    // Thermal feedback: leakage heats the die, which leaks more.
+    let leak_iso = bank.leakage + tag.leakage;
+    let leakage_power = leak_iso
+        * (1.0 + (tech::THERMAL_FEEDBACK_PER_W * leak_iso).min(tech::THERMAL_FEEDBACK_CAP));
+
+    CachePpa {
+        capacity,
+        read_latency,
+        write_latency,
+        read_energy,
+        write_energy,
+        leakage_power,
+        area,
+    }
+    .scaled_leak(cal, access)
+}
+
+impl CachePpa {
+    /// Fast access type keeps duplicated output paths powered.
+    fn scaled_leak(mut self, _cal: KindCal, access: AccessType) -> Self {
+        if access == AccessType::Fast {
+            self.leakage_power *= 1.08;
+        }
+        self
+    }
+}
+
+/// Current-sense-amplifier + reference-path energy per sensed bit (J),
+/// on top of the bitcell-level sense energy. Calibrated against Table 2
+/// (MRAM sensing needs reference generation and bias current that dwarf
+/// the junction's own sense energy; STT's higher read current costs more).
+fn csa_overhead(kind: BitcellKind) -> f64 {
+    match kind {
+        BitcellKind::Sram => 0.0,
+        BitcellKind::SttMram => 0.50e-12,
+        BitcellKind::SotMram => 0.30e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::characterize::characterize;
+    use crate::nvsim::geometry::enumerate;
+    use crate::util::units::MB;
+
+    fn some_org(cap: u64) -> Organization {
+        enumerate(cap)
+            .into_iter()
+            .find(|o| o.rows == 512 && o.cols == 512)
+            .unwrap()
+    }
+
+    #[test]
+    fn sequential_is_cheapest_slowest_read() {
+        let [sram, _, _] = characterize();
+        let org = some_org(3 * MB);
+        let nominal = (1.0, 1.0, 1.0);
+        let seq = cache_ppa(&sram, &org, AccessType::Sequential, nominal);
+        let nor = cache_ppa(&sram, &org, AccessType::Normal, nominal);
+        let fast = cache_ppa(&sram, &org, AccessType::Fast, nominal);
+        assert!(seq.read_energy < nor.read_energy);
+        assert!(nor.read_energy < fast.read_energy);
+        assert!(seq.read_latency > fast.read_latency);
+    }
+
+    #[test]
+    fn stt_write_latency_is_mtj_dominated() {
+        let [sram, stt, _] = characterize();
+        let org = some_org(3 * MB);
+        let nominal = (1.0, 1.0, 1.0);
+        let s = cache_ppa(&sram, &org, AccessType::Sequential, nominal);
+        let t = cache_ppa(&stt, &org, AccessType::Sequential, nominal);
+        assert!(t.write_latency > 8.0e-9);
+        assert!(s.write_latency < 3.0e-9);
+    }
+
+    #[test]
+    fn mram_caches_are_smaller_and_leak_less() {
+        // Compare the EDAP-tuned designs (an arbitrary shared organization
+        // can be pathological for one technology, e.g. mux=1 write-driver
+        // walls for MRAM).
+        use crate::device::bitcell::BitcellKind;
+        use crate::nvsim::optimizer::tuned_cache;
+        let s = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
+        let t = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
+        let o = tuned_cache(BitcellKind::SotMram, 3 * MB).ppa;
+        assert!(t.area < s.area && o.area < s.area);
+        assert!(t.leakage_power < s.leakage_power / 3.0);
+        assert!(o.leakage_power < t.leakage_power);
+    }
+
+    #[test]
+    fn sizing_targets_trade_delay_for_energy() {
+        let [sram, _, _] = characterize();
+        let org = some_org(3 * MB);
+        let lat_opt = cache_ppa(&sram, &org, AccessType::Sequential, tech::SIZING_TARGETS[4]);
+        let en_opt = cache_ppa(&sram, &org, AccessType::Sequential, tech::SIZING_TARGETS[0]);
+        assert!(lat_opt.read_latency < en_opt.read_latency);
+        assert!(lat_opt.read_energy > en_opt.read_energy);
+    }
+
+    #[test]
+    fn edap_is_positive_and_composable() {
+        let [_, _, sot] = characterize();
+        let org = some_org(3 * MB);
+        let p = cache_ppa(&sot, &org, AccessType::Sequential, (1.0, 1.0, 1.0));
+        assert!(p.edap() > 0.0);
+        assert!(p.read_edp() > 0.0 && p.write_edp() > 0.0);
+        assert_eq!(p.capacity, 3 * MB);
+    }
+}

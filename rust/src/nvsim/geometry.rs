@@ -1,0 +1,165 @@
+//! Cache organization enumeration: the design space Algorithm 1 walks.
+//!
+//! A cache is decomposed NVSim-style: `banks × mats × 4 subarrays/mat ×
+//! (rows × cols)` bitcells. A line access activates one bank; within it,
+//! enough mats (4 subarrays each, column-muxed) to deliver one 128-byte
+//! line in parallel.
+
+use super::tech::LINE_BYTES;
+
+/// Subarrays per mat (fixed 2×2, as in NVSim's default mat).
+pub const SUBARRAYS_PER_MAT: u64 = 4;
+
+/// One cache organization candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Organization {
+    /// Independent banks (each with its own decoder + H-tree leaf).
+    pub banks: u64,
+    /// Mats per bank.
+    pub mats: u64,
+    /// Bitcell rows per subarray.
+    pub rows: u64,
+    /// Bitcell columns per subarray.
+    pub cols: u64,
+    /// Column-mux degree: columns sharing one sense amplifier.
+    pub mux: u64,
+}
+
+impl Organization {
+    /// Total data bits the organization stores.
+    pub fn data_bits(&self) -> u64 {
+        self.banks * self.mats * SUBARRAYS_PER_MAT * self.rows * self.cols
+    }
+
+    /// Bits one subarray delivers per access (after column mux).
+    pub fn bits_per_subarray_access(&self) -> u64 {
+        self.cols / self.mux
+    }
+
+    /// Mats that must activate in parallel to deliver one line.
+    pub fn active_mats(&self) -> u64 {
+        let line_bits = LINE_BYTES * 8;
+        let per_mat = SUBARRAYS_PER_MAT * self.bits_per_subarray_access();
+        line_bits.div_ceil(per_mat)
+    }
+
+    /// Whether the organization can deliver a full line cleanly: the line
+    /// must be an exact multiple of the per-mat width and fit within the
+    /// bank's mats.
+    pub fn valid_for_line(&self) -> bool {
+        let line_bits = LINE_BYTES * 8;
+        let per_mat = SUBARRAYS_PER_MAT * self.bits_per_subarray_access();
+        per_mat <= line_bits && line_bits % per_mat == 0 && self.active_mats() <= self.mats
+    }
+
+    /// Sense amplifiers in the whole cache (one per muxed column group,
+    /// per subarray).
+    pub fn total_sense_amps(&self) -> u64 {
+        self.banks * self.mats * SUBARRAYS_PER_MAT * (self.cols / self.mux)
+    }
+}
+
+/// Enumerate every organization holding exactly `capacity_bytes` of data
+/// that can deliver a 128-byte line. The grid mirrors NVSim's search:
+/// power-of-two banks, subarray rows/cols, and mux degrees.
+pub fn enumerate(capacity_bytes: u64) -> Vec<Organization> {
+    let cap_bits = capacity_bytes * 8;
+    let mut out = Vec::new();
+    for banks in [1u64, 2, 4, 8, 16, 32] {
+        for rows in [64u64, 128, 256, 512, 1024] {
+            for cols in [128u64, 256, 512, 1024, 2048] {
+                let per_bank_sub = rows * cols * SUBARRAYS_PER_MAT;
+                let bank_bits = cap_bits / banks;
+                if bank_bits == 0 || cap_bits % banks != 0 || bank_bits % per_bank_sub != 0 {
+                    continue;
+                }
+                let mats = bank_bits / per_bank_sub;
+                if mats == 0 || mats > 512 {
+                    continue;
+                }
+                for mux in [1u64, 2, 4, 8, 16] {
+                    if cols % mux != 0 {
+                        continue;
+                    }
+                    let org = Organization {
+                        banks,
+                        mats,
+                        rows,
+                        cols,
+                        mux,
+                    };
+                    if org.valid_for_line() {
+                        debug_assert_eq!(org.data_bits(), cap_bits);
+                        out.push(org);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    #[test]
+    fn enumeration_conserves_capacity() {
+        for org in enumerate(3 * MB) {
+            assert_eq!(org.data_bits(), 3 * MB * 8, "{org:?}");
+        }
+    }
+
+    #[test]
+    fn enumeration_is_nonempty_for_paper_capacities() {
+        for cap_mb in [1u64, 2, 3, 4, 7, 8, 10, 16, 24, 32] {
+            assert!(
+                !enumerate(cap_mb * MB).is_empty(),
+                "no organizations for {cap_mb}MB"
+            );
+        }
+    }
+
+    #[test]
+    fn every_enumerated_org_delivers_a_line() {
+        for org in enumerate(2 * MB) {
+            assert!(org.valid_for_line());
+            let line_bits = LINE_BYTES * 8;
+            let per_mat = SUBARRAYS_PER_MAT * org.bits_per_subarray_access();
+            assert_eq!(org.active_mats() * per_mat, line_bits, "{org:?}");
+        }
+    }
+
+    #[test]
+    fn active_mats_shrinks_with_wider_subarrays() {
+        let narrow = Organization {
+            banks: 1,
+            mats: 64,
+            rows: 256,
+            cols: 256,
+            mux: 4,
+        };
+        let wide = Organization {
+            banks: 1,
+            mats: 64,
+            rows: 256,
+            cols: 1024,
+            mux: 4,
+        };
+        assert!(wide.active_mats() < narrow.active_mats());
+    }
+
+    #[test]
+    fn sense_amp_count_scales_inverse_with_mux() {
+        let base = Organization {
+            banks: 2,
+            mats: 8,
+            rows: 256,
+            cols: 512,
+            mux: 1,
+        };
+        let muxed = Organization { mux: 4, ..base };
+        assert_eq!(base.total_sense_amps(), 4 * muxed.total_sense_amps());
+    }
+}

@@ -1,0 +1,33 @@
+//! Microarchitecture-level cache design exploration (paper §3.2 → Table 2,
+//! Fig 10) — an NVSim-class analytical PPA model, re-implemented.
+//!
+//! NVSim [Dong TCAD'12] estimates cache latency, energy and area from a
+//! bitcell card plus a technology file by decomposing the cache into banks
+//! → mats → subarrays and modeling each level analytically (logical-effort
+//! decoders, distributed-RC word/bitlines, H-tree global routing, sense
+//! amps, leakage). This module rebuilds that model family on top of the
+//! bitcell parameters produced by [`crate::device`]:
+//!
+//! * [`tech`] — the 16nm technology file: wire RC, peripheral sizing,
+//!   leakage densities.
+//! * [`geometry`] — cache organization enumeration: banks × mats ×
+//!   subarrays (rows × cols), column-mux degrees; capacity bookkeeping.
+//! * [`array`] — subarray-level PPA: decoder, wordline, bitline sense,
+//!   write drive, per-access energy, leakage, area.
+//! * [`bank`] — mat assembly and the H-tree global interconnect.
+//! * [`cache`] — full-cache assembly: tag + data arrays and the three
+//!   access types (Normal / Fast / Sequential) of NVSim.
+//! * [`optimizer`] — the paper's Algorithm 1: exhaustive EDAP-optimal
+//!   tuning over organizations, access types and peripheral-sizing
+//!   targets, independently per technology and capacity.
+
+pub mod array;
+pub mod bank;
+pub mod cache;
+pub mod geometry;
+pub mod optimizer;
+pub mod tech;
+
+pub use cache::{AccessType, CachePpa};
+pub use geometry::Organization;
+pub use optimizer::{explore, tuned_cache, TunedCache};

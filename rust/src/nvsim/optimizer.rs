@@ -1,0 +1,184 @@
+//! Algorithm 1: EDAP-optimal cache tuning.
+//!
+//! Exhaustively walks the organization grid × access types × peripheral
+//! sizing targets for one memory technology and capacity, evaluates the
+//! cache PPA of every point, and keeps the EDAP minimum — "we
+//! independently choose the best configuration for each type of memory
+//! technology in terms of EDAP metric to perform a fair comparison".
+//!
+//! Results are memoized process-wide: the scalability figures re-tune the
+//! same (technology, capacity) pairs dozens of times.
+
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::device::bitcell::{BitcellKind, BitcellParams};
+use crate::device::characterize::characterize;
+use crate::util::pool::par_map;
+use super::cache::{cache_ppa, AccessType, CachePpa};
+use super::geometry::{enumerate, Organization};
+use super::tech::SIZING_TARGETS;
+
+/// An EDAP-tuned cache design: the winning point of the Algorithm 1 walk.
+#[derive(Debug, Clone, Copy)]
+pub struct TunedCache {
+    pub kind: BitcellKind,
+    pub org: Organization,
+    pub access: AccessType,
+    /// Index into [`SIZING_TARGETS`].
+    pub sizing: usize,
+    pub ppa: CachePpa,
+}
+
+/// Evaluate every design point for `kind` at `capacity_bytes` and return
+/// the EDAP-optimal one. Panics if the capacity admits no organization
+/// (use power-of-two-divisible capacities).
+pub fn explore(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
+    let bitcell = bitcell_for(kind);
+    let orgs = enumerate(capacity_bytes);
+    assert!(
+        !orgs.is_empty(),
+        "no cache organization for {capacity_bytes} bytes"
+    );
+    // One task per organization; each walks access types × sizing targets.
+    let best_per_org: Vec<TunedCache> = par_map(&orgs, |org| {
+        let mut best: Option<TunedCache> = None;
+        for access in AccessType::ALL {
+            for (si, &sizing) in SIZING_TARGETS.iter().enumerate() {
+                let ppa = cache_ppa(&bitcell, org, access, sizing);
+                let cand = TunedCache {
+                    kind,
+                    org: *org,
+                    access,
+                    sizing: si,
+                    ppa,
+                };
+                if best
+                    .as_ref()
+                    .map(|b| cand.ppa.edap() < b.ppa.edap())
+                    .unwrap_or(true)
+                {
+                    best = Some(cand);
+                }
+            }
+        }
+        best.expect("at least one design point per organization")
+    });
+    best_per_org
+        .into_iter()
+        .min_by(|a, b| a.ppa.edap().partial_cmp(&b.ppa.edap()).unwrap())
+        .unwrap()
+}
+
+/// The characterized bitcell for a technology (memoized — the transient
+/// simulations behind it take milliseconds, and every tuning run needs it).
+pub fn bitcell_for(kind: BitcellKind) -> BitcellParams {
+    static CELLS: Lazy<[BitcellParams; 3]> = Lazy::new(characterize);
+    match kind {
+        BitcellKind::Sram => CELLS[0].clone(),
+        BitcellKind::SttMram => CELLS[1].clone(),
+        BitcellKind::SotMram => CELLS[2].clone(),
+    }
+}
+
+/// Memoized [`explore`]: the cross-layer analyses query the same tuned
+/// caches repeatedly.
+pub fn tuned_cache(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
+    static CACHE: Lazy<Mutex<HashMap<(BitcellKind, u64), TunedCache>>> =
+        Lazy::new(|| Mutex::new(HashMap::new()));
+    if let Some(hit) = CACHE.lock().unwrap().get(&(kind, capacity_bytes)) {
+        return *hit;
+    }
+    let tuned = explore(kind, capacity_bytes);
+    CACHE.lock().unwrap().insert((kind, capacity_bytes), tuned);
+    tuned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{MB, MM2, NJ, NS};
+
+    fn within(x: f64, target: f64, tol: f64) -> bool {
+        (x - target).abs() <= tol * target
+    }
+
+    /// The headline regression: the tuned 3MB caches match Table 2's
+    /// iso-capacity columns, and the iso-area capacities match 7MB / 10MB.
+    #[test]
+    fn table2_regression_iso_capacity() {
+        let sram = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
+        let stt = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
+        let sot = tuned_cache(BitcellKind::SotMram, 3 * MB).ppa;
+
+        // SRAM baseline column.
+        assert!(within(sram.read_latency, 2.91 * NS, 0.15), "sram RL {}", sram.read_latency / NS);
+        assert!(within(sram.write_latency, 1.53 * NS, 0.20), "sram WL {}", sram.write_latency / NS);
+        assert!(within(sram.read_energy, 0.35 * NJ, 0.20), "sram RE {}", sram.read_energy / NJ);
+        assert!(within(sram.write_energy, 0.32 * NJ, 0.25), "sram WE {}", sram.write_energy / NJ);
+        assert!(within(sram.leakage_power, 6.442, 0.20), "sram leak {}", sram.leakage_power);
+        assert!(within(sram.area, 5.53 * MM2, 0.15), "sram area {}", sram.area / MM2);
+
+        // STT-MRAM iso-capacity column.
+        assert!(within(stt.read_latency, 2.98 * NS, 0.20), "stt RL {}", stt.read_latency / NS);
+        assert!(within(stt.write_latency, 9.31 * NS, 0.15), "stt WL {}", stt.write_latency / NS);
+        assert!(within(stt.read_energy, 0.81 * NJ, 0.20), "stt RE {}", stt.read_energy / NJ);
+        assert!(within(stt.write_energy, 0.31 * NJ, 0.30), "stt WE {}", stt.write_energy / NJ);
+        assert!(within(stt.leakage_power, 0.748, 0.25), "stt leak {}", stt.leakage_power);
+        assert!(within(stt.area, 2.34 * MM2, 0.15), "stt area {}", stt.area / MM2);
+
+        // SOT-MRAM iso-capacity column.
+        assert!(within(sot.read_latency, 3.71 * NS, 0.25), "sot RL {}", sot.read_latency / NS);
+        assert!(within(sot.write_latency, 1.38 * NS, 0.30), "sot WL {}", sot.write_latency / NS);
+        assert!(within(sot.read_energy, 0.49 * NJ, 0.20), "sot RE {}", sot.read_energy / NJ);
+        assert!(within(sot.write_energy, 0.22 * NJ, 0.30), "sot WE {}", sot.write_energy / NJ);
+        assert!(within(sot.leakage_power, 0.527, 0.25), "sot leak {}", sot.leakage_power);
+        assert!(within(sot.area, 1.95 * MM2, 0.15), "sot area {}", sot.area / MM2);
+    }
+
+    /// Iso-area: the MRAM capacity that fits the SRAM 3MB footprint.
+    #[test]
+    fn table2_regression_iso_area() {
+        let sram_area = tuned_cache(BitcellKind::Sram, 3 * MB).ppa.area;
+        // The paper itself rounds generously: its SOT 10MB (5.64mm²) sits
+        // 2% above the SRAM baseline (5.53mm²). Allow the same 3.5% slack.
+        let fit = |kind: BitcellKind| -> u64 {
+            let mut best = 1;
+            for cap_mb in 1..=16u64 {
+                if tuned_cache(kind, cap_mb * MB).ppa.area <= 1.035 * sram_area {
+                    best = cap_mb;
+                }
+            }
+            best
+        };
+        assert_eq!(fit(BitcellKind::SttMram), 7, "paper: STT 7MB iso-area");
+        assert_eq!(fit(BitcellKind::SotMram), 10, "paper: SOT 10MB iso-area");
+    }
+
+    #[test]
+    fn tuning_is_deterministic_and_memoized() {
+        let a = tuned_cache(BitcellKind::Sram, 2 * MB);
+        let b = tuned_cache(BitcellKind::Sram, 2 * MB);
+        assert_eq!(a.org, b.org);
+        assert_eq!(a.sizing, b.sizing);
+        assert!((a.ppa.edap() - b.ppa.edap()).abs() < 1e-60);
+    }
+
+    #[test]
+    fn chosen_design_beats_random_points() {
+        // The winner's EDAP must be <= every point on a sampled sub-grid.
+        let kind = BitcellKind::SotMram;
+        let best = explore(kind, 2 * MB);
+        let bitcell = bitcell_for(kind);
+        for org in enumerate(2 * MB).into_iter().step_by(7) {
+            for access in AccessType::ALL {
+                let ppa = crate::nvsim::cache::cache_ppa(&bitcell, &org, access, (1.0, 1.0, 1.0));
+                assert!(
+                    best.ppa.edap() <= ppa.edap() * (1.0 + 1e-12),
+                    "explore missed a better point: {org:?} {access:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! The executor: PJRT CPU client + compiled-artifact cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A host-side fp32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    /// Build a tensor; panics if `data.len()` disagrees with `dims`.
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorF32 {
+        let numel: i64 = dims.iter().product();
+        assert_eq!(
+            numel as usize,
+            data.len(),
+            "tensor shape {:?} != data length {}",
+            dims,
+            data.len()
+        );
+        TensorF32 { dims, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dims: Vec<i64>) -> TensorF32 {
+        let numel: i64 = dims.iter().product();
+        TensorF32 {
+            data: vec![0.0; numel as usize],
+            dims,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// A compiled executable (one AOT artifact).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of outputs in the result tuple (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub arity_hint: Option<usize>,
+}
+
+impl Executable {
+    /// Execute with fp32 inputs; returns the flattened tuple of outputs.
+    pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                xla::Literal::vec1(&t.data)
+                    .reshape(&t.dims)
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True: unpack.
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.shape()?;
+                let dims = match &shape {
+                    xla::Shape::Array(a) => a.dims().to_vec(),
+                    _ => vec![lit.element_count() as i64],
+                };
+                let data = lit.to_vec::<f32>()?;
+                Ok(TensorF32 { dims, data })
+            })
+            .collect()
+    }
+}
+
+/// The PJRT runtime: a CPU client plus a compiled-executable cache keyed
+/// by artifact path (compilation is the expensive step; the coordinator
+/// re-runs the same artifacts across steps).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, usize>>,
+    compiled: Mutex<Vec<std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            compiled: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact, memoized by path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(&idx) = self.cache.lock().unwrap().get(&path) {
+            return Ok(self.compiled.lock().unwrap()[idx].clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path must be utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let executable = std::sync::Arc::new(Executable {
+            exe,
+            arity_hint: None,
+        });
+        let mut compiled = self.compiled.lock().unwrap();
+        compiled.push(executable.clone());
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path, compiled.len() - 1);
+        Ok(executable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_bookkeeping() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        let z = TensorF32::zeros(vec![4, 4]);
+        assert_eq!(z.numel(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor shape")]
+    fn tensor_shape_mismatch_panics() {
+        let _ = TensorF32::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_hlo.rs (they need the
+    // artifacts built by `make artifacts`).
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from rust — Python never runs on this path.
+//!
+//! Interchange format is **HLO text** (`artifacts/*.hlo.txt`), produced by
+//! `python/compile/aot.py`: jax ≥0.5 emits serialized `HloModuleProto`s
+//! with 64-bit instruction ids that the crate's xla_extension (0.5.1)
+//! rejects; the text parser reassigns ids and round-trips cleanly.
+
+pub mod executor;
+
+pub use executor::{Executable, Runtime, TensorF32};

@@ -1,0 +1,95 @@
+//! Tiny property-testing harness (offline registry has no `proptest`).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it retries the *same* generator stream to find and
+//! report the first failing case with its case index so failures reproduce
+//! exactly from the seed printed in the panic message.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics with the case
+/// index, seed and a debug rendering of the failing input on first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): input = {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so it can
+/// explain *why* it failed.
+pub fn forall_explain<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\ninput = {input:#?}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are within a relative tolerance (absolute fallback
+/// near zero). Used throughout model-vs-model consistency tests.
+pub fn assert_close(a: f64, b: f64, rel: f64, what: &str) {
+    let scale = a.abs().max(b.abs()).max(1e-30);
+    let err = (a - b).abs() / scale;
+    assert!(
+        err <= rel || (a - b).abs() < 1e-18,
+        "{what}: {a} vs {b} (rel err {err:.3e} > {rel:.1e})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        forall(1, 200, |r| r.gen_range(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_panics_with_case() {
+        forall(2, 200, |r| r.gen_range(100), |&x| x < 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "because reasons")]
+    fn explain_variant_carries_message() {
+        forall_explain(
+            3,
+            10,
+            |r| r.gen_range(10),
+            |_| Err("because reasons".to_string()),
+        );
+    }
+
+    #[test]
+    fn assert_close_tolerates_small_error() {
+        assert_close(1.0, 1.0 + 1e-9, 1e-6, "near");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_large_error() {
+        assert_close(1.0, 1.1, 1e-6, "far");
+    }
+}

@@ -1,0 +1,120 @@
+//! Minimal CLI argument parser (offline registry has no `clap`).
+//!
+//! Supports `subcommand [positional...] [--flag] [--key value|--key=value]`,
+//! which covers the `repro` binary's surface.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining non-flag tokens in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Get an option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// True if a bare flag (or `--key true`) is present.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse an option as `T`, falling back to `default` when absent.
+    /// Returns an error string when present-but-unparsable (caller decides
+    /// whether to abort — experiments abort, the REPL reports).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("invalid value for --{key}: {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["experiment", "fig5", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig5", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["run", "--batch", "64", "--out=/tmp/x.csv"]);
+        assert_eq!(a.get("batch"), Some("64"));
+        assert_eq!(a.get("out"), Some("/tmp/x.csv"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["run", "--verbose", "--csv"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("csv"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_bare() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn get_parse_defaults_and_errors() {
+        let a = parse(&["x", "--n", "12"]);
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 12);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+        let bad = parse(&["x", "--n", "twelve"]);
+        assert!(bad.get_parse("n", 0usize).is_err());
+    }
+}

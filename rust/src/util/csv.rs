@@ -1,0 +1,126 @@
+//! Minimal CSV writer (no external deps). Every experiment emits its series
+//! as CSV next to the terminal rendering so downstream plotting can consume
+//! the exact numbers.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// An in-memory CSV document.
+#[derive(Debug, Clone, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    /// Create with a header row.
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics on arity mismatch.
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "csv arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row of mixed displayable values.
+    pub fn rowd(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if there are no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// RFC-4180-ish escaping: quote cells containing comma/quote/newline.
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    /// Serialize to a CSV string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|c| Self::escape(c))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter()
+                    .map(|c| Self::escape(c))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories as needed.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.rowd(&[&1, &2.5]).rowd(&[&"x", &"y"]);
+        assert_eq!(c.to_string(), "a,b\n1,2.5\nx,y\n");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn escapes_special_cells() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&["he,llo".to_string()]);
+        c.row(&["say \"hi\"".to_string()]);
+        let s = c.to_string();
+        assert!(s.contains("\"he,llo\""));
+        assert!(s.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn writes_file_with_parents() {
+        let dir = std::env::temp_dir().join("deepnvm_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/out.csv");
+        let mut c = Csv::new(&["k", "v"]);
+        c.rowd(&[&"cap", &3]);
+        c.write(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(read, "k,v\ncap,3\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,20 @@
+//! Shared utilities: SI units, deterministic PRNG, statistics, table/CSV
+//! rendering, a minimal CLI parser, a scoped thread-pool map, and a small
+//! property-testing harness.
+//!
+//! Everything here is dependency-free by design: the offline registry
+//! snapshot only carries the `xla` crate's closure, so the crate hand-rolls
+//! what `rand`/`rayon`/`clap`/`serde`/`proptest` would normally provide.
+
+pub mod check;
+pub mod cli;
+pub mod csv;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use rng::Rng;
+pub use stats::{geomean, mean, stddev};
+pub use table::Table;

@@ -1,0 +1,104 @@
+//! Scoped thread-pool `map` for embarrassingly-parallel sweeps.
+//!
+//! The coordinator fans experiment sweeps (capacity × technology ×
+//! workload) across cores. With no `rayon` in the offline registry, this
+//! module provides the one primitive the sweeps need: an order-preserving
+//! parallel map over an indexed work list, built on `std::thread::scope`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: respects `DEEPNVM_THREADS`, defaults to
+/// available parallelism, and is always at least 1.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("DEEPNVM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Parallel, order-preserving map: applies `f` to each item of `items`
+/// using up to [`num_threads`] workers. `f` must be `Sync` (shared by
+/// reference) and items are taken by reference.
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    par_map_indexed(items, |_, item| f(item))
+}
+
+/// Like [`par_map`] but the closure also receives the item index.
+pub fn par_map_indexed<T: Sync, R: Send>(
+    items: &[T],
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<u32> = (0..257).collect();
+        let _ = par_map(&items, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 257);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u8> = par_map(&Vec::<u8>::new(), |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn indexed_variant_sees_indices() {
+        let items = vec!["a", "b", "c"];
+        let out = par_map_indexed(&items, |i, s| format!("{i}{s}"));
+        assert_eq!(out, vec!["0a", "1b", "2c"]);
+    }
+
+    #[test]
+    fn thread_env_override_is_respected() {
+        // num_threads() >= 1 always; with env set it parses.
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! ASCII table renderer used by every experiment to print paper-style
+//! tables and figure series to the terminal.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple in-memory table with a title, a header row and data rows.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    aligns: Vec<Align>,
+}
+
+impl Table {
+    /// Create a table with the given title and column headers. All columns
+    /// default to right alignment except the first (label) column.
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        let header: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+        let mut aligns = vec![Align::Right; header.len()];
+        if !aligns.is_empty() {
+            aligns[0] = Align::Left;
+        }
+        Table {
+            title: title.into(),
+            header,
+            rows: Vec::new(),
+            aligns,
+        }
+    }
+
+    /// Override the alignment of a column.
+    pub fn align(&mut self, col: usize, a: Align) -> &mut Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    /// Append a row of preformatted cells; panics on arity mismatch.
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row from string slices.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render the table to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                match self.aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a float with `digits` significant decimal places, trimming to a
+/// compact form ("2.91", "0.08", "6442").
+pub fn fnum(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+/// Format a normalized ratio like the paper's bar labels ("3.8x").
+pub fn fx(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row_str(&["alpha", "1"]).row_str(&["beta", "22"]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("| name  |"));
+        assert!(s.contains("| alpha |"));
+        assert!(s.contains("|    22 |"));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fnum(2.9123, 2), "2.91");
+        assert_eq!(fx(3.801), "3.80x");
+    }
+
+    #[test]
+    fn alignment_override() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.align(1, Align::Left);
+        t.row_str(&["x", "yy"]);
+        let s = t.render();
+        assert!(s.contains("| yy |"), "{s}");
+    }
+}

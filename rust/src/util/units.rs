@@ -1,0 +1,106 @@
+//! SI unit conventions and conversion helpers.
+//!
+//! All internal model quantities are stored in **base SI units** (`f64`):
+//! seconds, joules, watts, meters², bytes. Paper tables use engineering
+//! units (ns, nJ, mW, mm², MB); these helpers convert at the presentation
+//! boundary only, so model code never multiplies by ad-hoc powers of ten.
+
+/// Seconds per nanosecond.
+pub const NS: f64 = 1e-9;
+/// Seconds per picosecond.
+pub const PS: f64 = 1e-12;
+/// Joules per nanojoule.
+pub const NJ: f64 = 1e-9;
+/// Joules per picojoule.
+pub const PJ: f64 = 1e-12;
+/// Joules per femtojoule.
+pub const FJ: f64 = 1e-15;
+/// Watts per milliwatt.
+pub const MW: f64 = 1e-3;
+/// Watts per microwatt.
+pub const UW: f64 = 1e-6;
+/// Meters per micrometer.
+pub const UM: f64 = 1e-6;
+/// Meters per nanometer.
+pub const NM: f64 = 1e-9;
+/// Square meters per square millimeter.
+pub const MM2: f64 = 1e-6;
+/// Square meters per square micrometer.
+pub const UM2: f64 = 1e-12;
+/// Bytes per kibibyte.
+pub const KB: u64 = 1024;
+/// Bytes per mebibyte.
+pub const MB: u64 = 1024 * 1024;
+
+/// Convert seconds to nanoseconds.
+pub fn to_ns(seconds: f64) -> f64 {
+    seconds / NS
+}
+
+/// Convert seconds to picoseconds.
+pub fn to_ps(seconds: f64) -> f64 {
+    seconds / PS
+}
+
+/// Convert joules to nanojoules.
+pub fn to_nj(joules: f64) -> f64 {
+    joules / NJ
+}
+
+/// Convert joules to picojoules.
+pub fn to_pj(joules: f64) -> f64 {
+    joules / PJ
+}
+
+/// Convert watts to milliwatts.
+pub fn to_mw(watts: f64) -> f64 {
+    watts / MW
+}
+
+/// Convert square meters to square millimeters.
+pub fn to_mm2(m2: f64) -> f64 {
+    m2 / MM2
+}
+
+/// Convert bytes to mebibytes.
+pub fn to_mb(bytes: u64) -> f64 {
+    bytes as f64 / MB as f64
+}
+
+/// Pretty byte count ("3 MB", "48 KB", "128 B").
+pub fn fmt_bytes(bytes: u64) -> String {
+    if bytes >= MB && bytes % MB == 0 {
+        format!("{} MB", bytes / MB)
+    } else if bytes >= KB && bytes % KB == 0 {
+        format!("{} KB", bytes / KB)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_time() {
+        assert!((to_ns(2.91 * NS) - 2.91).abs() < 1e-12);
+        assert!((to_ps(650.0 * PS) - 650.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_energy_power_area() {
+        assert!((to_nj(0.35 * NJ) - 0.35).abs() < 1e-12);
+        assert!((to_pj(1.1 * PJ) - 1.1).abs() < 1e-12);
+        assert!((to_mw(6.442) - 6442.0).abs() < 1e-9);
+        assert!((to_mm2(5.53 * MM2) - 5.53).abs() < 1e-12);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(3 * MB), "3 MB");
+        assert_eq!(fmt_bytes(48 * KB), "48 KB");
+        assert_eq!(fmt_bytes(128), "128 B");
+        assert_eq!(to_mb(3 * MB), 3.0);
+    }
+}

@@ -1,0 +1,349 @@
+//! DNN layer descriptors and shape/MAC/weight bookkeeping.
+//!
+//! Each of the paper's five networks (Table 3) is described layer by layer;
+//! the traffic model in [`super::memstats`] walks these descriptors to
+//! estimate L2/DRAM transactions, and the Table 3 experiment renders the
+//! derived weight/MAC counts (regression-tested against the paper's values).
+
+/// Tensor shape: channels × height × width (batch handled separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub c: u64,
+    pub h: u64,
+    pub w: u64,
+}
+
+impl Shape {
+    pub fn new(c: u64, h: u64, w: u64) -> Shape {
+        Shape { c, h, w }
+    }
+
+    /// Elements per batch item.
+    pub fn numel(&self) -> u64 {
+        self.c * self.h * self.w
+    }
+}
+
+/// One network layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// 2D convolution. `groups` implements AlexNet's split convolutions.
+    Conv {
+        name: &'static str,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        pad: u64,
+        groups: u64,
+    },
+    /// Fully connected layer (flattens its input).
+    Fc { name: &'static str, out: u64 },
+    /// Max/avg pooling (no weights, pure data movement).
+    Pool {
+        name: &'static str,
+        kernel: u64,
+        stride: u64,
+        pad: u64,
+    },
+    /// Global average pooling to 1×1.
+    GlobalPool { name: &'static str },
+    /// Channel-wise concatenation marker closing a multi-branch block
+    /// (inception / fire): the listed branch outputs were computed on the
+    /// same input; `out_c` is the concatenated channel count.
+    Concat { name: &'static str, out_c: u64 },
+}
+
+/// A layer with its resolved input/output shapes.
+#[derive(Debug, Clone)]
+pub struct PlacedLayer {
+    pub layer: Layer,
+    pub input: Shape,
+    pub output: Shape,
+}
+
+impl PlacedLayer {
+    /// Weight parameter count.
+    pub fn weights(&self) -> u64 {
+        match self.layer {
+            Layer::Conv {
+                out_c,
+                kernel,
+                groups,
+                ..
+            } => out_c * (self.input.c / groups) * kernel * kernel,
+            Layer::Fc { out, .. } => out * self.input.numel(),
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate operations per batch item.
+    pub fn macs(&self) -> u64 {
+        match self.layer {
+            Layer::Conv { .. } => self.weights() * self.output.h * self.output.w,
+            Layer::Fc { .. } => self.weights(),
+            _ => 0,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.layer, Layer::Conv { .. })
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self.layer, Layer::Fc { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.layer {
+            Layer::Conv { name, .. }
+            | Layer::Fc { name, .. }
+            | Layer::Pool { name, .. }
+            | Layer::GlobalPool { name }
+            | Layer::Concat { name, .. } => name,
+        }
+    }
+}
+
+/// A full network with resolved shapes.
+#[derive(Debug, Clone)]
+pub struct Dnn {
+    pub name: &'static str,
+    /// Top-5 ImageNet error (%), as reported in Table 3.
+    pub top5_error: f64,
+    pub input: Shape,
+    pub layers: Vec<PlacedLayer>,
+}
+
+/// Builder that threads shapes through a layer list. Multi-branch blocks
+/// (inception/fire) are expressed by placing branch layers against a saved
+/// input followed by a `Concat`.
+pub struct DnnBuilder {
+    name: &'static str,
+    top5_error: f64,
+    input: Shape,
+    cur: Shape,
+    /// Saved shape branches re-attach to.
+    branch_root: Option<Shape>,
+    layers: Vec<PlacedLayer>,
+}
+
+impl DnnBuilder {
+    pub fn new(name: &'static str, top5_error: f64, input: Shape) -> Self {
+        DnnBuilder {
+            name,
+            top5_error,
+            input,
+            cur: input,
+            branch_root: None,
+            layers: Vec::new(),
+        }
+    }
+
+    fn out_hw(h: u64, kernel: u64, stride: u64, pad: u64) -> u64 {
+        (h + 2 * pad - kernel) / stride + 1
+    }
+
+    /// Append a convolution (+ implicit ReLU).
+    pub fn conv(
+        self,
+        name: &'static str,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        pad: u64,
+    ) -> Self {
+        self.conv_g(name, out_c, kernel, stride, pad, 1)
+    }
+
+    /// Grouped convolution.
+    pub fn conv_g(
+        mut self,
+        name: &'static str,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        pad: u64,
+        groups: u64,
+    ) -> Self {
+        let input = self.cur;
+        let oh = Self::out_hw(input.h, kernel, stride, pad);
+        let ow = Self::out_hw(input.w, kernel, stride, pad);
+        let output = Shape::new(out_c, oh, ow);
+        self.layers.push(PlacedLayer {
+            layer: Layer::Conv {
+                name,
+                out_c,
+                kernel,
+                stride,
+                pad,
+                groups,
+            },
+            input,
+            output,
+        });
+        self.cur = output;
+        self
+    }
+
+    pub fn pool(mut self, name: &'static str, kernel: u64, stride: u64, pad: u64) -> Self {
+        let input = self.cur;
+        let oh = Self::out_hw(input.h, kernel, stride, pad);
+        let ow = Self::out_hw(input.w, kernel, stride, pad);
+        let output = Shape::new(input.c, oh, ow);
+        self.layers.push(PlacedLayer {
+            layer: Layer::Pool {
+                name,
+                kernel,
+                stride,
+                pad,
+            },
+            input,
+            output,
+        });
+        self.cur = output;
+        self
+    }
+
+    pub fn global_pool(mut self, name: &'static str) -> Self {
+        let input = self.cur;
+        let output = Shape::new(input.c, 1, 1);
+        self.layers.push(PlacedLayer {
+            layer: Layer::GlobalPool { name },
+            input,
+            output,
+        });
+        self.cur = output;
+        self
+    }
+
+    pub fn fc(mut self, name: &'static str, out: u64) -> Self {
+        let input = self.cur;
+        let output = Shape::new(out, 1, 1);
+        self.layers.push(PlacedLayer {
+            layer: Layer::Fc { name, out },
+            input,
+            output,
+        });
+        self.cur = output;
+        self
+    }
+
+    /// Open a multi-branch block on the current shape.
+    pub fn begin_branches(mut self) -> Self {
+        self.branch_root = Some(self.cur);
+        self
+    }
+
+    /// Reset the cursor to the branch root (start the next branch).
+    pub fn branch(mut self) -> Self {
+        self.cur = self.branch_root.expect("begin_branches first");
+        self
+    }
+
+    /// Close the block: concatenate branch outputs to `out_c` channels at
+    /// the current spatial size.
+    pub fn concat(mut self, name: &'static str, out_c: u64) -> Self {
+        let input = self.cur;
+        let output = Shape::new(out_c, input.h, input.w);
+        self.layers.push(PlacedLayer {
+            layer: Layer::Concat { name, out_c },
+            input,
+            output,
+        });
+        self.cur = output;
+        self.branch_root = None;
+        self
+    }
+
+    pub fn build(self) -> Dnn {
+        Dnn {
+            name: self.name,
+            top5_error: self.top5_error,
+            input: self.input,
+            layers: self.layers,
+        }
+    }
+}
+
+impl Dnn {
+    /// Total weight parameters (Table 3 row "Total Weights").
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    /// Total MACs per batch item (Table 3 row "Total MACs").
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Number of convolution layers (Table 3 row "CONV Layers").
+    pub fn conv_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_conv()).count()
+    }
+
+    /// Number of fully connected layers (Table 3 row "FC Layers").
+    pub fn fc_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_fc()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_propagate_through_conv_and_pool() {
+        let net = DnnBuilder::new("t", 0.0, Shape::new(3, 227, 227))
+            .conv("c1", 96, 11, 4, 0)
+            .pool("p1", 3, 2, 0)
+            .build();
+        assert_eq!(net.layers[0].output, Shape::new(96, 55, 55));
+        assert_eq!(net.layers[1].output, Shape::new(96, 27, 27));
+    }
+
+    #[test]
+    fn grouped_conv_divides_weights() {
+        let full = DnnBuilder::new("t", 0.0, Shape::new(96, 27, 27))
+            .conv("c", 256, 5, 1, 2)
+            .build();
+        let grouped = DnnBuilder::new("t", 0.0, Shape::new(96, 27, 27))
+            .conv_g("c", 256, 5, 1, 2, 2)
+            .build();
+        assert_eq!(full.total_weights(), 2 * grouped.total_weights());
+    }
+
+    #[test]
+    fn fc_flattens_input() {
+        let net = DnnBuilder::new("t", 0.0, Shape::new(256, 6, 6))
+            .fc("fc", 4096)
+            .build();
+        assert_eq!(net.total_weights(), 4096 * 256 * 36);
+        assert_eq!(net.total_macs(), net.total_weights());
+    }
+
+    #[test]
+    fn branches_share_the_root_input() {
+        let net = DnnBuilder::new("t", 0.0, Shape::new(192, 28, 28))
+            .begin_branches()
+            .branch()
+            .conv("b1", 64, 1, 1, 0)
+            .branch()
+            .conv("b2a", 96, 1, 1, 0)
+            .conv("b2b", 128, 3, 1, 1)
+            .concat("cat", 64 + 128)
+            .build();
+        // Both branches see the 192-channel root.
+        assert_eq!(net.layers[0].input.c, 192);
+        assert_eq!(net.layers[1].input.c, 192);
+        assert_eq!(net.layers.last().unwrap().output.c, 64 + 128);
+    }
+
+    #[test]
+    fn conv_macs_scale_with_output_area() {
+        let net = DnnBuilder::new("t", 0.0, Shape::new(3, 32, 32))
+            .conv("c", 8, 3, 1, 1)
+            .build();
+        let l = &net.layers[0];
+        assert_eq!(l.macs(), l.weights() * 32 * 32);
+    }
+}

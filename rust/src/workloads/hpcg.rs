@@ -1,0 +1,158 @@
+//! HPCG (high-performance conjugate gradients) memory model.
+//!
+//! The paper runs HPCG with local subgrid dimensions 4³…128³ to show the
+//! framework generalizes beyond DL (Fig 3 uses 8³/32³/128³ as HPCG-S/M/L).
+//! One CG iteration over an n³ 27-point stencil problem does: SpMV, two
+//! dot products, three WAXPBYs, and a multigrid (SymGS) preconditioner
+//! sweep over 4 levels. Reads are dominated by the sparse matrix (27
+//! nonzeros × 12 B per row, touched by SpMV and twice by SymGS); writes by
+//! the updated vectors — this is what pushes the L2 read/write ratio to
+//! ~26 for large grids. For small grids the working set sits in the L1s,
+//! which filter the matrix re-reads before they reach L2, pulling the
+//! ratio toward ~2.
+
+use super::memstats::{MemStats, TRANS_BYTES};
+
+/// Double-precision element size (HPCG is fp64).
+const F64B: u64 = 8;
+/// Bytes per stored nonzero (8B value + 4B column index).
+const NNZ_BYTES: u64 = 12;
+/// Nonzeros per row of the 27-point stencil.
+const NNZ: u64 = 27;
+/// Aggregate L1 capacity that filters L2 traffic (28 SMs × 48 KB).
+const L1_TOTAL: u64 = 28 * 48 * 1024;
+/// Multigrid levels in the reference HPCG.
+const MG_LEVELS: u32 = 4;
+
+/// Named HPCG configurations used in the paper's figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HpcgSize {
+    /// 8×8×8 subgrid.
+    Small,
+    /// 32×32×32 subgrid.
+    Medium,
+    /// 128×128×128 subgrid.
+    Large,
+}
+
+impl HpcgSize {
+    pub fn dim(&self) -> u64 {
+        match self {
+            HpcgSize::Small => 8,
+            HpcgSize::Medium => 32,
+            HpcgSize::Large => 128,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HpcgSize::Small => "HPCG-S",
+            HpcgSize::Medium => "HPCG-M",
+            HpcgSize::Large => "HPCG-L",
+        }
+    }
+
+    pub const ALL: [HpcgSize; 3] = [HpcgSize::Small, HpcgSize::Medium, HpcgSize::Large];
+}
+
+/// Memory statistics for one CG iteration at subgrid dimension `dim`,
+/// with an L2 of `l2_capacity` bytes.
+pub fn hpcg_stats_dim(dim: u64, l2_capacity: u64) -> MemStats {
+    let rows = dim * dim * dim;
+    let matrix_bytes = rows * NNZ * NNZ_BYTES;
+    let vector_bytes = rows * F64B;
+
+    // Matrix sweeps: SpMV (1×) + SymGS pre+post smoothing (2 passes × 2
+    // directions) and the residual SpMV per V-cycle level (coarse levels
+    // sum (1/8)^l ≈ 0.14× the fine level); ~2.9 effective passes/level.
+    let coarse_factor: f64 = (1..MG_LEVELS).map(|l| (0.125f64).powi(l as i32)).sum();
+    let matrix_sweeps = 1.0 + 2.9 * (1.0 + coarse_factor);
+    // Vector reads: SpMV gather + 2 dots×2 + 3 waxpby×2 + SymGS rhs/x.
+    let vector_reads = 27.0f64.min(4.0) + 4.0 + 6.0 + 4.0;
+    // Vector writes: SpMV y + 2 dot partials + 3 waxpby + SymGS x updates.
+    let vector_writes = 1.0 + 0.2 + 3.0 + 2.0 * (1.0 + coarse_factor);
+
+    let raw_reads = matrix_sweeps * matrix_bytes as f64 + vector_reads * vector_bytes as f64;
+    let raw_writes = vector_writes * vector_bytes as f64;
+
+    // L1 filtering: when the working set fits in the aggregate L1, the
+    // repeated matrix/vector sweeps hit in L1 and never reach L2; even the
+    // per-iteration "compulsory" matrix read mostly stays resident (L2
+    // only sees the residual churn, ~18%). GPU L1s are write-through, so
+    // writes always reach L2, minus the store-coalescing capture.
+    let working_set = (matrix_bytes + 6 * vector_bytes) as f64;
+    let l1_capture = (L1_TOTAL as f64 / working_set).clamp(0.0, 1.0);
+    let compulsory_reads = (matrix_bytes + 2 * vector_bytes) as f64;
+    let l2_reads = compulsory_reads * (0.18 + 0.82 * (1.0 - l1_capture))
+        + (raw_reads - compulsory_reads) * (1.0 - l1_capture);
+    let l2_writes = raw_writes * (1.0 - 0.45 * l1_capture);
+
+    // DRAM: whatever exceeds the L2 share streams per sweep; otherwise
+    // compulsory only.
+    let l2_share = l2_capacity as f64 * 0.8;
+    let dram_reads = if working_set > l2_share {
+        l2_reads * (1.0 - l2_share / working_set).max(0.15)
+    } else {
+        compulsory_reads * 0.1
+    };
+    let dram_writes = if working_set > l2_share {
+        l2_writes as f64 * 0.5
+    } else {
+        vector_bytes as f64 * 0.1
+    };
+
+    MemStats {
+        l2_reads: (l2_reads / TRANS_BYTES as f64) as u64,
+        l2_writes: (l2_writes / TRANS_BYTES as f64) as u64,
+        dram_reads: (dram_reads / TRANS_BYTES as f64) as u64,
+        dram_writes: (dram_writes / TRANS_BYTES as f64) as u64,
+    }
+}
+
+/// Memory statistics for a named Fig-3 configuration.
+pub fn hpcg_stats(size: HpcgSize, l2_capacity: u64) -> MemStats {
+    hpcg_stats_dim(size.dim(), l2_capacity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    #[test]
+    fn large_grid_ratio_near_paper_max() {
+        let r = hpcg_stats(HpcgSize::Large, 3 * MB).rw_ratio();
+        assert!((18.0..30.0).contains(&r), "HPCG-L ratio {r}");
+    }
+
+    #[test]
+    fn small_grid_ratio_near_paper_min() {
+        let r = hpcg_stats(HpcgSize::Small, 3 * MB).rw_ratio();
+        assert!((1.5..4.0).contains(&r), "HPCG-S ratio {r}");
+    }
+
+    #[test]
+    fn ratio_is_monotone_in_grid_size() {
+        let mut last = 0.0;
+        for dim in [4, 8, 16, 32, 64, 128] {
+            let r = hpcg_stats_dim(dim, 3 * MB).rw_ratio();
+            assert!(r >= last, "ratio not monotone at {dim}: {r} < {last}");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn traffic_scales_with_rows() {
+        let s = hpcg_stats_dim(32, 3 * MB);
+        let l = hpcg_stats_dim(64, 3 * MB);
+        let scale = l.l2_reads as f64 / s.l2_reads as f64;
+        assert!((6.0..10.0).contains(&scale), "8x rows -> ~8x reads, got {scale}");
+    }
+
+    #[test]
+    fn bigger_l2_cuts_hpcg_dram_traffic() {
+        let small_cache = hpcg_stats(HpcgSize::Large, 3 * MB);
+        let big_cache = hpcg_stats(HpcgSize::Large, 24 * MB);
+        assert!(big_cache.dram_reads < small_cache.dram_reads);
+    }
+}

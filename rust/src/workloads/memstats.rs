@@ -1,0 +1,306 @@
+//! Analytical L2 / DRAM traffic model — the stand-in for nvprof.
+//!
+//! The paper profiles Caffe on a GTX 1080 Ti with nvprof and consumes four
+//! counters per workload: L2 read transactions, L2 write transactions, and
+//! device-memory (DRAM) read/write transactions (32-byte sectors). This
+//! module derives the same counters from the layer descriptors:
+//!
+//! * GEMM-tile reuse: convolutions lower to im2col matmuls tiled in
+//!   128×128 blocks — the same block shape the Pallas L1 kernel uses
+//!   (`python/compile/kernels/matmul.py`), so modeled L2 traffic matches
+//!   the kernels this repo actually runs. A weight tile is re-read from L2
+//!   once per output-row tile; an activation tile once per output-column
+//!   tile. L2 captures this reuse; DRAM sees each byte once (+ spill).
+//! * Training = forward + dgrad + wgrad + optimizer step, each with its
+//!   own read/write mix — this is what makes training grow more
+//!   read-dominant with batch size (Fig 6) while inference does the
+//!   opposite.
+//! * Spill: activations larger than the effective L2 share stream to DRAM.
+
+use super::dnn::{Dnn, PlacedLayer};
+
+/// Bytes per tensor element (Caffe fp32).
+pub const ELEM_BYTES: u64 = 4;
+
+/// Bytes per L2/DRAM transaction (nvprof sector size).
+pub const TRANS_BYTES: u64 = 32;
+
+/// GEMM tile edge (MXU-aligned; mirrors the Pallas kernel's BlockSpec).
+pub const TILE: u64 = 128;
+
+/// Fraction of the L2 usable for activation staging (tags/metadata and
+/// other clients take the rest).
+pub const L2_ACT_SHARE: f64 = 0.5;
+
+/// How convolutions reach the GEMM engine — changes the L2 traffic mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrafficModel {
+    /// Caffe's path (what the paper profiled): im2col materializes the
+    /// unrolled K×M column buffer through L2 before the sgemm reads it
+    /// back — heavy extra write *and* read traffic on conv layers.
+    CaffeIm2col,
+    /// Fused path (this repo's Pallas kernels): the kernel gathers input
+    /// patches directly from the activation tensor; no column buffer.
+    FusedTiles,
+}
+
+/// Execution phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Inference,
+    Training,
+}
+
+impl Phase {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Phase::Inference => "I",
+            Phase::Training => "T",
+        }
+    }
+}
+
+/// The nvprof-equivalent counters (32B transactions).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemStats {
+    pub l2_reads: u64,
+    pub l2_writes: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+}
+
+impl MemStats {
+    /// The Fig 3 quantity: L2 read transactions / write transactions.
+    pub fn rw_ratio(&self) -> f64 {
+        self.l2_reads as f64 / self.l2_writes.max(1) as f64
+    }
+
+    pub fn add(&mut self, other: MemStats) {
+        self.l2_reads += other.l2_reads;
+        self.l2_writes += other.l2_writes;
+        self.dram_reads += other.dram_reads;
+        self.dram_writes += other.dram_writes;
+    }
+
+    fn from_bytes(l2_r: u64, l2_w: u64, dram_r: u64, dram_w: u64) -> MemStats {
+        MemStats {
+            l2_reads: l2_r / TRANS_BYTES,
+            l2_writes: l2_w / TRANS_BYTES,
+            dram_reads: dram_r / TRANS_BYTES,
+            dram_writes: dram_w / TRANS_BYTES,
+        }
+    }
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// GEMM dimensions of a layer's forward pass (im2col for conv).
+fn gemm_dims(layer: &PlacedLayer, batch: u64) -> Option<(u64, u64, u64)> {
+    use super::dnn::Layer::*;
+    match layer.layer {
+        Conv { out_c, kernel, groups, .. } => Some((
+            batch * layer.output.h * layer.output.w,
+            out_c,
+            (layer.input.c / groups) * kernel * kernel,
+        )),
+        Fc { out, .. } => Some((batch, out, layer.input.numel())),
+        _ => None,
+    }
+}
+
+/// im2col column-buffer bytes for a conv layer (0 otherwise, and 0 for
+/// 1×1 kernels, which Caffe shortcuts straight into sgemm).
+fn col_bytes(layer: &PlacedLayer, batch: u64) -> u64 {
+    use super::dnn::Layer::*;
+    match layer.layer {
+        Conv { kernel, groups, .. } if kernel > 1 => {
+            let (m, _n, k) = gemm_dims(layer, batch).unwrap();
+            m * k * groups * ELEM_BYTES
+        }
+        _ => 0,
+    }
+}
+
+fn spill(bytes: u64, l2_capacity: u64) -> u64 {
+    let share = (l2_capacity as f64 * L2_ACT_SHARE) as u64;
+    bytes.saturating_sub(share)
+}
+
+/// Traffic of one layer's forward pass.
+fn layer_forward(layer: &PlacedLayer, batch: u64, l2: u64, model: TrafficModel) -> MemStats {
+    let i_bytes = layer.input.numel() * batch * ELEM_BYTES;
+    let o_bytes = layer.output.numel() * batch * ELEM_BYTES;
+    let w_bytes = layer.weights() * ELEM_BYTES;
+    match gemm_dims(layer, batch) {
+        Some((m, n, _k)) => {
+            let col = if model == TrafficModel::CaffeIm2col {
+                col_bytes(layer, batch)
+            } else {
+                0
+            };
+            // Tile reuse out of L2. With im2col, the sgemm streams the
+            // column buffer (written once, re-read per N-tile) instead of
+            // re-reading the raw activations.
+            let act_stream = if col > 0 { col } else { i_bytes };
+            let l2_r = i_bytes.min(act_stream)
+                + act_stream * ceil_div(n, TILE)
+                + w_bytes * ceil_div(m, TILE);
+            let l2_w = o_bytes + col;
+            // DRAM: weights stream once; activations and the column
+            // buffer spill past the share.
+            let dram_r = w_bytes + spill(i_bytes, l2) + spill(col, l2);
+            let dram_w = spill(o_bytes, l2) + spill(col, l2);
+            MemStats::from_bytes(l2_r, l2_w, dram_r, dram_w)
+        }
+        // Pool / concat / gap: pure data movement.
+        None => MemStats::from_bytes(
+            i_bytes,
+            o_bytes,
+            spill(i_bytes, l2),
+            spill(o_bytes, l2),
+        ),
+    }
+}
+
+/// Traffic of one layer's backward pass (dgrad + wgrad) plus its share of
+/// the optimizer step.
+fn layer_backward(layer: &PlacedLayer, batch: u64, l2: u64, model: TrafficModel) -> MemStats {
+    let i_bytes = layer.input.numel() * batch * ELEM_BYTES;
+    let o_bytes = layer.output.numel() * batch * ELEM_BYTES;
+    let w_bytes = layer.weights() * ELEM_BYTES;
+    match gemm_dims(layer, batch) {
+        Some((m, n, k)) => {
+            // Caffe re-materializes the column buffer for wgrad and runs
+            // col2im after dgrad.
+            let col = if model == TrafficModel::CaffeIm2col {
+                col_bytes(layer, batch)
+            } else {
+                0
+            };
+            // dgrad: GEMM with (M, K) output — reads dout and weights.
+            let dgrad_r = o_bytes * ceil_div(k, TILE) + w_bytes * ceil_div(m, TILE);
+            let dgrad_w = i_bytes;
+            // wgrad: GEMM with (K, N) output — reads ifmap and dout.
+            let wgrad_r = i_bytes * ceil_div(n, TILE) + o_bytes * ceil_div(k, TILE);
+            let wgrad_w = w_bytes;
+            // Optimizer (SGD+momentum): read w, g, m; write w, m.
+            let opt_r = 3 * w_bytes;
+            let opt_w = 2 * w_bytes;
+            let l2_r = dgrad_r + wgrad_r + opt_r + 2 * col;
+            let l2_w = dgrad_w + wgrad_w + opt_w + 2 * col;
+            let dram_r = w_bytes + spill(i_bytes, l2) + spill(o_bytes, l2);
+            let dram_w = w_bytes + spill(i_bytes, l2);
+            MemStats::from_bytes(l2_r, l2_w, dram_r, dram_w)
+        }
+        None => MemStats::from_bytes(
+            o_bytes,
+            i_bytes,
+            spill(o_bytes, l2),
+            spill(i_bytes, l2),
+        ),
+    }
+}
+
+/// Full-network memory statistics for one phase at one batch size,
+/// against an L2 of `l2_capacity` bytes.
+pub fn dnn_stats(net: &Dnn, phase: Phase, batch: u64, l2_capacity: u64) -> MemStats {
+    dnn_stats_model(net, phase, batch, l2_capacity, TrafficModel::CaffeIm2col)
+}
+
+/// Like [`dnn_stats`] with an explicit traffic model (the paper's Caffe
+/// im2col path vs this repo's fused Pallas path — ablation material).
+pub fn dnn_stats_model(
+    net: &Dnn,
+    phase: Phase,
+    batch: u64,
+    l2_capacity: u64,
+    model: TrafficModel,
+) -> MemStats {
+    let mut total = MemStats::default();
+    for layer in &net.layers {
+        total.add(layer_forward(layer, batch, l2_capacity, model));
+        if phase == Phase::Training {
+            total.add(layer_backward(layer, batch, l2_capacity, model));
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+    use crate::workloads::nets;
+
+    #[test]
+    fn training_traffic_exceeds_inference() {
+        let net = nets::alexnet();
+        let inf = dnn_stats(&net, Phase::Inference, 4, 3 * MB);
+        let tr = dnn_stats(&net, Phase::Training, 4, 3 * MB);
+        assert!(tr.l2_reads > 2 * inf.l2_reads);
+        assert!(tr.l2_writes > 2 * inf.l2_writes);
+    }
+
+    #[test]
+    fn rw_ratios_land_in_the_paper_band() {
+        // Fig 3: ratios across the suite span roughly 2..26.
+        for net in nets::all_networks() {
+            for (phase, batch) in [(Phase::Inference, 4), (Phase::Training, 64)] {
+                let s = dnn_stats(&net, phase, batch, 3 * MB);
+                let r = s.rw_ratio();
+                assert!(
+                    (1.2..30.0).contains(&r),
+                    "{} {:?} ratio {r}",
+                    net.name,
+                    phase
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inference_ratio_falls_with_batch_training_rises() {
+        // The Fig 6 mechanism.
+        let net = nets::alexnet();
+        let i_small = dnn_stats(&net, Phase::Inference, 1, 3 * MB).rw_ratio();
+        let i_big = dnn_stats(&net, Phase::Inference, 64, 3 * MB).rw_ratio();
+        assert!(i_big < i_small, "inference: {i_small} -> {i_big}");
+        let t_small = dnn_stats(&net, Phase::Training, 4, 3 * MB).rw_ratio();
+        let t_big = dnn_stats(&net, Phase::Training, 256, 3 * MB).rw_ratio();
+        assert!(t_big > t_small, "training: {t_small} -> {t_big}");
+    }
+
+    #[test]
+    fn bigger_l2_reduces_dram_traffic() {
+        let net = nets::vgg16();
+        let small = dnn_stats(&net, Phase::Inference, 4, 3 * MB);
+        let big = dnn_stats(&net, Phase::Inference, 4, 24 * MB);
+        assert!(big.dram_reads < small.dram_reads);
+        assert!(big.dram_writes <= small.dram_writes);
+        // L2-side traffic is capacity-independent in the model.
+        assert_eq!(big.l2_reads, small.l2_reads);
+    }
+
+    #[test]
+    fn weight_heavy_nets_read_more() {
+        // VGG-16 (138M weights) must out-read SqueezeNet (1.2M) per image.
+        let v = dnn_stats(&nets::vgg16(), Phase::Inference, 4, 3 * MB);
+        let s = dnn_stats(&nets::squeezenet(), Phase::Inference, 4, 3 * MB);
+        assert!(v.l2_reads > 5 * s.l2_reads);
+    }
+
+    #[test]
+    fn stats_compose_additively() {
+        let mut a = MemStats {
+            l2_reads: 1,
+            l2_writes: 2,
+            dram_reads: 3,
+            dram_writes: 4,
+        };
+        a.add(a);
+        assert_eq!(a.l2_reads, 2);
+        assert_eq!(a.dram_writes, 8);
+    }
+}

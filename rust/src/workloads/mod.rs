@@ -1,0 +1,21 @@
+//! Architecture-level workload characterization (paper §3.3 → Table 3,
+//! Fig 3) — the stand-in for Caffe + nvprof on a physical GTX 1080 Ti.
+//!
+//! * [`dnn`] — layer descriptors with shape/weight/MAC bookkeeping.
+//! * [`nets`] — the five Table 3 networks (AlexNet, GoogLeNet, VGG-16,
+//!   ResNet-18, SqueezeNet), regression-tested against Table 3.
+//! * [`memstats`] — the analytical L2/DRAM transaction model (nvprof
+//!   counters), GEMM-tile aware and phase aware (inference/training).
+//! * [`hpcg`] — the HPCG stencil/CG memory model (the paper's non-DL
+//!   generalization workload).
+//! * [`profiler`] — the suite enumerator: Fig 3/4's thirteen workloads at
+//!   the paper's batch sizes.
+
+pub mod dnn;
+pub mod hpcg;
+pub mod memstats;
+pub mod nets;
+pub mod profiler;
+
+pub use memstats::{MemStats, Phase};
+pub use profiler::{profile, profile_default, profile_suite, ProfiledWorkload, Workload};

@@ -1,0 +1,257 @@
+//! The five Table 3 networks, layer by layer (Caffe topologies on
+//! ImageNet-shaped inputs), plus accessors for the whole suite.
+//!
+//! Table 3 regression targets: AlexNet 61M/724M, GoogLeNet 7M/1.43G,
+//! VGG-16 138M/15.5G, ResNet-18 11.8M/2G, SqueezeNet 1.2M/837M
+//! (weights / MACs). ResNet-18 uses the original paper's parameter-free
+//! (option-A) shortcuts, matching Table 3's 17 CONV layers.
+
+use super::dnn::{Dnn, DnnBuilder, Shape};
+
+/// AlexNet (Caffe single-column variant, 227×227 input, grouped convs).
+pub fn alexnet() -> Dnn {
+    DnnBuilder::new("AlexNet", 16.4, Shape::new(3, 227, 227))
+        .conv("conv1", 96, 11, 4, 0)
+        .pool("pool1", 3, 2, 0)
+        .conv_g("conv2", 256, 5, 1, 2, 2)
+        .pool("pool2", 3, 2, 0)
+        .conv("conv3", 384, 3, 1, 1)
+        .conv_g("conv4", 384, 3, 1, 1, 2)
+        .conv_g("conv5", 256, 3, 1, 1, 2)
+        .pool("pool5", 3, 2, 0)
+        .fc("fc6", 4096)
+        .fc("fc7", 4096)
+        .fc("fc8", 1000)
+        .build()
+}
+
+/// One GoogLeNet inception module.
+fn inception(
+    b: DnnBuilder,
+    tag: &'static str,
+    c1: u64,
+    c3r: u64,
+    c3: u64,
+    c5r: u64,
+    c5: u64,
+    cp: u64,
+    names: [&'static str; 7],
+) -> DnnBuilder {
+    let _ = tag;
+    b.begin_branches()
+        .branch()
+        .conv(names[0], c1, 1, 1, 0)
+        .branch()
+        .conv(names[1], c3r, 1, 1, 0)
+        .conv(names[2], c3, 3, 1, 1)
+        .branch()
+        .conv(names[3], c5r, 1, 1, 0)
+        .conv(names[4], c5, 5, 1, 2)
+        .branch()
+        .pool(names[5], 3, 1, 1)
+        .conv(names[6], cp, 1, 1, 0)
+        .concat(names[5], c1 + c3 + c5 + cp)
+}
+
+/// GoogLeNet (Inception v1): 57 conv layers, one FC.
+pub fn googlenet() -> Dnn {
+    let b = DnnBuilder::new("GoogLeNet", 6.7, Shape::new(3, 224, 224))
+        .conv("conv1", 64, 7, 2, 3)
+        .pool("pool1", 3, 2, 1)
+        .conv("conv2_reduce", 64, 1, 1, 0)
+        .conv("conv2", 192, 3, 1, 1)
+        .pool("pool2", 3, 2, 1);
+    let b = inception(b, "3a", 64, 96, 128, 16, 32, 32,
+        ["i3a_1x1", "i3a_3x3r", "i3a_3x3", "i3a_5x5r", "i3a_5x5", "i3a_pool", "i3a_proj"]);
+    let b = inception(b, "3b", 128, 128, 192, 32, 96, 64,
+        ["i3b_1x1", "i3b_3x3r", "i3b_3x3", "i3b_5x5r", "i3b_5x5", "i3b_pool", "i3b_proj"]);
+    let b = b.pool("pool3", 3, 2, 1);
+    let b = inception(b, "4a", 192, 96, 208, 16, 48, 64,
+        ["i4a_1x1", "i4a_3x3r", "i4a_3x3", "i4a_5x5r", "i4a_5x5", "i4a_pool", "i4a_proj"]);
+    let b = inception(b, "4b", 160, 112, 224, 24, 64, 64,
+        ["i4b_1x1", "i4b_3x3r", "i4b_3x3", "i4b_5x5r", "i4b_5x5", "i4b_pool", "i4b_proj"]);
+    let b = inception(b, "4c", 128, 128, 256, 24, 64, 64,
+        ["i4c_1x1", "i4c_3x3r", "i4c_3x3", "i4c_5x5r", "i4c_5x5", "i4c_pool", "i4c_proj"]);
+    let b = inception(b, "4d", 112, 144, 288, 32, 64, 64,
+        ["i4d_1x1", "i4d_3x3r", "i4d_3x3", "i4d_5x5r", "i4d_5x5", "i4d_pool", "i4d_proj"]);
+    let b = inception(b, "4e", 256, 160, 320, 32, 128, 128,
+        ["i4e_1x1", "i4e_3x3r", "i4e_3x3", "i4e_5x5r", "i4e_5x5", "i4e_pool", "i4e_proj"]);
+    let b = b.pool("pool4", 3, 2, 1);
+    let b = inception(b, "5a", 256, 160, 320, 32, 128, 128,
+        ["i5a_1x1", "i5a_3x3r", "i5a_3x3", "i5a_5x5r", "i5a_5x5", "i5a_pool", "i5a_proj"]);
+    let b = inception(b, "5b", 384, 192, 384, 48, 128, 128,
+        ["i5b_1x1", "i5b_3x3r", "i5b_3x3", "i5b_5x5r", "i5b_5x5", "i5b_pool", "i5b_proj"]);
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+/// VGG-16: 13 conv layers, 3 FC.
+pub fn vgg16() -> Dnn {
+    DnnBuilder::new("VGG-16", 7.3, Shape::new(3, 224, 224))
+        .conv("conv1_1", 64, 3, 1, 1)
+        .conv("conv1_2", 64, 3, 1, 1)
+        .pool("pool1", 2, 2, 0)
+        .conv("conv2_1", 128, 3, 1, 1)
+        .conv("conv2_2", 128, 3, 1, 1)
+        .pool("pool2", 2, 2, 0)
+        .conv("conv3_1", 256, 3, 1, 1)
+        .conv("conv3_2", 256, 3, 1, 1)
+        .conv("conv3_3", 256, 3, 1, 1)
+        .pool("pool3", 2, 2, 0)
+        .conv("conv4_1", 512, 3, 1, 1)
+        .conv("conv4_2", 512, 3, 1, 1)
+        .conv("conv4_3", 512, 3, 1, 1)
+        .pool("pool4", 2, 2, 0)
+        .conv("conv5_1", 512, 3, 1, 1)
+        .conv("conv5_2", 512, 3, 1, 1)
+        .conv("conv5_3", 512, 3, 1, 1)
+        .pool("pool5", 2, 2, 0)
+        .fc("fc6", 4096)
+        .fc("fc7", 4096)
+        .fc("fc8", 1000)
+        .build()
+}
+
+/// A ResNet basic block (two 3×3 convs; option-A parameter-free shortcut,
+/// so only the convolutions appear as layers).
+fn basic_block(b: DnnBuilder, n1: &'static str, n2: &'static str, ch: u64, stride: u64) -> DnnBuilder {
+    b.conv(n1, ch, 3, stride, 1).conv(n2, ch, 3, 1, 1)
+}
+
+/// ResNet-18 with option-A shortcuts: 17 conv layers, one FC.
+pub fn resnet18() -> Dnn {
+    let b = DnnBuilder::new("ResNet-18", 10.71, Shape::new(3, 224, 224))
+        .conv("conv1", 64, 7, 2, 3)
+        .pool("pool1", 3, 2, 1);
+    let b = basic_block(b, "l1b1c1", "l1b1c2", 64, 1);
+    let b = basic_block(b, "l1b2c1", "l1b2c2", 64, 1);
+    let b = basic_block(b, "l2b1c1", "l2b1c2", 128, 2);
+    let b = basic_block(b, "l2b2c1", "l2b2c2", 128, 1);
+    let b = basic_block(b, "l3b1c1", "l3b1c2", 256, 2);
+    let b = basic_block(b, "l3b2c1", "l3b2c2", 256, 1);
+    let b = basic_block(b, "l4b1c1", "l4b1c2", 512, 2);
+    let b = basic_block(b, "l4b2c1", "l4b2c2", 512, 1);
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+/// A SqueezeNet fire module: squeeze 1×1 then parallel 1×1/3×3 expands.
+fn fire(
+    b: DnnBuilder,
+    ns: &'static str,
+    ne1: &'static str,
+    ne3: &'static str,
+    s: u64,
+    e: u64,
+) -> DnnBuilder {
+    b.conv(ns, s, 1, 1, 0)
+        .begin_branches()
+        .branch()
+        .conv(ne1, e, 1, 1, 0)
+        .branch()
+        .conv(ne3, e, 3, 1, 1)
+        .concat(ns, 2 * e)
+}
+
+/// SqueezeNet v1.0: 26 conv layers, no FC.
+pub fn squeezenet() -> Dnn {
+    let b = DnnBuilder::new("SqueezeNet", 16.4, Shape::new(3, 224, 224))
+        .conv("conv1", 96, 7, 2, 0)
+        .pool("pool1", 3, 2, 0);
+    let b = fire(b, "f2s", "f2e1", "f2e3", 16, 64);
+    let b = fire(b, "f3s", "f3e1", "f3e3", 16, 64);
+    let b = fire(b, "f4s", "f4e1", "f4e3", 32, 128);
+    let b = b.pool("pool4", 3, 2, 0);
+    let b = fire(b, "f5s", "f5e1", "f5e3", 32, 128);
+    let b = fire(b, "f6s", "f6e1", "f6e3", 48, 192);
+    let b = fire(b, "f7s", "f7e1", "f7e3", 48, 192);
+    let b = fire(b, "f8s", "f8e1", "f8e3", 64, 256);
+    let b = b.pool("pool8", 3, 2, 0);
+    let b = fire(b, "f9s", "f9e1", "f9e3", 64, 256);
+    b.conv("conv10", 1000, 1, 1, 0).global_pool("gap").build()
+}
+
+/// The full Table 3 suite, in the paper's column order.
+pub fn all_networks() -> Vec<Dnn> {
+    vec![alexnet(), googlenet(), vgg16(), resnet18(), squeezenet()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn within(x: f64, target: f64, tol: f64) -> bool {
+        (x - target).abs() <= tol * target
+    }
+
+    /// Table 3 regression: layer counts, weights, MACs.
+    #[test]
+    fn table3_regression() {
+        let cases: [(Dnn, usize, usize, f64, f64); 5] = [
+            (alexnet(), 5, 3, 61e6, 724e6),
+            (googlenet(), 57, 1, 7e6, 1.43e9),
+            (vgg16(), 13, 3, 138e6, 15.5e9),
+            (resnet18(), 17, 1, 11.8e6, 2e9),
+            (squeezenet(), 26, 0, 1.2e6, 837e6),
+        ];
+        for (net, conv, fc, weights, macs) in cases {
+            assert_eq!(net.conv_layers(), conv, "{} conv layers", net.name);
+            assert_eq!(net.fc_layers(), fc, "{} fc layers", net.name);
+            assert!(
+                within(net.total_weights() as f64, weights, 0.06),
+                "{} weights {} vs {}",
+                net.name,
+                net.total_weights(),
+                weights
+            );
+            assert!(
+                within(net.total_macs() as f64, macs, 0.12),
+                "{} MACs {} vs {}",
+                net.name,
+                net.total_macs(),
+                macs
+            );
+        }
+    }
+
+    #[test]
+    fn alexnet_conv1_shape_is_canonical() {
+        let net = alexnet();
+        assert_eq!(net.layers[0].output.h, 55);
+        assert_eq!(net.layers[0].output.c, 96);
+    }
+
+    #[test]
+    fn googlenet_inception_3a_concats_to_256() {
+        let net = googlenet();
+        let cat = net
+            .layers
+            .iter()
+            .find(|l| l.name() == "i3a_pool" && !l.is_conv() && l.output.c == 256)
+            .expect("3a concat");
+        assert_eq!(cat.output.h, 28);
+    }
+
+    #[test]
+    fn vgg_activations_peak_early() {
+        // conv1_2 output (64×224×224) is VGG's biggest activation.
+        let net = vgg16();
+        let first = net.layers[1].output.numel();
+        for l in &net.layers[2..] {
+            assert!(l.output.numel() <= first);
+        }
+    }
+
+    #[test]
+    fn squeezenet_has_no_fc_and_tiny_weights() {
+        let net = squeezenet();
+        assert_eq!(net.fc_layers(), 0);
+        assert!(net.total_weights() < 2_000_000);
+    }
+
+    #[test]
+    fn resnet_downsamples_to_7x7() {
+        let net = resnet18();
+        let last_conv = net.layers.iter().rev().find(|l| l.is_conv()).unwrap();
+        assert_eq!(last_conv.output.h, 7);
+        assert_eq!(last_conv.output.c, 512);
+    }
+}

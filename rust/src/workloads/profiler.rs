@@ -1,0 +1,138 @@
+//! The profiling front-end — the nvprof stand-in the analyses consume.
+//!
+//! Enumerates the paper's workload suite (five DNNs × inference/training +
+//! three HPCG sizes, Fig 3's x-axis) and returns [`MemStats`] per workload
+//! at the paper's default batch sizes (4 for inference, 64 for training,
+//! §4.1).
+
+use super::hpcg::{hpcg_stats, HpcgSize};
+use super::memstats::{dnn_stats, MemStats, Phase};
+use super::nets;
+use crate::util::units::MB;
+
+/// Default inference batch size (paper §4.1).
+pub const BATCH_INFERENCE: u64 = 4;
+/// Default training batch size (paper §4.1).
+pub const BATCH_TRAINING: u64 = 64;
+/// The GTX 1080 Ti L2 capacity the profiling targets.
+pub const PROFILE_L2: u64 = 3 * MB;
+
+/// One workload in the paper's suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// DNN by suite index (Table 3 order) and phase.
+    Dnn { index: usize, phase: Phase },
+    Hpcg(HpcgSize),
+}
+
+/// A profiled workload: label + memory statistics.
+#[derive(Debug, Clone)]
+pub struct ProfiledWorkload {
+    pub workload: Workload,
+    pub label: String,
+    pub stats: MemStats,
+}
+
+/// Profile one workload at an explicit batch size and L2 capacity.
+pub fn profile(workload: Workload, batch: u64, l2_capacity: u64) -> ProfiledWorkload {
+    match workload {
+        Workload::Dnn { index, phase } => {
+            let net = &nets::all_networks()[index];
+            ProfiledWorkload {
+                workload,
+                label: format!("{}-{}", net.name, phase.suffix()),
+                stats: dnn_stats(net, phase, batch, l2_capacity),
+            }
+        }
+        Workload::Hpcg(size) => ProfiledWorkload {
+            workload,
+            label: size.name().to_string(),
+            stats: hpcg_stats(size, l2_capacity),
+        },
+    }
+}
+
+/// Profile one workload at the paper's default batch for its phase.
+pub fn profile_default(workload: Workload, l2_capacity: u64) -> ProfiledWorkload {
+    let batch = match workload {
+        Workload::Dnn { phase: Phase::Inference, .. } => BATCH_INFERENCE,
+        Workload::Dnn { phase: Phase::Training, .. } => BATCH_TRAINING,
+        Workload::Hpcg(_) => 1,
+    };
+    profile(workload, batch, l2_capacity)
+}
+
+/// The Fig 3 / Fig 4 suite in presentation order: each DNN as inference
+/// then training, then HPCG small→large.
+pub fn paper_suite() -> Vec<Workload> {
+    let mut out = Vec::new();
+    for index in 0..nets::all_networks().len() {
+        out.push(Workload::Dnn { index, phase: Phase::Inference });
+        out.push(Workload::Dnn { index, phase: Phase::Training });
+    }
+    for size in HpcgSize::ALL {
+        out.push(Workload::Hpcg(size));
+    }
+    out
+}
+
+/// Profile the whole suite at the default configuration.
+pub fn profile_suite(l2_capacity: u64) -> Vec<ProfiledWorkload> {
+    paper_suite()
+        .into_iter()
+        .map(|w| profile_default(w, l2_capacity))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_thirteen_workloads() {
+        // 5 DNNs × 2 phases + 3 HPCG sizes.
+        assert_eq!(paper_suite().len(), 13);
+    }
+
+    #[test]
+    fn labels_follow_the_paper_convention() {
+        let p = profile_suite(PROFILE_L2);
+        assert_eq!(p[0].label, "AlexNet-I");
+        assert_eq!(p[1].label, "AlexNet-T");
+        assert_eq!(p.last().unwrap().label, "HPCG-L");
+    }
+
+    #[test]
+    fn fig3_ratio_span_matches_the_paper() {
+        // "the ratio ... varies significantly from 2 to 26"
+        let ratios: Vec<f64> = profile_suite(PROFILE_L2)
+            .iter()
+            .map(|p| p.stats.rw_ratio())
+            .collect();
+        let min = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        assert!((1.2..3.5).contains(&min), "min ratio {min}");
+        assert!((18.0..30.0).contains(&max), "max ratio {max}");
+    }
+
+    #[test]
+    fn every_workload_reads_more_than_it_writes() {
+        // Read dominance is the paper's central profiling observation.
+        for p in profile_suite(PROFILE_L2) {
+            assert!(
+                p.stats.rw_ratio() > 1.0,
+                "{} ratio {}",
+                p.label,
+                p.stats.rw_ratio()
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_batch_overrides_default() {
+        let w = Workload::Dnn { index: 0, phase: Phase::Inference };
+        let b4 = profile(w, 4, PROFILE_L2);
+        let b64 = profile(w, 64, PROFILE_L2);
+        assert!(b64.stats.l2_writes > 8 * b4.stats.l2_writes);
+    }
+}

@@ -1,0 +1,46 @@
+//! Smoke-run every registered experiment: tables render, CSVs persist,
+//! and the headline strings carry paper-vs-measured comparisons.
+
+use deepnvm::coordinator::{run_one, RunnerConfig};
+use deepnvm::experiments::registry;
+
+#[test]
+fn every_registered_experiment_runs() {
+    let cfg = RunnerConfig {
+        results_dir: std::env::temp_dir().join("deepnvm_smoke_results"),
+        print_tables: false,
+    };
+    for exp in registry() {
+        let report = run_one(exp.id, &cfg).unwrap_or_else(|| panic!("{} missing", exp.id));
+        assert!(
+            !report.rendered_tables.is_empty(),
+            "{}: no tables rendered",
+            exp.id
+        );
+        for t in &report.rendered_tables {
+            assert!(t.lines().count() > 4, "{}: empty table", exp.id);
+        }
+        for f in &report.csv_files {
+            assert!(f.exists(), "{}: CSV {} not written", exp.id, f.display());
+            let body = std::fs::read_to_string(f).unwrap();
+            assert!(body.lines().count() > 1, "{}: empty CSV", exp.id);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&cfg.results_dir);
+}
+
+#[test]
+fn figure_experiments_carry_paper_comparisons() {
+    let cfg = RunnerConfig {
+        results_dir: std::env::temp_dir().join("deepnvm_smoke_headlines"),
+        print_tables: false,
+    };
+    for id in ["fig4", "fig5", "fig7", "fig9"] {
+        let report = run_one(id, &cfg).unwrap();
+        assert!(
+            report.headlines.iter().any(|h| h.contains("paper")),
+            "{id}: headline must reference the paper's value"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&cfg.results_dir);
+}

@@ -1,0 +1,95 @@
+//! Cross-module integration: the full Fig 2 pipeline, device → cache →
+//! workload → analysis, exercised end to end with consistency checks
+//! between layers.
+
+use deepnvm::analysis::evaluate;
+use deepnvm::analysis::isocapacity::iso_capacity;
+use deepnvm::device::bitcell::BitcellKind;
+use deepnvm::device::characterize::characterize;
+use deepnvm::gpusim::{capacity_sweep, dnn_trace};
+use deepnvm::nvsim::optimizer::{bitcell_for, tuned_cache};
+use deepnvm::util::units::MB;
+use deepnvm::workloads::memstats::{dnn_stats_model, Phase, TrafficModel};
+use deepnvm::workloads::nets;
+use deepnvm::workloads::profiler::{profile_suite, PROFILE_L2};
+
+#[test]
+fn pipeline_device_to_cache_is_consistent() {
+    // The bitcell the optimizer consumes must be the characterization's.
+    let [_, stt, _] = characterize();
+    let from_opt = bitcell_for(BitcellKind::SttMram);
+    assert_eq!(stt.write_fins, from_opt.write_fins);
+    assert!((stt.sense_latency - from_opt.sense_latency).abs() < 1e-15);
+
+    // And the tuned cache's write latency must embed the MTJ's.
+    let cache = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
+    assert!(cache.write_latency > stt.write_latency());
+}
+
+#[test]
+fn pipeline_workload_to_analysis_is_consistent() {
+    // Each workload's evaluation must scale linearly with its traffic.
+    let ppa = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
+    let suite = profile_suite(PROFILE_L2);
+    for p in &suite {
+        let e = evaluate(&ppa, &p.stats);
+        let mut double = p.stats;
+        double.l2_reads *= 2;
+        double.l2_writes *= 2;
+        double.dram_reads *= 2;
+        double.dram_writes *= 2;
+        let e2 = evaluate(&ppa, &double);
+        let ratio = e2.cache_energy() / e.cache_energy();
+        assert!((ratio - 2.0).abs() < 1e-9, "{}: {}", p.label, ratio);
+    }
+}
+
+#[test]
+fn analytic_and_trace_models_agree_on_direction() {
+    // The analytic spill model and the trace-driven simulator must agree
+    // that a larger L2 cuts AlexNet's DRAM traffic.
+    let net = nets::alexnet();
+    let a3 = dnn_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::CaffeIm2col);
+    let a24 = dnn_stats_model(&net, Phase::Inference, 4, 24 * MB, TrafficModel::CaffeIm2col);
+    assert!(a24.dram_reads < a3.dram_reads);
+
+    let trace = dnn_trace(&net, 4);
+    let sweep = capacity_sweep(&trace, &[24 * MB]);
+    assert!(sweep[1].result.dram_accesses() < sweep[0].result.dram_accesses());
+}
+
+#[test]
+fn fused_traffic_model_writes_less_than_caffe() {
+    // The Pallas (fused) path skips the materialized column buffer.
+    let net = nets::vgg16();
+    let caffe = dnn_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::CaffeIm2col);
+    let fused = dnn_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::FusedTiles);
+    assert!(fused.l2_writes < caffe.l2_writes / 2);
+    assert!(fused.l2_reads < caffe.l2_reads);
+}
+
+#[test]
+fn full_isocapacity_run_is_reproducible() {
+    let a = iso_capacity();
+    let b = iso_capacity();
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.label, rb.label);
+        assert!((ra.edp[0] - rb.edp[0]).abs() < 1e-12);
+        assert!((ra.edp[1] - rb.edp[1]).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn headline_ordering_holds_everywhere() {
+    // SOT beats STT on energy in every workload at both capacity points —
+    // the paper's most robust qualitative claim.
+    for row in iso_capacity() {
+        assert!(
+            row.energy[1] <= row.energy[0] * 1.001,
+            "{}: SOT {} vs STT {}",
+            row.label,
+            row.energy[1],
+            row.energy[0]
+        );
+    }
+}

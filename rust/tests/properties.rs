@@ -1,0 +1,180 @@
+//! Property-based tests on cross-cutting invariants, using the in-repo
+//! `forall` harness (seeded, reproducible).
+
+use deepnvm::device::circuit::{pulse_to_failure, simulate_write};
+use deepnvm::device::finfet::{Corner, FinFet};
+use deepnvm::device::mtj::{Mtj, WriteDir};
+use deepnvm::gpusim::cache::{Cache, Outcome};
+use deepnvm::nvsim::geometry::enumerate;
+use deepnvm::util::check::{forall, forall_explain};
+use deepnvm::util::rng::Rng;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::memstats::{dnn_stats, Phase};
+use deepnvm::workloads::nets;
+
+/// LRU inclusion (stack) property: with sets fixed, doubling associativity
+/// never turns a hit into a miss over any access sequence.
+#[test]
+fn lru_associativity_stack_property() {
+    forall_explain(
+        0xCAFE,
+        40,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(200, 1200);
+            (0..n)
+                .map(|_| (rng.gen_range(256) * 128, rng.chance(0.3)))
+                .collect::<Vec<(u64, bool)>>()
+        },
+        |seq| {
+            // 64 sets of 64B lines; 2-way (8KB) vs 4-way (16KB).
+            let mut small = Cache::new(64 * 2 * 64, 64, 2);
+            let mut big = Cache::new(64 * 4 * 64, 64, 4);
+            for &(addr, write) in seq {
+                let s = small.access(addr, write);
+                let b = big.access(addr, write);
+                if s == Outcome::Hit && b != Outcome::Hit {
+                    return Err(format!("inclusion violated at {addr:#x}"));
+                }
+            }
+            if big.hits < small.hits {
+                return Err(format!("bigger cache hit less: {} < {}", big.hits, small.hits));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cache accounting: hits + misses == accesses, writebacks ≤ misses.
+#[test]
+fn cache_counter_accounting() {
+    forall(
+        7,
+        50,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(100, 2000);
+            (0..n)
+                .map(|_| (rng.gen_range(4096) * 128, rng.chance(0.5)))
+                .collect::<Vec<(u64, bool)>>()
+        },
+        |seq| {
+            let mut c = Cache::new(32 * 1024, 128, 8);
+            for &(a, w) in seq {
+                c.access(a, w);
+            }
+            c.hits + c.misses == seq.len() as u64 && c.writebacks <= c.misses
+        },
+    );
+}
+
+/// Every enumerated cache organization conserves capacity and line
+/// deliverability, for arbitrary power-of-two-ish capacities.
+#[test]
+fn organization_enumeration_invariants() {
+    forall_explain(
+        11,
+        30,
+        |rng: &mut Rng| *rng.pick(&[1u64, 2, 3, 4, 5, 6, 7, 8, 10, 12, 16, 24, 32]),
+        |&cap_mb| {
+            let orgs = enumerate(cap_mb * MB);
+            if orgs.is_empty() {
+                return Err(format!("no orgs for {cap_mb}MB"));
+            }
+            for o in orgs {
+                if o.data_bits() != cap_mb * MB * 8 {
+                    return Err(format!("capacity leak in {o:?}"));
+                }
+                if !o.valid_for_line() {
+                    return Err(format!("line-invalid org {o:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Traffic monotonicity: more batch → more traffic, bigger L2 → no more
+/// DRAM traffic, training ⊇ inference. Holds for every network.
+#[test]
+fn memstats_monotonicity() {
+    let networks = nets::all_networks();
+    forall_explain(
+        23,
+        30,
+        |rng: &mut Rng| {
+            (
+                rng.usize_in(0, networks.len()),
+                1u64 << rng.usize_in(0, 6),
+                *rng.pick(&[2u64, 3, 6, 12, 24]),
+            )
+        },
+        |&(idx, batch, l2_mb)| {
+            let net = &networks[idx];
+            for phase in [Phase::Inference, Phase::Training] {
+                let s = dnn_stats(net, phase, batch, l2_mb * MB);
+                let s2 = dnn_stats(net, phase, batch * 2, l2_mb * MB);
+                if s2.l2_reads <= s.l2_reads {
+                    return Err(format!("{}: batch↑ traffic↓ {phase:?}", net.name));
+                }
+                let sbig = dnn_stats(net, phase, batch, 2 * l2_mb * MB);
+                if sbig.dram_reads > s.dram_reads {
+                    return Err(format!("{}: L2↑ dram↑ {phase:?}", net.name));
+                }
+            }
+            let inf = dnn_stats(net, Phase::Inference, batch, l2_mb * MB);
+            let tr = dnn_stats(net, Phase::Training, batch, l2_mb * MB);
+            if tr.l2_reads < inf.l2_reads || tr.l2_writes < inf.l2_writes {
+                return Err(format!("{}: training under inference", net.name));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pulse-to-failure minimality: the bisected pulse switches, a 5% shorter
+/// pulse does not, and the pulse shrinks monotonically with drive.
+#[test]
+fn pulse_bisection_minimality() {
+    forall_explain(
+        31,
+        12,
+        |rng: &mut Rng| (rng.usize_in(4, 7) as u32, rng.chance(0.5)),
+        |&(fins, is_set)| {
+            let mtj = Mtj::stt();
+            let dir = if is_set { WriteDir::Set } else { WriteDir::Reset };
+            let acc = FinFet::nmos(fins, Corner::WorstDelay);
+            let Some(p) = pulse_to_failure(&acc, &mtj, dir, 1e-12, 100e-9, 1.0) else {
+                return Ok(()); // undriveable point: vacuously fine
+            };
+            if !simulate_write(&acc, &mtj, dir, p, 1.0).switched {
+                return Err("bisected pulse does not switch".into());
+            }
+            if simulate_write(&acc, &mtj, dir, p * 0.95, 1.0).switched {
+                return Err("0.95x pulse still switches — not minimal".into());
+            }
+            if fins < 6 {
+                let stronger = FinFet::nmos(fins + 1, Corner::WorstDelay);
+                if let Some(p2) = pulse_to_failure(&stronger, &mtj, dir, 1e-12, 100e-9, 1.0) {
+                    if p2 > p * 1.001 {
+                        return Err(format!("more drive, longer pulse: {p2} > {p}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The deterministic PRNG streams are stable across struct clones.
+#[test]
+fn rng_clone_stream_stability() {
+    forall(
+        99,
+        100,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut a = Rng::new(seed);
+            let mut b = a.clone();
+            (0..10).all(|_| a.next_u64() == b.next_u64())
+        },
+    );
+}

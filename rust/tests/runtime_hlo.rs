@@ -1,0 +1,147 @@
+//! PJRT runtime tests against the AOT artifacts (`make artifacts` first;
+//! tests self-skip when artifacts are absent so `cargo test` works in a
+//! fresh checkout).
+
+use deepnvm::runtime::{Runtime, TensorF32};
+use deepnvm::util::rng::Rng;
+
+fn artifact(name: &str) -> Option<String> {
+    let path = format!("artifacts/{name}.hlo.txt");
+    std::path::Path::new(&path).exists().then_some(path)
+}
+
+#[test]
+fn kernel_matmul_matches_host_reference() {
+    let Some(path) = artifact("kernel_matmul") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+    // aot.py KERNEL_DIMS = (256, 512, 192).
+    let (m, k, n) = (256usize, 512usize, 192usize);
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let y: Vec<f32> = (0..k * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let out = exe
+        .run(&[
+            TensorF32::new(vec![m as i64, k as i64], x.clone()),
+            TensorF32::new(vec![k as i64, n as i64], y.clone()),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![m as i64, n as i64]);
+    // Host-side reference on a sampled set of entries.
+    let mut idx_rng = Rng::new(17);
+    for _ in 0..64 {
+        let i = idx_rng.usize_in(0, m);
+        let j = idx_rng.usize_in(0, n);
+        let want: f32 = (0..k).map(|kk| x[i * k + kk] * y[kk * n + j]).sum();
+        let got = out[0].data[i * n + j];
+        assert!(
+            (got - want).abs() < 1e-3 * want.abs().max(1.0),
+            "({i},{j}): {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn cnn_infer_produces_finite_logits() {
+    let Some(path) = artifact("cnn_infer") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+    let params = vec![
+        TensorF32::zeros(vec![3, 3, 1, 8]),
+        TensorF32::zeros(vec![8]),
+        TensorF32::zeros(vec![3, 3, 8, 16]),
+        TensorF32::zeros(vec![16]),
+        TensorF32::zeros(vec![6 * 6 * 16, 10]),
+        TensorF32::zeros(vec![10]),
+    ];
+    let mut inputs = params;
+    inputs.push(TensorF32::zeros(vec![32, 16, 16, 1]));
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![32, 10]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+    // All-zero params → uniform logits.
+    assert!(out[0].data.iter().all(|v| v.abs() < 1e-6));
+}
+
+#[test]
+fn cnn_train_step_reduces_loss_from_cold_start() {
+    let Some(path) = artifact("cnn_train") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&path).unwrap();
+    let mut rng = Rng::new(3);
+    let mut init = |dims: Vec<i64>| {
+        let numel: i64 = dims.iter().product();
+        let data = (0..numel).map(|_| rng.f64_in(-0.5, 0.5) as f32).collect();
+        TensorF32::new(dims, data)
+    };
+    let mut params = vec![
+        init(vec![3, 3, 1, 8]),
+        TensorF32::zeros(vec![8]),
+        init(vec![3, 3, 8, 16]),
+        TensorF32::zeros(vec![16]),
+        init(vec![6 * 6 * 16, 10]),
+        TensorF32::zeros(vec![10]),
+    ];
+    // One fixed, separable batch: class k lights a class-specific column
+    // band — memorizable in a handful of SGD steps.
+    let x = {
+        let mut data = vec![0.0f32; 32 * 16 * 16];
+        for b in 0..32usize {
+            let class = b % 10;
+            for r in 0..16 {
+                data[b * 256 + r * 16 + class] = 1.0;
+            }
+            for p in 0..256 {
+                data[b * 256 + p] += rng.f64_in(0.0, 0.05) as f32;
+            }
+        }
+        TensorF32::new(vec![32, 16, 16, 1], data)
+    };
+    let y = {
+        let mut data = vec![0.0f32; 32 * 10];
+        for b in 0..32 {
+            data[b * 10 + b % 10] = 1.0;
+        }
+        TensorF32::new(vec![32, 10], data)
+    };
+    let mut losses = Vec::new();
+    for _ in 0..25 {
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        let out = exe.run(&inputs).unwrap();
+        losses.push(out.last().unwrap().data[0]);
+        params = out[..out.len() - 1].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "loss must fall on a fixed batch: {losses:?}"
+    );
+}
+
+#[test]
+fn runtime_memoizes_compiled_artifacts() {
+    let Some(path) = artifact("kernel_matmul") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let t0 = std::time::Instant::now();
+    let _a = rt.load(&path).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _b = rt.load(&path).unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 5, "cache hit must skip compilation: {first:?} vs {second:?}");
+}

@@ -2,12 +2,18 @@
 //!
 //! Covers the pipeline's measured bottlenecks:
 //!   * gpusim cache access loop (dominates Fig 7 / the e2e trace replay)
+//!   * the Fig 7 capacity sweep, both ways: the seed's replay-per-capacity
+//!     loop and the single-pass stack-distance sweep that replaced it
+//!     (the before/after pair for EXPERIMENTS.md §Perf)
+//!   * streaming trace generation
 //!   * NVSim exhaustive EDAP tuning of one (tech, capacity) point
 //!   * device-level transient characterization
 //!   * workload memstats derivation
 //!   * analysis roll-up over the 13-workload suite
 //!
-//! Results feed EXPERIMENTS.md §Perf (before/after table).
+//! Results print to stdout and are also written as machine-readable JSON
+//! (name → seconds/iter) to `BENCH_hotpath.json` (override the path with
+//! `DEEPNVM_BENCH_JSON`), so the perf trajectory is recorded per run.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -16,43 +22,73 @@ use deepnvm::analysis::evaluate;
 use deepnvm::device::bitcell::BitcellKind;
 use deepnvm::device::characterize::characterize_kind;
 use deepnvm::gpusim::cache::Cache;
-use deepnvm::gpusim::{dnn_trace, simulate, GpuConfig};
+use deepnvm::gpusim::{
+    capacity_sweep, dnn_trace, fig7_capacities, simulate, Access, GpuConfig,
+};
 use deepnvm::nvsim::optimizer::{explore, tuned_cache};
+use deepnvm::util::pool::par_map;
 use deepnvm::util::rng::Rng;
 use deepnvm::util::units::MB;
 use deepnvm::workloads::memstats::{dnn_stats, Phase};
 use deepnvm::workloads::nets;
 use deepnvm::workloads::profiler::{profile_suite, PROFILE_L2};
 
-fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) {
-    // Warmup.
-    f();
-    let t0 = Instant::now();
-    for _ in 0..iters {
+struct Harness {
+    records: Vec<(String, f64)>,
+}
+
+impl Harness {
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: u32, mut f: F) -> f64 {
+        // Warmup.
         f();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        let unit = if per >= 1.0 {
+            format!("{per:.2} s")
+        } else if per >= 1e-3 {
+            format!("{:.2} ms", per * 1e3)
+        } else if per >= 1e-6 {
+            format!("{:.2} µs", per * 1e6)
+        } else {
+            format!("{:.0} ns", per * 1e9)
+        };
+        println!("{name:<52} {unit:>12}/iter  ({iters} iters)");
+        self.records.push((name.to_string(), per));
+        per
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
-    let unit = if per >= 1.0 {
-        format!("{per:.2} s")
-    } else if per >= 1e-3 {
-        format!("{:.2} ms", per * 1e3)
-    } else if per >= 1e-6 {
-        format!("{:.2} µs", per * 1e6)
-    } else {
-        format!("{:.0} ns", per * 1e9)
-    };
-    println!("{name:<44} {unit:>12}/iter  ({iters} iters)");
+
+    /// Write `BENCH_hotpath.json`: flat name → seconds/iter map.
+    fn write_json(&self) {
+        let path =
+            std::env::var("DEEPNVM_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+        let mut s = String::from("{\n");
+        for (i, (name, secs)) in self.records.iter().enumerate() {
+            let comma = if i + 1 < self.records.len() { "," } else { "" };
+            s.push_str(&format!("  \"{name}\": {secs:.9}{comma}\n"));
+        }
+        s.push_str("}\n");
+        match std::fs::write(&path, s) {
+            Ok(()) => println!("\nrecorded {} entries to {path}", self.records.len()),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
     println!("== hot-path microbenchmarks ==");
+    let mut h = Harness {
+        records: Vec::new(),
+    };
 
     // Synthetic random access stream for the raw cache loop.
     let mut rng = Rng::new(1);
     let stream: Vec<(u64, bool)> = (0..1_000_000)
         .map(|_| (rng.gen_range(1 << 20) * 128, rng.chance(0.3)))
         .collect();
-    bench("gpusim: cache access loop (1M accesses)", 10, || {
+    h.bench("gpusim: cache access loop (1M accesses)", 10, || {
         let mut c = Cache::new(3 * MB, 128, 16);
         for &(a, w) in &stream {
             black_box(c.access(a, w));
@@ -60,29 +96,69 @@ fn main() {
         black_box(c.hits);
     });
 
-    let trace = dnn_trace(&nets::alexnet(), 4);
-    println!("alexnet batch-4 trace: {} accesses", trace.len());
-    bench("gpusim: AlexNet trace through 3MB L2", 3, || {
-        black_box(simulate(&trace, &GpuConfig::gtx_1080_ti()));
+    h.bench("gpusim: trace generation (AlexNet b4, streamed)", 5, || {
+        black_box(dnn_trace(&nets::alexnet(), 4).count());
     });
 
-    bench("nvsim: EDAP explore SOT 3MB (full grid)", 5, || {
+    let trace: Vec<Access> = dnn_trace(&nets::alexnet(), 4).collect();
+    println!("alexnet batch-4 trace: {} accesses", trace.len());
+    h.bench("gpusim: AlexNet trace through 3MB L2", 3, || {
+        black_box(simulate(trace.iter().copied(), &GpuConfig::gtx_1080_ti()));
+    });
+
+    // The Fig 7 before/after set. The seed algorithm replayed the
+    // materialized trace once per swept capacity; its wall-clock shape
+    // par_map'd the six replays across cores, so both baselines are
+    // recorded: serial replay measures algorithmic work, par_map replay
+    // measures what the seed actually cost on this machine. "single-pass"
+    // is the stack-distance sweep: one (serial) traversal resolves all six
+    // capacities, optionally fused with streaming generation (no
+    // materialized trace at all).
+    let base = GpuConfig::gtx_1080_ti();
+    let mut caps = vec![3 * MB];
+    caps.extend(fig7_capacities());
+    let replay_serial = h.bench("gpusim: Fig7 sweep, replay-per-capacity serial", 3, || {
+        for &cap in &caps {
+            black_box(simulate(trace.iter().copied(), &base.clone().with_l2(cap)));
+        }
+    });
+    let replay_par = h.bench("gpusim: Fig7 sweep, replay-per-capacity par_map (seed)", 3, || {
+        black_box(par_map(&caps, |&cap| {
+            simulate(trace.iter().copied(), &base.clone().with_l2(cap))
+        }));
+    });
+    let sweep_per = h.bench("gpusim: Fig7 sweep, single-pass stack-distance", 3, || {
+        black_box(capacity_sweep(trace.iter().copied(), &fig7_capacities()));
+    });
+    let fused_per = h.bench("gpusim: Fig7 sweep, streamed gen + single pass", 3, || {
+        black_box(capacity_sweep(dnn_trace(&nets::alexnet(), 4), &fig7_capacities()));
+    });
+    println!(
+        "  -> single-pass speedup: {:.2}x vs serial replay, {:.2}x vs par_map replay (seed wall-clock); fused gen+sweep {:.2}x vs serial replay",
+        replay_serial / sweep_per,
+        replay_par / sweep_per,
+        replay_serial / fused_per
+    );
+
+    h.bench("nvsim: EDAP explore SOT 3MB (full grid)", 5, || {
         black_box(explore(BitcellKind::SotMram, 3 * MB));
     });
 
-    bench("device: STT full characterization sweep", 3, || {
+    h.bench("device: STT full characterization sweep", 3, || {
         black_box(characterize_kind(BitcellKind::SttMram));
     });
 
-    bench("workloads: VGG-16 training memstats", 50, || {
+    h.bench("workloads: VGG-16 training memstats", 50, || {
         black_box(dnn_stats(&nets::vgg16(), Phase::Training, 64, 3 * MB));
     });
 
     let ppa = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
     let suite = profile_suite(PROFILE_L2);
-    bench("analysis: evaluate 13-workload suite", 200, || {
+    h.bench("analysis: evaluate 13-workload suite", 200, || {
         for p in &suite {
             black_box(evaluate(&ppa, &p.stats));
         }
     });
+
+    h.write_json();
 }

@@ -83,7 +83,7 @@ fn synth_batch(rng: &mut Rng) -> (TensorF32, TensorF32) {
     )
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> deepnvm::Result<()> {
     // --- Layer check: artifacts present? ---
     let artifact = "artifacts/cnn_train.hlo.txt";
     if !std::path::Path::new(artifact).exists() {
@@ -143,9 +143,9 @@ fn main() -> anyhow::Result<()> {
         stats.rw_ratio()
     );
 
-    // GPGPU-Sim substitute on the same network.
-    let trace = dnn_trace(&cnn, BATCH as u64);
-    let sweep = capacity_sweep(&trace, &[7 * MB, 10 * MB]);
+    // GPGPU-Sim substitute on the same network: the whole capacity sweep
+    // is one pass over the streamed trace.
+    let sweep = capacity_sweep(dnn_trace(&cnn, BATCH as u64), &[7 * MB, 10 * MB]);
     for p in &sweep[1..] {
         println!(
             "  L2 {}MB: DRAM accesses {} ({:+.1}% vs 3MB)",

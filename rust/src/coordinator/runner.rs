@@ -39,6 +39,15 @@ pub struct RunReport {
 }
 
 fn persist(output: &Output, id: &str, cfg: &RunnerConfig) -> Vec<PathBuf> {
+    // Create the results directory up front: on a fresh checkout the first
+    // `repro all` must not emit a warning per CSV before `write_manifest`
+    // (which runs last) creates it.
+    if let Err(e) = fs::create_dir_all(&cfg.results_dir) {
+        eprintln!(
+            "warning: could not create {}: {e}",
+            cfg.results_dir.display()
+        );
+    }
     let mut files = Vec::new();
     for (name, csv) in &output.csvs {
         let path = cfg.results_dir.join(format!("{name}.csv"));

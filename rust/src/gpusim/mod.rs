@@ -8,9 +8,11 @@
 //!
 //! * [`config`] — the Table 4 GPU configuration.
 //! * [`cache`] — a set-associative write-back cache with true LRU.
-//! * [`trace`] — address-trace generation from the DNN layer descriptors
-//!   (im2col + tiled sgemm, Caffe/DarkNet-style).
-//! * [`sim`] — the simulation loop and the Fig 7 capacity sweep.
+//! * [`trace`] — streaming address-trace generation from the DNN layer
+//!   descriptors (im2col + tiled sgemm, Caffe/DarkNet-style): an
+//!   `Iterator<Item = Access>`, never a materialized trace.
+//! * [`sim`] — the simulation loop and the Fig 7 capacity sweep, run as a
+//!   single-pass multi-capacity (Mattson stack-distance) simulation.
 
 pub mod cache;
 pub mod config;
@@ -19,5 +21,5 @@ pub mod trace;
 
 pub use cache::{Cache, Outcome};
 pub use config::GpuConfig;
-pub use sim::{capacity_sweep, fig7_capacities, simulate, SimResult, SweepPoint};
-pub use trace::{dnn_trace, Access};
+pub use sim::{capacity_sweep, fig7_capacities, simulate, CapacitySweepSim, SimResult, SweepPoint};
+pub use trace::{dnn_trace, Access, TraceGen};

@@ -1,9 +1,28 @@
 //! The trace-driven simulation loop and the Fig 7 capacity sweep.
+//!
+//! The sweep is a **single-pass multi-capacity** simulation: one traversal
+//! of the (streamed) trace computes exact hits/misses/writebacks for every
+//! capacity at once via per-set LRU recency stacks (Mattson's stack
+//! algorithm generalized to set-associative caches). All swept capacities
+//! share the L2 line size and associativity, so each capacity only changes
+//! the set count; capacities whose set counts are integer multiples of a
+//! common base share one stack walk — a line's LRU stack distance within a
+//! member's set is the number of more-recently-touched distinct lines of
+//! the same residue class, and the access hits iff that distance is below
+//! the associativity. Capacities with incommensurate set counts (7 MB and
+//! 10 MB in the Fig 7 sweep) fall back to a plain set-associative model,
+//! still fed by the same single trace traversal.
+//!
+//! Versus the old replay-per-capacity loop this turns O(trace × capacities)
+//! work + O(trace) memory into one O(trace) pass + O(working set) memory,
+//! and lets trace generation fuse with simulation (no materialized
+//! `Vec<Access>`).
+
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use super::cache::Cache;
 use super::config::GpuConfig;
 use super::trace::Access;
-use crate::util::pool::par_map;
 use crate::util::units::MB;
 
 /// Result of running one trace through one cache configuration.
@@ -30,7 +49,7 @@ impl SimResult {
 }
 
 /// Run `trace` through the shared L2 of `config`.
-pub fn simulate(trace: &[Access], config: &GpuConfig) -> SimResult {
+pub fn simulate(trace: impl IntoIterator<Item = Access>, config: &GpuConfig) -> SimResult {
     let mut l2 = Cache::new(config.l2_bytes, config.l2_line, config.l2_assoc);
     for a in trace {
         l2.access(a.addr, a.write);
@@ -44,6 +63,355 @@ pub fn simulate(trace: &[Access], config: &GpuConfig) -> SimResult {
     }
 }
 
+/// One resident-or-remembered line in a per-set recency stack.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// Full line address (identity).
+    line: u64,
+    /// `line / base_sets` — the part of the address that distinguishes the
+    /// member set within the base set (residue classes of `q mod ratio`).
+    q: u64,
+    /// Dirty bit per chain member (bit k = member k's current residency).
+    dirty: u32,
+}
+
+/// One capacity within a stack chain.
+#[derive(Debug, Clone)]
+struct Member {
+    cap: u64,
+    /// This member's set count divided by the chain's base set count.
+    ratio: u64,
+    /// `ratio - 1` when `ratio` is a power of two (XOR/AND class test).
+    mask: u64,
+    pow2: bool,
+    hits: u64,
+    misses: u64,
+    writebacks: u64,
+}
+
+/// Capacities whose set counts are integer multiples of a common base,
+/// resolved together by one recency-stack walk per access.
+#[derive(Debug)]
+struct StackChain {
+    base_sets: u64,
+    assoc: u32,
+    members: Vec<Member>,
+    /// One MRU-first recency stack per base set.
+    stacks: Vec<VecDeque<Entry>>,
+    /// Lines currently held in some stack (gates the stale-duplicate scan).
+    present: HashSet<u64>,
+    /// Stack length that triggers a dead-entry prune (2× the resident
+    /// bound `assoc · Σ ratio`, so pruning amortizes to O(1) per access).
+    prune_limit: usize,
+    /// Scratch: per-member match count for the current walk.
+    counts: Vec<u32>,
+    /// Scratch: per-member residue of the current line (`q mod ratio`).
+    residue: Vec<u64>,
+}
+
+impl StackChain {
+    fn new(base_sets: u64, line: u64, assoc: u64, caps: &[u64]) -> StackChain {
+        assert!(
+            caps.len() <= 31,
+            "stack chain dirty mask holds at most 31 members"
+        );
+        let members: Vec<Member> = caps
+            .iter()
+            .map(|&cap| {
+                let sets = (cap / line) / assoc;
+                assert!(sets % base_sets == 0 && sets >= base_sets, "not a chain member");
+                let ratio = sets / base_sets;
+                Member {
+                    cap,
+                    ratio,
+                    mask: ratio - 1,
+                    pow2: ratio.is_power_of_two(),
+                    hits: 0,
+                    misses: 0,
+                    writebacks: 0,
+                }
+            })
+            .collect();
+        let resident_bound: usize =
+            assoc as usize * members.iter().map(|m| m.ratio as usize).sum::<usize>();
+        StackChain {
+            base_sets,
+            assoc: assoc as u32,
+            stacks: vec![VecDeque::new(); base_sets as usize],
+            present: HashSet::new(),
+            prune_limit: 2 * resident_bound + 8,
+            counts: vec![0; members.len()],
+            residue: vec![0; members.len()],
+            members,
+        }
+    }
+
+    /// One access to `line` (a line address, not a byte address).
+    ///
+    /// Walks the line's base-set recency stack front-to-back. For member k
+    /// the access hits iff fewer than `assoc` distinct lines of the same
+    /// `q mod ratio_k` class sit above the line; the `assoc`-th such line
+    /// encountered is exactly the LRU way this access would evict on a
+    /// miss, which is where writebacks (dirty evictions) are charged. The
+    /// walk stops as soon as the line is found (remaining members hit) or
+    /// every member has resolved to a miss.
+    fn access(&mut self, line: u64, write: bool) {
+        let assoc = self.assoc;
+        let s0 = (line % self.base_sets) as usize;
+        let q = line / self.base_sets;
+        let nm = self.members.len();
+        let all_mask: u32 = (1u32 << nm) - 1;
+        for (k, m) in self.members.iter().enumerate() {
+            self.counts[k] = 0;
+            self.residue[k] = if m.pow2 { 0 } else { q % m.ratio };
+        }
+        let stack = &mut self.stacks[s0];
+
+        let mut missed: u32 = 0;
+        let mut found: Option<usize> = None;
+        let mut i = 0usize;
+        while i < stack.len() {
+            if stack[i].line == line {
+                found = Some(i);
+                break;
+            }
+            let eq = stack[i].q;
+            let mut newly_missed = 0u32;
+            for (k, m) in self.members.iter_mut().enumerate() {
+                let bit = 1u32 << k;
+                if missed & bit != 0 {
+                    continue;
+                }
+                let same_set = if m.pow2 {
+                    (eq ^ q) & m.mask == 0
+                } else {
+                    eq % m.ratio == self.residue[k]
+                };
+                if same_set {
+                    self.counts[k] += 1;
+                    if self.counts[k] == assoc {
+                        // `assoc` set-mates are more recent: member k
+                        // misses, and this entry is the LRU way it evicts.
+                        m.misses += 1;
+                        if stack[i].dirty & bit != 0 {
+                            m.writebacks += 1;
+                        }
+                        newly_missed |= bit;
+                    }
+                }
+            }
+            if newly_missed != 0 {
+                // Evicted residencies end here; clear so a later re-fetch
+                // starts clean.
+                stack[i].dirty &= !newly_missed;
+                missed |= newly_missed;
+                if missed == all_mask {
+                    // Every member misses. If a stale copy of `line` sits
+                    // deeper (evicted everywhere, not yet pruned), drop it
+                    // so entries stay unique.
+                    if self.present.contains(&line) {
+                        if let Some(off) =
+                            stack.iter().skip(i + 1).position(|e| e.line == line)
+                        {
+                            stack.remove(i + 1 + off);
+                        }
+                    }
+                    break;
+                }
+            }
+            i += 1;
+        }
+
+        match found {
+            Some(pos) => {
+                let mut e = stack.remove(pos).expect("indexed within bounds");
+                for (k, m) in self.members.iter_mut().enumerate() {
+                    let bit = 1u32 << k;
+                    if missed & bit != 0 {
+                        // Miss already charged (victim observed above);
+                        // this access starts a fresh residency.
+                        if write {
+                            e.dirty |= bit;
+                        } else {
+                            e.dirty &= !bit;
+                        }
+                    } else {
+                        m.hits += 1;
+                        if write {
+                            e.dirty |= bit;
+                        }
+                    }
+                }
+                stack.push_front(e);
+            }
+            None => {
+                for (k, m) in self.members.iter_mut().enumerate() {
+                    if missed & (1u32 << k) == 0 {
+                        // Fewer than `assoc` set-mates above: the member
+                        // set still has a free way — miss, no eviction.
+                        m.misses += 1;
+                    }
+                }
+                let dirty = if write { all_mask } else { 0 };
+                stack.push_front(Entry { line, q, dirty });
+                self.present.insert(line);
+                if stack.len() > self.prune_limit {
+                    Self::prune(stack, &self.members, assoc, &mut self.present);
+                }
+            }
+        }
+    }
+
+    /// Drop entries that are resident in no member (for every member,
+    /// `assoc` or more same-class lines are more recent). Such entries can
+    /// never be re-promoted without a fresh miss, and removing them never
+    /// changes an outcome: any line below them already saturates the same
+    /// `>= assoc` distance test through the entries that killed them.
+    fn prune(
+        stack: &mut VecDeque<Entry>,
+        members: &[Member],
+        assoc: u32,
+        present: &mut HashSet<u64>,
+    ) {
+        let class_offsets: Vec<usize> = members
+            .iter()
+            .scan(0usize, |acc, m| {
+                let off = *acc;
+                *acc += m.ratio as usize;
+                Some(off)
+            })
+            .collect();
+        let total_classes: usize = members.iter().map(|m| m.ratio as usize).sum();
+        let mut seen = vec![0u32; total_classes];
+        stack.retain(|e| {
+            let mut live = false;
+            for (k, m) in members.iter().enumerate() {
+                let class = class_offsets[k] + (e.q % m.ratio) as usize;
+                if seen[class] < assoc {
+                    live = true;
+                }
+                seen[class] += 1;
+            }
+            if !live {
+                present.remove(&e.line);
+            }
+            live
+        });
+    }
+}
+
+/// One simulated capacity: either a member of a shared stack chain or a
+/// standalone set-associative model (set count incommensurate with every
+/// chain base).
+#[derive(Debug)]
+enum Chain {
+    Single { cap: u64, cache: Cache },
+    Stacked(StackChain),
+}
+
+/// Exact single-pass simulator for several L2 capacities sharing one line
+/// size and associativity. Feed it each access once; [`finish`] returns
+/// one [`SimResult`] per requested capacity, bit-identical to running
+/// [`simulate`] separately at that capacity.
+///
+/// [`finish`]: CapacitySweepSim::finish
+#[derive(Debug)]
+pub struct CapacitySweepSim {
+    line: u64,
+    /// Capacities in caller order (duplicates allowed).
+    caps: Vec<u64>,
+    chains: Vec<Chain>,
+    accesses: u64,
+}
+
+impl CapacitySweepSim {
+    pub fn new(line: u64, assoc: u64, capacities: &[u64]) -> CapacitySweepSim {
+        assert!(line > 0 && assoc > 0, "degenerate cache geometry");
+        let mut uniq: Vec<u64> = capacities.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        // Group ascending by set-count divisibility: the first (smallest)
+        // capacity of each group is the chain base.
+        let mut groups: Vec<(u64, Vec<u64>)> = Vec::new();
+        for &cap in &uniq {
+            let sets = (cap / line) / assoc;
+            assert!(sets >= 1, "capacity {cap} below one set");
+            match groups.iter_mut().find(|(base, _)| sets % *base == 0) {
+                Some((_, caps)) => caps.push(cap),
+                None => groups.push((sets, vec![cap])),
+            }
+        }
+        let chains = groups
+            .into_iter()
+            .map(|(base_sets, caps)| {
+                if caps.len() == 1 {
+                    Chain::Single {
+                        cap: caps[0],
+                        cache: Cache::new(caps[0], line, assoc),
+                    }
+                } else {
+                    Chain::Stacked(StackChain::new(base_sets, line, assoc, &caps))
+                }
+            })
+            .collect();
+        CapacitySweepSim {
+            line,
+            caps: capacities.to_vec(),
+            chains,
+            accesses: 0,
+        }
+    }
+
+    /// Simulate one access (byte address) against every capacity.
+    pub fn access(&mut self, addr: u64, write: bool) {
+        let line_addr = addr / self.line;
+        for chain in &mut self.chains {
+            match chain {
+                Chain::Single { cache, .. } => {
+                    cache.access(addr, write);
+                }
+                Chain::Stacked(sc) => sc.access(line_addr, write),
+            }
+        }
+        self.accesses += 1;
+    }
+
+    /// Per-capacity results, aligned with the `capacities` given to `new`.
+    pub fn finish(self) -> Vec<SimResult> {
+        let CapacitySweepSim {
+            caps,
+            chains,
+            accesses,
+            ..
+        } = self;
+        let mut per_cap: HashMap<u64, (u64, u64, u64)> = HashMap::new();
+        for chain in chains {
+            match chain {
+                Chain::Single { cap, cache } => {
+                    per_cap.insert(cap, (cache.hits, cache.misses, cache.writebacks));
+                }
+                Chain::Stacked(sc) => {
+                    for m in sc.members {
+                        per_cap.insert(m.cap, (m.hits, m.misses, m.writebacks));
+                    }
+                }
+            }
+        }
+        caps.iter()
+            .map(|&cap| {
+                let (l2_hits, l2_misses, writebacks) = per_cap[&cap];
+                SimResult {
+                    l2_bytes: cap,
+                    l2_accesses: accesses,
+                    l2_hits,
+                    l2_misses,
+                    writebacks,
+                }
+            })
+            .collect()
+    }
+}
+
 /// One point of the Fig 7 sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct SweepPoint {
@@ -54,15 +422,21 @@ pub struct SweepPoint {
 
 /// The Fig 7 experiment: run the trace at the baseline 3MB plus the given
 /// capacities and report the percentage DRAM-access reduction of each.
-/// Capacities are simulated in parallel (the trace is shared read-only).
-pub fn capacity_sweep(trace: &[Access], capacities: &[u64]) -> Vec<SweepPoint> {
+/// The whole sweep is one pass over the trace (which may be a streaming
+/// [`TraceGen`](super::trace::TraceGen) — nothing is materialized).
+pub fn capacity_sweep(
+    trace: impl IntoIterator<Item = Access>,
+    capacities: &[u64],
+) -> Vec<SweepPoint> {
     let base_cfg = GpuConfig::gtx_1080_ti();
     let mut caps: Vec<u64> = Vec::with_capacity(capacities.len() + 1);
-    caps.push(3 * MB);
+    caps.push(base_cfg.l2_bytes);
     caps.extend_from_slice(capacities);
-    let results = par_map(&caps, |&cap| {
-        simulate(trace, &base_cfg.clone().with_l2(cap))
-    });
+    let mut sim = CapacitySweepSim::new(base_cfg.l2_line, base_cfg.l2_assoc, &caps);
+    for a in trace {
+        sim.access(a.addr, a.write);
+    }
+    let results = sim.finish();
     let baseline = results[0].dram_accesses() as f64;
     results
         .into_iter()
@@ -83,16 +457,12 @@ pub fn fig7_capacities() -> Vec<u64> {
 mod tests {
     use super::*;
     use crate::gpusim::trace::dnn_trace;
+    use crate::util::rng::Rng;
     use crate::workloads::nets;
-
-    fn alexnet_trace() -> Vec<Access> {
-        dnn_trace(&nets::alexnet(), 4)
-    }
 
     #[test]
     fn dram_accesses_fall_monotonically_with_capacity() {
-        let trace = alexnet_trace();
-        let sweep = capacity_sweep(&trace, &fig7_capacities());
+        let sweep = capacity_sweep(dnn_trace(&nets::alexnet(), 4), &fig7_capacities());
         for w in sweep.windows(2) {
             assert!(
                 w[1].result.dram_accesses() <= w[0].result.dram_accesses(),
@@ -108,8 +478,7 @@ mod tests {
         // Paper: 14.6% at the STT iso-area 7MB, 19.8% at the SOT 10MB.
         // The trace substrate differs from the authors' GPGPU-Sim+DarkNet
         // stack, so we require the band, not the exact point.
-        let trace = alexnet_trace();
-        let sweep = capacity_sweep(&trace, &fig7_capacities());
+        let sweep = capacity_sweep(dnn_trace(&nets::alexnet(), 4), &fig7_capacities());
         let at = |cap: u64| {
             sweep
                 .iter()
@@ -126,18 +495,68 @@ mod tests {
 
     #[test]
     fn baseline_reduction_is_zero() {
-        let trace = alexnet_trace();
-        let sweep = capacity_sweep(&trace, &[]);
+        let sweep = capacity_sweep(dnn_trace(&nets::alexnet(), 4), &[]);
         assert_eq!(sweep.len(), 1);
         assert!(sweep[0].dram_reduction_pct.abs() < 1e-9);
     }
 
     #[test]
     fn hit_rate_rises_with_capacity() {
-        let trace = alexnet_trace();
-        let small = simulate(&trace, &GpuConfig::gtx_1080_ti());
-        let big = simulate(&trace, &GpuConfig::gtx_1080_ti().with_l2(24 * MB));
+        let net = nets::alexnet();
+        let small = simulate(dnn_trace(&net, 4), &GpuConfig::gtx_1080_ti());
+        let big = simulate(dnn_trace(&net, 4), &GpuConfig::gtx_1080_ti().with_l2(24 * MB));
         assert!(big.l2_hit_rate() > small.l2_hit_rate());
         assert_eq!(big.l2_accesses, small.l2_accesses);
+    }
+
+    /// The tentpole equivalence guarantee: the single-pass sweep is
+    /// bit-identical to direct per-capacity simulation at every Fig 7
+    /// capacity, for real DNN traces (exercises both the shared-stack
+    /// chain 3/6/12/24 MB and the standalone 7/10 MB members).
+    #[test]
+    fn sweep_matches_direct_simulation_bit_exactly() {
+        for (net, batch) in [(nets::alexnet(), 1), (nets::squeezenet(), 1)] {
+            let trace: Vec<Access> = dnn_trace(&net, batch).collect();
+            let sweep = capacity_sweep(trace.iter().copied(), &fig7_capacities());
+            for p in &sweep {
+                let cfg = GpuConfig::gtx_1080_ti().with_l2(p.result.l2_bytes);
+                let direct = simulate(trace.iter().copied(), &cfg);
+                assert_eq!(
+                    p.result.l2_hits, direct.l2_hits,
+                    "{} hits at {}B",
+                    net.name, p.result.l2_bytes
+                );
+                assert_eq!(
+                    p.result.l2_misses, direct.l2_misses,
+                    "{} misses at {}B",
+                    net.name, p.result.l2_bytes
+                );
+                assert_eq!(
+                    p.result.writebacks, direct.writebacks,
+                    "{} writebacks at {}B",
+                    net.name, p.result.l2_bytes
+                );
+                assert_eq!(p.result.l2_accesses, direct.l2_accesses);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_and_unordered_capacities_align_with_input() {
+        let mut rng = Rng::new(11);
+        let caps = [24 * MB, 7 * MB, 24 * MB, 3 * MB];
+        let mut sim = CapacitySweepSim::new(128, 16, &caps);
+        for _ in 0..50_000 {
+            sim.access(rng.gen_range(1 << 16) * 128, rng.chance(0.3));
+        }
+        let r = sim.finish();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].l2_bytes, 24 * MB);
+        assert_eq!(r[1].l2_bytes, 7 * MB);
+        assert_eq!(r[2].l2_bytes, 24 * MB);
+        assert_eq!(r[3].l2_bytes, 3 * MB);
+        assert_eq!(r[0].l2_hits, r[2].l2_hits, "duplicate capacities agree");
+        assert_eq!(r[0].writebacks, r[2].writebacks);
+        assert!(r[0].l2_hits >= r[3].l2_hits, "24MB >= 3MB hits");
     }
 }

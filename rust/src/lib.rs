@@ -38,5 +38,5 @@ pub mod runtime;
 pub mod util;
 pub mod workloads;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (boxed-error based; see [`util::err`]).
+pub type Result<T> = util::err::Result<T>;

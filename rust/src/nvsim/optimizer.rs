@@ -9,9 +9,8 @@
 //! Results are memoized process-wide: the scalability figures re-tune the
 //! same (technology, capacity) pairs dozens of times.
 
-use once_cell::sync::Lazy;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 use crate::device::bitcell::{BitcellKind, BitcellParams};
 use crate::device::characterize::characterize;
@@ -74,24 +73,25 @@ pub fn explore(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
 /// The characterized bitcell for a technology (memoized — the transient
 /// simulations behind it take milliseconds, and every tuning run needs it).
 pub fn bitcell_for(kind: BitcellKind) -> BitcellParams {
-    static CELLS: Lazy<[BitcellParams; 3]> = Lazy::new(characterize);
+    static CELLS: OnceLock<[BitcellParams; 3]> = OnceLock::new();
+    let cells = CELLS.get_or_init(characterize);
     match kind {
-        BitcellKind::Sram => CELLS[0].clone(),
-        BitcellKind::SttMram => CELLS[1].clone(),
-        BitcellKind::SotMram => CELLS[2].clone(),
+        BitcellKind::Sram => cells[0].clone(),
+        BitcellKind::SttMram => cells[1].clone(),
+        BitcellKind::SotMram => cells[2].clone(),
     }
 }
 
 /// Memoized [`explore`]: the cross-layer analyses query the same tuned
 /// caches repeatedly.
 pub fn tuned_cache(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
-    static CACHE: Lazy<Mutex<HashMap<(BitcellKind, u64), TunedCache>>> =
-        Lazy::new(|| Mutex::new(HashMap::new()));
-    if let Some(hit) = CACHE.lock().unwrap().get(&(kind, capacity_bytes)) {
+    static CACHE: OnceLock<Mutex<HashMap<(BitcellKind, u64), TunedCache>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(hit) = cache.lock().unwrap().get(&(kind, capacity_bytes)) {
         return *hit;
     }
     let tuned = explore(kind, capacity_bytes);
-    CACHE.lock().unwrap().insert((kind, capacity_bytes), tuned);
+    cache.lock().unwrap().insert((kind, capacity_bytes), tuned);
     tuned
 }
 

@@ -1,45 +1,14 @@
 //! The executor: PJRT CPU client + compiled-artifact cache.
+//!
+//! Only compiled with `--features pjrt` (needs the vendored `xla` crate);
+//! offline builds get [`super::stub`] with the same API.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
-
-/// A host-side fp32 tensor (row-major).
-#[derive(Debug, Clone, PartialEq)]
-pub struct TensorF32 {
-    pub dims: Vec<i64>,
-    pub data: Vec<f32>,
-}
-
-impl TensorF32 {
-    /// Build a tensor; panics if `data.len()` disagrees with `dims`.
-    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorF32 {
-        let numel: i64 = dims.iter().product();
-        assert_eq!(
-            numel as usize,
-            data.len(),
-            "tensor shape {:?} != data length {}",
-            dims,
-            data.len()
-        );
-        TensorF32 { dims, data }
-    }
-
-    /// All-zeros tensor.
-    pub fn zeros(dims: Vec<i64>) -> TensorF32 {
-        let numel: i64 = dims.iter().product();
-        TensorF32 {
-            data: vec![0.0; numel as usize],
-            dims,
-        }
-    }
-
-    pub fn numel(&self) -> usize {
-        self.data.len()
-    }
-}
+use super::tensor::TensorF32;
+use crate::util::err::{Context, Result};
 
 /// A compiled executable (one AOT artifact).
 pub struct Executable {
@@ -60,18 +29,23 @@ impl Executable {
                     .context("reshaping input literal")
             })
             .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
         // Artifacts are lowered with return_tuple=True: unpack.
-        let parts = result.to_tuple()?;
+        let parts = result.to_tuple().context("unpacking result tuple")?;
         parts
             .into_iter()
             .map(|lit| {
-                let shape = lit.shape()?;
+                let shape = lit.shape().context("result shape")?;
                 let dims = match &shape {
                     xla::Shape::Array(a) => a.dims().to_vec(),
                     _ => vec![lit.element_count() as i64],
                 };
-                let data = lit.to_vec::<f32>()?;
+                let data = lit.to_vec::<f32>().context("result data")?;
                 Ok(TensorF32 { dims, data })
             })
             .collect()
@@ -124,32 +98,7 @@ impl Runtime {
         });
         let mut compiled = self.compiled.lock().unwrap();
         compiled.push(executable.clone());
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path, compiled.len() - 1);
+        self.cache.lock().unwrap().insert(path, compiled.len() - 1);
         Ok(executable)
     }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tensor_shape_bookkeeping() {
-        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
-        assert_eq!(t.numel(), 6);
-        let z = TensorF32::zeros(vec![4, 4]);
-        assert_eq!(z.numel(), 16);
-    }
-
-    #[test]
-    #[should_panic(expected = "tensor shape")]
-    fn tensor_shape_mismatch_panics() {
-        let _ = TensorF32::new(vec![2, 2], vec![0.0; 5]);
-    }
-
-    // PJRT-backed tests live in rust/tests/runtime_hlo.rs (they need the
-    // artifacts built by `make artifacts`).
 }

@@ -5,7 +5,23 @@
 //! `python/compile/aot.py`: jax ≥0.5 emits serialized `HloModuleProto`s
 //! with 64-bit instruction ids that the crate's xla_extension (0.5.1)
 //! rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The real executor needs the vendored `xla` crate and is gated behind
+//! the `pjrt` feature; offline builds (the default — the container has no
+//! registry access) get [`stub`], which exposes the identical API but
+//! errors on construction. [`TensorF32`] is plain host code and is always
+//! available.
 
+pub mod tensor;
+
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
-pub use executor::{Executable, Runtime, TensorF32};
+#[cfg(feature = "pjrt")]
+pub use executor::{Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Runtime};
+
+pub use tensor::TensorF32;

@@ -1,0 +1,63 @@
+//! Offline stand-in for the PJRT executor (compiled when the `pjrt`
+//! feature is off, i.e. when the vendored `xla` crate is unavailable).
+//!
+//! The API mirrors [`super::executor`] exactly; every entry point that
+//! would touch PJRT returns an error instead, so callers degrade
+//! gracefully (the e2e example and the `repro runtime` subcommand print
+//! the error and exit, and the runtime tests self-skip on missing
+//! artifacts before ever constructing a `Runtime`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::tensor::TensorF32;
+use crate::util::err::{msg, Result};
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: enable the `pjrt` feature with a vendored \
+     `xla` path dependency (see rust/Cargo.toml's [features] note)";
+
+/// A compiled executable (stub: cannot be constructed).
+pub struct Executable {
+    /// Number of outputs in the result tuple.
+    pub arity_hint: Option<usize>,
+}
+
+impl Executable {
+    /// Execute with fp32 inputs; always errors in the stub.
+    pub fn run(&self, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        Err(msg(UNAVAILABLE))
+    }
+}
+
+/// The PJRT runtime (stub: construction fails).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime; always errors in the stub.
+    pub fn cpu() -> Result<Runtime> {
+        Err(msg(UNAVAILABLE))
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Load and compile an HLO-text artifact; always errors in the stub.
+    pub fn load(&self, _path: impl AsRef<Path>) -> Result<Arc<Executable>> {
+        Err(msg(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        let e = Runtime::cpu().map(|_| ()).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Host-side tensors — shared by the real PJRT executor and the offline
+//! stub, so the rest of the crate compiles identically either way.
+
+/// A host-side fp32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    /// Build a tensor; panics if `data.len()` disagrees with `dims`.
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorF32 {
+        let numel: i64 = dims.iter().product();
+        assert_eq!(
+            numel as usize,
+            data.len(),
+            "tensor shape {:?} != data length {}",
+            dims,
+            data.len()
+        );
+        TensorF32 { dims, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dims: Vec<i64>) -> TensorF32 {
+        let numel: i64 = dims.iter().product();
+        TensorF32 {
+            data: vec![0.0; numel as usize],
+            dims,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_bookkeeping() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        let z = TensorF32::zeros(vec![4, 4]);
+        assert_eq!(z.numel(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor shape")]
+    fn tensor_shape_mismatch_panics() {
+        let _ = TensorF32::new(vec![2, 2], vec![0.0; 5]);
+    }
+}

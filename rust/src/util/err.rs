@@ -1,0 +1,80 @@
+//! Minimal error plumbing (no `anyhow` in the offline registry).
+//!
+//! `Error` is a boxed trait object so `?` works on any `std::error::Error`
+//! source; [`msg`] builds an ad-hoc error from a string and [`Context`]
+//! provides the `anyhow`-style `.context(...)` adapters the runtime layer
+//! uses when surfacing PJRT failures.
+
+use std::fmt;
+
+/// Crate-wide boxed error.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A plain-message error.
+#[derive(Debug)]
+pub struct Msg(pub String);
+
+impl fmt::Display for Msg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Msg {}
+
+/// Build an ad-hoc error from a message.
+pub fn msg(m: impl Into<String>) -> Error {
+    Box::new(Msg(m.into()))
+}
+
+/// `anyhow`-style context adapters for results and options.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a static context line.
+    fn context(self, ctx: &str) -> Result<T>;
+    /// Wrap with a lazily-built context line.
+    fn with_context(self, ctx: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: &str) -> Result<T> {
+        self.map_err(|e| msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context(self, ctx: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| msg(format!("{}: {e}", ctx())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: &str) -> Result<T> {
+        self.ok_or_else(|| msg(ctx))
+    }
+
+    fn with_context(self, ctx: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| msg(ctx()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_displays_and_boxes() {
+        let e = msg("boom");
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn context_wraps_result_and_option() {
+        let r: std::result::Result<(), Msg> = Err(Msg("inner".into()));
+        let wrapped = r.context("outer").unwrap_err();
+        assert_eq!(wrapped.to_string(), "outer: inner");
+        let n: Option<u8> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u8).context("missing").unwrap(), 7);
+    }
+}

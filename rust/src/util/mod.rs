@@ -9,6 +9,7 @@
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod err;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -53,8 +53,7 @@ fn analytic_and_trace_models_agree_on_direction() {
     let a24 = dnn_stats_model(&net, Phase::Inference, 4, 24 * MB, TrafficModel::CaffeIm2col);
     assert!(a24.dram_reads < a3.dram_reads);
 
-    let trace = dnn_trace(&net, 4);
-    let sweep = capacity_sweep(&trace, &[24 * MB]);
+    let sweep = capacity_sweep(dnn_trace(&net, 4), &[24 * MB]);
     assert!(sweep[1].result.dram_accesses() < sweep[0].result.dram_accesses());
 }
 

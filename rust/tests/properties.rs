@@ -5,6 +5,7 @@ use deepnvm::device::circuit::{pulse_to_failure, simulate_write};
 use deepnvm::device::finfet::{Corner, FinFet};
 use deepnvm::device::mtj::{Mtj, WriteDir};
 use deepnvm::gpusim::cache::{Cache, Outcome};
+use deepnvm::gpusim::CapacitySweepSim;
 use deepnvm::nvsim::geometry::enumerate;
 use deepnvm::util::check::{forall, forall_explain};
 use deepnvm::util::rng::Rng;
@@ -162,6 +163,84 @@ fn pulse_bisection_minimality() {
             Ok(())
         },
     );
+}
+
+/// Single-pass sweep equivalence: for random access sequences and a
+/// capacity family whose set counts are non-trivial multiples of the base
+/// (ratios 1/2/3/5 — exercises the non-power-of-two residue classes), the
+/// stack-distance simulator returns bit-identical hits/misses/writebacks
+/// to replaying each capacity through the direct cache model.
+#[test]
+fn sweep_equals_direct_replay_on_random_streams() {
+    const LINE: u64 = 64;
+    const ASSOC: u64 = 4;
+    let caps: Vec<u64> = [8u64, 16, 24, 40]
+        .iter()
+        .map(|sets| sets * LINE * ASSOC)
+        .collect();
+    forall_explain(
+        0xBEEF,
+        25,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(500, 4000);
+            (0..n)
+                .map(|_| (rng.gen_range(512) * LINE, rng.chance(0.4)))
+                .collect::<Vec<(u64, bool)>>()
+        },
+        |seq| {
+            let mut sweep = CapacitySweepSim::new(LINE, ASSOC, &caps);
+            for &(addr, write) in seq {
+                sweep.access(addr, write);
+            }
+            for (result, &cap) in sweep.finish().iter().zip(&caps) {
+                let mut direct = Cache::new(cap, LINE, ASSOC);
+                for &(addr, write) in seq {
+                    direct.access(addr, write);
+                }
+                if (result.l2_hits, result.l2_misses, result.writebacks)
+                    != (direct.hits, direct.misses, direct.writebacks)
+                {
+                    return Err(format!(
+                        "cap {cap}: sweep {}h/{}m/{}wb vs direct {}h/{}m/{}wb",
+                        result.l2_hits,
+                        result.l2_misses,
+                        result.writebacks,
+                        direct.hits,
+                        direct.misses,
+                        direct.writebacks
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The same equivalence on the hot-path benches' synthetic stream (uniform
+/// random lines over a 128MB span, 30% writes) at the real Fig 7 geometry:
+/// 128B lines, 16 ways, 3–24 MB capacities.
+#[test]
+fn sweep_equals_direct_replay_on_bench_stream() {
+    use deepnvm::gpusim::fig7_capacities;
+    let mut rng = Rng::new(1);
+    let stream: Vec<(u64, bool)> = (0..250_000)
+        .map(|_| (rng.gen_range(1 << 20) * 128, rng.chance(0.3)))
+        .collect();
+    let mut caps = vec![3 * MB];
+    caps.extend(fig7_capacities());
+    let mut sweep = CapacitySweepSim::new(128, 16, &caps);
+    for &(addr, write) in &stream {
+        sweep.access(addr, write);
+    }
+    for (result, &cap) in sweep.finish().iter().zip(&caps) {
+        let mut direct = Cache::new(cap, 128, 16);
+        for &(addr, write) in &stream {
+            direct.access(addr, write);
+        }
+        assert_eq!(result.l2_hits, direct.hits, "hits at {cap}B");
+        assert_eq!(result.l2_misses, direct.misses, "misses at {cap}B");
+        assert_eq!(result.writebacks, direct.writebacks, "writebacks at {cap}B");
+    }
 }
 
 /// The deterministic PRNG streams are stable across struct clones.

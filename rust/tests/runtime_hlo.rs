@@ -16,7 +16,10 @@ fn kernel_matmul_matches_host_reference() {
         eprintln!("skipping: run `make artifacts`");
         return;
     };
-    let rt = Runtime::cpu().unwrap();
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: PJRT runtime unavailable (build with the pjrt feature)");
+        return;
+    };
     let exe = rt.load(&path).unwrap();
     // aot.py KERNEL_DIMS = (256, 512, 192).
     let (m, k, n) = (256usize, 512usize, 192usize);
@@ -51,7 +54,10 @@ fn cnn_infer_produces_finite_logits() {
         eprintln!("skipping: run `make artifacts`");
         return;
     };
-    let rt = Runtime::cpu().unwrap();
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: PJRT runtime unavailable (build with the pjrt feature)");
+        return;
+    };
     let exe = rt.load(&path).unwrap();
     let params = vec![
         TensorF32::zeros(vec![3, 3, 1, 8]),
@@ -77,7 +83,10 @@ fn cnn_train_step_reduces_loss_from_cold_start() {
         eprintln!("skipping: run `make artifacts`");
         return;
     };
-    let rt = Runtime::cpu().unwrap();
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: PJRT runtime unavailable (build with the pjrt feature)");
+        return;
+    };
     let exe = rt.load(&path).unwrap();
     let mut rng = Rng::new(3);
     let mut init = |dims: Vec<i64>| {
@@ -136,7 +145,10 @@ fn runtime_memoizes_compiled_artifacts() {
         eprintln!("skipping: run `make artifacts`");
         return;
     };
-    let rt = Runtime::cpu().unwrap();
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: PJRT runtime unavailable (build with the pjrt feature)");
+        return;
+    };
     let t0 = std::time::Instant::now();
     let _a = rt.load(&path).unwrap();
     let first = t0.elapsed();

@@ -8,19 +8,21 @@
 use std::time::Instant;
 
 use deepnvm::coordinator::{run_one, RunnerConfig};
-use deepnvm::experiments::registry;
+use deepnvm::engine::Engine;
+use deepnvm::experiments::{registry, Params};
 
 fn main() {
     let cfg = RunnerConfig {
         results_dir: "results".into(),
         print_tables: false,
     };
+    let engine = Engine::shared();
     println!("== paper artifact regeneration bench ==");
     println!("{:<8} {:>10}  headline", "id", "time");
     let mut total = 0.0;
     for exp in registry() {
         let t0 = Instant::now();
-        let report = run_one(exp.id, &cfg).expect("registered");
+        let report = run_one(engine, exp.id, &Params::default(), &cfg).expect("registered");
         let dt = t0.elapsed().as_secs_f64();
         total += dt;
         let headline = report

@@ -1,130 +1,90 @@
 //! Design-space exploration beyond the paper: "DeepNVM++ ... can be used
 //! for the characterization, modeling, and analysis of ANY NVM
-//! technology". This example injects a hypothetical next-generation SOT
-//! device (lower critical current, faster τ0 — the trajectory the
-//! paper's §5 projects as fabrication matures) and re-runs the whole
-//! pipeline: transient characterization → EDAP cache tuning → workload
-//! EDP, comparing it against today's three technologies at 8MB.
+//! technology". This example defines a hypothetical next-generation SOT
+//! device (lower critical currents, faster τ0 — the trajectory the
+//! paper's §5 projects as fabrication matures) purely as a `TechSpec`
+//! descriptor, registers it with the query engine, and answers one batch
+//! of typed queries: all four technologies, EDAP-tuned at 8MB, rolled up
+//! on VGG-16 training — no bespoke pipeline code, and the same descriptor
+//! could equally come from a `.tech` file via `--tech-file`.
 //!
 //! Run: `cargo run --release --example design_space`
 
-use deepnvm::analysis::evaluate;
-use deepnvm::device::bitcell::{BitcellKind, BitcellParams};
-use deepnvm::device::circuit::{pulse_to_failure, simulate_sense, simulate_write};
-use deepnvm::device::finfet::{Corner, FinFet};
-use deepnvm::device::mtj::{Mtj, MtjKind, WriteDir};
-use deepnvm::device::characterize::cal;
-use deepnvm::nvsim::cache::{cache_ppa, AccessType};
-use deepnvm::nvsim::geometry::enumerate;
-use deepnvm::nvsim::optimizer::tuned_cache;
-use deepnvm::nvsim::tech::SIZING_TARGETS;
+use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
 use deepnvm::util::table::{fnum, Table};
 use deepnvm::util::units::{to_mm2, to_mw, to_ns, MB};
 use deepnvm::workloads::memstats::Phase;
-use deepnvm::workloads::profiler::{profile, Workload};
+use deepnvm::workloads::profiler::Workload;
 
-/// A projected next-gen SOT stack: 35% lower critical currents (better
-/// spin-Hall efficiency) and a faster characteristic time.
-fn nextgen_sot() -> Mtj {
-    Mtj {
-        kind: MtjKind::Sot,
-        r_p: 4_000.0,
-        r_ap: 8_000.0,
-        ic_set: 78.0e-6,
-        ic_reset: 72.0e-6,
-        tau0: 60.0e-12,
-        r_rail: 500.0,
-    }
-}
-
-/// Characterize the custom device with the same §3.1 procedure (2 write
-/// fins suffice at the lower Ic — area shrinks further).
-fn characterize_nextgen() -> BitcellParams {
-    let mtj = nextgen_sot();
-    let wf = 2;
-    let access = FinFet::nmos(wf, Corner::WorstDelay);
-    let t_set = pulse_to_failure(&access, &mtj, WriteDir::Set, 1e-12, 50e-9, 1.0)
-        .expect("next-gen SOT must switch with 2 fins");
-    let t_reset = pulse_to_failure(&access, &mtj, WriteDir::Reset, 1e-12, 50e-9, 1.0).unwrap();
-    let wp = FinFet::nmos(wf, Corner::WorstPower);
-    let e_set = simulate_write(&wp, &mtj, WriteDir::Set, t_set, 1.0).loop_energy * 1.48;
-    let e_reset = simulate_write(&wp, &mtj, WriteDir::Reset, t_reset, 1.0).loop_energy * 1.91;
-    let read = FinFet::nmos(1, Corner::WorstDelay);
-    let sense = simulate_sense(
-        cal::C_BITLINE_SOT,
-        cal::V_READ_SOT,
-        read.ron(),
-        mtj.r_p,
-        mtj.r_ap,
-        cal::T_SA,
-    );
-    BitcellParams {
-        kind: BitcellKind::SotMram, // cache model treats it as the SOT family
-        sense_latency: sense.t_sense,
-        sense_energy: sense.energy + 0.99 * cal::C_BITLINE_SOT * 0.64,
-        write_latency_set: t_set,
-        write_latency_reset: t_reset,
-        write_energy_set: e_set,
-        write_energy_reset: e_reset,
-        write_fins: wf,
-        read_fins: 1,
-        area: deepnvm::device::bitcell::sot_cell_area(wf, 1),
-        cell_leakage: 0.0,
-    }
+/// A projected next-gen SOT stack: ~35% lower critical currents (better
+/// spin-Hall efficiency) and a faster characteristic time. Everything
+/// else inherits today's SOT calibration.
+fn nextgen_sot() -> TechSpec {
+    let mut spec = TechSpec::sot();
+    spec.id = "sot_nextgen".into();
+    spec.name = "SOT (next-gen)".into();
+    let mtj = spec.mtj.as_mut().expect("sot is mram-class");
+    mtj.ic_set = 78.0e-6;
+    mtj.ic_reset = 72.0e-6;
+    mtj.tau0 = 60.0e-12;
+    mtj.r_rail = 500.0;
+    spec
 }
 
 fn main() {
-    let cap = 8 * MB;
-    let custom = characterize_nextgen();
+    let engine = Engine::new();
+    let custom = nextgen_sot();
+    println!("--- descriptor (save as nextgen.tech and pass via --tech-file) ---");
+    println!("{}", descriptor::serialize(&custom));
+    engine.register(custom).expect("fresh id");
+
+    // The §3.1 characterization runs from the descriptor alone: the fin
+    // sweep re-optimizes for the lower critical currents.
+    let cell = engine.bitcell("sot_nextgen").expect("characterizes");
     println!(
-        "next-gen SOT bitcell: write {:.0}/{:.0} ps, {:.3}/{:.3} pJ, rel. area {:.2}\n",
-        custom.write_latency_set * 1e12,
-        custom.write_latency_reset * 1e12,
-        custom.write_energy_set * 1e12,
-        custom.write_energy_reset * 1e12,
-        custom.area_rel_sram()
+        "next-gen SOT bitcell: {} write fins chosen, write {:.0}/{:.0} ps, {:.3}/{:.3} pJ, rel. area {:.2}\n",
+        cell.write_fins,
+        cell.write_latency_set * 1e12,
+        cell.write_latency_reset * 1e12,
+        cell.write_energy_set * 1e12,
+        cell.write_energy_reset * 1e12,
+        cell.area_rel_sram()
     );
 
-    // EDAP-tune a cache from the custom bitcell (Algorithm 1, inlined).
-    let mut best = None;
-    for org in enumerate(cap) {
-        for access in AccessType::ALL {
-            for &sizing in SIZING_TARGETS.iter() {
-                let ppa = cache_ppa(&custom, &org, access, sizing);
-                if best
-                    .map(|b: deepnvm::nvsim::cache::CachePpa| ppa.edap() < b.edap())
-                    .unwrap_or(true)
-                {
-                    best = Some(ppa);
-                }
-            }
-        }
-    }
-    let custom_cache = best.unwrap();
+    // One typed query per technology; the engine tunes + profiles + rolls
+    // up each through the shared thread pool.
+    let cap = 8 * MB;
+    let vgg_training = Workload::Dnn { index: 2, phase: Phase::Training };
+    let queries: Vec<Query> = ["sram", "stt", "sot", "sot_nextgen"]
+        .iter()
+        .map(|tech| Query::tune(*tech, cap).with_workload(vgg_training))
+        .collect();
+    let evals: Vec<_> = engine
+        .evaluate_many(&queries)
+        .into_iter()
+        .map(|r| r.expect("registered tech at a valid capacity"))
+        .collect();
 
+    let base = evals[0].workload.as_ref().unwrap().rollup.edp_with_dram();
     let mut t = Table::new(
         "8MB L2 design space (VGG-16 training EDP, normalized to SRAM)",
         &["tech", "RL (ns)", "WL (ns)", "leak (mW)", "area (mm2)", "EDP (norm)"],
     );
-    let vgg = Workload::Dnn { index: 2, phase: Phase::Training };
-    let stats = profile(vgg, 64, cap).stats;
-    let sram = tuned_cache(BitcellKind::Sram, cap).ppa;
-    let base = evaluate(&sram, &stats).edp_with_dram();
-    let mut row = |name: &str, ppa: &deepnvm::nvsim::cache::CachePpa| {
-        let e = evaluate(ppa, &stats).edp_with_dram();
+    for ev in &evals {
+        let name = engine.tech(&ev.tech).expect("registered").name.clone();
+        let ppa = &ev.design.ppa;
+        let edp = ev.workload.as_ref().unwrap().rollup.edp_with_dram();
         t.row(&[
-            name.into(),
+            name,
             fnum(to_ns(ppa.read_latency), 2),
             fnum(to_ns(ppa.write_latency), 2),
             fnum(to_mw(ppa.leakage_power), 0),
             fnum(to_mm2(ppa.area), 2),
-            fnum(e / base, 3),
+            fnum(edp / base, 3),
         ]);
-    };
-    row("SRAM", &sram);
-    row("STT-MRAM", &tuned_cache(BitcellKind::SttMram, cap).ppa);
-    row("SOT-MRAM", &tuned_cache(BitcellKind::SotMram, cap).ppa);
-    row("SOT (next-gen)", &custom_cache);
+    }
     println!("{}", t.render());
-    println!("The framework extends to arbitrary NVM devices: swap the MTJ card, rerun.");
+    let s = engine.stats();
+    println!("engine cache this run: {}", s.summary());
+    println!("The framework extends to arbitrary NVM devices: edit the descriptor, rerun.");
 }

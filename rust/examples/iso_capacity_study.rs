@@ -4,11 +4,14 @@
 //! Run: `cargo run --release --example iso_capacity_study`
 
 use deepnvm::coordinator::{run_one, RunnerConfig};
+use deepnvm::engine::Engine;
+use deepnvm::experiments::Params;
 
 fn main() {
     let cfg = RunnerConfig::default();
     for id in ["fig4", "fig5", "fig6"] {
-        let report = run_one(id, &cfg).expect("registered experiment");
+        let report = run_one(Engine::shared(), id, &Params::default(), &cfg)
+            .expect("registered experiment");
         for h in &report.headlines {
             eprintln!("HEADLINE {h}");
         }

@@ -1,35 +1,36 @@
 //! Batch-size study (paper §4.1, Fig 6): AlexNet training and inference
-//! EDP (normalized to SRAM) as the batch size sweeps.
+//! EDP (normalized to SRAM) as the batch size sweeps. The batch grid is a
+//! parameter since the query-engine redesign (`repro experiment fig6
+//! --batches 1,8,128`); [`BATCHES`] is the paper's grid.
 
-use crate::device::bitcell::BitcellKind;
-use crate::nvsim::optimizer::tuned_cache;
+use crate::engine::{Engine, TECH_SOT, TECH_SRAM, TECH_STT};
 use crate::util::units::MB;
 use crate::workloads::memstats::Phase;
-use crate::workloads::profiler::{profile, Workload, PROFILE_L2};
+use crate::workloads::profiler::{Workload, PROFILE_L2};
 use super::model::evaluate;
 
 /// Batch sizes swept in Fig 6.
 pub const BATCHES: [u64; 7] = [1, 2, 4, 8, 16, 32, 64];
 
-/// One Fig 6 point: normalized EDP (with DRAM) for [STT, SOT] at a batch.
+/// One Fig 6 point: normalized EDP (with DRAM) for `[STT, SOT]` at a batch.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPoint {
     pub batch: u64,
     pub edp_norm: [f64; 2],
 }
 
-/// Sweep one phase of AlexNet over the batch sizes.
-pub fn batch_sweep(phase: Phase) -> Vec<BatchPoint> {
+/// Sweep one phase of AlexNet over the given batch sizes.
+pub fn batch_sweep(engine: &Engine, phase: Phase, batches: &[u64]) -> Vec<BatchPoint> {
     let caps = [
-        tuned_cache(BitcellKind::Sram, 3 * MB).ppa,
-        tuned_cache(BitcellKind::SttMram, 3 * MB).ppa,
-        tuned_cache(BitcellKind::SotMram, 3 * MB).ppa,
+        engine.tuned(TECH_SRAM, 3 * MB).expect("builtin").ppa,
+        engine.tuned(TECH_STT, 3 * MB).expect("builtin").ppa,
+        engine.tuned(TECH_SOT, 3 * MB).expect("builtin").ppa,
     ];
     let alexnet = Workload::Dnn { index: 0, phase };
-    BATCHES
+    batches
         .iter()
         .map(|&batch| {
-            let stats = profile(alexnet, batch, PROFILE_L2).stats;
+            let stats = engine.profile(alexnet, batch, PROFILE_L2).stats;
             let e: Vec<f64> = caps
                 .iter()
                 .map(|c| evaluate(c, &stats).edp_with_dram())
@@ -46,10 +47,14 @@ pub fn batch_sweep(phase: Phase) -> Vec<BatchPoint> {
 mod tests {
     use super::*;
 
+    fn sweep(phase: Phase) -> Vec<BatchPoint> {
+        batch_sweep(Engine::shared(), phase, &BATCHES)
+    }
+
     #[test]
     fn training_stt_improves_with_batch() {
         // Fig 6 top: STT 2.3×→4.6× EDP reduction as batch grows.
-        let sweep = batch_sweep(Phase::Training);
+        let sweep = sweep(Phase::Training);
         let first = 1.0 / sweep.first().unwrap().edp_norm[0];
         let last = 1.0 / sweep.last().unwrap().edp_norm[0];
         assert!(
@@ -62,7 +67,7 @@ mod tests {
     fn training_sot_is_flat_and_high() {
         // Fig 6 top: SOT ~7.2×–7.6× across batch sizes (variation small
         // relative to its level).
-        let sweep = batch_sweep(Phase::Training);
+        let sweep = sweep(Phase::Training);
         let reds: Vec<f64> = sweep.iter().map(|p| 1.0 / p.edp_norm[1]).collect();
         let min = reds.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = reds.iter().cloned().fold(0.0, f64::max);
@@ -74,7 +79,7 @@ mod tests {
     fn inference_reductions_stay_in_band() {
         // Fig 6 bottom: STT 4.1–5.4×, SOT 7.1–7.3× — both phases see
         // substantial, relatively stable reductions.
-        let sweep = batch_sweep(Phase::Inference);
+        let sweep = sweep(Phase::Inference);
         for p in &sweep {
             let stt = 1.0 / p.edp_norm[0];
             let sot = 1.0 / p.edp_norm[1];
@@ -85,8 +90,16 @@ mod tests {
 
     #[test]
     fn sweep_covers_all_batches_in_order() {
-        let sweep = batch_sweep(Phase::Inference);
+        let sweep = sweep(Phase::Inference);
         let batches: Vec<u64> = sweep.iter().map(|p| p.batch).collect();
         assert_eq!(batches, BATCHES.to_vec());
+    }
+
+    #[test]
+    fn custom_batch_grid_is_respected() {
+        let sweep = batch_sweep(Engine::shared(), Phase::Inference, &[2, 128]);
+        assert_eq!(sweep.len(), 2);
+        assert_eq!(sweep[1].batch, 128);
+        assert!(sweep[1].edp_norm[0] > 0.0);
     }
 }

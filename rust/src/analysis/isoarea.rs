@@ -1,12 +1,13 @@
 //! Iso-area analysis (paper §4.2 → Figs 8 and 9): the MRAM caches that
 //! fit the SRAM baseline's footprint — STT-MRAM at 7MB, SOT-MRAM at 10MB
 //! — evaluated with the capacity-dependent DRAM traffic the larger caches
-//! enable (the Fig 7 effect).
+//! enable (the Fig 7 effect). The same rule is available as a query via
+//! [`Engine::fit_iso_area`]; the pinned capacities here are the paper's
+//! regression-tested Table 2 values.
 
-use crate::device::bitcell::BitcellKind;
-use crate::nvsim::optimizer::tuned_cache;
+use crate::engine::{Engine, TECH_SOT, TECH_SRAM, TECH_STT};
 use crate::util::units::MB;
-use crate::workloads::profiler::{paper_suite, profile_default};
+use crate::workloads::profiler::paper_suite;
 use super::model::{evaluate, Evaluation};
 
 /// Iso-area capacities (regression-pinned to the paper's Table 2).
@@ -17,15 +18,15 @@ pub const ISO_AREA_SOT: u64 = 10 * MB;
 #[derive(Debug, Clone)]
 pub struct IsoAreaRow {
     pub label: String,
-    /// [STT, SOT] normalized dynamic energy (Fig 8 top).
+    /// `[STT, SOT]` normalized dynamic energy (Fig 8 top).
     pub dynamic: [f64; 2],
-    /// [STT, SOT] normalized leakage energy (Fig 8 bottom).
+    /// `[STT, SOT]` normalized leakage energy (Fig 8 bottom).
     pub leakage: [f64; 2],
-    /// [STT, SOT] normalized total cache energy.
+    /// `[STT, SOT]` normalized total cache energy.
     pub energy: [f64; 2],
-    /// [STT, SOT] normalized EDP without DRAM (Fig 9 top).
+    /// `[STT, SOT]` normalized EDP without DRAM (Fig 9 top).
     pub edp_cache: [f64; 2],
-    /// [STT, SOT] normalized EDP with DRAM (Fig 9 bottom).
+    /// `[STT, SOT]` normalized EDP with DRAM (Fig 9 bottom).
     pub edp_dram: [f64; 2],
     pub raw: [Evaluation; 3],
 }
@@ -33,16 +34,16 @@ pub struct IsoAreaRow {
 /// Run the iso-area analysis over the paper suite. Each technology's
 /// workload statistics are profiled *at its own capacity* — the larger
 /// MRAM caches absorb traffic that the 3MB SRAM sends to DRAM.
-pub fn iso_area() -> Vec<IsoAreaRow> {
-    let sram = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
-    let stt = tuned_cache(BitcellKind::SttMram, ISO_AREA_STT).ppa;
-    let sot = tuned_cache(BitcellKind::SotMram, ISO_AREA_SOT).ppa;
+pub fn iso_area(engine: &Engine) -> Vec<IsoAreaRow> {
+    let sram = engine.tuned(TECH_SRAM, 3 * MB).expect("builtin").ppa;
+    let stt = engine.tuned(TECH_STT, ISO_AREA_STT).expect("builtin").ppa;
+    let sot = engine.tuned(TECH_SOT, ISO_AREA_SOT).expect("builtin").ppa;
     paper_suite()
         .into_iter()
         .map(|w| {
-            let p_sram = profile_default(w, 3 * MB);
-            let p_stt = profile_default(w, ISO_AREA_STT);
-            let p_sot = profile_default(w, ISO_AREA_SOT);
+            let p_sram = engine.profile_default(w, 3 * MB);
+            let p_stt = engine.profile_default(w, ISO_AREA_STT);
+            let p_sot = engine.profile_default(w, ISO_AREA_SOT);
             let raw = [
                 evaluate(&sram, &p_sram.stats),
                 evaluate(&stt, &p_stt.stats),
@@ -75,11 +76,15 @@ mod tests {
     use super::*;
     use crate::util::stats::mean;
 
+    fn rows() -> Vec<IsoAreaRow> {
+        iso_area(Engine::shared())
+    }
+
     #[test]
     fn mean_edp_reduction_matches_paper_band() {
         // Paper: 2.2× (STT) and 2.4× (SOT) including DRAM; the abstract
         // quotes "up to" the same order.
-        let rows = iso_area();
+        let rows = rows();
         let [stt, sot] = mean_edp_reduction(&rows);
         assert!((1.2..3.4).contains(&stt), "STT iso-area EDP reduction {stt}");
         assert!((1.7..3.8).contains(&sot), "SOT iso-area EDP reduction {sot}");
@@ -90,7 +95,7 @@ mod tests {
     fn leakage_advantage_shrinks_vs_iso_capacity() {
         // Fig 8: at iso-area the bigger MRAM arrays leak more (2.2×/2.3×
         // advantage instead of 6.3×/10×).
-        let rows = iso_area();
+        let rows = rows();
         let stt = mean(&rows.iter().map(|r| 1.0 / r.leakage[0]).collect::<Vec<_>>());
         let sot = mean(&rows.iter().map(|r| 1.0 / r.leakage[1]).collect::<Vec<_>>());
         assert!((1.4..3.6).contains(&stt), "STT leak advantage {stt}");
@@ -100,7 +105,7 @@ mod tests {
     #[test]
     fn larger_caches_cut_dram_traffic() {
         // The Fig 7 mechanism must show up in the raw evaluations.
-        for row in iso_area() {
+        for row in rows() {
             assert!(
                 row.raw[1].dram_energy <= row.raw[0].dram_energy,
                 "{}: STT dram energy grew",
@@ -114,11 +119,19 @@ mod tests {
     fn dynamic_energy_higher_at_iso_area_than_iso_capacity() {
         // Fig 8 vs Fig 4: bigger arrays cost more per access (2.5×/1.5×
         // vs 2.2×/1.3×).
-        let ia = iso_area();
-        let ic = crate::analysis::isocapacity::iso_capacity();
+        let ia = rows();
+        let ic = crate::analysis::isocapacity::iso_capacity(Engine::shared());
         let m = |rows: &[f64]| mean(rows);
         let ia_stt = m(&ia.iter().map(|r| r.dynamic[0]).collect::<Vec<_>>());
         let ic_stt = m(&ic.iter().map(|r| r.dynamic[0]).collect::<Vec<_>>());
         assert!(ia_stt > ic_stt, "iso-area {ia_stt} vs iso-capacity {ic_stt}");
+    }
+
+    #[test]
+    fn pinned_capacities_match_the_engine_fit() {
+        // The Table 2 pins and the queryable iso-area rule must agree.
+        let e = Engine::shared();
+        assert_eq!(e.fit_iso_area("stt", 3 * MB).unwrap(), ISO_AREA_STT);
+        assert_eq!(e.fit_iso_area("sot", 3 * MB).unwrap(), ISO_AREA_SOT);
     }
 }

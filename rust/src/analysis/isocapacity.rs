@@ -1,10 +1,10 @@
 //! Iso-capacity analysis (paper §4.1 → Figs 4 and 5): all three
-//! technologies at the GTX 1080 Ti's 3MB, driven by the profiled suite.
+//! technologies at the GTX 1080 Ti's 3MB, driven by the profiled suite
+//! through the query engine's memoized pipeline.
 
-use crate::device::bitcell::BitcellKind;
-use crate::nvsim::optimizer::tuned_cache;
+use crate::engine::{Engine, TECH_SOT, TECH_SRAM, TECH_STT};
 use crate::util::units::MB;
-use crate::workloads::profiler::{profile_suite, PROFILE_L2};
+use crate::workloads::profiler::PROFILE_L2;
 use super::model::{evaluate, Evaluation};
 
 /// Per-workload, per-technology iso-capacity results, all normalized to
@@ -12,26 +12,27 @@ use super::model::{evaluate, Evaluation};
 #[derive(Debug, Clone)]
 pub struct IsoCapacityRow {
     pub label: String,
-    /// [STT, SOT] normalized dynamic energy (Fig 4 top).
+    /// `[STT, SOT]` normalized dynamic energy (Fig 4 top).
     pub dynamic: [f64; 2],
-    /// [STT, SOT] normalized leakage energy (Fig 4 bottom).
+    /// `[STT, SOT]` normalized leakage energy (Fig 4 bottom).
     pub leakage: [f64; 2],
-    /// [STT, SOT] normalized total cache energy (Fig 5 top).
+    /// `[STT, SOT]` normalized total cache energy (Fig 5 top).
     pub energy: [f64; 2],
-    /// [STT, SOT] normalized EDP incl. DRAM (Fig 5 bottom).
+    /// `[STT, SOT]` normalized EDP incl. DRAM (Fig 5 bottom).
     pub edp: [f64; 2],
-    /// Raw evaluations [SRAM, STT, SOT] for downstream consumers.
+    /// Raw evaluations `[SRAM, STT, SOT]` for downstream consumers.
     pub raw: [Evaluation; 3],
 }
 
 /// Run the iso-capacity analysis over the full Fig 4 suite.
-pub fn iso_capacity() -> Vec<IsoCapacityRow> {
+pub fn iso_capacity(engine: &Engine) -> Vec<IsoCapacityRow> {
     let caps = [
-        tuned_cache(BitcellKind::Sram, 3 * MB).ppa,
-        tuned_cache(BitcellKind::SttMram, 3 * MB).ppa,
-        tuned_cache(BitcellKind::SotMram, 3 * MB).ppa,
+        engine.tuned(TECH_SRAM, 3 * MB).expect("builtin").ppa,
+        engine.tuned(TECH_STT, 3 * MB).expect("builtin").ppa,
+        engine.tuned(TECH_SOT, 3 * MB).expect("builtin").ppa,
     ];
-    profile_suite(PROFILE_L2)
+    engine
+        .profile_suite(PROFILE_L2)
         .into_iter()
         .map(|p| {
             let raw = [
@@ -69,10 +70,14 @@ mod tests {
     use super::*;
     use crate::util::stats::mean;
 
+    fn rows() -> Vec<IsoCapacityRow> {
+        iso_capacity(Engine::shared())
+    }
+
     #[test]
     fn headline_edp_reductions_match_paper_band() {
         // Paper: up to 3.8× (STT) and 4.7× (SOT).
-        let rows = iso_capacity();
+        let rows = rows();
         let [stt, sot] = headline_edp_reduction(&rows);
         assert!((2.8..5.2).contains(&stt), "STT max EDP reduction {stt}");
         assert!((3.5..7.5).contains(&sot), "SOT max EDP reduction {sot}");
@@ -82,7 +87,7 @@ mod tests {
     #[test]
     fn average_energy_reduction_matches_paper_band() {
         // Paper: 5.3× (STT) and 8.6× (SOT) mean cache-energy reduction.
-        let rows = iso_capacity();
+        let rows = rows();
         let stt: Vec<f64> = rows.iter().map(|r| 1.0 / r.energy[0]).collect();
         let sot: Vec<f64> = rows.iter().map(|r| 1.0 / r.energy[1]).collect();
         let (ms, mo) = (mean(&stt), mean(&sot));
@@ -93,7 +98,7 @@ mod tests {
     #[test]
     fn stt_dynamic_energy_is_worse_sot_mildly_worse() {
         // Fig 4 top: STT ≈2.2×, SOT ≈1.3× SRAM.
-        let rows = iso_capacity();
+        let rows = rows();
         let stt = mean(&rows.iter().map(|r| r.dynamic[0]).collect::<Vec<_>>());
         let sot = mean(&rows.iter().map(|r| r.dynamic[1]).collect::<Vec<_>>());
         assert!(stt > 1.4 && stt < 3.0, "STT dyn {stt}");
@@ -102,7 +107,7 @@ mod tests {
 
     #[test]
     fn every_workload_sees_mram_energy_win() {
-        for row in iso_capacity() {
+        for row in rows() {
             assert!(row.energy[0] < 1.0, "{}: STT energy {}", row.label, row.energy[0]);
             assert!(row.energy[1] < 1.0, "{}: SOT energy {}", row.label, row.energy[1]);
         }
@@ -110,7 +115,7 @@ mod tests {
 
     #[test]
     fn suite_rows_match_profiler_labels() {
-        let rows = iso_capacity();
+        let rows = rows();
         assert_eq!(rows.len(), 13);
         assert_eq!(rows[0].label, "AlexNet-I");
     }

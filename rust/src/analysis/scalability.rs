@@ -1,15 +1,16 @@
 //! Scalability analysis (paper §4.3 → Figs 10–13): every technology
-//! EDAP-tuned independently at each capacity from 1 to 32 MB, then the
-//! workload suite evaluated on each design.
+//! EDAP-tuned independently at each capacity of the grid, then the
+//! workload suite evaluated on each design. The capacity grid is a
+//! parameter since the query-engine redesign (`repro experiment fig10
+//! --capacities 1,2,4`); [`CAPACITIES_MB`] is the paper's 1–32MB grid.
 
-use crate::device::bitcell::BitcellKind;
+use crate::engine::{Engine, TECH_SOT, TECH_SRAM, TECH_STT};
 use crate::nvsim::cache::CachePpa;
-use crate::nvsim::optimizer::tuned_cache;
 use crate::util::pool::par_map;
 use crate::util::stats::{mean, stddev};
 use crate::util::units::MB;
 use crate::workloads::memstats::Phase;
-use crate::workloads::profiler::{paper_suite, profile_default, Workload};
+use crate::workloads::profiler::{paper_suite, Workload};
 use super::model::evaluate;
 
 /// The capacity grid of Algorithm 1 / Fig 10 (MB).
@@ -19,18 +20,19 @@ pub const CAPACITIES_MB: [u64; 6] = [1, 2, 4, 8, 16, 32];
 #[derive(Debug, Clone)]
 pub struct PpaCurvePoint {
     pub capacity_mb: u64,
-    /// [SRAM, STT, SOT].
+    /// `[SRAM, STT, SOT]`.
     pub ppa: [CachePpa; 3],
 }
 
-/// Compute the Fig 10 PPA-vs-capacity curves (tuning runs in parallel).
-pub fn ppa_curves() -> Vec<PpaCurvePoint> {
-    par_map(&CAPACITIES_MB, |&mb| PpaCurvePoint {
+/// Compute the Fig 10 PPA-vs-capacity curves over `capacities_mb`
+/// (tuning runs in parallel through the engine's memo cache).
+pub fn ppa_curves(engine: &Engine, capacities_mb: &[u64]) -> Vec<PpaCurvePoint> {
+    par_map(capacities_mb, |&mb| PpaCurvePoint {
         capacity_mb: mb,
         ppa: [
-            tuned_cache(BitcellKind::Sram, mb * MB).ppa,
-            tuned_cache(BitcellKind::SttMram, mb * MB).ppa,
-            tuned_cache(BitcellKind::SotMram, mb * MB).ppa,
+            engine.tuned(TECH_SRAM, mb * MB).expect("builtin").ppa,
+            engine.tuned(TECH_STT, mb * MB).expect("builtin").ppa,
+            engine.tuned(TECH_SOT, mb * MB).expect("builtin").ppa,
         ],
     })
 }
@@ -39,13 +41,13 @@ pub fn ppa_curves() -> Vec<PpaCurvePoint> {
 #[derive(Debug, Clone)]
 pub struct ScalingPoint {
     pub capacity_mb: u64,
-    /// [STT, SOT] mean normalized energy across workloads.
+    /// `[STT, SOT]` mean normalized energy across workloads.
     pub energy_mean: [f64; 2],
     pub energy_std: [f64; 2],
-    /// [STT, SOT] mean normalized latency.
+    /// `[STT, SOT]` mean normalized latency.
     pub latency_mean: [f64; 2],
     pub latency_std: [f64; 2],
-    /// [STT, SOT] mean normalized EDP.
+    /// `[STT, SOT]` mean normalized EDP.
     pub edp_mean: [f64; 2],
     pub edp_std: [f64; 2],
 }
@@ -61,21 +63,21 @@ fn phase_workloads(phase: Phase) -> Vec<Workload> {
         .collect()
 }
 
-/// Scaling study for one phase: at each capacity, tune all three
-/// technologies and evaluate the phase's workloads.
-pub fn scaling_study(phase: Phase) -> Vec<ScalingPoint> {
+/// Scaling study for one phase: at each capacity of the grid, tune all
+/// three technologies and evaluate the phase's workloads.
+pub fn scaling_study(engine: &Engine, phase: Phase, capacities_mb: &[u64]) -> Vec<ScalingPoint> {
     let workloads = phase_workloads(phase);
-    par_map(&CAPACITIES_MB, |&mb| {
+    par_map(capacities_mb, |&mb| {
         let caps = [
-            tuned_cache(BitcellKind::Sram, mb * MB).ppa,
-            tuned_cache(BitcellKind::SttMram, mb * MB).ppa,
-            tuned_cache(BitcellKind::SotMram, mb * MB).ppa,
+            engine.tuned(TECH_SRAM, mb * MB).expect("builtin").ppa,
+            engine.tuned(TECH_STT, mb * MB).expect("builtin").ppa,
+            engine.tuned(TECH_SOT, mb * MB).expect("builtin").ppa,
         ];
         let mut energy = [Vec::new(), Vec::new()];
         let mut latency = [Vec::new(), Vec::new()];
         let mut edp = [Vec::new(), Vec::new()];
         for &w in &workloads {
-            let stats = profile_default(w, mb * MB).stats;
+            let stats = engine.profile_default(w, mb * MB).stats;
             let evals: Vec<_> = caps.iter().map(|c| evaluate(c, &stats)).collect();
             for t in 0..2 {
                 energy[t].push(evals[t + 1].total_energy() / evals[0].total_energy());
@@ -100,9 +102,17 @@ mod tests {
     use super::*;
     use crate::util::units::{MM2, NS};
 
+    fn curves() -> Vec<PpaCurvePoint> {
+        ppa_curves(Engine::shared(), &CAPACITIES_MB)
+    }
+
+    fn study(phase: Phase) -> Vec<ScalingPoint> {
+        scaling_study(Engine::shared(), phase, &CAPACITIES_MB)
+    }
+
     #[test]
     fn fig10_area_gap_widens_with_capacity() {
-        let curves = ppa_curves();
+        let curves = curves();
         let ratio = |p: &PpaCurvePoint, t: usize| p.ppa[0].area / p.ppa[t].area;
         let first = &curves[0];
         let last = curves.last().unwrap();
@@ -120,7 +130,7 @@ mod tests {
     #[test]
     fn fig10_latency_crossover_exists() {
         // Paper: SRAM reads faster below ~3MB; MRAM wins beyond ~4MB.
-        let curves = ppa_curves();
+        let curves = curves();
         let small = &curves[0]; // 1MB
         let large = curves.last().unwrap(); // 32MB
         assert!(
@@ -137,7 +147,7 @@ mod tests {
 
     #[test]
     fn fig10_stt_write_latency_always_worst() {
-        for p in ppa_curves() {
+        for p in curves() {
             assert!(p.ppa[1].write_latency > p.ppa[0].write_latency);
             assert!(p.ppa[1].write_latency > p.ppa[2].write_latency);
         }
@@ -146,7 +156,7 @@ mod tests {
     #[test]
     fn fig13_edp_reductions_grow_to_orders_of_magnitude() {
         // Paper: up to 65× (STT) and 95× (SOT) at large capacities.
-        let pts = scaling_study(Phase::Inference);
+        let pts = study(Phase::Inference);
         let last = pts.last().unwrap();
         let stt = 1.0 / last.edp_mean[0];
         let sot = 1.0 / last.edp_mean[1];
@@ -162,7 +172,7 @@ mod tests {
     fn fig11_energy_reduction_grows_with_capacity() {
         // Paper: up to 31.2× / 36.4× energy reduction.
         for phase in [Phase::Inference, Phase::Training] {
-            let pts = scaling_study(phase);
+            let pts = study(phase);
             let first = 1.0 / pts[0].energy_mean[1];
             let last = 1.0 / pts.last().unwrap().energy_mean[1];
             assert!(last > first, "{phase:?}: SOT energy advantage must grow");
@@ -172,12 +182,19 @@ mod tests {
 
     #[test]
     fn error_bars_are_finite_and_nonnegative() {
-        let pts = scaling_study(Phase::Training);
+        let pts = study(Phase::Training);
         for p in &pts {
             for t in 0..2 {
                 assert!(p.energy_std[t] >= 0.0 && p.energy_std[t].is_finite());
                 assert!(p.edp_std[t] >= 0.0 && p.edp_std[t].is_finite());
             }
         }
+    }
+
+    #[test]
+    fn custom_capacity_grid_is_respected() {
+        let pts = ppa_curves(Engine::shared(), &[2, 8]);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].capacity_mb, 8);
     }
 }

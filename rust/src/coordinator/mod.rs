@@ -2,10 +2,11 @@
 //!
 //! The paper's contribution is a *framework* (Fig 2): device
 //! characterization → cache tuning → workload profiling → roll-up →
-//! tables/figures. This module owns that pipeline end to end: the
-//! experiment runner (with parallel execution across experiments and
-//! persisted CSV results), the progress/timing report, and the run
-//! manifest.
+//! tables/figures. This module owns the orchestration of that pipeline:
+//! the experiment runner (parallel execution across experiments, all
+//! sharing one [`Engine`](crate::engine::Engine) so each pipeline stage
+//! computes at most once per unique key), persisted CSV results, and the
+//! run manifest with per-experiment engine-cache accounting.
 
 pub mod runner;
 

@@ -1,18 +1,20 @@
-//! Experiment runner: executes registry entries, persists CSVs, renders
-//! tables, and emits a run manifest + headline summary.
+//! Experiment runner: executes registry entries against a shared query
+//! engine, persists CSVs, renders tables, and emits a run manifest with
+//! per-experiment engine-cache accounting.
 
 use std::fs;
 use std::io::Write as _;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::time::Instant;
 
-use crate::experiments::{by_id, registry, Output};
+use crate::engine::{CacheCounts, Engine};
+use crate::experiments::{by_id, registry, Output, Params};
 use crate::util::pool::par_map;
 
 /// Runner configuration.
 #[derive(Debug, Clone)]
 pub struct RunnerConfig {
-    /// Directory for CSV outputs + manifest.
+    /// Directory for CSV outputs + manifest (`--results-dir`).
     pub results_dir: PathBuf,
     /// Print tables to stdout.
     pub print_tables: bool,
@@ -33,12 +35,16 @@ pub struct RunReport {
     pub id: &'static str,
     pub title: &'static str,
     pub seconds: f64,
+    /// Engine-cache traffic attributed to this experiment alone (exact
+    /// even under parallel execution: each experiment runs on its own
+    /// engine fork).
+    pub cache: CacheCounts,
     pub csv_files: Vec<PathBuf>,
     pub headlines: Vec<String>,
     pub rendered_tables: Vec<String>,
 }
 
-fn persist(output: &Output, id: &str, cfg: &RunnerConfig) -> Vec<PathBuf> {
+fn persist(output: &Output, cfg: &RunnerConfig) -> Vec<PathBuf> {
     // Create the results directory up front: on a fresh checkout the first
     // `repro all` must not emit a warning per CSV before `write_manifest`
     // (which runs last) creates it.
@@ -57,17 +63,26 @@ fn persist(output: &Output, id: &str, cfg: &RunnerConfig) -> Vec<PathBuf> {
             files.push(path);
         }
     }
-    let _ = id;
     files
 }
 
-/// Run a single experiment by id. Returns `None` for unknown ids.
-pub fn run_one(id: &str, cfg: &RunnerConfig) -> Option<RunReport> {
+/// Run a single experiment by id against `engine`, with `params` plumbed
+/// through to the generator. Returns `None` for unknown ids.
+pub fn run_one(
+    engine: &Engine,
+    id: &str,
+    params: &Params,
+    cfg: &RunnerConfig,
+) -> Option<RunReport> {
     let exp = by_id(id)?;
+    // A fork shares the engine's memo caches but counts only this
+    // experiment's traffic — the manifest's per-experiment line.
+    let scoped = engine.fork();
     let start = Instant::now();
-    let output = (exp.run)();
+    let output = (exp.run)(&scoped, params);
     let seconds = start.elapsed().as_secs_f64();
-    let csv_files = persist(&output, exp.id, cfg);
+    let cache = scoped.stats();
+    let csv_files = persist(&output, cfg);
     let rendered: Vec<String> = output.tables.iter().map(|t| t.render()).collect();
     if cfg.print_tables {
         for r in &rendered {
@@ -82,21 +97,28 @@ pub fn run_one(id: &str, cfg: &RunnerConfig) -> Option<RunReport> {
         id: exp.id,
         title: exp.title,
         seconds,
+        cache,
         csv_files,
         headlines: output.headlines,
         rendered_tables: rendered,
     })
 }
 
-/// Run the full registry. Experiments execute in parallel (they share the
-/// memoized cache-tuning results); tables print in registry order.
-pub fn run_all(cfg: &RunnerConfig) -> Vec<RunReport> {
+/// Run the full registry with default params. Experiments execute in
+/// parallel against the shared engine (characterization, tuning and
+/// profiling each compute at most once per unique key across the whole
+/// run — the manifest's cache counters verify this); tables print in
+/// registry order.
+pub fn run_all(engine: &Engine, cfg: &RunnerConfig) -> Vec<RunReport> {
     let ids: Vec<&'static str> = registry().iter().map(|e| e.id).collect();
     let quiet = RunnerConfig {
         print_tables: false,
         ..cfg.clone()
     };
-    let reports = par_map(&ids, |id| run_one(id, &quiet).expect("registry id"));
+    let params = Params::default();
+    let reports = par_map(&ids, |id| {
+        run_one(engine, id, &params, &quiet).expect("registry id")
+    });
     if cfg.print_tables {
         for r in &reports {
             for t in &r.rendered_tables {
@@ -108,14 +130,16 @@ pub fn run_all(cfg: &RunnerConfig) -> Vec<RunReport> {
             println!("  [{} completed in {:.2}s]\n", r.id, r.seconds);
         }
     }
-    write_manifest(&reports, cfg);
+    write_manifest(engine, &reports, cfg);
     reports
 }
 
-/// Persist the run manifest (headlines per experiment) for EXPERIMENTS.md.
-fn write_manifest(reports: &[RunReport], cfg: &RunnerConfig) {
+/// Persist the run manifest: headlines + engine-cache counters per
+/// experiment, and the engine-wide totals that verify each pipeline stage
+/// computed at most once per unique key.
+fn write_manifest(engine: &Engine, reports: &[RunReport], cfg: &RunnerConfig) {
     let path = cfg.results_dir.join("manifest.txt");
-    if let Some(parent) = Path::new(&path).parent() {
+    if let Some(parent) = path.parent() {
         let _ = fs::create_dir_all(parent);
     }
     if let Ok(mut f) = fs::File::create(&path) {
@@ -124,7 +148,18 @@ fn write_manifest(reports: &[RunReport], cfg: &RunnerConfig) {
             for h in &r.headlines {
                 let _ = writeln!(f, "    {h}");
             }
+            if r.cache.calls() > 0 {
+                let _ = writeln!(f, "    engine cache: {}", r.cache.summary());
+            }
         }
+        let totals = engine.totals();
+        let _ = writeln!(f, "engine totals: {}", totals.summary());
+        let _ = writeln!(
+            f,
+            "(misses = unique pipeline computations: {} characterizations, \
+             {} tunings, {} profiles across the whole run)",
+            totals.characterize.misses, totals.tune.misses, totals.profile.misses
+        );
     }
 }
 
@@ -132,22 +167,26 @@ fn write_manifest(reports: &[RunReport], cfg: &RunnerConfig) {
 mod tests {
     use super::*;
 
-    fn test_cfg() -> RunnerConfig {
+    fn test_cfg(tag: &str) -> RunnerConfig {
         RunnerConfig {
-            results_dir: std::env::temp_dir().join("deepnvm_runner_test"),
+            results_dir: std::env::temp_dir().join(format!("deepnvm_runner_{tag}")),
             print_tables: false,
         }
     }
 
+    fn run(id: &str, cfg: &RunnerConfig) -> Option<RunReport> {
+        run_one(Engine::shared(), id, &Params::default(), cfg)
+    }
+
     #[test]
     fn unknown_id_returns_none() {
-        assert!(run_one("fig99", &test_cfg()).is_none());
+        assert!(run("fig99", &test_cfg("unknown")).is_none());
     }
 
     #[test]
     fn table3_runs_and_persists_csv() {
-        let cfg = test_cfg();
-        let r = run_one("table3", &cfg).unwrap();
+        let cfg = test_cfg("table3");
+        let r = run("table3", &cfg).unwrap();
         assert_eq!(r.id, "table3");
         assert!(!r.csv_files.is_empty());
         assert!(r.csv_files[0].exists());
@@ -156,7 +195,39 @@ mod tests {
 
     #[test]
     fn fig1_report_carries_rendered_table() {
-        let r = run_one("fig1", &test_cfg()).unwrap();
+        let r = run("fig1", &test_cfg("fig1")).unwrap();
         assert!(r.rendered_tables[0].contains("1080 Ti"));
+    }
+
+    #[test]
+    fn cache_accounting_shows_shared_work_computing_once() {
+        // On a fresh engine, table2's five tunings all miss; a second run
+        // of the same experiment is all hits — the "each stage at most
+        // once" guarantee the `repro all` manifest records.
+        let engine = Engine::new();
+        let cfg = test_cfg("cache_counts");
+        let first = run_one(&engine, "table2", &Params::default(), &cfg).unwrap();
+        assert_eq!(first.cache.tune.misses, 5, "sram@3, stt@3/7, sot@3/10");
+        assert_eq!(first.cache.tune.hits, 0);
+        let second = run_one(&engine, "table2", &Params::default(), &cfg).unwrap();
+        assert_eq!(second.cache.tune.misses, 0, "second run reuses every tuning");
+        assert_eq!(second.cache.tune.hits, 5);
+        let totals = engine.totals();
+        assert_eq!(totals.tune.misses, 5);
+        assert_eq!(totals.characterize.misses, 3, "one characterization per technology");
+        let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    }
+
+    #[test]
+    fn params_reach_the_generator() {
+        let cfg = test_cfg("params");
+        let params = Params { capacities_mb: Some(vec![2]), ..Params::default() };
+        let r = run_one(Engine::shared(), "fig10", &params, &cfg).unwrap();
+        assert!(
+            r.headlines[0].contains("at 2MB"),
+            "capacity grid override must reach the generator: {}",
+            r.headlines[0]
+        );
+        let _ = std::fs::remove_dir_all(&cfg.results_dir);
     }
 }

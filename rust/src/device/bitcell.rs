@@ -7,11 +7,20 @@
 //! land on Table 1 (STT 0.34×, SOT 0.29× of the foundry SRAM cell) — the
 //! paper's own values are likewise normalized against a proprietary
 //! foundry cell.
+//!
+//! Since the query-engine redesign, a characterized [`BitcellParams`] is
+//! *self-describing*: alongside the Table 1 electricals it carries the
+//! [`NvCal`] calibration card stamped from its
+//! [`TechSpec`](crate::engine::TechSpec), so the cache layers read data
+//! instead of dispatching on a closed technology enum.
 
 use super::finfet::card;
 use crate::util::units::UM2;
 
-/// Memory technology of a bitcell.
+/// The three technologies the paper evaluates. Since the query-engine
+/// redesign this enum is only *convenience sugar* for the built-in
+/// [`TechSpec`](crate::engine::TechSpec)s — the pipeline itself is driven
+/// by descriptors, and user-defined technologies never appear here.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BitcellKind {
     Sram,
@@ -32,6 +41,16 @@ impl BitcellKind {
         }
     }
 
+    /// Registry id of the built-in [`TechSpec`](crate::engine::TechSpec)
+    /// for this kind.
+    pub fn tech_id(&self) -> &'static str {
+        match self {
+            BitcellKind::Sram => "sram",
+            BitcellKind::SttMram => "stt",
+            BitcellKind::SotMram => "sot",
+        }
+    }
+
     /// Whether the technology is non-volatile (zero cell retention power).
     pub fn non_volatile(&self) -> bool {
         !matches!(self, BitcellKind::Sram)
@@ -42,28 +61,81 @@ impl BitcellKind {
 /// foundry cells are 0.070–0.074 µm²; the paper normalizes against one.
 pub const SRAM_CELL_AREA: f64 = 0.074 * UM2;
 
-/// Cell-height factors in contacted-poly pitches, per topology.
-/// Calibrated to Table 1's normalized areas (see module docs).
-const STT_HEIGHT_CPP: f64 = 1.165; // 1T1R: wide MTJ via + source contact
-const SOT_HEIGHT_CPP: f64 = 0.995; // 2T1R shared-rail layout (Seo & Roy)
+/// STT (1T1R) cell height in contacted-poly pitches: wide MTJ via +
+/// source contact. Calibrated to Table 1's normalized areas (module docs).
+pub const STT_HEIGHT_CPP: f64 = 1.165;
+/// SOT (2T1R) cell height in contacted-poly pitches: shared-rail layout
+/// (Seo & Roy).
+pub const SOT_HEIGHT_CPP: f64 = 0.995;
+
+/// Layout area (m²) of an MRAM cell occupying `active_fins` access-device
+/// fins (plus one dummy fin) at `height_cpp` contacted-poly pitches of
+/// height — the generic fin-grid rule every descriptor-defined technology
+/// shares.
+pub fn mram_cell_area(active_fins: u32, height_cpp: f64) -> f64 {
+    ((active_fins + 1) as f64 * card::FIN_PITCH) * (height_cpp * card::CPP)
+}
 
 /// Layout area (m²) of a 1T1R STT cell with `write_fins` access fins
 /// (read shares the same device).
 pub fn stt_cell_area(write_fins: u32) -> f64 {
-    ((write_fins + 1) as f64 * card::FIN_PITCH) * (STT_HEIGHT_CPP * card::CPP)
+    mram_cell_area(write_fins, STT_HEIGHT_CPP)
 }
 
 /// Layout area (m²) of a 2T1R SOT cell with separate write and read
 /// devices (plus one dummy fin between them).
 pub fn sot_cell_area(write_fins: u32, read_fins: u32) -> f64 {
-    ((write_fins + read_fins + 1) as f64 * card::FIN_PITCH) * (SOT_HEIGHT_CPP * card::CPP)
+    mram_cell_area(write_fins + read_fins, SOT_HEIGHT_CPP)
+}
+
+/// Per-technology calibration for the cache-level (NVSim-class) model —
+/// the constants NVSim reads from its technology/cell files. Stamped into
+/// every [`BitcellParams`] from its [`TechSpec`](crate::engine::TechSpec),
+/// so [`crate::nvsim`] needs no technology dispatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NvCal {
+    /// Cache-array cell area multiplier over the bitcell layout area
+    /// (logic-rule performance cells for SRAM, MTJ via landing for MRAM).
+    pub cell_area_mult: f64,
+    /// Cell aspect ratio (width/height) for wire-length geometry.
+    pub cell_aspect: f64,
+    /// Write-driver circuitry area per column, per ampere of write drive
+    /// (m²/A).
+    pub wd_area_per_amp: f64,
+    /// Leakage density of the write-driver circuitry (W/m²).
+    pub wd_leak_density: f64,
+    /// Hot-operation multiplier on cell leakage (L2 junction temperature
+    /// vs the room-temperature device characterization).
+    pub temp_leak_mult: f64,
+    /// Column write-drive current the write drivers are sized for (A).
+    pub i_write: f64,
+    /// Full-swing bitline discipline (SRAM-style): precharge before every
+    /// access and bitline-limited sensing with no current-sense floor.
+    /// `false` selects MRAM-style current sensing.
+    pub precharge: bool,
+    /// Differential (read-modify) writes: only toggled bits are written,
+    /// with a verify-read phase in front of the cell write.
+    pub diff_write: bool,
+    /// Current-sense-amplifier + reference-path energy per sensed bit (J)
+    /// on top of the bitcell-level sense energy; zero for full-swing SRAM.
+    pub csa_overhead: f64,
+    /// Fixed cache-level read-latency adder (s), e.g. SOT's offset-
+    /// cancelled CSA double-sampling.
+    pub t_read_extra: f64,
+    /// Fixed cache-level write-latency adder (s), e.g. SOT's bipolar rail
+    /// bias settle.
+    pub t_write_extra: f64,
 }
 
 /// Full electrical + physical characterization record for one bitcell —
-/// exactly the Table 1 rows, in SI units. Consumed by [`crate::nvsim`].
-#[derive(Debug, Clone)]
+/// exactly the Table 1 rows, in SI units, plus the carried [`NvCal`].
+/// Consumed by [`crate::nvsim`].
+#[derive(Debug, Clone, PartialEq)]
 pub struct BitcellParams {
-    pub kind: BitcellKind,
+    /// Display name of the technology this cell was characterized for.
+    pub tech: String,
+    /// Cache-level calibration stamped from the technology descriptor.
+    pub nv: NvCal,
     /// Sense (read) latency (s).
     pub sense_latency: f64,
     /// Sense (read) energy (J).
@@ -107,6 +179,7 @@ impl BitcellParams {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::TechSpec;
 
     #[test]
     fn table1_normalized_areas() {
@@ -135,13 +208,22 @@ mod tests {
         assert!(BitcellKind::SttMram.non_volatile());
         assert!(!BitcellKind::Sram.non_volatile());
         assert_eq!(BitcellKind::SotMram.name(), "SOT-MRAM");
+        assert_eq!(BitcellKind::SttMram.tech_id(), "stt");
         assert_eq!(BitcellKind::ALL.len(), 3);
+    }
+
+    #[test]
+    fn generic_area_rule_matches_topology_helpers() {
+        // The spec-driven rule must reproduce the paper topologies exactly.
+        assert_eq!(mram_cell_area(4, STT_HEIGHT_CPP).to_bits(), stt_cell_area(4).to_bits());
+        assert_eq!(mram_cell_area(4, SOT_HEIGHT_CPP).to_bits(), sot_cell_area(3, 1).to_bits());
     }
 
     #[test]
     fn write_helpers() {
         let p = BitcellParams {
-            kind: BitcellKind::SttMram,
+            tech: "STT-MRAM".into(),
+            nv: TechSpec::stt().nv,
             sense_latency: 1.0,
             sense_energy: 1.0,
             write_latency_set: 2.0,

@@ -1,24 +1,34 @@
-//! The paper's §3.1 characterization procedure, end to end.
+//! The paper's §3.1 characterization procedure, end to end — driven by a
+//! [`TechSpec`] descriptor since the query-engine redesign.
 //!
-//! For each MRAM flavor: sweep access-device fin counts, run
+//! For each MRAM-class technology: sweep access-device fin counts, run
 //! pulse-width-to-failure bisection for both write directions at the
 //! worst-delay corner, measure write energy at the minimal pulse at the
 //! worst-power corner, time the bitline sense to the 25 mV margin, and
 //! pick the fin count minimizing the per-bitcell EDAP (energy × delay ×
 //! area) — "the optimal balance between the latency, energy, and area".
+//! Every technology-dependent constant comes from the spec's
+//! [`DeviceCal`](crate::engine::DeviceCal) card, so a descriptor file
+//! (see [`crate::engine::descriptor`]) characterizes end to end with no
+//! Rust changes.
 //!
 //! Calibration constants (`cal`) stand in for the proprietary parts of the
 //! paper's flow (PDK parasitics, write-driver topology). They are fixed
 //! once, documented, and regression-tested: `table1_regression` asserts the
 //! chosen cells land within a few percent of the paper's Table 1.
 
-use super::bitcell::{sot_cell_area, stt_cell_area, BitcellKind, BitcellParams, SRAM_CELL_AREA};
+use super::bitcell::{mram_cell_area, BitcellKind, BitcellParams, SRAM_CELL_AREA};
 use super::circuit::{pulse_to_failure, simulate_sense, simulate_write};
 use super::finfet::{card, Corner, FinFet};
-use super::mtj::{Mtj, WriteDir};
+use super::mtj::WriteDir;
+
+use crate::engine::spec::{ReadPort, TechClass, TechSpec};
+use crate::util::err::msg;
 
 /// Calibration card: the constants the paper gets from its commercial PDK
 /// and driver design, fixed here against public 16nm data + Table 1.
+/// These are the values the built-in [`TechSpec`]s carry; custom
+/// descriptors supply their own.
 pub mod cal {
     /// Bitline capacitance on the STT (shared read/write) sense path (F):
     /// a 512-row bitline (drain caps + wire) at 16nm.
@@ -84,31 +94,28 @@ pub struct FinSweepPoint {
 /// Full report for one technology: the sweep and the chosen cell.
 #[derive(Debug, Clone)]
 pub struct CharacterizationReport {
-    pub kind: BitcellKind,
+    /// Display name of the characterized technology.
+    pub tech: String,
     pub sweep: Vec<FinSweepPoint>,
     pub chosen: BitcellParams,
 }
 
-fn mtj_for(kind: BitcellKind) -> Mtj {
-    match kind {
-        BitcellKind::SttMram => Mtj::stt(),
-        BitcellKind::SotMram => Mtj::sot(),
-        BitcellKind::Sram => unreachable!("SRAM has no MTJ"),
-    }
-}
-
-/// Characterize one MRAM bitcell at a given fin configuration. Returns
-/// `None` if either write direction cannot complete within 100 ns, or the
-/// design point violates a reliability limit at the design corner (MTJ
-/// oxide breakdown for STT, heavy-metal rail electromigration for SOT).
-fn characterize_mram(kind: BitcellKind, write_fins: u32, read_fins: u32) -> Option<BitcellParams> {
-    let mtj = mtj_for(kind);
+/// Characterize one MRAM-class bitcell at a given fin configuration.
+/// Returns `None` if either write direction cannot complete within 100 ns,
+/// or the design point violates a reliability limit declared by the spec
+/// at the design corner (MTJ oxide breakdown, write-rail
+/// electromigration).
+fn characterize_mram(
+    spec: &TechSpec,
+    read_port: ReadPort,
+    write_fins: u32,
+    read_fins: u32,
+) -> Option<BitcellParams> {
+    let d = &spec.device;
+    let mtj = spec.mtj.as_ref().expect("mram-class spec carries mtj parameters").to_mtj();
     // Worst-delay corner for latency, per the paper.
     let wd_access = FinFet::nmos(write_fins, Corner::WorstDelay);
-    let (derate_set, derate_reset) = match kind {
-        BitcellKind::SttMram => (cal::STT_SET_DERATE, 1.0),
-        _ => (1.0, 1.0),
-    };
+    let (derate_set, derate_reset) = (d.set_derate, d.reset_derate);
     let t_set = pulse_to_failure(&wd_access, &mtj, WriteDir::Set, 1e-12, 100e-9, derate_set)?;
     let t_reset =
         pulse_to_failure(&wd_access, &mtj, WriteDir::Reset, 1e-12, 100e-9, derate_reset)?;
@@ -116,20 +123,15 @@ fn characterize_mram(kind: BitcellKind, write_fins: u32, read_fins: u32) -> Opti
     // Reliability screens at the design corner.
     let set_tr = simulate_write(&wd_access, &mtj, WriteDir::Set, t_set, derate_set);
     let reset_tr = simulate_write(&wd_access, &mtj, WriteDir::Reset, t_reset, derate_reset);
-    match kind {
-        BitcellKind::SttMram => {
-            if set_tr.v_mtj_peak > cal::V_MTJ_BREAKDOWN
-                || reset_tr.v_mtj_peak > cal::V_MTJ_BREAKDOWN
-            {
-                return None; // oxide breakdown
-            }
+    if let Some(vbd) = d.v_mtj_breakdown {
+        if set_tr.v_mtj_peak > vbd || reset_tr.v_mtj_peak > vbd {
+            return None; // oxide breakdown
         }
-        BitcellKind::SotMram => {
-            if set_tr.i_peak > cal::RAIL_EM_LIMIT || reset_tr.i_peak > cal::RAIL_EM_LIMIT {
-                return None; // rail electromigration
-            }
+    }
+    if let Some(em) = d.rail_em_limit {
+        if set_tr.i_peak > em || reset_tr.i_peak > em {
+            return None; // rail electromigration
         }
-        BitcellKind::Sram => unreachable!(),
     }
 
     // Worst-power corner for energy, at the worst-delay pulse width (the
@@ -138,30 +140,24 @@ fn characterize_mram(kind: BitcellKind, write_fins: u32, read_fins: u32) -> Opti
     let e_loop_set = simulate_write(&wp_access, &mtj, WriteDir::Set, t_set, derate_set).loop_energy;
     let e_loop_reset =
         simulate_write(&wp_access, &mtj, WriteDir::Reset, t_reset, derate_reset).loop_energy;
-    let ovh = match kind {
-        BitcellKind::SttMram => cal::WRITE_OVERHEAD_STT,
-        _ => cal::WRITE_OVERHEAD_SOT,
-    };
+    let ovh = d.write_overhead;
 
-    // Sense path: STT reads through the (shared) write access device; SOT
-    // through its dedicated read device at a higher, disturb-free bias.
-    let (c_bl, v_read) = match kind {
-        BitcellKind::SttMram => (cal::C_BITLINE_STT, cal::V_READ_STT),
-        _ => (cal::C_BITLINE_SOT, cal::V_READ_SOT),
-    };
+    // Sense path: shared topologies read through the write access device;
+    // dedicated ports read through their own device at the spec's bias.
     let read_dev = FinFet::nmos(read_fins, Corner::WorstDelay);
-    let sense = simulate_sense(c_bl, v_read, read_dev.ron(), mtj.r_p, mtj.r_ap, cal::T_SA);
-    let ovh_idx = if kind == BitcellKind::SttMram { 0 } else { 1 };
-    let sense_energy = sense.energy + cal::SENSE_OVERHEAD[ovh_idx] * c_bl * card::VDD * card::VDD;
+    let sense = simulate_sense(d.c_bitline, d.v_read, read_dev.ron(), mtj.r_p, mtj.r_ap, cal::T_SA);
+    let sense_energy = sense.energy + d.sense_overhead * d.c_bitline * card::VDD * card::VDD;
 
-    let area = match kind {
-        BitcellKind::SttMram => stt_cell_area(write_fins),
-        BitcellKind::SotMram => sot_cell_area(write_fins, read_fins),
-        BitcellKind::Sram => unreachable!(),
+    // Fin-grid layout: dedicated read ports occupy their own fins.
+    let extra_read = match read_port {
+        ReadPort::Dedicated => read_fins,
+        ReadPort::Shared => 0,
     };
+    let area = mram_cell_area(write_fins + extra_read, d.height_cpp);
 
     Some(BitcellParams {
-        kind,
+        tech: spec.name.clone(),
+        nv: spec.nv,
         sense_latency: sense.t_sense,
         sense_energy,
         write_latency_set: t_set,
@@ -177,7 +173,7 @@ fn characterize_mram(kind: BitcellKind, write_fins: u32, read_fins: u32) -> Opti
 
 /// Analytic characterization of the foundry 6T SRAM cell (the baseline is
 /// a given, not a design variable — the paper uses the foundry cell).
-fn characterize_sram() -> BitcellParams {
+fn characterize_sram(spec: &TechSpec) -> BitcellParams {
     let pd = FinFet::nmos(1, Corner::WorstDelay);
     // Read: single-fin pull-down discharges the bitline to the margin.
     let i_read = pd.ion();
@@ -193,7 +189,8 @@ fn characterize_sram() -> BitcellParams {
     let write_energy = 1.10 * cal::C_BITLINE_STT * card::VDD * card::VDD;
     let leak = FinFet::nmos(1, Corner::WorstPower).leakage_power() * cal::SRAM_LEAK_FINS;
     BitcellParams {
-        kind: BitcellKind::Sram,
+        tech: spec.name.clone(),
+        nv: spec.nv,
         sense_latency,
         sense_energy,
         write_latency_set: write_latency,
@@ -213,27 +210,42 @@ fn edap_of(p: &BitcellParams) -> f64 {
     e * d * p.area
 }
 
-/// Characterize one technology: sweep fins, pick the per-bitcell
-/// EDAP-optimal configuration.
-pub fn characterize_kind(kind: BitcellKind) -> CharacterizationReport {
-    if kind == BitcellKind::Sram {
-        let chosen = characterize_sram();
-        return CharacterizationReport {
-            kind,
-            sweep: vec![FinSweepPoint {
-                write_fins: 1,
-                read_fins: 1,
-                edap: edap_of(&chosen),
-                params: Some(chosen.clone()),
-            }],
-            chosen,
-        };
+/// Characterize one technology descriptor: sweep the spec's fin range and
+/// pick the per-bitcell EDAP-optimal configuration. Errors when an
+/// MRAM-class spec has no MTJ parameters or no fin count switches the
+/// cell (infeasible descriptor).
+pub fn characterize_spec(spec: &TechSpec) -> crate::Result<CharacterizationReport> {
+    let read_port = match spec.class {
+        TechClass::Sram => {
+            let chosen = characterize_sram(spec);
+            return Ok(CharacterizationReport {
+                tech: spec.name.clone(),
+                sweep: vec![FinSweepPoint {
+                    write_fins: 1,
+                    read_fins: 1,
+                    edap: edap_of(&chosen),
+                    params: Some(chosen.clone()),
+                }],
+                chosen,
+            });
+        }
+        TechClass::Mram { read_port } => read_port,
+    };
+    if spec.mtj.is_none() {
+        return Err(msg(format!(
+            "technology '{}' is mram-class but carries no [mtj] parameters",
+            spec.id
+        )));
     }
     let mut sweep = Vec::new();
-    for wf in cal::FIN_SWEEP {
-        // SOT reads through a dedicated minimum device; STT shares.
-        let rf = if kind == BitcellKind::SotMram { 1 } else { wf };
-        let params = characterize_mram(kind, wf, rf);
+    for wf in spec.device.fin_min..=spec.device.fin_max {
+        // Dedicated ports read through their own (typically minimum)
+        // device; shared topologies read through the write device.
+        let rf = match read_port {
+            ReadPort::Dedicated => spec.device.read_fins,
+            ReadPort::Shared => wf,
+        };
+        let params = characterize_mram(spec, read_port, wf, rf);
         let edap = params.as_ref().map(edap_of).unwrap_or(f64::INFINITY);
         sweep.push(FinSweepPoint {
             write_fins: wf,
@@ -246,13 +258,25 @@ pub fn characterize_kind(kind: BitcellKind) -> CharacterizationReport {
         .iter()
         .min_by(|a, b| a.edap.partial_cmp(&b.edap).unwrap())
         .and_then(|p| p.params.clone())
-        .expect("at least one fin count must switch the cell");
-    CharacterizationReport { kind, sweep, chosen }
+        .ok_or_else(|| {
+            msg(format!(
+                "technology '{}': no fin count in {}..={} switches the cell",
+                spec.id, spec.device.fin_min, spec.device.fin_max
+            ))
+        })?;
+    Ok(CharacterizationReport { tech: spec.name.clone(), sweep, chosen })
 }
 
-/// Characterize all three technologies (SRAM, STT-MRAM, SOT-MRAM), in the
-/// paper's order. This is the module's main entry point; results feed the
-/// NVSim-level cache exploration.
+/// Characterize one built-in technology (convenience wrapper over
+/// [`characterize_spec`]).
+pub fn characterize_kind(kind: BitcellKind) -> CharacterizationReport {
+    characterize_spec(&TechSpec::builtin(kind)).expect("built-in technology characterizes")
+}
+
+/// Characterize all three built-in technologies (SRAM, STT-MRAM,
+/// SOT-MRAM), in the paper's order. Results feed the NVSim-level cache
+/// exploration; the [`Engine`](crate::engine::Engine) memoizes this per
+/// technology.
 pub fn characterize() -> [BitcellParams; 3] {
     [
         characterize_kind(BitcellKind::Sram).chosen,
@@ -371,6 +395,29 @@ mod tests {
         let [_, stt, sot] = characterize();
         assert!(stt.write_latency() / sot.write_latency() > 10.0);
         assert!(stt.write_energy() / sot.write_energy() > 5.0);
+    }
+
+    #[test]
+    fn infeasible_spec_reports_an_error_not_a_panic() {
+        // A weak device sweep (1 fin only on the high-Ic STT stack) never
+        // switches → the descriptor path must surface a clean error.
+        let mut spec = TechSpec::stt();
+        spec.id = "weak".into();
+        spec.device.fin_min = 1;
+        spec.device.fin_max = 1;
+        let err = characterize_spec(&spec).unwrap_err().to_string();
+        assert!(err.contains("weak"), "{err}");
+    }
+
+    #[test]
+    fn spec_path_matches_kind_path_bit_for_bit() {
+        let via_kind = characterize_kind(BitcellKind::SotMram).chosen;
+        let via_spec = characterize_spec(&TechSpec::sot()).unwrap().chosen;
+        assert_eq!(via_kind, via_spec);
+        assert_eq!(
+            via_kind.write_latency_set.to_bits(),
+            via_spec.write_latency_set.to_bits()
+        );
     }
 
     fn edap_of(p: &BitcellParams) -> f64 {

@@ -20,7 +20,9 @@
 //!   (fin-count × contacted-poly-pitch grid, after Seo & Roy).
 //! * [`characterize`] — the paper's §3.1 procedure end-to-end: fin-count
 //!   sweeps, pulse-width-to-failure bisection, sense-margin timing, and the
-//!   per-bitcell EDAP pick that yields Table 1.
+//!   per-bitcell EDAP pick that yields Table 1. Driven by
+//!   [`TechSpec`](crate::engine::TechSpec) descriptors, so user-defined
+//!   technologies characterize with no Rust changes.
 //!
 //! Outputs are [`BitcellParams`] records consumed by [`crate::nvsim`].
 
@@ -30,7 +32,7 @@ pub mod circuit;
 pub mod finfet;
 pub mod mtj;
 
-pub use bitcell::{BitcellKind, BitcellParams};
-pub use characterize::{characterize, characterize_kind, CharacterizationReport};
+pub use bitcell::{BitcellKind, BitcellParams, NvCal};
+pub use characterize::{characterize, characterize_kind, characterize_spec, CharacterizationReport};
 pub use finfet::{Corner, FinFet};
 pub use mtj::{Mtj, MtjState};

@@ -1,0 +1,437 @@
+//! The technology descriptor-file format (`*.tech`).
+//!
+//! A minimal TOML-like dialect (hand-rolled — the offline registry has no
+//! `serde`/`toml`): `[section]` headers, `key = value` lines, `#`
+//! comments. Values are strings (optionally quoted), numbers (`4e-15`,
+//! `0.30`), booleans, or the literal `none` for optional limits. This is
+//! the NVSim/DESTINY lineage of config-driven technology files applied to
+//! DeepNVM++: a new NVM technology is a file, not a Rust change.
+//!
+//! ```text
+//! [tech]
+//! id = "my_reram"
+//! name = "ReRAM-like"
+//! class = "mram"            # sram | mram
+//! read_port = "dedicated"   # shared | dedicated   (mram only)
+//!
+//! [mtj]                      # compact-model parameters (mram only)
+//! r_p = 10000
+//! r_ap = 25000
+//! ic_set = 90e-6
+//! ic_reset = 85e-6
+//! tau0 = 150e-12
+//! r_rail = 0                 # 0 = write current crosses the junction
+//!
+//! [device]                   # characterization calibration
+//! c_bitline = 30e-15
+//! v_read = 0.2
+//! sense_overhead = 1.5
+//! write_overhead_set = 1.6
+//! write_overhead_reset = 1.8
+//! height_cpp = 1.05
+//! fin_min = 1
+//! fin_max = 6
+//! v_mtj_breakdown = none     # optional reliability screens
+//! rail_em_limit = none
+//!
+//! [nv]                       # cache-level calibration
+//! cell_area_mult = 1.9
+//! cell_aspect = 1.3
+//! wd_area_per_amp = 1.5e-7
+//! wd_leak_density = 1.6e6
+//! i_write = 180e-6
+//! csa_overhead = 0.4e-12
+//! ```
+//!
+//! [`serialize`] emits every field explicitly with Rust's shortest
+//! round-trip float formatting, so `parse(serialize(spec)) == spec`
+//! exactly (see the golden tests).
+
+use std::collections::BTreeMap;
+
+use super::spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec};
+
+use crate::device::bitcell::NvCal;
+use crate::util::err::msg;
+
+struct Fields {
+    values: BTreeMap<(String, String), String>,
+}
+
+impl Fields {
+    fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.values.get(&(section.to_string(), key.to_string())).map(|s| s.as_str())
+    }
+
+    fn req(&self, section: &str, key: &str) -> crate::Result<&str> {
+        self.get(section, key)
+            .ok_or_else(|| msg(format!("descriptor missing [{section}] {key}")))
+    }
+
+    fn f64(&self, section: &str, key: &str) -> crate::Result<f64> {
+        let v = self.req(section, key)?;
+        v.parse::<f64>()
+            .map_err(|_| msg(format!("[{section}] {key}: invalid number {v:?}")))
+    }
+
+    fn f64_or(&self, section: &str, key: &str, default: f64) -> crate::Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(_) => self.f64(section, key),
+        }
+    }
+
+    fn opt_f64(&self, section: &str, key: &str) -> crate::Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("none") => Ok(None),
+            Some(_) => self.f64(section, key).map(Some),
+        }
+    }
+
+    fn u32_or(&self, section: &str, key: &str, default: u32) -> crate::Result<u32> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u32>()
+                .map_err(|_| msg(format!("[{section}] {key}: invalid integer {v:?}"))),
+        }
+    }
+
+    fn bool_or(&self, section: &str, key: &str, default: bool) -> crate::Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(msg(format!("[{section}] {key}: expected true/false, got {v:?}"))),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted values (`name = "x #1"`).
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_fields(text: &str) -> crate::Result<Fields> {
+    let mut values = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| msg(format!("line {}: unterminated section header", i + 1)))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| msg(format!("line {}: expected `key = value`", i + 1)))?;
+        let value = v.trim().trim_matches('"').to_string();
+        values.insert((section.clone(), k.trim().to_string()), value);
+    }
+    Ok(Fields { values })
+}
+
+/// Every key the format understands, per section. Unknown keys are an
+/// error: a misspelled optional field (`rail_em_limits`) must not
+/// silently fall back to its default and skip a reliability screen.
+const KNOWN_KEYS: &[(&str, &[&str])] = &[
+    ("tech", &["id", "name", "class", "read_port"]),
+    ("mtj", &["r_p", "r_ap", "ic_set", "ic_reset", "tau0", "r_rail"]),
+    (
+        "device",
+        &[
+            "c_bitline",
+            "v_read",
+            "sense_overhead",
+            "write_overhead_set",
+            "write_overhead_reset",
+            "set_derate",
+            "reset_derate",
+            "v_mtj_breakdown",
+            "rail_em_limit",
+            "height_cpp",
+            "fin_min",
+            "fin_max",
+            "read_fins",
+        ],
+    ),
+    (
+        "nv",
+        &[
+            "cell_area_mult",
+            "cell_aspect",
+            "wd_area_per_amp",
+            "wd_leak_density",
+            "temp_leak_mult",
+            "i_write",
+            "precharge",
+            "diff_write",
+            "csa_overhead",
+            "t_read_extra",
+            "t_write_extra",
+        ],
+    ),
+];
+
+fn check_known(f: &Fields) -> crate::Result<()> {
+    for (section, key) in f.values.keys() {
+        let known = KNOWN_KEYS
+            .iter()
+            .find(|(s, _)| *s == section.as_str())
+            .ok_or_else(|| msg(format!("unknown section [{section}]")))?
+            .1;
+        if !known.contains(&key.as_str()) {
+            return Err(msg(format!(
+                "unknown key '{key}' in [{section}] (known: {})",
+                known.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Parse a descriptor file's text into a [`TechSpec`].
+pub fn parse(text: &str) -> crate::Result<TechSpec> {
+    let f = split_fields(text)?;
+    check_known(&f)?;
+    let id = f.req("tech", "id")?.to_string();
+    let name = match f.get("tech", "name") {
+        Some(n) => n.to_string(),
+        None => id.clone(),
+    };
+    let class = match f.req("tech", "class")? {
+        "sram" => TechClass::Sram,
+        "mram" => {
+            let read_port = match f.get("tech", "read_port").unwrap_or("shared") {
+                "shared" => ReadPort::Shared,
+                "dedicated" => ReadPort::Dedicated,
+                other => {
+                    return Err(msg(format!(
+                        "[tech] read_port: expected shared/dedicated, got {other:?}"
+                    )))
+                }
+            };
+            TechClass::Mram { read_port }
+        }
+        other => return Err(msg(format!("[tech] class: expected sram/mram, got {other:?}"))),
+    };
+
+    let mtj = if f.get("mtj", "r_p").is_some() {
+        Some(MtjSpec {
+            r_p: f.f64("mtj", "r_p")?,
+            r_ap: f.f64("mtj", "r_ap")?,
+            ic_set: f.f64("mtj", "ic_set")?,
+            ic_reset: f.f64("mtj", "ic_reset")?,
+            tau0: f.f64("mtj", "tau0")?,
+            r_rail: f.f64_or("mtj", "r_rail", 0.0)?,
+        })
+    } else {
+        None
+    };
+    if matches!(class, TechClass::Mram { .. }) && mtj.is_none() {
+        return Err(msg(format!(
+            "technology '{id}' is mram-class but the descriptor has no [mtj] section"
+        )));
+    }
+
+    let device = match class {
+        TechClass::Sram => DeviceCal::default(),
+        TechClass::Mram { .. } => DeviceCal {
+            c_bitline: f.f64("device", "c_bitline")?,
+            v_read: f.f64("device", "v_read")?,
+            sense_overhead: f.f64("device", "sense_overhead")?,
+            write_overhead: [
+                f.f64("device", "write_overhead_set")?,
+                f.f64("device", "write_overhead_reset")?,
+            ],
+            set_derate: f.f64_or("device", "set_derate", 1.0)?,
+            reset_derate: f.f64_or("device", "reset_derate", 1.0)?,
+            v_mtj_breakdown: f.opt_f64("device", "v_mtj_breakdown")?,
+            rail_em_limit: f.opt_f64("device", "rail_em_limit")?,
+            height_cpp: f.f64("device", "height_cpp")?,
+            fin_min: f.u32_or("device", "fin_min", 1)?,
+            fin_max: f.u32_or("device", "fin_max", 6)?,
+            read_fins: f.u32_or("device", "read_fins", 1)?,
+        },
+    };
+
+    let nv = NvCal {
+        cell_area_mult: f.f64("nv", "cell_area_mult")?,
+        cell_aspect: f.f64("nv", "cell_aspect")?,
+        wd_area_per_amp: f.f64("nv", "wd_area_per_amp")?,
+        wd_leak_density: f.f64("nv", "wd_leak_density")?,
+        temp_leak_mult: f.f64_or("nv", "temp_leak_mult", 1.0)?,
+        i_write: f.f64("nv", "i_write")?,
+        precharge: f.bool_or("nv", "precharge", false)?,
+        diff_write: f.bool_or("nv", "diff_write", false)?,
+        csa_overhead: f.f64_or("nv", "csa_overhead", 0.0)?,
+        t_read_extra: f.f64_or("nv", "t_read_extra", 0.0)?,
+        t_write_extra: f.f64_or("nv", "t_write_extra", 0.0)?,
+    };
+
+    Ok(TechSpec { id, name, class, mtj, device, nv })
+}
+
+fn push_f64(out: &mut String, key: &str, v: f64) {
+    out.push_str(&format!("{key} = {v}\n"));
+}
+
+fn push_opt(out: &mut String, key: &str, v: Option<f64>) {
+    match v {
+        Some(x) => push_f64(out, key, x),
+        None => out.push_str(&format!("{key} = none\n")),
+    }
+}
+
+/// Serialize a [`TechSpec`] back to descriptor text. Every field is
+/// emitted explicitly; floats use Rust's shortest round-trip formatting,
+/// so parsing the output reproduces the spec exactly.
+pub fn serialize(spec: &TechSpec) -> String {
+    let mut out = String::new();
+    out.push_str("[tech]\n");
+    out.push_str(&format!("id = \"{}\"\n", spec.id));
+    out.push_str(&format!("name = \"{}\"\n", spec.name));
+    match spec.class {
+        TechClass::Sram => out.push_str("class = \"sram\"\n"),
+        TechClass::Mram { read_port } => {
+            out.push_str("class = \"mram\"\n");
+            out.push_str(&format!(
+                "read_port = \"{}\"\n",
+                match read_port {
+                    ReadPort::Shared => "shared",
+                    ReadPort::Dedicated => "dedicated",
+                }
+            ));
+        }
+    }
+    if let Some(m) = &spec.mtj {
+        out.push_str("\n[mtj]\n");
+        push_f64(&mut out, "r_p", m.r_p);
+        push_f64(&mut out, "r_ap", m.r_ap);
+        push_f64(&mut out, "ic_set", m.ic_set);
+        push_f64(&mut out, "ic_reset", m.ic_reset);
+        push_f64(&mut out, "tau0", m.tau0);
+        push_f64(&mut out, "r_rail", m.r_rail);
+    }
+    if matches!(spec.class, TechClass::Mram { .. }) {
+        let d = &spec.device;
+        out.push_str("\n[device]\n");
+        push_f64(&mut out, "c_bitline", d.c_bitline);
+        push_f64(&mut out, "v_read", d.v_read);
+        push_f64(&mut out, "sense_overhead", d.sense_overhead);
+        push_f64(&mut out, "write_overhead_set", d.write_overhead[0]);
+        push_f64(&mut out, "write_overhead_reset", d.write_overhead[1]);
+        push_f64(&mut out, "set_derate", d.set_derate);
+        push_f64(&mut out, "reset_derate", d.reset_derate);
+        push_opt(&mut out, "v_mtj_breakdown", d.v_mtj_breakdown);
+        push_opt(&mut out, "rail_em_limit", d.rail_em_limit);
+        push_f64(&mut out, "height_cpp", d.height_cpp);
+        out.push_str(&format!("fin_min = {}\n", d.fin_min));
+        out.push_str(&format!("fin_max = {}\n", d.fin_max));
+        out.push_str(&format!("read_fins = {}\n", d.read_fins));
+    }
+    let nv = &spec.nv;
+    out.push_str("\n[nv]\n");
+    push_f64(&mut out, "cell_area_mult", nv.cell_area_mult);
+    push_f64(&mut out, "cell_aspect", nv.cell_aspect);
+    push_f64(&mut out, "wd_area_per_amp", nv.wd_area_per_amp);
+    push_f64(&mut out, "wd_leak_density", nv.wd_leak_density);
+    push_f64(&mut out, "temp_leak_mult", nv.temp_leak_mult);
+    push_f64(&mut out, "i_write", nv.i_write);
+    out.push_str(&format!("precharge = {}\n", nv.precharge));
+    out.push_str(&format!("diff_write = {}\n", nv.diff_write));
+    push_f64(&mut out, "csa_overhead", nv.csa_overhead);
+    push_f64(&mut out, "t_read_extra", nv.t_read_extra);
+    push_f64(&mut out, "t_write_extra", nv.t_write_extra);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_round_trip_exactly() {
+        for spec in TechSpec::builtins() {
+            let text = serialize(&spec);
+            let back = parse(&text).unwrap_or_else(|e| panic!("{}: {e}", spec.id));
+            assert_eq!(back, spec, "round trip of '{}'", spec.id);
+            // And a second generation is textually stable.
+            assert_eq!(serialize(&back), text);
+        }
+    }
+
+    #[test]
+    fn comments_quotes_and_whitespace_are_tolerated() {
+        let text = r#"
+            # a custom stack
+            [tech]
+            id = "demo"          # trailing comment
+            name = "Demo-RAM"
+            class = "mram"
+            read_port = "shared"
+            [mtj]
+            r_p = 5e3
+            r_ap = 1e4
+            ic_set = 70e-6
+            ic_reset = 65e-6
+            tau0 = 1e-9
+            [device]
+            c_bitline = 40e-15
+            v_read = 0.12
+            sense_overhead = 2.0
+            write_overhead_set = 2.0
+            write_overhead_reset = 3.0
+            height_cpp = 1.1
+            [nv]
+            cell_area_mult = 2.0
+            cell_aspect = 1.3
+            wd_area_per_amp = 2e-7
+            wd_leak_density = 1.8e6
+            i_write = 200e-6
+        "#;
+        let spec = parse(text).unwrap();
+        assert_eq!(spec.id, "demo");
+        assert_eq!(spec.name, "Demo-RAM");
+        assert_eq!(spec.mtj.unwrap().r_rail, 0.0, "rail defaults to junction write");
+        assert_eq!(spec.device.fin_max, 6, "fin sweep defaults");
+        assert!(!spec.nv.precharge);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_not_ignored() {
+        // A typo in an optional reliability field must not silently skip
+        // the screen.
+        let text = serialize(&TechSpec::sot()).replace("rail_em_limit =", "rail_em_limits =");
+        let e = parse(&text).unwrap_err().to_string();
+        assert!(e.contains("rail_em_limits"), "{e}");
+        let e = parse("[tch]\nid = \"x\"\n").unwrap_err().to_string();
+        assert!(e.contains("unknown section"), "{e}");
+    }
+
+    #[test]
+    fn missing_required_fields_error_clearly() {
+        let e = parse("[tech]\nid = \"x\"\nclass = \"mram\"\n").unwrap_err().to_string();
+        assert!(e.contains("[mtj]"), "{e}");
+        let e = parse("[tech]\nclass = \"sram\"\n").unwrap_err().to_string();
+        assert!(e.contains("id"), "{e}");
+        let e = parse("[tech]\nid = \"x\"\nclass = \"dram\"\n").unwrap_err().to_string();
+        assert!(e.contains("sram/mram"), "{e}");
+        let e = parse("not a descriptor").unwrap_err().to_string();
+        assert!(e.contains("key = value"), "{e}");
+    }
+}

@@ -1,0 +1,528 @@
+//! The DeepNVM++ query engine: an open technology registry plus a
+//! parameterized, memoized experiment pipeline.
+//!
+//! The paper's framework is a pipeline — bitcell characterization → EDAP
+//! cache tuning → workload profiling → cross-layer roll-up. [`Engine`]
+//! owns that pipeline as a *service*: scenarios are data ([`TechSpec`]
+//! descriptors + typed [`Query`] values), not code, and every stage is
+//! memoized per engine so `repro all` shares pipeline work across
+//! experiments instead of recomputing it per figure.
+//!
+//! * [`spec`] — the [`TechSpec`] technology descriptor (data, not enum),
+//!   with the paper's SRAM/STT/SOT as built-in instances.
+//! * [`descriptor`] — the TOML-like descriptor-file format: parse user
+//!   technology files, re-serialize specs (round-trip exact).
+//! * [`query`] — the typed query API: [`Query`] → [`Evaluation`].
+//!
+//! Memoization is keyed by query stage — bitcell characterization (per
+//! technology), EDAP tuning (per technology × capacity), and workload
+//! profiling (per workload × batch × capacity) — with per-stage hit/miss
+//! counters. [`Engine::fork`] hands out a handle that shares the caches
+//! but counts its own traffic, which is how the experiment runner
+//! attributes exact per-experiment cache statistics even when experiments
+//! run in parallel.
+
+pub mod descriptor;
+pub mod query;
+pub mod spec;
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::analysis::model;
+use crate::device::bitcell::BitcellParams;
+use crate::device::characterize::{characterize_spec, CharacterizationReport};
+use crate::nvsim::geometry::enumerate;
+use crate::nvsim::optimizer::{explore_cell, TunedCache};
+use crate::util::err::msg;
+use crate::util::pool::par_map;
+use crate::util::units::MB;
+use crate::workloads::profiler::{self, ProfiledWorkload, Workload};
+
+pub use crate::device::bitcell::NvCal;
+pub use query::{Evaluation, IsoMode, Query, WorkloadEval};
+pub use spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec, TECH_SOT, TECH_SRAM, TECH_STT};
+
+/// Hit/miss counters of one memoized pipeline stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HitMiss {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that computed (each unique key computes at most once per
+    /// engine).
+    pub misses: u64,
+}
+
+/// Snapshot of an engine handle's per-stage cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounts {
+    pub characterize: HitMiss,
+    pub tune: HitMiss,
+    pub profile: HitMiss,
+}
+
+impl CacheCounts {
+    /// One-line rendering for the run manifest.
+    pub fn summary(&self) -> String {
+        format!(
+            "characterize {}h/{}m · tune {}h/{}m · profile {}h/{}m",
+            self.characterize.hits,
+            self.characterize.misses,
+            self.tune.hits,
+            self.tune.misses,
+            self.profile.hits,
+            self.profile.misses
+        )
+    }
+
+    /// Total engine calls observed by this handle.
+    pub fn calls(&self) -> u64 {
+        self.characterize.hits
+            + self.characterize.misses
+            + self.tune.hits
+            + self.tune.misses
+            + self.profile.hits
+            + self.profile.misses
+    }
+}
+
+#[derive(Debug, Default)]
+struct StageCounters {
+    // [hits, misses] per stage.
+    characterize: [AtomicU64; 2],
+    tune: [AtomicU64; 2],
+    profile: [AtomicU64; 2],
+}
+
+#[derive(Clone, Copy)]
+enum Stage {
+    Characterize,
+    Tune,
+    Profile,
+}
+
+impl StageCounters {
+    fn bump(&self, stage: Stage, computed: bool) {
+        let pair = match stage {
+            Stage::Characterize => &self.characterize,
+            Stage::Tune => &self.tune,
+            Stage::Profile => &self.profile,
+        };
+        pair[usize::from(computed)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> CacheCounts {
+        let read = |pair: &[AtomicU64; 2]| HitMiss {
+            hits: pair[0].load(Ordering::Relaxed),
+            misses: pair[1].load(Ordering::Relaxed),
+        };
+        CacheCounts {
+            characterize: read(&self.characterize),
+            tune: read(&self.tune),
+            profile: read(&self.profile),
+        }
+    }
+}
+
+/// A memoized stage: per-key `OnceLock` slots so each key computes exactly
+/// once per engine even under concurrent queries (later arrivals block on
+/// the in-flight computation instead of duplicating it). Errors are cached
+/// too — a bad key stays bad deterministically.
+struct Memo<K, V> {
+    map: Mutex<HashMap<K, Arc<OnceLock<Result<V, String>>>>>,
+}
+
+impl<K: Eq + Hash, V: Clone> Default for Memo<K, V> {
+    fn default() -> Self {
+        Memo { map: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl<K: Eq + Hash, V: Clone> Memo<K, V> {
+    /// Returns the cached-or-computed value and whether this call computed.
+    fn get_or_compute(
+        &self,
+        key: K,
+        compute: impl FnOnce() -> Result<V, String>,
+    ) -> (Result<V, String>, bool) {
+        let slot = {
+            let mut map = self.map.lock().unwrap();
+            map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        let mut computed = false;
+        let out = slot
+            .get_or_init(|| {
+                computed = true;
+                compute()
+            })
+            .clone();
+        (out, computed)
+    }
+}
+
+struct Core {
+    /// Registered technologies, in registration order (built-ins first).
+    registry: Mutex<Vec<Arc<TechSpec>>>,
+    cells: Memo<String, Arc<CharacterizationReport>>,
+    tuned: Memo<(String, u64), TunedCache>,
+    profiles: Memo<(Workload, u64, u64), ProfiledWorkload>,
+    /// Engine-wide counters (all forks aggregated).
+    totals: StageCounters,
+}
+
+/// The query-engine facade. Cheap to clone via [`Engine::fork`]: forks
+/// share the registry and memo caches but carry their own [`CacheCounts`],
+/// so a caller (e.g. the experiment runner) can attribute cache traffic to
+/// one scope exactly.
+pub struct Engine {
+    core: Arc<Core>,
+    stats: Arc<StageCounters>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+impl Engine {
+    /// A fresh engine with the three built-in technologies registered and
+    /// empty caches.
+    pub fn new() -> Engine {
+        let registry = TechSpec::builtins().into_iter().map(Arc::new).collect();
+        Engine {
+            core: Arc::new(Core {
+                registry: Mutex::new(registry),
+                cells: Memo::default(),
+                tuned: Memo::default(),
+                profiles: Memo::default(),
+                totals: StageCounters::default(),
+            }),
+            stats: Arc::new(StageCounters::default()),
+        }
+    }
+
+    /// The process-wide shared engine (lazily created). The
+    /// `BitcellKind`-based convenience wrappers in
+    /// [`crate::nvsim::optimizer`] route through this instance, so library
+    /// users and the CLI share one set of memoized pipeline results.
+    pub fn shared() -> &'static Engine {
+        static SHARED: OnceLock<Engine> = OnceLock::new();
+        SHARED.get_or_init(Engine::new)
+    }
+
+    /// A handle sharing this engine's registry and caches but with fresh
+    /// cache counters — the unit of per-experiment accounting.
+    pub fn fork(&self) -> Engine {
+        Engine {
+            core: Arc::clone(&self.core),
+            stats: Arc::new(StageCounters::default()),
+        }
+    }
+
+    // --- registry ---
+
+    /// Register a technology. Errors on an empty or duplicate id, or on
+    /// an id/name that could not survive a descriptor round trip.
+    pub fn register(&self, spec: TechSpec) -> crate::Result<String> {
+        if spec.id.is_empty() {
+            return Err(msg("technology descriptor has an empty id"));
+        }
+        if spec.id.contains('"')
+            || spec.id.contains('\n')
+            || spec.name.contains('"')
+            || spec.name.contains('\n')
+        {
+            return Err(msg(format!(
+                "technology id/name must not contain quotes or newlines (id: {:?})",
+                spec.id
+            )));
+        }
+        let mut reg = self.core.registry.lock().unwrap();
+        if reg.iter().any(|s| s.id == spec.id) {
+            return Err(msg(format!("technology '{}' is already registered", spec.id)));
+        }
+        let id = spec.id.clone();
+        reg.push(Arc::new(spec));
+        Ok(id)
+    }
+
+    /// Parse a descriptor file (see [`descriptor`]) and register it.
+    /// Returns the registered technology id.
+    pub fn register_file(&self, path: impl AsRef<Path>) -> crate::Result<String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| msg(format!("reading {}: {e}", path.display())))?;
+        let spec = descriptor::parse(&text)
+            .map_err(|e| msg(format!("parsing {}: {e}", path.display())))?;
+        self.register(spec)
+    }
+
+    /// Look up a registered technology by id.
+    pub fn tech(&self, id: &str) -> Option<Arc<TechSpec>> {
+        self.core.registry.lock().unwrap().iter().find(|s| s.id == id).cloned()
+    }
+
+    /// All registered technologies, in registration order.
+    pub fn techs(&self) -> Vec<Arc<TechSpec>> {
+        self.core.registry.lock().unwrap().clone()
+    }
+
+    fn tech_or_err(&self, id: &str) -> crate::Result<Arc<TechSpec>> {
+        self.tech(id).ok_or_else(|| {
+            let known: Vec<String> =
+                self.techs().iter().map(|s| s.id.clone()).collect();
+            msg(format!("unknown technology '{id}' (registered: {})", known.join(", ")))
+        })
+    }
+
+    // --- pipeline stages ---
+
+    /// Stage 1 — device-level characterization of a registered technology
+    /// (memoized per technology id).
+    pub fn characterization(&self, tech: &str) -> crate::Result<Arc<CharacterizationReport>> {
+        let spec = self.tech_or_err(tech)?;
+        let (out, computed) = self
+            .core
+            .cells
+            .get_or_compute(spec.id.clone(), || {
+                characterize_spec(&spec).map(Arc::new).map_err(|e| e.to_string())
+            });
+        self.bump(Stage::Characterize, computed);
+        out.map_err(msg)
+    }
+
+    /// The chosen (EDAP-optimal) bitcell of a technology's fin sweep.
+    pub fn bitcell(&self, tech: &str) -> crate::Result<BitcellParams> {
+        Ok(self.characterization(tech)?.chosen.clone())
+    }
+
+    /// Stage 2 — Algorithm 1 EDAP tuning of `tech` at `capacity_bytes`
+    /// (memoized per technology × capacity). Errors on an unknown
+    /// technology or a capacity that admits no cache organization.
+    pub fn tuned(&self, tech: &str, capacity_bytes: u64) -> crate::Result<TunedCache> {
+        self.tech_or_err(tech)?;
+        let (out, computed) = self
+            .core
+            .tuned
+            .get_or_compute((tech.to_string(), capacity_bytes), || {
+                let bitcell = self.bitcell(tech).map_err(|e| e.to_string())?;
+                if enumerate(capacity_bytes).is_empty() {
+                    return Err(format!(
+                        "no cache organization for {capacity_bytes} bytes \
+                         (use power-of-two-divisible capacities)"
+                    ));
+                }
+                Ok(explore_cell(&bitcell, capacity_bytes))
+            });
+        self.bump(Stage::Tune, computed);
+        out.map_err(msg)
+    }
+
+    /// Stage 3 — workload profiling at an explicit batch size and L2
+    /// capacity (memoized per workload × batch × capacity).
+    pub fn profile(&self, workload: Workload, batch: u64, l2_capacity: u64) -> ProfiledWorkload {
+        let (out, computed) = self
+            .core
+            .profiles
+            .get_or_compute((workload, batch, l2_capacity), || {
+                Ok(profiler::profile(workload, batch, l2_capacity))
+            });
+        self.bump(Stage::Profile, computed);
+        out.expect("profiling is infallible")
+    }
+
+    /// [`Engine::profile`] at the paper's default batch for the workload's
+    /// phase.
+    pub fn profile_default(&self, workload: Workload, l2_capacity: u64) -> ProfiledWorkload {
+        self.profile(workload, profiler::default_batch(workload), l2_capacity)
+    }
+
+    /// Profile the paper's 13-workload suite at the default batches.
+    pub fn profile_suite(&self, l2_capacity: u64) -> Vec<ProfiledWorkload> {
+        profiler::paper_suite()
+            .into_iter()
+            .map(|w| self.profile_default(w, l2_capacity))
+            .collect()
+    }
+
+    // --- queries ---
+
+    /// Largest capacity (1–16 MB grid) of `tech` whose tuned area fits the
+    /// SRAM baseline tuned at `baseline_capacity` (with the paper's 3.5%
+    /// rounding slack) — the Table 2 iso-area rule as a query.
+    pub fn fit_iso_area(&self, tech: &str, baseline_capacity: u64) -> crate::Result<u64> {
+        if tech == TECH_SRAM {
+            return Ok(baseline_capacity);
+        }
+        // Surface unknown or uncharacterizable technologies directly.
+        self.bitcell(tech)?;
+        let base_area = self.tuned(TECH_SRAM, baseline_capacity)?.ppa.area;
+        // Tuned area grows with capacity, so scan downward and stop at
+        // the first (largest) fit; a grid point that admits no cache
+        // organization is skipped rather than failing the whole query.
+        for cap_mb in (1..=16u64).rev() {
+            if let Ok(tuned) = self.tuned(tech, cap_mb * MB) {
+                if tuned.ppa.area <= 1.035 * base_area {
+                    return Ok(cap_mb * MB);
+                }
+            }
+        }
+        Err(msg(format!(
+            "technology '{tech}' fits no capacity on the 1-16MB grid \
+             inside the SRAM baseline footprint"
+        )))
+    }
+
+    /// Answer one typed query: resolve the iso mode, tune the cache, and —
+    /// when the query names a workload — profile it and roll up the
+    /// cross-layer energy/latency model.
+    pub fn evaluate(&self, query: &Query) -> crate::Result<Evaluation> {
+        let capacity = match query.iso {
+            IsoMode::Capacity => query.capacity_bytes,
+            IsoMode::Area => self.fit_iso_area(&query.tech, query.capacity_bytes)?,
+        };
+        let design = self.tuned(&query.tech, capacity)?;
+        let workload = match query.workload {
+            None => None,
+            Some(w) => {
+                let batch = query.batch.unwrap_or_else(|| profiler::default_batch(w));
+                let profiled = self.profile(w, batch, capacity);
+                let rollup = model::evaluate(&design.ppa, &profiled.stats);
+                Some(WorkloadEval {
+                    label: profiled.label,
+                    batch,
+                    stats: profiled.stats,
+                    rollup,
+                })
+            }
+        };
+        Ok(Evaluation {
+            tech: query.tech.clone(),
+            capacity_bytes: capacity,
+            design,
+            workload,
+        })
+    }
+
+    /// Batch entrypoint: answer many queries through the thread pool.
+    /// Order is preserved; each query gets its own `Result`.
+    pub fn evaluate_many(&self, queries: &[Query]) -> Vec<crate::Result<Evaluation>> {
+        par_map(queries, |q| self.evaluate(q))
+    }
+
+    // --- accounting ---
+
+    fn bump(&self, stage: Stage, computed: bool) {
+        self.stats.bump(stage, computed);
+        self.core.totals.bump(stage, computed);
+    }
+
+    /// This handle's cache counters (a fork counts only its own traffic).
+    pub fn stats(&self) -> CacheCounts {
+        self.stats.snapshot()
+    }
+
+    /// Engine-wide counters aggregated across all forks.
+    pub fn totals(&self) -> CacheCounts {
+        self.core.totals.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+    use crate::workloads::memstats::Phase;
+
+    #[test]
+    fn builtin_registry_and_lookup() {
+        let e = Engine::new();
+        let ids: Vec<String> = e.techs().iter().map(|s| s.id.clone()).collect();
+        assert_eq!(ids, vec!["sram", "stt", "sot"]);
+        assert!(e.tech("stt").is_some());
+        assert!(e.tech("pcm").is_none());
+        let err = e.tuned("pcm", 3 * MB).unwrap_err().to_string();
+        assert!(err.contains("unknown technology"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let e = Engine::new();
+        assert!(e.register(TechSpec::stt()).is_err());
+        let mut custom = TechSpec::stt();
+        custom.id = "stt2".into();
+        assert_eq!(e.register(custom).unwrap(), "stt2");
+        assert!(e.tech("stt2").is_some());
+    }
+
+    #[test]
+    fn stages_memoize_and_count() {
+        let e = Engine::new();
+        assert_eq!(e.stats(), CacheCounts::default());
+        let a = e.tuned("sot", 2 * MB).unwrap();
+        let s = e.stats();
+        assert_eq!(s.tune.misses, 1);
+        assert_eq!(s.characterize.misses, 1, "tuning characterizes once");
+        let b = e.tuned("sot", 2 * MB).unwrap();
+        let s = e.stats();
+        assert_eq!(s.tune, HitMiss { hits: 1, misses: 1 });
+        assert_eq!(a.ppa.edap().to_bits(), b.ppa.edap().to_bits(), "memoized value is stable");
+        let _ = e.profile(Workload::Dnn { index: 0, phase: Phase::Inference }, 4, 3 * MB);
+        let _ = e.profile(Workload::Dnn { index: 0, phase: Phase::Inference }, 4, 3 * MB);
+        assert_eq!(e.stats().profile, HitMiss { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn forks_share_caches_but_count_separately() {
+        let e = Engine::new();
+        let _ = e.tuned("sram", MB).unwrap();
+        let f = e.fork();
+        assert_eq!(f.stats(), CacheCounts::default());
+        let _ = f.tuned("sram", MB).unwrap();
+        assert_eq!(f.stats().tune, HitMiss { hits: 1, misses: 0 }, "fork hits the shared cache");
+        assert_eq!(e.totals().tune, HitMiss { hits: 1, misses: 1 }, "totals aggregate forks");
+    }
+
+    #[test]
+    fn invalid_capacity_is_an_error_not_a_panic() {
+        // 3MB + 1 byte has an odd factor no subarray grid divides.
+        let e = Engine::new();
+        let err = e.tuned("sram", 3 * MB + 1).unwrap_err().to_string();
+        assert!(err.contains("no cache organization"), "{err}");
+    }
+
+    #[test]
+    fn evaluate_resolves_iso_area_to_the_table2_capacities() {
+        let e = Engine::shared();
+        assert_eq!(e.fit_iso_area("stt", 3 * MB).unwrap(), 7 * MB);
+        assert_eq!(e.fit_iso_area("sot", 3 * MB).unwrap(), 10 * MB);
+        let q = Query::tune("sot", 3 * MB)
+            .with_workload(Workload::Dnn { index: 0, phase: Phase::Inference })
+            .iso_area();
+        let ev = e.evaluate(&q).unwrap();
+        assert_eq!(ev.capacity_bytes, 10 * MB);
+        let w = ev.workload.as_ref().unwrap();
+        assert_eq!(w.label, "AlexNet-I");
+        assert_eq!(w.batch, 4, "paper default inference batch");
+        assert!(w.rollup.total_energy() > 0.0);
+    }
+
+    #[test]
+    fn evaluate_many_preserves_order_and_isolates_errors() {
+        let e = Engine::shared();
+        let queries = vec![
+            Query::tune("sram", 2 * MB),
+            Query::tune("nope", 2 * MB),
+            Query::tune("stt", 2 * MB),
+        ];
+        let out = e.evaluate_many(&queries);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_ref().unwrap().tech, "sram");
+        assert!(out[1].is_err());
+        assert_eq!(out[2].as_ref().unwrap().tech, "stt");
+    }
+}

@@ -1,0 +1,122 @@
+//! The typed query API: [`Query`] in, [`Evaluation`] out.
+//!
+//! A query names a technology (by registry id), a capacity, an iso mode,
+//! and optionally a workload + batch. The engine resolves it through the
+//! memoized pipeline — characterize → tune → profile → roll up — so any
+//! scenario the paper's figures cover (and any the figures don't) is one
+//! `Query` value instead of a bespoke generator function.
+
+use crate::analysis::model;
+use crate::nvsim::optimizer::TunedCache;
+use crate::workloads::memstats::MemStats;
+use crate::workloads::profiler::Workload;
+
+/// How the query's `capacity_bytes` is interpreted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IsoMode {
+    /// Tune and profile at `capacity_bytes` directly (paper §4.1).
+    Capacity,
+    /// `capacity_bytes` is the *SRAM baseline* capacity; the technology
+    /// runs at the largest capacity whose tuned area fits the baseline
+    /// footprint (paper §4.2 / Table 2's iso-area columns).
+    Area,
+}
+
+/// One scenario to evaluate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Query {
+    /// Registry id of the technology (`"sram"`, `"stt"`, `"sot"`, or a
+    /// descriptor-registered id).
+    pub tech: String,
+    /// Cache capacity in bytes (interpreted per [`IsoMode`]).
+    pub capacity_bytes: u64,
+    /// Workload to profile and roll up; `None` = tune-only query.
+    pub workload: Option<Workload>,
+    /// Batch size; `None` = the paper's default for the workload's phase.
+    pub batch: Option<u64>,
+    /// Capacity interpretation.
+    pub iso: IsoMode,
+}
+
+impl Query {
+    /// A tune-only query at iso-capacity.
+    pub fn tune(tech: impl Into<String>, capacity_bytes: u64) -> Query {
+        Query {
+            tech: tech.into(),
+            capacity_bytes,
+            workload: None,
+            batch: None,
+            iso: IsoMode::Capacity,
+        }
+    }
+
+    /// Attach a workload (profiled + rolled up in the evaluation).
+    pub fn with_workload(mut self, workload: Workload) -> Query {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Override the batch size.
+    pub fn with_batch(mut self, batch: u64) -> Query {
+        self.batch = Some(batch);
+        self
+    }
+
+    /// Interpret the capacity as the SRAM-baseline footprint (iso-area).
+    pub fn iso_area(mut self) -> Query {
+        self.iso = IsoMode::Area;
+        self
+    }
+}
+
+/// The workload half of an evaluation: the profiled memory statistics and
+/// the cross-layer energy/latency roll-up on the tuned design.
+#[derive(Debug, Clone)]
+pub struct WorkloadEval {
+    /// Workload label (e.g. `"AlexNet-I"`).
+    pub label: String,
+    /// Batch size actually profiled.
+    pub batch: u64,
+    /// nvprof-equivalent counters at the evaluated capacity.
+    pub stats: MemStats,
+    /// The §4 roll-up (dynamic/leakage/DRAM energy, cache/DRAM time).
+    pub rollup: model::Evaluation,
+}
+
+/// The engine's answer to a [`Query`].
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Technology id the query resolved against.
+    pub tech: String,
+    /// Effective capacity in bytes (after iso-area fitting).
+    pub capacity_bytes: u64,
+    /// The EDAP-optimal cache design at that capacity.
+    pub design: TunedCache,
+    /// Present when the query named a workload.
+    pub workload: Option<WorkloadEval>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+    use crate::workloads::memstats::Phase;
+
+    #[test]
+    fn builder_composes() {
+        let w = Workload::Dnn { index: 1, phase: Phase::Training };
+        let q = Query::tune("stt", 4 * MB).with_workload(w).with_batch(32).iso_area();
+        assert_eq!(q.tech, "stt");
+        assert_eq!(q.capacity_bytes, 4 * MB);
+        assert_eq!(q.workload, Some(w));
+        assert_eq!(q.batch, Some(32));
+        assert_eq!(q.iso, IsoMode::Area);
+    }
+
+    #[test]
+    fn default_query_is_iso_capacity_tune_only() {
+        let q = Query::tune("sot", MB);
+        assert_eq!(q.iso, IsoMode::Capacity);
+        assert!(q.workload.is_none() && q.batch.is_none());
+    }
+}

@@ -1,0 +1,339 @@
+//! `TechSpec` — the open technology descriptor.
+//!
+//! The paper claims DeepNVM++ "can be used for the characterization,
+//! modeling, and analysis of **any** NVM technology for last-level
+//! caches". A [`TechSpec`] is that claim made concrete: a plain-data
+//! record carrying everything the device→nvsim→analysis layers used to
+//! dispatch on the closed `BitcellKind` enum for — MTJ compact-model
+//! parameters, the device-level calibration card, the fin-grid cell
+//! topology, and the cache-level [`NvCal`] calibration. The three paper
+//! technologies are the built-in instances; user technologies come from
+//! descriptor files (see [`crate::engine::descriptor`]) and flow through
+//! the identical pipeline with no Rust changes.
+
+use crate::device::bitcell::{BitcellKind, NvCal, SOT_HEIGHT_CPP, STT_HEIGHT_CPP};
+use crate::device::characterize::cal;
+use crate::device::mtj::{Mtj, MtjKind};
+
+/// Registry id of the built-in SRAM baseline.
+pub const TECH_SRAM: &str = "sram";
+/// Registry id of the built-in STT-MRAM technology.
+pub const TECH_STT: &str = "stt";
+/// Registry id of the built-in SOT-MRAM technology.
+pub const TECH_SOT: &str = "sot";
+
+/// Which characterization model a technology runs through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TechClass {
+    /// The foundry 6T SRAM baseline: analytic characterization, no MTJ.
+    Sram,
+    /// An MTJ-based (or MTJ-like resistive) cell characterized by the
+    /// §3.1 transient flow: fin sweep, pulse-to-failure, sense timing.
+    Mram {
+        /// Read-port topology: shared with the write device (1T1R, STT
+        /// style) or a dedicated device (2T1R, SOT style).
+        read_port: ReadPort,
+    },
+}
+
+/// Read-port topology of an MRAM-class cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadPort {
+    /// The write access device doubles as the read device (STT).
+    Shared,
+    /// A separate (typically minimum-size) read device (SOT).
+    Dedicated,
+}
+
+/// MTJ compact-model parameters (see [`crate::device::mtj`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MtjSpec {
+    /// Parallel-state resistance (Ω).
+    pub r_p: f64,
+    /// Anti-parallel-state resistance (Ω).
+    pub r_ap: f64,
+    /// Critical switching current, set direction (A).
+    pub ic_set: f64,
+    /// Critical switching current, reset direction (A).
+    pub ic_reset: f64,
+    /// Characteristic switching time constant τ0 (s).
+    pub tau0: f64,
+    /// Heavy-metal write-rail resistance (Ω); 0 for two-terminal cells
+    /// whose write current crosses the junction.
+    pub r_rail: f64,
+}
+
+impl MtjSpec {
+    /// Capture the parameters of a compact-model instance.
+    pub fn of(m: &Mtj) -> MtjSpec {
+        MtjSpec {
+            r_p: m.r_p,
+            r_ap: m.r_ap,
+            ic_set: m.ic_set,
+            ic_reset: m.ic_reset,
+            tau0: m.tau0,
+            r_rail: m.r_rail,
+        }
+    }
+
+    /// Instantiate the device-layer compact model. A non-zero rail means
+    /// the write path is the heavy metal (three-terminal, SOT-like);
+    /// otherwise writes cross the junction (two-terminal, STT-like).
+    pub fn to_mtj(&self) -> Mtj {
+        Mtj {
+            kind: if self.r_rail > 0.0 { MtjKind::Sot } else { MtjKind::Stt },
+            r_p: self.r_p,
+            r_ap: self.r_ap,
+            ic_set: self.ic_set,
+            ic_reset: self.ic_reset,
+            tau0: self.tau0,
+            r_rail: self.r_rail,
+        }
+    }
+}
+
+/// Device-level characterization calibration — the constants the paper
+/// gets from its commercial PDK and driver design (see
+/// [`crate::device::characterize::cal`] for the built-in values).
+/// Ignored for [`TechClass::Sram`] (the baseline is analytic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceCal {
+    /// Bitline capacitance on the sense path (F).
+    pub c_bitline: f64,
+    /// Read bias across the cell branch (V).
+    pub v_read: f64,
+    /// Sense-path energy overhead as a multiple of `C_BITLINE·VDD²`.
+    pub sense_overhead: f64,
+    /// Write-driver + line charging overhead multipliers `[set, reset]`
+    /// on the cell loop energy.
+    pub write_overhead: [f64; 2],
+    /// Access-device drive derate in the set direction (source
+    /// degeneration); 1.0 = none.
+    pub set_derate: f64,
+    /// Access-device drive derate in the reset direction; 1.0 = none.
+    pub reset_derate: f64,
+    /// MTJ oxide breakdown limit (V): design points whose junction
+    /// voltage exceeds this at the design corner are invalid.
+    pub v_mtj_breakdown: Option<f64>,
+    /// Electromigration current limit of the write rail (A).
+    pub rail_em_limit: Option<f64>,
+    /// Cell height in contacted-poly pitches (fin-grid layout rule).
+    pub height_cpp: f64,
+    /// Smallest access-device fin count to sweep.
+    pub fin_min: u32,
+    /// Largest access-device fin count to sweep.
+    pub fin_max: u32,
+    /// Read-device fin count for [`ReadPort::Dedicated`] topologies.
+    pub read_fins: u32,
+}
+
+impl Default for DeviceCal {
+    fn default() -> Self {
+        DeviceCal {
+            c_bitline: 0.0,
+            v_read: 0.0,
+            sense_overhead: 0.0,
+            write_overhead: [1.0, 1.0],
+            set_derate: 1.0,
+            reset_derate: 1.0,
+            v_mtj_breakdown: None,
+            rail_em_limit: None,
+            height_cpp: 1.0,
+            fin_min: 1,
+            fin_max: 1,
+            read_fins: 1,
+        }
+    }
+}
+
+/// One technology, fully described as data. Everything downstream — the
+/// §3.1 characterization, the NVSim-class cache model, Algorithm 1 tuning
+/// and the workload roll-up — reads this record (directly or via the
+/// [`NvCal`] stamped into the characterized bitcell) instead of matching
+/// on an enum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TechSpec {
+    /// Registry id (lowercase, e.g. `"stt"`, `"my_reram"`).
+    pub id: String,
+    /// Display name as printed in tables (e.g. `"STT-MRAM"`).
+    pub name: String,
+    /// Characterization model class.
+    pub class: TechClass,
+    /// MTJ compact-model parameters; required for [`TechClass::Mram`].
+    pub mtj: Option<MtjSpec>,
+    /// Device-level calibration card.
+    pub device: DeviceCal,
+    /// Cache-level calibration stamped into the characterized bitcell.
+    pub nv: NvCal,
+}
+
+impl TechSpec {
+    /// The built-in SRAM baseline.
+    pub fn sram() -> TechSpec {
+        TechSpec {
+            id: TECH_SRAM.into(),
+            name: "SRAM".into(),
+            class: TechClass::Sram,
+            mtj: None,
+            device: DeviceCal::default(),
+            nv: NvCal {
+                cell_area_mult: 1.97,
+                cell_aspect: 2.0,
+                wd_area_per_amp: 1.0e-12 / 1.0e-3, // 1 µm² per mA
+                wd_leak_density: 1.0e6,
+                temp_leak_mult: 12.0,
+                i_write: 0.4e-3,
+                precharge: true,
+                diff_write: false,
+                csa_overhead: 0.0,
+                t_read_extra: 0.0,
+                t_write_extra: 0.0,
+            },
+        }
+    }
+
+    /// The built-in STT-MRAM technology (paper Table 1, STT column).
+    pub fn stt() -> TechSpec {
+        TechSpec {
+            id: TECH_STT.into(),
+            name: "STT-MRAM".into(),
+            class: TechClass::Mram { read_port: ReadPort::Shared },
+            mtj: Some(MtjSpec::of(&Mtj::stt())),
+            device: DeviceCal {
+                c_bitline: cal::C_BITLINE_STT,
+                v_read: cal::V_READ_STT,
+                sense_overhead: cal::SENSE_OVERHEAD[0],
+                write_overhead: cal::WRITE_OVERHEAD_STT,
+                set_derate: cal::STT_SET_DERATE,
+                reset_derate: 1.0,
+                v_mtj_breakdown: Some(cal::V_MTJ_BREAKDOWN),
+                rail_em_limit: None,
+                height_cpp: STT_HEIGHT_CPP,
+                fin_min: *cal::FIN_SWEEP.start(),
+                fin_max: *cal::FIN_SWEEP.end(),
+                read_fins: 1,
+            },
+            nv: NvCal {
+                cell_area_mult: 2.00,
+                cell_aspect: 1.3,
+                wd_area_per_amp: 200.0e-12 / 1.0e-3, // 200 µm² per mA
+                wd_leak_density: 1.80e6,
+                temp_leak_mult: 1.0,
+                // MTJ write loop current at the worst-power corner ~ 2× Ic.
+                i_write: 220.0e-6,
+                precharge: false,
+                diff_write: true,
+                csa_overhead: 0.50e-12,
+                t_read_extra: 0.0,
+                t_write_extra: 0.0,
+            },
+        }
+    }
+
+    /// The built-in SOT-MRAM technology (paper Table 1, SOT column).
+    pub fn sot() -> TechSpec {
+        TechSpec {
+            id: TECH_SOT.into(),
+            name: "SOT-MRAM".into(),
+            class: TechClass::Mram { read_port: ReadPort::Dedicated },
+            mtj: Some(MtjSpec::of(&Mtj::sot())),
+            device: DeviceCal {
+                c_bitline: cal::C_BITLINE_SOT,
+                v_read: cal::V_READ_SOT,
+                sense_overhead: cal::SENSE_OVERHEAD[1],
+                write_overhead: cal::WRITE_OVERHEAD_SOT,
+                set_derate: 1.0,
+                reset_derate: 1.0,
+                v_mtj_breakdown: None,
+                rail_em_limit: Some(cal::RAIL_EM_LIMIT),
+                height_cpp: SOT_HEIGHT_CPP,
+                fin_min: *cal::FIN_SWEEP.start(),
+                fin_max: *cal::FIN_SWEEP.end(),
+                read_fins: 1,
+            },
+            nv: NvCal {
+                cell_area_mult: 1.80,
+                cell_aspect: 1.3,
+                // SOT write drivers see the low-impedance rail: smaller
+                // devices than STT's junction drivers, but biased rails
+                // leak more per area.
+                wd_area_per_amp: 120.0e-12 / 1.0e-3,
+                wd_leak_density: 1.55e6,
+                temp_leak_mult: 1.0,
+                i_write: 215.0e-6,
+                precharge: false,
+                diff_write: false,
+                csa_overhead: 0.30e-12,
+                t_read_extra: 1.15e-9,
+                t_write_extra: 0.45e-9,
+            },
+        }
+    }
+
+    /// The built-in spec behind a [`BitcellKind`].
+    pub fn builtin(kind: BitcellKind) -> TechSpec {
+        match kind {
+            BitcellKind::Sram => TechSpec::sram(),
+            BitcellKind::SttMram => TechSpec::stt(),
+            BitcellKind::SotMram => TechSpec::sot(),
+        }
+    }
+
+    /// All built-in specs, in the paper's presentation order.
+    pub fn builtins() -> [TechSpec; 3] {
+        [TechSpec::sram(), TechSpec::stt(), TechSpec::sot()]
+    }
+
+    /// Whether the technology is non-volatile (no cell retention power).
+    pub fn non_volatile(&self) -> bool {
+        !matches!(self.class, TechClass::Sram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_ids_match_kind_ids() {
+        for kind in BitcellKind::ALL {
+            assert_eq!(TechSpec::builtin(kind).id, kind.tech_id());
+            assert_eq!(TechSpec::builtin(kind).name, kind.name());
+        }
+    }
+
+    #[test]
+    fn mtj_spec_round_trips_through_compact_model() {
+        let stt = MtjSpec::of(&Mtj::stt());
+        let back = stt.to_mtj();
+        assert_eq!(back.kind, MtjKind::Stt);
+        assert_eq!(back.r_p, Mtj::stt().r_p);
+        assert_eq!(back.tau0, Mtj::stt().tau0);
+        let sot = MtjSpec::of(&Mtj::sot()).to_mtj();
+        assert_eq!(sot.kind, MtjKind::Sot);
+        assert_eq!(sot.r_rail, Mtj::sot().r_rail);
+    }
+
+    #[test]
+    fn builtin_classes_and_reliability_limits() {
+        assert_eq!(TechSpec::sram().class, TechClass::Sram);
+        assert!(!TechSpec::sram().non_volatile());
+        let stt = TechSpec::stt();
+        assert_eq!(stt.class, TechClass::Mram { read_port: ReadPort::Shared });
+        assert!(stt.device.v_mtj_breakdown.is_some() && stt.device.rail_em_limit.is_none());
+        let sot = TechSpec::sot();
+        assert_eq!(sot.class, TechClass::Mram { read_port: ReadPort::Dedicated });
+        assert!(sot.device.rail_em_limit.is_some() && sot.device.v_mtj_breakdown.is_none());
+        assert!(sot.non_volatile());
+    }
+
+    #[test]
+    fn nv_cards_carry_the_table2_calibration() {
+        // Spot-check the values the nvsim layer used to hard-code.
+        assert_eq!(TechSpec::sram().nv.temp_leak_mult, 12.0);
+        assert!(TechSpec::sram().nv.precharge);
+        assert!(TechSpec::stt().nv.diff_write);
+        assert_eq!(TechSpec::sot().nv.t_read_extra, 1.15e-9);
+        assert_eq!(TechSpec::stt().nv.csa_overhead, 0.50e-12);
+    }
+}

@@ -1,19 +1,18 @@
 //! Figure generators: iso-capacity (Figs 4–6) and iso-area (Figs 8–9).
 
-use crate::analysis::batch::batch_sweep;
-#[cfg(test)]
-use crate::analysis::batch::BATCHES;
+use crate::analysis::batch::{batch_sweep, BATCHES};
 use crate::analysis::isoarea::{iso_area, mean_edp_reduction};
 use crate::analysis::isocapacity::{headline_edp_reduction, iso_capacity};
+use crate::engine::Engine;
 use crate::util::csv::Csv;
 use crate::util::stats::mean;
 use crate::util::table::{fnum, Table};
 use crate::workloads::memstats::Phase;
-use super::Output;
+use super::{filter_rows, Output, Params};
 
 /// Fig 4: iso-capacity dynamic + leakage energy, normalized to SRAM.
-pub fn fig4() -> Output {
-    let rows = iso_capacity();
+pub fn fig4(engine: &Engine, params: &Params) -> Output {
+    let rows = filter_rows(iso_capacity(engine), params, |r| r.label.as_str());
     let mut t = Table::new(
         "Fig 4: iso-capacity (3MB) dynamic and leakage energy vs SRAM",
         &["workload", "dyn STT", "dyn SOT", "leak STT", "leak SOT"],
@@ -40,8 +39,8 @@ pub fn fig4() -> Output {
 }
 
 /// Fig 5: iso-capacity total energy and EDP (with DRAM), normalized.
-pub fn fig5() -> Output {
-    let rows = iso_capacity();
+pub fn fig5(engine: &Engine, params: &Params) -> Output {
+    let rows = filter_rows(iso_capacity(engine), params, |r| r.label.as_str());
     let mut t = Table::new(
         "Fig 5: iso-capacity (3MB) energy and EDP vs SRAM (EDP incl. DRAM)",
         &["workload", "energy STT", "energy SOT", "EDP STT", "EDP SOT"],
@@ -68,11 +67,12 @@ pub fn fig5() -> Output {
 
 /// Fig 6: batch-size impact on EDP, AlexNet training (top) and
 /// inference (bottom).
-pub fn fig6() -> Output {
+pub fn fig6(engine: &Engine, params: &Params) -> Output {
+    let batches = params.batches_or(&BATCHES);
     let mut out = Output::default();
     let mut headline_parts = Vec::new();
     for (phase, tag) in [(Phase::Training, "training"), (Phase::Inference, "inference")] {
-        let sweep = batch_sweep(phase);
+        let sweep = batch_sweep(engine, phase, &batches);
         let mut t = Table::new(
             format!("Fig 6 ({tag}): AlexNet EDP vs SRAM across batch sizes"),
             &["batch", "EDP STT", "EDP SOT", "reduction STT", "reduction SOT"],
@@ -104,8 +104,8 @@ pub fn fig6() -> Output {
 }
 
 /// Fig 8: iso-area dynamic + leakage energy, normalized to SRAM.
-pub fn fig8() -> Output {
-    let rows = iso_area();
+pub fn fig8(engine: &Engine, params: &Params) -> Output {
+    let rows = filter_rows(iso_area(engine), params, |r| r.label.as_str());
     let mut t = Table::new(
         "Fig 8: iso-area (STT 7MB / SOT 10MB) dynamic and leakage energy vs SRAM",
         &["workload", "dyn STT", "dyn SOT", "leak STT", "leak SOT"],
@@ -132,8 +132,8 @@ pub fn fig8() -> Output {
 }
 
 /// Fig 9: iso-area EDP without (top) and with (bottom) DRAM.
-pub fn fig9() -> Output {
-    let rows = iso_area();
+pub fn fig9(engine: &Engine, params: &Params) -> Output {
+    let rows = filter_rows(iso_area(engine), params, |r| r.label.as_str());
     let mut t = Table::new(
         "Fig 9: iso-area EDP vs SRAM, without and with DRAM",
         &["workload", "EDP STT (no DRAM)", "EDP SOT (no DRAM)", "EDP STT (+DRAM)", "EDP SOT (+DRAM)"],
@@ -160,18 +160,36 @@ pub fn fig9() -> Output {
 mod tests {
     use super::*;
 
+    fn run(f: fn(&Engine, &Params) -> Output) -> Output {
+        f(Engine::shared(), &Params::default())
+    }
+
     #[test]
     fn fig4_and_fig5_cover_the_suite() {
-        assert_eq!(fig4().tables[0].len(), 13);
-        assert_eq!(fig5().tables[0].len(), 13);
+        assert_eq!(run(fig4).tables[0].len(), 13);
+        assert_eq!(run(fig5).tables[0].len(), 13);
     }
 
     #[test]
     fn fig6_emits_both_phases() {
-        let out = fig6();
+        let out = run(fig6);
         assert_eq!(out.tables.len(), 2);
         assert_eq!(out.csvs.len(), 2);
         assert_eq!(out.tables[0].len(), BATCHES.len());
+    }
+
+    #[test]
+    fn fig6_custom_batch_grid() {
+        let params = Params { batches: Some(vec![1, 16]), ..Params::default() };
+        let out = fig6(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), 2);
+    }
+
+    #[test]
+    fn fig4_network_filter_narrows_rows() {
+        let params = Params { networks: Some(vec!["vgg16".into()]), ..Params::default() };
+        let out = fig4(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), 2, "VGG-16-I and VGG-16-T");
     }
 
     #[test]
@@ -181,13 +199,13 @@ mod tests {
         // iso-area caches already win at the cache level, so DRAM
         // inclusion only has to preserve the win — the deviation is
         // documented in EXPERIMENTS.md §Fig 9.
-        let rows = iso_area();
+        let rows = iso_area(Engine::shared());
         let with: f64 = mean(&rows.iter().map(|r| r.edp_dram[1]).collect::<Vec<_>>());
         let without: f64 = mean(&rows.iter().map(|r| r.edp_cache[1]).collect::<Vec<_>>());
         assert!(with < 1.0, "SOT iso-area EDP with DRAM must beat SRAM: {with}");
         assert!(without < 1.0, "and without DRAM too: {without}");
         // DRAM inclusion changes the picture by at most ~35%.
         assert!((with / without - 1.0).abs() < 0.35);
-        assert_eq!(fig9().tables[0].len(), 13);
+        assert_eq!(run(fig9).tables[0].len(), 13);
     }
 }

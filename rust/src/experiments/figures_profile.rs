@@ -1,9 +1,10 @@
 //! Figure generators: Fig 1 (GPU L2 trend) and Fig 3 (R/W ratios).
 
+use crate::engine::Engine;
 use crate::util::csv::Csv;
 use crate::util::table::{fnum, Table};
-use crate::workloads::profiler::{profile_suite, PROFILE_L2};
-use super::Output;
+use crate::workloads::profiler::PROFILE_L2;
+use super::{filter_rows, Output, Params};
 
 /// Public L2-capacity data behind the paper's Fig 1 (NVIDIA GeForce
 /// flagships by generation, from the public GPU lists the paper cites).
@@ -19,7 +20,7 @@ pub const GPU_L2_TREND: [(&str, u32, f64); 8] = [
 ];
 
 /// Fig 1: the L2 capacity trend motivating the scalability study.
-pub fn fig1() -> Output {
+pub fn fig1(_engine: &Engine, _params: &Params) -> Output {
     let mut t = Table::new("Fig 1: L2 cache capacity in recent NVIDIA GPUs", &["GPU", "year", "L2 (MB)"]);
     let mut csv = Csv::new(&["gpu", "year", "l2_mb"]);
     for (gpu, year, mb) in GPU_L2_TREND {
@@ -32,8 +33,8 @@ pub fn fig1() -> Output {
 }
 
 /// Fig 3: L2 read/write transaction ratios across the workload suite.
-pub fn fig3() -> Output {
-    let profiles = profile_suite(PROFILE_L2);
+pub fn fig3(engine: &Engine, params: &Params) -> Output {
+    let profiles = filter_rows(engine.profile_suite(PROFILE_L2), params, |p| p.label.as_str());
     let mut t = Table::new(
         "Fig 3: L2 read/write transaction ratio (nvprof substitute)",
         &["workload", "L2 reads", "L2 writes", "R/W ratio"],
@@ -68,14 +69,22 @@ mod tests {
         let first = GPU_L2_TREND[0].2;
         let last = GPU_L2_TREND.last().unwrap().2;
         assert!(last > 4.0 * first);
-        assert_eq!(fig1().tables[0].len(), GPU_L2_TREND.len());
+        let out = fig1(Engine::shared(), &Params::default());
+        assert_eq!(out.tables[0].len(), GPU_L2_TREND.len());
     }
 
     #[test]
     fn fig3_covers_thirteen_workloads() {
-        let out = fig3();
+        let out = fig3(Engine::shared(), &Params::default());
         assert_eq!(out.tables[0].len(), 13);
         assert_eq!(out.csvs[0].1.len(), 13);
         assert!(out.headlines[0].contains("R/W ratio"));
+    }
+
+    #[test]
+    fn fig3_network_filter_narrows_rows() {
+        let params = Params { networks: Some(vec!["alexnet".into()]), ..Params::default() };
+        let out = fig3(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), 2, "AlexNet-I and AlexNet-T");
     }
 }

@@ -1,7 +1,9 @@
 //! Figure generators: Fig 7 (GPGPU-Sim capacity sweep) and the
-//! scalability figures 10–13.
+//! scalability figures 10–13. Fig 7 accepts `--networks` and
+//! `--capacities`; Figs 10–13 accept `--capacities` (MB grid).
 
-use crate::analysis::scalability::{ppa_curves, scaling_study};
+use crate::analysis::scalability::{ppa_curves, scaling_study, CAPACITIES_MB};
+use crate::engine::Engine;
 use crate::gpusim::{capacity_sweep, dnn_trace, fig7_capacities, SweepPoint};
 use crate::util::csv::Csv;
 use crate::util::pool::par_map;
@@ -10,7 +12,7 @@ use crate::util::units::{to_mm2, to_mw, to_nj, to_ns, MB};
 use crate::workloads::dnn::Dnn;
 use crate::workloads::memstats::Phase;
 use crate::workloads::nets;
-use super::Output;
+use super::{filter_rows, Output, Params};
 
 /// The Fig 7 network suite: every Table 3 network with its sweep batch
 /// size. AlexNet runs at batch 4 (the paper's original experiment and the
@@ -26,44 +28,68 @@ pub fn fig7_suite() -> Vec<(Dnn, u64)> {
     ]
 }
 
-/// The suite's sweeps, memoized process-wide: the figure generator is
-/// invoked from several tests and the registry run; the traces are
-/// deterministic, so simulate each network exactly once per process.
-fn fig7_sweeps() -> &'static [Vec<SweepPoint>] {
+fn sweep_suite(suite: &[(Dnn, u64)], caps: &[u64]) -> Vec<Vec<SweepPoint>> {
+    par_map(suite, |(net, batch)| capacity_sweep(dnn_trace(net, *batch), caps))
+}
+
+/// The default suite's sweeps, memoized process-wide: the figure
+/// generator is invoked from several tests and the registry run; the
+/// traces are deterministic, so simulate each network exactly once per
+/// process. Parameterized runs (non-default networks/capacities) compute
+/// fresh.
+fn fig7_default_sweeps() -> &'static [Vec<SweepPoint>] {
     static SWEEPS: std::sync::OnceLock<Vec<Vec<SweepPoint>>> = std::sync::OnceLock::new();
-    SWEEPS.get_or_init(|| {
-        let suite = fig7_suite();
-        par_map(&suite, |(net, batch)| {
-            capacity_sweep(dnn_trace(net, *batch), &fig7_capacities())
-        })
-    })
+    SWEEPS.get_or_init(|| sweep_suite(&fig7_suite(), &fig7_capacities()))
 }
 
 /// Fig 7: DRAM-access reduction vs L2 capacity, per network. Each
 /// network's sweep is one single-pass stack-distance simulation over its
 /// streamed trace; networks run in parallel via the thread pool.
-pub fn fig7() -> Output {
-    let suite = fig7_suite();
-    let sweeps = fig7_sweeps();
+pub fn fig7(_engine: &Engine, params: &Params) -> Output {
+    let suite: Vec<(Dnn, u64)> = filter_rows(fig7_suite(), params, |(net, _)| net.name);
+    let caps: Vec<u64> = match &params.capacities_mb {
+        Some(mbs) if !mbs.is_empty() => mbs.iter().map(|&mb| mb * MB).collect(),
+        _ => fig7_capacities(),
+    };
+    let is_default = params.networks.is_none() && params.capacities_mb.is_none();
+    let fresh;
+    let sweeps: &[Vec<SweepPoint>] = if is_default {
+        fig7_default_sweeps()
+    } else {
+        fresh = sweep_suite(&suite, &caps);
+        &fresh
+    };
+    // Summary capacities: the paper's iso-area points (7/10MB, headline
+    // compared against the paper's 14.6/19.8) when the swept grid covers
+    // them, otherwise the grid itself — a custom --capacities list must
+    // never produce NaN columns.
+    let swept_mbs: Vec<u64> = caps.iter().map(|c| c / MB).collect();
+    let paper_points = swept_mbs.contains(&7) && swept_mbs.contains(&10);
+    let summary_mbs: Vec<u64> = if paper_points {
+        vec![7, 10, 24].into_iter().filter(|mb| swept_mbs.contains(mb)).collect()
+    } else {
+        swept_mbs
+    };
+    let (mb_a, mb_b) = if paper_points {
+        (7, 10)
+    } else {
+        (
+            summary_mbs.first().copied().unwrap_or(3),
+            summary_mbs.last().copied().unwrap_or(3),
+        )
+    };
 
-    // Table + CSV 1: the AlexNet sweep, shaped like the paper's figure
-    // (schema unchanged from the single-network version).
-    let alexnet = &sweeps[0];
+    // Table + CSV 1: the lead network's sweep, shaped like the paper's
+    // figure (AlexNet with default params; schema unchanged).
+    let lead_name = suite[0].0.name;
+    let lead = &sweeps[0];
     let mut t = Table::new(
-        "Fig 7: DRAM access reduction vs L2 capacity (AlexNet)",
+        format!("Fig 7: DRAM access reduction vs L2 capacity ({lead_name})"),
         &["L2 (MB)", "DRAM accesses", "L2 hit rate", "reduction (%)"],
     );
     let mut csv = Csv::new(&["l2_mb", "dram_accesses", "hit_rate", "reduction_pct"]);
-    let mut stt = 0.0;
-    let mut sot = 0.0;
-    for p in alexnet {
+    for p in lead {
         let mb = p.result.l2_bytes / MB;
-        if mb == 7 {
-            stt = p.dram_reduction_pct;
-        }
-        if mb == 10 {
-            sot = p.dram_reduction_pct;
-        }
         t.row(&[
             mb.to_string(),
             p.result.dram_accesses().to_string(),
@@ -81,9 +107,16 @@ pub fn fig7() -> Output {
             .map(|p| p.dram_reduction_pct)
             .unwrap_or(f64::NAN)
     };
+    let stt = at(lead, mb_a);
+    let sot = at(lead, mb_b);
+    let header_cells: Vec<String> = ["network".to_string(), "batch".to_string()]
+        .into_iter()
+        .chain(summary_mbs.iter().map(|mb| format!("{mb}MB (%)")))
+        .collect();
+    let header_refs: Vec<&str> = header_cells.iter().map(String::as_str).collect();
     let mut tn = Table::new(
         "Fig 7 suite: DRAM reduction at the iso-area capacities",
-        &["network", "batch", "7MB (%)", "10MB (%)", "24MB (%)"],
+        &header_refs,
     );
     let mut csv_nets = Csv::new(&[
         "network",
@@ -93,17 +126,13 @@ pub fn fig7() -> Output {
         "hit_rate",
         "reduction_pct",
     ]);
-    let (mut mean7, mut mean10) = (0.0, 0.0);
+    let (mut mean_a, mut mean_b) = (0.0, 0.0);
     for ((net, batch), sweep) in suite.iter().zip(sweeps) {
-        mean7 += at(sweep, 7) / suite.len() as f64;
-        mean10 += at(sweep, 10) / suite.len() as f64;
-        tn.row(&[
-            net.name.to_string(),
-            batch.to_string(),
-            fnum(at(sweep, 7), 1),
-            fnum(at(sweep, 10), 1),
-            fnum(at(sweep, 24), 1),
-        ]);
+        mean_a += at(sweep, mb_a) / suite.len() as f64;
+        mean_b += at(sweep, mb_b) / suite.len() as f64;
+        let mut cells = vec![net.name.to_string(), batch.to_string()];
+        cells.extend(summary_mbs.iter().map(|&mb| fnum(at(sweep, mb), 1)));
+        tn.row(&cells);
         for p in sweep {
             csv_nets.rowd(&[
                 &net.name,
@@ -122,20 +151,20 @@ pub fn fig7() -> Output {
         .csv("fig7_dram_reduction", csv)
         .csv("fig7_networks", csv_nets)
         .headline(format!(
-            "Fig 7: AlexNet DRAM reduction {:.1}% at 7MB / {:.1}% at 10MB (paper 14.6/19.8)",
-            stt, sot
+            "Fig 7: {lead_name} DRAM reduction {stt:.1}% at {mb_a}MB / {sot:.1}% at {mb_b}MB \
+             (paper 14.6/19.8 at 7/10MB)"
         ))
         .headline(format!(
-            "Fig 7 suite ({} nets): mean DRAM reduction {:.1}% at 7MB / {:.1}% at 10MB",
-            suite.len(),
-            mean7,
-            mean10
+            "Fig 7 suite ({} nets): mean DRAM reduction {mean_a:.1}% at {mb_a}MB / \
+             {mean_b:.1}% at {mb_b}MB",
+            suite.len()
         ))
 }
 
 /// Fig 10: tuned-cache PPA vs capacity for all three technologies.
-pub fn fig10() -> Output {
-    let curves = ppa_curves();
+pub fn fig10(engine: &Engine, params: &Params) -> Output {
+    let caps = params.capacities_or(&CAPACITIES_MB);
+    let curves = ppa_curves(engine, &caps);
     let mut t = Table::new(
         "Fig 10: cache capacity scaling (EDAP-tuned per point)",
         &[
@@ -172,9 +201,10 @@ pub fn fig10() -> Output {
             ]);
         }
     }
-    let last = curves.last().unwrap();
+    let last = curves.last().expect("capacity grid is non-empty");
     Output::default().table(t).csv("fig10_ppa_scaling", csv).headline(format!(
-        "Fig 10: at 32MB area SRAM/STT/SOT = {:.0}/{:.0}/{:.0} mm2; SRAM read latency crosses above MRAM beyond ~4MB",
+        "Fig 10: at {}MB area SRAM/STT/SOT = {:.0}/{:.0}/{:.0} mm2; SRAM read latency crosses above MRAM beyond ~4MB",
+        last.capacity_mb,
         to_mm2(last.ppa[0].area),
         to_mm2(last.ppa[1].area),
         to_mm2(last.ppa[2].area)
@@ -182,15 +212,19 @@ pub fn fig10() -> Output {
 }
 
 fn scaling_figure(
+    engine: &Engine,
+    params: &Params,
     id: &str,
     title: &str,
     metric: &dyn Fn(&crate::analysis::scalability::ScalingPoint) -> ([f64; 2], [f64; 2]),
     paper_note: &str,
 ) -> Output {
+    let caps = params.capacities_or(&CAPACITIES_MB);
     let mut out = Output::default();
-    let mut at32 = [0.0f64; 2];
+    let mut at_last = [1.0f64; 2];
+    let mut last_mb = 0;
     for (phase, tag) in [(Phase::Inference, "inference"), (Phase::Training, "training")] {
-        let pts = scaling_study(phase);
+        let pts = scaling_study(engine, phase, &caps);
         let mut t = Table::new(
             format!("{title} ({tag})"),
             &["MB", "STT mean", "STT std", "SOT mean", "SOT std"],
@@ -206,22 +240,25 @@ fn scaling_figure(
                 fnum(s[1], 4),
             ]);
             csv.rowd(&[&p.capacity_mb, &m[0], &s[0], &m[1], &s[1]]);
-            if p.capacity_mb == 32 && phase == Phase::Inference {
-                at32 = m;
+            if phase == Phase::Inference {
+                at_last = m;
+                last_mb = p.capacity_mb;
             }
         }
         out = out.table(t).csv(&format!("{id}_{tag}"), csv);
     }
     out.headline(format!(
-        "{title}: at 32MB STT {:.1}x / SOT {:.1}x reduction ({paper_note})",
-        1.0 / at32[0],
-        1.0 / at32[1]
+        "{title}: at {last_mb}MB STT {:.1}x / SOT {:.1}x reduction ({paper_note})",
+        1.0 / at_last[0],
+        1.0 / at_last[1]
     ))
 }
 
 /// Fig 11: mean normalized energy vs capacity.
-pub fn fig11() -> Output {
+pub fn fig11(engine: &Engine, params: &Params) -> Output {
     scaling_figure(
+        engine,
+        params,
         "fig11_energy",
         "Fig 11: mean energy vs SRAM",
         &|p| (p.energy_mean, p.energy_std),
@@ -230,8 +267,10 @@ pub fn fig11() -> Output {
 }
 
 /// Fig 12: mean normalized latency vs capacity.
-pub fn fig12() -> Output {
+pub fn fig12(engine: &Engine, params: &Params) -> Output {
     scaling_figure(
+        engine,
+        params,
         "fig12_latency",
         "Fig 12: mean latency vs SRAM",
         &|p| (p.latency_mean, p.latency_std),
@@ -240,8 +279,10 @@ pub fn fig12() -> Output {
 }
 
 /// Fig 13: mean normalized EDP vs capacity.
-pub fn fig13() -> Output {
+pub fn fig13(engine: &Engine, params: &Params) -> Output {
     scaling_figure(
+        engine,
+        params,
         "fig13_edp",
         "Fig 13: mean EDP vs SRAM",
         &|p| (p.edp_mean, p.edp_std),
@@ -253,11 +294,15 @@ pub fn fig13() -> Output {
 mod tests {
     use super::*;
 
+    fn run(f: fn(&Engine, &Params) -> Output) -> Output {
+        f(Engine::shared(), &Params::default())
+    }
+
     #[test]
     fn fig7_covers_baseline_sweep_and_network_suite() {
         let suite = fig7_suite();
         assert!(suite.len() >= 4, "multi-network sweep wants >= 4 nets");
-        let out = fig7();
+        let out = run(fig7);
         // AlexNet table keeps the paper's shape: 3,6,7,10,12,24 MB.
         assert_eq!(out.tables[0].len(), 6);
         assert!(out.headlines[0].contains("7MB"));
@@ -271,15 +316,38 @@ mod tests {
     }
 
     #[test]
+    fn fig7_respects_network_and_capacity_params() {
+        let params = Params {
+            networks: Some(vec!["alexnet".into()]),
+            capacities_mb: Some(vec![6, 12]),
+            ..Params::default()
+        };
+        let out = fig7(Engine::shared(), &params);
+        // Lead table: baseline 3MB + the two requested capacities.
+        assert_eq!(out.tables[0].len(), 3);
+        // Suite narrowed to AlexNet only.
+        assert_eq!(out.tables[1].len(), 1);
+        assert_eq!(out.csvs[1].1.len(), 3);
+    }
+
+    #[test]
     fn fig10_covers_six_capacities_three_techs() {
-        let out = fig10();
+        let out = run(fig10);
         assert_eq!(out.tables[0].len(), 6);
         assert_eq!(out.csvs[0].1.len(), 18);
     }
 
     #[test]
+    fn fig10_custom_capacity_grid() {
+        let params = Params { capacities_mb: Some(vec![2, 4]), ..Params::default() };
+        let out = fig10(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), 2);
+        assert!(out.headlines[0].contains("at 4MB"));
+    }
+
+    #[test]
     fn scaling_figures_emit_both_phases() {
-        for out in [fig11(), fig12(), fig13()] {
+        for out in [run(fig11), run(fig12), run(fig13)] {
             assert_eq!(out.tables.len(), 2);
             assert_eq!(out.csvs.len(), 2);
             assert_eq!(out.tables[0].len(), 6);

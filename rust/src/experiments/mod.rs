@@ -1,8 +1,16 @@
 //! Experiment registry: one generator per paper table and figure.
 //!
+//! Since the query-engine redesign every generator is a thin consumer
+//! `fn(&Engine, &Params) -> Output`: the engine supplies the memoized
+//! characterize/tune/profile pipeline (so `repro all` computes each stage
+//! at most once across all experiments), and [`Params`] carries the
+//! CLI-plumbed knobs (`--networks`, `--capacities`, `--batches`). With
+//! default params every experiment reproduces the paper's artifact
+//! byte-for-byte.
+//!
 //! Every experiment renders (a) terminal tables shaped like the paper's
-//! artifact and (b) CSV series with the exact numbers, written under
-//! `results/` by the coordinator. `repro experiment <id>` runs one;
+//! artifact and (b) CSV series with the exact numbers, written under the
+//! results directory by the coordinator. `repro experiment <id>` runs one;
 //! `repro all` runs the whole registry.
 
 pub mod figures_iso;
@@ -10,8 +18,94 @@ pub mod figures_profile;
 pub mod figures_scale;
 pub mod tables;
 
+use crate::engine::Engine;
 use crate::util::csv::Csv;
 use crate::util::table::Table;
+
+/// CLI-plumbed experiment parameters. `None` everywhere (the default)
+/// reproduces the paper's configuration exactly.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Params {
+    /// Restrict network-driven experiments to these networks (matched
+    /// case-insensitively, ignoring punctuation: `resnet18` == `ResNet-18`).
+    pub networks: Option<Vec<String>>,
+    /// Override an experiment's capacity grid (MB).
+    pub capacities_mb: Option<Vec<u64>>,
+    /// Override the batch-size grid (Fig 6).
+    pub batches: Option<Vec<u64>>,
+}
+
+/// Canonical form for network-name matching: lowercase alphanumerics.
+pub fn normalize_name(s: &str) -> String {
+    s.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+impl Params {
+    /// True when every knob is at its paper default.
+    pub fn is_default(&self) -> bool {
+        *self == Params::default()
+    }
+
+    /// The capacity grid to sweep (MB), falling back to `default` when
+    /// absent or empty.
+    pub fn capacities_or(&self, default: &[u64]) -> Vec<u64> {
+        match &self.capacities_mb {
+            Some(caps) if !caps.is_empty() => caps.clone(),
+            _ => default.to_vec(),
+        }
+    }
+
+    /// The batch grid to sweep, falling back to `default` when absent or
+    /// empty.
+    pub fn batches_or(&self, default: &[u64]) -> Vec<u64> {
+        match &self.batches {
+            Some(batches) if !batches.is_empty() => batches.clone(),
+            _ => default.to_vec(),
+        }
+    }
+
+    /// Whether a network name passes the `--networks` filter.
+    pub fn network_selected(&self, name: &str) -> bool {
+        match &self.networks {
+            None => true,
+            Some(list) => {
+                let n = normalize_name(name);
+                list.iter().any(|x| normalize_name(x) == n)
+            }
+        }
+    }
+
+    /// Whether a suite-row label (e.g. `"ResNet-18-T"`, `"HPCG-S"`)
+    /// passes the `--networks` filter; the phase suffix is ignored.
+    pub fn row_selected(&self, label: &str) -> bool {
+        if self.networks.is_none() {
+            return true;
+        }
+        let base = label.rsplit_once('-').map(|(b, _)| b).unwrap_or(label);
+        self.network_selected(base) || self.network_selected(label)
+    }
+}
+
+/// Filter suite rows by the `--networks` param. Falls back to the full
+/// set when the filter matches nothing, so a typo degrades gracefully
+/// instead of emitting an empty artifact.
+pub fn filter_rows<T>(rows: Vec<T>, params: &Params, label: impl Fn(&T) -> &str) -> Vec<T> {
+    if params.networks.is_none() {
+        return rows;
+    }
+    let selected: Vec<bool> = rows.iter().map(|r| params.row_selected(label(r))).collect();
+    if selected.iter().any(|&s| s) {
+        rows.into_iter()
+            .zip(selected)
+            .filter_map(|(r, s)| s.then_some(r))
+            .collect()
+    } else {
+        rows
+    }
+}
 
 /// Output of one experiment.
 #[derive(Debug, Default)]
@@ -47,7 +141,9 @@ pub struct Experiment {
     pub id: &'static str,
     /// Paper artifact it regenerates.
     pub title: &'static str,
-    pub run: fn() -> Output,
+    /// Accepted [`Params`] keys, shown by `repro list` ("—" = none).
+    pub params: &'static str,
+    pub run: fn(&Engine, &Params) -> Output,
 }
 
 /// The full registry, in paper order.
@@ -56,81 +152,97 @@ pub fn registry() -> Vec<Experiment> {
         Experiment {
             id: "table1",
             title: "STT/SOT bitcell parameters after device-level characterization",
+            params: "—",
             run: tables::table1,
         },
         Experiment {
             id: "table2",
             title: "Cache latency/energy/area for SRAM, STT, SOT (iso-capacity + iso-area)",
+            params: "—",
             run: tables::table2,
         },
         Experiment {
             id: "table3",
             title: "DNN configurations under consideration",
+            params: "—",
             run: tables::table3,
         },
         Experiment {
             id: "table4",
             title: "GPGPU-Sim configuration (GTX 1080 Ti)",
+            params: "—",
             run: tables::table4,
         },
         Experiment {
             id: "fig1",
             title: "L2 cache capacity trend in NVIDIA GPUs",
+            params: "—",
             run: figures_profile::fig1,
         },
         Experiment {
             id: "fig3",
             title: "L2 read/write transaction ratio across workloads",
+            params: "networks",
             run: figures_profile::fig3,
         },
         Experiment {
             id: "fig4",
             title: "Iso-capacity dynamic + leakage energy (normalized to SRAM)",
+            params: "networks",
             run: figures_iso::fig4,
         },
         Experiment {
             id: "fig5",
             title: "Iso-capacity energy + EDP (normalized to SRAM)",
+            params: "networks",
             run: figures_iso::fig5,
         },
         Experiment {
             id: "fig6",
             title: "Batch-size impact on EDP (AlexNet, training + inference)",
+            params: "batches",
             run: figures_iso::fig6,
         },
         Experiment {
             id: "fig7",
             title: "DRAM access reduction vs L2 capacity (GPGPU-Sim substitute)",
+            params: "networks, capacities",
             run: figures_scale::fig7,
         },
         Experiment {
             id: "fig8",
             title: "Iso-area dynamic + leakage energy (normalized to SRAM)",
+            params: "networks",
             run: figures_iso::fig8,
         },
         Experiment {
             id: "fig9",
             title: "Iso-area EDP without/with DRAM (normalized to SRAM)",
+            params: "networks",
             run: figures_iso::fig9,
         },
         Experiment {
             id: "fig10",
             title: "Cache capacity scaling: area / latency / energy",
+            params: "capacities",
             run: figures_scale::fig10,
         },
         Experiment {
             id: "fig11",
             title: "Mean energy vs capacity (normalized to SRAM)",
+            params: "capacities",
             run: figures_scale::fig11,
         },
         Experiment {
             id: "fig12",
             title: "Mean latency vs capacity (normalized to SRAM)",
+            params: "capacities",
             run: figures_scale::fig12,
         },
         Experiment {
             id: "fig13",
             title: "Mean EDP vs capacity (normalized to SRAM)",
+            params: "capacities",
             run: figures_scale::fig13,
         },
     ]
@@ -169,5 +281,49 @@ mod tests {
     fn lookup_finds_and_misses() {
         assert!(by_id("fig5").is_some());
         assert!(by_id("fig2").is_none(), "fig2 is the flow diagram, not data");
+    }
+
+    #[test]
+    fn every_experiment_declares_its_params() {
+        for e in registry() {
+            assert!(!e.params.is_empty(), "{}: empty params help", e.id);
+        }
+        assert_eq!(by_id("fig7").unwrap().params, "networks, capacities");
+    }
+
+    #[test]
+    fn network_matching_ignores_punctuation_and_case() {
+        let p = Params {
+            networks: Some(vec!["resnet18".into(), "VGG16".into()]),
+            ..Params::default()
+        };
+        assert!(p.network_selected("ResNet-18"));
+        assert!(p.network_selected("VGG-16"));
+        assert!(!p.network_selected("AlexNet"));
+        assert!(p.row_selected("ResNet-18-T"));
+        assert!(!p.row_selected("HPCG-S"));
+        assert!(Params::default().row_selected("anything"));
+    }
+
+    #[test]
+    fn filter_rows_degrades_gracefully_on_no_match() {
+        let p = Params { networks: Some(vec!["nonexistent".into()]), ..Params::default() };
+        let rows = vec!["AlexNet-I".to_string(), "VGG-16-T".to_string()];
+        let kept = filter_rows(rows.clone(), &p, |s| s.as_str());
+        assert_eq!(kept, rows, "typo falls back to the full suite");
+        let p2 = Params { networks: Some(vec!["alexnet".into()]), ..Params::default() };
+        let kept = filter_rows(rows, &p2, |s| s.as_str());
+        assert_eq!(kept, vec!["AlexNet-I".to_string()]);
+    }
+
+    #[test]
+    fn params_grids_fall_back_to_defaults() {
+        let p = Params::default();
+        assert!(p.is_default());
+        assert_eq!(p.capacities_or(&[1, 2]), vec![1, 2]);
+        let p = Params { capacities_mb: Some(vec![8]), ..Params::default() };
+        assert!(!p.is_default());
+        assert_eq!(p.capacities_or(&[1, 2]), vec![8]);
+        assert_eq!(p.batches_or(&[4]), vec![4]);
     }
 }

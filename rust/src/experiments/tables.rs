@@ -1,19 +1,18 @@
-//! Table generators: paper Tables 1–4.
+//! Table generators: paper Tables 1–4 — thin consumers of the query
+//! engine's memoized characterization/tuning stages.
 
-use crate::device::bitcell::BitcellKind;
-use crate::device::characterize::characterize_kind;
+use crate::engine::{Engine, TECH_SOT, TECH_SRAM, TECH_STT};
 use crate::gpusim::config::GpuConfig;
-use crate::nvsim::optimizer::tuned_cache;
 use crate::util::csv::Csv;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{fmt_bytes, to_mm2, to_mw, to_nj, to_ns, to_ps, MB};
 use crate::workloads::nets::all_networks;
-use super::Output;
+use super::{Output, Params};
 
 /// Table 1: bitcell parameters after device-level characterization.
-pub fn table1() -> Output {
-    let stt = characterize_kind(BitcellKind::SttMram).chosen;
-    let sot = characterize_kind(BitcellKind::SotMram).chosen;
+pub fn table1(engine: &Engine, _params: &Params) -> Output {
+    let stt = engine.characterization(TECH_STT).expect("builtin").chosen.clone();
+    let sot = engine.characterization(TECH_SOT).expect("builtin").chosen.clone();
     let mut t = Table::new(
         "Table 1: STT-MRAM and SOT-MRAM bitcell parameters",
         &["", "STT-MRAM", "SOT-MRAM"],
@@ -100,12 +99,12 @@ pub fn table1() -> Output {
 }
 
 /// Table 2: tuned cache PPA, iso-capacity (3MB) and iso-area (7/10MB).
-pub fn table2() -> Output {
-    let sram = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
-    let stt3 = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;
-    let stt7 = tuned_cache(BitcellKind::SttMram, 7 * MB).ppa;
-    let sot3 = tuned_cache(BitcellKind::SotMram, 3 * MB).ppa;
-    let sot10 = tuned_cache(BitcellKind::SotMram, 10 * MB).ppa;
+pub fn table2(engine: &Engine, _params: &Params) -> Output {
+    let sram = engine.tuned(TECH_SRAM, 3 * MB).expect("builtin").ppa;
+    let stt3 = engine.tuned(TECH_STT, 3 * MB).expect("builtin").ppa;
+    let stt7 = engine.tuned(TECH_STT, 7 * MB).expect("builtin").ppa;
+    let sot3 = engine.tuned(TECH_SOT, 3 * MB).expect("builtin").ppa;
+    let sot10 = engine.tuned(TECH_SOT, 10 * MB).expect("builtin").ppa;
     let cols = [
         ("SRAM", &sram),
         ("STT iso-cap", &stt3),
@@ -155,7 +154,7 @@ pub fn table2() -> Output {
 }
 
 /// Table 3: DNN configurations.
-pub fn table3() -> Output {
+pub fn table3(_engine: &Engine, _params: &Params) -> Output {
     let nets = all_networks();
     let mut t = Table::new(
         "Table 3: DNN configurations",
@@ -197,7 +196,7 @@ pub fn table3() -> Output {
 }
 
 /// Table 4: the GPU configuration used by the simulator.
-pub fn table4() -> Output {
+pub fn table4(_engine: &Engine, _params: &Params) -> Output {
     let g = GpuConfig::gtx_1080_ti();
     let mut t = Table::new("Table 4: GPGPU-Sim configuration (GTX 1080 Ti)", &["parameter", "value"]);
     t.row_str(&["Number of Cores", &g.cores.to_string()]);
@@ -227,9 +226,13 @@ pub fn table4() -> Output {
 mod tests {
     use super::*;
 
+    fn run(f: fn(&Engine, &Params) -> Output) -> Output {
+        f(Engine::shared(), &Params::default())
+    }
+
     #[test]
     fn table1_has_six_rows_two_techs() {
-        let out = table1();
+        let out = run(table1);
         assert_eq!(out.tables.len(), 1);
         assert_eq!(out.tables[0].len(), 6);
         assert!(!out.csvs.is_empty());
@@ -238,7 +241,7 @@ mod tests {
 
     #[test]
     fn table2_renders_five_configs() {
-        let out = table2();
+        let out = run(table2);
         let rendered = out.tables[0].render();
         assert!(rendered.contains("SOT 10MB"));
         assert!(rendered.contains("Leakage Power"));
@@ -247,7 +250,7 @@ mod tests {
 
     #[test]
     fn table3_matches_paper_layer_counts() {
-        let out = table3();
+        let out = run(table3);
         let rendered = out.tables[0].render();
         assert!(rendered.contains("57"), "GoogLeNet conv count");
         assert!(rendered.contains("SqueezeNet"));
@@ -255,7 +258,7 @@ mod tests {
 
     #[test]
     fn table4_lists_core_frequency() {
-        let rendered = table4().tables[0].render();
+        let rendered = run(table4).tables[0].render();
         assert!(rendered.contains("1481 MHz"));
         assert!(rendered.contains("28"));
     }

@@ -54,7 +54,7 @@ struct Run {
 }
 
 /// Streaming trace generator: a resumable state machine over the network's
-/// layers. Each layer expands to a bounded queue of [`Run`]s (one per
+/// layers. Each layer expands to a bounded queue of `Run`s (one per
 /// im2col region or GEMM tile operand); `next()` walks the current run one
 /// L2 line at a time.
 pub struct TraceGen<'a> {

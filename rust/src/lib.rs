@@ -22,15 +22,22 @@
 //! 5. [`analysis`] — the cross-layer roll-up: dynamic/leakage energy,
 //!    latency, and EDP for iso-capacity, iso-area, batch-size and
 //!    scalability studies.
-//! 6. [`experiments`] — one generator per paper table/figure, with renderers.
-//! 7. [`coordinator`] — orchestration: experiment DAG, memoizing cache,
-//!    thread-pool sweep engine.
-//! 8. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas workloads
+//! 6. [`engine`] — the query engine: an open [`TechSpec`](engine::TechSpec)
+//!    technology registry (the paper's SRAM/STT/SOT built in, user
+//!    technologies loaded from descriptor files) and a typed
+//!    [`Query`](engine::Query) → [`Evaluation`](engine::Evaluation) API
+//!    over a per-stage memoized pipeline.
+//! 7. [`experiments`] — one generator per paper table/figure, each a thin
+//!    parameterized consumer of the engine.
+//! 8. [`coordinator`] — orchestration: experiment runner, CSV persistence,
+//!    run manifest with per-experiment engine-cache accounting.
+//! 9. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas workloads
 //!    (build-time Python; never on the analysis hot path).
 
 pub mod analysis;
 pub mod coordinator;
 pub mod device;
+pub mod engine;
 pub mod experiments;
 pub mod gpusim;
 pub mod nvsim;

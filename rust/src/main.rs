@@ -1,19 +1,26 @@
 //! `repro` — the DeepNVM++ command-line interface.
 //!
 //! Subcommands:
-//!   list                      list all registered experiments
+//!   list                      list all experiments and their accepted params
 //!   experiment <id> [..]      run specific experiments (table1..fig13)
-//!   all                       run the whole registry, write results/
-//!   bitcells                  print the device-level characterization sweep
-//!   tune --kind K --cap MB    EDAP-tune one cache and print its design
+//!   all                       run the whole registry, write the results dir
+//!   bitcells                  print the device-level characterization sweeps
+//!   tune --tech T --cap MB    EDAP-tune one cache and print its design
 //!   profile [--l2 MB]         print the workload suite's memory statistics
 //!   runtime <artifact.hlo.txt>  smoke-run an AOT artifact via PJRT
+//!
+//! Global options:
+//!   --results-dir DIR         where CSVs + manifest land (default results/)
+//!   --tech-file F[,F..]       register custom technology descriptors
+//!
+//! Experiment params (see `repro list` for which experiment takes what):
+//!   --networks a,b            restrict network-driven experiments
+//!   --capacities 1,2,4        capacity grid in MB
+//!   --batches 1,8,64          batch-size grid (fig6)
 
 use deepnvm::coordinator::{run_all, run_one, RunnerConfig};
-use deepnvm::device::bitcell::BitcellKind;
-use deepnvm::device::characterize::characterize_kind;
-use deepnvm::experiments::registry;
-use deepnvm::nvsim::optimizer::explore;
+use deepnvm::engine::Engine;
+use deepnvm::experiments::{registry, Params};
 use deepnvm::runtime::{Runtime, TensorF32};
 use deepnvm::util::cli::Args;
 use deepnvm::util::table::{fnum, Table};
@@ -22,12 +29,19 @@ use deepnvm::workloads::profiler::profile_suite;
 
 fn main() {
     let args = Args::from_env();
+    let engine = match engine_from(&args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
     let code = match args.command.as_deref() {
         Some("list") => cmd_list(),
-        Some("experiment") => cmd_experiment(&args),
-        Some("all") => cmd_all(&args),
-        Some("bitcells") => cmd_bitcells(),
-        Some("tune") => cmd_tune(&args),
+        Some("experiment") => cmd_experiment(engine, &args),
+        Some("all") => cmd_all(engine, &args),
+        Some("bitcells") => cmd_bitcells(engine, &args),
+        Some("tune") => cmd_tune(engine, &args),
         Some("profile") => cmd_profile(&args),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => {
@@ -50,37 +64,67 @@ fn usage() {
          \n\
          examples:\n\
            repro experiment table2 fig5\n\
-           repro all --results results/\n\
-           repro tune --kind sot --cap 10\n\
+           repro experiment fig7 --networks resnet18,vgg16 --capacities 4,8,16\n\
+           repro all --results-dir results/\n\
+           repro tune --tech sot --cap 10\n\
+           repro tune --tech-file my_mram.tech --tech my_mram --cap 4\n\
            repro profile --l2 7\n\
            repro runtime artifacts/mlp_infer.hlo.txt"
     );
 }
 
+/// The shared engine, with any `--tech-file` descriptors registered.
+fn engine_from(args: &Args) -> Result<&'static Engine, String> {
+    let engine = Engine::shared();
+    if let Some(files) = args.get_list("tech-file") {
+        for f in &files {
+            let id = engine.register_file(f).map_err(|e| e.to_string())?;
+            eprintln!("registered technology '{id}' from {f}");
+        }
+    }
+    Ok(engine)
+}
+
 fn runner_cfg(args: &Args) -> RunnerConfig {
     RunnerConfig {
-        results_dir: args.get("results").unwrap_or("results").into(),
+        results_dir: args.get_any(&["results-dir", "results"]).unwrap_or("results").into(),
         print_tables: !args.flag("quiet"),
     }
 }
 
+fn params_from(args: &Args) -> Result<Params, String> {
+    Ok(Params {
+        networks: args.get_list("networks"),
+        capacities_mb: args.get_parse_list::<u64>("capacities")?,
+        batches: args.get_parse_list::<u64>("batches")?,
+    })
+}
+
 fn cmd_list() -> i32 {
-    let mut t = Table::new("Registered experiments", &["id", "regenerates"]);
+    let mut t = Table::new("Registered experiments", &["id", "regenerates", "params"]);
     for e in registry() {
-        t.row_str(&[e.id, e.title]);
+        t.row_str(&[e.id, e.title, e.params]);
     }
     println!("{}", t.render());
+    println!("params plumb from the CLI: --networks a,b  --capacities 1,2,4  --batches 1,8,64");
     0
 }
 
-fn cmd_experiment(args: &Args) -> i32 {
+fn cmd_experiment(engine: &Engine, args: &Args) -> i32 {
     if args.positional.is_empty() {
         eprintln!("experiment: need at least one id (see `repro list`)");
         return 2;
     }
+    let params = match params_from(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let cfg = runner_cfg(args);
     for id in &args.positional {
-        if run_one(id, &cfg).is_none() {
+        if run_one(engine, id, &params, &cfg).is_none() {
             eprintln!("unknown experiment id: {id}");
             return 2;
         }
@@ -88,34 +132,62 @@ fn cmd_experiment(args: &Args) -> i32 {
     0
 }
 
-fn cmd_all(args: &Args) -> i32 {
+fn cmd_all(engine: &Engine, args: &Args) -> i32 {
+    // `all` regenerates the paper's artifacts byte-for-byte with default
+    // params; silently ignoring narrowing flags would run the full grids
+    // against the user's intent.
+    for flag in ["networks", "capacities", "batches"] {
+        if args.get(flag).is_some() {
+            eprintln!(
+                "all: --{flag} applies to `repro experiment <id>` only \
+                 (`all` always uses the paper defaults)"
+            );
+            return 2;
+        }
+    }
     let cfg = runner_cfg(args);
-    let reports = run_all(&cfg);
+    let reports = run_all(engine, &cfg);
     println!("== run summary ==");
     for r in &reports {
         println!("  [{}] {:.2}s — {}", r.id, r.seconds, r.title);
     }
+    let totals = engine.totals();
+    println!("  engine totals: {}", totals.summary());
     println!(
-        "results written to {}/ (manifest.txt has the paper-vs-measured headlines)",
+        "results written to {}/ (manifest.txt has the paper-vs-measured headlines \
+         and per-experiment cache accounting)",
         cfg.results_dir.display()
     );
     0
 }
 
-fn kind_from(s: &str) -> Option<BitcellKind> {
-    match s.to_ascii_lowercase().as_str() {
-        "sram" => Some(BitcellKind::Sram),
-        "stt" | "stt-mram" => Some(BitcellKind::SttMram),
-        "sot" | "sot-mram" => Some(BitcellKind::SotMram),
-        _ => None,
-    }
-}
-
-fn cmd_bitcells() -> i32 {
-    for kind in BitcellKind::ALL {
-        let rep = characterize_kind(kind);
+fn cmd_bitcells(engine: &Engine, args: &Args) -> i32 {
+    let only: Option<String> = match args.get("tech") {
+        None => None,
+        Some(t) => match resolve_tech(engine, t) {
+            Some(id) => Some(id),
+            None => {
+                let known: Vec<String> = engine.techs().iter().map(|s| s.id.clone()).collect();
+                eprintln!("bitcells: unknown technology {t:?} (registered: {})", known.join(", "));
+                return 2;
+            }
+        },
+    };
+    for spec in engine.techs() {
+        if let Some(t) = &only {
+            if &spec.id != t {
+                continue;
+            }
+        }
+        let rep = match engine.characterization(&spec.id) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{}: {e}", spec.id);
+                return 1;
+            }
+        };
         let mut t = Table::new(
-            format!("{} fin-count sweep", kind.name()),
+            format!("{} fin-count sweep", rep.tech),
             &["write fins", "read fins", "t_set (ps)", "t_reset (ps)", "E_set (pJ)", "sense (ps)", "rel area", "status"],
         );
         for p in &rep.sweep {
@@ -147,13 +219,16 @@ fn cmd_bitcells() -> i32 {
     0
 }
 
-fn cmd_tune(args: &Args) -> i32 {
-    let kind = match args.get("kind").and_then(kind_from) {
-        Some(k) => k,
-        None => {
-            eprintln!("tune: --kind must be sram|stt|sot");
-            return 2;
-        }
+fn cmd_tune(engine: &Engine, args: &Args) -> i32 {
+    let Some(tech_arg) = args.get_any(&["tech", "kind"]) else {
+        let known: Vec<String> = engine.techs().iter().map(|s| s.id.clone()).collect();
+        eprintln!("tune: --tech must be one of: {}", known.join("|"));
+        return 2;
+    };
+    let Some(tech) = resolve_tech(engine, tech_arg) else {
+        let known: Vec<String> = engine.techs().iter().map(|s| s.id.clone()).collect();
+        eprintln!("tune: unknown technology {tech_arg:?} (registered: {})", known.join(", "));
+        return 2;
     };
     let cap_mb: u64 = match args.get_parse("cap", 3u64) {
         Ok(v) => v,
@@ -162,10 +237,17 @@ fn cmd_tune(args: &Args) -> i32 {
             return 2;
         }
     };
-    let tuned = explore(kind, cap_mb * MB);
+    let tuned = match engine.tuned(&tech, cap_mb * MB) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("tune: {e}");
+            return 1;
+        }
+    };
+    let name = engine.tech(&tech).map(|s| s.name.clone()).unwrap_or(tech);
     println!(
         "{} {}MB EDAP-optimal design:\n  organization: {:?}\n  access type: {:?} (sizing target {})\n  RL {} ns  WL {} ns  RE {} nJ  WE {} nJ  leak {} mW  area {} mm2",
-        kind.name(),
+        name,
         cap_mb,
         tuned.org,
         tuned.access,
@@ -178,6 +260,24 @@ fn cmd_tune(args: &Args) -> i32 {
         fnum(to_mm2(tuned.ppa.area), 2),
     );
     0
+}
+
+/// Resolve a CLI technology name against the registry: exact id first
+/// (descriptor ids keep their case), then case-folded, then the legacy
+/// `--kind` spellings (`stt-mram`, `sot-mram`).
+fn resolve_tech(engine: &Engine, s: &str) -> Option<String> {
+    if engine.tech(s).is_some() {
+        return Some(s.to_string());
+    }
+    let norm = s.to_ascii_lowercase();
+    if engine.tech(&norm).is_some() {
+        return Some(norm);
+    }
+    match norm.as_str() {
+        "stt-mram" => Some("stt".to_string()),
+        "sot-mram" => Some("sot".to_string()),
+        _ => None,
+    }
 }
 
 fn cmd_profile(args: &Args) -> i32 {

@@ -6,69 +6,20 @@
 //! bitcell card from [`crate::device`]; the bitcell's sense quantities were
 //! characterized at a 512-row bitline, so they rescale linearly with the
 //! subarray's actual row count (bitline capacitance ∝ rows).
+//!
+//! Per-technology calibration (cell area multiplier, aspect ratio, write-
+//! driver sizing/leakage, sense discipline) rides inside the bitcell's
+//! [`NvCal`](crate::device::bitcell::NvCal) card — stamped from its
+//! [`TechSpec`](crate::engine::TechSpec) — so this module models any
+//! descriptor-defined technology without dispatching on an enum.
 
-use crate::device::bitcell::{BitcellKind, BitcellParams};
+use crate::device::bitcell::BitcellParams;
 use crate::device::characterize::cal as devcal;
 use crate::device::finfet::card;
 use super::tech;
 
 /// Rows at which the device layer characterized the sense path.
 pub const REFERENCE_ROWS: f64 = 512.0;
-
-/// Per-technology calibration card for the cache-level model — the
-/// constants NVSim reads from its (here: proprietary) tech+cell files.
-#[derive(Debug, Clone, Copy)]
-pub struct KindCal {
-    /// Cache-array cell area multiplier over the bitcell layout area.
-    /// SRAM L2 arrays use logic-rule performance cells (~2× the foundry
-    /// high-density cell the Table 1 normalization uses); MRAM arrays add
-    /// MTJ via landing overhead.
-    pub cell_area_mult: f64,
-    /// Cell aspect ratio (width/height) for wire-length geometry.
-    pub cell_aspect: f64,
-    /// Write-driver circuitry area per column, per ampere of write drive
-    /// (m²/A): MRAM columns need large current-mode drivers + charge pump
-    /// rails; SRAM needs only small full-swing drivers.
-    pub wd_area_per_amp: f64,
-    /// Leakage density of the write-driver circuitry (W/m²) — high-VT,
-    /// power-gated when idle, so much lower than the SA/decoder logic.
-    pub wd_leak_density: f64,
-    /// Hot-operation multiplier on cell leakage (L2 junction temperature
-    /// vs the room-temperature device characterization).
-    pub temp_leak_mult: f64,
-}
-
-impl KindCal {
-    /// Calibration for each technology (regressed against Table 2).
-    pub fn for_kind(kind: BitcellKind) -> KindCal {
-        match kind {
-            BitcellKind::Sram => KindCal {
-                cell_area_mult: 1.97,
-                cell_aspect: 2.0,
-                wd_area_per_amp: 1.0e-12 / 1.0e-3, // 1 µm² per mA
-                wd_leak_density: 1.0e6,
-                temp_leak_mult: 12.0,
-            },
-            BitcellKind::SttMram => KindCal {
-                cell_area_mult: 2.00,
-                cell_aspect: 1.3,
-                wd_area_per_amp: 200.0e-12 / 1.0e-3, // 200 µm² per mA
-                wd_leak_density: 1.80e6,
-                temp_leak_mult: 1.0,
-            },
-            BitcellKind::SotMram => KindCal {
-                cell_area_mult: 1.80,
-                cell_aspect: 1.3,
-                // SOT write drivers see the low-impedance rail: smaller
-                // devices than STT's junction drivers, but biased rails
-                // leak more per area.
-                wd_area_per_amp: 120.0e-12 / 1.0e-3,
-                wd_leak_density: 1.55e6,
-                temp_leak_mult: 1.0,
-            },
-        }
-    }
-}
 
 /// Redundancy + ECC + dummy row/column overhead on the cell array.
 pub const ARRAY_OVERHEAD: f64 = 1.20;
@@ -112,7 +63,7 @@ pub struct SubarrayPpa {
 /// Compute subarray PPA for `bitcell` at `rows × cols` with column-mux
 /// degree `mux`.
 pub fn subarray_ppa(bitcell: &BitcellParams, rows: u64, cols: u64, mux: u64) -> SubarrayPpa {
-    let cal = KindCal::for_kind(bitcell.kind);
+    let cal = &bitcell.nv;
     let (rows_f, cols_f) = (rows as f64, cols as f64);
     let bits_accessed = (cols / mux) as f64;
 
@@ -136,7 +87,7 @@ pub fn subarray_ppa(bitcell: &BitcellParams, rows: u64, cols: u64, mux: u64) -> 
     // helping below it. SRAM's full-swing differential keeps scaling.
     let row_scale = rows_f / REFERENCE_ROWS;
     let t_margin = (bitcell.sense_latency - devcal::T_SA) * row_scale;
-    let t_margin = if bitcell.kind == BitcellKind::Sram {
+    let t_margin = if cal.precharge {
         t_margin
     } else {
         t_margin.max(MRAM_SENSE_FLOOR)
@@ -160,14 +111,8 @@ pub fn subarray_ppa(bitcell: &BitcellParams, rows: u64, cols: u64, mux: u64) -> 
     let a_row_periph = rows_f * tech::ROW_PERIPH_AREA_PER_ROW;
     let n_sa = (cols / mux) as f64;
     let a_sa = n_sa * tech::SA_AREA;
-    // Write drivers: one per SA column, sized for the write current.
-    let i_write = match bitcell.kind {
-        BitcellKind::Sram => 0.4e-3,
-        // MTJ write loop current at the worst-power corner ~ 2× Ic.
-        BitcellKind::SttMram => 220.0e-6,
-        BitcellKind::SotMram => 215.0e-6,
-    };
-    let a_wd = n_sa * cal.wd_area_per_amp * i_write;
+    // Write drivers: one per SA column, sized for the spec's write current.
+    let a_wd = n_sa * cal.wd_area_per_amp * cal.i_write;
     let area = a_cells + a_row_periph + a_sa + a_wd + SUBARRAY_FIXED_AREA;
 
     // --- leakage ---

@@ -11,9 +11,14 @@
 //! the standard design point; it puts a sense phase in front of the MTJ
 //! write (visible in Table 2's 9.3 ns STT write) and scales write energy
 //! by the toggle fraction.
+//!
+//! All per-technology behavior (precharge discipline, differential
+//! writes, CSA overhead, fixed latency adders) comes from the bitcell's
+//! [`NvCal`](crate::device::bitcell::NvCal) card, so descriptor-defined
+//! technologies assemble through the same model.
 
-use crate::device::bitcell::{BitcellKind, BitcellParams};
-use super::array::{subarray_ppa, KindCal, SubarrayPpa};
+use crate::device::bitcell::BitcellParams;
+use super::array::{subarray_ppa, SubarrayPpa};
 use super::bank::{bank_ppa, BankPpa};
 use super::geometry::Organization;
 use super::tech;
@@ -115,7 +120,7 @@ fn tag_ppa(bitcell: &BitcellParams, lines: u64) -> TagPpa {
     let rows_per_sub = sets.min(512).max(64);
     let n_sub = sets.div_ceil(rows_per_sub);
     let sub = subarray_ppa(bitcell, rows_per_sub, tag_cols, 1);
-    let t_pre_tag = if bitcell.kind == BitcellKind::Sram {
+    let t_pre_tag = if bitcell.nv.precharge {
         precharge(rows_per_sub)
     } else {
         0.0
@@ -145,7 +150,6 @@ pub fn cache_ppa(
     sizing: (f64, f64, f64),
 ) -> CachePpa {
     let (d_mult, e_mult, a_mult) = sizing;
-    let cal = KindCal::for_kind(bitcell.kind);
     let capacity = org.data_bits() / 8;
     let lines = capacity / tech::LINE_BYTES;
     let line_bits = (tech::LINE_BYTES * 8) as f64;
@@ -157,41 +161,37 @@ pub fn cache_ppa(
     let active_subarrays = (org.active_mats() * super::geometry::SUBARRAYS_PER_MAT) as f64;
 
     // --- data-array read path ---
-    // SRAM precharges its bitlines to VDD before every access; the MRAM
-    // flavors current-sense and skip the rail precharge.
-    let t_pre = if bitcell.kind == BitcellKind::Sram {
+    // Full-swing (SRAM-style) arrays precharge their bitlines to VDD
+    // before every access; current-sensed arrays skip the rail precharge.
+    let t_pre = if bitcell.nv.precharge {
         precharge(org.rows)
     } else {
         0.0
     };
     let mux_levels = (org.mux as f64).log2().max(1.0);
     let t_mux = tech::MUX_PER_LEVEL * mux_levels;
-    // SOT's dedicated 1-fin read port delivers a tiny differential
-    // current; the cache-level CSA double-samples (offset cancellation),
-    // and its shared write rail needs a bipolar bias settle before the
-    // cell write — both fixed adders at the cache level.
-    let (t_read_extra, t_write_extra) = match bitcell.kind {
-        BitcellKind::SotMram => (1.15e-9, 0.45e-9),
-        _ => (0.0, 0.0),
-    };
+    // Fixed cache-level adders from the technology card, e.g. SOT's
+    // offset-cancelled CSA double-sampling on the read path and the
+    // bipolar write-rail bias settle before the cell write.
+    let (t_read_extra, t_write_extra) = (bitcell.nv.t_read_extra, bitcell.nv.t_write_extra);
     // Sizing scales the row decode + mux drive; precharge, sensing and
     // the H-tree are device/wire-limited.
     let t_data_read =
         (sub.t_row + t_mux) * d_mult + t_pre + sub.t_sense + t_read_extra + bank.t_htree;
 
     // Per-bit sense energy at this row count, plus the current-sense
-    // amplifier / reference-path overhead for the MRAM flavors.
+    // amplifier / reference-path overhead from the technology card.
     let e_data_read_way = (active_subarrays * (sub.e_row + sub.e_read)
-        + line_bits * csa_overhead(bitcell.kind))
+        + line_bits * bitcell.nv.csa_overhead)
         * e_mult
         + bank.e_htree;
 
     // --- data-array write path ---
     // The MTJ switching time is device-limited — peripheral sizing scales
     // only the row path. SRAM pays a bitline precharge-restore after the
-    // full-swing write. STT's differential-write read phase is pipelined
-    // with the row decode of the following access (energy counted below).
-    let diff_write = bitcell.kind == BitcellKind::SttMram;
+    // full-swing write. A differential-write read phase is pipelined with
+    // the row decode of the following access (energy counted below).
+    let diff_write = bitcell.nv.diff_write;
     let t_data_write =
         sub.t_row * d_mult + t_pre + t_write_extra + sub.t_write_cell + bank.t_htree;
     let toggle = if diff_write { DIFF_WRITE_TOGGLE } else { 1.0 };
@@ -245,28 +245,16 @@ pub fn cache_ppa(
         leakage_power,
         area,
     }
-    .scaled_leak(cal, access)
+    .scaled_leak(access)
 }
 
 impl CachePpa {
     /// Fast access type keeps duplicated output paths powered.
-    fn scaled_leak(mut self, _cal: KindCal, access: AccessType) -> Self {
+    fn scaled_leak(mut self, access: AccessType) -> Self {
         if access == AccessType::Fast {
             self.leakage_power *= 1.08;
         }
         self
-    }
-}
-
-/// Current-sense-amplifier + reference-path energy per sensed bit (J),
-/// on top of the bitcell-level sense energy. Calibrated against Table 2
-/// (MRAM sensing needs reference generation and bias current that dwarf
-/// the junction's own sense energy; STT's higher read current costs more).
-fn csa_overhead(kind: BitcellKind) -> f64 {
-    match kind {
-        BitcellKind::Sram => 0.0,
-        BitcellKind::SttMram => 0.50e-12,
-        BitcellKind::SotMram => 0.30e-12,
     }
 }
 

@@ -1,19 +1,20 @@
 //! Algorithm 1: EDAP-optimal cache tuning.
 //!
 //! Exhaustively walks the organization grid × access types × peripheral
-//! sizing targets for one memory technology and capacity, evaluates the
-//! cache PPA of every point, and keeps the EDAP minimum — "we
+//! sizing targets for one characterized bitcell and capacity, evaluates
+//! the cache PPA of every point, and keeps the EDAP minimum — "we
 //! independently choose the best configuration for each type of memory
 //! technology in terms of EDAP metric to perform a fair comparison".
 //!
-//! Results are memoized process-wide: the scalability figures re-tune the
-//! same (technology, capacity) pairs dozens of times.
-
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+//! [`explore_cell`] is the technology-agnostic core (any descriptor-
+//! characterized [`BitcellParams`] works); the [`BitcellKind`]-based
+//! functions are convenience wrappers that route through the shared
+//! [`Engine`](crate::engine::Engine), whose per-stage memo caches replace
+//! the process-wide statics this module used to own — the scalability
+//! figures re-tune the same (technology, capacity) pairs dozens of times.
 
 use crate::device::bitcell::{BitcellKind, BitcellParams};
-use crate::device::characterize::characterize;
+use crate::engine::Engine;
 use crate::util::pool::par_map;
 use super::cache::{cache_ppa, AccessType, CachePpa};
 use super::geometry::{enumerate, Organization};
@@ -22,7 +23,6 @@ use super::tech::SIZING_TARGETS;
 /// An EDAP-tuned cache design: the winning point of the Algorithm 1 walk.
 #[derive(Debug, Clone, Copy)]
 pub struct TunedCache {
-    pub kind: BitcellKind,
     pub org: Organization,
     pub access: AccessType,
     /// Index into [`SIZING_TARGETS`].
@@ -30,11 +30,12 @@ pub struct TunedCache {
     pub ppa: CachePpa,
 }
 
-/// Evaluate every design point for `kind` at `capacity_bytes` and return
-/// the EDAP-optimal one. Panics if the capacity admits no organization
-/// (use power-of-two-divisible capacities).
-pub fn explore(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
-    let bitcell = bitcell_for(kind);
+/// Evaluate every design point for a characterized `bitcell` at
+/// `capacity_bytes` and return the EDAP-optimal one. Panics if the
+/// capacity admits no organization (use power-of-two-divisible
+/// capacities; [`Engine::tuned`](crate::engine::Engine::tuned) validates
+/// and errors instead).
+pub fn explore_cell(bitcell: &BitcellParams, capacity_bytes: u64) -> TunedCache {
     let orgs = enumerate(capacity_bytes);
     assert!(
         !orgs.is_empty(),
@@ -45,9 +46,8 @@ pub fn explore(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
         let mut best: Option<TunedCache> = None;
         for access in AccessType::ALL {
             for (si, &sizing) in SIZING_TARGETS.iter().enumerate() {
-                let ppa = cache_ppa(&bitcell, org, access, sizing);
+                let ppa = cache_ppa(bitcell, org, access, sizing);
                 let cand = TunedCache {
-                    kind,
                     org: *org,
                     access,
                     sizing: si,
@@ -70,29 +70,26 @@ pub fn explore(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
         .unwrap()
 }
 
-/// The characterized bitcell for a technology (memoized — the transient
-/// simulations behind it take milliseconds, and every tuning run needs it).
-pub fn bitcell_for(kind: BitcellKind) -> BitcellParams {
-    static CELLS: OnceLock<[BitcellParams; 3]> = OnceLock::new();
-    let cells = CELLS.get_or_init(characterize);
-    match kind {
-        BitcellKind::Sram => cells[0].clone(),
-        BitcellKind::SttMram => cells[1].clone(),
-        BitcellKind::SotMram => cells[2].clone(),
-    }
+/// [`explore_cell`] for a built-in technology (uncached walk).
+pub fn explore(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
+    explore_cell(&bitcell_for(kind), capacity_bytes)
 }
 
-/// Memoized [`explore`]: the cross-layer analyses query the same tuned
-/// caches repeatedly.
+/// The characterized bitcell for a built-in technology, via the shared
+/// engine's characterization cache (the transient simulations behind it
+/// take milliseconds, and every tuning run needs it).
+pub fn bitcell_for(kind: BitcellKind) -> BitcellParams {
+    Engine::shared()
+        .bitcell(kind.tech_id())
+        .expect("built-in technology characterizes")
+}
+
+/// Memoized [`explore`] via the shared engine's tuning cache: the
+/// cross-layer analyses query the same tuned caches repeatedly.
 pub fn tuned_cache(kind: BitcellKind, capacity_bytes: u64) -> TunedCache {
-    static CACHE: OnceLock<Mutex<HashMap<(BitcellKind, u64), TunedCache>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(hit) = cache.lock().unwrap().get(&(kind, capacity_bytes)) {
-        return *hit;
-    }
-    let tuned = explore(kind, capacity_bytes);
-    cache.lock().unwrap().insert((kind, capacity_bytes), tuned);
-    tuned
+    Engine::shared()
+        .tuned(kind.tech_id(), capacity_bytes)
+        .expect("built-in technology tunes at a valid capacity")
 }
 
 #[cfg(test)]

@@ -54,6 +54,43 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Get the first present option among `keys` (primary name first,
+    /// then aliases — e.g. `--results-dir` with legacy `--results`).
+    pub fn get_any(&self, keys: &[&str]) -> Option<&str> {
+        keys.iter().find_map(|k| self.get(k))
+    }
+
+    /// Parse a comma-separated option into a list (`--networks a,b,c`).
+    /// Empty items are dropped; `None` when the option is absent.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
+
+    /// Parse a comma-separated option into typed values, with a clear
+    /// error naming the offending item.
+    pub fn get_parse_list<T: std::str::FromStr>(
+        &self,
+        key: &str,
+    ) -> Result<Option<Vec<T>>, String> {
+        match self.get_list(key) {
+            None => Ok(None),
+            Some(items) => items
+                .iter()
+                .map(|s| {
+                    s.parse::<T>()
+                        .map_err(|_| format!("invalid value in --{key}: {s:?}"))
+                })
+                .collect::<Result<Vec<T>, String>>()
+                .map(Some),
+        }
+    }
+
     /// True if a bare flag (or `--key true`) is present.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
@@ -116,5 +153,34 @@ mod tests {
         assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
         let bad = parse(&["x", "--n", "twelve"]);
         assert!(bad.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn get_any_prefers_first_key() {
+        let a = parse(&["x", "--results-dir", "out", "--results", "legacy"]);
+        assert_eq!(a.get_any(&["results-dir", "results"]), Some("out"));
+        let b = parse(&["x", "--results", "legacy"]);
+        assert_eq!(b.get_any(&["results-dir", "results"]), Some("legacy"));
+        assert_eq!(b.get_any(&["nope"]), None);
+    }
+
+    #[test]
+    fn get_list_splits_and_trims() {
+        let a = parse(&["x", "--networks", "resnet18, vgg16,,alexnet"]);
+        assert_eq!(
+            a.get_list("networks").unwrap(),
+            vec!["resnet18".to_string(), "vgg16".to_string(), "alexnet".to_string()]
+        );
+        assert!(a.get_list("missing").is_none());
+    }
+
+    #[test]
+    fn get_parse_list_types_and_errors() {
+        let a = parse(&["x", "--capacities", "1,2,4"]);
+        assert_eq!(a.get_parse_list::<u64>("capacities").unwrap().unwrap(), vec![1, 2, 4]);
+        assert!(a.get_parse_list::<u64>("missing").unwrap().is_none());
+        let bad = parse(&["x", "--capacities", "1,two"]);
+        let err = bad.get_parse_list::<u64>("capacities").unwrap_err();
+        assert!(err.contains("two"), "{err}");
     }
 }

@@ -52,14 +52,18 @@ pub fn profile(workload: Workload, batch: u64, l2_capacity: u64) -> ProfiledWork
     }
 }
 
-/// Profile one workload at the paper's default batch for its phase.
-pub fn profile_default(workload: Workload, l2_capacity: u64) -> ProfiledWorkload {
-    let batch = match workload {
+/// The paper's default batch size for a workload's phase (§4.1).
+pub fn default_batch(workload: Workload) -> u64 {
+    match workload {
         Workload::Dnn { phase: Phase::Inference, .. } => BATCH_INFERENCE,
         Workload::Dnn { phase: Phase::Training, .. } => BATCH_TRAINING,
         Workload::Hpcg(_) => 1,
-    };
-    profile(workload, batch, l2_capacity)
+    }
+}
+
+/// Profile one workload at the paper's default batch for its phase.
+pub fn profile_default(workload: Workload, l2_capacity: u64) -> ProfiledWorkload {
+    profile(workload, default_batch(workload), l2_capacity)
 }
 
 /// The Fig 3 / Fig 4 suite in presentation order: each DNN as inference

@@ -2,7 +2,8 @@
 //! and the headline strings carry paper-vs-measured comparisons.
 
 use deepnvm::coordinator::{run_one, RunnerConfig};
-use deepnvm::experiments::registry;
+use deepnvm::engine::Engine;
+use deepnvm::experiments::{registry, Params};
 
 #[test]
 fn every_registered_experiment_runs() {
@@ -11,7 +12,8 @@ fn every_registered_experiment_runs() {
         print_tables: false,
     };
     for exp in registry() {
-        let report = run_one(exp.id, &cfg).unwrap_or_else(|| panic!("{} missing", exp.id));
+        let report = run_one(Engine::shared(), exp.id, &Params::default(), &cfg)
+            .unwrap_or_else(|| panic!("{} missing", exp.id));
         assert!(
             !report.rendered_tables.is_empty(),
             "{}: no tables rendered",
@@ -36,7 +38,7 @@ fn figure_experiments_carry_paper_comparisons() {
         print_tables: false,
     };
     for id in ["fig4", "fig5", "fig7", "fig9"] {
-        let report = run_one(id, &cfg).unwrap();
+        let report = run_one(Engine::shared(), id, &Params::default(), &cfg).unwrap();
         assert!(
             report.headlines.iter().any(|h| h.contains("paper")),
             "{id}: headline must reference the paper's value"

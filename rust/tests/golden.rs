@@ -1,0 +1,223 @@
+//! Golden regressions for the query-engine redesign:
+//!
+//! 1. Table 1 / Table 2 numbers are **bit-identical** through the new
+//!    `Engine` path vs the direct (unmemoized) device/nvsim pipeline —
+//!    the API redesign must not perturb a single ULP.
+//! 2. The rendered Table 1/2 CSV artifacts are byte-stable across
+//!    independent engines (what `repro all` persists).
+//! 3. A custom technology defined purely by a descriptor (no Rust
+//!    changes) round-trips (parse → serialize → parse), characterizes,
+//!    EDAP-tunes, and answers workload queries end to end.
+
+use deepnvm::device::bitcell::{BitcellKind, BitcellParams};
+use deepnvm::device::characterize::characterize_kind;
+use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
+use deepnvm::experiments::{tables, Output, Params};
+use deepnvm::nvsim::optimizer::explore;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::memstats::Phase;
+use deepnvm::workloads::profiler::Workload;
+
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+}
+
+fn assert_cell_bits(a: &BitcellParams, b: &BitcellParams, tech: &str) {
+    assert_bits(a.sense_latency, b.sense_latency, &format!("{tech} sense_latency"));
+    assert_bits(a.sense_energy, b.sense_energy, &format!("{tech} sense_energy"));
+    assert_bits(a.write_latency_set, b.write_latency_set, &format!("{tech} wl_set"));
+    assert_bits(a.write_latency_reset, b.write_latency_reset, &format!("{tech} wl_reset"));
+    assert_bits(a.write_energy_set, b.write_energy_set, &format!("{tech} we_set"));
+    assert_bits(a.write_energy_reset, b.write_energy_reset, &format!("{tech} we_reset"));
+    assert_bits(a.area, b.area, &format!("{tech} area"));
+    assert_bits(a.cell_leakage, b.cell_leakage, &format!("{tech} cell_leakage"));
+    assert_eq!(a.write_fins, b.write_fins, "{tech} write_fins");
+    assert_eq!(a.read_fins, b.read_fins, "{tech} read_fins");
+}
+
+/// Golden 1a: the engine's characterization stage reproduces the direct
+/// device-layer path bit for bit, for every built-in technology.
+#[test]
+fn table1_bit_identical_through_engine() {
+    let engine = Engine::new();
+    for kind in BitcellKind::ALL {
+        let direct = characterize_kind(kind).chosen;
+        let via_engine = engine.bitcell(kind.tech_id()).unwrap();
+        assert_cell_bits(&direct, &via_engine, kind.name());
+    }
+}
+
+/// Golden 1b: the engine's tuning stage reproduces the direct Algorithm 1
+/// walk bit for bit at the Table 2 design points.
+#[test]
+fn table2_bit_identical_through_engine() {
+    let engine = Engine::new();
+    let points = [
+        (BitcellKind::Sram, 3),
+        (BitcellKind::SttMram, 3),
+        (BitcellKind::SttMram, 7),
+        (BitcellKind::SotMram, 3),
+        (BitcellKind::SotMram, 10),
+    ];
+    for (kind, mb) in points {
+        let direct = explore(kind, mb * MB);
+        let via_engine = engine.tuned(kind.tech_id(), mb * MB).unwrap();
+        let what = format!("{} {mb}MB", kind.name());
+        assert_eq!(direct.org, via_engine.org, "{what} org");
+        assert_eq!(direct.access, via_engine.access, "{what} access");
+        assert_eq!(direct.sizing, via_engine.sizing, "{what} sizing");
+        assert_bits(direct.ppa.read_latency, via_engine.ppa.read_latency, &what);
+        assert_bits(direct.ppa.write_latency, via_engine.ppa.write_latency, &what);
+        assert_bits(direct.ppa.read_energy, via_engine.ppa.read_energy, &what);
+        assert_bits(direct.ppa.write_energy, via_engine.ppa.write_energy, &what);
+        assert_bits(direct.ppa.leakage_power, via_engine.ppa.leakage_power, &what);
+        assert_bits(direct.ppa.area, via_engine.ppa.area, &what);
+    }
+}
+
+/// Golden 2: the persisted Table 1/2 CSV artifacts are byte-stable across
+/// independent engines — what "`repro all` produces bit-identical CSVs"
+/// rests on.
+#[test]
+fn table_csvs_are_byte_stable_across_engines() {
+    let params = Params::default();
+    let generators: [fn(&Engine, &Params) -> Output; 2] = [tables::table1, tables::table2];
+    for f in generators {
+        let a = f(&Engine::new(), &params);
+        let b = f(&Engine::new(), &params);
+        assert_eq!(a.csvs.len(), b.csvs.len());
+        for ((name_a, csv_a), (name_b, csv_b)) in a.csvs.iter().zip(b.csvs.iter()) {
+            assert_eq!(name_a, name_b);
+            assert_eq!(csv_a.to_string(), csv_b.to_string(), "{name_a} drifted");
+        }
+    }
+}
+
+/// A ReRAM-like technology defined purely as descriptor text: filament
+/// (junction-path) writes with no heavy-metal rail, a shared read port,
+/// low-resistance states, and no reliability screens. The critical
+/// currents sit below `VDD / (Ron + R_ap)` so the write loop can actually
+/// exceed them — mirroring the worked example in EXPERIMENTS.md.
+const RERAM_LIKE: &str = r#"
+# A filament-switching stack modeled with the MRAM-class flow.
+[tech]
+id = "reram_demo"
+name = "ReRAM-like"
+class = "mram"
+read_port = "shared"
+
+[mtj]
+r_p = 3000
+r_ap = 9000
+ic_set = 25e-6
+ic_reset = 20e-6
+tau0 = 0.8e-9
+r_rail = 0
+
+[device]
+c_bitline = 30e-15
+v_read = 0.18
+sense_overhead = 1.8
+write_overhead_set = 1.7
+write_overhead_reset = 2.1
+set_derate = 0.9
+height_cpp = 1.05
+fin_min = 1
+fin_max = 6
+
+[nv]
+cell_area_mult = 1.9
+cell_aspect = 1.3
+wd_area_per_amp = 1.5e-7
+wd_leak_density = 1.6e6
+i_write = 120e-6
+csa_overhead = 0.4e-12
+"#;
+
+/// Golden 3a: descriptor round-trip is exact (parse → serialize → parse).
+#[test]
+fn custom_descriptor_round_trips() {
+    let spec = descriptor::parse(RERAM_LIKE).unwrap();
+    assert_eq!(spec.id, "reram_demo");
+    let text = descriptor::serialize(&spec);
+    let again = descriptor::parse(&text).unwrap();
+    assert_eq!(spec, again, "parse(serialize(spec)) must equal spec exactly");
+    // Tuning from both spec instances is bit-identical too.
+    let e1 = Engine::new();
+    let e2 = Engine::new();
+    e1.register(spec).unwrap();
+    e2.register(again).unwrap();
+    let a = e1.tuned("reram_demo", 2 * MB).unwrap();
+    let b = e2.tuned("reram_demo", 2 * MB).unwrap();
+    assert_bits(a.ppa.edap(), b.ppa.edap(), "round-tripped spec tunes identically");
+}
+
+/// Golden 3b: the descriptor-defined technology runs end to end — fin
+/// sweep, EDAP tuning, and a workload query — with no Rust changes.
+#[test]
+fn custom_tech_runs_end_to_end() {
+    let engine = Engine::new();
+    let id = engine.register(descriptor::parse(RERAM_LIKE).unwrap()).unwrap();
+    assert_eq!(id, "reram_demo");
+
+    // Characterization picks a feasible fin count from the sweep.
+    let cell = engine.bitcell(&id).unwrap();
+    assert!(cell.write_fins >= 1 && cell.write_fins <= 6);
+    assert!(cell.write_latency_set > 0.0 && cell.write_latency_set.is_finite());
+    assert_eq!(cell.tech, "ReRAM-like");
+
+    // EDAP tuning and a full workload query produce finite physics.
+    let q = Query::tune(id.clone(), 4 * MB)
+        .with_workload(Workload::Dnn { index: 0, phase: Phase::Inference });
+    let ev = engine.evaluate(&q).unwrap();
+    assert_eq!(ev.capacity_bytes, 4 * MB);
+    let ppa = &ev.design.ppa;
+    for v in [ppa.read_latency, ppa.write_latency, ppa.read_energy, ppa.write_energy, ppa.area] {
+        assert!(v.is_finite() && v > 0.0, "{ppa:?}");
+    }
+    let w = ev.workload.unwrap();
+    assert!(w.rollup.total_energy() > 0.0 && w.rollup.total_time() > 0.0);
+
+    // Non-volatile like the MRAM flavors: no cell retention leakage.
+    assert_eq!(cell.cell_leakage, 0.0);
+    // And the whole run cost exactly one characterization + one tuning.
+    let s = engine.stats();
+    assert_eq!(s.characterize.misses, 1);
+    assert_eq!(s.tune.misses, 1);
+}
+
+/// The engine's batch entrypoint answers heterogeneous query sets —
+/// built-in and descriptor-defined technologies in one call.
+#[test]
+fn evaluate_many_mixes_builtin_and_custom_techs() {
+    let engine = Engine::new();
+    engine.register(descriptor::parse(RERAM_LIKE).unwrap()).unwrap();
+    let w = Workload::Dnn { index: 0, phase: Phase::Inference };
+    let queries: Vec<Query> = ["sram", "stt", "sot", "reram_demo"]
+        .iter()
+        .map(|t| Query::tune(*t, 2 * MB).with_workload(w))
+        .collect();
+    let evals = engine.evaluate_many(&queries);
+    assert_eq!(evals.len(), 4);
+    for (q, ev) in queries.iter().zip(&evals) {
+        let ev = ev.as_ref().unwrap();
+        assert_eq!(ev.tech, q.tech);
+        assert!(ev.workload.as_ref().unwrap().rollup.total_energy() > 0.0);
+    }
+}
+
+/// A registered spec is re-serializable from the registry — the full
+/// parse → tune → re-serialize loop the issue's satellite asks for.
+#[test]
+fn registry_spec_reserializes_after_tuning() {
+    let engine = Engine::new();
+    let original = descriptor::parse(RERAM_LIKE).unwrap();
+    engine.register(original.clone()).unwrap();
+    let _ = engine.tuned("reram_demo", 2 * MB).unwrap();
+    let from_registry = engine.tech("reram_demo").unwrap();
+    let text = descriptor::serialize(&from_registry);
+    assert_eq!(descriptor::parse(&text).unwrap(), original);
+    // The built-ins survive the same loop.
+    let sot = engine.tech("sot").unwrap();
+    assert_eq!(descriptor::parse(&descriptor::serialize(&sot)).unwrap(), TechSpec::sot());
+}

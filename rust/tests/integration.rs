@@ -6,6 +6,7 @@ use deepnvm::analysis::evaluate;
 use deepnvm::analysis::isocapacity::iso_capacity;
 use deepnvm::device::bitcell::BitcellKind;
 use deepnvm::device::characterize::characterize;
+use deepnvm::engine::Engine;
 use deepnvm::gpusim::{capacity_sweep, dnn_trace};
 use deepnvm::nvsim::optimizer::{bitcell_for, tuned_cache};
 use deepnvm::util::units::MB;
@@ -69,8 +70,8 @@ fn fused_traffic_model_writes_less_than_caffe() {
 
 #[test]
 fn full_isocapacity_run_is_reproducible() {
-    let a = iso_capacity();
-    let b = iso_capacity();
+    let a = iso_capacity(Engine::shared());
+    let b = iso_capacity(Engine::shared());
     for (ra, rb) in a.iter().zip(&b) {
         assert_eq!(ra.label, rb.label);
         assert!((ra.edp[0] - rb.edp[0]).abs() < 1e-12);
@@ -82,7 +83,7 @@ fn full_isocapacity_run_is_reproducible() {
 fn headline_ordering_holds_everywhere() {
     // SOT beats STT on energy in every workload at both capacity points —
     // the paper's most robust qualitative claim.
-    for row in iso_capacity() {
+    for row in iso_capacity(Engine::shared()) {
         assert!(
             row.energy[1] <= row.energy[0] * 1.001,
             "{}: SOT {} vs STT {}",

@@ -1,0 +1,70 @@
+//! Engine-level throughput benchmarks (custom harness; §Perf record).
+//!
+//! Where `hotpath_benches` times individual pipeline stages, this target
+//! times the *query engine* end to end:
+//!   * `evaluate_many` over a mixed 12-query batch, cold (fresh engine —
+//!     every characterize/tune/profile computes) vs memo-warm (every
+//!     stage a cache hit) — the number that tells us what the per-stage
+//!     memo caches are worth;
+//!   * an `explore` grid search over a three-axis space on a warm engine
+//!     — the `repro explore` hot path: candidate materialization, batch
+//!     fan-out, and exact Pareto ranking.
+//!
+//! Results print to stdout and land in `BENCH_engine.json` (override the
+//! path with `DEEPNVM_BENCH_ENGINE_JSON`), starting the engine-level perf
+//! trajectory alongside `BENCH_hotpath.json`.
+
+use std::hint::black_box;
+
+use deepnvm::engine::{Engine, Query};
+use deepnvm::explore::{self, Objective, SearchConfig, Space, Strategy};
+use deepnvm::util::bench::BenchHarness;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::memstats::Phase;
+use deepnvm::workloads::profiler::Workload;
+
+/// A mixed batch: 3 technologies × 4 capacities, AlexNet inference.
+fn query_set() -> Vec<Query> {
+    let w = Workload::Dnn { index: 0, phase: Phase::Inference };
+    let mut out = Vec::new();
+    for tech in ["sram", "stt", "sot"] {
+        for mb in [1u64, 2, 3, 4] {
+            out.push(Query::tune(tech, mb * MB).with_workload(w));
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("== engine benchmarks ==");
+    let mut h = BenchHarness::new();
+    let queries = query_set();
+
+    // Cold: a fresh engine per iteration — every pipeline stage computes.
+    let cold = h.bench("engine: evaluate_many 12 queries, cold caches", 3, || {
+        let e = Engine::new();
+        black_box(e.evaluate_many(&queries));
+    });
+
+    // Warm: shared engine — every stage answers from the memo caches.
+    let warm_engine = Engine::new();
+    let _ = warm_engine.evaluate_many(&queries);
+    let warm = h.bench("engine: evaluate_many 12 queries, memo-warm", 20, || {
+        black_box(warm_engine.evaluate_many(&queries));
+    });
+    println!(
+        "  -> memo caches are worth {:.1}x on this batch ({})",
+        cold / warm,
+        warm_engine.stats().summary()
+    );
+
+    // Explore grid over a 3-axis space on the warm engine.
+    let space = Space::new().tech(["sram", "stt", "sot"]).capacity_mb([1, 2, 4]).batch([4, 16]);
+    let objectives = [Objective::Edp, Objective::Area];
+    let cfg = SearchConfig { strategy: Strategy::Grid, budget: 64, seed: 7 };
+    h.bench("explore: grid 18-candidate space, warm engine", 5, || {
+        black_box(explore::run(&warm_engine, &space, &objectives, &cfg).unwrap());
+    });
+
+    h.write_json("DEEPNVM_BENCH_ENGINE_JSON", "BENCH_engine.json");
+}

@@ -16,7 +16,6 @@
 //! `DEEPNVM_BENCH_JSON`), so the perf trajectory is recorded per run.
 
 use std::hint::black_box;
-use std::time::Instant;
 
 use deepnvm::analysis::evaluate;
 use deepnvm::device::bitcell::BitcellKind;
@@ -26,6 +25,7 @@ use deepnvm::gpusim::{
     capacity_sweep, dnn_trace, fig7_capacities, simulate, Access, GpuConfig,
 };
 use deepnvm::nvsim::optimizer::{explore, tuned_cache};
+use deepnvm::util::bench::BenchHarness;
 use deepnvm::util::pool::par_map;
 use deepnvm::util::rng::Rng;
 use deepnvm::util::units::MB;
@@ -33,55 +33,9 @@ use deepnvm::workloads::memstats::{dnn_stats, Phase};
 use deepnvm::workloads::nets;
 use deepnvm::workloads::profiler::{profile_suite, PROFILE_L2};
 
-struct Harness {
-    records: Vec<(String, f64)>,
-}
-
-impl Harness {
-    fn bench<F: FnMut()>(&mut self, name: &str, iters: u32, mut f: F) -> f64 {
-        // Warmup.
-        f();
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            f();
-        }
-        let per = t0.elapsed().as_secs_f64() / iters as f64;
-        let unit = if per >= 1.0 {
-            format!("{per:.2} s")
-        } else if per >= 1e-3 {
-            format!("{:.2} ms", per * 1e3)
-        } else if per >= 1e-6 {
-            format!("{:.2} µs", per * 1e6)
-        } else {
-            format!("{:.0} ns", per * 1e9)
-        };
-        println!("{name:<52} {unit:>12}/iter  ({iters} iters)");
-        self.records.push((name.to_string(), per));
-        per
-    }
-
-    /// Write `BENCH_hotpath.json`: flat name → seconds/iter map.
-    fn write_json(&self) {
-        let path =
-            std::env::var("DEEPNVM_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
-        let mut s = String::from("{\n");
-        for (i, (name, secs)) in self.records.iter().enumerate() {
-            let comma = if i + 1 < self.records.len() { "," } else { "" };
-            s.push_str(&format!("  \"{name}\": {secs:.9}{comma}\n"));
-        }
-        s.push_str("}\n");
-        match std::fs::write(&path, s) {
-            Ok(()) => println!("\nrecorded {} entries to {path}", self.records.len()),
-            Err(e) => eprintln!("warning: could not write {path}: {e}"),
-        }
-    }
-}
-
 fn main() {
     println!("== hot-path microbenchmarks ==");
-    let mut h = Harness {
-        records: Vec::new(),
-    };
+    let mut h = BenchHarness::new();
 
     // Synthetic random access stream for the raw cache loop.
     let mut rng = Rng::new(1);
@@ -160,5 +114,5 @@ fn main() {
         }
     });
 
-    h.write_json();
+    h.write_json("DEEPNVM_BENCH_JSON", "BENCH_hotpath.json");
 }

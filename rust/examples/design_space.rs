@@ -1,90 +1,55 @@
 //! Design-space exploration beyond the paper: "DeepNVM++ ... can be used
 //! for the characterization, modeling, and analysis of ANY NVM
-//! technology". This example defines a hypothetical next-generation SOT
-//! device (lower critical currents, faster τ0 — the trajectory the
-//! paper's §5 projects as fabrication matures) purely as a `TechSpec`
-//! descriptor, registers it with the query engine, and answers one batch
-//! of typed queries: all four technologies, EDAP-tuned at 8MB, rolled up
-//! on VGG-16 training — no bespoke pipeline code, and the same descriptor
-//! could equally come from a `.tech` file via `--tech-file`.
+//! technology". Instead of evaluating one hand-picked next-generation
+//! device, this example *searches* the fabrication-maturity trajectory
+//! the paper's §5 projects for SOT-MRAM: a three-axis space over critical
+//! switching current (spin-Hall efficiency improving), characteristic
+//! switching time τ0, and cache capacity. Every (ic_set, τ0) point
+//! materializes as a derived technology descriptor registered with the
+//! query engine on demand; the grid fans through `Engine::evaluate_many`;
+//! and the exact Pareto frontier over (EDP, area) with its knee point
+//! falls out — the same machinery behind `repro explore`.
 //!
 //! Run: `cargo run --release --example design_space`
 
-use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
-use deepnvm::util::table::{fnum, Table};
-use deepnvm::util::units::{to_mm2, to_mw, to_ns, MB};
+use deepnvm::engine::{Engine, TechSpec};
+use deepnvm::explore::{self, Objective, SearchConfig, Space, Strategy};
 use deepnvm::workloads::memstats::Phase;
 use deepnvm::workloads::profiler::Workload;
 
-/// A projected next-gen SOT stack: ~35% lower critical currents (better
-/// spin-Hall efficiency) and a faster characteristic time. Everything
-/// else inherits today's SOT calibration.
-fn nextgen_sot() -> TechSpec {
-    let mut spec = TechSpec::sot();
-    spec.id = "sot_nextgen".into();
-    spec.name = "SOT (next-gen)".into();
-    let mtj = spec.mtj.as_mut().expect("sot is mram-class");
-    mtj.ic_set = 78.0e-6;
-    mtj.ic_reset = 72.0e-6;
-    mtj.tau0 = 60.0e-12;
-    mtj.r_rail = 500.0;
-    spec
-}
-
 fn main() {
     let engine = Engine::new();
-    let custom = nextgen_sot();
-    println!("--- descriptor (save as nextgen.tech and pass via --tech-file) ---");
-    println!("{}", descriptor::serialize(&custom));
-    engine.register(custom).expect("fresh id");
 
-    // The §3.1 characterization runs from the descriptor alone: the fin
-    // sweep re-optimizes for the lower critical currents.
-    let cell = engine.bitcell("sot_nextgen").expect("characterizes");
+    // Anchor the axes on today's calibrated SOT stack so every swept
+    // point is a plausible maturation of it (lower critical currents are
+    // *easier* writes — the sweep stays inside the feasible fin range).
+    let base = TechSpec::sot();
+    let mtj = base.mtj.expect("sot is mram-class");
+    let space = Space::new()
+        .tech(["sot"])
+        .capacity_mb([2, 4, 8])
+        .spec_axis("mtj.ic_set", [mtj.ic_set, 0.8 * mtj.ic_set, 0.65 * mtj.ic_set])
+        .spec_axis("mtj.tau0", [mtj.tau0, 0.6 * mtj.tau0])
+        .workload([Workload::Dnn { index: 2, phase: Phase::Training }]); // VGG-16-T
+
+    println!("--- equivalent [space] section (save in a .tech file for `repro explore`) ---");
+    println!("[space]");
+    println!("tech = sot");
+    println!("capacity_mb = 2, 4, 8");
+    println!("mtj.ic_set = {}, {}, {}", mtj.ic_set, 0.8 * mtj.ic_set, 0.65 * mtj.ic_set);
+    println!("mtj.tau0 = {}, {}", mtj.tau0, 0.6 * mtj.tau0);
+    println!("workload = vgg16-t\n");
+
+    let cfg = SearchConfig { strategy: Strategy::Grid, budget: 64, seed: 7 };
+    let result = explore::run(&engine, &space, &[Objective::Edp, Objective::Area], &cfg)
+        .expect("space is valid");
+
+    print!("{}", result.render());
     println!(
-        "next-gen SOT bitcell: {} write fins chosen, write {:.0}/{:.0} ps, {:.3}/{:.3} pJ, rel. area {:.2}\n",
-        cell.write_fins,
-        cell.write_latency_set * 1e12,
-        cell.write_latency_reset * 1e12,
-        cell.write_energy_set * 1e12,
-        cell.write_energy_reset * 1e12,
-        cell.area_rel_sram()
+        "{} of {} grid points evaluated; {} derived technologies registered on demand.",
+        result.outcome.evaluated.len(),
+        result.outcome.space_size,
+        engine.techs().len() - 3,
     );
-
-    // One typed query per technology; the engine tunes + profiles + rolls
-    // up each through the shared thread pool.
-    let cap = 8 * MB;
-    let vgg_training = Workload::Dnn { index: 2, phase: Phase::Training };
-    let queries: Vec<Query> = ["sram", "stt", "sot", "sot_nextgen"]
-        .iter()
-        .map(|tech| Query::tune(*tech, cap).with_workload(vgg_training))
-        .collect();
-    let evals: Vec<_> = engine
-        .evaluate_many(&queries)
-        .into_iter()
-        .map(|r| r.expect("registered tech at a valid capacity"))
-        .collect();
-
-    let base = evals[0].workload.as_ref().unwrap().rollup.edp_with_dram();
-    let mut t = Table::new(
-        "8MB L2 design space (VGG-16 training EDP, normalized to SRAM)",
-        &["tech", "RL (ns)", "WL (ns)", "leak (mW)", "area (mm2)", "EDP (norm)"],
-    );
-    for ev in &evals {
-        let name = engine.tech(&ev.tech).expect("registered").name.clone();
-        let ppa = &ev.design.ppa;
-        let edp = ev.workload.as_ref().unwrap().rollup.edp_with_dram();
-        t.row(&[
-            name,
-            fnum(to_ns(ppa.read_latency), 2),
-            fnum(to_ns(ppa.write_latency), 2),
-            fnum(to_mw(ppa.leakage_power), 0),
-            fnum(to_mm2(ppa.area), 2),
-            fnum(edp / base, 3),
-        ]);
-    }
-    println!("{}", t.render());
-    let s = engine.stats();
-    println!("engine cache this run: {}", s.summary());
-    println!("The framework extends to arbitrary NVM devices: edit the descriptor, rerun.");
+    println!("The framework extends to arbitrary NVM devices: edit the axes, rerun.");
 }

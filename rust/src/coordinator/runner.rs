@@ -9,6 +9,8 @@ use std::time::Instant;
 
 use crate::engine::{CacheCounts, Engine};
 use crate::experiments::{by_id, registry, Output, Params};
+use crate::explore::ExploreResult;
+use crate::util::csv::Csv;
 use crate::util::pool::par_map;
 
 /// Runner configuration.
@@ -44,7 +46,10 @@ pub struct RunReport {
     pub rendered_tables: Vec<String>,
 }
 
-fn persist(output: &Output, cfg: &RunnerConfig) -> Vec<PathBuf> {
+/// Write named CSVs into the results directory (shared by experiment runs
+/// and explore runs). Warns-and-continues on I/O errors; returns the
+/// paths actually written.
+pub fn persist_csvs(csvs: &[(String, Csv)], cfg: &RunnerConfig) -> Vec<PathBuf> {
     // Create the results directory up front: on a fresh checkout the first
     // `repro all` must not emit a warning per CSV before `write_manifest`
     // (which runs last) creates it.
@@ -55,13 +60,46 @@ fn persist(output: &Output, cfg: &RunnerConfig) -> Vec<PathBuf> {
         );
     }
     let mut files = Vec::new();
-    for (name, csv) in &output.csvs {
+    for (name, csv) in csvs {
         let path = cfg.results_dir.join(format!("{name}.csv"));
         if let Err(e) = csv.write(&path) {
             eprintln!("warning: could not write {}: {e}", path.display());
         } else {
             files.push(path);
         }
+    }
+    files
+}
+
+fn persist(output: &Output, cfg: &RunnerConfig) -> Vec<PathBuf> {
+    persist_csvs(&output.csvs, cfg)
+}
+
+/// Persist an explore run like an experiment run: `explore_frontier.csv` +
+/// `explore_candidates.csv` plus `explore_manifest.txt` (strategy, seed,
+/// budget, coverage, engine-cache accounting — everything needed to
+/// reproduce the run from its results directory alone). Returns the
+/// files written.
+pub fn persist_explore(
+    result: &ExploreResult,
+    seconds: f64,
+    cfg: &RunnerConfig,
+) -> Vec<PathBuf> {
+    let csvs = vec![
+        ("explore_frontier".to_string(), result.frontier_csv()),
+        ("explore_candidates".to_string(), result.candidates_csv()),
+    ];
+    let mut files = persist_csvs(&csvs, cfg);
+    let path = cfg.results_dir.join("explore_manifest.txt");
+    match fs::File::create(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "[explore] design-space exploration ({seconds:.2}s)");
+            for line in result.manifest_lines() {
+                let _ = writeln!(f, "    {line}");
+            }
+            files.push(path);
+        }
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
     }
     files
 }
@@ -143,6 +181,9 @@ fn write_manifest(engine: &Engine, reports: &[RunReport], cfg: &RunnerConfig) {
         let _ = fs::create_dir_all(parent);
     }
     if let Ok(mut f) = fs::File::create(&path) {
+        // The global base seed: with it, any stochastic component of the
+        // run (sampling, interleaving) reproduces via `repro --seed N`.
+        let _ = writeln!(f, "seed: {}", crate::util::rng::global_seed());
         for r in reports {
             let _ = writeln!(f, "[{}] {} ({:.2}s)", r.id, r.title, r.seconds);
             for h in &r.headlines {
@@ -215,6 +256,33 @@ mod tests {
         let totals = engine.totals();
         assert_eq!(totals.tune.misses, 5);
         assert_eq!(totals.characterize.misses, 3, "one characterization per technology");
+        let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    }
+
+    #[test]
+    fn explore_runs_persist_like_experiments() {
+        use crate::explore::{self, Objective, SearchConfig, Space};
+        let cfg = test_cfg("explore");
+        let space = Space::new().tech(["sram", "stt"]).capacity_mb([1, 2]);
+        let result = explore::run(
+            Engine::shared(),
+            &space,
+            &[Objective::Edp, Objective::Area],
+            &SearchConfig::default(),
+        )
+        .unwrap();
+        let files = persist_explore(&result, 0.0, &cfg);
+        assert_eq!(files.len(), 3, "frontier + candidates + manifest: {files:?}");
+        for f in &files {
+            assert!(f.exists(), "{}", f.display());
+        }
+        let manifest =
+            std::fs::read_to_string(cfg.results_dir.join("explore_manifest.txt")).unwrap();
+        assert!(manifest.contains("strategy: grid"), "{manifest}");
+        assert!(manifest.contains("seed"), "{manifest}");
+        let frontier =
+            std::fs::read_to_string(cfg.results_dir.join("explore_frontier.csv")).unwrap();
+        assert!(frontier.starts_with("tech,capacity_mb,workload,edp,area,knee"), "{frontier}");
         let _ = std::fs::remove_dir_all(&cfg.results_dir);
     }
 

@@ -45,7 +45,12 @@
 //!
 //! [`serialize`] emits every field explicitly with Rust's shortest
 //! round-trip float formatting, so `parse(serialize(spec)) == spec`
-//! exactly (see the golden tests).
+//! exactly (see the golden tests). Duplicate keys within a section are a
+//! parse error (not last-write-wins), so authoring slips fail loudly.
+//!
+//! A descriptor file may additionally carry a `[space]` section declaring
+//! a design-space over the technology (see [`crate::explore::space`] for
+//! the grammar); [`parse`] ignores it and [`space_section`] extracts it.
 
 use std::collections::BTreeMap;
 
@@ -140,9 +145,57 @@ fn split_fields(text: &str) -> crate::Result<Fields> {
             .split_once('=')
             .ok_or_else(|| msg(format!("line {}: expected `key = value`", i + 1)))?;
         let value = v.trim().trim_matches('"').to_string();
-        values.insert((section.clone(), k.trim().to_string()), value);
+        let key = k.trim().to_string();
+        // Duplicate keys are an authoring error: last-write-wins would
+        // silently discard the earlier value (deadly in a `[space]`
+        // section, where the shadowed axis just vanishes).
+        if values.contains_key(&(section.clone(), key.clone())) {
+            return Err(msg(format!(
+                "line {}: duplicate key '{key}' in [{section}]",
+                i + 1
+            )));
+        }
+        values.insert((section.clone(), key), value);
     }
     Ok(Fields { values })
+}
+
+/// Whether the text declares any key under a `[name]` section (a bare
+/// header with no keys counts as absent).
+pub fn has_section(text: &str, name: &str) -> crate::Result<bool> {
+    let f = split_fields(text)?;
+    Ok(f.values.keys().any(|(s, _)| s == name))
+}
+
+/// Validate that `text` declares only `[space]` entries — the pure-space
+/// file case, where a misspelled `[tech]`/`[device]`/… section would
+/// otherwise be silently ignored and the built-in defaults explored
+/// instead of the user's device.
+pub fn ensure_only_space(text: &str) -> crate::Result<()> {
+    let f = split_fields(text)?;
+    for (section, _) in f.values.keys() {
+        if section != "space" {
+            return Err(msg(format!(
+                "section [{section}] has no effect without a [tech] descriptor in the same file \
+                 (is it misspelled?)"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The `[space]` section's key → value pairs (sorted by key), or `None`
+/// when the text declares none. The grammar of the values is owned by
+/// [`crate::explore::space`], which turns them into search axes.
+pub fn space_section(text: &str) -> crate::Result<Option<Vec<(String, String)>>> {
+    let f = split_fields(text)?;
+    let out: Vec<(String, String)> = f
+        .values
+        .iter()
+        .filter(|((s, _), _)| s == "space")
+        .map(|((_, k), v)| (k.clone(), v.clone()))
+        .collect();
+    Ok(if out.is_empty() { None } else { Some(out) })
 }
 
 /// Every key the format understands, per section. Unknown keys are an
@@ -189,6 +242,11 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
 
 fn check_known(f: &Fields) -> crate::Result<()> {
     for (section, key) in f.values.keys() {
+        // `[space]` axes ride along in descriptor files but belong to the
+        // explore subsystem, which validates them against its own grammar.
+        if section == "space" {
+            continue;
+        }
         let known = KNOWN_KEYS
             .iter()
             .find(|(s, _)| *s == section.as_str())
@@ -410,6 +468,45 @@ mod tests {
         assert_eq!(spec.mtj.unwrap().r_rail, 0.0, "rail defaults to junction write");
         assert_eq!(spec.device.fin_max, 6, "fin sweep defaults");
         assert!(!spec.nv.precharge);
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_not_overwritten() {
+        // A duplicated key silently shadowing the first value is exactly
+        // how a `[space]` axis (or a reliability screen) disappears.
+        let text = serialize(&TechSpec::stt());
+        let dup = format!("{text}\n[nv]\ni_write = 1e-3\n");
+        let e = parse(&dup).unwrap_err().to_string();
+        assert!(e.contains("duplicate key 'i_write'"), "{e}");
+        assert!(e.contains("[nv]"), "{e}");
+        // Round trip is still exact for clean text (no false positives).
+        for spec in TechSpec::builtins() {
+            assert_eq!(parse(&serialize(&spec)).unwrap(), spec);
+        }
+        let e = parse("[tech]\nid = \"x\"\nid = \"y\"\n").unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+    }
+
+    #[test]
+    fn space_sections_ride_along() {
+        let mut text = serialize(&TechSpec::stt());
+        text.push_str("\n[space]\ncapacity_mb = 1, 2, 4\nmtj.tau0 = 1e-9, 2e-9\n");
+        // The tech spec parses unchanged with the [space] section present…
+        assert_eq!(parse(&text).unwrap(), TechSpec::stt());
+        assert!(has_section(&text, "tech").unwrap());
+        assert!(has_section(&text, "space").unwrap());
+        // …and the space entries come back sorted by key.
+        let entries = space_section(&text).unwrap().unwrap();
+        assert_eq!(
+            entries,
+            vec![
+                ("capacity_mb".to_string(), "1, 2, 4".to_string()),
+                ("mtj.tau0".to_string(), "1e-9, 2e-9".to_string()),
+            ]
+        );
+        // Files without one report None.
+        assert!(space_section(&serialize(&TechSpec::stt())).unwrap().is_none());
+        assert!(!has_section("[space]\n", "space").unwrap(), "bare header counts as absent");
     }
 
     #[test]

@@ -225,9 +225,9 @@ impl Engine {
 
     // --- registry ---
 
-    /// Register a technology. Errors on an empty or duplicate id, or on
-    /// an id/name that could not survive a descriptor round trip.
-    pub fn register(&self, spec: TechSpec) -> crate::Result<String> {
+    /// Validate a spec for registration: nonempty id, and an id/name that
+    /// survives a descriptor round trip.
+    fn validate_spec(spec: &TechSpec) -> crate::Result<()> {
         if spec.id.is_empty() {
             return Err(msg("technology descriptor has an empty id"));
         }
@@ -241,9 +241,40 @@ impl Engine {
                 spec.id
             )));
         }
+        Ok(())
+    }
+
+    /// Register a technology. Errors on an empty or duplicate id, or on
+    /// an id/name that could not survive a descriptor round trip.
+    pub fn register(&self, spec: TechSpec) -> crate::Result<String> {
+        Self::validate_spec(&spec)?;
         let mut reg = self.core.registry.lock().unwrap();
         if reg.iter().any(|s| s.id == spec.id) {
             return Err(msg(format!("technology '{}' is already registered", spec.id)));
+        }
+        let id = spec.id.clone();
+        reg.push(Arc::new(spec));
+        Ok(id)
+    }
+
+    /// Register a technology unless an *identical* spec already holds the
+    /// id (idempotent registration — how the explore subsystem
+    /// materializes derived candidate technologies without racing its own
+    /// re-materializations). A same-id spec with different parameters is
+    /// still an error: silently reusing it would evaluate the wrong
+    /// physics.
+    pub fn register_if_absent(&self, spec: TechSpec) -> crate::Result<String> {
+        Self::validate_spec(&spec)?;
+        let mut reg = self.core.registry.lock().unwrap();
+        if let Some(existing) = reg.iter().find(|s| s.id == spec.id) {
+            return if **existing == spec {
+                Ok(spec.id)
+            } else {
+                Err(msg(format!(
+                    "technology '{}' is already registered with different parameters",
+                    spec.id
+                )))
+            };
         }
         let id = spec.id.clone();
         reg.push(Arc::new(spec));
@@ -457,6 +488,24 @@ mod tests {
         custom.id = "stt2".into();
         assert_eq!(e.register(custom).unwrap(), "stt2");
         assert!(e.tech("stt2").is_some());
+    }
+
+    #[test]
+    fn register_if_absent_is_idempotent_but_guards_physics() {
+        let e = Engine::new();
+        // Identical spec: idempotent, no duplicate entry.
+        assert_eq!(e.register_if_absent(TechSpec::stt()).unwrap(), "stt");
+        assert_eq!(e.techs().len(), 3);
+        // Same id, different parameters: rejected.
+        let mut tweaked = TechSpec::stt();
+        tweaked.nv.i_write = 999.0e-6;
+        let err = e.register_if_absent(tweaked).unwrap_err().to_string();
+        assert!(err.contains("different parameters"), "{err}");
+        // Fresh id: registered.
+        let mut fresh = TechSpec::stt();
+        fresh.id = "stt_variant".into();
+        assert_eq!(e.register_if_absent(fresh).unwrap(), "stt_variant");
+        assert_eq!(e.techs().len(), 4);
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! `deepnvm::explore` — Pareto design-space exploration over technology
+//! descriptors.
+//!
+//! The paper's headline results (4.7× EDP, 3.3× capacity) are single
+//! points in the space spanned by MTJ parameters, cache capacity,
+//! workload, and batch size; DeepNVM++ frames itself as a cross-layer
+//! *optimization* framework. This subsystem searches that space instead
+//! of evaluating hand-picked points:
+//!
+//! * [`space`] — the parameter-space DSL: axes over
+//!   [`TechSpec`](crate::engine::TechSpec) fields, capacity, workload,
+//!   and batch, declarable in code (builder) or as a `[space]` section
+//!   in a `.tech` descriptor file. Spec axes materialize derived technologies and
+//!   register them with the engine on demand.
+//! * [`search`] — grid, seeded-random, and adaptive (two-fidelity
+//!   successive halving on EDP) strategies, all fanning candidate
+//!   queries through [`Engine::evaluate_many`] so the per-stage memo
+//!   caches and thread pool are fully exploited.
+//! * [`pareto`] — objectives (EDP, energy, latency, area, capacity),
+//!   exact nondominated frontier, dominance ranking, knee-point pick.
+//! * [`report`] — frontier/candidate CSVs, the human-readable report,
+//!   and manifest lines, persisted by the coordinator like any other
+//!   experiment run.
+//!
+//! The CLI surface is `repro explore` with
+//! `--space/--objectives/--strategy/--budget/--seed`; see
+//! EXPERIMENTS.md §"Design-space exploration".
+
+pub mod pareto;
+pub mod report;
+pub mod search;
+pub mod space;
+
+use crate::engine::Engine;
+
+pub use pareto::Objective;
+pub use report::ExploreResult;
+pub use search::{Explored, SearchConfig, SearchOutcome, Strategy};
+pub use space::{Axis, Candidate, Space};
+
+/// Run one exploration: normalize the space, search it, and compute the
+/// exact Pareto analysis over everything evaluated. Engine-cache traffic
+/// is attributed to this run via a fork, like the experiment runner does.
+pub fn run(
+    engine: &Engine,
+    space: &Space,
+    objectives: &[Objective],
+    cfg: &SearchConfig,
+) -> crate::Result<ExploreResult> {
+    let space = space.normalized()?;
+    let scoped = engine.fork();
+    let outcome = search::search(&scoped, &space, objectives, cfg)?;
+    let costs: Vec<Vec<f64>> = outcome
+        .evaluated
+        .iter()
+        .map(|x| {
+            objectives
+                .iter()
+                .zip(&x.objectives)
+                .map(|(o, &v)| if o.minimize() { v } else { -v })
+                .collect()
+        })
+        .collect();
+    let ranks = pareto::ranks(&costs);
+    let frontier: Vec<usize> = (0..ranks.len()).filter(|&i| ranks[i] == 0).collect();
+    let knee = pareto::knee(&costs, &frontier);
+    Ok(ExploreResult {
+        space,
+        objectives: objectives.to_vec(),
+        config: cfg.clone(),
+        outcome,
+        ranks,
+        frontier,
+        knee,
+        cache: scoped.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    #[test]
+    fn run_over_a_small_grid_finds_a_nondominated_frontier() {
+        let engine = Engine::shared();
+        let space = Space::new().tech(["sram", "stt"]).capacity_mb([1, 2]);
+        let objectives = [Objective::Edp, Objective::Area];
+        let cfg = SearchConfig::default();
+        let result = run(engine, &space, &objectives, &cfg).unwrap();
+        assert_eq!(result.outcome.evaluated.len(), 4);
+        assert!(result.outcome.errors.is_empty(), "{:?}", result.outcome.errors);
+        assert!(!result.frontier.is_empty());
+        // Every frontier point is nondominated among everything evaluated.
+        for &i in &result.frontier {
+            assert_eq!(result.ranks[i], 0);
+            for (j, y) in result.outcome.evaluated.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                let a = &result.outcome.evaluated[i].objectives;
+                let b = &y.objectives;
+                assert!(
+                    !(b[0] <= a[0] && b[1] <= a[1] && (b[0] < a[0] || b[1] < a[1])),
+                    "frontier point {i} dominated by {j}"
+                );
+            }
+        }
+        // The knee is on the frontier and the CSVs carry every column.
+        let k = result.knee.expect("nonempty frontier has a knee");
+        assert!(result.frontier.contains(&k));
+        let frontier_csv = result.frontier_csv().to_string();
+        assert!(frontier_csv.starts_with("tech,capacity_mb,workload,edp,area,knee"));
+        let report = result.render();
+        assert!(report.contains("strategy: grid"), "{report}");
+        // Evaluations resolved the declared capacities.
+        assert!(result
+            .outcome
+            .evaluated
+            .iter()
+            .any(|x| x.eval.capacity_bytes == 2 * MB));
+    }
+}

@@ -1,0 +1,256 @@
+//! Exact Pareto analysis over explored candidates: objectives, dominance,
+//! frontier extraction, dominance ranking, and knee-point selection.
+//!
+//! All functions operate on *cost* vectors — objective values oriented so
+//! that smaller is always better (maximized objectives are negated by
+//! [`Objective::cost`]). The frontier is exact (O(n²) pairwise dominance,
+//! fine for the thousands-of-candidates scale a search budget allows), so
+//! the property tests can verify every reported point against a
+//! brute-force recompute.
+
+use crate::engine::Evaluation;
+use crate::util::err::msg;
+
+/// One optimization objective over an [`Evaluation`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Energy-delay product including DRAM (paper Fig 5/9 headline metric).
+    Edp,
+    /// Total energy including DRAM (J).
+    Energy,
+    /// Total delay including DRAM (s).
+    Latency,
+    /// Tuned cache area (m²).
+    Area,
+    /// Effective cache capacity (bytes) — the one *maximized* objective.
+    Capacity,
+}
+
+impl Objective {
+    /// All objectives, in presentation order.
+    pub const ALL: [Objective; 5] = [
+        Objective::Edp,
+        Objective::Energy,
+        Objective::Latency,
+        Objective::Area,
+        Objective::Capacity,
+    ];
+
+    /// CLI/CSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Edp => "edp",
+            Objective::Energy => "energy",
+            Objective::Latency => "latency",
+            Objective::Area => "area",
+            Objective::Capacity => "capacity",
+        }
+    }
+
+    /// Whether the objective is minimized (everything except capacity).
+    pub fn minimize(&self) -> bool {
+        !matches!(self, Objective::Capacity)
+    }
+
+    /// Parse one objective name.
+    pub fn parse(s: &str) -> crate::Result<Objective> {
+        Objective::ALL
+            .into_iter()
+            .find(|o| o.name() == s.trim().to_ascii_lowercase())
+            .ok_or_else(|| {
+                let known: Vec<&str> = Objective::ALL.iter().map(|o| o.name()).collect();
+                msg(format!("unknown objective {s:?} (known: {})", known.join(", ")))
+            })
+    }
+
+    /// Parse a comma-separated objective list; duplicates are an error
+    /// (they would silently double-weight the knee-point distance).
+    pub fn parse_list(s: &str) -> crate::Result<Vec<Objective>> {
+        let mut out = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+            let o = Objective::parse(item)?;
+            if out.contains(&o) {
+                return Err(msg(format!("duplicate objective {:?}", o.name())));
+            }
+            out.push(o);
+        }
+        if out.is_empty() {
+            return Err(msg("empty objective list"));
+        }
+        Ok(out)
+    }
+
+    /// Raw objective value of an evaluation. `None` when the objective
+    /// needs a workload roll-up the evaluation lacks (tune-only query).
+    pub fn value(&self, ev: &Evaluation) -> Option<f64> {
+        match self {
+            Objective::Edp => ev.workload.as_ref().map(|w| w.rollup.edp_with_dram()),
+            Objective::Energy => ev.workload.as_ref().map(|w| w.rollup.total_energy()),
+            Objective::Latency => ev.workload.as_ref().map(|w| w.rollup.total_time()),
+            Objective::Area => Some(ev.design.ppa.area),
+            Objective::Capacity => Some(ev.capacity_bytes as f64),
+        }
+    }
+
+    /// Minimization-oriented cost: the raw value, negated for maximized
+    /// objectives.
+    pub fn cost(&self, ev: &Evaluation) -> Option<f64> {
+        self.value(ev).map(|v| if self.minimize() { v } else { -v })
+    }
+}
+
+/// Whether cost vector `a` dominates `b`: no worse in every component and
+/// strictly better in at least one. Equal vectors do not dominate each
+/// other (both stay on the frontier).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the exact Pareto frontier (nondominated points), in input
+/// order.
+pub fn frontier(costs: &[Vec<f64>]) -> Vec<usize> {
+    (0..costs.len())
+        .filter(|&i| !costs.iter().enumerate().any(|(j, c)| j != i && dominates(c, &costs[i])))
+        .collect()
+}
+
+/// Dominance rank per point: rank 0 is the Pareto frontier, rank 1 the
+/// frontier after removing rank 0, and so on (NSGA-style nondominated
+/// sorting, computed exactly).
+pub fn ranks(costs: &[Vec<f64>]) -> Vec<usize> {
+    let n = costs.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut r = 0;
+    while !remaining.is_empty() {
+        let front: Vec<usize> = remaining
+            .iter()
+            .copied()
+            .filter(|&i| {
+                !remaining.iter().any(|&j| j != i && dominates(&costs[j], &costs[i]))
+            })
+            .collect();
+        if front.is_empty() {
+            // Unreachable for finite costs (a nonempty finite set always
+            // has a nondominated element); guard against NaN pathologies
+            // rather than looping forever.
+            for &i in &remaining {
+                rank[i] = r;
+            }
+            break;
+        }
+        for &i in &front {
+            rank[i] = r;
+        }
+        remaining.retain(|&i| rank[i] == usize::MAX);
+        r += 1;
+    }
+    rank
+}
+
+/// Knee point of a frontier: the member closest (Euclidean) to the ideal
+/// corner after normalizing each objective to `[0, 1]` over the frontier's
+/// span — the balanced-tradeoff pick reported by `repro explore`. Ties go
+/// to the earliest frontier member; `None` for an empty frontier.
+pub fn knee(costs: &[Vec<f64>], front: &[usize]) -> Option<usize> {
+    let first = *front.first()?;
+    let m = costs[first].len();
+    let mut lo = vec![f64::INFINITY; m];
+    let mut hi = vec![f64::NEG_INFINITY; m];
+    for &i in front {
+        for k in 0..m {
+            lo[k] = lo[k].min(costs[i][k]);
+            hi[k] = hi[k].max(costs[i][k]);
+        }
+    }
+    let mut best: Option<(f64, usize)> = None;
+    for &i in front {
+        let mut d2 = 0.0;
+        for k in 0..m {
+            let span = hi[k] - lo[k];
+            let t = if span > 0.0 { (costs[i][k] - lo[k]) / span } else { 0.0 };
+            d2 += t * t;
+        }
+        if best.map(|(bd, _)| d2 < bd).unwrap_or(true) {
+            best = Some((d2, i));
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parsing_and_directions() {
+        assert_eq!(Objective::parse("edp").unwrap(), Objective::Edp);
+        assert_eq!(Objective::parse(" Area ").unwrap(), Objective::Area);
+        assert!(Objective::parse("speed").is_err());
+        let list = Objective::parse_list("edp,area,capacity").unwrap();
+        assert_eq!(list, vec![Objective::Edp, Objective::Area, Objective::Capacity]);
+        assert!(Objective::parse_list("edp,edp").is_err(), "duplicates rejected");
+        assert!(Objective::parse_list("").is_err());
+        assert!(Objective::Edp.minimize());
+        assert!(!Objective::Capacity.minimize());
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 1.0]));
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal points don't dominate");
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 1.0]), "incomparable");
+        assert!(!dominates(&[2.0, 1.0], &[1.0, 3.0]));
+    }
+
+    #[test]
+    fn frontier_of_a_simple_tradeoff() {
+        // (1,4) (2,2) (4,1) trade off; (3,3) is dominated by (2,2);
+        // (2,2) duplicated — both copies stay on the frontier.
+        let costs = vec![
+            vec![1.0, 4.0],
+            vec![2.0, 2.0],
+            vec![4.0, 1.0],
+            vec![3.0, 3.0],
+            vec![2.0, 2.0],
+        ];
+        assert_eq!(frontier(&costs), vec![0, 1, 2, 4]);
+        let r = ranks(&costs);
+        assert_eq!(r, vec![0, 0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn ranks_peel_layer_by_layer() {
+        // Three nested "shells" along the diagonal.
+        let costs = vec![
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+        ];
+        assert_eq!(ranks(&costs), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn knee_picks_the_balanced_point() {
+        // Symmetric L-shaped frontier: the elbow (1,1) is the knee.
+        let costs = vec![vec![0.0, 3.0], vec![1.0, 1.0], vec![3.0, 0.0]];
+        let front = frontier(&costs);
+        assert_eq!(front, vec![0, 1, 2]);
+        assert_eq!(knee(&costs, &front), Some(1));
+        // Singleton frontier: the knee is that point.
+        let one = vec![vec![5.0, 5.0]];
+        assert_eq!(knee(&one, &[0]), Some(0));
+        assert_eq!(knee(&one, &[]), None);
+    }
+}

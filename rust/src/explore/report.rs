@@ -1,0 +1,152 @@
+//! Rendering an explore run: frontier/candidate CSVs, the human-readable
+//! report, and the manifest lines the coordinator persists.
+
+use super::pareto::Objective;
+use super::search::{SearchConfig, SearchOutcome};
+use super::space::Space;
+use crate::engine::CacheCounts;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// The result of [`crate::explore::run`]: the searched space, everything
+/// evaluated, and the Pareto analysis over it.
+#[derive(Debug)]
+pub struct ExploreResult {
+    /// The normalized space actually searched.
+    pub space: Space,
+    /// Objectives, in request order (CSV column order).
+    pub objectives: Vec<Objective>,
+    /// The search configuration used.
+    pub config: SearchConfig,
+    /// Search outcome: evaluated candidates + soft errors.
+    pub outcome: SearchOutcome,
+    /// Dominance rank per evaluated candidate (0 = frontier).
+    pub ranks: Vec<usize>,
+    /// Indices (into `outcome.evaluated`) of the Pareto frontier, in
+    /// evaluation order.
+    pub frontier: Vec<usize>,
+    /// Index (into `outcome.evaluated`) of the frontier's knee point.
+    pub knee: Option<usize>,
+    /// Engine-cache traffic attributed to this run.
+    pub cache: CacheCounts,
+}
+
+impl ExploreResult {
+    fn header(&self, tail: &[&str]) -> Vec<String> {
+        let mut cols: Vec<String> = self.space.axes.iter().map(|a| a.name()).collect();
+        cols.extend(self.objectives.iter().map(|o| o.name().to_string()));
+        cols.extend(tail.iter().map(|s| s.to_string()));
+        cols
+    }
+
+    fn row_of(&self, i: usize, tail: &[String]) -> Vec<String> {
+        let x = &self.outcome.evaluated[i];
+        let mut row = x.candidate.labels.clone();
+        row.extend(x.objectives.iter().map(|v| v.to_string()));
+        row.extend(tail.iter().cloned());
+        row
+    }
+
+    /// The frontier CSV: one row per nondominated point (axis values,
+    /// raw objective values, knee marker).
+    pub fn frontier_csv(&self) -> Csv {
+        let header = self.header(&["knee"]);
+        let cols: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut csv = Csv::new(&cols);
+        for &i in &self.frontier {
+            let knee = if self.knee == Some(i) { "1" } else { "0" };
+            csv.row(&self.row_of(i, &[knee.to_string()]));
+        }
+        csv
+    }
+
+    /// The full candidates CSV: every evaluated point with its dominance
+    /// rank (0 = frontier).
+    pub fn candidates_csv(&self) -> Csv {
+        let header = self.header(&["rank"]);
+        let cols: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut csv = Csv::new(&cols);
+        for (i, rank) in self.ranks.iter().enumerate() {
+            csv.row(&self.row_of(i, &[rank.to_string()]));
+        }
+        csv
+    }
+
+    /// Manifest lines: strategy/seed/budget, coverage, cache accounting,
+    /// and any soft errors — what `repro explore` persists alongside the
+    /// CSVs so a run is reproducible from its results directory alone.
+    pub fn manifest_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(format!(
+            "strategy: {} (budget {}, seed {})",
+            self.config.strategy.name(),
+            self.config.budget,
+            self.config.seed
+        ));
+        let axes: Vec<String> = self
+            .space
+            .axes
+            .iter()
+            .map(|a| format!("{}[{}]", a.name(), a.len()))
+            .collect();
+        out.push(format!(
+            "space: {} points over {} (iso {:?})",
+            self.outcome.space_size,
+            axes.join(" × "),
+            self.space.iso
+        ));
+        let mut coverage = format!(
+            "evaluated: {} of {} ({} frontier",
+            self.outcome.evaluated.len(),
+            self.outcome.space_size,
+            self.frontier.len()
+        );
+        if self.outcome.subsampled {
+            coverage.push_str(", grid evenly subsampled to the budget");
+        }
+        if self.outcome.screened > 0 {
+            coverage.push_str(&format!(
+                ", {} screened at the tune-only fidelity",
+                self.outcome.screened
+            ));
+        }
+        coverage.push(')');
+        out.push(coverage);
+        if let Some(k) = self.knee {
+            out.push(format!(
+                "knee: {}",
+                self.outcome.evaluated[k].candidate.labels.join(" ")
+            ));
+        }
+        for (what, err) in &self.outcome.errors {
+            out.push(format!("skipped: {what}: {err}"));
+        }
+        out.push(format!("engine cache: {}", self.cache.summary()));
+        out
+    }
+
+    /// Human-readable report: the frontier as a table (knee marked), then
+    /// the manifest lines.
+    pub fn render(&self) -> String {
+        let objectives: Vec<&str> = self.objectives.iter().map(|o| o.name()).collect();
+        let title = format!(
+            "Pareto frontier ({} strategy, objectives: {})",
+            self.config.strategy.name(),
+            objectives.join(", ")
+        );
+        let header = self.header(&["knee"]);
+        let cols: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(title, &cols);
+        for &i in &self.frontier {
+            let knee = if self.knee == Some(i) { "<- knee" } else { "" };
+            t.row(&self.row_of(i, &[knee.to_string()]));
+        }
+        let mut out = t.render();
+        for line in self.manifest_lines() {
+            out.push_str("  ");
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}

@@ -1,0 +1,344 @@
+//! Search strategies over a [`Space`]: exhaustive grid, seeded-random
+//! sampling, and adaptive successive halving.
+//!
+//! Every strategy produces a deterministic candidate list (grid order, or
+//! seeded draws) and fans it through [`Engine::evaluate_many`], so the
+//! engine's per-stage memo caches and thread pool do the heavy lifting:
+//! candidates sharing a (technology, capacity) pair tune once, candidates
+//! sharing a (workload, batch, capacity) triple profile once, and the
+//! whole batch spreads across cores.
+//!
+//! The adaptive strategy is a two-fidelity successive halving on EDP: a
+//! 2×-oversampled seeded pool is first screened at the cheap fidelity —
+//! tune-only queries whose EDAP (the Algorithm 1 objective, our
+//! zero-workload EDP surrogate) costs one memoized tuning each — then the
+//! surviving half (at most `budget`) gets the full cross-layer
+//! evaluation. The screen reuses the very tunings the full evaluations
+//! need, so the extra fidelity-0 rung costs almost nothing beyond the
+//! candidates it discards.
+
+use std::collections::HashSet;
+
+use super::pareto::Objective;
+use super::space::{Candidate, Space};
+use crate::engine::{Engine, Evaluation, Query};
+use crate::util::err::msg;
+use crate::util::rng::Rng;
+
+/// Search strategy selector (`--strategy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Exhaustive enumeration (evenly subsampled when the grid exceeds
+    /// the budget).
+    Grid,
+    /// Seeded uniform sampling of distinct grid points.
+    Random,
+    /// Two-fidelity successive halving on EDP (see module docs).
+    Adaptive,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Grid => "grid",
+            Strategy::Random => "random",
+            Strategy::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Strategy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "grid" => Ok(Strategy::Grid),
+            "random" => Ok(Strategy::Random),
+            "adaptive" => Ok(Strategy::Adaptive),
+            other => Err(msg(format!(
+                "unknown strategy {other:?} (known: grid, random, adaptive)"
+            ))),
+        }
+    }
+}
+
+/// Search configuration (`--strategy/--budget/--seed`).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub strategy: Strategy,
+    /// Maximum number of full (workload-rolled-up) evaluations.
+    pub budget: usize,
+    /// Seed for random/adaptive sampling (grid ignores it). The default
+    /// inherits the process-wide seed (the CLI's global `--seed`) at
+    /// construction time.
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            strategy: Strategy::Grid,
+            budget: 256,
+            seed: crate::util::rng::global_seed(),
+        }
+    }
+}
+
+/// One fully evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct Explored {
+    pub candidate: Candidate,
+    pub eval: Evaluation,
+    /// Raw objective values, aligned with the requested objective list.
+    pub objectives: Vec<f64>,
+}
+
+/// The outcome of one search run.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    /// Fully evaluated candidates, in deterministic strategy order.
+    pub evaluated: Vec<Explored>,
+    /// Candidates that failed to materialize or evaluate (description →
+    /// error); soft failures, not fatal — a capacity with no cache
+    /// organization or an `mtj.*` override on SRAM skips that point only.
+    pub errors: Vec<(String, String)>,
+    /// Total points in the searched space.
+    pub space_size: u128,
+    /// Grid only: the budget forced even subsampling of the grid.
+    pub subsampled: bool,
+    /// Adaptive only: pool size screened at the tune-only fidelity
+    /// (0 when the budget covered the pool outright).
+    pub screened: usize,
+}
+
+/// Run one search. `space` should be normalized (see
+/// [`Space::normalized`]); the engine's memo caches make repeated
+/// searches over overlapping spaces cheap.
+pub fn search(
+    engine: &Engine,
+    space: &Space,
+    objectives: &[Objective],
+    cfg: &SearchConfig,
+) -> crate::Result<SearchOutcome> {
+    if objectives.is_empty() {
+        return Err(msg("no objectives given"));
+    }
+    if cfg.budget == 0 {
+        return Err(msg("--budget must be at least 1"));
+    }
+    let space = space.normalized()?;
+    let size = space.size();
+    let budget = cfg.budget as u128;
+    match cfg.strategy {
+        Strategy::Grid => {
+            let subsampled = size > budget;
+            let n = size.min(budget);
+            // Even deterministic stride over the flat grid when the
+            // budget can't cover it (first point always included).
+            let flats: Vec<u128> = (0..n).map(|i| i * size / n).collect();
+            let (evaluated, errors) = evaluate_flats(engine, &space, objectives, &flats, false);
+            Ok(SearchOutcome {
+                evaluated,
+                errors,
+                space_size: size,
+                subsampled,
+                screened: 0,
+            })
+        }
+        Strategy::Random => {
+            let flats = sample_distinct(size, size.min(budget) as usize, cfg.seed);
+            let (evaluated, errors) = evaluate_flats(engine, &space, objectives, &flats, false);
+            Ok(SearchOutcome {
+                evaluated,
+                errors,
+                space_size: size,
+                subsampled: false,
+                screened: 0,
+            })
+        }
+        Strategy::Adaptive => {
+            let pool_n = size.min(budget.saturating_mul(2)) as usize;
+            let pool = sample_distinct(size, pool_n, cfg.seed);
+            if pool.len() as u128 <= budget {
+                // The budget covers the whole pool: nothing to screen.
+                let (evaluated, errors) =
+                    evaluate_flats(engine, &space, objectives, &pool, false);
+                return Ok(SearchOutcome {
+                    evaluated,
+                    errors,
+                    space_size: size,
+                    subsampled: false,
+                    screened: 0,
+                });
+            }
+            // Fidelity 0: tune-only EDAP screen over the pool.
+            let (proxies, mut errors) = evaluate_flats(engine, &space, objectives, &pool, true);
+            let screened = pool.len();
+            let mut ranked: Vec<(f64, u128)> = proxies
+                .iter()
+                .map(|x| (x.eval.design.ppa.edap(), flat_of(&space, &x.candidate)))
+                .collect();
+            // Deterministic order: EDAP ascending, grid index breaking ties.
+            ranked.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let survivors: Vec<u128> =
+                ranked.iter().take(cfg.budget).map(|&(_, flat)| flat).collect();
+            // Fidelity 1: full cross-layer evaluation of the survivors.
+            let (evaluated, mut full_errors) =
+                evaluate_flats(engine, &space, objectives, &survivors, false);
+            errors.append(&mut full_errors);
+            Ok(SearchOutcome {
+                evaluated,
+                errors,
+                space_size: size,
+                subsampled: false,
+                screened,
+            })
+        }
+    }
+}
+
+/// Re-encode a candidate's coordinates as its flat grid index.
+fn flat_of(space: &Space, candidate: &Candidate) -> u128 {
+    let mut flat = 0u128;
+    for (axis, &i) in space.axes.iter().zip(&candidate.coords) {
+        flat = flat * axis.len() as u128 + i as u128;
+    }
+    flat
+}
+
+/// Materialize and evaluate the candidates at the given flat indices, in
+/// order, through [`Engine::evaluate_many`]. With `proxy` set, queries
+/// run tune-only (workload and batch stripped) — the adaptive screen's
+/// cheap fidelity — and objective vectors are left empty.
+fn evaluate_flats(
+    engine: &Engine,
+    space: &Space,
+    objectives: &[Objective],
+    flats: &[u128],
+    proxy: bool,
+) -> (Vec<Explored>, Vec<(String, String)>) {
+    let mut errors: Vec<(String, String)> = Vec::new();
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for &flat in flats {
+        let coords = space.coords(flat);
+        match space.candidate(engine, &coords) {
+            Ok(c) => candidates.push(c),
+            Err(e) => errors.push((space.describe(&coords), e.to_string())),
+        }
+    }
+    let queries: Vec<Query> = candidates
+        .iter()
+        .map(|c| {
+            if proxy {
+                Query { workload: None, batch: None, ..c.query.clone() }
+            } else {
+                c.query.clone()
+            }
+        })
+        .collect();
+    let results = engine.evaluate_many(&queries);
+    let mut evaluated = Vec::new();
+    for (candidate, result) in candidates.into_iter().zip(results) {
+        let describe = candidate.labels.join(" ");
+        match result {
+            Err(e) => errors.push((describe, e.to_string())),
+            Ok(eval) => {
+                let mut vals = Vec::with_capacity(objectives.len());
+                let mut missing = None;
+                if !proxy {
+                    for o in objectives {
+                        match o.value(&eval) {
+                            Some(v) => vals.push(v),
+                            None => {
+                                missing = Some(*o);
+                                break;
+                            }
+                        }
+                    }
+                }
+                match missing {
+                    Some(o) => errors.push((
+                        describe,
+                        format!("objective '{}' needs a workload roll-up", o.name()),
+                    )),
+                    None => evaluated.push(Explored { candidate, eval, objectives: vals }),
+                }
+            }
+        }
+    }
+    (evaluated, errors)
+}
+
+/// `n` distinct flat indices drawn uniformly from `[0, size)` with a
+/// seeded generator, in draw order (deterministic per seed). Falls back
+/// to a low-to-high scan for any remainder if rejection sampling stalls
+/// (n close to size), keeping the result deterministic.
+fn sample_distinct(size: u128, n: usize, seed: u64) -> Vec<u128> {
+    if n as u128 >= size {
+        return (0..size).collect();
+    }
+    let mut rng = Rng::new(seed);
+    let mut seen: HashSet<u128> = HashSet::new();
+    let mut out: Vec<u128> = Vec::with_capacity(n);
+    let max_attempts = 64 * n + 1024;
+    let mut attempts = 0;
+    while out.len() < n && attempts < max_attempts {
+        attempts += 1;
+        let draw = if size <= u64::MAX as u128 {
+            rng.gen_range(size as u64) as u128
+        } else {
+            (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) % size
+        };
+        if seen.insert(draw) {
+            out.push(draw);
+        }
+    }
+    let mut fill = 0u128;
+    while out.len() < n {
+        if seen.insert(fill) {
+            out.push(fill);
+        }
+        fill += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parses_and_names() {
+        assert_eq!(Strategy::parse("grid").unwrap(), Strategy::Grid);
+        assert_eq!(Strategy::parse(" Random ").unwrap(), Strategy::Random);
+        assert_eq!(Strategy::parse("adaptive").unwrap().name(), "adaptive");
+        assert!(Strategy::parse("anneal").is_err());
+    }
+
+    #[test]
+    fn sample_distinct_is_deterministic_and_distinct() {
+        let a = sample_distinct(1000, 50, 42);
+        let b = sample_distinct(1000, 50, 42);
+        assert_eq!(a, b, "same seed, same draws");
+        assert_ne!(a, sample_distinct(1000, 50, 43), "seed matters");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50, "all distinct");
+        assert!(a.iter().all(|&x| x < 1000));
+        // n >= size degenerates to full enumeration.
+        assert_eq!(sample_distinct(7, 20, 1), (0..7).collect::<Vec<u128>>());
+        // Near-exhaustive sampling terminates (fallback fill).
+        let near = sample_distinct(50, 49, 9);
+        assert_eq!(near.len(), 49);
+    }
+
+    #[test]
+    fn grid_subsamples_evenly_over_budget() {
+        // 12-point space, budget 4 → flats 0,3,6,9.
+        let size = 12u128;
+        let n = 4u128;
+        let flats: Vec<u128> = (0..n).map(|i| i * size / n).collect();
+        assert_eq!(flats, vec![0, 3, 6, 9]);
+    }
+}

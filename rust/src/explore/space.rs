@@ -1,0 +1,702 @@
+//! The parameter-space DSL: axes over technology descriptors, cache
+//! capacity, workload, and batch size.
+//!
+//! A [`Space`] is the cartesian product of declared [`Axis`] values. Axes
+//! come in two flavors:
+//!
+//! * **query axes** — technology id, capacity (MB), batch, workload —
+//!   which select among things the engine already knows how to evaluate;
+//! * **spec axes** — a numeric [`TechSpec`] field path (`mtj.tau0`,
+//!   `nv.cell_area_mult`, …) and a value list — which *materialize new
+//!   technologies*: each candidate clones the base spec, applies its
+//!   overrides, and registers the derived descriptor under a
+//!   value-stamped id (`stt+mtj.tau0=0.000000001` — values print in
+//!   Rust's shortest `Display` form, which never uses exponents), so the
+//!   engine's per-stage memo caches treat every derived point as a
+//!   first-class technology.
+//!
+//! Spaces are declared in code via the builder methods or authored as a
+//! `[space]` section in a `.tech` descriptor file (see
+//! [`Space::from_descriptor`]); the grammar is documented in
+//! EXPERIMENTS.md §"Design-space exploration".
+
+use std::sync::OnceLock;
+
+use crate::engine::{descriptor, Engine, IsoMode, Query, TechSpec, TECH_SOT, TECH_SRAM, TECH_STT};
+use crate::experiments::normalize_name;
+use crate::util::err::msg;
+use crate::util::units::MB;
+use crate::workloads::hpcg::HpcgSize;
+use crate::workloads::memstats::Phase;
+use crate::workloads::nets;
+use crate::workloads::profiler::Workload;
+
+/// One axis of the design space.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Axis {
+    /// Registry ids of base technologies.
+    Tech(Vec<String>),
+    /// Cache capacities in MB.
+    CapacityMb(Vec<u64>),
+    /// Batch sizes.
+    Batch(Vec<u64>),
+    /// Workloads (suite labels, e.g. `AlexNet-I`).
+    Workload(Vec<Workload>),
+    /// Numeric override of a [`TechSpec`] field (see [`spec_field_names`]).
+    Spec { field: String, values: Vec<f64> },
+}
+
+impl Axis {
+    /// Axis name as printed in CSV headers and reports.
+    pub fn name(&self) -> String {
+        match self {
+            Axis::Tech(_) => "tech".to_string(),
+            Axis::CapacityMb(_) => "capacity_mb".to_string(),
+            Axis::Batch(_) => "batch".to_string(),
+            Axis::Workload(_) => "workload".to_string(),
+            Axis::Spec { field, .. } => field.clone(),
+        }
+    }
+
+    /// Number of values along the axis.
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Tech(v) => v.len(),
+            Axis::CapacityMb(v) => v.len(),
+            Axis::Batch(v) => v.len(),
+            Axis::Workload(v) => v.len(),
+            Axis::Spec { values, .. } => values.len(),
+        }
+    }
+
+    /// Whether the axis has no values (rejected by validation).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Printable value at index `i` (CSV cell / report cell).
+    pub fn value_label(&self, i: usize) -> String {
+        match self {
+            Axis::Tech(v) => v[i].clone(),
+            Axis::CapacityMb(v) => v[i].to_string(),
+            Axis::Batch(v) => v[i].to_string(),
+            Axis::Workload(v) => workload_label(v[i]),
+            Axis::Spec { values, .. } => values[i].to_string(),
+        }
+    }
+}
+
+/// Names of the five DNNs in Table 3 order (cached; building the full
+/// layer lists per label lookup would be wasteful).
+fn net_names() -> &'static [&'static str] {
+    static NAMES: OnceLock<Vec<&'static str>> = OnceLock::new();
+    NAMES.get_or_init(|| nets::all_networks().iter().map(|n| n.name).collect())
+}
+
+/// Suite-style label of a workload (`AlexNet-I`, `VGG-16-T`, `HPCG-S`).
+pub fn workload_label(w: Workload) -> String {
+    match w {
+        Workload::Dnn { index, phase } => match net_names().get(index) {
+            Some(name) => format!("{}-{}", name, phase.suffix()),
+            None => format!("dnn{}-{}", index, phase.suffix()),
+        },
+        Workload::Hpcg(size) => size.name().to_string(),
+    }
+}
+
+/// All workloads the suite knows, for label-based lookup.
+fn known_workloads() -> Vec<Workload> {
+    let mut out = Vec::new();
+    for index in 0..net_names().len() {
+        out.push(Workload::Dnn { index, phase: Phase::Inference });
+        out.push(Workload::Dnn { index, phase: Phase::Training });
+    }
+    for size in HpcgSize::ALL {
+        out.push(Workload::Hpcg(size));
+    }
+    out
+}
+
+/// Parse a workload by suite label, matched case-insensitively ignoring
+/// punctuation (`alexnet-i` == `AlexNet-I`, `hpcgs` == `HPCG-S`).
+pub fn parse_workload(s: &str) -> crate::Result<Workload> {
+    let want = normalize_name(s);
+    for w in known_workloads() {
+        if normalize_name(&workload_label(w)) == want {
+            return Ok(w);
+        }
+    }
+    let known: Vec<String> = known_workloads().iter().map(|&w| workload_label(w)).collect();
+    Err(msg(format!("unknown workload {s:?} (known: {})", known.join(", "))))
+}
+
+/// Numeric [`TechSpec`] field paths a spec axis may override.
+pub fn spec_field_names() -> &'static [&'static str] {
+    &[
+        "mtj.r_p",
+        "mtj.r_ap",
+        "mtj.ic_set",
+        "mtj.ic_reset",
+        "mtj.tau0",
+        "mtj.r_rail",
+        "device.c_bitline",
+        "device.v_read",
+        "device.sense_overhead",
+        "device.write_overhead_set",
+        "device.write_overhead_reset",
+        "device.set_derate",
+        "device.reset_derate",
+        "device.height_cpp",
+        "nv.cell_area_mult",
+        "nv.cell_aspect",
+        "nv.wd_area_per_amp",
+        "nv.wd_leak_density",
+        "nv.temp_leak_mult",
+        "nv.i_write",
+        "nv.csa_overhead",
+        "nv.t_read_extra",
+        "nv.t_write_extra",
+    ]
+}
+
+/// Whether `field` names a known spec-axis path.
+pub fn is_spec_field(field: &str) -> bool {
+    spec_field_names().contains(&field)
+}
+
+fn spec_field_mut<'a>(spec: &'a mut TechSpec, field: &str) -> Option<&'a mut f64> {
+    match field {
+        "mtj.r_p" => spec.mtj.as_mut().map(|m| &mut m.r_p),
+        "mtj.r_ap" => spec.mtj.as_mut().map(|m| &mut m.r_ap),
+        "mtj.ic_set" => spec.mtj.as_mut().map(|m| &mut m.ic_set),
+        "mtj.ic_reset" => spec.mtj.as_mut().map(|m| &mut m.ic_reset),
+        "mtj.tau0" => spec.mtj.as_mut().map(|m| &mut m.tau0),
+        "mtj.r_rail" => spec.mtj.as_mut().map(|m| &mut m.r_rail),
+        "device.c_bitline" => Some(&mut spec.device.c_bitline),
+        "device.v_read" => Some(&mut spec.device.v_read),
+        "device.sense_overhead" => Some(&mut spec.device.sense_overhead),
+        "device.write_overhead_set" => Some(&mut spec.device.write_overhead[0]),
+        "device.write_overhead_reset" => Some(&mut spec.device.write_overhead[1]),
+        "device.set_derate" => Some(&mut spec.device.set_derate),
+        "device.reset_derate" => Some(&mut spec.device.reset_derate),
+        "device.height_cpp" => Some(&mut spec.device.height_cpp),
+        "nv.cell_area_mult" => Some(&mut spec.nv.cell_area_mult),
+        "nv.cell_aspect" => Some(&mut spec.nv.cell_aspect),
+        "nv.wd_area_per_amp" => Some(&mut spec.nv.wd_area_per_amp),
+        "nv.wd_leak_density" => Some(&mut spec.nv.wd_leak_density),
+        "nv.temp_leak_mult" => Some(&mut spec.nv.temp_leak_mult),
+        "nv.i_write" => Some(&mut spec.nv.i_write),
+        "nv.csa_overhead" => Some(&mut spec.nv.csa_overhead),
+        "nv.t_read_extra" => Some(&mut spec.nv.t_read_extra),
+        "nv.t_write_extra" => Some(&mut spec.nv.t_write_extra),
+        _ => None,
+    }
+}
+
+/// Apply one spec-axis override to a cloned spec. Errors on an unknown
+/// field path, or a known path that doesn't apply to the technology (an
+/// `mtj.*` override on an SRAM-class spec with no `[mtj]` section).
+pub fn apply_spec_override(spec: &mut TechSpec, field: &str, value: f64) -> crate::Result<()> {
+    if !is_spec_field(field) {
+        return Err(msg(format!(
+            "unknown spec field '{field}' (known: {})",
+            spec_field_names().join(", ")
+        )));
+    }
+    let id = spec.id.clone();
+    match spec_field_mut(spec, field) {
+        Some(slot) => {
+            *slot = value;
+            Ok(())
+        }
+        None => Err(msg(format!(
+            "spec field '{field}' does not apply to technology '{id}' (no [mtj] section)"
+        ))),
+    }
+}
+
+/// A declared design space: the cartesian product of its axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Space {
+    /// Axes in declaration order (grid enumeration varies the last axis
+    /// fastest).
+    pub axes: Vec<Axis>,
+    /// Capacity interpretation for every candidate query.
+    pub iso: IsoMode,
+}
+
+impl Default for Space {
+    fn default() -> Self {
+        Space::new()
+    }
+}
+
+impl Space {
+    /// An empty space (normalization fills in default axes).
+    pub fn new() -> Space {
+        Space { axes: Vec::new(), iso: IsoMode::Capacity }
+    }
+
+    /// Add a technology axis (registry ids).
+    pub fn tech<S: Into<String>>(mut self, ids: impl IntoIterator<Item = S>) -> Space {
+        self.axes.push(Axis::Tech(ids.into_iter().map(Into::into).collect()));
+        self
+    }
+
+    /// Add a capacity axis (MB).
+    pub fn capacity_mb(mut self, caps: impl IntoIterator<Item = u64>) -> Space {
+        self.axes.push(Axis::CapacityMb(caps.into_iter().collect()));
+        self
+    }
+
+    /// Add a batch-size axis.
+    pub fn batch(mut self, batches: impl IntoIterator<Item = u64>) -> Space {
+        self.axes.push(Axis::Batch(batches.into_iter().collect()));
+        self
+    }
+
+    /// Add a workload axis.
+    pub fn workload(mut self, ws: impl IntoIterator<Item = Workload>) -> Space {
+        self.axes.push(Axis::Workload(ws.into_iter().collect()));
+        self
+    }
+
+    /// Add a spec-override axis over a [`TechSpec`] field path.
+    pub fn spec_axis(
+        mut self,
+        field: impl Into<String>,
+        values: impl IntoIterator<Item = f64>,
+    ) -> Space {
+        self.axes.push(Axis::Spec {
+            field: field.into(),
+            values: values.into_iter().collect(),
+        });
+        self
+    }
+
+    /// Interpret capacities as SRAM-baseline footprints (iso-area).
+    pub fn iso_area(mut self) -> Space {
+        self.iso = IsoMode::Area;
+        self
+    }
+
+    /// Structural validation: nonempty axes, no duplicate axis names,
+    /// known spec fields.
+    pub fn validate(&self) -> crate::Result<()> {
+        let mut names: Vec<String> = Vec::new();
+        for axis in &self.axes {
+            if axis.is_empty() {
+                return Err(msg(format!("axis '{}' has no values", axis.name())));
+            }
+            let name = axis.name();
+            if names.contains(&name) {
+                return Err(msg(format!("duplicate axis '{name}'")));
+            }
+            if let Axis::Spec { field, .. } = axis {
+                if !is_spec_field(field) {
+                    return Err(msg(format!(
+                        "unknown spec field '{field}' (known: {})",
+                        spec_field_names().join(", ")
+                    )));
+                }
+            }
+            names.push(name);
+        }
+        Ok(())
+    }
+
+    /// The space with implicit defaults filled in: a technology axis of
+    /// the three built-ins when absent, a 1/2/4/8 MB capacity axis when
+    /// absent, and a singleton AlexNet-I workload axis when absent (the
+    /// EDP/energy/latency objectives need a workload roll-up). Idempotent.
+    pub fn normalized(&self) -> crate::Result<Space> {
+        self.validate()?;
+        let mut out = self.clone();
+        if !out.axes.iter().any(|a| matches!(a, Axis::Tech(_))) {
+            out.axes.push(Axis::Tech(vec![
+                TECH_SRAM.to_string(),
+                TECH_STT.to_string(),
+                TECH_SOT.to_string(),
+            ]));
+        }
+        if !out.axes.iter().any(|a| matches!(a, Axis::CapacityMb(_))) {
+            out.axes.push(Axis::CapacityMb(vec![1, 2, 4, 8]));
+        }
+        if !out.axes.iter().any(|a| matches!(a, Axis::Workload(_))) {
+            out.axes.push(Axis::Workload(vec![Workload::Dnn {
+                index: 0,
+                phase: Phase::Inference,
+            }]));
+        }
+        Ok(out)
+    }
+
+    /// Total number of grid points (product of axis lengths; 1 for a
+    /// space whose axes are all singletons).
+    pub fn size(&self) -> u128 {
+        self.axes.iter().fold(1u128, |acc, a| acc.saturating_mul(a.len() as u128))
+    }
+
+    /// Decode a flat grid index into per-axis coordinates (mixed radix;
+    /// the last axis varies fastest).
+    pub fn coords(&self, flat: u128) -> Vec<usize> {
+        let mut rest = flat;
+        let mut out = vec![0usize; self.axes.len()];
+        for (i, axis) in self.axes.iter().enumerate().rev() {
+            let n = axis.len() as u128;
+            out[i] = (rest % n) as usize;
+            rest /= n;
+        }
+        out
+    }
+
+    /// Compact human description of the candidate at `coords`
+    /// (`tech=stt capacity_mb=4 mtj.tau0=1e-9`).
+    pub fn describe(&self, coords: &[usize]) -> String {
+        self.axes
+            .iter()
+            .zip(coords)
+            .map(|(a, &i)| format!("{}={}", a.name(), a.value_label(i)))
+            .collect::<Vec<String>>()
+            .join(" ")
+    }
+
+    /// Materialize the candidate at `coords`: resolve the base technology,
+    /// apply spec-axis overrides (registering the derived descriptor under
+    /// a value-stamped id when new), and build the query. Requires a
+    /// technology axis and a capacity axis (present after
+    /// [`Space::normalized`]).
+    pub fn candidate(&self, engine: &Engine, coords: &[usize]) -> crate::Result<Candidate> {
+        if coords.len() != self.axes.len() {
+            return Err(msg(format!(
+                "candidate coords have {} entries for {} axes",
+                coords.len(),
+                self.axes.len()
+            )));
+        }
+        let mut base_tech: Option<String> = None;
+        let mut capacity_mb: Option<u64> = None;
+        let mut batch: Option<u64> = None;
+        let mut workload: Option<Workload> = None;
+        let mut overrides: Vec<(String, f64)> = Vec::new();
+        let mut labels = Vec::with_capacity(self.axes.len());
+        for (axis, &i) in self.axes.iter().zip(coords) {
+            if i >= axis.len() {
+                return Err(msg(format!("coordinate {i} out of range on axis '{}'", axis.name())));
+            }
+            labels.push(axis.value_label(i));
+            match axis {
+                Axis::Tech(v) => base_tech = Some(v[i].clone()),
+                Axis::CapacityMb(v) => capacity_mb = Some(v[i]),
+                Axis::Batch(v) => batch = Some(v[i]),
+                Axis::Workload(v) => workload = Some(v[i]),
+                Axis::Spec { field, values } => overrides.push((field.clone(), values[i])),
+            }
+        }
+        let base = base_tech.ok_or_else(|| msg("space has no technology axis"))?;
+        let capacity_mb = capacity_mb.ok_or_else(|| msg("space has no capacity axis"))?;
+        let tech = if overrides.is_empty() {
+            if engine.tech(&base).is_none() {
+                let known: Vec<String> = engine.techs().iter().map(|s| s.id.clone()).collect();
+                return Err(msg(format!(
+                    "unknown technology '{base}' (registered: {})",
+                    known.join(", ")
+                )));
+            }
+            base
+        } else {
+            let spec = engine.tech(&base).ok_or_else(|| {
+                let known: Vec<String> = engine.techs().iter().map(|s| s.id.clone()).collect();
+                msg(format!("unknown technology '{base}' (registered: {})", known.join(", ")))
+            })?;
+            let mut derived = (*spec).clone();
+            let mut id = base.clone();
+            for (field, value) in &overrides {
+                apply_spec_override(&mut derived, field, *value)?;
+                id.push_str(&format!("+{field}={value}"));
+            }
+            derived.id = id.clone();
+            derived.name = id.clone();
+            engine.register_if_absent(derived)?
+        };
+        let query = Query {
+            tech,
+            capacity_bytes: capacity_mb * MB,
+            workload,
+            batch,
+            iso: self.iso,
+        };
+        Ok(Candidate { coords: coords.to_vec(), labels, query })
+    }
+
+    /// Parse a `[space]` section (key → comma-separated values, sorted by
+    /// key as the descriptor format stores them). `base_tech` supplies a
+    /// default technology axis when the section declares none — the id of
+    /// the `[tech]` spec sharing the file, if any.
+    pub fn from_entries(
+        entries: &[(String, String)],
+        base_tech: Option<&str>,
+    ) -> crate::Result<Space> {
+        let mut space = Space::new();
+        for (key, val) in entries {
+            let items: Vec<&str> = val
+                .split(',')
+                .map(|s| s.trim().trim_matches('"'))
+                .filter(|s| !s.is_empty())
+                .collect();
+            if items.is_empty() {
+                return Err(msg(format!("[space] {key}: empty value list")));
+            }
+            match key.as_str() {
+                "tech" => {
+                    space.axes.push(Axis::Tech(items.iter().map(|s| s.to_string()).collect()));
+                }
+                "capacity_mb" => space.axes.push(Axis::CapacityMb(parse_u64s(key, &items)?)),
+                "batch" => space.axes.push(Axis::Batch(parse_u64s(key, &items)?)),
+                "workload" => {
+                    let mut ws = Vec::new();
+                    for item in &items {
+                        ws.push(parse_workload(item)?);
+                    }
+                    space.axes.push(Axis::Workload(ws));
+                }
+                "iso" => {
+                    if items.len() != 1 {
+                        return Err(msg("[space] iso: expected a single value"));
+                    }
+                    space.iso = match items[0] {
+                        "capacity" => IsoMode::Capacity,
+                        "area" => IsoMode::Area,
+                        other => {
+                            return Err(msg(format!(
+                                "[space] iso: expected capacity/area, got {other:?}"
+                            )))
+                        }
+                    };
+                }
+                field if field.contains('.') => {
+                    if !is_spec_field(field) {
+                        return Err(msg(format!(
+                            "[space] unknown spec field '{field}' (known: {})",
+                            spec_field_names().join(", ")
+                        )));
+                    }
+                    space.axes.push(Axis::Spec {
+                        field: field.to_string(),
+                        values: parse_f64s(key, &items)?,
+                    });
+                }
+                other => {
+                    return Err(msg(format!(
+                        "[space] unknown key '{other}' (known: tech, capacity_mb, batch, \
+                         workload, iso, or a spec field path like mtj.tau0)"
+                    )))
+                }
+            }
+        }
+        let has_tech_axis = space.axes.iter().any(|a| matches!(a, Axis::Tech(_)));
+        if let Some(base) = base_tech.filter(|_| !has_tech_axis) {
+            space.axes.push(Axis::Tech(vec![base.to_string()]));
+        }
+        space.validate()?;
+        Ok(space)
+    }
+
+    /// Parse a descriptor file's text into a space. The file must carry a
+    /// `[space]` section; when it also carries a `[tech]` descriptor, that
+    /// technology is registered (idempotently) and becomes the default
+    /// technology axis if the space declares none. A file without `[tech]`
+    /// must be pure `[space]` — any other section is rejected as a likely
+    /// misspelling rather than silently ignored.
+    pub fn from_descriptor(engine: &Engine, text: &str) -> crate::Result<Space> {
+        let entries = descriptor::space_section(text)?
+            .ok_or_else(|| msg("descriptor has no [space] section"))?;
+        let base = if descriptor::has_section(text, "tech")? {
+            let spec = descriptor::parse(text)?;
+            Some(engine.register_if_absent(spec)?)
+        } else {
+            descriptor::ensure_only_space(text)?;
+            None
+        };
+        Space::from_entries(&entries, base.as_deref())
+    }
+}
+
+fn parse_u64s(key: &str, items: &[&str]) -> crate::Result<Vec<u64>> {
+    items
+        .iter()
+        .map(|s| {
+            s.parse::<u64>()
+                .map_err(|_| msg(format!("[space] {key}: invalid integer {s:?}")))
+        })
+        .collect()
+}
+
+fn parse_f64s(key: &str, items: &[&str]) -> crate::Result<Vec<f64>> {
+    items
+        .iter()
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| msg(format!("[space] {key}: invalid number {s:?}")))
+        })
+        .collect()
+}
+
+/// One concrete point of a space: per-axis coordinates, printable value
+/// labels (aligned with the space's axes), and the materialized query.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub coords: Vec<usize>,
+    pub labels: Vec<String>,
+    pub query: Query,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_declares_axes_in_order() {
+        let s = Space::new().tech(["stt", "sot"]).capacity_mb([1, 2, 4]).batch([4, 64]);
+        assert_eq!(s.axes.len(), 3);
+        assert_eq!(s.axes[0].name(), "tech");
+        assert_eq!(s.axes[1].name(), "capacity_mb");
+        assert_eq!(s.size(), 12);
+        assert_eq!(s.iso, IsoMode::Capacity);
+        assert_eq!(s.iso_area().iso, IsoMode::Area);
+    }
+
+    #[test]
+    fn coords_round_trip_the_grid() {
+        let s = Space::new().tech(["a", "b"]).capacity_mb([1, 2, 4]).batch([8, 16]);
+        // Last axis fastest: flat 0 → (0,0,0), flat 1 → (0,0,1), flat 2 → (0,1,0).
+        assert_eq!(s.coords(0), vec![0, 0, 0]);
+        assert_eq!(s.coords(1), vec![0, 0, 1]);
+        assert_eq!(s.coords(2), vec![0, 1, 0]);
+        assert_eq!(s.coords(11), vec![1, 2, 1]);
+        // Every flat index decodes uniquely.
+        let mut seen = std::collections::HashSet::new();
+        for flat in 0..s.size() {
+            assert!(seen.insert(s.coords(flat)));
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn validation_rejects_empty_and_duplicate_axes() {
+        assert!(Space::new().tech(Vec::<String>::new()).validate().is_err());
+        assert!(Space::new().tech(["stt"]).tech(["sot"]).validate().is_err());
+        assert!(Space::new().spec_axis("mtj.nope", [1.0]).validate().is_err());
+        assert!(Space::new().tech(["stt"]).spec_axis("mtj.tau0", [1e-9]).validate().is_ok());
+    }
+
+    #[test]
+    fn normalized_fills_defaults_and_is_idempotent() {
+        let n = Space::new().normalized().unwrap();
+        assert_eq!(n.axes.len(), 3, "tech + capacity + workload defaults");
+        assert_eq!(n.normalized().unwrap(), n);
+        // Declared axes are kept as-is.
+        let s = Space::new().tech(["stt"]).capacity_mb([7]).normalized().unwrap();
+        assert_eq!(s.axes[0], Axis::Tech(vec!["stt".to_string()]));
+        assert_eq!(s.axes[1], Axis::CapacityMb(vec![7]));
+        assert!(matches!(&s.axes[2], Axis::Workload(w) if w.len() == 1));
+    }
+
+    #[test]
+    fn workload_labels_parse_back() {
+        for w in known_workloads() {
+            let label = workload_label(w);
+            assert_eq!(parse_workload(&label).unwrap(), w, "{label}");
+            assert_eq!(parse_workload(&label.to_lowercase()).unwrap(), w);
+        }
+        assert_eq!(
+            parse_workload("alexnet-i").unwrap(),
+            Workload::Dnn { index: 0, phase: Phase::Inference }
+        );
+        assert!(parse_workload("lenet-i").is_err());
+    }
+
+    #[test]
+    fn spec_overrides_apply_or_explain() {
+        let mut stt = TechSpec::stt();
+        apply_spec_override(&mut stt, "mtj.tau0", 1.0e-9).unwrap();
+        assert_eq!(stt.mtj.unwrap().tau0, 1.0e-9);
+        let mut sram = TechSpec::sram();
+        let e = apply_spec_override(&mut sram, "mtj.tau0", 1.0e-9).unwrap_err().to_string();
+        assert!(e.contains("does not apply"), "{e}");
+        let e = apply_spec_override(&mut sram, "mtj.thickness", 1.0).unwrap_err().to_string();
+        assert!(e.contains("unknown spec field"), "{e}");
+        // SRAM nv-card fields are overridable.
+        apply_spec_override(&mut sram, "nv.cell_area_mult", 2.5).unwrap();
+        assert_eq!(sram.nv.cell_area_mult, 2.5);
+    }
+
+    #[test]
+    fn candidates_materialize_derived_techs_once() {
+        let engine = Engine::new();
+        let space = Space::new()
+            .tech(["stt"])
+            .capacity_mb([2])
+            .spec_axis("mtj.tau0", [1.0e-9, 2.0e-9])
+            .normalized()
+            .unwrap();
+        let a = space.candidate(&engine, &space.coords(0)).unwrap();
+        // Value-stamped id (floats print in Rust's shortest Display form).
+        assert!(a.query.tech.starts_with("stt+mtj.tau0="), "{}", a.query.tech);
+        assert_eq!(a.query.capacity_bytes, 2 * MB);
+        let spec = engine.tech(&a.query.tech).expect("derived tech registered");
+        assert_eq!(spec.mtj.unwrap().tau0, 1.0e-9);
+        // Re-materializing the same point reuses the registration.
+        let before = engine.techs().len();
+        let again = space.candidate(&engine, &space.coords(0)).unwrap();
+        assert_eq!(again.query.tech, a.query.tech);
+        assert_eq!(engine.techs().len(), before);
+        // The sibling point registers its own derived tech.
+        let b = space.candidate(&engine, &space.coords(1)).unwrap();
+        assert_ne!(b.query.tech, a.query.tech);
+        let spec_b = engine.tech(&b.query.tech).expect("sibling registered");
+        assert_eq!(spec_b.mtj.unwrap().tau0, 2.0e-9);
+    }
+
+    #[test]
+    fn candidate_errors_are_descriptive() {
+        let engine = Engine::new();
+        let space = Space::new().tech(["pcm"]).capacity_mb([2]).normalized().unwrap();
+        let e = space.candidate(&engine, &space.coords(0)).unwrap_err().to_string();
+        assert!(e.contains("unknown technology"), "{e}");
+        let mixed = Space::new()
+            .tech(["sram"])
+            .capacity_mb([2])
+            .spec_axis("mtj.tau0", [1e-9])
+            .normalized()
+            .unwrap();
+        let e = mixed.candidate(&engine, &mixed.coords(0)).unwrap_err().to_string();
+        assert!(e.contains("does not apply"), "{e}");
+        assert!(space.describe(&space.coords(0)).contains("tech=pcm"));
+    }
+
+    #[test]
+    fn space_entries_parse_the_grammar() {
+        let entries = vec![
+            ("capacity_mb".to_string(), "1, 2, 4".to_string()),
+            ("iso".to_string(), "area".to_string()),
+            ("mtj.tau0".to_string(), "1e-9, 2e-9".to_string()),
+            ("tech".to_string(), "stt, sot".to_string()),
+            ("workload".to_string(), "alexnet-i, hpcg-s".to_string()),
+        ];
+        let s = Space::from_entries(&entries, None).unwrap();
+        assert_eq!(s.iso, IsoMode::Area);
+        assert_eq!(s.size(), 3 * 2 * 2 * 2);
+        let bad = vec![("nodes".to_string(), "7".to_string())];
+        let e = Space::from_entries(&bad, None).unwrap_err().to_string();
+        assert!(e.contains("unknown key"), "{e}");
+        let bad = vec![("mtj.thickness".to_string(), "1".to_string())];
+        let e = Space::from_entries(&bad, None).unwrap_err().to_string();
+        assert!(e.contains("unknown spec field"), "{e}");
+        // Base tech from a sharing [tech] section fills the default axis.
+        let entries = vec![("capacity_mb".to_string(), "2".to_string())];
+        let s = Space::from_entries(&entries, Some("my_reram")).unwrap();
+        let tech_axis = s.axes.iter().find(|a| matches!(a, Axis::Tech(_))).unwrap();
+        assert_eq!(tech_axis.value_label(0), "my_reram");
+    }
+}

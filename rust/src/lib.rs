@@ -27,18 +27,23 @@
 //!    technologies loaded from descriptor files) and a typed
 //!    [`Query`](engine::Query) → [`Evaluation`](engine::Evaluation) API
 //!    over a per-stage memoized pipeline.
-//! 7. [`experiments`] — one generator per paper table/figure, each a thin
+//! 7. [`explore`] — Pareto design-space exploration: a parameter-space
+//!    DSL over technology descriptors, grid/random/adaptive search
+//!    through the engine's batch entrypoint, exact nondominated
+//!    frontiers with knee-point selection.
+//! 8. [`experiments`] — one generator per paper table/figure, each a thin
 //!    parameterized consumer of the engine.
-//! 8. [`coordinator`] — orchestration: experiment runner, CSV persistence,
+//! 9. [`coordinator`] — orchestration: experiment runner, CSV persistence,
 //!    run manifest with per-experiment engine-cache accounting.
-//! 9. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas workloads
-//!    (build-time Python; never on the analysis hot path).
+//! 10. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//!     workloads (build-time Python; never on the analysis hot path).
 
 pub mod analysis;
 pub mod coordinator;
 pub mod device;
 pub mod engine;
 pub mod experiments;
+pub mod explore;
 pub mod gpusim;
 pub mod nvsim;
 pub mod runtime;

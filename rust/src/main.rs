@@ -4,6 +4,7 @@
 //!   list                      list all experiments and their accepted params
 //!   experiment <id> [..]      run specific experiments (table1..fig13)
 //!   all                       run the whole registry, write the results dir
+//!   explore                   Pareto design-space exploration (see below)
 //!   bitcells                  print the device-level characterization sweeps
 //!   tune --tech T --cap MB    EDAP-tune one cache and print its design
 //!   profile [--l2 MB]         print the workload suite's memory statistics
@@ -12,23 +13,44 @@
 //! Global options:
 //!   --results-dir DIR         where CSVs + manifest land (default results/)
 //!   --tech-file F[,F..]       register custom technology descriptors
+//!   --seed N                  base seed for every stochastic component
 //!
 //! Experiment params (see `repro list` for which experiment takes what):
 //!   --networks a,b            restrict network-driven experiments
 //!   --capacities 1,2,4        capacity grid in MB
 //!   --batches 1,8,64          batch-size grid (fig6)
+//!
+//! Explore options (EXPERIMENTS.md §"Design-space exploration"):
+//!   --space FILE              `.tech` file with a [space] section
+//!   --tech a,b  --capacities 1,2  --batches 4,64  --workloads alexnet-i
+//!                             declare axes inline instead of a file
+//!   --spec "mtj.tau0=1e-9,2e-9;nv.i_write=1e-4,2e-4"
+//!                             spec-override axes (';'-separated)
+//!   --iso-area                interpret capacities as SRAM footprints
+//!   --objectives edp,area     frontier objectives (edp, energy, latency,
+//!                             area, capacity)
+//!   --strategy grid|random|adaptive   search strategy (default grid)
+//!   --budget N                max full evaluations (default 256)
 
-use deepnvm::coordinator::{run_all, run_one, RunnerConfig};
+use deepnvm::coordinator::{persist_explore, run_all, run_one, RunnerConfig};
 use deepnvm::engine::Engine;
 use deepnvm::experiments::{registry, Params};
+use deepnvm::explore::space::parse_workload;
+use deepnvm::explore::{Objective, SearchConfig, Space, Strategy};
 use deepnvm::runtime::{Runtime, TensorF32};
 use deepnvm::util::cli::Args;
+use deepnvm::util::rng;
 use deepnvm::util::table::{fnum, Table};
 use deepnvm::util::units::{to_mm2, to_mw, to_nj, to_ns, to_ps, MB};
 use deepnvm::workloads::profiler::profile_suite;
 
 fn main() {
     let args = Args::from_env();
+    // Install the global --seed before anything draws from it.
+    if let Err(e) = args.apply_global_seed() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
     let engine = match engine_from(&args) {
         Ok(e) => e,
         Err(e) => {
@@ -40,6 +62,7 @@ fn main() {
         Some("list") => cmd_list(),
         Some("experiment") => cmd_experiment(engine, &args),
         Some("all") => cmd_all(engine, &args),
+        Some("explore") => cmd_explore(engine, &args),
         Some("bitcells") => cmd_bitcells(engine, &args),
         Some("tune") => cmd_tune(engine, &args),
         Some("profile") => cmd_profile(&args),
@@ -60,12 +83,14 @@ fn main() {
 fn usage() {
     println!(
         "repro — DeepNVM++ reproduction\n\
-         usage: repro <list|experiment <id..>|all|bitcells|tune|profile|runtime> [options]\n\
+         usage: repro <list|experiment <id..>|all|explore|bitcells|tune|profile|runtime> [options]\n\
          \n\
          examples:\n\
            repro experiment table2 fig5\n\
            repro experiment fig7 --networks resnet18,vgg16 --capacities 4,8,16\n\
            repro all --results-dir results/\n\
+           repro explore --tech stt,sot --capacities 1,2,4,8 --objectives edp,area\n\
+           repro explore --space relaxed_stt.tech --strategy adaptive --budget 32 --seed 7\n\
            repro tune --tech sot --cap 10\n\
            repro tune --tech-file my_mram.tech --tech my_mram --cap 4\n\
            repro profile --l2 7\n\
@@ -158,6 +183,114 @@ fn cmd_all(engine: &Engine, args: &Args) -> i32 {
          and per-experiment cache accounting)",
         cfg.results_dir.display()
     );
+    0
+}
+
+/// Build the explore space: `--space FILE` (a `.tech` file with a
+/// `[space]` section), or inline axis flags, or — with neither — the
+/// default space (built-in technologies × 1/2/4/8 MB × AlexNet-I).
+fn explore_space_from(engine: &Engine, args: &Args) -> Result<Space, String> {
+    if let Some(path) = args.get("space") {
+        // Axes come from the file; silently ignoring inline axis flags
+        // would explore a different space than the user asked for.
+        for flag in ["tech", "capacities", "batches", "workloads", "spec", "iso-area"] {
+            if args.get(flag).is_some() {
+                return Err(format!(
+                    "--{flag} conflicts with --space {path} (declare axes in the file's \
+                     [space] section instead)"
+                ));
+            }
+        }
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        return Space::from_descriptor(engine, &text).map_err(|e| format!("{path}: {e}"));
+    }
+    let mut space = Space::new();
+    if let Some(techs) = args.get_list("tech") {
+        space = space.tech(techs);
+    }
+    if let Some(caps) = args.get_parse_list::<u64>("capacities")? {
+        space = space.capacity_mb(caps);
+    }
+    if let Some(batches) = args.get_parse_list::<u64>("batches")? {
+        space = space.batch(batches);
+    }
+    if let Some(names) = args.get_list("workloads") {
+        let mut workloads = Vec::new();
+        for name in &names {
+            workloads.push(parse_workload(name).map_err(|e| e.to_string())?);
+        }
+        space = space.workload(workloads);
+    }
+    if let Some(spec) = args.get("spec") {
+        for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (field, vals) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--spec: expected field=v1,v2,... in {part:?}"))?;
+            let mut values = Vec::new();
+            for v in vals.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                values.push(
+                    v.parse::<f64>()
+                        .map_err(|_| format!("--spec {field}: invalid number {v:?}"))?,
+                );
+            }
+            space = space.spec_axis(field.trim(), values);
+        }
+    }
+    if args.flag("iso-area") {
+        space = space.iso_area();
+    }
+    Ok(space)
+}
+
+fn cmd_explore(engine: &Engine, args: &Args) -> i32 {
+    let space = match explore_space_from(engine, args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("explore: {e}");
+            return 2;
+        }
+    };
+    let objectives = match Objective::parse_list(args.get("objectives").unwrap_or("edp,area")) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("explore: {e}");
+            return 2;
+        }
+    };
+    let strategy = match Strategy::parse(args.get("strategy").unwrap_or("grid")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("explore: {e}");
+            return 2;
+        }
+    };
+    let budget = match args.get_parse("budget", 256usize) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = SearchConfig { strategy, budget, seed: rng::global_seed() };
+    let start = std::time::Instant::now();
+    let result = match deepnvm::explore::run(engine, &space, &objectives, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("explore: {e}");
+            return 1;
+        }
+    };
+    let seconds = start.elapsed().as_secs_f64();
+    print!("{}", result.render());
+    let files = persist_explore(&result, seconds, &runner_cfg(args));
+    for f in &files {
+        println!("  wrote {}", f.display());
+    }
+    if result.outcome.evaluated.is_empty() {
+        eprintln!("explore: no candidate evaluated successfully");
+        return 1;
+    }
     0
 }
 

@@ -1,0 +1,78 @@
+//! Shared harness for the custom (non-libtest) bench targets.
+//!
+//! Each bench binary (`benches/*.rs`, `harness = false`) drives this
+//! harness: timed closures print human-readable per-iteration times and
+//! are also recorded to a machine-readable JSON file (flat name →
+//! seconds/iter), so every CI run appends a point to the perf trajectory
+//! (`BENCH_hotpath.json`, `BENCH_engine.json`, …).
+
+use std::time::Instant;
+
+/// Accumulates named timing records and writes them as JSON.
+#[derive(Debug, Default)]
+pub struct BenchHarness {
+    records: Vec<(String, f64)>,
+}
+
+impl BenchHarness {
+    pub fn new() -> Self {
+        BenchHarness { records: Vec::new() }
+    }
+
+    /// Time `f` over `iters` iterations (after one warmup call), print
+    /// the per-iteration time, record it, and return it in seconds.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, iters: u32, mut f: F) -> f64 {
+        // Warmup.
+        f();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        let unit = if per >= 1.0 {
+            format!("{per:.2} s")
+        } else if per >= 1e-3 {
+            format!("{:.2} ms", per * 1e3)
+        } else if per >= 1e-6 {
+            format!("{:.2} µs", per * 1e6)
+        } else {
+            format!("{:.0} ns", per * 1e9)
+        };
+        println!("{name:<52} {unit:>12}/iter  ({iters} iters)");
+        self.records.push((name.to_string(), per));
+        per
+    }
+
+    /// Write the JSON record (flat name → seconds/iter) to
+    /// `default_path`, or to the path named by the `env_override`
+    /// environment variable when set.
+    pub fn write_json(&self, env_override: &str, default_path: &str) {
+        let path = std::env::var(env_override).unwrap_or_else(|_| default_path.to_string());
+        let mut s = String::from("{\n");
+        for (i, (name, secs)) in self.records.iter().enumerate() {
+            let comma = if i + 1 < self.records.len() { "," } else { "" };
+            s.push_str(&format!("  \"{name}\": {secs:.9}{comma}\n"));
+        }
+        s.push_str("}\n");
+        match std::fs::write(&path, s) {
+            Ok(()) => println!("\nrecorded {} entries to {path}", self.records.len()),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_and_returns_per_iteration_time() {
+        let mut h = BenchHarness::new();
+        let mut calls = 0u32;
+        let per = h.bench("noop", 4, || calls += 1);
+        assert_eq!(calls, 5, "warmup + iters");
+        assert!(per >= 0.0);
+        assert_eq!(h.records.len(), 1);
+        assert_eq!(h.records[0].0, "noop");
+    }
+}

@@ -96,6 +96,25 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Parse the global `--seed` option and install it as the process-wide
+    /// RNG base seed (see [`super::rng::set_global_seed`]); sampling
+    /// components read it as their default seed (random/adaptive search
+    /// via `SearchConfig`), making a run reproducible from the CLI.
+    /// Returns the installed seed (`None` when the flag is absent; the
+    /// default stays in effect).
+    pub fn apply_global_seed(&self) -> Result<Option<u64>, String> {
+        match self.get("seed") {
+            None => Ok(None),
+            Some(v) => {
+                let seed = v
+                    .parse::<u64>()
+                    .map_err(|_| format!("invalid value for --seed: {v:?}"))?;
+                super::rng::set_global_seed(seed);
+                Ok(Some(seed))
+            }
+        }
+    }
+
     /// Parse an option as `T`, falling back to `default` when absent.
     /// Returns an error string when present-but-unparsable (caller decides
     /// whether to abort — experiments abort, the REPL reports).
@@ -153,6 +172,23 @@ mod tests {
         assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
         let bad = parse(&["x", "--n", "twelve"]);
         assert!(bad.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn global_seed_plumbs_from_the_cli() {
+        let _guard = crate::util::rng::SEED_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // Absent flag: no change, no error.
+        assert_eq!(parse(&["x"]).apply_global_seed().unwrap(), None);
+        // Unparsable: a clear error, seed untouched.
+        let before = crate::util::rng::global_seed();
+        let err = parse(&["x", "--seed", "lots"]).apply_global_seed().unwrap_err();
+        assert!(err.contains("lots"), "{err}");
+        assert_eq!(crate::util::rng::global_seed(), before);
+        // Valid: installed process-wide. (Restore afterwards — tests share
+        // the process.)
+        assert_eq!(parse(&["x", "--seed", "1234"]).apply_global_seed().unwrap(), Some(1234));
+        assert_eq!(crate::util::rng::global_seed(), 1234);
+        crate::util::rng::set_global_seed(before);
     }
 
     #[test]

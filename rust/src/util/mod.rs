@@ -1,11 +1,12 @@
 //! Shared utilities: SI units, deterministic PRNG, statistics, table/CSV
-//! rendering, a minimal CLI parser, a scoped thread-pool map, and a small
-//! property-testing harness.
+//! rendering, a minimal CLI parser, a scoped thread-pool map, a small
+//! property-testing harness, and the shared bench-target harness.
 //!
 //! Everything here is dependency-free by design: the offline registry
 //! snapshot only carries the `xla` crate's closure, so the crate hand-rolls
 //! what `rand`/`rayon`/`clap`/`serde`/`proptest` would normally provide.
 
+pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod csv;

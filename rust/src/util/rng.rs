@@ -5,6 +5,34 @@
 //! Monte-Carlo device-corner sampling — must be reproducible run-to-run, so
 //! a tiny seeded generator is the right tool anyway.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The process-wide base seed when the CLI's global `--seed` was never
+/// given (an arbitrary odd constant; stable across releases so default
+/// runs reproduce).
+pub const DEFAULT_GLOBAL_SEED: u64 = 0xDEE9_4E56_0B5E_55ED;
+
+static GLOBAL_SEED: AtomicU64 = AtomicU64::new(DEFAULT_GLOBAL_SEED);
+
+/// Install the process-wide base seed (the CLI's global `--seed`).
+/// Components that sample — today the explore search via
+/// [`SearchConfig::default`](crate::explore::SearchConfig) — read it as
+/// their default seed, so a whole run reproduces from this one number;
+/// both run manifests record it.
+pub fn set_global_seed(seed: u64) {
+    GLOBAL_SEED.store(seed, Ordering::Relaxed);
+}
+
+/// The process-wide base seed currently installed.
+pub fn global_seed() -> u64 {
+    GLOBAL_SEED.load(Ordering::Relaxed)
+}
+
+/// Serializes tests that touch the process-global seed (tests share one
+/// process; an unsynchronized `set_global_seed` would race readers).
+#[cfg(test)]
+pub(crate) static SEED_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// xorshift64* generator (Vigna 2016). Passes BigCrush for our purposes;
 /// never use for cryptography.
 #[derive(Debug, Clone)]
@@ -127,5 +155,16 @@ mod tests {
     fn zero_seed_is_remapped() {
         let mut r = Rng::new(0);
         assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn global_seed_is_process_wide_and_restorable() {
+        let _guard = SEED_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let before = global_seed();
+        set_global_seed(4242);
+        assert_eq!(global_seed(), 4242);
+        set_global_seed(before);
+        assert_eq!(global_seed(), before);
+        assert_ne!(DEFAULT_GLOBAL_SEED, 0, "default must not hit the xorshift fixed point");
     }
 }

@@ -1,0 +1,338 @@
+//! Integration tests for `deepnvm::explore`:
+//!
+//! 1. **Pareto correctness as a property** — every frontier the engine
+//!    reports is verified nondominated against a brute-force recompute,
+//!    over randomized point clouds (ties, duplicates, 2–4 objectives).
+//! 2. **Golden bit-identity** — grid search over a singleton space
+//!    reproduces the pinned golden `Evaluation` bit for bit: the explore
+//!    layer must add zero numeric perturbation on top of the engine.
+//! 3. **Determinism** — random and adaptive strategies replay exactly
+//!    under a fixed seed.
+//! 4. **Acceptance** — a ≥3-axis grid returns a frontier where every
+//!    point is nondominated among everything evaluated, and `[space]`
+//!    descriptor text drives the same machinery end to end.
+
+use deepnvm::device::bitcell::BitcellKind;
+use deepnvm::engine::{Engine, Query};
+use deepnvm::explore::pareto::{dominates, frontier, knee, ranks};
+use deepnvm::explore::{self, Objective, SearchConfig, Space, Strategy};
+use deepnvm::nvsim::optimizer;
+use deepnvm::util::check::forall_explain;
+use deepnvm::util::rng::Rng;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::memstats::Phase;
+use deepnvm::workloads::profiler::Workload;
+
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+}
+
+const ALEXNET_I: Workload = Workload::Dnn { index: 0, phase: Phase::Inference };
+
+/// Brute-force nondominated set: point i survives iff no j dominates it.
+fn brute_force_frontier(costs: &[Vec<f64>]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for i in 0..costs.len() {
+        let mut dominated = false;
+        for (j, c) in costs.iter().enumerate() {
+            if j != i && dominates(c, &costs[i]) {
+                dominated = true;
+                break;
+            }
+        }
+        if !dominated {
+            out.push(i);
+        }
+    }
+    out
+}
+
+#[test]
+fn frontier_matches_brute_force_recompute() {
+    forall_explain(
+        0xF0A7,
+        200,
+        |rng: &mut Rng| {
+            let dims = rng.usize_in(2, 5);
+            let n = rng.usize_in(1, 33);
+            // Small discrete value grid so ties and duplicates are common.
+            let costs: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..dims).map(|_| rng.gen_range(6) as f64).collect()).collect();
+            costs
+        },
+        |costs| {
+            let fast = frontier(costs);
+            let slow = brute_force_frontier(costs);
+            if fast != slow {
+                return Err(format!("frontier {fast:?} != brute force {slow:?}"));
+            }
+            // Every non-frontier point is dominated by some frontier point
+            // (dominance is a strict partial order on a finite set, so
+            // chains terminate on the frontier).
+            for i in 0..costs.len() {
+                if fast.contains(&i) {
+                    continue;
+                }
+                if !fast.iter().any(|&f| dominates(&costs[f], &costs[i])) {
+                    return Err(format!("point {i} not dominated by any frontier point"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dominance_ranks_peel_consistently() {
+    forall_explain(
+        0xBEEF,
+        100,
+        |rng: &mut Rng| {
+            let dims = rng.usize_in(2, 4);
+            let n = rng.usize_in(1, 25);
+            let costs: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..dims).map(|_| rng.gen_range(5) as f64).collect()).collect();
+            costs
+        },
+        |costs| {
+            let r = ranks(costs);
+            let front = frontier(costs);
+            // Rank 0 is exactly the frontier.
+            let rank0: Vec<usize> = (0..costs.len()).filter(|&i| r[i] == 0).collect();
+            if rank0 != front {
+                return Err(format!("rank-0 {rank0:?} != frontier {front:?}"));
+            }
+            // Every rank-r>0 point is dominated by some rank-(r-1) point.
+            for i in 0..costs.len() {
+                if r[i] == 0 {
+                    continue;
+                }
+                let ok = (0..costs.len())
+                    .any(|j| r[j] == r[i] - 1 && dominates(&costs[j], &costs[i]));
+                if !ok {
+                    return Err(format!(
+                        "point {i} (rank {}) has no rank-{} dominator",
+                        r[i],
+                        r[i] - 1
+                    ));
+                }
+            }
+            // The knee, when present, sits on the frontier.
+            if let Some(k) = knee(costs, &front) {
+                if !front.contains(&k) {
+                    return Err(format!("knee {k} not on frontier {front:?}"));
+                }
+            } else if !front.is_empty() {
+                return Err("nonempty frontier without a knee".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Golden: a singleton space (every axis one value) evaluated via grid
+/// search is bit-identical to the direct Algorithm 1 walk and the direct
+/// engine query — the same pinned design points as `tests/golden.rs`.
+#[test]
+fn grid_singleton_space_is_bit_identical_to_golden() {
+    let engine = Engine::shared();
+    for (kind, mb) in [(BitcellKind::SttMram, 7u64), (BitcellKind::SotMram, 3u64)] {
+        let tech = kind.tech_id();
+        let space = Space::new().tech([tech]).capacity_mb([mb]).workload([ALEXNET_I]);
+        let all_objectives = [
+            Objective::Edp,
+            Objective::Energy,
+            Objective::Latency,
+            Objective::Area,
+            Objective::Capacity,
+        ];
+        let result =
+            explore::run(engine, &space, &all_objectives, &SearchConfig::default()).unwrap();
+        assert_eq!(result.outcome.evaluated.len(), 1, "{tech} singleton");
+        assert_eq!(result.frontier, vec![0]);
+        assert_eq!(result.knee, Some(0));
+        let what = format!("{tech} {mb}MB");
+        let via_explore = &result.outcome.evaluated[0].eval;
+
+        // vs the direct (unmemoized) Algorithm 1 walk.
+        let direct = optimizer::explore(kind, mb * MB);
+        assert_eq!(direct.org, via_explore.design.org, "{what} org");
+        assert_eq!(direct.access, via_explore.design.access, "{what} access");
+        assert_bits(direct.ppa.read_latency, via_explore.design.ppa.read_latency, &what);
+        assert_bits(direct.ppa.write_energy, via_explore.design.ppa.write_energy, &what);
+        assert_bits(direct.ppa.leakage_power, via_explore.design.ppa.leakage_power, &what);
+        assert_bits(direct.ppa.area, via_explore.design.ppa.area, &what);
+
+        // vs the equivalent direct engine query, through to the roll-up.
+        let q = Query::tune(tech, mb * MB).with_workload(ALEXNET_I);
+        let via_query = engine.evaluate(&q).unwrap();
+        let a = via_query.workload.as_ref().unwrap();
+        let b = via_explore.workload.as_ref().unwrap();
+        assert_bits(a.rollup.edp_with_dram(), b.rollup.edp_with_dram(), &what);
+        assert_bits(a.rollup.total_energy(), b.rollup.total_energy(), &what);
+        assert_bits(a.rollup.total_time(), b.rollup.total_time(), &what);
+
+        // And the objective vector carries exactly those numbers.
+        let objs = &result.outcome.evaluated[0].objectives;
+        assert_bits(objs[0], a.rollup.edp_with_dram(), &what);
+        assert_bits(objs[3], direct.ppa.area, &what);
+        assert_bits(objs[4], (mb * MB) as f64, &what);
+    }
+}
+
+/// Acceptance: grid over a 3-axis space — every reported frontier point
+/// verified nondominated under brute-force recompute of the full
+/// evaluated set.
+#[test]
+fn three_axis_grid_frontier_is_verified_nondominated() {
+    let engine = Engine::shared();
+    let space = Space::new().tech(["stt", "sot"]).capacity_mb([1, 2, 4]).batch([4, 64]);
+    let objectives = [Objective::Edp, Objective::Area, Objective::Capacity];
+    let result = explore::run(engine, &space, &objectives, &SearchConfig::default()).unwrap();
+    assert_eq!(result.outcome.space_size, 12);
+    assert_eq!(result.outcome.evaluated.len(), 12, "{:?}", result.outcome.errors);
+    assert!(!result.outcome.subsampled);
+
+    // Brute-force recompute of the frontier from the raw objectives.
+    let costs: Vec<Vec<f64>> = result
+        .outcome
+        .evaluated
+        .iter()
+        .map(|x| {
+            objectives
+                .iter()
+                .zip(&x.objectives)
+                .map(|(o, &v)| if o.minimize() { v } else { -v })
+                .collect()
+        })
+        .collect();
+    assert_eq!(result.frontier, brute_force_frontier(&costs), "frontier is exact");
+    assert!(!result.frontier.is_empty());
+    let k = result.knee.expect("nonempty frontier has a knee");
+    assert!(result.frontier.contains(&k));
+
+    // The CSVs cover every candidate and agree on the frontier size.
+    assert_eq!(result.candidates_csv().len(), 12);
+    assert_eq!(result.frontier_csv().len(), result.frontier.len());
+}
+
+#[test]
+fn random_and_adaptive_replay_exactly_under_a_seed() {
+    let engine = Engine::shared();
+    let space = Space::new()
+        .tech(["sram", "stt", "sot"])
+        .capacity_mb([1, 2, 3, 4])
+        .batch([4, 8, 16, 32]);
+    for strategy in [Strategy::Random, Strategy::Adaptive] {
+        let cfg = SearchConfig { strategy, budget: 6, seed: 1234 };
+        let a = explore::run(engine, &space, &[Objective::Edp, Objective::Area], &cfg).unwrap();
+        let b = explore::run(engine, &space, &[Objective::Edp, Objective::Area], &cfg).unwrap();
+        let coords_a: Vec<Vec<usize>> =
+            a.outcome.evaluated.iter().map(|x| x.candidate.coords.clone()).collect();
+        let coords_b: Vec<Vec<usize>> =
+            b.outcome.evaluated.iter().map(|x| x.candidate.coords.clone()).collect();
+        assert_eq!(coords_a, coords_b, "{strategy:?} replays the same candidates");
+        for (x, y) in a.outcome.evaluated.iter().zip(&b.outcome.evaluated) {
+            for (va, vb) in x.objectives.iter().zip(&y.objectives) {
+                assert_bits(*va, *vb, "replayed objective");
+            }
+        }
+        assert_eq!(a.frontier, b.frontier);
+        assert_eq!(a.knee, b.knee);
+        // Budget respected; candidates distinct.
+        assert!(a.outcome.evaluated.len() <= 6, "{strategy:?} budget");
+        let mut seen = coords_a.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), coords_a.len(), "{strategy:?} draws distinct candidates");
+        // A different seed draws a different candidate set.
+        let other = SearchConfig { strategy, budget: 6, seed: 99 };
+        let c = explore::run(engine, &space, &[Objective::Edp, Objective::Area], &other).unwrap();
+        let coords_c: Vec<Vec<usize>> =
+            c.outcome.evaluated.iter().map(|x| x.candidate.coords.clone()).collect();
+        if strategy == Strategy::Random {
+            assert_ne!(coords_a, coords_c, "seed changes the random draw");
+        }
+    }
+    // Adaptive over this 48-point space with budget 6 screens a 12-point
+    // pool at the tune-only fidelity.
+    let cfg = SearchConfig { strategy: Strategy::Adaptive, budget: 6, seed: 1234 };
+    let r = explore::run(engine, &space, &[Objective::Edp], &cfg).unwrap();
+    assert_eq!(r.outcome.screened, 12);
+    assert!(r.outcome.evaluated.len() <= 6);
+}
+
+/// `[space]` descriptor text drives the full pipeline: a custom
+/// technology plus a space over it, in one file, end to end.
+#[test]
+fn space_descriptor_runs_end_to_end() {
+    const TECH_WITH_SPACE: &str = r#"
+        [tech]
+        id = "reram_explore"
+        name = "ReRAM-explore"
+        class = "mram"
+        read_port = "shared"
+        [mtj]
+        r_p = 3000
+        r_ap = 9000
+        ic_set = 25e-6
+        ic_reset = 20e-6
+        tau0 = 0.8e-9
+        [device]
+        c_bitline = 30e-15
+        v_read = 0.18
+        sense_overhead = 1.8
+        write_overhead_set = 1.7
+        write_overhead_reset = 2.1
+        height_cpp = 1.05
+        [nv]
+        cell_area_mult = 1.9
+        cell_aspect = 1.3
+        wd_area_per_amp = 1.5e-7
+        wd_leak_density = 1.6e6
+        i_write = 120e-6
+        csa_overhead = 0.4e-12
+
+        [space]
+        capacity_mb = 1, 2
+        mtj.ic_set = 25e-6, 20e-6
+        workload = alexnet-i
+    "#;
+    let engine = Engine::new();
+    let space = Space::from_descriptor(&engine, TECH_WITH_SPACE).unwrap();
+    assert!(engine.tech("reram_explore").is_some(), "[tech] registered alongside [space]");
+    assert_eq!(space.size(), 4, "capacity × ic_set (tech axis defaulted from the file)");
+    let result =
+        explore::run(&engine, &space, &[Objective::Edp, Objective::Area], &SearchConfig::default())
+            .unwrap();
+    assert_eq!(result.outcome.evaluated.len(), 4, "{:?}", result.outcome.errors);
+    // Both derived descriptors registered; the base-valued point derives too.
+    assert!(engine.tech("reram_explore+mtj.ic_set=0.000025").is_some()
+        || engine.tech("reram_explore+mtj.ic_set=2.5e-5").is_some());
+    assert!(!result.frontier.is_empty());
+    // Soft errors, not aborts, for points that can't materialize: an
+    // mtj axis over a space whose tech axis includes SRAM.
+    let mixed = Space::new()
+        .tech(["sram", "stt"])
+        .capacity_mb([2])
+        .spec_axis("mtj.tau0", [1e-9])
+        .workload([ALEXNET_I]);
+    let r = explore::run(&engine, &mixed, &[Objective::Edp], &SearchConfig::default()).unwrap();
+    assert_eq!(r.outcome.evaluated.len(), 1, "stt side evaluates");
+    assert_eq!(r.outcome.errors.len(), 1, "sram side skipped with an explanation");
+    assert!(r.outcome.errors[0].1.contains("does not apply"), "{:?}", r.outcome.errors);
+
+    // A pure-[space] file works against already-registered technologies…
+    let pure = "[space]\ntech = stt\ncapacity_mb = 2, 4\n";
+    let s = Space::from_descriptor(&engine, pure).unwrap();
+    assert_eq!(s.size(), 2);
+    // …but a misspelled [tech] section fails loudly instead of silently
+    // exploring the built-in defaults.
+    let typo = "[teck]\nid = \"x\"\n\n[space]\ncapacity_mb = 2\n";
+    let e = Space::from_descriptor(&engine, typo).unwrap_err().to_string();
+    assert!(e.contains("[teck]"), "{e}");
+    // And a file with no [space] at all is an explicit error.
+    let none = "[tech]\nid = \"y\"\nclass = \"sram\"\n";
+    let e = Space::from_descriptor(&engine, none).unwrap_err().to_string();
+    assert!(e.contains("no [space] section"), "{e}");
+}

@@ -25,11 +25,11 @@ use deepnvm::workloads::profiler::Workload;
 
 /// A mixed batch: 3 technologies × 4 capacities, AlexNet inference.
 fn query_set() -> Vec<Query> {
-    let w = Workload::Dnn { index: 0, phase: Phase::Inference };
+    let w = Workload::net("alexnet", Phase::Inference);
     let mut out = Vec::new();
     for tech in ["sram", "stt", "sot"] {
         for mb in [1u64, 2, 3, 4] {
-            out.push(Query::tune(tech, mb * MB).with_workload(w));
+            out.push(Query::tune(tech, mb * MB).with_workload(w.clone()));
         }
     }
     out

@@ -21,15 +21,13 @@ use deepnvm::analysis::evaluate;
 use deepnvm::device::bitcell::BitcellKind;
 use deepnvm::device::characterize::characterize_kind;
 use deepnvm::gpusim::cache::Cache;
-use deepnvm::gpusim::{
-    capacity_sweep, dnn_trace, fig7_capacities, simulate, Access, GpuConfig,
-};
+use deepnvm::gpusim::{capacity_sweep, fig7_capacities, net_trace, simulate, Access, GpuConfig};
 use deepnvm::nvsim::optimizer::{explore, tuned_cache};
 use deepnvm::util::bench::BenchHarness;
 use deepnvm::util::pool::par_map;
 use deepnvm::util::rng::Rng;
 use deepnvm::util::units::MB;
-use deepnvm::workloads::memstats::{dnn_stats, Phase};
+use deepnvm::workloads::memstats::{net_stats, Phase};
 use deepnvm::workloads::nets;
 use deepnvm::workloads::profiler::{profile_suite, PROFILE_L2};
 
@@ -51,10 +49,10 @@ fn main() {
     });
 
     h.bench("gpusim: trace generation (AlexNet b4, streamed)", 5, || {
-        black_box(dnn_trace(&nets::alexnet(), 4).count());
+        black_box(net_trace(&nets::alexnet(), 4).count());
     });
 
-    let trace: Vec<Access> = dnn_trace(&nets::alexnet(), 4).collect();
+    let trace: Vec<Access> = net_trace(&nets::alexnet(), 4).collect();
     println!("alexnet batch-4 trace: {} accesses", trace.len());
     h.bench("gpusim: AlexNet trace through 3MB L2", 3, || {
         black_box(simulate(trace.iter().copied(), &GpuConfig::gtx_1080_ti()));
@@ -85,7 +83,7 @@ fn main() {
         black_box(capacity_sweep(trace.iter().copied(), &fig7_capacities()));
     });
     let fused_per = h.bench("gpusim: Fig7 sweep, streamed gen + single pass", 3, || {
-        black_box(capacity_sweep(dnn_trace(&nets::alexnet(), 4), &fig7_capacities()));
+        black_box(capacity_sweep(net_trace(&nets::alexnet(), 4), &fig7_capacities()));
     });
     println!(
         "  -> single-pass speedup: {:.2}x vs serial replay, {:.2}x vs par_map replay (seed wall-clock); fused gen+sweep {:.2}x vs serial replay",
@@ -103,7 +101,7 @@ fn main() {
     });
 
     h.bench("workloads: VGG-16 training memstats", 50, || {
-        black_box(dnn_stats(&nets::vgg16(), Phase::Training, 64, 3 * MB));
+        black_box(net_stats(&nets::vgg16(), Phase::Training, 64, 3 * MB));
     });
 
     let ppa = tuned_cache(BitcellKind::SttMram, 3 * MB).ppa;

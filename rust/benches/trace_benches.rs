@@ -1,0 +1,62 @@
+//! Trace-compiler throughput benchmarks (custom harness; §Perf record).
+//!
+//! The workload-IR redesign turned trace generation into per-op lowering
+//! rules, so this target tracks compilation throughput *per op mix*: the
+//! im2col-heavy CNN path (AlexNet), the attention/scratch path
+//! (GPT-Block), and the gate-GEMM path (LSTM). Each workload is timed
+//! end-to-end through the streaming generator and reported both as
+//! seconds/iter and as a derived lines/sec throughput, alongside the
+//! memstats compiler on the same nets.
+//!
+//! Results print to stdout and land in `BENCH_trace.json` (override the
+//! path with `DEEPNVM_BENCH_TRACE_JSON`), extending the perf trajectory
+//! next to `BENCH_hotpath.json` / `BENCH_engine.json`.
+
+use std::hint::black_box;
+
+use deepnvm::gpusim::net_trace;
+use deepnvm::util::bench::BenchHarness;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::ir::NetIr;
+use deepnvm::workloads::memstats::{net_stats, Phase};
+use deepnvm::workloads::registry;
+
+/// The benched op mixes: (net, batch, mix tag).
+fn suite() -> Vec<(NetIr, u64, &'static str)> {
+    vec![
+        (registry::builtin_net("alexnet").unwrap(), 4, "cnn-im2col"),
+        (registry::gpt_block(), 4, "attention"),
+        (registry::lstm(), 4, "recurrent"),
+    ]
+}
+
+fn main() {
+    println!("== trace-compiler benchmarks ==");
+    let mut h = BenchHarness::new();
+
+    for (net, batch, mix) in suite() {
+        let lines = net_trace(&net, batch).count();
+        println!(
+            "{} b{batch}: {} accesses, {} ops ({} conv / {} fc / {} attention)",
+            net.id,
+            lines,
+            net.ops.len(),
+            net.conv_layers(),
+            net.fc_layers(),
+            net.attention_ops(),
+        );
+        let per = h.bench(&format!("trace: {} b{batch} compile ({mix})", net.id), 5, || {
+            black_box(net_trace(&net, batch).count());
+        });
+        let throughput = lines as f64 / per.max(1e-12);
+        h.record(&format!("trace: {} b{batch} lines/sec", net.id), throughput);
+        println!("  -> {:.2}M lines/sec", throughput / 1e6);
+
+        h.bench(&format!("memstats: {} b{batch} I+T", net.id), 50, || {
+            black_box(net_stats(&net, Phase::Inference, batch, 3 * MB));
+            black_box(net_stats(&net, Phase::Training, batch, 3 * MB));
+        });
+    }
+
+    h.write_json("DEEPNVM_BENCH_TRACE_JSON", "BENCH_trace.json");
+}

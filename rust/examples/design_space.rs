@@ -30,7 +30,7 @@ fn main() {
         .capacity_mb([2, 4, 8])
         .spec_axis("mtj.ic_set", [mtj.ic_set, 0.8 * mtj.ic_set, 0.65 * mtj.ic_set])
         .spec_axis("mtj.tau0", [mtj.tau0, 0.6 * mtj.tau0])
-        .workload([Workload::Dnn { index: 2, phase: Phase::Training }]); // VGG-16-T
+        .workload([Workload::net("vgg16", Phase::Training)]); // VGG-16-T
 
     println!("--- equivalent [space] section (save in a .tech file for `repro explore`) ---");
     println!("[space]");

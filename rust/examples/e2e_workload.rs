@@ -14,14 +14,14 @@
 
 use deepnvm::analysis::evaluate;
 use deepnvm::device::bitcell::BitcellKind;
-use deepnvm::gpusim::{capacity_sweep, dnn_trace};
+use deepnvm::gpusim::{capacity_sweep, net_trace};
 use deepnvm::nvsim::optimizer::tuned_cache;
 use deepnvm::runtime::{Runtime, TensorF32};
 use deepnvm::util::rng::Rng;
 use deepnvm::util::table::{fnum, Table};
 use deepnvm::util::units::MB;
-use deepnvm::workloads::dnn::{DnnBuilder, Shape};
-use deepnvm::workloads::memstats::{dnn_stats, Phase};
+use deepnvm::workloads::ir::{NetBuilder, Shape};
+use deepnvm::workloads::memstats::{net_stats, Phase};
 
 const BATCH: usize = 32; // must match aot.py --batch
 const IMAGE: usize = 16;
@@ -129,13 +129,13 @@ fn main() -> deepnvm::Result<()> {
     );
 
     // --- 3. Cross-layer analysis of this exact workload ---
-    let cnn = DnnBuilder::new("MiniCNN", 0.0, Shape::new(1, IMAGE as u64, IMAGE as u64))
+    let cnn = NetBuilder::new("mini_cnn", "MiniCNN", Shape::new(1, IMAGE as u64, IMAGE as u64))
         .conv("conv1", 8, 3, 1, 0)
         .conv("conv2", 16, 3, 1, 0)
         .pool("pool", 2, 2, 0)
         .fc("fc", CLASSES as u64)
         .build();
-    let stats = dnn_stats(&cnn, Phase::Training, BATCH as u64, 3 * MB);
+    let stats = net_stats(&cnn, Phase::Training, BATCH as u64, 3 * MB);
     println!(
         "\nMiniCNN-T memory statistics: {} L2 reads / {} writes (R/W {:.2})",
         stats.l2_reads,
@@ -145,7 +145,7 @@ fn main() -> deepnvm::Result<()> {
 
     // GPGPU-Sim substitute on the same network: the whole capacity sweep
     // is one pass over the streamed trace.
-    let sweep = capacity_sweep(dnn_trace(&cnn, BATCH as u64), &[7 * MB, 10 * MB]);
+    let sweep = capacity_sweep(net_trace(&cnn, BATCH as u64), &[7 * MB, 10 * MB]);
     for p in &sweep[1..] {
         println!(
             "  L2 {}MB: DRAM accesses {} ({:+.1}% vs 3MB)",

@@ -37,8 +37,8 @@ fn main() {
     println!("{}", t.render());
 
     // 2. Workload layer: profile AlexNet inference (batch 4, per paper).
-    let alexnet = Workload::Dnn { index: 0, phase: Phase::Inference };
-    let stats = profile(alexnet, 4, PROFILE_L2).stats;
+    let alexnet = Workload::net("alexnet", Phase::Inference);
+    let stats = profile(&alexnet, 4, PROFILE_L2).expect("alexnet is builtin").stats;
     println!(
         "AlexNet-I memory statistics: {} L2 reads, {} L2 writes (R/W {:.2})\n",
         stats.l2_reads,

@@ -26,11 +26,14 @@ pub fn batch_sweep(engine: &Engine, phase: Phase, batches: &[u64]) -> Vec<BatchP
         engine.tuned(TECH_STT, 3 * MB).expect("builtin").ppa,
         engine.tuned(TECH_SOT, 3 * MB).expect("builtin").ppa,
     ];
-    let alexnet = Workload::Dnn { index: 0, phase };
+    let alexnet = Workload::net("alexnet", phase);
     batches
         .iter()
         .map(|&batch| {
-            let stats = engine.profile(alexnet, batch, PROFILE_L2).stats;
+            let stats = engine
+                .profile(alexnet.clone(), batch, PROFILE_L2)
+                .expect("alexnet is builtin")
+                .stats;
             let e: Vec<f64> = caps
                 .iter()
                 .map(|c| evaluate(c, &stats).edp_with_dram())

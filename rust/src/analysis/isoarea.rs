@@ -41,9 +41,13 @@ pub fn iso_area(engine: &Engine) -> Vec<IsoAreaRow> {
     paper_suite()
         .into_iter()
         .map(|w| {
-            let p_sram = engine.profile_default(w, 3 * MB);
-            let p_stt = engine.profile_default(w, ISO_AREA_STT);
-            let p_sot = engine.profile_default(w, ISO_AREA_SOT);
+            let p_sram =
+                engine.profile_default(w.clone(), 3 * MB).expect("paper suite ids are builtin");
+            let p_stt = engine
+                .profile_default(w.clone(), ISO_AREA_STT)
+                .expect("paper suite ids are builtin");
+            let p_sot =
+                engine.profile_default(w, ISO_AREA_SOT).expect("paper suite ids are builtin");
             let raw = [
                 evaluate(&sram, &p_sram.stats),
                 evaluate(&stt, &p_stt.stats),

@@ -56,7 +56,7 @@ fn phase_workloads(phase: Phase) -> Vec<Workload> {
     paper_suite()
         .into_iter()
         .filter(|w| match w {
-            Workload::Dnn { phase: p, .. } => *p == phase,
+            Workload::Net { phase: p, .. } => *p == phase,
             // HPCG joins the inference chart (single-phase workload).
             Workload::Hpcg(_) => phase == Phase::Inference,
         })
@@ -76,8 +76,11 @@ pub fn scaling_study(engine: &Engine, phase: Phase, capacities_mb: &[u64]) -> Ve
         let mut energy = [Vec::new(), Vec::new()];
         let mut latency = [Vec::new(), Vec::new()];
         let mut edp = [Vec::new(), Vec::new()];
-        for &w in &workloads {
-            let stats = engine.profile_default(w, mb * MB).stats;
+        for w in &workloads {
+            let stats = engine
+                .profile_default(w.clone(), mb * MB)
+                .expect("paper suite ids are builtin")
+                .stats;
             let evals: Vec<_> = caps.iter().map(|c| evaluate(c, &stats)).collect();
             for t in 0..2 {
                 energy[t].push(evals[t + 1].total_energy() / evals[0].total_energy());

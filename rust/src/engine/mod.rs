@@ -1,26 +1,29 @@
-//! The DeepNVM++ query engine: an open technology registry plus a
-//! parameterized, memoized experiment pipeline.
+//! The DeepNVM++ query engine: open technology *and* workload registries
+//! plus a parameterized, memoized experiment pipeline.
 //!
 //! The paper's framework is a pipeline — bitcell characterization → EDAP
 //! cache tuning → workload profiling → cross-layer roll-up. [`Engine`]
 //! owns that pipeline as a *service*: scenarios are data ([`TechSpec`]
-//! descriptors + typed [`Query`] values), not code, and every stage is
-//! memoized per engine so `repro all` shares pipeline work across
-//! experiments instead of recomputing it per figure.
+//! descriptors + [`NetIr`] workload graphs + typed [`Query`] values), not
+//! code, and every stage is memoized per engine so `repro all` shares
+//! pipeline work across experiments instead of recomputing it per figure.
 //!
 //! * [`spec`] — the [`TechSpec`] technology descriptor (data, not enum),
 //!   with the paper's SRAM/STT/SOT as built-in instances.
-//! * [`descriptor`] — the TOML-like descriptor-file format: parse user
-//!   technology files, re-serialize specs (round-trip exact).
+//! * [`descriptor`] — the TOML-like `.tech` descriptor-file format.
+//! * The workload side mirrors it: a [`NetRegistry`] of [`NetIr`]
+//!   workload graphs (Table 3 CNNs + ViT/GPT/LSTM built in, user
+//!   workloads loaded from `.net` files via [`Engine::register_net_file`]).
 //! * [`query`] — the typed query API: [`Query`] → [`Evaluation`].
 //!
 //! Memoization is keyed by query stage — bitcell characterization (per
 //! technology), EDAP tuning (per technology × capacity), and workload
-//! profiling (per workload × batch × capacity) — with per-stage hit/miss
-//! counters. [`Engine::fork`] hands out a handle that shares the caches
-//! but counts its own traffic, which is how the experiment runner
-//! attributes exact per-experiment cache statistics even when experiments
-//! run in parallel.
+//! profiling (per workload key × batch × capacity; the workload key is
+//! open, so descriptor-registered nets memoize exactly like builtins) —
+//! with per-stage hit/miss counters. [`Engine::fork`] hands out a handle
+//! that shares the caches but counts its own traffic, which is how the
+//! experiment runner attributes exact per-experiment cache statistics
+//! even when experiments run in parallel.
 
 pub mod descriptor;
 pub mod query;
@@ -40,7 +43,12 @@ use crate::nvsim::optimizer::{explore_cell, TunedCache};
 use crate::util::err::msg;
 use crate::util::pool::par_map;
 use crate::util::units::MB;
+use crate::workloads::hpcg::HpcgSize;
+use crate::workloads::ir::NetIr;
+use crate::workloads::memstats::Phase;
+use crate::workloads::netdesc;
 use crate::workloads::profiler::{self, ProfiledWorkload, Workload};
+use crate::workloads::registry::NetRegistry;
 
 pub use crate::device::bitcell::NvCal;
 pub use query::{Evaluation, IsoMode, Query, WorkloadEval};
@@ -166,6 +174,8 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
 struct Core {
     /// Registered technologies, in registration order (built-ins first).
     registry: Mutex<Vec<Arc<TechSpec>>>,
+    /// Registered workloads, in registration order (built-ins first).
+    nets: NetRegistry,
     cells: Memo<String, Arc<CharacterizationReport>>,
     tuned: Memo<(String, u64), TunedCache>,
     profiles: Memo<(Workload, u64, u64), ProfiledWorkload>,
@@ -174,9 +184,9 @@ struct Core {
 }
 
 /// The query-engine facade. Cheap to clone via [`Engine::fork`]: forks
-/// share the registry and memo caches but carry their own [`CacheCounts`],
-/// so a caller (e.g. the experiment runner) can attribute cache traffic to
-/// one scope exactly.
+/// share the registries and memo caches but carry their own
+/// [`CacheCounts`], so a caller (e.g. the experiment runner) can
+/// attribute cache traffic to one scope exactly.
 pub struct Engine {
     core: Arc<Core>,
     stats: Arc<StageCounters>,
@@ -189,13 +199,14 @@ impl Default for Engine {
 }
 
 impl Engine {
-    /// A fresh engine with the three built-in technologies registered and
-    /// empty caches.
+    /// A fresh engine with the built-in technologies and workloads
+    /// registered and empty caches.
     pub fn new() -> Engine {
         let registry = TechSpec::builtins().into_iter().map(Arc::new).collect();
         Engine {
             core: Arc::new(Core {
                 registry: Mutex::new(registry),
+                nets: NetRegistry::with_builtins(),
                 cells: Memo::default(),
                 tuned: Memo::default(),
                 profiles: Memo::default(),
@@ -214,8 +225,8 @@ impl Engine {
         SHARED.get_or_init(Engine::new)
     }
 
-    /// A handle sharing this engine's registry and caches but with fresh
-    /// cache counters — the unit of per-experiment accounting.
+    /// A handle sharing this engine's registries and caches but with
+    /// fresh cache counters — the unit of per-experiment accounting.
     pub fn fork(&self) -> Engine {
         Engine {
             core: Arc::clone(&self.core),
@@ -223,7 +234,7 @@ impl Engine {
         }
     }
 
-    // --- registry ---
+    // --- technology registry ---
 
     /// Validate a spec for registration: nonempty id, and an id/name that
     /// survives a descriptor round trip.
@@ -310,6 +321,49 @@ impl Engine {
         })
     }
 
+    // --- workload registry ---
+
+    /// Register a workload graph. Errors on an empty or duplicate id.
+    pub fn register_net(&self, net: NetIr) -> crate::Result<String> {
+        self.core.nets.register(net)
+    }
+
+    /// Parse a `.net` descriptor file (see [`crate::workloads::netdesc`])
+    /// and register it. Returns the registered workload id.
+    pub fn register_net_file(&self, path: impl AsRef<Path>) -> crate::Result<String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| msg(format!("reading {}: {e}", path.display())))?;
+        let net = netdesc::parse(&text)
+            .map_err(|e| msg(format!("parsing {}: {e}", path.display())))?;
+        self.register_net(net)
+    }
+
+    /// Look up a registered workload by id.
+    pub fn net(&self, id: &str) -> Option<Arc<NetIr>> {
+        self.core.nets.get(id)
+    }
+
+    /// All registered workloads, in registration order.
+    pub fn nets(&self) -> Vec<Arc<NetIr>> {
+        self.core.nets.list()
+    }
+
+    /// Every workload the engine can profile: each registered net in both
+    /// phases (registration order), then the HPCG sizes — the `explore`
+    /// workload axis under `workload = all`.
+    pub fn full_suite(&self) -> Vec<Workload> {
+        let mut out = Vec::new();
+        for net in self.nets() {
+            out.push(Workload::net(net.id.clone(), Phase::Inference));
+            out.push(Workload::net(net.id.clone(), Phase::Training));
+        }
+        for size in HpcgSize::ALL {
+            out.push(Workload::Hpcg(size));
+        }
+        out
+    }
+
     // --- pipeline stages ---
 
     /// Stage 1 — device-level characterization of a registered technology
@@ -354,29 +408,69 @@ impl Engine {
     }
 
     /// Stage 3 — workload profiling at an explicit batch size and L2
-    /// capacity (memoized per workload × batch × capacity).
-    pub fn profile(&self, workload: Workload, batch: u64, l2_capacity: u64) -> ProfiledWorkload {
+    /// capacity (memoized per workload key × batch × capacity). Net ids
+    /// resolve against this engine's workload registry, so
+    /// descriptor-registered workloads profile exactly like builtins;
+    /// unknown ids are an error.
+    pub fn profile(
+        &self,
+        workload: Workload,
+        batch: u64,
+        l2_capacity: u64,
+    ) -> crate::Result<ProfiledWorkload> {
+        // Resolve the open id *before* entering the memo (mirroring
+        // `tech_or_err` on the technology side): a failed lookup must not
+        // be cached, so registering the net afterwards heals the query.
+        // Caching the resolved profile by id stays sound because the
+        // registry rejects re-registration under an existing id.
+        let net = match &workload {
+            Workload::Net { id, .. } => Some(self.net(id).ok_or_else(|| {
+                let known: Vec<String> = self.nets().iter().map(|n| n.id.clone()).collect();
+                msg(format!("unknown workload '{id}' (registered: {})", known.join(", ")))
+            })?),
+            Workload::Hpcg(_) => None,
+        };
         let (out, computed) = self
             .core
             .profiles
-            .get_or_compute((workload, batch, l2_capacity), || {
-                Ok(profiler::profile(workload, batch, l2_capacity))
+            .get_or_compute((workload.clone(), batch, l2_capacity), || match &workload {
+                Workload::Net { phase, .. } => {
+                    let net = net.as_ref().expect("resolved above");
+                    Ok(profiler::profile_net(net, *phase, batch, l2_capacity))
+                }
+                Workload::Hpcg(size) => Ok(profiler::profile_hpcg(*size, l2_capacity)),
             });
         self.bump(Stage::Profile, computed);
-        out.expect("profiling is infallible")
+        out.map_err(msg)
     }
 
     /// [`Engine::profile`] at the paper's default batch for the workload's
     /// phase.
-    pub fn profile_default(&self, workload: Workload, l2_capacity: u64) -> ProfiledWorkload {
-        self.profile(workload, profiler::default_batch(workload), l2_capacity)
+    pub fn profile_default(
+        &self,
+        workload: Workload,
+        l2_capacity: u64,
+    ) -> crate::Result<ProfiledWorkload> {
+        let batch = profiler::default_batch(&workload);
+        self.profile(workload, batch, l2_capacity)
     }
 
     /// Profile the paper's 13-workload suite at the default batches.
     pub fn profile_suite(&self, l2_capacity: u64) -> Vec<ProfiledWorkload> {
         profiler::paper_suite()
             .into_iter()
-            .map(|w| self.profile_default(w, l2_capacity))
+            .map(|w| self.profile_default(w, l2_capacity).expect("paper suite ids are builtin"))
+            .collect()
+    }
+
+    /// Profile everything the engine knows — all registered nets in both
+    /// phases plus HPCG — at the default batches.
+    pub fn profile_full_suite(&self, l2_capacity: u64) -> Vec<ProfiledWorkload> {
+        self.full_suite()
+            .into_iter()
+            .map(|w| {
+                self.profile_default(w, l2_capacity).expect("suite ids come from the registry")
+            })
             .collect()
     }
 
@@ -417,11 +511,11 @@ impl Engine {
             IsoMode::Area => self.fit_iso_area(&query.tech, query.capacity_bytes)?,
         };
         let design = self.tuned(&query.tech, capacity)?;
-        let workload = match query.workload {
+        let workload = match &query.workload {
             None => None,
             Some(w) => {
                 let batch = query.batch.unwrap_or_else(|| profiler::default_batch(w));
-                let profiled = self.profile(w, batch, capacity);
+                let profiled = self.profile(w.clone(), batch, capacity)?;
                 let rollup = model::evaluate(&design.ppa, &profiled.stats);
                 Some(WorkloadEval {
                     label: profiled.label,
@@ -468,6 +562,7 @@ mod tests {
     use super::*;
     use crate::util::units::MB;
     use crate::workloads::memstats::Phase;
+    use crate::workloads::registry;
 
     #[test]
     fn builtin_registry_and_lookup() {
@@ -478,6 +573,53 @@ mod tests {
         assert!(e.tech("pcm").is_none());
         let err = e.tuned("pcm", 3 * MB).unwrap_err().to_string();
         assert!(err.contains("unknown technology"), "{err}");
+    }
+
+    #[test]
+    fn builtin_net_registry_and_full_suite() {
+        let e = Engine::new();
+        let ids: Vec<String> = e.nets().iter().map(|n| n.id.clone()).collect();
+        assert_eq!(ids.len(), 8, "five CNNs + ViT + GPT + LSTM");
+        assert!(e.net("gpt_block").is_some());
+        assert!(e.net("bert").is_none());
+        // 8 nets × 2 phases + 3 HPCG sizes.
+        assert_eq!(e.full_suite().len(), 19);
+        let err = e
+            .profile(Workload::net("bert", Phase::Inference), 4, 3 * MB)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("gpt_block"), "error lists the registry: {err}");
+    }
+
+    #[test]
+    fn descriptor_registered_nets_profile_like_builtins() {
+        let e = Engine::new();
+        let mut custom = registry::lstm();
+        custom.id = "lstm_wide".into();
+        custom.name = "LSTM-Wide".into();
+        assert_eq!(e.register_net(custom).unwrap(), "lstm_wide");
+        let p = e
+            .profile(Workload::net("lstm_wide", Phase::Training), 8, 3 * MB)
+            .unwrap();
+        assert_eq!(p.label, "LSTM-Wide-T");
+        assert!(p.stats.l2_reads > 0);
+        // Duplicate workload ids are rejected.
+        assert!(e.register_net(registry::lstm()).is_err());
+    }
+
+    #[test]
+    fn late_registration_heals_a_failed_profile() {
+        // A failed lookup must not be cached: resolve-then-memoize, like
+        // the technology side.
+        let e = Engine::new();
+        let w = Workload::net("late_net", Phase::Inference);
+        assert!(e.profile(w.clone(), 4, 3 * MB).is_err());
+        let mut net = registry::lstm();
+        net.id = "late_net".into();
+        e.register_net(net).unwrap();
+        let p = e.profile(w, 4, 3 * MB).unwrap();
+        assert!(p.stats.l2_reads > 0, "registration after a miss heals the engine");
     }
 
     #[test]
@@ -520,8 +662,9 @@ mod tests {
         let s = e.stats();
         assert_eq!(s.tune, HitMiss { hits: 1, misses: 1 });
         assert_eq!(a.ppa.edap().to_bits(), b.ppa.edap().to_bits(), "memoized value is stable");
-        let _ = e.profile(Workload::Dnn { index: 0, phase: Phase::Inference }, 4, 3 * MB);
-        let _ = e.profile(Workload::Dnn { index: 0, phase: Phase::Inference }, 4, 3 * MB);
+        let w = Workload::net("alexnet", Phase::Inference);
+        let _ = e.profile(w.clone(), 4, 3 * MB).unwrap();
+        let _ = e.profile(w, 4, 3 * MB).unwrap();
         assert_eq!(e.stats().profile, HitMiss { hits: 1, misses: 1 });
     }
 
@@ -550,7 +693,7 @@ mod tests {
         assert_eq!(e.fit_iso_area("stt", 3 * MB).unwrap(), 7 * MB);
         assert_eq!(e.fit_iso_area("sot", 3 * MB).unwrap(), 10 * MB);
         let q = Query::tune("sot", 3 * MB)
-            .with_workload(Workload::Dnn { index: 0, phase: Phase::Inference })
+            .with_workload(Workload::net("alexnet", Phase::Inference))
             .iso_area();
         let ev = e.evaluate(&q).unwrap();
         assert_eq!(ev.capacity_bytes, 10 * MB);

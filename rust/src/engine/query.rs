@@ -104,13 +104,25 @@ mod tests {
 
     #[test]
     fn builder_composes() {
-        let w = Workload::Dnn { index: 1, phase: Phase::Training };
-        let q = Query::tune("stt", 4 * MB).with_workload(w).with_batch(32).iso_area();
+        let w = Workload::net("googlenet", Phase::Training);
+        let q = Query::tune("stt", 4 * MB).with_workload(w.clone()).with_batch(32).iso_area();
         assert_eq!(q.tech, "stt");
         assert_eq!(q.capacity_bytes, 4 * MB);
         assert_eq!(q.workload, Some(w));
         assert_eq!(q.batch, Some(32));
         assert_eq!(q.iso, IsoMode::Area);
+    }
+
+    #[test]
+    fn open_workload_keys_carry_descriptor_ids() {
+        // The workload key is open: any registry id composes into a
+        // query, not just the builtin suite.
+        let q = Query::tune("sot", 2 * MB)
+            .with_workload(Workload::net("my_custom_net", Phase::Inference));
+        assert_eq!(
+            q.workload,
+            Some(Workload::Net { id: "my_custom_net".into(), phase: Phase::Inference })
+        );
     }
 
     #[test]

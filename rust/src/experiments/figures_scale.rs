@@ -4,21 +4,21 @@
 
 use crate::analysis::scalability::{ppa_curves, scaling_study, CAPACITIES_MB};
 use crate::engine::Engine;
-use crate::gpusim::{capacity_sweep, dnn_trace, fig7_capacities, SweepPoint};
+use crate::gpusim::{capacity_sweep, fig7_capacities, net_trace, SweepPoint};
 use crate::util::csv::Csv;
 use crate::util::pool::par_map;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{to_mm2, to_mw, to_nj, to_ns, MB};
-use crate::workloads::dnn::Dnn;
+use crate::workloads::ir::NetIr;
 use crate::workloads::memstats::Phase;
 use crate::workloads::nets;
-use super::{filter_rows, Output, Params};
+use super::{normalize_name, Output, Params};
 
-/// The Fig 7 network suite: every Table 3 network with its sweep batch
-/// size. AlexNet runs at batch 4 (the paper's original experiment and the
-/// regression band); the heavier nets run at batch 1, which already puts
-/// their working sets in the 3–24 MB window the sweep opens.
-pub fn fig7_suite() -> Vec<(Dnn, u64)> {
+/// The default Fig 7 network suite: every Table 3 network with its sweep
+/// batch size. AlexNet runs at batch 4 (the paper's original experiment
+/// and the regression band); the heavier nets run at batch 1, which
+/// already puts their working sets in the 3–24 MB window the sweep opens.
+pub fn fig7_suite() -> Vec<(NetIr, u64)> {
     vec![
         (nets::alexnet(), 4),
         (nets::squeezenet(), 1),
@@ -28,8 +28,46 @@ pub fn fig7_suite() -> Vec<(Dnn, u64)> {
     ]
 }
 
-fn sweep_suite(suite: &[(Dnn, u64)], caps: &[u64]) -> Vec<Vec<SweepPoint>> {
-    par_map(suite, |(net, batch)| capacity_sweep(dnn_trace(net, *batch), caps))
+/// Resolve the `--networks` filter against the default suite *and* the
+/// engine's workload registry: Table 3 names keep their paper batch
+/// sizes, any other registry net (builtin transformer/LSTM or a
+/// `--net-file` descriptor) joins the sweep at batch 1 — so naming only
+/// `gpt_tiny` sweeps exactly that net. A filter matching nothing at all
+/// degrades gracefully to the full default suite (a typo must not emit
+/// an empty artifact).
+fn fig7_selected_suite(engine: &Engine, params: &Params) -> Vec<(NetIr, u64)> {
+    let Some(names) = &params.networks else {
+        return fig7_suite();
+    };
+    let mut suite: Vec<(NetIr, u64)> = fig7_suite()
+        .into_iter()
+        .filter(|(net, _)| params.workload_selected(&net.name, &net.id))
+        .collect();
+    for name in names {
+        let want = normalize_name(name);
+        let covered = suite
+            .iter()
+            .any(|(net, _)| normalize_name(&net.name) == want || normalize_name(&net.id) == want);
+        if covered {
+            continue;
+        }
+        if let Some(net) = engine
+            .nets()
+            .into_iter()
+            .find(|n| normalize_name(&n.name) == want || normalize_name(&n.id) == want)
+        {
+            suite.push(((*net).clone(), 1));
+        }
+    }
+    if suite.is_empty() {
+        fig7_suite()
+    } else {
+        suite
+    }
+}
+
+fn sweep_suite(suite: &[(NetIr, u64)], caps: &[u64]) -> Vec<Vec<SweepPoint>> {
+    par_map(suite, |(net, batch)| capacity_sweep(net_trace(net, *batch), caps))
 }
 
 /// The default suite's sweeps, memoized process-wide: the figure
@@ -45,8 +83,10 @@ fn fig7_default_sweeps() -> &'static [Vec<SweepPoint>] {
 /// Fig 7: DRAM-access reduction vs L2 capacity, per network. Each
 /// network's sweep is one single-pass stack-distance simulation over its
 /// streamed trace; networks run in parallel via the thread pool.
-pub fn fig7(_engine: &Engine, params: &Params) -> Output {
-    let suite: Vec<(Dnn, u64)> = filter_rows(fig7_suite(), params, |(net, _)| net.name);
+/// `--networks` can name any registered workload (transformer/LSTM
+/// builtins, `--net-file` descriptors) to add it to the sweep.
+pub fn fig7(engine: &Engine, params: &Params) -> Output {
+    let suite: Vec<(NetIr, u64)> = fig7_selected_suite(engine, params);
     let caps: Vec<u64> = match &params.capacities_mb {
         Some(mbs) if !mbs.is_empty() => mbs.iter().map(|&mb| mb * MB).collect(),
         _ => fig7_capacities(),
@@ -81,7 +121,7 @@ pub fn fig7(_engine: &Engine, params: &Params) -> Output {
 
     // Table + CSV 1: the lead network's sweep, shaped like the paper's
     // figure (AlexNet with default params; schema unchanged).
-    let lead_name = suite[0].0.name;
+    let lead_name = suite[0].0.name.clone();
     let lead = &sweeps[0];
     let mut t = Table::new(
         format!("Fig 7: DRAM access reduction vs L2 capacity ({lead_name})"),
@@ -328,6 +368,31 @@ mod tests {
         // Suite narrowed to AlexNet only.
         assert_eq!(out.tables[1].len(), 1);
         assert_eq!(out.csvs[1].1.len(), 3);
+    }
+
+    #[test]
+    fn fig7_adds_registry_workloads_by_name() {
+        // A named non-Table-3 workload (here the LSTM builtin; the same
+        // path serves `--net-file` descriptors) joins the sweep at batch 1.
+        let params = Params {
+            networks: Some(vec!["alexnet".into(), "lstm".into()]),
+            capacities_mb: Some(vec![6]),
+            ..Params::default()
+        };
+        let out = fig7(Engine::shared(), &params);
+        assert_eq!(out.tables[1].len(), 2, "AlexNet + LSTM rows");
+        let rendered = out.tables[1].render();
+        assert!(rendered.contains("LSTM"), "{rendered}");
+        // A registry-only selection narrows the sweep to exactly that net
+        // (and leads the figure) instead of degrading to the full suite.
+        let only = Params {
+            networks: Some(vec!["lstm".into()]),
+            capacities_mb: Some(vec![6]),
+            ..Params::default()
+        };
+        let out = fig7(Engine::shared(), &only);
+        assert_eq!(out.tables[1].len(), 1, "LSTM only");
+        assert!(out.tables[0].render().contains("LSTM"), "lead table is the named net");
     }
 
     #[test]

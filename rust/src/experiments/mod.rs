@@ -87,6 +87,14 @@ impl Params {
         let base = label.rsplit_once('-').map(|(b, _)| b).unwrap_or(label);
         self.network_selected(base) || self.network_selected(label)
     }
+
+    /// Whether an open workload passes the `--networks` filter by suite
+    /// label / display name *or* registry id — display names normalize
+    /// differently from ids (`"ViT-Enc"` vs `vit_encoder`), and users
+    /// type either. Shared by the registry-aware figures (fig3, fig7).
+    pub fn workload_selected(&self, label: &str, id: &str) -> bool {
+        self.row_selected(label) || self.network_selected(id)
+    }
 }
 
 /// Filter suite rows by the `--networks` param. Falls back to the full

@@ -160,14 +160,14 @@ pub fn table3(_engine: &Engine, _params: &Params) -> Output {
         "Table 3: DNN configurations",
         &["", "AlexNet", "GoogLeNet", "VGG-16", "ResNet-18", "SqueezeNet"],
     );
-    let row = |name: &str, f: &dyn Fn(&crate::workloads::dnn::Dnn) -> String| {
+    let row = |name: &str, f: &dyn Fn(&crate::workloads::ir::NetIr) -> String| {
         let mut cells = vec![name.to_string()];
         for n in &nets {
             cells.push(f(n));
         }
         cells
     };
-    t.row(&row("Top-5 Error (%)", &|n| fnum(n.top5_error, 2)));
+    t.row(&row("Top-5 Error (%)", &|n| fnum(n.top5_error.unwrap_or(0.0), 2)));
     t.row(&row("CONV Layers", &|n| n.conv_layers().to_string()));
     t.row(&row("FC Layers", &|n| n.fc_layers().to_string()));
     t.row(&row("Total Weights", &|n| {
@@ -185,7 +185,7 @@ pub fn table3(_engine: &Engine, _params: &Params) -> Output {
     for n in &nets {
         csv.rowd(&[
             &n.name,
-            &n.top5_error,
+            &n.top5_error.unwrap_or(0.0),
             &n.conv_layers(),
             &n.fc_layers(),
             &n.total_weights(),

@@ -5,7 +5,11 @@
 //! come in two flavors:
 //!
 //! * **query axes** — technology id, capacity (MB), batch, workload —
-//!   which select among things the engine already knows how to evaluate;
+//!   which select among things the engine already knows how to evaluate.
+//!   The workload axis is open: it enumerates the engine's *workload
+//!   registry* (builtins and descriptor-loaded `.net` files alike), and
+//!   the `[space]` grammar's `workload = all` expands to the full
+//!   registry × phase suite plus HPCG;
 //! * **spec axes** — a numeric [`TechSpec`] field path (`mtj.tau0`,
 //!   `nv.cell_area_mult`, …) and a value list — which *materialize new
 //!   technologies*: each candidate clones the base spec, applies its
@@ -26,10 +30,9 @@ use crate::engine::{descriptor, Engine, IsoMode, Query, TechSpec, TECH_SOT, TECH
 use crate::experiments::normalize_name;
 use crate::util::err::msg;
 use crate::util::units::MB;
-use crate::workloads::hpcg::HpcgSize;
 use crate::workloads::memstats::Phase;
-use crate::workloads::nets;
-use crate::workloads::profiler::Workload;
+use crate::workloads::profiler::{net_label, Workload};
+use crate::workloads::registry;
 
 /// One axis of the design space.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,7 +43,7 @@ pub enum Axis {
     CapacityMb(Vec<u64>),
     /// Batch sizes.
     Batch(Vec<u64>),
-    /// Workloads (suite labels, e.g. `AlexNet-I`).
+    /// Workloads (suite labels, e.g. `AlexNet-I`, `GPT-Block-T`).
     Workload(Vec<Workload>),
     /// Numeric override of a [`TechSpec`] field (see [`spec_field_names`]).
     Spec { field: String, values: Vec<f64> },
@@ -80,54 +83,68 @@ impl Axis {
             Axis::Tech(v) => v[i].clone(),
             Axis::CapacityMb(v) => v[i].to_string(),
             Axis::Batch(v) => v[i].to_string(),
-            Axis::Workload(v) => workload_label(v[i]),
+            Axis::Workload(v) => workload_label(&v[i]),
             Axis::Spec { values, .. } => values[i].to_string(),
         }
     }
 }
 
-/// Names of the five DNNs in Table 3 order (cached; building the full
-/// layer lists per label lookup would be wasteful).
-fn net_names() -> &'static [&'static str] {
-    static NAMES: OnceLock<Vec<&'static str>> = OnceLock::new();
-    NAMES.get_or_init(|| nets::all_networks().iter().map(|n| n.name).collect())
+/// Builtin id → display name map, cached (rebuilding every net per label
+/// lookup would be wasteful). Descriptor-registered nets aren't in it;
+/// their labels fall back to the id.
+fn builtin_names() -> &'static Vec<(String, String)> {
+    static NAMES: OnceLock<Vec<(String, String)>> = OnceLock::new();
+    NAMES.get_or_init(|| {
+        registry::builtins().into_iter().map(|n| (n.id, n.name)).collect()
+    })
 }
 
 /// Suite-style label of a workload (`AlexNet-I`, `VGG-16-T`, `HPCG-S`).
-pub fn workload_label(w: Workload) -> String {
+/// Builtin ids render with their display name; open (descriptor) ids
+/// render as `id-I`/`id-T`, which [`parse_workload`] accepts either way.
+pub fn workload_label(w: &Workload) -> String {
     match w {
-        Workload::Dnn { index, phase } => match net_names().get(index) {
-            Some(name) => format!("{}-{}", name, phase.suffix()),
-            None => format!("dnn{}-{}", index, phase.suffix()),
-        },
+        Workload::Net { id, phase } => {
+            match builtin_names().iter().find(|(bid, _)| bid == id) {
+                Some((_, name)) => net_label(name, *phase),
+                None => net_label(id, *phase),
+            }
+        }
         Workload::Hpcg(size) => size.name().to_string(),
     }
 }
 
-/// All workloads the suite knows, for label-based lookup.
-fn known_workloads() -> Vec<Workload> {
-    let mut out = Vec::new();
-    for index in 0..net_names().len() {
-        out.push(Workload::Dnn { index, phase: Phase::Inference });
-        out.push(Workload::Dnn { index, phase: Phase::Training });
-    }
-    for size in HpcgSize::ALL {
-        out.push(Workload::Hpcg(size));
-    }
-    out
-}
-
-/// Parse a workload by suite label, matched case-insensitively ignoring
-/// punctuation (`alexnet-i` == `AlexNet-I`, `hpcgs` == `HPCG-S`).
-pub fn parse_workload(s: &str) -> crate::Result<Workload> {
+/// Parse a workload against the engine's registry, matched
+/// case-insensitively ignoring punctuation against both the display label
+/// and the raw id (`alexnet-i` == `AlexNet-I`, `gptblock-t` ==
+/// `GPT-Block-T` == `gpt_block-T`, `hpcgs` == `HPCG-S`).
+pub fn parse_workload(engine: &Engine, s: &str) -> crate::Result<Workload> {
     let want = normalize_name(s);
-    for w in known_workloads() {
-        if normalize_name(&workload_label(w)) == want {
+    for w in engine.full_suite() {
+        if normalize_name(&workload_label(&w)) == want {
             return Ok(w);
         }
+        if let Workload::Net { id, phase } = &w {
+            if normalize_name(&net_label(id, *phase)) == want {
+                return Ok(w);
+            }
+        }
     }
-    let known: Vec<String> = known_workloads().iter().map(|&w| workload_label(w)).collect();
+    let known: Vec<String> = engine.full_suite().iter().map(workload_label).collect();
     Err(msg(format!("unknown workload {s:?} (known: {})", known.join(", "))))
+}
+
+/// Parse a list of workload names (CLI `--workloads` or a `[space]`
+/// section) against the engine's registry; the single value `all`
+/// expands to the engine's full suite. One grammar for both paths.
+pub fn parse_workloads<S: AsRef<str>>(
+    engine: &Engine,
+    names: &[S],
+) -> crate::Result<Vec<Workload>> {
+    if names.len() == 1 && names[0].as_ref() == "all" {
+        return Ok(engine.full_suite());
+    }
+    names.iter().map(|n| parse_workload(engine, n.as_ref())).collect()
 }
 
 /// Numeric [`TechSpec`] field paths a spec axis may override.
@@ -323,10 +340,8 @@ impl Space {
             out.axes.push(Axis::CapacityMb(vec![1, 2, 4, 8]));
         }
         if !out.axes.iter().any(|a| matches!(a, Axis::Workload(_))) {
-            out.axes.push(Axis::Workload(vec![Workload::Dnn {
-                index: 0,
-                phase: Phase::Inference,
-            }]));
+            out.axes
+                .push(Axis::Workload(vec![Workload::net("alexnet", Phase::Inference)]));
         }
         Ok(out)
     }
@@ -389,7 +404,7 @@ impl Space {
                 Axis::Tech(v) => base_tech = Some(v[i].clone()),
                 Axis::CapacityMb(v) => capacity_mb = Some(v[i]),
                 Axis::Batch(v) => batch = Some(v[i]),
-                Axis::Workload(v) => workload = Some(v[i]),
+                Axis::Workload(v) => workload = Some(v[i].clone()),
                 Axis::Spec { field, values } => overrides.push((field.clone(), values[i])),
             }
         }
@@ -430,10 +445,14 @@ impl Space {
     }
 
     /// Parse a `[space]` section (key → comma-separated values, sorted by
-    /// key as the descriptor format stores them). `base_tech` supplies a
-    /// default technology axis when the section declares none — the id of
-    /// the `[tech]` spec sharing the file, if any.
+    /// key as the descriptor format stores them). Workload names resolve
+    /// against `engine`'s registry (so descriptor-loaded nets are valid
+    /// axis values), and `workload = all` expands to the engine's full
+    /// suite. `base_tech` supplies a default technology axis when the
+    /// section declares none — the id of the `[tech]` spec sharing the
+    /// file, if any.
     pub fn from_entries(
+        engine: &Engine,
         entries: &[(String, String)],
         base_tech: Option<&str>,
     ) -> crate::Result<Space> {
@@ -454,11 +473,7 @@ impl Space {
                 "capacity_mb" => space.axes.push(Axis::CapacityMb(parse_u64s(key, &items)?)),
                 "batch" => space.axes.push(Axis::Batch(parse_u64s(key, &items)?)),
                 "workload" => {
-                    let mut ws = Vec::new();
-                    for item in &items {
-                        ws.push(parse_workload(item)?);
-                    }
-                    space.axes.push(Axis::Workload(ws));
+                    space.axes.push(Axis::Workload(parse_workloads(engine, &items)?));
                 }
                 "iso" => {
                     if items.len() != 1 {
@@ -518,7 +533,7 @@ impl Space {
             descriptor::ensure_only_space(text)?;
             None
         };
-        Space::from_entries(&entries, base.as_deref())
+        Space::from_entries(engine, &entries, base.as_deref())
     }
 }
 
@@ -554,6 +569,10 @@ pub struct Candidate {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn alexnet_i() -> Workload {
+        Workload::net("alexnet", Phase::Inference)
+    }
 
     #[test]
     fn builder_declares_axes_in_order() {
@@ -604,16 +623,36 @@ mod tests {
 
     #[test]
     fn workload_labels_parse_back() {
-        for w in known_workloads() {
-            let label = workload_label(w);
-            assert_eq!(parse_workload(&label).unwrap(), w, "{label}");
-            assert_eq!(parse_workload(&label.to_lowercase()).unwrap(), w);
+        let engine = Engine::new();
+        for w in engine.full_suite() {
+            let label = workload_label(&w);
+            assert_eq!(parse_workload(&engine, &label).unwrap(), w, "{label}");
+            assert_eq!(parse_workload(&engine, &label.to_lowercase()).unwrap(), w);
         }
         assert_eq!(
-            parse_workload("alexnet-i").unwrap(),
-            Workload::Dnn { index: 0, phase: Phase::Inference }
+            parse_workload(&engine, "alexnet-i").unwrap(),
+            Workload::net("alexnet", Phase::Inference)
         );
-        assert!(parse_workload("lenet-i").is_err());
+        // Raw registry ids parse too (gpt_block-t == GPT-Block-T).
+        assert_eq!(
+            parse_workload(&engine, "gpt_block-t").unwrap(),
+            Workload::net("gpt_block", Phase::Training)
+        );
+        assert!(parse_workload(&engine, "lenet-i").is_err());
+    }
+
+    #[test]
+    fn descriptor_registered_nets_become_axis_values() {
+        let engine = Engine::new();
+        let mut custom = crate::workloads::registry::lstm();
+        custom.id = "rnn_demo".into();
+        custom.name = "RNN-Demo".into();
+        engine.register_net(custom).unwrap();
+        let w = parse_workload(&engine, "rnn_demo-i").unwrap();
+        assert_eq!(w, Workload::net("rnn_demo", Phase::Inference));
+        assert_eq!(parse_workload(&engine, "RNN-Demo-I").unwrap(), w);
+        // The full suite (and thus `workload = all`) includes it.
+        assert!(engine.full_suite().contains(&w));
     }
 
     #[test]
@@ -677,26 +716,51 @@ mod tests {
 
     #[test]
     fn space_entries_parse_the_grammar() {
+        let engine = Engine::new();
         let entries = vec![
             ("capacity_mb".to_string(), "1, 2, 4".to_string()),
             ("iso".to_string(), "area".to_string()),
             ("mtj.tau0".to_string(), "1e-9, 2e-9".to_string()),
             ("tech".to_string(), "stt, sot".to_string()),
-            ("workload".to_string(), "alexnet-i, hpcg-s".to_string()),
+            ("workload".to_string(), "alexnet-i, hpcg-s, gpt_block-t".to_string()),
         ];
-        let s = Space::from_entries(&entries, None).unwrap();
+        let s = Space::from_entries(&engine, &entries, None).unwrap();
         assert_eq!(s.iso, IsoMode::Area);
-        assert_eq!(s.size(), 3 * 2 * 2 * 2);
+        assert_eq!(s.size(), 3 * 2 * 2 * 3);
         let bad = vec![("nodes".to_string(), "7".to_string())];
-        let e = Space::from_entries(&bad, None).unwrap_err().to_string();
+        let e = Space::from_entries(&engine, &bad, None).unwrap_err().to_string();
         assert!(e.contains("unknown key"), "{e}");
         let bad = vec![("mtj.thickness".to_string(), "1".to_string())];
-        let e = Space::from_entries(&bad, None).unwrap_err().to_string();
+        let e = Space::from_entries(&engine, &bad, None).unwrap_err().to_string();
         assert!(e.contains("unknown spec field"), "{e}");
         // Base tech from a sharing [tech] section fills the default axis.
         let entries = vec![("capacity_mb".to_string(), "2".to_string())];
-        let s = Space::from_entries(&entries, Some("my_reram")).unwrap();
+        let s = Space::from_entries(&engine, &entries, Some("my_reram")).unwrap();
         let tech_axis = s.axes.iter().find(|a| matches!(a, Axis::Tech(_))).unwrap();
         assert_eq!(tech_axis.value_label(0), "my_reram");
+    }
+
+    #[test]
+    fn workload_all_enumerates_the_registry() {
+        let engine = Engine::new();
+        let entries = vec![
+            ("capacity_mb".to_string(), "2".to_string()),
+            ("workload".to_string(), "all".to_string()),
+        ];
+        let s = Space::from_entries(&engine, &entries, Some("stt")).unwrap();
+        let axis = s.axes.iter().find(|a| matches!(a, Axis::Workload(_))).unwrap();
+        assert_eq!(axis.len(), engine.full_suite().len());
+        // The same helper serves the CLI path: `all` expands, explicit
+        // lists parse per name, and `all` mixed with names is a parse of
+        // the literal name (which fails loudly).
+        assert_eq!(parse_workloads(&engine, &["all"]).unwrap(), engine.full_suite());
+        assert_eq!(
+            parse_workloads(&engine, &["alexnet-i", "hpcg-s"]).unwrap().len(),
+            2
+        );
+        assert!(parse_workloads(&engine, &["all", "alexnet-i"]).is_err());
+        // Singleton sanity: an explicit list is not expanded.
+        let w = Space::new().workload([alexnet_i()]);
+        assert_eq!(w.axes[0].len(), 1);
     }
 }

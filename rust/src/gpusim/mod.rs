@@ -8,8 +8,9 @@
 //!
 //! * [`config`] — the Table 4 GPU configuration.
 //! * [`cache`] — a set-associative write-back cache with true LRU.
-//! * [`trace`] — streaming address-trace generation from the DNN layer
-//!   descriptors (im2col + tiled sgemm, Caffe/DarkNet-style): an
+//! * [`trace`] — streaming address-trace compilation from the workload
+//!   IR (im2col + tiled sgemm for CNN ops, scratch-tensor attention and
+//!   gather/stream rules for the sequence ops): an
 //!   `Iterator<Item = Access>`, never a materialized trace.
 //! * [`sim`] — the simulation loop and the Fig 7 capacity sweep, run as a
 //!   single-pass multi-capacity (Mattson stack-distance) simulation.
@@ -22,4 +23,4 @@ pub mod trace;
 pub use cache::{Cache, Outcome};
 pub use config::GpuConfig;
 pub use sim::{capacity_sweep, fig7_capacities, simulate, CapacitySweepSim, SimResult, SweepPoint};
-pub use trace::{dnn_trace, Access, TraceGen};
+pub use trace::{net_trace, Access, TraceGen};

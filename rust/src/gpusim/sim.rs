@@ -456,13 +456,13 @@ pub fn fig7_capacities() -> Vec<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpusim::trace::dnn_trace;
+    use crate::gpusim::trace::net_trace;
     use crate::util::rng::Rng;
     use crate::workloads::nets;
 
     #[test]
     fn dram_accesses_fall_monotonically_with_capacity() {
-        let sweep = capacity_sweep(dnn_trace(&nets::alexnet(), 4), &fig7_capacities());
+        let sweep = capacity_sweep(net_trace(&nets::alexnet(), 4), &fig7_capacities());
         for w in sweep.windows(2) {
             assert!(
                 w[1].result.dram_accesses() <= w[0].result.dram_accesses(),
@@ -478,7 +478,7 @@ mod tests {
         // Paper: 14.6% at the STT iso-area 7MB, 19.8% at the SOT 10MB.
         // The trace substrate differs from the authors' GPGPU-Sim+DarkNet
         // stack, so we require the band, not the exact point.
-        let sweep = capacity_sweep(dnn_trace(&nets::alexnet(), 4), &fig7_capacities());
+        let sweep = capacity_sweep(net_trace(&nets::alexnet(), 4), &fig7_capacities());
         let at = |cap: u64| {
             sweep
                 .iter()
@@ -495,7 +495,7 @@ mod tests {
 
     #[test]
     fn baseline_reduction_is_zero() {
-        let sweep = capacity_sweep(dnn_trace(&nets::alexnet(), 4), &[]);
+        let sweep = capacity_sweep(net_trace(&nets::alexnet(), 4), &[]);
         assert_eq!(sweep.len(), 1);
         assert!(sweep[0].dram_reduction_pct.abs() < 1e-9);
     }
@@ -503,8 +503,8 @@ mod tests {
     #[test]
     fn hit_rate_rises_with_capacity() {
         let net = nets::alexnet();
-        let small = simulate(dnn_trace(&net, 4), &GpuConfig::gtx_1080_ti());
-        let big = simulate(dnn_trace(&net, 4), &GpuConfig::gtx_1080_ti().with_l2(24 * MB));
+        let small = simulate(net_trace(&net, 4), &GpuConfig::gtx_1080_ti());
+        let big = simulate(net_trace(&net, 4), &GpuConfig::gtx_1080_ti().with_l2(24 * MB));
         assert!(big.l2_hit_rate() > small.l2_hit_rate());
         assert_eq!(big.l2_accesses, small.l2_accesses);
     }
@@ -516,7 +516,7 @@ mod tests {
     #[test]
     fn sweep_matches_direct_simulation_bit_exactly() {
         for (net, batch) in [(nets::alexnet(), 1), (nets::squeezenet(), 1)] {
-            let trace: Vec<Access> = dnn_trace(&net, batch).collect();
+            let trace: Vec<Access> = net_trace(&net, batch).collect();
             let sweep = capacity_sweep(trace.iter().copied(), &fig7_capacities());
             for p in &sweep {
                 let cfg = GpuConfig::gtx_1080_ti().with_l2(p.result.l2_bytes);

@@ -1,29 +1,33 @@
-//! Address-trace generation from DNN layer descriptors — streamed.
+//! Address-trace compilation from the workload IR — streamed.
 //!
 //! Replays the memory behaviour of the Caffe/DarkNet execution the paper
-//! fed to GPGPU-Sim: per conv layer an im2col materialization into a
-//! shared column buffer, then a tiled sgemm (64×64 threadblock tiles, the
-//! cutlass-era shape) whose loop order re-reads the column buffer once per
-//! N-tile and the weight tile once per M-sweep; activations ping-pong
-//! between two buffers. Addresses are emitted at L2-line (128B)
-//! granularity, post-L1 (each distinct line once per tile-level
-//! operation — intra-tile reuse is register/SMEM-resident anyway).
+//! fed to GPGPU-Sim, as per-op lowering rules over [`NetIr`]: per conv op
+//! an im2col materialization into a shared column buffer, then a tiled
+//! sgemm (128×128 threadblock tiles) whose loop order re-reads the column
+//! buffer once per N-tile and the weight tile once per M-sweep;
+//! activations ping-pong between two buffers. The sequence-model ops
+//! compile through the same GEMM emitter: attention lowers to the fused
+//! QKV projection, per-head score/context GEMMs against scratch Q/K/V
+//! slices, a softmax sweep, and the output projection; embeddings gather
+//! table rows; norms/elementwise stream. Addresses are emitted at L2-line
+//! (128B) granularity, post-L1.
 //!
 //! The reuse distances this produces are the whole point: AlexNet's
 //! column buffers and conv weight tensors sit in the 1.5–18 MB range, so
 //! sweeping the L2 from 3 MB to 24 MB progressively converts their
-//! re-reads from DRAM traffic into L2 hits — Fig 7's mechanism.
+//! re-reads from DRAM traffic into L2 hits — Fig 7's mechanism. The five
+//! Table 3 CNNs compile to byte-for-byte the seed's streams (pinned in
+//! `tests/golden.rs`).
 //!
-//! Generation is **streaming**: [`dnn_trace`] returns [`TraceGen`], a
+//! Compilation is **streaming**: [`net_trace`] returns [`TraceGen`], a
 //! resumable state machine implementing `Iterator<Item = Access>`. The
-//! trace is never materialized — memory stays O(tiles of the current
-//! layer) for the queued region runs (a few hundred KB for VGG-16) versus
-//! O(trace) for the old `Vec<Access>` (tens of millions of entries), and
-//! generation fuses with simulation in a single pass.
+//! trace is never materialized — memory stays O(tiles of the current op)
+//! for the queued region runs versus O(trace) for a materialized
+//! `Vec<Access>`, and generation fuses with simulation in a single pass.
 
 use std::collections::VecDeque;
 
-use crate::workloads::dnn::{Dnn, Layer};
+use crate::workloads::ir::{NetIr, Op};
 use crate::workloads::memstats::ELEM_BYTES;
 
 /// Threadblock GEMM tile edge (M and N) in elements.
@@ -53,15 +57,15 @@ struct Run {
     write: bool,
 }
 
-/// Streaming trace generator: a resumable state machine over the network's
-/// layers. Each layer expands to a bounded queue of `Run`s (one per
-/// im2col region or GEMM tile operand); `next()` walks the current run one
-/// L2 line at a time.
+/// Streaming trace compiler: a resumable state machine over the net's
+/// ops. Each op expands to a bounded queue of `Run`s (one per im2col
+/// region or GEMM tile operand); `next()` walks the current run one L2
+/// line at a time.
 pub struct TraceGen<'a> {
-    net: &'a Dnn,
+    net: &'a NetIr,
     batch: u64,
-    /// Next layer to expand into `runs`.
-    next_layer: usize,
+    /// Next op to expand into `runs`.
+    next_op: usize,
     weight_off: u64,
     input_is_a: bool,
     runs: VecDeque<Run>,
@@ -70,11 +74,11 @@ pub struct TraceGen<'a> {
 }
 
 impl<'a> TraceGen<'a> {
-    fn new(net: &'a Dnn, batch: u64) -> Self {
+    fn new(net: &'a NetIr, batch: u64) -> Self {
         TraceGen {
             net,
             batch,
-            next_layer: 0,
+            next_op: 0,
             weight_off: 0,
             input_is_a: true,
             runs: VecDeque::new(),
@@ -89,13 +93,14 @@ impl<'a> TraceGen<'a> {
 
     /// Queue the tiled GEMM access pattern: `out[M,N] = a[M,K] × b[K,N]`,
     /// with `a` at `a_base` (col buffer / activations) and `b` at `b_base`
-    /// (weights). Loop order: M-tiles outer (output-stationary row sweep,
-    /// the standard GPU sgemm schedule). Consequences for reuse distance:
-    /// the A row-tile is re-read per N-tile at a *short* distance (one
-    /// inner iteration), while each B (weight) column-tile is re-read once
-    /// per M-tile at a distance of roughly `|B| + n_tiles·|A-tile|` —
-    /// for AlexNet's conv3–conv5 that is 3.5–7 MB, which is exactly the
-    /// window the paper's 3→24 MB capacity sweep opens (Fig 7).
+    /// (weights, or an activation operand for attention). Loop order:
+    /// M-tiles outer (output-stationary row sweep, the standard GPU sgemm
+    /// schedule). Consequences for reuse distance: the A row-tile is
+    /// re-read per N-tile at a *short* distance (one inner iteration),
+    /// while each B column-tile is re-read once per M-tile at a distance
+    /// of roughly `|B| + n_tiles·|A-tile|` — for AlexNet's conv3–conv5
+    /// that is 3.5–7 MB, which is exactly the window the paper's 3→24 MB
+    /// capacity sweep opens (Fig 7).
     fn push_gemm(&mut self, m: u64, n: u64, k: u64, a_base: u64, b_base: u64, out_base: u64) {
         let m_tiles = m.div_ceil(TB_TILE);
         let n_tiles = n.div_ceil(TB_TILE);
@@ -121,30 +126,25 @@ impl<'a> TraceGen<'a> {
         }
     }
 
-    /// Expand the next layer into the run queue (advances the layer
-    /// cursor, weight offset and activation ping-pong).
-    fn enqueue_layer(&mut self) {
+    /// Expand the next op into the run queue (advances the op cursor,
+    /// weight offset and activation ping-pong).
+    fn enqueue_op(&mut self) {
         let net = self.net;
-        let layer = &net.layers[self.next_layer];
-        self.next_layer += 1;
+        let batch = self.batch;
+        let op = &net.ops[self.next_op];
+        self.next_op += 1;
         let (in_base, out_base) = if self.input_is_a {
             (ACT_A_BASE, ACT_B_BASE)
         } else {
             (ACT_B_BASE, ACT_A_BASE)
         };
-        let i_bytes = layer.input.numel() * self.batch * ELEM_BYTES;
-        let o_bytes = layer.output.numel() * self.batch * ELEM_BYTES;
-        let w_bytes = layer.weights() * ELEM_BYTES;
-        match layer.layer {
-            Layer::Conv {
-                out_c,
-                kernel,
-                groups,
-                ..
-            } => {
-                let m = self.batch * layer.output.h * layer.output.w;
-                let n = out_c;
-                let k = (layer.input.c / groups) * kernel * kernel;
+        let i_bytes = op.input.numel() * batch * ELEM_BYTES;
+        let o_bytes = op.output.numel() * batch * ELEM_BYTES;
+        let w_bytes = op.weights() * ELEM_BYTES;
+        let weight_base = WEIGHT_BASE + self.weight_off;
+        match op.op {
+            Op::Conv { kernel, .. } => {
+                let (m, n, k) = op.gemm_dims(batch).expect("conv has gemm dims");
                 let a_base = if kernel > 1 {
                     // im2col: read the input, write the column buffer.
                     self.push_region(in_base, i_bytes, false);
@@ -153,17 +153,83 @@ impl<'a> TraceGen<'a> {
                 } else {
                     in_base
                 };
-                let weight_base = WEIGHT_BASE + self.weight_off;
                 self.push_gemm(m, n, k, a_base, weight_base, out_base);
             }
-            Layer::Fc { out, .. } => {
-                let m = self.batch;
-                let n = out;
-                let k = layer.input.numel();
-                let weight_base = WEIGHT_BASE + self.weight_off;
+            Op::Fc { .. } | Op::MatMul { .. } => {
+                let (m, n, k) = op.gemm_dims(batch).expect("fc/matmul has gemm dims");
                 self.push_gemm(m, n, k, in_base, weight_base, out_base);
             }
-            Layer::Pool { .. } | Layer::GlobalPool { .. } | Layer::Concat { .. } => {
+            Op::Attention { heads } => {
+                // Scratch layout in the COL region: [Q | K | V | scores |
+                // context], per-head slices addressed by chunk offsets.
+                let d = op.input.c;
+                let dh = d / heads;
+                let seq = op.input.h * op.input.w;
+                let t_bytes = batch * seq * d * ELEM_BYTES;
+                let s_total = batch * heads * seq * seq * ELEM_BYTES;
+                let q_base = COL_BASE;
+                let k_base = COL_BASE + t_bytes;
+                let v_base = COL_BASE + 2 * t_bytes;
+                let s_base = COL_BASE + 3 * t_bytes;
+                let c_base = s_base + s_total;
+                // Fused QKV projection into scratch.
+                self.push_gemm(batch * seq, 3 * d, d, in_base, weight_base, q_base);
+                // Per-head scores: Q · Kᵀ.
+                for bh in 0..batch * heads {
+                    let chunk = bh * seq * dh * ELEM_BYTES;
+                    self.push_gemm(
+                        seq,
+                        seq,
+                        dh,
+                        q_base + chunk,
+                        k_base + chunk,
+                        s_base + bh * seq * seq * ELEM_BYTES,
+                    );
+                }
+                // Softmax sweep over the score tensor.
+                self.push_region(s_base, s_total, false);
+                self.push_region(s_base, s_total, true);
+                // Per-head context: softmax(scores) · V.
+                for bh in 0..batch * heads {
+                    let chunk = bh * seq * dh * ELEM_BYTES;
+                    self.push_gemm(
+                        seq,
+                        dh,
+                        seq,
+                        s_base + bh * seq * seq * ELEM_BYTES,
+                        v_base + chunk,
+                        c_base + chunk,
+                    );
+                }
+                // Output projection (weights after the QKV block).
+                self.push_gemm(
+                    batch * seq,
+                    d,
+                    d,
+                    c_base,
+                    weight_base + 3 * d * d * ELEM_BYTES,
+                    out_base,
+                );
+            }
+            Op::Norm => {
+                self.push_region(in_base, i_bytes, false);
+                self.push_region(weight_base, w_bytes, false);
+                self.push_region(out_base, o_bytes, true);
+            }
+            Op::Elementwise { inputs } => {
+                for _ in 0..inputs {
+                    self.push_region(in_base, i_bytes, false);
+                }
+                self.push_region(out_base, o_bytes, true);
+            }
+            Op::Embed { .. } => {
+                // Index stream, then the gathered table rows (bounded by
+                // the table), then the output tokens.
+                self.push_region(in_base, i_bytes, false);
+                self.push_region(weight_base, o_bytes.min(w_bytes), false);
+                self.push_region(out_base, o_bytes, true);
+            }
+            Op::Pool { .. } | Op::GlobalPool | Op::Concat { .. } => {
                 self.push_region(in_base, i_bytes, false);
                 self.push_region(out_base, o_bytes, true);
             }
@@ -193,27 +259,27 @@ impl Iterator for TraceGen<'_> {
                 self.cur = Some((run, run.bytes.div_ceil(LINE), 0));
                 continue;
             }
-            if self.next_layer >= self.net.layers.len() {
+            if self.next_op >= self.net.ops.len() {
                 return None;
             }
-            self.enqueue_layer();
+            self.enqueue_op();
         }
     }
 }
 
 /// Stream the forward-pass trace of `net` at batch size `batch`.
-pub fn dnn_trace(net: &Dnn, batch: u64) -> TraceGen<'_> {
+pub fn net_trace(net: &NetIr, batch: u64) -> TraceGen<'_> {
     TraceGen::new(net, batch)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::nets;
+    use crate::workloads::{nets, registry};
 
     #[test]
     fn trace_is_nonempty_and_line_aligned() {
-        let t: Vec<Access> = dnn_trace(&nets::alexnet(), 1).collect();
+        let t: Vec<Access> = net_trace(&nets::alexnet(), 1).collect();
         assert!(t.len() > 100_000);
         assert!(t.iter().all(|a| a.addr % LINE == 0));
     }
@@ -221,29 +287,38 @@ mod tests {
     #[test]
     fn trace_contains_reads_and_writes() {
         let (mut writes, mut total) = (0usize, 0usize);
-        for a in dnn_trace(&nets::squeezenet(), 1) {
+        for a in net_trace(&nets::squeezenet(), 1) {
             total += 1;
             writes += a.write as usize;
         }
         assert!(writes > 0 && writes < total);
     }
 
+    fn in_region(addr: u64) -> bool {
+        (WEIGHT_BASE..COL_BASE).contains(&addr)
+            || (COL_BASE..ACT_A_BASE).contains(&addr)
+            || (ACT_A_BASE..ACT_B_BASE).contains(&addr)
+            || addr >= ACT_B_BASE
+    }
+
     #[test]
     fn regions_do_not_collide() {
-        // Weight traffic must never alias the activation or col regions.
-        for a in dnn_trace(&nets::alexnet(), 1) {
-            let in_one_region = (WEIGHT_BASE..COL_BASE).contains(&a.addr)
-                || (COL_BASE..ACT_A_BASE).contains(&a.addr)
-                || (ACT_A_BASE..ACT_B_BASE).contains(&a.addr)
-                || a.addr >= ACT_B_BASE;
-            assert!(in_one_region, "stray address {:#x}", a.addr);
+        // Weight traffic must never alias the activation or col regions —
+        // for the CNNs and for the attention scratch layout alike.
+        for a in net_trace(&nets::alexnet(), 1) {
+            assert!(in_region(a.addr), "stray address {:#x}", a.addr);
+        }
+        for net in [registry::gpt_block(), registry::lstm()] {
+            for a in net_trace(&net, 2) {
+                assert!(in_region(a.addr), "{}: stray address {:#x}", net.id, a.addr);
+            }
         }
     }
 
     #[test]
     fn batch_scales_trace_length() {
-        let t1 = dnn_trace(&nets::alexnet(), 1).count();
-        let t4 = dnn_trace(&nets::alexnet(), 4).count();
+        let t1 = net_trace(&nets::alexnet(), 1).count();
+        let t4 = net_trace(&nets::alexnet(), 4).count();
         assert!(t4 > t1 * 13 / 10, "batch-4 trace {t4} vs batch-1 {t1}");
     }
 
@@ -251,7 +326,7 @@ mod tests {
     fn col_buffer_is_rewritten_per_conv_layer() {
         // The shared column buffer address range recurs across layers.
         // Streaming keeps this VGG-scale walk allocation-free.
-        let col_writes = dnn_trace(&nets::vgg16(), 1)
+        let col_writes = net_trace(&nets::vgg16(), 1)
             .filter(|a| a.write && (COL_BASE..ACT_A_BASE).contains(&a.addr))
             .count();
         assert!(col_writes > 1_000_000, "vgg col traffic: {col_writes}");
@@ -262,8 +337,8 @@ mod tests {
         // Two independent generators emit identical streams: the state
         // machine has no hidden global state.
         let net = nets::alexnet();
-        let a = dnn_trace(&net, 1);
-        let b = dnn_trace(&net, 1);
+        let a = net_trace(&net, 1);
+        let b = net_trace(&net, 1);
         let mut n = 0usize;
         for (x, y) in a.zip(b) {
             assert_eq!(x, y);
@@ -273,15 +348,43 @@ mod tests {
     }
 
     #[test]
-    fn run_queue_stays_bounded_per_layer() {
-        // The streaming claim: queued work never approaches trace length.
-        // SqueezeNet batch 4 has a ~4M-access trace; the generator's run
-        // queue holds at most one layer's tiles (< 20k runs).
-        let mut g = dnn_trace(&nets::squeezenet(), 4);
-        let mut max_queued = 0usize;
-        while g.next().is_some() {
-            max_queued = max_queued.max(g.runs.len());
+    fn run_queue_stays_bounded_per_op() {
+        // The streaming claim: queued work never approaches trace length —
+        // including the attention fan-out, which queues per-head GEMMs.
+        for (net, batch) in [(nets::squeezenet(), 4), (registry::vit_encoder(), 1)] {
+            let mut g = net_trace(&net, batch);
+            let mut max_queued = 0usize;
+            while g.next().is_some() {
+                max_queued = max_queued.max(g.runs.len());
+            }
+            assert!(
+                max_queued > 0 && max_queued < 20_000,
+                "{}: queue peak {max_queued}",
+                net.id
+            );
         }
-        assert!(max_queued > 0 && max_queued < 20_000, "queue peak {max_queued}");
+    }
+
+    #[test]
+    fn attention_emits_scratch_and_weight_traffic() {
+        let net = registry::gpt_block();
+        let mut scratch_reads = 0usize;
+        let mut weight_reads = 0usize;
+        for a in net_trace(&net, 1) {
+            if !a.write && (COL_BASE..ACT_A_BASE).contains(&a.addr) {
+                scratch_reads += 1;
+            }
+            if !a.write && (WEIGHT_BASE..COL_BASE).contains(&a.addr) {
+                weight_reads += 1;
+            }
+        }
+        assert!(scratch_reads > 1000, "score/context scratch: {scratch_reads}");
+        assert!(weight_reads > 100_000, "unembed weight streams: {weight_reads}");
+    }
+
+    #[test]
+    fn lstm_trace_reflects_gate_gemms() {
+        let n = net_trace(&registry::lstm(), 1).count();
+        assert!(n > 100_000, "lstm trace {n}");
     }
 }

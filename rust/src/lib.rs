@@ -14,9 +14,12 @@
 //! 2. [`nvsim`] — microarchitecture-level cache design exploration: an
 //!    NVSim-class analytical PPA model plus the EDAP-optimal cache tuning
 //!    search (paper Algorithm 1) produce the Table 2 cache configurations.
-//! 3. [`workloads`] — architecture-level workload characterization: exact
-//!    layer descriptors of the paper's five DNNs plus HPCG, with an
-//!    analytical L2/DRAM transaction model standing in for nvprof.
+//! 3. [`workloads`] — architecture-level workload characterization: an
+//!    open workload IR (CNN + transformer + recurrent op vocabulary) with
+//!    the paper's five DNNs, a ViT encoder, a GPT decoder block, and an
+//!    LSTM built in, `.net` descriptor files for user workloads, plus
+//!    HPCG — all profiled by an IR-driven analytical L2/DRAM transaction
+//!    model standing in for nvprof.
 //! 4. [`gpusim`] — a trace-driven GPU memory-hierarchy simulator standing in
 //!    for GPGPU-Sim; quantifies DRAM-access reduction at iso-area capacities.
 //! 5. [`analysis`] — the cross-layer roll-up: dynamic/leakage energy,

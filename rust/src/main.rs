@@ -7,12 +7,14 @@
 //!   explore                   Pareto design-space exploration (see below)
 //!   bitcells                  print the device-level characterization sweeps
 //!   tune --tech T --cap MB    EDAP-tune one cache and print its design
-//!   profile [--l2 MB]         print the workload suite's memory statistics
+//!   profile [--l2 MB]         print every registered workload's memory statistics
+//!   workloads                 list registered workloads with derived weights/MACs
 //!   runtime <artifact.hlo.txt>  smoke-run an AOT artifact via PJRT
 //!
 //! Global options:
 //!   --results-dir DIR         where CSVs + manifest land (default results/)
 //!   --tech-file F[,F..]       register custom technology descriptors
+//!   --net-file F[,F..]        register custom workload descriptors (.net)
 //!   --seed N                  base seed for every stochastic component
 //!
 //! Experiment params (see `repro list` for which experiment takes what):
@@ -24,6 +26,7 @@
 //!   --space FILE              `.tech` file with a [space] section
 //!   --tech a,b  --capacities 1,2  --batches 4,64  --workloads alexnet-i
 //!                             declare axes inline instead of a file
+//!                             (--workloads all = the whole registry)
 //!   --spec "mtj.tau0=1e-9,2e-9;nv.i_write=1e-4,2e-4"
 //!                             spec-override axes (';'-separated)
 //!   --iso-area                interpret capacities as SRAM footprints
@@ -35,14 +38,13 @@
 use deepnvm::coordinator::{persist_explore, run_all, run_one, RunnerConfig};
 use deepnvm::engine::Engine;
 use deepnvm::experiments::{registry, Params};
-use deepnvm::explore::space::parse_workload;
+use deepnvm::explore::space::parse_workloads;
 use deepnvm::explore::{Objective, SearchConfig, Space, Strategy};
 use deepnvm::runtime::{Runtime, TensorF32};
 use deepnvm::util::cli::Args;
 use deepnvm::util::rng;
 use deepnvm::util::table::{fnum, Table};
 use deepnvm::util::units::{to_mm2, to_mw, to_nj, to_ns, to_ps, MB};
-use deepnvm::workloads::profiler::profile_suite;
 
 fn main() {
     let args = Args::from_env();
@@ -65,7 +67,8 @@ fn main() {
         Some("explore") => cmd_explore(engine, &args),
         Some("bitcells") => cmd_bitcells(engine, &args),
         Some("tune") => cmd_tune(engine, &args),
-        Some("profile") => cmd_profile(&args),
+        Some("profile") => cmd_profile(engine, &args),
+        Some("workloads") => cmd_workloads(engine),
         Some("runtime") => cmd_runtime(&args),
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
@@ -83,7 +86,7 @@ fn main() {
 fn usage() {
     println!(
         "repro — DeepNVM++ reproduction\n\
-         usage: repro <list|experiment <id..>|all|explore|bitcells|tune|profile|runtime> [options]\n\
+         usage: repro <list|experiment <id..>|all|explore|bitcells|tune|profile|workloads|runtime> [options]\n\
          \n\
          examples:\n\
            repro experiment table2 fig5\n\
@@ -94,17 +97,26 @@ fn usage() {
            repro tune --tech sot --cap 10\n\
            repro tune --tech-file my_mram.tech --tech my_mram --cap 4\n\
            repro profile --l2 7\n\
+           repro workloads --net-file examples/gpt_tiny.net\n\
+           repro experiment fig3 --net-file examples/gpt_tiny.net --networks gpt_tiny\n\
            repro runtime artifacts/mlp_infer.hlo.txt"
     );
 }
 
-/// The shared engine, with any `--tech-file` descriptors registered.
+/// The shared engine, with any `--tech-file` technology and `--net-file`
+/// workload descriptors registered.
 fn engine_from(args: &Args) -> Result<&'static Engine, String> {
     let engine = Engine::shared();
     if let Some(files) = args.get_list("tech-file") {
         for f in &files {
             let id = engine.register_file(f).map_err(|e| e.to_string())?;
             eprintln!("registered technology '{id}' from {f}");
+        }
+    }
+    if let Some(files) = args.get_list("net-file") {
+        for f in &files {
+            let id = engine.register_net_file(f).map_err(|e| e.to_string())?;
+            eprintln!("registered workload '{id}' from {f}");
         }
     }
     Ok(engine)
@@ -216,10 +228,7 @@ fn explore_space_from(engine: &Engine, args: &Args) -> Result<Space, String> {
         space = space.batch(batches);
     }
     if let Some(names) = args.get_list("workloads") {
-        let mut workloads = Vec::new();
-        for name in &names {
-            workloads.push(parse_workload(name).map_err(|e| e.to_string())?);
-        }
+        let workloads = parse_workloads(engine, &names).map_err(|e| e.to_string())?;
         space = space.workload(workloads);
     }
     if let Some(spec) = args.get("spec") {
@@ -413,7 +422,7 @@ fn resolve_tech(engine: &Engine, s: &str) -> Option<String> {
     }
 }
 
-fn cmd_profile(args: &Args) -> i32 {
+fn cmd_profile(engine: &Engine, args: &Args) -> i32 {
     let l2_mb: u64 = match args.get_parse("l2", 3u64) {
         Ok(v) => v,
         Err(e) => {
@@ -425,7 +434,7 @@ fn cmd_profile(args: &Args) -> i32 {
         format!("Workload memory statistics at {l2_mb}MB L2 (32B transactions)"),
         &["workload", "L2 reads", "L2 writes", "R/W", "DRAM reads", "DRAM writes"],
     );
-    for p in profile_suite(l2_mb * MB) {
+    for p in engine.profile_full_suite(l2_mb * MB) {
         t.row(&[
             p.label.clone(),
             p.stats.l2_reads.to_string(),
@@ -436,6 +445,46 @@ fn cmd_profile(args: &Args) -> i32 {
         ]);
     }
     println!("{}", t.render());
+    0
+}
+
+/// `repro workloads`: the registered workloads with their derived
+/// structure and the Table 3 regression quantities (weights/MACs) at a
+/// glance — `--net-file` descriptors included.
+fn cmd_workloads(engine: &Engine) -> i32 {
+    let fmt_m = |v: u64| format!("{:.2}M", v as f64 / 1e6);
+    let fmt_g = |v: u64| {
+        if v >= 1_000_000_000 {
+            format!("{:.2}G", v as f64 / 1e9)
+        } else {
+            format!("{:.0}M", v as f64 / 1e6)
+        }
+    };
+    let mut t = Table::new(
+        "Registered workloads",
+        &["id", "name", "ops", "conv", "fc", "attn", "weights", "MACs", "top-5 err (%)"],
+    );
+    for net in engine.nets() {
+        t.row(&[
+            net.id.clone(),
+            net.name.clone(),
+            net.ops.len().to_string(),
+            net.conv_layers().to_string(),
+            net.fc_layers().to_string(),
+            net.attention_ops().to_string(),
+            fmt_m(net.total_weights()),
+            fmt_g(net.total_macs()),
+            match net.top5_error {
+                Some(e) => fnum(e, 2),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "workloads are open: author a .net descriptor (EXPERIMENTS.md §Workload descriptor \
+         authoring) and pass --net-file to register it"
+    );
     0
 }
 

@@ -43,6 +43,13 @@ impl BenchHarness {
         per
     }
 
+    /// Record a derived metric (e.g. a lines/sec throughput computed from
+    /// a timed run) under `name`. It lands in the JSON next to the timed
+    /// entries; the name should carry the unit.
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.records.push((name.to_string(), value));
+    }
+
     /// Write the JSON record (flat name → seconds/iter) to
     /// `default_path`, or to the path named by the `env_override`
     /// environment variable when set.
@@ -74,5 +81,13 @@ mod tests {
         assert!(per >= 0.0);
         assert_eq!(h.records.len(), 1);
         assert_eq!(h.records[0].0, "noop");
+    }
+
+    #[test]
+    fn derived_metrics_record_alongside_timings() {
+        let mut h = BenchHarness::new();
+        h.record("trace: lines/sec", 1.25e6);
+        assert_eq!(h.records.len(), 1);
+        assert_eq!(h.records[0], ("trace: lines/sec".to_string(), 1.25e6));
     }
 }

@@ -1,0 +1,555 @@
+//! The workload IR: an owned, serializable layer-graph with an op
+//! vocabulary that reaches beyond CNNs.
+//!
+//! Mirrors the technology side of the engine: where a technology is a
+//! [`TechSpec`](crate::engine::TechSpec) *descriptor* rather than an enum
+//! of built-ins, a workload is a [`NetIr`] — a named sequence of
+//! [`PlacedOp`]s with resolved input/output shapes — rather than a closed
+//! `Layer` enum. The traffic model ([`super::memstats`]) and the trace
+//! compiler ([`crate::gpusim::trace`]) are per-op lowering rules over this
+//! IR, so a new workload is data (a builder call chain or a `.net`
+//! descriptor file, see [`super::netdesc`]), not a Rust change.
+//!
+//! Op vocabulary:
+//!
+//! * CNN ops (the paper's Table 3 networks): [`Op::Conv`], [`Op::Fc`],
+//!   [`Op::Pool`], [`Op::GlobalPool`], [`Op::Concat`].
+//! * Sequence-model ops: [`Op::MatMul`] (per-token projection),
+//!   [`Op::Attention`] (QKV + score + context + output projection),
+//!   [`Op::Norm`], [`Op::Elementwise`], [`Op::Embed`].
+//!
+//! Sequence tensors map onto the same [`Shape`] as images: `c` is the
+//! model dimension, `h` the sequence length, `w` = 1 (an attention op
+//! treats `h·w` as its token count, so a ViT's 14×14 patch grid needs no
+//! flattening step).
+
+use crate::util::err::msg;
+
+/// Tensor shape: channels × height × width (batch handled separately).
+/// For token streams: model-dim × sequence-length × 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub c: u64,
+    pub h: u64,
+    pub w: u64,
+}
+
+impl Shape {
+    pub fn new(c: u64, h: u64, w: u64) -> Shape {
+        Shape { c, h, w }
+    }
+
+    /// Elements per batch item.
+    pub fn numel(&self) -> u64 {
+        self.c * self.h * self.w
+    }
+}
+
+/// One IR operation (shape-free; placement resolves shapes).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// 2D convolution (+ implicit activation). `groups` implements
+    /// AlexNet's split convolutions.
+    Conv { out_c: u64, kernel: u64, stride: u64, pad: u64, groups: u64 },
+    /// Fully connected layer (flattens its input).
+    Fc { out: u64 },
+    /// Max/avg pooling (no weights, pure data movement).
+    Pool { kernel: u64, stride: u64, pad: u64 },
+    /// Global average pooling to 1×1.
+    GlobalPool,
+    /// Channel-resizing data-movement marker: closes a multi-branch block
+    /// (inception / fire) at `out_c` concatenated channels, or models a
+    /// gather/split that re-shapes channels without arithmetic.
+    Concat { out_c: u64 },
+    /// Per-token projection: `out[tokens, out] = in[tokens, c] × W[c, out]`
+    /// where tokens = `h·w` per batch item. `Fc` collapses the whole
+    /// tensor; `MatMul` keeps the token axis — the transformer workhorse.
+    MatMul { out: u64 },
+    /// Multi-head self-attention over `h·w` tokens of dimension `c`:
+    /// fused QKV projection, per-head score and context matmuls, softmax,
+    /// and the output projection (weights `4·c²`).
+    Attention { heads: u64 },
+    /// Layer normalization (scale + bias, `2·c` parameters).
+    Norm,
+    /// Elementwise combine of `inputs` same-shaped operands (residual
+    /// add, gating, activation) — no weights, pure data movement.
+    Elementwise { inputs: u64 },
+    /// Embedding-table gather: `vocab × dim` parameters, output replaces
+    /// the channel axis with `dim`.
+    Embed { vocab: u64, dim: u64 },
+}
+
+impl Op {
+    /// The op's section name in `.net` descriptor files.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "conv",
+            Op::Fc { .. } => "fc",
+            Op::Pool { .. } => "pool",
+            Op::GlobalPool => "global_pool",
+            Op::Concat { .. } => "concat",
+            Op::MatMul { .. } => "matmul",
+            Op::Attention { .. } => "attention",
+            Op::Norm => "norm",
+            Op::Elementwise { .. } => "elementwise",
+            Op::Embed { .. } => "embed",
+        }
+    }
+
+    fn out_hw(h: u64, kernel: u64, stride: u64, pad: u64) -> crate::Result<u64> {
+        if kernel == 0 || stride == 0 {
+            return Err(msg("kernel and stride must be >= 1"));
+        }
+        let padded = h + 2 * pad;
+        if padded < kernel {
+            return Err(msg(format!("kernel {kernel} exceeds padded extent {padded}")));
+        }
+        Ok((padded - kernel) / stride + 1)
+    }
+
+    /// Resolve the output shape of this op on `input`, validating the
+    /// parameters against it. Every shape rule of the IR lives here —
+    /// the builder, the `.net` parser, and the compilers all agree by
+    /// construction.
+    pub fn place(&self, input: Shape) -> crate::Result<Shape> {
+        match *self {
+            Op::Conv { out_c, kernel, stride, pad, groups } => {
+                if out_c == 0 {
+                    return Err(msg("conv: out_c must be >= 1"));
+                }
+                if groups == 0 || input.c % groups != 0 {
+                    return Err(msg(format!(
+                        "conv: groups {groups} must divide input channels {}",
+                        input.c
+                    )));
+                }
+                let oh = Self::out_hw(input.h, kernel, stride, pad)?;
+                let ow = Self::out_hw(input.w, kernel, stride, pad)?;
+                Ok(Shape::new(out_c, oh, ow))
+            }
+            Op::Fc { out } => {
+                if out == 0 {
+                    return Err(msg("fc: out must be >= 1"));
+                }
+                Ok(Shape::new(out, 1, 1))
+            }
+            Op::Pool { kernel, stride, pad } => {
+                let oh = Self::out_hw(input.h, kernel, stride, pad)?;
+                let ow = Self::out_hw(input.w, kernel, stride, pad)?;
+                Ok(Shape::new(input.c, oh, ow))
+            }
+            Op::GlobalPool => Ok(Shape::new(input.c, 1, 1)),
+            Op::Concat { out_c } => {
+                if out_c == 0 {
+                    return Err(msg("concat: out_c must be >= 1"));
+                }
+                Ok(Shape::new(out_c, input.h, input.w))
+            }
+            Op::MatMul { out } => {
+                if out == 0 {
+                    return Err(msg("matmul: out must be >= 1"));
+                }
+                Ok(Shape::new(out, input.h, input.w))
+            }
+            Op::Attention { heads } => {
+                if heads == 0 || input.c % heads != 0 {
+                    return Err(msg(format!(
+                        "attention: heads {heads} must divide model dim {}",
+                        input.c
+                    )));
+                }
+                Ok(input)
+            }
+            Op::Norm => Ok(input),
+            Op::Elementwise { inputs } => {
+                if inputs == 0 {
+                    return Err(msg("elementwise: inputs must be >= 1"));
+                }
+                Ok(input)
+            }
+            Op::Embed { vocab, dim } => {
+                if vocab == 0 || dim == 0 {
+                    return Err(msg("embed: vocab and dim must be >= 1"));
+                }
+                Ok(Shape::new(dim, input.h, input.w))
+            }
+        }
+    }
+}
+
+/// An op with its resolved input/output shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacedOp {
+    pub name: String,
+    pub op: Op,
+    pub input: Shape,
+    pub output: Shape,
+}
+
+impl PlacedOp {
+    /// Weight parameter count.
+    pub fn weights(&self) -> u64 {
+        match self.op {
+            Op::Conv { out_c, kernel, groups, .. } => {
+                out_c * (self.input.c / groups) * kernel * kernel
+            }
+            Op::Fc { out } => out * self.input.numel(),
+            Op::MatMul { out } => out * self.input.c,
+            Op::Attention { .. } => 4 * self.input.c * self.input.c,
+            Op::Norm => 2 * self.input.c,
+            Op::Embed { vocab, dim } => vocab * dim,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate operations per batch item.
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            Op::Conv { .. } => self.weights() * self.output.h * self.output.w,
+            Op::Fc { .. } => self.weights(),
+            Op::MatMul { .. } => self.weights() * self.input.h * self.input.w,
+            Op::Attention { .. } => {
+                let d = self.input.c;
+                let seq = self.input.h * self.input.w;
+                // QKV + output projection (4·d²·seq) plus the per-head
+                // score and context matmuls (2·d·seq²).
+                4 * d * d * seq + 2 * d * seq * seq
+            }
+            _ => 0,
+        }
+    }
+
+    /// GEMM dimensions `(m, n, k)` of the op's main forward matmul —
+    /// `Some` for Conv (im2col), Fc, and MatMul; attention decomposes
+    /// into several GEMMs and answers `None` here.
+    pub fn gemm_dims(&self, batch: u64) -> Option<(u64, u64, u64)> {
+        match self.op {
+            Op::Conv { out_c, kernel, groups, .. } => Some((
+                batch * self.output.h * self.output.w,
+                out_c,
+                (self.input.c / groups) * kernel * kernel,
+            )),
+            Op::Fc { out } => Some((batch, out, self.input.numel())),
+            Op::MatMul { out } => {
+                Some((batch * self.input.h * self.input.w, out, self.input.c))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.op, Op::Conv { .. })
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self.op, Op::Fc { .. })
+    }
+
+    pub fn is_attention(&self) -> bool {
+        matches!(self.op, Op::Attention { .. })
+    }
+}
+
+/// A full workload: identity plus the placed op sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetIr {
+    /// Registry id (`alexnet`, `gpt_block`, a descriptor-file id).
+    pub id: String,
+    /// Display name (`AlexNet`, `GPT-Block`) — used in suite labels.
+    pub name: String,
+    /// Top-5 ImageNet error (%), where the paper reports one (Table 3).
+    pub top5_error: Option<f64>,
+    pub input: Shape,
+    pub ops: Vec<PlacedOp>,
+}
+
+impl NetIr {
+    /// Total weight parameters (Table 3 row "Total Weights").
+    pub fn total_weights(&self) -> u64 {
+        self.ops.iter().map(|l| l.weights()).sum()
+    }
+
+    /// Total MACs per batch item (Table 3 row "Total MACs").
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Number of convolution ops (Table 3 row "CONV Layers").
+    pub fn conv_layers(&self) -> usize {
+        self.ops.iter().filter(|l| l.is_conv()).count()
+    }
+
+    /// Number of fully connected ops (Table 3 row "FC Layers").
+    pub fn fc_layers(&self) -> usize {
+        self.ops.iter().filter(|l| l.is_fc()).count()
+    }
+
+    /// Number of attention ops — the CNN-vs-transformer discriminator the
+    /// trace bench and `repro workloads` report.
+    pub fn attention_ops(&self) -> usize {
+        self.ops.iter().filter(|l| l.is_attention()).count()
+    }
+
+    /// The shape flowing out of the last op (the net's input when empty).
+    pub fn output(&self) -> Shape {
+        self.ops.last().map(|l| l.output).unwrap_or(self.input)
+    }
+
+    /// Append an op against `input` (or the current output shape when
+    /// `input` is `None`), resolving and validating its placement — the
+    /// checked construction path the `.net` parser uses.
+    pub fn push_op(
+        &mut self,
+        name: impl Into<String>,
+        op: Op,
+        input: Option<Shape>,
+    ) -> crate::Result<()> {
+        let input = input.unwrap_or_else(|| self.output());
+        let output = op.place(input)?;
+        self.ops.push(PlacedOp { name: name.into(), op, input, output });
+        Ok(())
+    }
+}
+
+/// Builder that threads shapes through an op list. Multi-branch blocks
+/// (inception / fire) are expressed by placing branch ops against a saved
+/// input followed by a `concat`. Placement errors panic — the builder is
+/// for trusted in-crate construction; descriptor files go through the
+/// checked [`NetIr::push_op`] path instead.
+pub struct NetBuilder {
+    net: NetIr,
+    cur: Shape,
+    /// Saved shape branches re-attach to.
+    branch_root: Option<Shape>,
+}
+
+impl NetBuilder {
+    pub fn new(id: impl Into<String>, name: impl Into<String>, input: Shape) -> Self {
+        NetBuilder {
+            net: NetIr {
+                id: id.into(),
+                name: name.into(),
+                top5_error: None,
+                input,
+                ops: Vec::new(),
+            },
+            cur: input,
+            branch_root: None,
+        }
+    }
+
+    /// Record the paper-reported top-5 error (Table 3 nets).
+    pub fn top5_error(mut self, err: f64) -> Self {
+        self.net.top5_error = Some(err);
+        self
+    }
+
+    fn push(mut self, name: impl Into<String>, op: Op) -> Self {
+        let name = name.into();
+        let input = self.cur;
+        let output = op
+            .place(input)
+            .unwrap_or_else(|e| panic!("{}: op '{}': {e}", self.net.id, name));
+        self.net.ops.push(PlacedOp { name, op, input, output });
+        self.cur = output;
+        self
+    }
+
+    /// Append a convolution (+ implicit activation).
+    pub fn conv(
+        self,
+        name: impl Into<String>,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        pad: u64,
+    ) -> Self {
+        self.conv_g(name, out_c, kernel, stride, pad, 1)
+    }
+
+    /// Grouped convolution.
+    pub fn conv_g(
+        self,
+        name: impl Into<String>,
+        out_c: u64,
+        kernel: u64,
+        stride: u64,
+        pad: u64,
+        groups: u64,
+    ) -> Self {
+        self.push(name, Op::Conv { out_c, kernel, stride, pad, groups })
+    }
+
+    pub fn pool(self, name: impl Into<String>, kernel: u64, stride: u64, pad: u64) -> Self {
+        self.push(name, Op::Pool { kernel, stride, pad })
+    }
+
+    pub fn global_pool(self, name: impl Into<String>) -> Self {
+        self.push(name, Op::GlobalPool)
+    }
+
+    pub fn fc(self, name: impl Into<String>, out: u64) -> Self {
+        self.push(name, Op::Fc { out })
+    }
+
+    pub fn matmul(self, name: impl Into<String>, out: u64) -> Self {
+        self.push(name, Op::MatMul { out })
+    }
+
+    pub fn attention(self, name: impl Into<String>, heads: u64) -> Self {
+        self.push(name, Op::Attention { heads })
+    }
+
+    pub fn norm(self, name: impl Into<String>) -> Self {
+        self.push(name, Op::Norm)
+    }
+
+    pub fn elementwise(self, name: impl Into<String>, inputs: u64) -> Self {
+        self.push(name, Op::Elementwise { inputs })
+    }
+
+    pub fn embed(self, name: impl Into<String>, vocab: u64, dim: u64) -> Self {
+        self.push(name, Op::Embed { vocab, dim })
+    }
+
+    /// Open a multi-branch block on the current shape.
+    pub fn begin_branches(mut self) -> Self {
+        self.branch_root = Some(self.cur);
+        self
+    }
+
+    /// Reset the cursor to the branch root (start the next branch).
+    pub fn branch(mut self) -> Self {
+        self.cur = self.branch_root.expect("begin_branches first");
+        self
+    }
+
+    /// Close the block: concatenate branch outputs to `out_c` channels at
+    /// the current spatial size.
+    pub fn concat(mut self, name: impl Into<String>, out_c: u64) -> Self {
+        self.branch_root = None;
+        self.push(name, Op::Concat { out_c })
+    }
+
+    pub fn build(self) -> NetIr {
+        self.net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_propagate_through_conv_and_pool() {
+        let net = NetBuilder::new("t", "t", Shape::new(3, 227, 227))
+            .conv("c1", 96, 11, 4, 0)
+            .pool("p1", 3, 2, 0)
+            .build();
+        assert_eq!(net.ops[0].output, Shape::new(96, 55, 55));
+        assert_eq!(net.ops[1].output, Shape::new(96, 27, 27));
+    }
+
+    #[test]
+    fn grouped_conv_divides_weights() {
+        let full =
+            NetBuilder::new("t", "t", Shape::new(96, 27, 27)).conv("c", 256, 5, 1, 2).build();
+        let grouped =
+            NetBuilder::new("t", "t", Shape::new(96, 27, 27)).conv_g("c", 256, 5, 1, 2, 2).build();
+        assert_eq!(full.total_weights(), 2 * grouped.total_weights());
+    }
+
+    #[test]
+    fn fc_flattens_input() {
+        let net = NetBuilder::new("t", "t", Shape::new(256, 6, 6)).fc("fc", 4096).build();
+        assert_eq!(net.total_weights(), 4096 * 256 * 36);
+        assert_eq!(net.total_macs(), net.total_weights());
+    }
+
+    #[test]
+    fn branches_share_the_root_input() {
+        let net = NetBuilder::new("t", "t", Shape::new(192, 28, 28))
+            .begin_branches()
+            .branch()
+            .conv("b1", 64, 1, 1, 0)
+            .branch()
+            .conv("b2a", 96, 1, 1, 0)
+            .conv("b2b", 128, 3, 1, 1)
+            .concat("cat", 64 + 128)
+            .build();
+        assert_eq!(net.ops[0].input.c, 192);
+        assert_eq!(net.ops[1].input.c, 192);
+        assert_eq!(net.ops.last().unwrap().output.c, 64 + 128);
+    }
+
+    #[test]
+    fn matmul_keeps_the_token_axis_fc_collapses_it() {
+        let tokens = Shape::new(768, 128, 1);
+        let mm = NetBuilder::new("t", "t", tokens).matmul("up", 3072).build();
+        assert_eq!(mm.ops[0].output, Shape::new(3072, 128, 1));
+        assert_eq!(mm.total_macs(), 3072 * 768 * 128);
+        let fc = NetBuilder::new("t", "t", tokens).fc("head", 1000).build();
+        assert_eq!(fc.ops[0].output, Shape::new(1000, 1, 1));
+        assert_eq!(fc.total_weights(), 1000 * 768 * 128);
+    }
+
+    #[test]
+    fn attention_weights_and_macs_follow_the_model_dim() {
+        let net = NetBuilder::new("t", "t", Shape::new(768, 128, 1)).attention("a", 12).build();
+        let a = &net.ops[0];
+        assert_eq!(a.output, a.input, "attention preserves shape");
+        assert_eq!(a.weights(), 4 * 768 * 768);
+        assert_eq!(a.macs(), 4 * 768 * 768 * 128 + 2 * 768 * 128 * 128);
+        assert_eq!(net.attention_ops(), 1);
+    }
+
+    #[test]
+    fn embed_swaps_channels_for_the_model_dim() {
+        let net = NetBuilder::new("t", "t", Shape::new(1, 64, 1)).embed("e", 10000, 512).build();
+        assert_eq!(net.ops[0].output, Shape::new(512, 64, 1));
+        assert_eq!(net.total_weights(), 10000 * 512);
+        assert_eq!(net.total_macs(), 0, "a gather does no MACs");
+    }
+
+    #[test]
+    fn placement_validates_parameters() {
+        assert!(Op::Conv { out_c: 8, kernel: 3, stride: 1, pad: 0, groups: 3 }
+            .place(Shape::new(4, 8, 8))
+            .is_err());
+        assert!(Op::Attention { heads: 5 }.place(Shape::new(768, 128, 1)).is_err());
+        assert!(Op::Pool { kernel: 9, stride: 2, pad: 0 }.place(Shape::new(3, 4, 4)).is_err());
+        assert!(Op::Elementwise { inputs: 0 }.place(Shape::new(3, 4, 4)).is_err());
+        assert!(Op::Conv { out_c: 8, kernel: 3, stride: 0, pad: 0, groups: 1 }
+            .place(Shape::new(3, 8, 8))
+            .is_err());
+    }
+
+    #[test]
+    fn push_op_threads_shapes_and_accepts_overrides() {
+        let mut net = NetIr {
+            id: "t".into(),
+            name: "t".into(),
+            top5_error: None,
+            input: Shape::new(3, 8, 8),
+            ops: Vec::new(),
+        };
+        net.push_op("c", Op::Conv { out_c: 4, kernel: 3, stride: 1, pad: 1, groups: 1 }, None)
+            .unwrap();
+        assert_eq!(net.output(), Shape::new(4, 8, 8));
+        // An explicit input override re-roots the chain (branching).
+        net.push_op("side", Op::Pool { kernel: 2, stride: 2, pad: 0 }, Some(Shape::new(3, 8, 8)))
+            .unwrap();
+        assert_eq!(net.ops[1].input, Shape::new(3, 8, 8));
+        assert!(net
+            .push_op("bad", Op::Attention { heads: 7 }, None)
+            .is_err());
+        assert_eq!(net.ops.len(), 2, "failed placement must not append");
+    }
+
+    #[test]
+    fn conv_macs_scale_with_output_area() {
+        let net = NetBuilder::new("t", "t", Shape::new(3, 32, 32)).conv("c", 8, 3, 1, 1).build();
+        let l = &net.ops[0];
+        assert_eq!(l.macs(), l.weights() * 32 * 32);
+    }
+}

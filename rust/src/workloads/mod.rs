@@ -1,21 +1,36 @@
 //! Architecture-level workload characterization (paper §3.3 → Table 3,
-//! Fig 3) — the stand-in for Caffe + nvprof on a physical GTX 1080 Ti.
+//! Fig 3) — the stand-in for Caffe + nvprof on a physical GTX 1080 Ti,
+//! rebuilt around an *open* workload IR.
 //!
-//! * [`dnn`] — layer descriptors with shape/weight/MAC bookkeeping.
+//! * [`ir`] — the workload IR: an owned layer-graph ([`NetIr`]) with an
+//!   op vocabulary spanning CNNs (Conv/Fc/Pool/GlobalPool/Concat) and
+//!   sequence models (MatMul/Attention/Norm/Elementwise/Embed), plus the
+//!   shape-threading builder.
 //! * [`nets`] — the five Table 3 networks (AlexNet, GoogLeNet, VGG-16,
-//!   ResNet-18, SqueezeNet), regression-tested against Table 3.
-//! * [`memstats`] — the analytical L2/DRAM transaction model (nvprof
-//!   counters), GEMM-tile aware and phase aware (inference/training).
+//!   ResNet-18, SqueezeNet) expressed in the IR, regression-tested
+//!   against Table 3 and pinned bit-identical to the seed model.
+//! * [`registry`] — the open workload registry: Table 3 builtins plus a
+//!   ViT encoder, a GPT decoder block, and an LSTM; descriptor files
+//!   append to it.
+//! * [`netdesc`] — the TOML-like `.net` descriptor format: parse user
+//!   workload files, re-serialize nets (round-trip exact).
+//! * [`memstats`] — the IR-driven analytical L2/DRAM transaction model
+//!   (nvprof counters): per-op lowering onto one tiled-GEMM/streaming
+//!   traffic rule, phase aware (inference/training).
 //! * [`hpcg`] — the HPCG stencil/CG memory model (the paper's non-DL
 //!   generalization workload).
-//! * [`profiler`] — the suite enumerator: Fig 3/4's thirteen workloads at
-//!   the paper's batch sizes.
+//! * [`profiler`] — the open [`Workload`] key (registry id × phase) and
+//!   the paper's 13-workload suite at the paper's batch sizes.
 
-pub mod dnn;
 pub mod hpcg;
+pub mod ir;
 pub mod memstats;
+pub mod netdesc;
 pub mod nets;
 pub mod profiler;
+pub mod registry;
 
-pub use memstats::{MemStats, Phase};
+pub use ir::{NetBuilder, NetIr, Op, PlacedOp, Shape};
+pub use memstats::{net_stats, MemStats, Phase};
 pub use profiler::{profile, profile_default, profile_suite, ProfiledWorkload, Workload};
+pub use registry::NetRegistry;

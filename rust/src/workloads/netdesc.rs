@@ -1,0 +1,442 @@
+//! The workload descriptor-file format (`*.net`) — the `.tech` discipline
+//! applied to workloads: a new DL workload is a file, not a Rust change.
+//!
+//! A minimal TOML-like dialect (hand-rolled — the offline registry has no
+//! `serde`/`toml`): `[section]` headers, `key = value` lines, `#`
+//! comments. Unlike `.tech` files, *section order is meaningful*: the
+//! first section must be `[net]` (identity + input shape), and every
+//! following section is one IR op, appended in file order. Repeating a
+//! section name is how a topology repeats an op.
+//!
+//! ```text
+//! [net]
+//! id = "gpt_tiny"
+//! name = "GPT-Tiny"
+//! input = "1x64x1"           # channels x height x width (tokens: dim x seq x 1)
+//!
+//! [embed]
+//! name = "embed"
+//! vocab = 8000
+//! dim = 256
+//!
+//! [attention]
+//! name = "attn"
+//! heads = 8
+//! ```
+//!
+//! Branching reuses an earlier activation by declaring an explicit
+//! `input = "CxHxW"` on an op section, which re-roots the shape chain at
+//! that shape (the serializer emits it exactly when an op's input differs
+//! from its predecessor's output, so inception/fire blocks round-trip).
+//!
+//! [`serialize`] emits every op field explicitly (grouped convs always
+//! carry `groups`, floats use Rust's shortest round-trip formatting), so
+//! `parse(serialize(net)) == net` exactly — see the golden tests.
+//! Unknown sections/keys and duplicate keys within a section are errors,
+//! the same fail-loud discipline as the technology descriptors.
+
+use super::ir::{NetIr, Op, Shape};
+use crate::util::err::msg;
+
+/// One parsed section: header name, header line number, and `key = value`
+/// entries in file order.
+struct Section {
+    name: String,
+    line: usize,
+    entries: Vec<(String, String, usize)>,
+}
+
+impl Section {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.entries.iter().find(|(k, _, _)| k == key).map(|(_, v, _)| v.as_str())
+    }
+
+    fn req(&self, key: &str) -> crate::Result<&str> {
+        self.get(key).ok_or_else(|| {
+            msg(format!("line {}: [{}] is missing key '{key}'", self.line, self.name))
+        })
+    }
+
+    fn u64(&self, key: &str) -> crate::Result<u64> {
+        let v = self.req(key)?;
+        v.parse::<u64>()
+            .map_err(|_| msg(format!("[{}] {key}: invalid integer {v:?}", self.name)))
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> crate::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(_) => self.u64(key),
+        }
+    }
+
+    fn check_keys(&self, known: &[&str]) -> crate::Result<()> {
+        for (k, _, line) in &self.entries {
+            if !known.contains(&k.as_str()) {
+                return Err(msg(format!(
+                    "line {line}: unknown key '{k}' in [{}] (known: {})",
+                    self.name,
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted values.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Split descriptor text into ordered sections. Duplicate keys within a
+/// section are an authoring error (a shadowed `out_c` silently changes
+/// the topology).
+fn split_sections(text: &str) -> crate::Result<Vec<Section>> {
+    let mut sections: Vec<Section> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| msg(format!("line {}: unterminated section header", i + 1)))?;
+            sections.push(Section {
+                name: name.trim().to_string(),
+                line: i + 1,
+                entries: Vec::new(),
+            });
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| msg(format!("line {}: expected `key = value`", i + 1)))?;
+        let key = k.trim().to_string();
+        let value = v.trim().trim_matches('"').to_string();
+        let section = sections
+            .last_mut()
+            .ok_or_else(|| msg(format!("line {}: key before any [section] header", i + 1)))?;
+        if section.entries.iter().any(|(existing, _, _)| *existing == key) {
+            return Err(msg(format!(
+                "line {}: duplicate key '{key}' in [{}]",
+                i + 1,
+                section.name
+            )));
+        }
+        section.entries.push((key, value, i + 1));
+    }
+    Ok(sections)
+}
+
+/// Parse a `"CxHxW"` shape literal.
+fn parse_shape(s: &str) -> crate::Result<Shape> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != 3 {
+        return Err(msg(format!("invalid shape {s:?} (expected \"CxHxW\", e.g. \"3x224x224\")")));
+    }
+    let mut dims = [0u64; 3];
+    for (slot, part) in dims.iter_mut().zip(&parts) {
+        *slot = part
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| msg(format!("invalid shape dimension {part:?} in {s:?}")))?;
+        if *slot == 0 {
+            return Err(msg(format!("shape dimensions must be >= 1 in {s:?}")));
+        }
+    }
+    Ok(Shape::new(dims[0], dims[1], dims[2]))
+}
+
+/// Keys every op section accepts besides its own parameters.
+const COMMON_OP_KEYS: [&str; 2] = ["name", "input"];
+
+fn op_keys(kind: &str) -> Option<&'static [&'static str]> {
+    Some(match kind {
+        "conv" => &["name", "input", "out_c", "kernel", "stride", "pad", "groups"],
+        "fc" => &["name", "input", "out"],
+        "pool" => &["name", "input", "kernel", "stride", "pad"],
+        "global_pool" => &["name", "input"],
+        "concat" => &["name", "input", "out_c"],
+        "matmul" => &["name", "input", "out"],
+        "attention" => &["name", "input", "heads"],
+        "norm" => &["name", "input"],
+        "elementwise" => &["name", "input", "inputs"],
+        "embed" => &["name", "input", "vocab", "dim"],
+        _ => return None,
+    })
+}
+
+fn parse_op(section: &Section) -> crate::Result<Op> {
+    Ok(match section.name.as_str() {
+        "conv" => Op::Conv {
+            out_c: section.u64("out_c")?,
+            kernel: section.u64("kernel")?,
+            stride: section.u64("stride")?,
+            pad: section.u64("pad")?,
+            groups: section.u64_or("groups", 1)?,
+        },
+        "fc" => Op::Fc { out: section.u64("out")? },
+        "pool" => Op::Pool {
+            kernel: section.u64("kernel")?,
+            stride: section.u64("stride")?,
+            pad: section.u64("pad")?,
+        },
+        "global_pool" => Op::GlobalPool,
+        "concat" => Op::Concat { out_c: section.u64("out_c")? },
+        "matmul" => Op::MatMul { out: section.u64("out")? },
+        "attention" => Op::Attention { heads: section.u64("heads")? },
+        "norm" => Op::Norm,
+        "elementwise" => Op::Elementwise { inputs: section.u64_or("inputs", 2)? },
+        "embed" => Op::Embed { vocab: section.u64("vocab")?, dim: section.u64("dim")? },
+        // `parse` gates sections through `op_keys` first, which owns the
+        // unknown-section error.
+        other => unreachable!("op_keys() admitted unknown section [{other}]"),
+    })
+}
+
+/// Parse a `.net` descriptor's text into a [`NetIr`].
+pub fn parse(text: &str) -> crate::Result<NetIr> {
+    let sections = split_sections(text)?;
+    let Some((head, ops)) = sections.split_first() else {
+        return Err(msg("empty workload descriptor (need a [net] section)"));
+    };
+    if head.name != "net" {
+        return Err(msg(format!(
+            "line {}: the first section must be [net], found [{}]",
+            head.line, head.name
+        )));
+    }
+    head.check_keys(&["id", "name", "top5_error", "input"])?;
+    let id = head.req("id")?.to_string();
+    let name = match head.get("name") {
+        Some(n) => n.to_string(),
+        None => id.clone(),
+    };
+    let top5_error = match head.get("top5_error") {
+        None | Some("none") => None,
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| msg(format!("[net] top5_error: invalid number {v:?}")))?,
+        ),
+    };
+    let input = parse_shape(head.req("input")?)?;
+
+    let mut net = NetIr { id, name, top5_error, input, ops: Vec::new() };
+    for section in ops {
+        let known = op_keys(&section.name).ok_or_else(|| {
+            msg(format!(
+                "line {}: unknown op section [{}] (known: conv, fc, pool, global_pool, \
+                 concat, matmul, attention, norm, elementwise, embed)",
+                section.line, section.name
+            ))
+        })?;
+        debug_assert!(COMMON_OP_KEYS.iter().all(|k| known.contains(k)));
+        section.check_keys(known)?;
+        let op = parse_op(section)?;
+        let op_name = section.req("name")?.to_string();
+        if op_name.is_empty() {
+            return Err(msg(format!(
+                "line {}: [{}] name must be nonempty",
+                section.line, section.name
+            )));
+        }
+        let override_input = match section.get("input") {
+            None => None,
+            Some(s) => Some(parse_shape(s)?),
+        };
+        net.push_op(op_name.clone(), op, override_input)
+            .map_err(|e| msg(format!("line {}: op '{op_name}': {e}", section.line)))?;
+    }
+    Ok(net)
+}
+
+fn push_u64(out: &mut String, key: &str, v: u64) {
+    out.push_str(&format!("{key} = {v}\n"));
+}
+
+/// Serialize a [`NetIr`] back to descriptor text. Every field is emitted
+/// explicitly; an op whose input differs from its predecessor's output
+/// carries an explicit `input =` re-root, so branchy topologies
+/// round-trip exactly.
+pub fn serialize(net: &NetIr) -> String {
+    let shape = |s: Shape| format!("\"{}x{}x{}\"", s.c, s.h, s.w);
+    let mut out = String::new();
+    out.push_str("[net]\n");
+    out.push_str(&format!("id = \"{}\"\n", net.id));
+    out.push_str(&format!("name = \"{}\"\n", net.name));
+    match net.top5_error {
+        Some(v) => out.push_str(&format!("top5_error = {v}\n")),
+        None => out.push_str("top5_error = none\n"),
+    }
+    out.push_str(&format!("input = {}\n", shape(net.input)));
+    let mut cur = net.input;
+    for op in &net.ops {
+        out.push_str(&format!("\n[{}]\n", op.op.kind()));
+        out.push_str(&format!("name = \"{}\"\n", op.name));
+        if op.input != cur {
+            out.push_str(&format!("input = {}\n", shape(op.input)));
+        }
+        match op.op {
+            Op::Conv { out_c, kernel, stride, pad, groups } => {
+                push_u64(&mut out, "out_c", out_c);
+                push_u64(&mut out, "kernel", kernel);
+                push_u64(&mut out, "stride", stride);
+                push_u64(&mut out, "pad", pad);
+                push_u64(&mut out, "groups", groups);
+            }
+            Op::Fc { out: o } => push_u64(&mut out, "out", o),
+            Op::Pool { kernel, stride, pad } => {
+                push_u64(&mut out, "kernel", kernel);
+                push_u64(&mut out, "stride", stride);
+                push_u64(&mut out, "pad", pad);
+            }
+            Op::GlobalPool | Op::Norm => {}
+            Op::Concat { out_c } => push_u64(&mut out, "out_c", out_c),
+            Op::MatMul { out: o } => push_u64(&mut out, "out", o),
+            Op::Attention { heads } => push_u64(&mut out, "heads", heads),
+            Op::Elementwise { inputs } => push_u64(&mut out, "inputs", inputs),
+            Op::Embed { vocab, dim } => {
+                push_u64(&mut out, "vocab", vocab);
+                push_u64(&mut out, "dim", dim);
+            }
+        }
+        cur = op.output;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Builtin-wide round-trip exactness (including second-generation
+    // stability and profile identity) is pinned in tests/golden.rs
+    // (`net_descriptors_round_trip_exactly`); the cases here cover the
+    // grammar's edges.
+
+    #[test]
+    fn branches_serialize_as_input_reroots() {
+        let text = serialize(&crate::workloads::nets::squeezenet());
+        assert!(text.contains("input = \"16x54x54\""), "fire-branch re-root:\n{text}");
+        // The re-rooted op parses back onto the saved shape.
+        let net = parse(&text).unwrap();
+        let e3 = net.ops.iter().find(|o| o.name == "f2e3").unwrap();
+        assert_eq!(e3.input.c, 16);
+    }
+
+    #[test]
+    fn comments_quotes_and_defaults_are_tolerated() {
+        let text = r#"
+            # a tiny two-op net
+            [net]
+            id = "tiny"            # trailing comment
+            input = "3x8x8"
+
+            [conv]
+            name = "c1"
+            out_c = 4
+            kernel = 3
+            stride = 1
+            pad = 1
+
+            [elementwise]
+            name = "act"
+        "#;
+        let net = parse(text).unwrap();
+        assert_eq!(net.id, "tiny");
+        assert_eq!(net.name, "tiny", "name defaults to id");
+        assert_eq!(net.top5_error, None);
+        assert_eq!(net.ops.len(), 2);
+        assert_eq!(net.ops[0].output, Shape::new(4, 8, 8));
+        assert!(matches!(net.ops[1].op, Op::Elementwise { inputs: 2 }), "inputs defaults to 2");
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_are_rejected() {
+        let base = "[net]\nid = \"x\"\ninput = \"3x8x8\"\n";
+        let e = parse(&format!("{base}[convolution]\nname = \"c\"\n")).unwrap_err().to_string();
+        assert!(e.contains("unknown op section"), "{e}");
+        let e = parse(&format!("{base}[conv]\nname = \"c\"\nout_c = 4\nkernel = 3\nstride = 1\npad = 1\ndilation = 2\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("dilation"), "{e}");
+        let e = parse("[conv]\nname = \"c\"\n").unwrap_err().to_string();
+        assert!(e.contains("[net]"), "{e}");
+        let e = parse("").unwrap_err().to_string();
+        assert!(e.contains("empty"), "{e}");
+        let e = parse("name = \"x\"\n").unwrap_err().to_string();
+        assert!(e.contains("before any"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected_not_overwritten() {
+        let text = "[net]\nid = \"x\"\nid = \"y\"\ninput = \"3x8x8\"\n";
+        let e = parse(text).unwrap_err().to_string();
+        assert!(e.contains("duplicate key 'id'"), "{e}");
+        assert!(e.contains("line 3"), "{e}");
+    }
+
+    #[test]
+    fn shape_and_placement_errors_name_the_line() {
+        let e = parse("[net]\nid = \"x\"\ninput = \"3x224\"\n").unwrap_err().to_string();
+        assert!(e.contains("CxHxW"), "{e}");
+        let e = parse("[net]\nid = \"x\"\ninput = \"0x8x8\"\n").unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+        // A kernel larger than the padded input fails placement loudly.
+        let text = "[net]\nid = \"x\"\ninput = \"3x4x4\"\n\n[pool]\nname = \"p\"\nkernel = 9\nstride = 2\npad = 0\n";
+        let e = parse(text).unwrap_err().to_string();
+        assert!(e.contains("op 'p'"), "{e}");
+        // Attention heads must divide the model dimension.
+        let text = "[net]\nid = \"x\"\ninput = \"100x8x1\"\n\n[attention]\nname = \"a\"\nheads = 3\n";
+        let e = parse(text).unwrap_err().to_string();
+        assert!(e.contains("heads"), "{e}");
+    }
+
+    #[test]
+    fn derived_counts_flow_from_descriptor_text() {
+        // The EXPERIMENTS.md worked example scale: a descriptor-only GPT
+        // block produces sensible derived weights.
+        let text = r#"
+            [net]
+            id = "gpt_tiny"
+            input = "1x64x1"
+
+            [embed]
+            name = "embed"
+            vocab = 8000
+            dim = 256
+
+            [attention]
+            name = "attn"
+            heads = 8
+
+            [matmul]
+            name = "mlp_up"
+            out = 1024
+
+            [matmul]
+            name = "mlp_down"
+            out = 256
+
+            [matmul]
+            name = "unembed"
+            out = 8000
+        "#;
+        let net = parse(text).unwrap();
+        assert_eq!(net.attention_ops(), 1);
+        let w = net.total_weights();
+        // embed 2.05M + attn 0.26M + mlp 0.52M + unembed 2.05M
+        assert_eq!(w, 8000 * 256 + 4 * 256 * 256 + 1024 * 256 + 256 * 1024 + 8000 * 256);
+        assert!(net.total_macs() > 0);
+    }
+}

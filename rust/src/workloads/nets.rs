@@ -1,16 +1,21 @@
-//! The five Table 3 networks, layer by layer (Caffe topologies on
-//! ImageNet-shaped inputs), plus accessors for the whole suite.
+//! The five Table 3 networks, expressed in the workload IR (Caffe
+//! topologies on ImageNet-shaped inputs).
 //!
 //! Table 3 regression targets: AlexNet 61M/724M, GoogLeNet 7M/1.43G,
 //! VGG-16 138M/15.5G, ResNet-18 11.8M/2G, SqueezeNet 1.2M/837M
 //! (weights / MACs). ResNet-18 uses the original paper's parameter-free
 //! (option-A) shortcuts, matching Table 3's 17 CONV layers.
+//!
+//! These constructors are the IR re-expression of the seed's hardcoded
+//! `Layer` lists; their memstats counters and traces are pinned
+//! bit-identical to the seed in `tests/golden.rs`.
 
-use super::dnn::{Dnn, DnnBuilder, Shape};
+use super::ir::{NetBuilder, NetIr, Shape};
 
 /// AlexNet (Caffe single-column variant, 227×227 input, grouped convs).
-pub fn alexnet() -> Dnn {
-    DnnBuilder::new("AlexNet", 16.4, Shape::new(3, 227, 227))
+pub fn alexnet() -> NetIr {
+    NetBuilder::new("alexnet", "AlexNet", Shape::new(3, 227, 227))
+        .top5_error(16.4)
         .conv("conv1", 96, 11, 4, 0)
         .pool("pool1", 3, 2, 0)
         .conv_g("conv2", 256, 5, 1, 2, 2)
@@ -25,68 +30,61 @@ pub fn alexnet() -> Dnn {
         .build()
 }
 
-/// One GoogLeNet inception module.
+/// One GoogLeNet inception module; `tag` prefixes every generated layer
+/// name (`i3a_1x1` … `i3a_concat`), so the pool and the closing concat no
+/// longer share a name.
 fn inception(
-    b: DnnBuilder,
-    tag: &'static str,
+    b: NetBuilder,
+    tag: &str,
     c1: u64,
     c3r: u64,
     c3: u64,
     c5r: u64,
     c5: u64,
     cp: u64,
-    names: [&'static str; 7],
-) -> DnnBuilder {
-    let _ = tag;
+) -> NetBuilder {
     b.begin_branches()
         .branch()
-        .conv(names[0], c1, 1, 1, 0)
+        .conv(format!("i{tag}_1x1"), c1, 1, 1, 0)
         .branch()
-        .conv(names[1], c3r, 1, 1, 0)
-        .conv(names[2], c3, 3, 1, 1)
+        .conv(format!("i{tag}_3x3r"), c3r, 1, 1, 0)
+        .conv(format!("i{tag}_3x3"), c3, 3, 1, 1)
         .branch()
-        .conv(names[3], c5r, 1, 1, 0)
-        .conv(names[4], c5, 5, 1, 2)
+        .conv(format!("i{tag}_5x5r"), c5r, 1, 1, 0)
+        .conv(format!("i{tag}_5x5"), c5, 5, 1, 2)
         .branch()
-        .pool(names[5], 3, 1, 1)
-        .conv(names[6], cp, 1, 1, 0)
-        .concat(names[5], c1 + c3 + c5 + cp)
+        .pool(format!("i{tag}_pool"), 3, 1, 1)
+        .conv(format!("i{tag}_proj"), cp, 1, 1, 0)
+        .concat(format!("i{tag}_concat"), c1 + c3 + c5 + cp)
 }
 
 /// GoogLeNet (Inception v1): 57 conv layers, one FC.
-pub fn googlenet() -> Dnn {
-    let b = DnnBuilder::new("GoogLeNet", 6.7, Shape::new(3, 224, 224))
+pub fn googlenet() -> NetIr {
+    let b = NetBuilder::new("googlenet", "GoogLeNet", Shape::new(3, 224, 224))
+        .top5_error(6.7)
         .conv("conv1", 64, 7, 2, 3)
         .pool("pool1", 3, 2, 1)
         .conv("conv2_reduce", 64, 1, 1, 0)
         .conv("conv2", 192, 3, 1, 1)
         .pool("pool2", 3, 2, 1);
-    let b = inception(b, "3a", 64, 96, 128, 16, 32, 32,
-        ["i3a_1x1", "i3a_3x3r", "i3a_3x3", "i3a_5x5r", "i3a_5x5", "i3a_pool", "i3a_proj"]);
-    let b = inception(b, "3b", 128, 128, 192, 32, 96, 64,
-        ["i3b_1x1", "i3b_3x3r", "i3b_3x3", "i3b_5x5r", "i3b_5x5", "i3b_pool", "i3b_proj"]);
+    let b = inception(b, "3a", 64, 96, 128, 16, 32, 32);
+    let b = inception(b, "3b", 128, 128, 192, 32, 96, 64);
     let b = b.pool("pool3", 3, 2, 1);
-    let b = inception(b, "4a", 192, 96, 208, 16, 48, 64,
-        ["i4a_1x1", "i4a_3x3r", "i4a_3x3", "i4a_5x5r", "i4a_5x5", "i4a_pool", "i4a_proj"]);
-    let b = inception(b, "4b", 160, 112, 224, 24, 64, 64,
-        ["i4b_1x1", "i4b_3x3r", "i4b_3x3", "i4b_5x5r", "i4b_5x5", "i4b_pool", "i4b_proj"]);
-    let b = inception(b, "4c", 128, 128, 256, 24, 64, 64,
-        ["i4c_1x1", "i4c_3x3r", "i4c_3x3", "i4c_5x5r", "i4c_5x5", "i4c_pool", "i4c_proj"]);
-    let b = inception(b, "4d", 112, 144, 288, 32, 64, 64,
-        ["i4d_1x1", "i4d_3x3r", "i4d_3x3", "i4d_5x5r", "i4d_5x5", "i4d_pool", "i4d_proj"]);
-    let b = inception(b, "4e", 256, 160, 320, 32, 128, 128,
-        ["i4e_1x1", "i4e_3x3r", "i4e_3x3", "i4e_5x5r", "i4e_5x5", "i4e_pool", "i4e_proj"]);
+    let b = inception(b, "4a", 192, 96, 208, 16, 48, 64);
+    let b = inception(b, "4b", 160, 112, 224, 24, 64, 64);
+    let b = inception(b, "4c", 128, 128, 256, 24, 64, 64);
+    let b = inception(b, "4d", 112, 144, 288, 32, 64, 64);
+    let b = inception(b, "4e", 256, 160, 320, 32, 128, 128);
     let b = b.pool("pool4", 3, 2, 1);
-    let b = inception(b, "5a", 256, 160, 320, 32, 128, 128,
-        ["i5a_1x1", "i5a_3x3r", "i5a_3x3", "i5a_5x5r", "i5a_5x5", "i5a_pool", "i5a_proj"]);
-    let b = inception(b, "5b", 384, 192, 384, 48, 128, 128,
-        ["i5b_1x1", "i5b_3x3r", "i5b_3x3", "i5b_5x5r", "i5b_5x5", "i5b_pool", "i5b_proj"]);
+    let b = inception(b, "5a", 256, 160, 320, 32, 128, 128);
+    let b = inception(b, "5b", 384, 192, 384, 48, 128, 128);
     b.global_pool("gap").fc("fc", 1000).build()
 }
 
 /// VGG-16: 13 conv layers, 3 FC.
-pub fn vgg16() -> Dnn {
-    DnnBuilder::new("VGG-16", 7.3, Shape::new(3, 224, 224))
+pub fn vgg16() -> NetIr {
+    NetBuilder::new("vgg16", "VGG-16", Shape::new(3, 224, 224))
+        .top5_error(7.3)
         .conv("conv1_1", 64, 3, 1, 1)
         .conv("conv1_2", 64, 3, 1, 1)
         .pool("pool1", 2, 2, 0)
@@ -112,14 +110,15 @@ pub fn vgg16() -> Dnn {
 }
 
 /// A ResNet basic block (two 3×3 convs; option-A parameter-free shortcut,
-/// so only the convolutions appear as layers).
-fn basic_block(b: DnnBuilder, n1: &'static str, n2: &'static str, ch: u64, stride: u64) -> DnnBuilder {
+/// so only the convolutions appear as ops).
+fn basic_block(b: NetBuilder, n1: &str, n2: &str, ch: u64, stride: u64) -> NetBuilder {
     b.conv(n1, ch, 3, stride, 1).conv(n2, ch, 3, 1, 1)
 }
 
 /// ResNet-18 with option-A shortcuts: 17 conv layers, one FC.
-pub fn resnet18() -> Dnn {
-    let b = DnnBuilder::new("ResNet-18", 10.71, Shape::new(3, 224, 224))
+pub fn resnet18() -> NetIr {
+    let b = NetBuilder::new("resnet18", "ResNet-18", Shape::new(3, 224, 224))
+        .top5_error(10.71)
         .conv("conv1", 64, 7, 2, 3)
         .pool("pool1", 3, 2, 1);
     let b = basic_block(b, "l1b1c1", "l1b1c2", 64, 1);
@@ -134,43 +133,37 @@ pub fn resnet18() -> Dnn {
 }
 
 /// A SqueezeNet fire module: squeeze 1×1 then parallel 1×1/3×3 expands.
-fn fire(
-    b: DnnBuilder,
-    ns: &'static str,
-    ne1: &'static str,
-    ne3: &'static str,
-    s: u64,
-    e: u64,
-) -> DnnBuilder {
-    b.conv(ns, s, 1, 1, 0)
+fn fire(b: NetBuilder, i: u32, s: u64, e: u64) -> NetBuilder {
+    b.conv(format!("f{i}s"), s, 1, 1, 0)
         .begin_branches()
         .branch()
-        .conv(ne1, e, 1, 1, 0)
+        .conv(format!("f{i}e1"), e, 1, 1, 0)
         .branch()
-        .conv(ne3, e, 3, 1, 1)
-        .concat(ns, 2 * e)
+        .conv(format!("f{i}e3"), e, 3, 1, 1)
+        .concat(format!("f{i}_cat"), 2 * e)
 }
 
 /// SqueezeNet v1.0: 26 conv layers, no FC.
-pub fn squeezenet() -> Dnn {
-    let b = DnnBuilder::new("SqueezeNet", 16.4, Shape::new(3, 224, 224))
+pub fn squeezenet() -> NetIr {
+    let b = NetBuilder::new("squeezenet", "SqueezeNet", Shape::new(3, 224, 224))
+        .top5_error(16.4)
         .conv("conv1", 96, 7, 2, 0)
         .pool("pool1", 3, 2, 0);
-    let b = fire(b, "f2s", "f2e1", "f2e3", 16, 64);
-    let b = fire(b, "f3s", "f3e1", "f3e3", 16, 64);
-    let b = fire(b, "f4s", "f4e1", "f4e3", 32, 128);
+    let b = fire(b, 2, 16, 64);
+    let b = fire(b, 3, 16, 64);
+    let b = fire(b, 4, 32, 128);
     let b = b.pool("pool4", 3, 2, 0);
-    let b = fire(b, "f5s", "f5e1", "f5e3", 32, 128);
-    let b = fire(b, "f6s", "f6e1", "f6e3", 48, 192);
-    let b = fire(b, "f7s", "f7e1", "f7e3", 48, 192);
-    let b = fire(b, "f8s", "f8e1", "f8e3", 64, 256);
+    let b = fire(b, 5, 32, 128);
+    let b = fire(b, 6, 48, 192);
+    let b = fire(b, 7, 48, 192);
+    let b = fire(b, 8, 64, 256);
     let b = b.pool("pool8", 3, 2, 0);
-    let b = fire(b, "f9s", "f9e1", "f9e3", 64, 256);
+    let b = fire(b, 9, 64, 256);
     b.conv("conv10", 1000, 1, 1, 0).global_pool("gap").build()
 }
 
 /// The full Table 3 suite, in the paper's column order.
-pub fn all_networks() -> Vec<Dnn> {
+pub fn all_networks() -> Vec<NetIr> {
     vec![alexnet(), googlenet(), vgg16(), resnet18(), squeezenet()]
 }
 
@@ -185,7 +178,7 @@ mod tests {
     /// Table 3 regression: layer counts, weights, MACs.
     #[test]
     fn table3_regression() {
-        let cases: [(Dnn, usize, usize, f64, f64); 5] = [
+        let cases: [(NetIr, usize, usize, f64, f64); 5] = [
             (alexnet(), 5, 3, 61e6, 724e6),
             (googlenet(), 57, 1, 7e6, 1.43e9),
             (vgg16(), 13, 3, 138e6, 15.5e9),
@@ -215,27 +208,36 @@ mod tests {
     #[test]
     fn alexnet_conv1_shape_is_canonical() {
         let net = alexnet();
-        assert_eq!(net.layers[0].output.h, 55);
-        assert_eq!(net.layers[0].output.c, 96);
+        assert_eq!(net.ops[0].output.h, 55);
+        assert_eq!(net.ops[0].output.c, 96);
     }
 
     #[test]
-    fn googlenet_inception_3a_concats_to_256() {
+    fn googlenet_inception_names_are_distinct_per_op() {
+        // The old builder reused the pool's name for the closing concat;
+        // the tag now prefixes every generated name uniquely.
         let net = googlenet();
         let cat = net
-            .layers
+            .ops
             .iter()
-            .find(|l| l.name() == "i3a_pool" && !l.is_conv() && l.output.c == 256)
+            .find(|l| l.name == "i3a_concat")
             .expect("3a concat");
+        assert_eq!(cat.output.c, 256);
         assert_eq!(cat.output.h, 28);
+        assert!(net.ops.iter().any(|l| l.name == "i3a_pool" && !l.is_conv()));
+        let mut names: Vec<&str> = net.ops.iter().map(|l| l.name.as_str()).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "every GoogLeNet op name is unique");
     }
 
     #[test]
     fn vgg_activations_peak_early() {
         // conv1_2 output (64×224×224) is VGG's biggest activation.
         let net = vgg16();
-        let first = net.layers[1].output.numel();
-        for l in &net.layers[2..] {
+        let first = net.ops[1].output.numel();
+        for l in &net.ops[2..] {
             assert!(l.output.numel() <= first);
         }
     }
@@ -250,8 +252,16 @@ mod tests {
     #[test]
     fn resnet_downsamples_to_7x7() {
         let net = resnet18();
-        let last_conv = net.layers.iter().rev().find(|l| l.is_conv()).unwrap();
+        let last_conv = net.ops.iter().rev().find(|l| l.is_conv()).unwrap();
         assert_eq!(last_conv.output.h, 7);
         assert_eq!(last_conv.output.c, 512);
+    }
+
+    #[test]
+    fn ids_follow_registry_conventions() {
+        for net in all_networks() {
+            assert!(net.id.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()));
+            assert!(net.top5_error.is_some(), "{}: Table 3 reports an error", net.id);
+        }
     }
 }

@@ -1,13 +1,19 @@
 //! The profiling front-end — the nvprof stand-in the analyses consume.
 //!
-//! Enumerates the paper's workload suite (five DNNs × inference/training +
-//! three HPCG sizes, Fig 3's x-axis) and returns [`MemStats`] per workload
-//! at the paper's default batch sizes (4 for inference, 64 for training,
-//! §4.1).
+//! A [`Workload`] is an *open* key since the workload-IR redesign: a
+//! registry net id plus a phase (or an HPCG size), not an index into a
+//! hardcoded suite. The engine resolves ids against its own registry
+//! (builtins + `--net-file` descriptors); the standalone helpers here
+//! resolve against the builtin set for registry-free use. The paper's
+//! 13-workload suite (five DNNs × inference/training + three HPCG sizes,
+//! Fig 3's x-axis) remains available as [`paper_suite`], at the paper's
+//! default batch sizes (4 for inference, 64 for training, §4.1).
 
 use super::hpcg::{hpcg_stats, HpcgSize};
-use super::memstats::{dnn_stats, MemStats, Phase};
-use super::nets;
+use super::ir::NetIr;
+use super::memstats::{net_stats, MemStats, Phase};
+use super::registry;
+use crate::util::err::msg;
 use crate::util::units::MB;
 
 /// Default inference batch size (paper §4.1).
@@ -17,12 +23,19 @@ pub const BATCH_TRAINING: u64 = 64;
 /// The GTX 1080 Ti L2 capacity the profiling targets.
 pub const PROFILE_L2: u64 = 3 * MB;
 
-/// One workload in the paper's suite.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// One workload: an open registry key, not a closed enum of nets.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum Workload {
-    /// DNN by suite index (Table 3 order) and phase.
-    Dnn { index: usize, phase: Phase },
+    /// A registered net (by registry id) in one phase.
+    Net { id: String, phase: Phase },
     Hpcg(HpcgSize),
+}
+
+impl Workload {
+    /// Convenience constructor: `Workload::net("alexnet", Phase::Inference)`.
+    pub fn net(id: impl Into<String>, phase: Phase) -> Workload {
+        Workload::Net { id: id.into(), phase }
+    }
 }
 
 /// A profiled workload: label + memory statistics.
@@ -33,46 +46,74 @@ pub struct ProfiledWorkload {
     pub stats: MemStats,
 }
 
-/// Profile one workload at an explicit batch size and L2 capacity.
-pub fn profile(workload: Workload, batch: u64, l2_capacity: u64) -> ProfiledWorkload {
+/// Suite-style label (`AlexNet-I`, `GPT-Block-T`) from a net's display
+/// name and phase.
+pub fn net_label(name: &str, phase: Phase) -> String {
+    format!("{}-{}", name, phase.suffix())
+}
+
+/// Profile one resolved net at an explicit batch size and L2 capacity —
+/// the registry-independent core the engine calls after resolution.
+pub fn profile_net(net: &NetIr, phase: Phase, batch: u64, l2_capacity: u64) -> ProfiledWorkload {
+    ProfiledWorkload {
+        workload: Workload::net(net.id.clone(), phase),
+        label: net_label(&net.name, phase),
+        stats: net_stats(net, phase, batch, l2_capacity),
+    }
+}
+
+/// Profile one HPCG configuration.
+pub fn profile_hpcg(size: HpcgSize, l2_capacity: u64) -> ProfiledWorkload {
+    ProfiledWorkload {
+        workload: Workload::Hpcg(size),
+        label: size.name().to_string(),
+        stats: hpcg_stats(size, l2_capacity),
+    }
+}
+
+/// Profile one workload at an explicit batch size and L2 capacity,
+/// resolving net ids against the *builtin* registry. Errors on an unknown
+/// id — engine-registered descriptor nets go through
+/// [`Engine::profile`](crate::engine::Engine::profile) instead.
+pub fn profile(
+    workload: &Workload,
+    batch: u64,
+    l2_capacity: u64,
+) -> crate::Result<ProfiledWorkload> {
     match workload {
-        Workload::Dnn { index, phase } => {
-            let net = &nets::all_networks()[index];
-            ProfiledWorkload {
-                workload,
-                label: format!("{}-{}", net.name, phase.suffix()),
-                stats: dnn_stats(net, phase, batch, l2_capacity),
-            }
+        Workload::Net { id, phase } => {
+            let net = registry::builtin_net(id)
+                .ok_or_else(|| msg(format!("unknown builtin workload '{id}'")))?;
+            Ok(profile_net(&net, *phase, batch, l2_capacity))
         }
-        Workload::Hpcg(size) => ProfiledWorkload {
-            workload,
-            label: size.name().to_string(),
-            stats: hpcg_stats(size, l2_capacity),
-        },
+        Workload::Hpcg(size) => Ok(profile_hpcg(*size, l2_capacity)),
     }
 }
 
 /// The paper's default batch size for a workload's phase (§4.1).
-pub fn default_batch(workload: Workload) -> u64 {
+pub fn default_batch(workload: &Workload) -> u64 {
     match workload {
-        Workload::Dnn { phase: Phase::Inference, .. } => BATCH_INFERENCE,
-        Workload::Dnn { phase: Phase::Training, .. } => BATCH_TRAINING,
+        Workload::Net { phase: Phase::Inference, .. } => BATCH_INFERENCE,
+        Workload::Net { phase: Phase::Training, .. } => BATCH_TRAINING,
         Workload::Hpcg(_) => 1,
     }
 }
 
 /// Profile one workload at the paper's default batch for its phase.
-pub fn profile_default(workload: Workload, l2_capacity: u64) -> ProfiledWorkload {
+pub fn profile_default(workload: &Workload, l2_capacity: u64) -> crate::Result<ProfiledWorkload> {
     profile(workload, default_batch(workload), l2_capacity)
 }
 
-/// The Fig 3 / Fig 4 suite in presentation order: each DNN as inference
-/// then training, then HPCG small→large.
+/// Registry ids of the five Table 3 networks, in the paper's order.
+pub const TABLE3_IDS: [&str; 5] = ["alexnet", "googlenet", "vgg16", "resnet18", "squeezenet"];
+
+/// The Fig 3 / Fig 4 suite in presentation order: each Table 3 DNN as
+/// inference then training, then HPCG small→large.
 pub fn paper_suite() -> Vec<Workload> {
     let mut out = Vec::new();
-    for index in 0..nets::all_networks().len() {
-        out.push(Workload::Dnn { index, phase: Phase::Inference });
-        out.push(Workload::Dnn { index, phase: Phase::Training });
+    for id in TABLE3_IDS {
+        out.push(Workload::net(id, Phase::Inference));
+        out.push(Workload::net(id, Phase::Training));
     }
     for size in HpcgSize::ALL {
         out.push(Workload::Hpcg(size));
@@ -80,11 +121,11 @@ pub fn paper_suite() -> Vec<Workload> {
     out
 }
 
-/// Profile the whole suite at the default configuration.
+/// Profile the paper suite at the default configuration.
 pub fn profile_suite(l2_capacity: u64) -> Vec<ProfiledWorkload> {
     paper_suite()
-        .into_iter()
-        .map(|w| profile_default(w, l2_capacity))
+        .iter()
+        .map(|w| profile_default(w, l2_capacity).expect("paper suite ids are builtin"))
         .collect()
 }
 
@@ -123,20 +164,27 @@ mod tests {
     fn every_workload_reads_more_than_it_writes() {
         // Read dominance is the paper's central profiling observation.
         for p in profile_suite(PROFILE_L2) {
-            assert!(
-                p.stats.rw_ratio() > 1.0,
-                "{} ratio {}",
-                p.label,
-                p.stats.rw_ratio()
-            );
+            assert!(p.stats.rw_ratio() > 1.0, "{} ratio {}", p.label, p.stats.rw_ratio());
         }
     }
 
     #[test]
     fn explicit_batch_overrides_default() {
-        let w = Workload::Dnn { index: 0, phase: Phase::Inference };
-        let b4 = profile(w, 4, PROFILE_L2);
-        let b64 = profile(w, 64, PROFILE_L2);
+        let w = Workload::net("alexnet", Phase::Inference);
+        let b4 = profile(&w, 4, PROFILE_L2).unwrap();
+        let b64 = profile(&w, 64, PROFILE_L2).unwrap();
         assert!(b64.stats.l2_writes > 8 * b4.stats.l2_writes);
+    }
+
+    #[test]
+    fn open_ids_resolve_builtins_and_reject_strangers() {
+        let gpt =
+            profile_default(&Workload::net("gpt_block", Phase::Training), PROFILE_L2).unwrap();
+        assert_eq!(gpt.label, "GPT-Block-T");
+        assert!(gpt.stats.l2_reads > 0);
+        let e = profile_default(&Workload::net("bert", Phase::Inference), PROFILE_L2)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bert"), "{e}");
     }
 }

@@ -1,0 +1,306 @@
+//! The open workload registry: builtin nets plus `.net`-descriptor
+//! registration — the workload-side mirror of the technology registry.
+//!
+//! Builtins are the five Table 3 CNNs ([`super::nets`]) plus three
+//! workloads that exercise the extended op vocabulary:
+//!
+//! * [`vit_encoder`] — a ViT-Base-style encoder (conv patchify, 12 blocks
+//!   of pre-norm attention + MLP with residuals, mean-pool head);
+//! * [`gpt_block`]   — a GPT-style decoder block over 128 tokens (token
+//!   embedding, attention + MLP with residuals, full-vocabulary
+//!   unembedding), meaningful in both inference and training phases;
+//! * [`lstm`]        — a 2-layer LSTM language model; the recurrence's
+//!   gate GEMMs are batched over the sequence (`[x;h]` concat → 4h gate
+//!   matmul → elementwise cell/state update per layer).
+//!
+//! [`NetRegistry`] is the engine-owned open set: `Engine::new` seeds it
+//! with the builtins, `--net-file` descriptors append to it, and the
+//! profiler/trace compilers resolve workload ids against it.
+
+use std::sync::{Arc, Mutex};
+
+use super::ir::{NetBuilder, NetIr, Shape};
+use super::nets;
+use crate::util::err::msg;
+
+/// A ViT-Base-style encoder: 16×16 conv patchify of a 224×224 image to a
+/// 14×14 token grid (196 tokens, dim 768), 12 pre-norm transformer
+/// blocks, mean-pool classification head. ~86M weights / ~17.5G MACs.
+pub fn vit_encoder() -> NetIr {
+    let mut b = NetBuilder::new("vit_encoder", "ViT-Enc", Shape::new(3, 224, 224))
+        .conv("patch_embed", 768, 16, 16, 0);
+    for i in 1..=12 {
+        b = b
+            .norm(format!("blk{i}_ln1"))
+            .attention(format!("blk{i}_attn"), 12)
+            .elementwise(format!("blk{i}_res1"), 2)
+            .norm(format!("blk{i}_ln2"))
+            .matmul(format!("blk{i}_mlp_up"), 3072)
+            .matmul(format!("blk{i}_mlp_down"), 768)
+            .elementwise(format!("blk{i}_res2"), 2);
+    }
+    b.norm("ln_f").global_pool("gap").fc("head", 1000).build()
+}
+
+/// A GPT-style decoder block over a 128-token context: GPT-2 vocabulary
+/// embedding (50257×768), one pre-norm attention + MLP block, and the
+/// full-vocabulary unembedding projection. ~84M weights / ~5.9G MACs.
+pub fn gpt_block() -> NetIr {
+    NetBuilder::new("gpt_block", "GPT-Block", Shape::new(1, 128, 1))
+        .embed("embed", 50257, 768)
+        .norm("ln1")
+        .attention("attn", 12)
+        .elementwise("res1", 2)
+        .norm("ln2")
+        .matmul("mlp_up", 3072)
+        .elementwise("gelu", 1)
+        .matmul("mlp_down", 768)
+        .elementwise("res2", 2)
+        .norm("ln_f")
+        .matmul("unembed", 50257)
+        .build()
+}
+
+/// A 2-layer LSTM language model over a 64-token context (embedding dim
+/// 512, hidden 512, 10k vocabulary). Each layer's recurrence is batched
+/// over the sequence: `[x; h]` concat (1024 channels) → the 4-gate GEMM
+/// (2048) → gate nonlinearities → cell/state elementwise updates back to
+/// 512 channels. ~14.4M weights / ~0.6G MACs.
+pub fn lstm() -> NetIr {
+    let mut b =
+        NetBuilder::new("lstm", "LSTM", Shape::new(1, 64, 1)).embed("embed", 10000, 512);
+    for l in 1..=2 {
+        b = b
+            .concat(format!("l{l}_xh"), 1024)
+            .matmul(format!("l{l}_gates"), 2048)
+            .elementwise(format!("l{l}_gate_nl"), 1)
+            .concat(format!("l{l}_cell"), 512)
+            .elementwise(format!("l{l}_state"), 2);
+    }
+    b.matmul("logits", 10000).build()
+}
+
+/// All builtin workloads: the Table 3 CNNs first (paper order), then the
+/// extended-vocabulary nets.
+pub fn builtins() -> Vec<NetIr> {
+    let mut out = nets::all_networks();
+    out.push(vit_encoder());
+    out.push(gpt_block());
+    out.push(lstm());
+    out
+}
+
+/// Look up one builtin by registry id (building only that net — the
+/// standalone profiler resolves through here per call).
+pub fn builtin_net(id: &str) -> Option<NetIr> {
+    Some(match id {
+        "alexnet" => nets::alexnet(),
+        "googlenet" => nets::googlenet(),
+        "vgg16" => nets::vgg16(),
+        "resnet18" => nets::resnet18(),
+        "squeezenet" => nets::squeezenet(),
+        "vit_encoder" => vit_encoder(),
+        "gpt_block" => gpt_block(),
+        "lstm" => lstm(),
+        _ => return None,
+    })
+}
+
+/// An open, thread-safe workload registry (registration order preserved,
+/// builtins first) — the workload-side counterpart of the engine's
+/// technology registry.
+#[derive(Debug)]
+pub struct NetRegistry {
+    nets: Mutex<Vec<Arc<NetIr>>>,
+}
+
+impl NetRegistry {
+    /// A registry seeded with the builtin workloads.
+    pub fn with_builtins() -> NetRegistry {
+        NetRegistry {
+            nets: Mutex::new(builtins().into_iter().map(Arc::new).collect()),
+        }
+    }
+
+    /// An empty registry (tests).
+    pub fn empty() -> NetRegistry {
+        NetRegistry { nets: Mutex::new(Vec::new()) }
+    }
+
+    /// Whether a string value survives the `.net` descriptor round trip:
+    /// nonempty, free of the lexer's delimiters (quotes/newlines), and
+    /// trim-stable (the parser trims values).
+    fn roundtrippable(s: &str) -> bool {
+        !s.is_empty() && !s.contains('"') && !s.contains('\n') && s == s.trim()
+    }
+
+    /// Validate a net for registration: the id, display name, and every
+    /// op name must survive a `.net` descriptor round trip — the
+    /// exactness guarantee the golden tests pin for the whole registry.
+    fn validate(net: &NetIr) -> crate::Result<()> {
+        if net.id.is_empty() {
+            return Err(msg("workload descriptor has an empty id"));
+        }
+        if !Self::roundtrippable(&net.id) || !Self::roundtrippable(&net.name) {
+            return Err(msg(format!(
+                "workload id/name must be nonempty, quote/newline-free and trim-stable \
+                 (id: {:?}, name: {:?})",
+                net.id, net.name
+            )));
+        }
+        for op in &net.ops {
+            if !Self::roundtrippable(&op.name) {
+                return Err(msg(format!(
+                    "workload '{}': op name {:?} would not survive a .net round trip",
+                    net.id, op.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Register a workload. Errors on an empty or duplicate id.
+    pub fn register(&self, net: NetIr) -> crate::Result<String> {
+        Self::validate(&net)?;
+        let mut reg = self.nets.lock().unwrap();
+        if reg.iter().any(|n| n.id == net.id) {
+            return Err(msg(format!("workload '{}' is already registered", net.id)));
+        }
+        let id = net.id.clone();
+        reg.push(Arc::new(net));
+        Ok(id)
+    }
+
+    /// Register unless an *identical* net already holds the id
+    /// (idempotent); a same-id net with different structure is an error —
+    /// silently reusing it would profile the wrong workload.
+    pub fn register_if_absent(&self, net: NetIr) -> crate::Result<String> {
+        Self::validate(&net)?;
+        let mut reg = self.nets.lock().unwrap();
+        if let Some(existing) = reg.iter().find(|n| n.id == net.id) {
+            return if **existing == net {
+                Ok(net.id)
+            } else {
+                Err(msg(format!(
+                    "workload '{}' is already registered with a different structure",
+                    net.id
+                )))
+            };
+        }
+        let id = net.id.clone();
+        reg.push(Arc::new(net));
+        Ok(id)
+    }
+
+    /// Look up a registered workload by id.
+    pub fn get(&self, id: &str) -> Option<Arc<NetIr>> {
+        self.nets.lock().unwrap().iter().find(|n| n.id == id).cloned()
+    }
+
+    /// All registered workloads, in registration order.
+    pub fn list(&self) -> Vec<Arc<NetIr>> {
+        self.nets.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_cnns_and_sequence_models() {
+        let nets = builtins();
+        let ids: Vec<&str> = nets.iter().map(|n| n.id.as_str()).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "alexnet",
+                "googlenet",
+                "vgg16",
+                "resnet18",
+                "squeezenet",
+                "vit_encoder",
+                "gpt_block",
+                "lstm"
+            ]
+        );
+        assert!(builtin_net("gpt_block").is_some());
+        assert!(builtin_net("bert").is_none());
+        // The by-id fast path stays in lockstep with the full listing.
+        for net in nets {
+            assert_eq!(builtin_net(&net.id).as_ref(), Some(&net), "{} lookup", net.id);
+        }
+    }
+
+    #[test]
+    fn vit_matches_vit_base_scale() {
+        let net = vit_encoder();
+        assert_eq!(net.attention_ops(), 12);
+        let w = net.total_weights() as f64;
+        assert!((80e6..95e6).contains(&w), "ViT-B weights {w}");
+        let m = net.total_macs() as f64;
+        assert!((15e9..20e9).contains(&m), "ViT-B MACs {m}");
+        // 196 tokens of dim 768 flow through every block.
+        assert_eq!(net.ops[2].input.numel(), 768 * 14 * 14);
+    }
+
+    #[test]
+    fn gpt_block_embeds_attends_and_unembeds() {
+        let net = gpt_block();
+        assert_eq!(net.ops[0].op.kind(), "embed");
+        assert_eq!(net.attention_ops(), 1);
+        assert_eq!(net.output().c, 50257, "per-token logits");
+        assert_eq!(net.output().h, 128, "token axis preserved");
+        assert!(net.total_weights() > 80_000_000);
+    }
+
+    #[test]
+    fn lstm_gates_are_4x_hidden() {
+        let net = lstm();
+        let gates = net.ops.iter().find(|o| o.name == "l1_gates").unwrap();
+        assert_eq!(gates.input.c, 1024, "[x; h] concat");
+        assert_eq!(gates.output.c, 4 * 512);
+        assert_eq!(net.output().c, 10000);
+    }
+
+    #[test]
+    fn registry_registers_and_rejects_duplicates() {
+        let reg = NetRegistry::with_builtins();
+        assert_eq!(reg.list().len(), 8);
+        assert!(reg.get("vgg16").is_some());
+        assert!(reg.get("nope").is_none());
+        assert!(reg.register(nets::alexnet()).is_err(), "duplicate id");
+        let mut custom = nets::alexnet();
+        custom.id = "alexnet2".into();
+        assert_eq!(reg.register(custom).unwrap(), "alexnet2");
+        assert_eq!(reg.list().len(), 9);
+        let mut bad = nets::alexnet();
+        bad.id = String::new();
+        assert!(reg.register(bad).is_err(), "empty id");
+    }
+
+    #[test]
+    fn registration_rejects_names_that_break_the_net_round_trip() {
+        let reg = NetRegistry::empty();
+        let mut padded = nets::alexnet();
+        padded.name = " AlexNet ".into();
+        assert!(reg.register(padded).is_err(), "trim-unstable name");
+        let mut quoted = nets::alexnet();
+        quoted.ops[0].name = "conv\"1".into();
+        assert!(reg.register(quoted).is_err(), "quote in an op name");
+        let mut blank = nets::alexnet();
+        blank.ops[0].name = String::new();
+        assert!(reg.register(blank).is_err(), "empty op name");
+        assert!(reg.register(nets::alexnet()).is_ok(), "clean net registers");
+    }
+
+    #[test]
+    fn register_if_absent_is_idempotent_but_guards_structure() {
+        let reg = NetRegistry::with_builtins();
+        assert_eq!(reg.register_if_absent(lstm()).unwrap(), "lstm");
+        assert_eq!(reg.list().len(), 8, "identical net is idempotent");
+        let mut tweaked = lstm();
+        tweaked.name = "LSTM-big".into();
+        assert!(reg.register_if_absent(tweaked).is_err(), "same id, different net");
+    }
+}

@@ -27,7 +27,9 @@ fn assert_bits(a: f64, b: f64, what: &str) {
     assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
 }
 
-const ALEXNET_I: Workload = Workload::Dnn { index: 0, phase: Phase::Inference };
+fn alexnet_i() -> Workload {
+    Workload::net("alexnet", Phase::Inference)
+}
 
 /// Brute-force nondominated set: point i survives iff no j dominates it.
 fn brute_force_frontier(costs: &[Vec<f64>]) -> Vec<usize> {
@@ -138,7 +140,7 @@ fn grid_singleton_space_is_bit_identical_to_golden() {
     let engine = Engine::shared();
     for (kind, mb) in [(BitcellKind::SttMram, 7u64), (BitcellKind::SotMram, 3u64)] {
         let tech = kind.tech_id();
-        let space = Space::new().tech([tech]).capacity_mb([mb]).workload([ALEXNET_I]);
+        let space = Space::new().tech([tech]).capacity_mb([mb]).workload([alexnet_i()]);
         let all_objectives = [
             Objective::Edp,
             Objective::Energy,
@@ -164,7 +166,7 @@ fn grid_singleton_space_is_bit_identical_to_golden() {
         assert_bits(direct.ppa.area, via_explore.design.ppa.area, &what);
 
         // vs the equivalent direct engine query, through to the roll-up.
-        let q = Query::tune(tech, mb * MB).with_workload(ALEXNET_I);
+        let q = Query::tune(tech, mb * MB).with_workload(alexnet_i());
         let via_query = engine.evaluate(&q).unwrap();
         let a = via_query.workload.as_ref().unwrap();
         let b = via_explore.workload.as_ref().unwrap();
@@ -316,7 +318,7 @@ fn space_descriptor_runs_end_to_end() {
         .tech(["sram", "stt"])
         .capacity_mb([2])
         .spec_axis("mtj.tau0", [1e-9])
-        .workload([ALEXNET_I]);
+        .workload([alexnet_i()]);
     let r = explore::run(&engine, &mixed, &[Objective::Edp], &SearchConfig::default()).unwrap();
     assert_eq!(r.outcome.evaluated.len(), 1, "stt side evaluates");
     assert_eq!(r.outcome.errors.len(), 1, "sram side skipped with an explanation");

@@ -8,15 +8,24 @@
 //! 3. A custom technology defined purely by a descriptor (no Rust
 //!    changes) round-trips (parse → serialize → parse), characterizes,
 //!    EDAP-tunes, and answers workload queries end to end.
+//! 4. The workload-IR redesign is **bit-identical** to the seed workload
+//!    model on the five Table 3 networks: memstats counters and trace
+//!    fingerprints are pinned to constants computed from the pre-IR
+//!    implementation.
+//! 5. `.net` workload descriptors round-trip exactly for every builtin.
+//! 6. Transformer workloads (builtin and descriptor-defined) evaluate end
+//!    to end through `Engine::evaluate_many`.
 
 use deepnvm::device::bitcell::{BitcellKind, BitcellParams};
 use deepnvm::device::characterize::characterize_kind;
 use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
 use deepnvm::experiments::{tables, Output, Params};
+use deepnvm::gpusim::net_trace;
 use deepnvm::nvsim::optimizer::explore;
 use deepnvm::util::units::MB;
-use deepnvm::workloads::memstats::Phase;
+use deepnvm::workloads::memstats::{net_stats, MemStats, Phase};
 use deepnvm::workloads::profiler::Workload;
+use deepnvm::workloads::{netdesc, nets, registry};
 
 fn assert_bits(a: f64, b: f64, what: &str) {
     assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
@@ -168,7 +177,7 @@ fn custom_tech_runs_end_to_end() {
 
     // EDAP tuning and a full workload query produce finite physics.
     let q = Query::tune(id.clone(), 4 * MB)
-        .with_workload(Workload::Dnn { index: 0, phase: Phase::Inference });
+        .with_workload(Workload::net("alexnet", Phase::Inference));
     let ev = engine.evaluate(&q).unwrap();
     assert_eq!(ev.capacity_bytes, 4 * MB);
     let ppa = &ev.design.ppa;
@@ -192,10 +201,10 @@ fn custom_tech_runs_end_to_end() {
 fn evaluate_many_mixes_builtin_and_custom_techs() {
     let engine = Engine::new();
     engine.register(descriptor::parse(RERAM_LIKE).unwrap()).unwrap();
-    let w = Workload::Dnn { index: 0, phase: Phase::Inference };
+    let w = Workload::net("alexnet", Phase::Inference);
     let queries: Vec<Query> = ["sram", "stt", "sot", "reram_demo"]
         .iter()
-        .map(|t| Query::tune(*t, 2 * MB).with_workload(w))
+        .map(|t| Query::tune(*t, 2 * MB).with_workload(w.clone()))
         .collect();
     let evals = engine.evaluate_many(&queries);
     assert_eq!(evals.len(), 4);
@@ -220,4 +229,225 @@ fn registry_spec_reserializes_after_tuning() {
     // The built-ins survive the same loop.
     let sot = engine.tech("sot").unwrap();
     assert_eq!(descriptor::parse(&descriptor::serialize(&sot)).unwrap(), TechSpec::sot());
+}
+
+// ===== Workload-IR golden regressions =====
+//
+// The IR redesign replaced the closed `Dnn`/`Layer` model with per-op
+// lowering rules. These pins hold the five Table 3 networks to the
+// *seed's exact arithmetic*: the memstats counters and trace fingerprints
+// below were computed from the pre-IR implementation (the u64-exact
+// mirror in `rust/tools/goldgen.py`) and must never drift.
+
+/// Seed memstats counters at the paper's profiling point (3MB L2,
+/// CaffeIm2col): per net, inference at batch 4 and training at batch 64 —
+/// `[l2_reads, l2_writes, dram_reads, dram_writes]` in 32B transactions.
+const GOLDEN_MEMSTATS: [(&str, [u64; 4], [u64; 4]); 5] = [
+    ("alexnet", [15157655, 2593457, 9744511, 2097037], [376834444, 142318764, 65955984, 55376820]),
+    (
+        "googlenet",
+        [19422608, 7031140, 5381176, 4260512],
+        [825791656, 308035688, 202282736, 166796984],
+    ),
+    (
+        "vgg16",
+        [152158208, 48411892, 64239320, 46920192],
+        [6671576200, 2256149448, 1000639920, 911179480],
+    ),
+    (
+        "resnet18",
+        [18423104, 8555764, 8541848, 7077376],
+        [896939464, 396105480, 172193072, 156938904],
+    ),
+    (
+        "squeezenet",
+        [10764901, 6012617, 3974009, 4086997],
+        [491188636, 223669044, 165991328, 144386044],
+    ),
+];
+
+fn assert_stats(got: MemStats, want: [u64; 4], what: &str) {
+    assert_eq!(
+        [got.l2_reads, got.l2_writes, got.dram_reads, got.dram_writes],
+        want,
+        "{what}"
+    );
+}
+
+/// Golden 4a: every Table 3 network, expressed in the IR, reproduces the
+/// seed traffic model's counters exactly in both phases.
+#[test]
+fn table3_memstats_bit_identical_to_seed() {
+    for (id, inference, training) in GOLDEN_MEMSTATS {
+        let net = registry::builtin_net(id).expect("table3 builtin");
+        assert_stats(
+            net_stats(&net, Phase::Inference, 4, 3 * MB),
+            inference,
+            &format!("{id} inference@4"),
+        );
+        assert_stats(
+            net_stats(&net, Phase::Training, 64, 3 * MB),
+            training,
+            &format!("{id} training@64"),
+        );
+    }
+}
+
+/// Seed trace fingerprints at the Fig 7 batch sizes: total accesses,
+/// total writes, and a position-weighted checksum over the first 100k
+/// accesses (`sum (i+1)·(addr + write)` mod 2^64).
+const GOLDEN_TRACES: [(&str, u64, u64, u64, u64); 5] = [
+    ("alexnet", 4, 3852026, 466007, 12226060976007463306),
+    ("googlenet", 1, 1630100, 439448, 11360525857203475500),
+    ("vgg16", 1, 15648832, 3025744, 7160659912432422959),
+    ("resnet18", 1, 1857716, 534736, 11360525857203475500),
+    ("squeezenet", 1, 998377, 375790, 16663130554074144388),
+];
+
+/// Golden 4b: the IR trace compiler emits byte-for-byte the seed's
+/// streams for the Table 3 networks — length, write mix, and the exact
+/// prefix order.
+#[test]
+fn table3_traces_bit_identical_to_seed() {
+    for (id, batch, want_total, want_writes, want_csum) in GOLDEN_TRACES {
+        let net = registry::builtin_net(id).expect("table3 builtin");
+        let (mut total, mut writes, mut csum) = (0u64, 0u64, 0u64);
+        for (i, a) in net_trace(&net, batch).enumerate() {
+            total += 1;
+            writes += a.write as u64;
+            if i < 100_000 {
+                csum = csum.wrapping_add(
+                    ((i as u64) + 1).wrapping_mul(a.addr.wrapping_add(a.write as u64)),
+                );
+            }
+        }
+        assert_eq!(total, want_total, "{id} trace length");
+        assert_eq!(writes, want_writes, "{id} trace writes");
+        assert_eq!(csum, want_csum, "{id} trace prefix checksum");
+    }
+}
+
+/// Golden 5: `.net` descriptor round-trips are exact for every builtin
+/// (CNNs with branch re-roots, transformer/LSTM with the new ops), and a
+/// round-tripped net profiles identically.
+#[test]
+fn net_descriptors_round_trip_exactly() {
+    for net in registry::builtins() {
+        let text = netdesc::serialize(&net);
+        let back = netdesc::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", net.id));
+        assert_eq!(back, net, "round trip of '{}'", net.id);
+        assert_eq!(netdesc::serialize(&back), text, "second generation stable for '{}'", net.id);
+        let a = net_stats(&net, Phase::Training, 8, 3 * MB);
+        let b = net_stats(&back, Phase::Training, 8, 3 * MB);
+        assert_eq!(a, b, "{}: round-tripped net profiles identically", net.id);
+    }
+}
+
+/// A transformer workload defined purely as `.net` descriptor text — the
+/// workload-side analogue of the ReRAM tech descriptor above.
+const GPT_NANO_NET: &str = r#"
+# A miniature decoder block for the e2e test.
+[net]
+id = "gpt_nano"
+name = "GPT-Nano"
+input = "1x32x1"
+
+[embed]
+name = "embed"
+vocab = 2000
+dim = 128
+
+[norm]
+name = "ln1"
+
+[attention]
+name = "attn"
+heads = 4
+
+[elementwise]
+name = "res1"
+inputs = 2
+
+[matmul]
+name = "mlp_up"
+out = 512
+
+[matmul]
+name = "mlp_down"
+out = 128
+
+[matmul]
+name = "unembed"
+out = 2000
+"#;
+
+/// Golden 6: transformer workloads — builtin and descriptor-defined — run
+/// end to end through `Engine::evaluate_many` with full cross-layer
+/// roll-ups, on every technology class.
+#[test]
+fn transformer_workloads_evaluate_end_to_end() {
+    let engine = Engine::new();
+    let id = engine
+        .register_net(netdesc::parse(GPT_NANO_NET).unwrap())
+        .unwrap();
+    assert_eq!(id, "gpt_nano");
+    let workloads = [
+        Workload::net("vit_encoder", Phase::Inference),
+        Workload::net("gpt_block", Phase::Inference),
+        Workload::net("gpt_block", Phase::Training),
+        Workload::net("lstm", Phase::Training),
+        Workload::net("gpt_nano", Phase::Inference),
+    ];
+    let mut queries = Vec::new();
+    for tech in ["sram", "stt", "sot"] {
+        for w in &workloads {
+            queries.push(Query::tune(tech, 2 * MB).with_workload(w.clone()));
+        }
+    }
+    let evals = engine.evaluate_many(&queries);
+    assert_eq!(evals.len(), queries.len());
+    for (q, ev) in queries.iter().zip(&evals) {
+        let ev = ev.as_ref().unwrap_or_else(|e| panic!("{}: {e}", q.tech));
+        let w = ev.workload.as_ref().expect("workload roll-up present");
+        assert!(
+            w.rollup.total_energy() > 0.0 && w.rollup.total_time() > 0.0,
+            "{} {}: degenerate roll-up",
+            q.tech,
+            w.label
+        );
+        assert!(w.stats.rw_ratio() > 1.0, "{}: transformer stays read-dominant", w.label);
+    }
+    // Labels carry display names; the descriptor net memoizes per engine.
+    let labels: Vec<&str> = evals
+        .iter()
+        .map(|e| e.as_ref().unwrap().workload.as_ref().unwrap().label.as_str())
+        .collect();
+    assert!(labels.contains(&"GPT-Block-T"));
+    assert!(labels.contains(&"GPT-Nano-I"));
+    let s = engine.stats();
+    assert_eq!(
+        s.profile.misses,
+        workloads.len() as u64,
+        "each (workload, batch, capacity) profiles once across technologies"
+    );
+}
+
+/// The five Table 3 nets keep their Table 3 identity through the IR: the
+/// `repro workloads` quantities derive from the same graphs the traffic
+/// model consumes.
+#[test]
+fn table3_identities_survive_the_ir() {
+    let expect = [
+        ("alexnet", 5, 3),
+        ("googlenet", 57, 1),
+        ("vgg16", 13, 3),
+        ("resnet18", 17, 1),
+        ("squeezenet", 26, 0),
+    ];
+    for ((id, conv, fc), net) in expect.iter().zip(nets::all_networks()) {
+        assert_eq!(net.id, *id);
+        assert_eq!(net.conv_layers(), *conv, "{id}");
+        assert_eq!(net.fc_layers(), *fc, "{id}");
+        assert_eq!(net.attention_ops(), 0, "{id}: CNNs have no attention");
+    }
 }

@@ -7,10 +7,10 @@ use deepnvm::analysis::isocapacity::iso_capacity;
 use deepnvm::device::bitcell::BitcellKind;
 use deepnvm::device::characterize::characterize;
 use deepnvm::engine::Engine;
-use deepnvm::gpusim::{capacity_sweep, dnn_trace};
+use deepnvm::gpusim::{capacity_sweep, net_trace};
 use deepnvm::nvsim::optimizer::{bitcell_for, tuned_cache};
 use deepnvm::util::units::MB;
-use deepnvm::workloads::memstats::{dnn_stats_model, Phase, TrafficModel};
+use deepnvm::workloads::memstats::{net_stats_model, Phase, TrafficModel};
 use deepnvm::workloads::nets;
 use deepnvm::workloads::profiler::{profile_suite, PROFILE_L2};
 
@@ -50,11 +50,11 @@ fn analytic_and_trace_models_agree_on_direction() {
     // The analytic spill model and the trace-driven simulator must agree
     // that a larger L2 cuts AlexNet's DRAM traffic.
     let net = nets::alexnet();
-    let a3 = dnn_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::CaffeIm2col);
-    let a24 = dnn_stats_model(&net, Phase::Inference, 4, 24 * MB, TrafficModel::CaffeIm2col);
+    let a3 = net_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::CaffeIm2col);
+    let a24 = net_stats_model(&net, Phase::Inference, 4, 24 * MB, TrafficModel::CaffeIm2col);
     assert!(a24.dram_reads < a3.dram_reads);
 
-    let sweep = capacity_sweep(dnn_trace(&net, 4), &[24 * MB]);
+    let sweep = capacity_sweep(net_trace(&net, 4), &[24 * MB]);
     assert!(sweep[1].result.dram_accesses() < sweep[0].result.dram_accesses());
 }
 
@@ -62,8 +62,8 @@ fn analytic_and_trace_models_agree_on_direction() {
 fn fused_traffic_model_writes_less_than_caffe() {
     // The Pallas (fused) path skips the materialized column buffer.
     let net = nets::vgg16();
-    let caffe = dnn_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::CaffeIm2col);
-    let fused = dnn_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::FusedTiles);
+    let caffe = net_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::CaffeIm2col);
+    let fused = net_stats_model(&net, Phase::Inference, 4, 3 * MB, TrafficModel::FusedTiles);
     assert!(fused.l2_writes < caffe.l2_writes / 2);
     assert!(fused.l2_reads < caffe.l2_reads);
 }

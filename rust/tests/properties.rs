@@ -10,8 +10,9 @@ use deepnvm::nvsim::geometry::enumerate;
 use deepnvm::util::check::{forall, forall_explain};
 use deepnvm::util::rng::Rng;
 use deepnvm::util::units::MB;
-use deepnvm::workloads::memstats::{dnn_stats, Phase};
-use deepnvm::workloads::nets;
+use deepnvm::workloads::ir::{NetIr, Op, Shape};
+use deepnvm::workloads::memstats::{net_stats, Phase};
+use deepnvm::workloads::{netdesc, nets};
 
 /// LRU inclusion (stack) property: with sets fixed, doubling associativity
 /// never turns a hit into a miss over any access sequence.
@@ -94,10 +95,11 @@ fn organization_enumeration_invariants() {
 }
 
 /// Traffic monotonicity: more batch → more traffic, bigger L2 → no more
-/// DRAM traffic, training ⊇ inference. Holds for every network.
+/// DRAM traffic, training ⊇ inference. Holds for every registered
+/// builtin — CNNs, transformer, and LSTM op mixes alike.
 #[test]
 fn memstats_monotonicity() {
-    let networks = nets::all_networks();
+    let networks = deepnvm::workloads::registry::builtins();
     forall_explain(
         23,
         30,
@@ -111,18 +113,18 @@ fn memstats_monotonicity() {
         |&(idx, batch, l2_mb)| {
             let net = &networks[idx];
             for phase in [Phase::Inference, Phase::Training] {
-                let s = dnn_stats(net, phase, batch, l2_mb * MB);
-                let s2 = dnn_stats(net, phase, batch * 2, l2_mb * MB);
+                let s = net_stats(net, phase, batch, l2_mb * MB);
+                let s2 = net_stats(net, phase, batch * 2, l2_mb * MB);
                 if s2.l2_reads <= s.l2_reads {
                     return Err(format!("{}: batch↑ traffic↓ {phase:?}", net.name));
                 }
-                let sbig = dnn_stats(net, phase, batch, 2 * l2_mb * MB);
+                let sbig = net_stats(net, phase, batch, 2 * l2_mb * MB);
                 if sbig.dram_reads > s.dram_reads {
                     return Err(format!("{}: L2↑ dram↑ {phase:?}", net.name));
                 }
             }
-            let inf = dnn_stats(net, Phase::Inference, batch, l2_mb * MB);
-            let tr = dnn_stats(net, Phase::Training, batch, l2_mb * MB);
+            let inf = net_stats(net, Phase::Inference, batch, l2_mb * MB);
+            let tr = net_stats(net, Phase::Training, batch, l2_mb * MB);
             if tr.l2_reads < inf.l2_reads || tr.l2_writes < inf.l2_writes {
                 return Err(format!("{}: training under inference", net.name));
             }
@@ -256,4 +258,98 @@ fn rng_clone_stream_stability() {
             (0..10).all(|_| a.next_u64() == b.next_u64())
         },
     );
+}
+
+/// A random placement-valid net over the full op vocabulary. Invalid
+/// draws (attention heads not dividing the dim, kernels outside the
+/// padded extent, …) are skipped by the checked `push_op` path.
+fn random_net(rng: &mut Rng) -> NetIr {
+    let input = Shape::new(
+        *rng.pick(&[1u64, 3, 16, 64]),
+        *rng.pick(&[8u64, 16, 32, 57]),
+        *rng.pick(&[1u64, 8, 16]),
+    );
+    let mut net = NetIr {
+        id: "rand".into(),
+        name: "Rand-Net".into(),
+        top5_error: if rng.chance(0.5) { Some(rng.f64_in(1.0, 30.0)) } else { None },
+        input,
+        ops: Vec::new(),
+    };
+    let n_ops = rng.usize_in(1, 10);
+    let mut attempts = 0;
+    while net.ops.len() < n_ops && attempts < 100 {
+        attempts += 1;
+        let op = match rng.usize_in(0, 10) {
+            0 => Op::Conv {
+                out_c: 1 + rng.gen_range(64),
+                kernel: 1 + rng.gen_range(5),
+                stride: 1 + rng.gen_range(2),
+                pad: rng.gen_range(3),
+                groups: *rng.pick(&[1u64, 2]),
+            },
+            1 => Op::Fc { out: 1 + rng.gen_range(512) },
+            2 => Op::Pool {
+                kernel: 1 + rng.gen_range(3),
+                stride: 1 + rng.gen_range(2),
+                pad: rng.gen_range(2),
+            },
+            3 => Op::GlobalPool,
+            4 => Op::Concat { out_c: 1 + rng.gen_range(128) },
+            5 => Op::MatMul { out: 1 + rng.gen_range(512) },
+            6 => Op::Attention { heads: *rng.pick(&[1u64, 2, 4]) },
+            7 => Op::Norm,
+            8 => Op::Elementwise { inputs: 1 + rng.gen_range(3) },
+            _ => Op::Embed { vocab: 100 + rng.gen_range(1000), dim: 1 + rng.gen_range(256) },
+        };
+        // Occasionally re-root at the net input — a branch, which the
+        // serializer must encode as an explicit `input =` line.
+        let reroot = if rng.chance(0.2) { Some(net.input) } else { None };
+        let name = format!("op{}", net.ops.len());
+        let _ = net.push_op(name, op, reroot);
+    }
+    net
+}
+
+/// `.net` descriptor round-trip: for arbitrary placement-valid nets,
+/// `parse(serialize(net)) == net` exactly and the text is
+/// generation-stable — the same guarantee the `.tech` format carries.
+#[test]
+fn net_descriptor_round_trip_property() {
+    forall_explain(
+        0xD00D,
+        60,
+        random_net,
+        |net| {
+            let text = netdesc::serialize(net);
+            let back = netdesc::parse(&text).map_err(|e| format!("parse failed: {e}\n{text}"))?;
+            if &back != net {
+                return Err(format!("round trip drifted:\n{text}"));
+            }
+            if netdesc::serialize(&back) != text {
+                return Err(format!("serialization unstable:\n{text}"));
+            }
+            // The round-tripped graph is traffic-identical too.
+            if !net.ops.is_empty() {
+                let a = net_stats(net, Phase::Training, 2, 3 * MB);
+                let b = net_stats(&back, Phase::Training, 2, 3 * MB);
+                if a != b {
+                    return Err("round-tripped net profiles differently".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The five Table 3 CNN descriptors keep their regression identity
+/// through a serialize → parse cycle (weights/MACs/layer counts).
+#[test]
+fn table3_descriptors_preserve_derived_counts() {
+    for net in nets::all_networks() {
+        let back = netdesc::parse(&netdesc::serialize(&net)).unwrap();
+        assert_eq!(back.total_weights(), net.total_weights(), "{}", net.id);
+        assert_eq!(back.total_macs(), net.total_macs(), "{}", net.id);
+        assert_eq!(back.conv_layers(), net.conv_layers(), "{}", net.id);
+    }
 }

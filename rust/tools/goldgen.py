@@ -1,0 +1,627 @@
+#!/usr/bin/env python3
+"""Mirror of the seed workload model (dnn.rs/nets.rs/memstats.rs/trace.rs)
+and of the planned IR-driven lowering, in exact u64 arithmetic.
+
+Asserts the IR lowering is bit-identical to the seed on the five Table 3
+CNNs, then emits golden constants to pin in tests/golden.rs.
+"""
+
+MASK = (1 << 64) - 1
+ELEM = 4
+TRANS = 32
+TILE = 128
+LINE = 128
+TB_TILE = 128
+MB = 1 << 20
+
+WEIGHT_BASE = 0x1_0000_0000
+COL_BASE = 0x8_0000_0000
+ACT_A = 0x10_0000_0000
+ACT_B = 0x18_0000_0000
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def spill(b, l2):
+    share = int(l2 * 0.5)
+    return max(0, b - share)
+
+
+# ---------------- shapes / builder (shared by seed + IR) ----------------
+
+class Shape:
+    def __init__(self, c, h, w):
+        self.c, self.h, self.w = c, h, w
+
+    def numel(self):
+        return self.c * self.h * self.w
+
+    def __eq__(self, o):
+        return (self.c, self.h, self.w) == (o.c, o.h, o.w)
+
+    def __repr__(self):
+        return f"{self.c}x{self.h}x{self.w}"
+
+
+class Op:
+    def __init__(self, kind, name, **kw):
+        self.kind, self.name, self.kw = kind, name, kw
+        self.input = None
+        self.output = None
+
+    def weights(self):
+        k = self.kw
+        if self.kind == "conv":
+            return k["out_c"] * (self.input.c // k["groups"]) * k["kernel"] ** 2
+        if self.kind == "fc":
+            return k["out"] * self.input.numel()
+        if self.kind == "matmul":
+            return k["out"] * self.input.c
+        if self.kind == "attention":
+            return 4 * self.input.c * self.input.c
+        if self.kind == "norm":
+            return 2 * self.input.c
+        if self.kind == "embed":
+            return k["vocab"] * k["dim"]
+        return 0
+
+    def macs(self):
+        if self.kind == "conv":
+            return self.weights() * self.output.h * self.output.w
+        if self.kind == "fc":
+            return self.weights()
+        if self.kind == "matmul":
+            return self.weights() * self.input.h * self.input.w
+        if self.kind == "attention":
+            d = self.input.c
+            seq = self.input.h * self.input.w
+            return 4 * d * d * seq + 2 * d * seq * seq
+        return 0
+
+
+def out_hw(h, k, s, p):
+    return (h + 2 * p - k) // s + 1
+
+
+class Builder:
+    def __init__(self, name, err, shape):
+        self.name, self.err, self.inp = name, err, shape
+        self.cur = shape
+        self.root = None
+        self.ops = []
+
+    def push(self, op, output):
+        op.input = self.cur
+        op.output = output
+        self.ops.append(op)
+        self.cur = output
+        return self
+
+    def conv(self, n, oc, k, s, p, g=1):
+        o = Shape(oc, out_hw(self.cur.h, k, s, p), out_hw(self.cur.w, k, s, p))
+        return self.push(Op("conv", n, out_c=oc, kernel=k, stride=s, pad=p, groups=g), o)
+
+    def pool(self, n, k, s, p):
+        o = Shape(self.cur.c, out_hw(self.cur.h, k, s, p), out_hw(self.cur.w, k, s, p))
+        return self.push(Op("pool", n, kernel=k, stride=s, pad=p), o)
+
+    def gap(self, n):
+        return self.push(Op("global_pool", n), Shape(self.cur.c, 1, 1))
+
+    def fc(self, n, out):
+        return self.push(Op("fc", n, out=out), Shape(out, 1, 1))
+
+    def begin(self):
+        self.root = self.cur
+        return self
+
+    def branch(self):
+        self.cur = self.root
+        return self
+
+    def concat(self, n, oc):
+        o = Shape(oc, self.cur.h, self.cur.w)
+        self.root = None
+        return self.push(Op("concat", n, out_c=oc), o)
+
+    def matmul(self, n, out):
+        return self.push(Op("matmul", n, out=out), Shape(out, self.cur.h, self.cur.w))
+
+    def attention(self, n, heads):
+        assert self.cur.c % heads == 0
+        return self.push(Op("attention", n, heads=heads), Shape(self.cur.c, self.cur.h, self.cur.w))
+
+    def norm(self, n):
+        return self.push(Op("norm", n), Shape(self.cur.c, self.cur.h, self.cur.w))
+
+    def elementwise(self, n, inputs):
+        return self.push(Op("elementwise", n, inputs=inputs), Shape(self.cur.c, self.cur.h, self.cur.w))
+
+    def embed(self, n, vocab, dim):
+        return self.push(Op("embed", n, vocab=vocab, dim=dim), Shape(dim, self.cur.h, self.cur.w))
+
+
+# ---------------- the five nets ----------------
+
+def alexnet():
+    return (Builder("AlexNet", 16.4, Shape(3, 227, 227))
+            .conv("conv1", 96, 11, 4, 0).pool("pool1", 3, 2, 0)
+            .conv("conv2", 256, 5, 1, 2, 2).pool("pool2", 3, 2, 0)
+            .conv("conv3", 384, 3, 1, 1).conv("conv4", 384, 3, 1, 1, 2)
+            .conv("conv5", 256, 3, 1, 1, 2).pool("pool5", 3, 2, 0)
+            .fc("fc6", 4096).fc("fc7", 4096).fc("fc8", 1000))
+
+
+def inception(b, tag, c1, c3r, c3, c5r, c5, cp):
+    return (b.begin()
+            .branch().conv(f"i{tag}_1x1", c1, 1, 1, 0)
+            .branch().conv(f"i{tag}_3x3r", c3r, 1, 1, 0).conv(f"i{tag}_3x3", c3, 3, 1, 1)
+            .branch().conv(f"i{tag}_5x5r", c5r, 1, 1, 0).conv(f"i{tag}_5x5", c5, 5, 1, 2)
+            .branch().pool(f"i{tag}_pool", 3, 1, 1).conv(f"i{tag}_proj", cp, 1, 1, 0)
+            .concat(f"i{tag}_concat", c1 + c3 + c5 + cp))
+
+
+def googlenet():
+    b = (Builder("GoogLeNet", 6.7, Shape(3, 224, 224))
+         .conv("conv1", 64, 7, 2, 3).pool("pool1", 3, 2, 1)
+         .conv("conv2_reduce", 64, 1, 1, 0).conv("conv2", 192, 3, 1, 1).pool("pool2", 3, 2, 1))
+    b = inception(b, "3a", 64, 96, 128, 16, 32, 32)
+    b = inception(b, "3b", 128, 128, 192, 32, 96, 64)
+    b = b.pool("pool3", 3, 2, 1)
+    b = inception(b, "4a", 192, 96, 208, 16, 48, 64)
+    b = inception(b, "4b", 160, 112, 224, 24, 64, 64)
+    b = inception(b, "4c", 128, 128, 256, 24, 64, 64)
+    b = inception(b, "4d", 112, 144, 288, 32, 64, 64)
+    b = inception(b, "4e", 256, 160, 320, 32, 128, 128)
+    b = b.pool("pool4", 3, 2, 1)
+    b = inception(b, "5a", 256, 160, 320, 32, 128, 128)
+    b = inception(b, "5b", 384, 192, 384, 48, 128, 128)
+    return b.gap("gap").fc("fc", 1000)
+
+
+def vgg16():
+    b = Builder("VGG-16", 7.3, Shape(3, 224, 224))
+    cfg = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+    for i, (ch, reps) in enumerate(cfg, 1):
+        for j in range(1, reps + 1):
+            b = b.conv(f"conv{i}_{j}", ch, 3, 1, 1)
+        b = b.pool(f"pool{i}", 2, 2, 0)
+    return b.fc("fc6", 4096).fc("fc7", 4096).fc("fc8", 1000)
+
+
+def resnet18():
+    b = Builder("ResNet-18", 10.71, Shape(3, 224, 224)).conv("conv1", 64, 7, 2, 3).pool("pool1", 3, 2, 1)
+    for (l, ch, s) in [(1, 64, 1), (2, 128, 2), (3, 256, 2), (4, 512, 2)]:
+        for blk in (1, 2):
+            stride = s if blk == 1 else 1
+            b = b.conv(f"l{l}b{blk}c1", ch, 3, stride, 1).conv(f"l{l}b{blk}c2", ch, 3, 1, 1)
+    return b.gap("gap").fc("fc", 1000)
+
+
+def squeezenet():
+    def fire(b, i, s, e):
+        return (b.conv(f"f{i}s", s, 1, 1, 0).begin()
+                .branch().conv(f"f{i}e1", e, 1, 1, 0)
+                .branch().conv(f"f{i}e3", e, 3, 1, 1)
+                .concat(f"f{i}s", 2 * e))
+    b = Builder("SqueezeNet", 16.4, Shape(3, 224, 224)).conv("conv1", 96, 7, 2, 0).pool("pool1", 3, 2, 0)
+    b = fire(b, 2, 16, 64)
+    b = fire(b, 3, 16, 64)
+    b = fire(b, 4, 32, 128)
+    b = b.pool("pool4", 3, 2, 0)
+    b = fire(b, 5, 32, 128)
+    b = fire(b, 6, 48, 192)
+    b = fire(b, 7, 48, 192)
+    b = fire(b, 8, 64, 256)
+    b = b.pool("pool8", 3, 2, 0)
+    b = fire(b, 9, 64, 256)
+    return b.conv("conv10", 1000, 1, 1, 0).gap("gap")
+
+
+# ---------------- new builtin workloads ----------------
+
+def vit_encoder():
+    b = Builder("ViT-Enc", None, Shape(3, 224, 224)).conv("patch_embed", 768, 16, 16, 0)
+    for i in range(1, 13):
+        b = (b.norm(f"blk{i}_ln1").attention(f"blk{i}_attn", 12).elementwise(f"blk{i}_res1", 2)
+             .norm(f"blk{i}_ln2").matmul(f"blk{i}_mlp_up", 3072).matmul(f"blk{i}_mlp_down", 768)
+             .elementwise(f"blk{i}_res2", 2))
+    return b.norm("ln_f").gap("gap").fc("head", 1000)
+
+
+def gpt_block():
+    return (Builder("GPT-Block", None, Shape(1, 128, 1))
+            .embed("embed", 50257, 768)
+            .norm("ln1").attention("attn", 12).elementwise("res1", 2)
+            .norm("ln2").matmul("mlp_up", 3072).elementwise("gelu", 1)
+            .matmul("mlp_down", 768).elementwise("res2", 2)
+            .norm("ln_f").matmul("unembed", 50257))
+
+
+def lstm():
+    b = Builder("LSTM", None, Shape(1, 64, 1)).embed("embed", 10000, 512)
+    for l in (1, 2):
+        b = (b.concat(f"l{l}_xh", 1024).matmul(f"l{l}_gates", 2048)
+             .elementwise(f"l{l}_gate_nl", 1).concat(f"l{l}_cell", 512)
+             .elementwise(f"l{l}_state", 2))
+    return b.matmul("logits", 10000)
+
+
+# ---------------- SEED memstats (verbatim formulas) ----------------
+
+def seed_gemm_dims(op, batch):
+    if op.kind == "conv":
+        return (batch * op.output.h * op.output.w, op.kw["out_c"],
+                (op.input.c // op.kw["groups"]) * op.kw["kernel"] ** 2)
+    if op.kind == "fc":
+        return (batch, op.kw["out"], op.input.numel())
+    return None
+
+
+def seed_col_bytes(op, batch):
+    if op.kind == "conv" and op.kw["kernel"] > 1:
+        m, _n, k = seed_gemm_dims(op, batch)
+        return m * k * op.kw["groups"] * ELEM
+    return 0
+
+
+def from_bytes(l2r, l2w, dr, dw):
+    return [l2r // TRANS, l2w // TRANS, dr // TRANS, dw // TRANS]
+
+
+def seed_layer_forward(op, batch, l2, caffe):
+    i = op.input.numel() * batch * ELEM
+    o = op.output.numel() * batch * ELEM
+    w = op.weights() * ELEM
+    dims = seed_gemm_dims(op, batch)
+    if dims:
+        m, n, _k = dims
+        col = seed_col_bytes(op, batch) if caffe else 0
+        act = col if col > 0 else i
+        l2r = min(i, act) + act * ceil_div(n, TILE) + w * ceil_div(m, TILE)
+        l2w = o + col
+        dr = w + spill(i, l2) + spill(col, l2)
+        dw = spill(o, l2) + spill(col, l2)
+        return from_bytes(l2r, l2w, dr, dw)
+    return from_bytes(i, o, spill(i, l2), spill(o, l2))
+
+
+def seed_layer_backward(op, batch, l2, caffe):
+    i = op.input.numel() * batch * ELEM
+    o = op.output.numel() * batch * ELEM
+    w = op.weights() * ELEM
+    dims = seed_gemm_dims(op, batch)
+    if dims:
+        m, n, k = dims
+        col = seed_col_bytes(op, batch) if caffe else 0
+        dgrad_r = o * ceil_div(k, TILE) + w * ceil_div(m, TILE)
+        dgrad_w = i
+        wgrad_r = i * ceil_div(n, TILE) + o * ceil_div(k, TILE)
+        wgrad_w = w
+        opt_r, opt_w = 3 * w, 2 * w
+        l2r = dgrad_r + wgrad_r + opt_r + 2 * col
+        l2w = dgrad_w + wgrad_w + opt_w + 2 * col
+        dr = w + spill(i, l2) + spill(o, l2)
+        dw = w + spill(i, l2)
+        return from_bytes(l2r, l2w, dr, dw)
+    return from_bytes(o, i, spill(o, l2), spill(i, l2))
+
+
+def seed_stats(net, training, batch, l2, caffe=True):
+    tot = [0, 0, 0, 0]
+    for op in net.ops:
+        for s in [seed_layer_forward(op, batch, l2, caffe)] + (
+                [seed_layer_backward(op, batch, l2, caffe)] if training else []):
+            tot = [a + b for a, b in zip(tot, s)]
+    return tot
+
+
+# ---------------- NEW IR-driven memstats ----------------
+# lower(op) -> list of traffic items:
+#   ("gemm", reps, m, n, k, a_bytes, gather_bytes, b_bytes, b_weight, out_bytes, col_bytes)
+#   ("stream", read_bytes, write_bytes)
+# `reps` repeats a GEMM over disjoint data (attention's per-head
+# score/context instances, mirroring the per-bh trace lowering).
+
+def lower(op, batch, caffe):
+    i = op.input.numel() * batch * ELEM
+    o = op.output.numel() * batch * ELEM
+    w = op.weights() * ELEM
+    k = op.kind
+    if k == "conv":
+        m, n, kk = seed_gemm_dims(op, batch)
+        col = seed_col_bytes(op, batch) if caffe else 0
+        a = col if col > 0 else i
+        return [("gemm", 1, m, n, kk, a, i, w, True, o, col)]
+    if k == "fc":
+        m, n, kk = seed_gemm_dims(op, batch)
+        return [("gemm", 1, m, n, kk, i, i, w, True, o, 0)]
+    if k == "matmul":
+        m = batch * op.input.h * op.input.w
+        return [("gemm", 1, m, op.kw["out"], op.input.c, i, i, w, True, o, 0)]
+    if k == "attention":
+        d = op.input.c
+        heads = op.kw["heads"]
+        dh = d // heads
+        seq = op.input.h * op.input.w
+        t = batch * seq * d * ELEM
+        s_total = batch * heads * seq * seq * ELEM
+        head_qkv = seq * dh * ELEM
+        head_scores = seq * seq * ELEM
+        wqkv = 3 * d * d * ELEM
+        wproj = d * d * ELEM
+        return [
+            ("gemm", 1, batch * seq, 3 * d, d, t, t, wqkv, True, 3 * t, 0),
+            ("gemm", batch * heads, seq, seq, dh, head_qkv, head_qkv, head_qkv, False, head_scores, 0),
+            ("stream", s_total, s_total),
+            ("gemm", batch * heads, seq, dh, seq, head_scores, head_scores, head_qkv, False, head_qkv, 0),
+            ("gemm", 1, batch * seq, d, d, t, t, wproj, True, o, 0),
+        ]
+    if k == "norm":
+        return [("stream", i + w, o)]
+    if k == "elementwise":
+        return [("stream", op.kw["inputs"] * i, o)]
+    if k == "embed":
+        return [("stream", i + min(o, w), o)]
+    # pool / global_pool / concat
+    return [("stream", i, o)]
+
+
+def ir_forward(item, l2):
+    if item[0] == "stream":
+        _, r, wr = item
+        return from_bytes(r, wr, spill(r, l2), spill(wr, l2))
+    _, reps, m, n, _k, a, gather, b, b_weight, out, col = item
+    l2r = min(gather, a) + a * ceil_div(n, TILE) + b * ceil_div(m, TILE)
+    l2w = out + col
+    dr = (b if b_weight else spill(b, l2)) + spill(gather, l2) + spill(col, l2)
+    dw = spill(out, l2) + spill(col, l2)
+    return from_bytes(reps * l2r, reps * l2w, reps * dr, reps * dw)
+
+
+def ir_backward(item, l2):
+    if item[0] == "stream":
+        _, r, wr = item
+        return from_bytes(wr, r, spill(wr, l2), spill(r, l2))
+    _, reps, m, n, k, _a, gather, b, b_weight, out, col = item
+    dgrad_r = out * ceil_div(k, TILE) + b * ceil_div(m, TILE)
+    dgrad_w = gather
+    wgrad_r = gather * ceil_div(n, TILE) + out * ceil_div(k, TILE)
+    wgrad_w = b
+    opt_r = 3 * b if b_weight else 0
+    opt_w = 2 * b if b_weight else 0
+    l2r = dgrad_r + wgrad_r + opt_r + 2 * col
+    l2w = dgrad_w + wgrad_w + opt_w + 2 * col
+    dr = (b if b_weight else spill(b, l2)) + spill(gather, l2) + spill(out, l2)
+    dw = (b if b_weight else spill(b, l2)) + spill(gather, l2)
+    return from_bytes(reps * l2r, reps * l2w, reps * dr, reps * dw)
+
+
+def ir_stats(net, training, batch, l2, caffe=True):
+    tot = [0, 0, 0, 0]
+    for op in net.ops:
+        for item in lower(op, batch, caffe):
+            for s in [ir_forward(item, l2)] + ([ir_backward(item, l2)] if training else []):
+                tot = [a + b for a, b in zip(tot, s)]
+    return tot
+
+
+# ---------------- SEED trace (runs) ----------------
+
+def push_gemm(runs, m, n, k, a_base, b_base, out_base):
+    m_tiles = ceil_div(m, TB_TILE)
+    n_tiles = ceil_div(n, TB_TILE)
+    a_tile = TB_TILE * k * ELEM
+    b_tile = k * TB_TILE * ELEM
+    out_tile = TB_TILE * TB_TILE * ELEM
+    for mt in range(m_tiles):
+        tm = min(m - mt * TB_TILE, TB_TILE)
+        for nt in range(n_tiles):
+            tn = min(n - nt * TB_TILE, TB_TILE)
+            runs.append((a_base + mt * a_tile, tm * k * ELEM, False))
+            runs.append((b_base + nt * b_tile, k * tn * ELEM, False))
+            runs.append((out_base + (mt * n_tiles + nt) * out_tile, tm * tn * ELEM, True))
+
+
+def seed_trace_runs(net, batch):
+    runs = []
+    weight_off = 0
+    input_is_a = True
+    for op in net.ops:
+        in_base, out_base = (ACT_A, ACT_B) if input_is_a else (ACT_B, ACT_A)
+        i = op.input.numel() * batch * ELEM
+        o = op.output.numel() * batch * ELEM
+        w = op.weights() * ELEM
+        if op.kind == "conv":
+            m, n, k = seed_gemm_dims(op, batch)
+            if op.kw["kernel"] > 1:
+                runs.append((in_base, i, False))
+                runs.append((COL_BASE, m * k * ELEM, True))
+                a_base = COL_BASE
+            else:
+                a_base = in_base
+            push_gemm(runs, m, n, k, a_base, WEIGHT_BASE + weight_off, out_base)
+        elif op.kind == "fc":
+            m, n, k = seed_gemm_dims(op, batch)
+            push_gemm(runs, m, n, k, in_base, WEIGHT_BASE + weight_off, out_base)
+        elif op.kind in ("pool", "global_pool", "concat"):
+            runs.append((in_base, i, False))
+            runs.append((out_base, o, True))
+        else:
+            raise ValueError(op.kind)
+        weight_off += ceil_div(w, LINE) * LINE
+        input_is_a = not input_is_a
+    return runs
+
+
+# ---------------- NEW IR trace (runs), CNN ops must match seed ----------------
+
+def ir_trace_runs(net, batch):
+    runs = []
+    weight_off = 0
+    input_is_a = True
+    for op in net.ops:
+        in_base, out_base = (ACT_A, ACT_B) if input_is_a else (ACT_B, ACT_A)
+        i = op.input.numel() * batch * ELEM
+        o = op.output.numel() * batch * ELEM
+        w = op.weights() * ELEM
+        k = op.kind
+        wb = WEIGHT_BASE + weight_off
+        if k == "conv":
+            m, n, kk = seed_gemm_dims(op, batch)
+            if op.kw["kernel"] > 1:
+                runs.append((in_base, i, False))
+                runs.append((COL_BASE, m * kk * ELEM, True))
+                a_base = COL_BASE
+            else:
+                a_base = in_base
+            push_gemm(runs, m, n, kk, a_base, wb, out_base)
+        elif k == "fc":
+            m, n, kk = seed_gemm_dims(op, batch)
+            push_gemm(runs, m, n, kk, in_base, wb, out_base)
+        elif k == "matmul":
+            push_gemm(runs, batch * op.input.h * op.input.w, op.kw["out"], op.input.c,
+                      in_base, wb, out_base)
+        elif k == "attention":
+            d = op.input.c
+            heads = op.kw["heads"]
+            dh = d // heads
+            seq = op.input.h * op.input.w
+            t = batch * seq * d * ELEM
+            s_total = batch * heads * seq * seq * ELEM
+            q_base, k_base, v_base = COL_BASE, COL_BASE + t, COL_BASE + 2 * t
+            s_base = COL_BASE + 3 * t
+            c_base = s_base + s_total
+            push_gemm(runs, batch * seq, 3 * d, d, in_base, wb, q_base)
+            for bh in range(batch * heads):
+                chunk = bh * seq * dh * ELEM
+                push_gemm(runs, seq, seq, dh, q_base + chunk, k_base + chunk,
+                          s_base + bh * seq * seq * ELEM)
+            runs.append((s_base, s_total, False))
+            runs.append((s_base, s_total, True))
+            for bh in range(batch * heads):
+                chunk = bh * seq * dh * ELEM
+                push_gemm(runs, seq, dh, seq, s_base + bh * seq * seq * ELEM,
+                          v_base + chunk, c_base + chunk)
+            push_gemm(runs, batch * seq, d, d, c_base, wb + 3 * d * d * ELEM, out_base)
+        elif k == "norm":
+            runs.append((in_base, i, False))
+            runs.append((wb, w, False))
+            runs.append((out_base, o, True))
+        elif k == "elementwise":
+            for _ in range(op.kw["inputs"]):
+                runs.append((in_base, i, False))
+            runs.append((out_base, o, True))
+        elif k == "embed":
+            runs.append((in_base, i, False))
+            runs.append((wb, min(o, w), False))
+            runs.append((out_base, o, True))
+        else:  # pool / global_pool / concat
+            runs.append((in_base, i, False))
+            runs.append((out_base, o, True))
+        weight_off += ceil_div(w, LINE) * LINE
+        input_is_a = not input_is_a
+    return runs
+
+
+def fingerprint(runs, prefix_n):
+    """(total_accesses, total_writes, prefix checksum over first prefix_n)."""
+    total = 0
+    writes = 0
+    for base, nbytes, wr in runs:
+        lines = ceil_div(nbytes, LINE)
+        total += lines
+        if wr:
+            writes += lines
+    # prefix checksum: sum over first N of (i+1)*(addr + write) mod 2^64
+    csum = 0
+    i = 0
+    for base, nbytes, wr in runs:
+        lines = ceil_div(nbytes, LINE)
+        for j in range(lines):
+            if i >= prefix_n:
+                return total, writes, csum & MASK
+            addr = base + j * LINE
+            csum = (csum + (i + 1) * (addr + (1 if wr else 0))) & MASK
+            i += 1
+    return total, writes, csum & MASK
+
+
+def main():
+    cnns = [("alexnet", alexnet(), 4), ("googlenet", googlenet(), 1),
+            ("vgg16", vgg16(), 1), ("resnet18", resnet18(), 1),
+            ("squeezenet", squeezenet(), 1)]
+
+    # Table 3 sanity
+    for _id, net, _b in cnns:
+        tw = sum(op.weights() for op in net.ops)
+        tm = sum(op.macs() for op in net.ops)
+        print(f"{net.name:12s} weights {tw/1e6:8.2f}M  macs {tm/1e9:7.3f}G  ops {len(net.ops)}")
+
+    # 1) memstats bit-identity over a grid
+    grid_ok = 0
+    for _id, net, _b in cnns:
+        for training in (False, True):
+            for batch in (1, 4, 64):
+                for l2 in (3 * MB, 24 * MB):
+                    for caffe in (True, False):
+                        a = seed_stats(net, training, batch, l2, caffe)
+                        b = ir_stats(net, training, batch, l2, caffe)
+                        assert a == b, (net.name, training, batch, l2, caffe, a, b)
+                        grid_ok += 1
+    print(f"memstats bit-identity: {grid_ok} configurations OK")
+
+    # 2) trace run-list identity
+    for _id, net, b in cnns:
+        ra = seed_trace_runs(net, b)
+        rb = ir_trace_runs(net, b)
+        assert ra == rb, f"{net.name}: trace runs differ"
+    print("trace run-lists identical for all five CNNs")
+
+    # 3) golden constants
+    print("\n// ---- golden memstats (I@4, T@64, l2=3MB, CaffeIm2col) ----")
+    for _id, net, _b in cnns:
+        i = seed_stats(net, False, 4, 3 * MB)
+        t = seed_stats(net, True, 64, 3 * MB)
+        print(f'("{_id}", [{i[0]}, {i[1]}, {i[2]}, {i[3]}], [{t[0]}, {t[1]}, {t[2]}, {t[3]}]),')
+
+    print("\n// ---- golden trace fingerprints (fig7 batches, prefix 100k) ----")
+    for _id, net, b in cnns:
+        total, writes, csum = fingerprint(seed_trace_runs(net, b), 100_000)
+        print(f'("{_id}", {b}, {total}, {writes}, {csum}),')
+
+    # 4) new workloads sanity at defaults
+    print("\n// ---- new workloads ----")
+    for net in (vit_encoder(), gpt_block(), lstm()):
+        tw = sum(op.weights() for op in net.ops)
+        tm = sum(op.macs() for op in net.ops)
+        i4 = ir_stats(net, False, 4, 3 * MB)
+        t64 = ir_stats(net, True, 64, 3 * MB)
+        ratio_i = i4[0] / max(1, i4[1])
+        ratio_t = t64[0] / max(1, t64[1])
+        runs = ir_trace_runs(net, 1)
+        total, writes, _ = fingerprint(runs, 0)
+        print(f"{net.name:10s} weights {tw/1e6:7.2f}M macs {tm/1e9:6.2f}G "
+              f"I@4 {i4} rw {ratio_i:.2f} | T@64 rw {ratio_t:.2f} "
+              f"| trace b1: {total} accesses ({writes} writes), {len(runs)} runs")
+        # invariants the rust tests will assert
+        assert ratio_i > 1.0 and ratio_t > 1.0
+        t4 = ir_stats(net, True, 4, 3 * MB)
+        assert t4[0] > i4[0] and t4[1] > i4[1], "training exceeds inference"
+        big = ir_stats(net, False, 4, 24 * MB)
+        assert big[2] <= i4[2], "bigger L2 cannot raise DRAM reads"
+
+    # batch behaviour of gpt block (doc satellite): rw-ratio vs batch
+    print("\n// gpt_block read/write mix vs batch")
+    for phase, batches in (("I", [1, 4, 16, 64]), ("T", [1, 4, 16, 64])):
+        vals = []
+        for b in batches:
+            s = ir_stats(gpt_block(), phase == "T", b, 3 * MB)
+            vals.append(round(s[0] / max(1, s[1]), 3))
+        print(f"  {phase}: {list(zip(batches, vals))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+//! Simulator throughput benchmarks: sequential vs set-sharded parallel
+//! replay, per policy configuration (custom harness; §Perf record).
+//!
+//! The headline pair is `sim: sequential accesses/sec` vs `sim: sharded
+//! accesses/sec` on the AlexNet batch-4 trace under the default
+//! configuration — the wall-clock case for the set-sharded engine (CI
+//! asserts both keys exist in the JSON). Policy variants (PLRU, SRRIP,
+//! write-bypass, L1 on) are timed alongside so a policy regression shows
+//! up in the same trajectory file.
+//!
+//! Results print to stdout and land in `BENCH_sim.json` (override the
+//! path with `DEEPNVM_BENCH_SIM_JSON`), next to `BENCH_hotpath.json` /
+//! `BENCH_engine.json` / `BENCH_trace.json`.
+
+use std::hint::black_box;
+
+use deepnvm::gpusim::{
+    net_trace, simulate, simulate_config, simulate_sharded, Access, CacheConfig, GpuConfig,
+    Replacement, WritePolicy,
+};
+use deepnvm::util::bench::BenchHarness;
+use deepnvm::util::pool::num_threads;
+use deepnvm::workloads::nets;
+
+fn main() {
+    println!("== simulator benchmarks ==");
+    let mut h = BenchHarness::new();
+
+    let net = nets::alexnet();
+    let trace: Vec<Access> = net_trace(&net, 4).collect();
+    let n = trace.len() as f64;
+    let gpu = GpuConfig::gtx_1080_ti();
+    let threads = num_threads();
+    println!("alexnet b4 trace: {} accesses, {threads} worker threads", trace.len());
+
+    // The headline pair: one trace, one configuration, two engines.
+    let seq = h.bench("sim: sequential replay (AlexNet b4, lru/wb)", 3, || {
+        black_box(simulate(trace.iter().copied(), &gpu));
+    });
+    h.record("sim: sequential accesses/sec", n / seq.max(1e-12));
+    let shard = h.bench("sim: sharded replay (AlexNet b4, lru/wb)", 3, || {
+        black_box(simulate_sharded(
+            trace.iter().copied(),
+            &gpu,
+            CacheConfig::default(),
+            0,
+            threads,
+        ));
+    });
+    h.record("sim: sharded accesses/sec", n / shard.max(1e-12));
+    println!(
+        "  -> sharded speedup: {:.2}x on {threads} threads ({:.2}M vs {:.2}M accesses/sec)",
+        seq / shard,
+        n / shard / 1e6,
+        n / seq / 1e6
+    );
+
+    // Exactness double-check while we are here: the bench must never
+    // record a speedup for a simulator that drifted.
+    let a = simulate(trace.iter().copied(), &gpu);
+    let b = simulate_sharded(trace.iter().copied(), &gpu, CacheConfig::default(), 0, threads);
+    assert_eq!(a, b, "sharded replay must match sequential exactly");
+
+    // Policy variants (sequential, so the numbers isolate policy cost).
+    let variants = [
+        ("plru", CacheConfig { replacement: Replacement::TreePlru, ..CacheConfig::default() }),
+        ("srrip", CacheConfig { replacement: Replacement::Srrip, ..CacheConfig::default() }),
+        ("bypass", CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() }),
+        ("l1-on", CacheConfig { l1: true, ..CacheConfig::default() }),
+    ];
+    for (tag, cfg) in variants {
+        let per = h.bench(&format!("sim: sequential replay ({tag})"), 3, || {
+            black_box(simulate_config(trace.iter().copied(), &gpu, cfg, 0));
+        });
+        h.record(&format!("sim: {tag} accesses/sec"), n / per.max(1e-12));
+    }
+
+    h.write_json("DEEPNVM_BENCH_SIM_JSON", "BENCH_sim.json");
+}

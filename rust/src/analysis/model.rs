@@ -9,8 +9,9 @@
 //! (included in the EDP figures) adds a bandwidth-model delay and a
 //! per-transaction energy.
 
+use crate::gpusim::SimResult;
 use crate::nvsim::cache::CachePpa;
-use crate::workloads::memstats::MemStats;
+use crate::workloads::memstats::{MemStats, TRANS_BYTES as SECTOR_BYTES};
 
 /// GPU L2 clock (Table 4) — latencies are quantized to whole cycles
 /// ("we convert read and write latencies to clock cycles based on 1080
@@ -72,6 +73,33 @@ impl Evaluation {
     /// EDP with DRAM energy and latency (Fig 5-bottom, Fig 9-bottom).
     pub fn edp_with_dram(&self) -> f64 {
         self.total_energy() * self.total_time()
+    }
+}
+
+/// Convert trace-simulation counters into the nvprof-equivalent 32-byte
+/// transaction counters the roll-up consumes. This is where write policy
+/// changes the DRAM- vs cache-write accounting:
+///
+/// * `l2_writes` charges only **array** writes (`l2_array_writes`) — under
+///   write-back that is every write; under write-through/bypass the
+///   no-allocate write misses never touch the (NVM) array and so cost no
+///   cache write energy.
+/// * `dram_writes` carries the flip side: write-back evictions *plus* the
+///   through/bypassed write traffic (`SimResult::dram_writes`).
+/// * `dram_reads` are the line fills, which shrink under no-allocate
+///   policies (write misses stop fetching lines they only overwrite).
+///
+/// `line_bytes` is the simulated line size (one line access = `line /
+/// 32` nvprof sectors).
+pub fn stats_from_sim(sim: &SimResult, line_bytes: u64) -> MemStats {
+    let t = (line_bytes / SECTOR_BYTES).max(1);
+    let writes = sim.l2_write_hits + sim.l2_write_misses;
+    let reads = sim.l2_accesses - writes;
+    MemStats {
+        l2_reads: reads * t,
+        l2_writes: sim.l2_array_writes * t,
+        dram_reads: sim.dram_fills * t,
+        dram_writes: sim.dram_writes * t,
     }
 }
 
@@ -167,5 +195,31 @@ mod tests {
             assert!(e.edp_with_dram() > e.edp_cache());
             assert!(e.total_energy() > e.cache_energy());
         }
+    }
+
+    #[test]
+    fn sim_counters_convert_to_sector_transactions() {
+        use crate::gpusim::{simulate, simulate_config, CacheConfig, GpuConfig, WritePolicy};
+        use crate::gpusim::net_trace;
+        use crate::workloads::nets;
+        let net = nets::squeezenet();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let sim = simulate(net_trace(&net, 1), &gpu);
+        let wb = stats_from_sim(&sim, gpu.l2_line);
+        // 128B lines → 4 sectors per access; read dominance carries over.
+        assert!(wb.l2_reads % 4 == 0 && wb.l2_reads > wb.l2_writes);
+        assert_eq!(wb.dram_reads + wb.dram_writes, 4 * sim.dram_accesses());
+        // Bypass: fewer (NVM) cache writes; the offered read stream is
+        // policy-invariant.
+        let cfg = CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() };
+        let byp = stats_from_sim(&simulate_config(net_trace(&net, 1), &gpu, cfg, 0), gpu.l2_line);
+        assert!(byp.l2_writes < wb.l2_writes);
+        assert_eq!(byp.l2_reads, wb.l2_reads);
+        // Write-through: every write reaches DRAM — strictly more DRAM
+        // write traffic than write-back's eviction stream.
+        let wt = CacheConfig { write: WritePolicy::WriteThrough, ..CacheConfig::default() };
+        let wt = stats_from_sim(&simulate_config(net_trace(&net, 1), &gpu, wt, 0), gpu.l2_line);
+        assert!(wt.dram_writes > wb.dram_writes);
+        assert_eq!(wt.l2_writes, byp.l2_writes, "both charge only write hits to the array");
     }
 }

@@ -51,12 +51,24 @@
 //! A descriptor file may additionally carry a `[space]` section declaring
 //! a design-space over the technology (see [`crate::explore::space`] for
 //! the grammar); [`parse`] ignores it and [`space_section`] extracts it.
+//! Likewise a `[cache]` section declares the cache-hierarchy
+//! configuration candidate queries run under (write policy, replacement
+//! policy, L1 on/off); [`parse`] validates-but-ignores it and
+//! [`cache_section`] extracts it as a [`CacheConfig`]:
+//!
+//! ```text
+//! [cache]
+//! write_policy = "bypass"    # wb | wt | bypass
+//! replacement = "srrip"      # lru | plru | srrip
+//! l1 = "on"                  # on | off
+//! ```
 
 use std::collections::BTreeMap;
 
 use super::spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec};
 
 use crate::device::bitcell::NvCal;
+use crate::gpusim::{parse_l1, CacheConfig, Replacement, WritePolicy};
 use crate::util::err::msg;
 
 struct Fields {
@@ -167,14 +179,14 @@ pub fn has_section(text: &str, name: &str) -> crate::Result<bool> {
     Ok(f.values.keys().any(|(s, _)| s == name))
 }
 
-/// Validate that `text` declares only `[space]` entries — the pure-space
-/// file case, where a misspelled `[tech]`/`[device]`/… section would
-/// otherwise be silently ignored and the built-in defaults explored
-/// instead of the user's device.
+/// Validate that `text` declares only `[space]` (and `[cache]`) entries —
+/// the pure-space file case, where a misspelled `[tech]`/`[device]`/…
+/// section would otherwise be silently ignored and the built-in defaults
+/// explored instead of the user's device.
 pub fn ensure_only_space(text: &str) -> crate::Result<()> {
     let f = split_fields(text)?;
     for (section, _) in f.values.keys() {
-        if section != "space" {
+        if section != "space" && section != "cache" {
             return Err(msg(format!(
                 "section [{section}] has no effect without a [tech] descriptor in the same file \
                  (is it misspelled?)"
@@ -182,6 +194,28 @@ pub fn ensure_only_space(text: &str) -> crate::Result<()> {
         }
     }
     Ok(())
+}
+
+/// The `[cache]` section as a [`CacheConfig`], or `None` when the text
+/// declares none. Unset keys keep their seed defaults; unknown keys are
+/// rejected by [`parse`]'s key validation (shared `split_fields` grammar).
+pub fn cache_section(text: &str) -> crate::Result<Option<CacheConfig>> {
+    let f = split_fields(text)?;
+    if !f.values.keys().any(|(s, _)| s == "cache") {
+        return Ok(None);
+    }
+    check_known(&f)?;
+    let mut cfg = CacheConfig::default();
+    if let Some(v) = f.get("cache", "write_policy") {
+        cfg.write = WritePolicy::parse(v).map_err(|e| msg(format!("[cache] {e}")))?;
+    }
+    if let Some(v) = f.get("cache", "replacement") {
+        cfg.replacement = Replacement::parse(v).map_err(|e| msg(format!("[cache] {e}")))?;
+    }
+    if let Some(v) = f.get("cache", "l1") {
+        cfg.l1 = parse_l1(v).map_err(|e| msg(format!("[cache] {e}")))?;
+    }
+    Ok(Some(cfg))
 }
 
 /// The `[space]` section's key → value pairs (sorted by key), or `None`
@@ -203,6 +237,9 @@ pub fn space_section(text: &str) -> crate::Result<Option<Vec<(String, String)>>>
 /// silently fall back to its default and skip a reliability screen.
 const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("tech", &["id", "name", "class", "read_port"]),
+    // Cache-hierarchy configuration (extracted by `cache_section`; the
+    // tech spec itself ignores it, like `[space]`).
+    ("cache", &["write_policy", "replacement", "l1"]),
     ("mtj", &["r_p", "r_ap", "ic_set", "ic_reset", "tau0", "r_rail"]),
     (
         "device",
@@ -507,6 +544,28 @@ mod tests {
         // Files without one report None.
         assert!(space_section(&serialize(&TechSpec::stt())).unwrap().is_none());
         assert!(!has_section("[space]\n", "space").unwrap(), "bare header counts as absent");
+    }
+
+    #[test]
+    fn cache_sections_parse_and_ride_along() {
+        use crate::gpusim::{Replacement, WritePolicy};
+        let mut text = serialize(&TechSpec::stt());
+        text.push_str("\n[cache]\nwrite_policy = \"bypass\"\nl1 = \"on\"\n");
+        // The tech spec parses unchanged with the [cache] section present…
+        assert_eq!(parse(&text).unwrap(), TechSpec::stt());
+        // …and the section extracts with unset keys at their defaults.
+        let cfg = cache_section(&text).unwrap().unwrap();
+        assert_eq!(cfg.write, WritePolicy::WriteBypass);
+        assert_eq!(cfg.replacement, Replacement::Lru);
+        assert!(cfg.l1);
+        // Files without one report None; bad values fail loudly.
+        assert!(cache_section(&serialize(&TechSpec::stt())).unwrap().is_none());
+        let e = cache_section("[cache]\nwrite_policy = \"wombat\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown write policy"), "{e}");
+        let e = parse(&format!("{text}\n[cache]\nvictim = \"x\"\n"));
+        assert!(e.is_err(), "unknown [cache] keys are rejected");
     }
 
     #[test]

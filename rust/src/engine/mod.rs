@@ -18,9 +18,10 @@
 //!
 //! Memoization is keyed by query stage — bitcell characterization (per
 //! technology), EDAP tuning (per technology × capacity), and workload
-//! profiling (per workload key × batch × capacity; the workload key is
-//! open, so descriptor-registered nets memoize exactly like builtins) —
-//! with per-stage hit/miss counters. [`Engine::fork`] hands out a handle
+//! profiling (per workload key × batch × capacity × [`CacheConfig`]; the
+//! workload key is open, so descriptor-registered nets memoize exactly
+//! like builtins, and non-default cache configurations route through the
+//! trace-driven simulator) — with per-stage hit/miss counters. [`Engine::fork`] hands out a handle
 //! that shares the caches but counts its own traffic, which is how the
 //! experiment runner attributes exact per-experiment cache statistics
 //! even when experiments run in parallel.
@@ -38,10 +39,11 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::analysis::model;
 use crate::device::bitcell::BitcellParams;
 use crate::device::characterize::{characterize_spec, CharacterizationReport};
+use crate::gpusim::{net_trace, simulate_sharded, GpuConfig};
 use crate::nvsim::geometry::enumerate;
 use crate::nvsim::optimizer::{explore_cell, TunedCache};
 use crate::util::err::msg;
-use crate::util::pool::par_map;
+use crate::util::pool::{in_worker, num_threads, par_map};
 use crate::util::units::MB;
 use crate::workloads::hpcg::HpcgSize;
 use crate::workloads::ir::NetIr;
@@ -51,7 +53,8 @@ use crate::workloads::profiler::{self, ProfiledWorkload, Workload};
 use crate::workloads::registry::NetRegistry;
 
 pub use crate::device::bitcell::NvCal;
-pub use query::{Evaluation, IsoMode, Query, WorkloadEval};
+pub use crate::gpusim::{CacheConfig, Replacement, WritePolicy};
+pub use query::{Evaluation, IsoMode, ProfileModel, Query, WorkloadEval};
 pub use spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec, TECH_SOT, TECH_SRAM, TECH_STT};
 
 /// Hit/miss counters of one memoized pipeline stage.
@@ -178,7 +181,9 @@ struct Core {
     nets: NetRegistry,
     cells: Memo<String, Arc<CharacterizationReport>>,
     tuned: Memo<(String, u64), TunedCache>,
-    profiles: Memo<(Workload, u64, u64), ProfiledWorkload>,
+    /// Keyed by workload × batch × capacity × cache config × whether the
+    /// trace simulator (vs the analytical model) produced the profile.
+    profiles: Memo<(Workload, u64, u64, CacheConfig, bool), ProfiledWorkload>,
     /// Engine-wide counters (all forks aggregated).
     totals: StageCounters,
 }
@@ -408,16 +413,54 @@ impl Engine {
     }
 
     /// Stage 3 — workload profiling at an explicit batch size and L2
-    /// capacity (memoized per workload key × batch × capacity). Net ids
-    /// resolve against this engine's workload registry, so
-    /// descriptor-registered workloads profile exactly like builtins;
-    /// unknown ids are an error.
+    /// capacity under the default (seed-equivalent) cache configuration.
     pub fn profile(
         &self,
         workload: Workload,
         batch: u64,
         l2_capacity: u64,
     ) -> crate::Result<ProfiledWorkload> {
+        self.profile_with(workload, batch, l2_capacity, CacheConfig::default())
+    }
+
+    /// Stage 3 with an explicit [`CacheConfig`] under the `Auto` profile
+    /// model (analytical for the default configuration, simulated
+    /// otherwise).
+    pub fn profile_with(
+        &self,
+        workload: Workload,
+        batch: u64,
+        l2_capacity: u64,
+        cache: CacheConfig,
+    ) -> crate::Result<ProfiledWorkload> {
+        self.profile_configured(workload, batch, l2_capacity, cache, ProfileModel::Auto)
+    }
+
+    /// Stage 3, fully configured (memoized per workload key × batch ×
+    /// capacity × cache config × resolved model). Net ids resolve against
+    /// this engine's workload registry, so descriptor-registered
+    /// workloads profile exactly like builtins; unknown ids are an error.
+    ///
+    /// Under [`ProfileModel::Auto`] the default cache configuration uses
+    /// the analytical traffic model (the paper's nvprof stand-in,
+    /// bit-identical to the seed) and any other configuration replays the
+    /// workload's forward trace through the policy-configured
+    /// [`Hierarchy`](crate::gpusim::Hierarchy) via the set-sharded
+    /// parallel simulator. [`ProfileModel::Simulate`] forces the
+    /// simulator even for the default configuration — how explore spaces
+    /// with cache axes keep the write-back corner commensurate with its
+    /// siblings. Simulation applies to net workloads in the inference
+    /// phase only (HPCG has no trace, and the trace compiler emits
+    /// forward passes).
+    pub fn profile_configured(
+        &self,
+        workload: Workload,
+        batch: u64,
+        l2_capacity: u64,
+        cache: CacheConfig,
+        model: ProfileModel,
+    ) -> crate::Result<ProfiledWorkload> {
+        let simulate = model == ProfileModel::Simulate || !cache.is_default();
         // Resolve the open id *before* entering the memo (mirroring
         // `tech_or_err` on the technology side): a failed lookup must not
         // be cached, so registering the net afterwards heals the query.
@@ -433,12 +476,51 @@ impl Engine {
         let (out, computed) = self
             .core
             .profiles
-            .get_or_compute((workload.clone(), batch, l2_capacity), || match &workload {
-                Workload::Net { phase, .. } => {
-                    let net = net.as_ref().expect("resolved above");
-                    Ok(profiler::profile_net(net, *phase, batch, l2_capacity))
+            .get_or_compute((workload.clone(), batch, l2_capacity, cache, simulate), || {
+                match &workload {
+                    Workload::Net { phase, .. } if !simulate => {
+                        let net = net.as_ref().expect("resolved above");
+                        Ok(profiler::profile_net(net, *phase, batch, l2_capacity))
+                    }
+                    Workload::Net { phase: Phase::Inference, .. } => {
+                        let net = net.as_ref().expect("resolved above");
+                        let gpu = GpuConfig::gtx_1080_ti().with_l2(l2_capacity);
+                        if l2_capacity % (gpu.l2_line * gpu.l2_assoc) != 0 {
+                            return Err(format!(
+                                "cache-config profiling simulates the L2 directly: capacity \
+                                 {l2_capacity} B is not a whole number of {}-way sets of {} B \
+                                 lines",
+                                gpu.l2_assoc, gpu.l2_line
+                            ));
+                        }
+                        // Full shard budget for a standalone query; inside
+                        // a pool worker (evaluate_many / explore fan-out)
+                        // the outer parallelism already fills the cores,
+                        // so replay sequentially instead of spawning
+                        // workers × workers threads.
+                        let shards = if in_worker() { 1 } else { num_threads() };
+                        let sim =
+                            simulate_sharded(net_trace(net, batch), &gpu, cache, 0, shards);
+                        Ok(ProfiledWorkload {
+                            workload: workload.clone(),
+                            label: profiler::net_label(&net.name, Phase::Inference),
+                            stats: model::stats_from_sim(&sim, gpu.l2_line),
+                        })
+                    }
+                    Workload::Net { .. } => Err(format!(
+                        "simulated profiling ('{}') replays the forward trace; training \
+                         workloads profile only under the default analytical model",
+                        cache.describe()
+                    )),
+                    Workload::Hpcg(size) if !simulate => {
+                        Ok(profiler::profile_hpcg(*size, l2_capacity))
+                    }
+                    Workload::Hpcg(_) => Err(format!(
+                        "simulated profiling ('{}') applies to trace-driven net workloads \
+                         only (HPCG profiles analytically)",
+                        cache.describe()
+                    )),
                 }
-                Workload::Hpcg(size) => Ok(profiler::profile_hpcg(*size, l2_capacity)),
             });
         self.bump(Stage::Profile, computed);
         out.map_err(msg)
@@ -515,7 +597,13 @@ impl Engine {
             None => None,
             Some(w) => {
                 let batch = query.batch.unwrap_or_else(|| profiler::default_batch(w));
-                let profiled = self.profile(w.clone(), batch, capacity)?;
+                let profiled = self.profile_configured(
+                    w.clone(),
+                    batch,
+                    capacity,
+                    query.cache,
+                    query.profile_model,
+                )?;
                 let rollup = model::evaluate(&design.ppa, &profiled.stats);
                 Some(WorkloadEval {
                     label: profiled.label,
@@ -701,6 +789,72 @@ mod tests {
         assert_eq!(w.label, "AlexNet-I");
         assert_eq!(w.batch, 4, "paper default inference batch");
         assert!(w.rollup.total_energy() > 0.0);
+    }
+
+    #[test]
+    fn cache_config_keys_the_profile_memo() {
+        use crate::gpusim::WritePolicy;
+        let e = Engine::new();
+        let w = Workload::net("squeezenet", Phase::Inference);
+        let cfg = CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() };
+        let base = e.profile(w.clone(), 1, 3 * MB).unwrap();
+        let byp = e.profile_with(w.clone(), 1, 3 * MB, cfg).unwrap();
+        assert_eq!(e.stats().profile, HitMiss { hits: 0, misses: 2 }, "distinct memo keys");
+        let again = e.profile_with(w.clone(), 1, 3 * MB, cfg).unwrap();
+        assert_eq!(e.stats().profile, HitMiss { hits: 1, misses: 2 });
+        assert_eq!(byp.stats, again.stats, "memoized value is stable");
+        assert_eq!(byp.label, base.label, "labels stay suite-shaped");
+        assert!(byp.stats.l2_reads > 0, "sim-backed profile carries real counters");
+        assert_ne!(byp.stats, base.stats, "policy changes the profiled traffic");
+        // Simulation-backed profiles reject what they cannot model.
+        let err = e
+            .profile_with(Workload::net("squeezenet", Phase::Training), 1, 3 * MB, cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("training"), "{err}");
+        let err = e
+            .profile_with(Workload::Hpcg(HpcgSize::Small), 1, 3 * MB, cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("HPCG"), "{err}");
+    }
+
+    #[test]
+    fn simulate_model_makes_the_default_corner_commensurate() {
+        use crate::gpusim::{net_trace, simulate};
+        let e = Engine::new();
+        let w = Workload::net("squeezenet", Phase::Inference);
+        let analytic = e.profile(w.clone(), 1, 3 * MB).unwrap();
+        let simulated = e
+            .profile_configured(
+                w.clone(),
+                1,
+                3 * MB,
+                CacheConfig::default(),
+                ProfileModel::Simulate,
+            )
+            .unwrap();
+        assert_ne!(analytic.stats, simulated.stats, "distinct models, distinct memo keys");
+        assert_eq!(e.stats().profile.misses, 2);
+        // The forced-sim default profile equals a direct default replay.
+        let gpu = GpuConfig::gtx_1080_ti();
+        let direct = model::stats_from_sim(
+            &simulate(net_trace(&crate::workloads::nets::squeezenet(), 1), &gpu),
+            gpu.l2_line,
+        );
+        assert_eq!(simulated.stats, direct);
+    }
+
+    #[test]
+    fn evaluate_threads_the_cache_config_through() {
+        use crate::gpusim::WritePolicy;
+        let e = Engine::shared();
+        let w = Workload::net("squeezenet", Phase::Inference);
+        let cfg = CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() };
+        let q = Query::tune("stt", 2 * MB).with_workload(w).with_batch(1).with_cache(cfg);
+        let ev = e.evaluate(&q).unwrap();
+        let we = ev.workload.expect("workload roll-up present");
+        assert!(we.stats.l2_reads > 0 && we.rollup.total_energy() > 0.0);
     }
 
     #[test]

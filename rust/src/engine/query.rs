@@ -7,9 +7,25 @@
 //! `Query` value instead of a bespoke generator function.
 
 use crate::analysis::model;
+use crate::gpusim::CacheConfig;
 use crate::nvsim::optimizer::TunedCache;
 use crate::workloads::memstats::MemStats;
 use crate::workloads::profiler::Workload;
+
+/// Which traffic model the profile stage uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ProfileModel {
+    /// The analytical nvprof stand-in for the default cache
+    /// configuration (bit-identical to the seed, pinned in goldens),
+    /// trace simulation for any other configuration.
+    #[default]
+    Auto,
+    /// Always the trace simulator — how explore spaces with cache axes
+    /// keep every candidate (including the write-back default corner)
+    /// measured by one model, so policy deltas are policy effects and
+    /// not a model switch.
+    Simulate,
+}
 
 /// How the query's `capacity_bytes` is interpreted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -36,6 +52,13 @@ pub struct Query {
     pub batch: Option<u64>,
     /// Capacity interpretation.
     pub iso: IsoMode,
+    /// Cache-hierarchy configuration the workload profiling runs under.
+    /// The default is the seed-equivalent analytical model; any other
+    /// value routes the profile stage through the trace-driven simulator
+    /// (memoized per configuration like every other query key).
+    pub cache: CacheConfig,
+    /// Profile-model selection (see [`ProfileModel`]).
+    pub profile_model: ProfileModel,
 }
 
 impl Query {
@@ -47,6 +70,8 @@ impl Query {
             workload: None,
             batch: None,
             iso: IsoMode::Capacity,
+            cache: CacheConfig::default(),
+            profile_model: ProfileModel::Auto,
         }
     }
 
@@ -65,6 +90,20 @@ impl Query {
     /// Interpret the capacity as the SRAM-baseline footprint (iso-area).
     pub fn iso_area(mut self) -> Query {
         self.iso = IsoMode::Area;
+        self
+    }
+
+    /// Profile under an explicit cache-hierarchy configuration
+    /// (replacement policy, write policy, L1 on/off).
+    pub fn with_cache(mut self, cache: CacheConfig) -> Query {
+        self.cache = cache;
+        self
+    }
+
+    /// Force trace-simulated profiling even for the default cache
+    /// configuration (commensurate-model comparisons across policies).
+    pub fn simulate_profile(mut self) -> Query {
+        self.profile_model = ProfileModel::Simulate;
         self
     }
 }
@@ -99,18 +138,25 @@ pub struct Evaluation {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpusim::WritePolicy;
     use crate::util::units::MB;
     use crate::workloads::memstats::Phase;
 
     #[test]
     fn builder_composes() {
         let w = Workload::net("googlenet", Phase::Training);
-        let q = Query::tune("stt", 4 * MB).with_workload(w.clone()).with_batch(32).iso_area();
+        let cache = CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() };
+        let q = Query::tune("stt", 4 * MB)
+            .with_workload(w.clone())
+            .with_batch(32)
+            .iso_area()
+            .with_cache(cache);
         assert_eq!(q.tech, "stt");
         assert_eq!(q.capacity_bytes, 4 * MB);
         assert_eq!(q.workload, Some(w));
         assert_eq!(q.batch, Some(32));
         assert_eq!(q.iso, IsoMode::Area);
+        assert_eq!(q.cache, cache);
     }
 
     #[test]
@@ -130,5 +176,6 @@ mod tests {
         let q = Query::tune("sot", MB);
         assert_eq!(q.iso, IsoMode::Capacity);
         assert!(q.workload.is_none() && q.batch.is_none());
+        assert!(q.cache.is_default(), "default query profiles the seed-equivalent model");
     }
 }

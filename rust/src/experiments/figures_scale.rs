@@ -1,12 +1,16 @@
 //! Figure generators: Fig 7 (GPGPU-Sim capacity sweep) and the
-//! scalability figures 10–13. Fig 7 accepts `--networks` and
-//! `--capacities`; Figs 10–13 accept `--capacities` (MB grid).
+//! scalability figures 10–13. Fig 7 accepts `--networks`, `--capacities`
+//! and the cache-hierarchy knobs
+//! (`--write-policy/--replacement/--l1/--warmup-frac`); Figs 10–13 accept
+//! `--capacities` (MB grid).
 
 use crate::analysis::scalability::{ppa_curves, scaling_study, CAPACITIES_MB};
 use crate::engine::Engine;
-use crate::gpusim::{capacity_sweep, fig7_capacities, net_trace, SweepPoint};
+use crate::gpusim::{
+    capacity_sweep_config, fig7_capacities, net_trace, CacheConfig, SweepPoint,
+};
 use crate::util::csv::Csv;
-use crate::util::pool::par_map;
+use crate::util::pool::{par_map, split_threads};
 use crate::util::table::{fnum, Table};
 use crate::util::units::{to_mm2, to_mw, to_nj, to_ns, MB};
 use crate::workloads::ir::NetIr;
@@ -35,7 +39,7 @@ pub fn fig7_suite() -> Vec<(NetIr, u64)> {
 /// `gpt_tiny` sweeps exactly that net. A filter matching nothing at all
 /// degrades gracefully to the full default suite (a typo must not emit
 /// an empty artifact).
-fn fig7_selected_suite(engine: &Engine, params: &Params) -> Vec<(NetIr, u64)> {
+pub(crate) fn fig7_selected_suite(engine: &Engine, params: &Params) -> Vec<(NetIr, u64)> {
     let Some(names) = &params.networks else {
         return fig7_suite();
     };
@@ -66,8 +70,19 @@ fn fig7_selected_suite(engine: &Engine, params: &Params) -> Vec<(NetIr, u64)> {
     }
 }
 
-fn sweep_suite(suite: &[(NetIr, u64)], caps: &[u64]) -> Vec<Vec<SweepPoint>> {
-    par_map(suite, |(net, batch)| capacity_sweep(net_trace(net, *batch), caps))
+fn sweep_suite(
+    suite: &[(NetIr, u64)],
+    caps: &[u64],
+    cache: CacheConfig,
+    warmup_frac: Option<f64>,
+) -> Vec<Vec<SweepPoint>> {
+    // The per-net fan-out already fills the pool; split the shard budget
+    // so net-parallelism × shard-parallelism stays ≈ the core count
+    // (default-config sweeps take the single-pass path and ignore it).
+    let shards = split_threads(suite.len());
+    par_map(suite, |(net, batch)| {
+        capacity_sweep_config(net_trace(net, *batch), caps, cache, warmup_frac, shards)
+    })
 }
 
 /// The default suite's sweeps, memoized process-wide: the figure
@@ -77,26 +92,33 @@ fn sweep_suite(suite: &[(NetIr, u64)], caps: &[u64]) -> Vec<Vec<SweepPoint>> {
 /// fresh.
 fn fig7_default_sweeps() -> &'static [Vec<SweepPoint>] {
     static SWEEPS: std::sync::OnceLock<Vec<Vec<SweepPoint>>> = std::sync::OnceLock::new();
-    SWEEPS.get_or_init(|| sweep_suite(&fig7_suite(), &fig7_capacities()))
+    SWEEPS.get_or_init(|| {
+        sweep_suite(&fig7_suite(), &fig7_capacities(), CacheConfig::default(), None)
+    })
 }
 
-/// Fig 7: DRAM-access reduction vs L2 capacity, per network. Each
-/// network's sweep is one single-pass stack-distance simulation over its
-/// streamed trace; networks run in parallel via the thread pool.
-/// `--networks` can name any registered workload (transformer/LSTM
-/// builtins, `--net-file` descriptors) to add it to the sweep.
+/// Fig 7: DRAM-access reduction vs L2 capacity, per network. With the
+/// default cache configuration each network's sweep is one single-pass
+/// stack-distance simulation over its streamed trace; under
+/// `--write-policy/--replacement/--l1/--warmup-frac` it becomes a
+/// per-capacity set-sharded replay. Networks run in parallel via the
+/// thread pool. `--networks` can name any registered workload
+/// (transformer/LSTM builtins, `--net-file` descriptors) to add it to
+/// the sweep.
 pub fn fig7(engine: &Engine, params: &Params) -> Output {
     let suite: Vec<(NetIr, u64)> = fig7_selected_suite(engine, params);
     let caps: Vec<u64> = match &params.capacities_mb {
         Some(mbs) if !mbs.is_empty() => mbs.iter().map(|&mb| mb * MB).collect(),
         _ => fig7_capacities(),
     };
-    let is_default = params.networks.is_none() && params.capacities_mb.is_none();
+    let is_default = params.networks.is_none()
+        && params.capacities_mb.is_none()
+        && !params.has_cache_overrides();
     let fresh;
     let sweeps: &[Vec<SweepPoint>] = if is_default {
         fig7_default_sweeps()
     } else {
-        fresh = sweep_suite(&suite, &caps);
+        fresh = sweep_suite(&suite, &caps, params.cache_config(), params.warmup_frac);
         &fresh
     };
     // Summary capacities: the paper's iso-area points (7/10MB, headline
@@ -393,6 +415,31 @@ mod tests {
         let out = fig7(Engine::shared(), &only);
         assert_eq!(out.tables[1].len(), 1, "LSTM only");
         assert!(out.tables[0].render().contains("LSTM"), "lead table is the named net");
+    }
+
+    #[test]
+    fn fig7_policy_overrides_reach_the_simulator() {
+        use crate::gpusim::WritePolicy;
+        // Write-through inflates DRAM traffic at every capacity, but the
+        // figure still renders with the paper's shape (reduction vs 3MB).
+        let params = Params {
+            networks: Some(vec!["squeezenet".into()]),
+            capacities_mb: Some(vec![6]),
+            write_policy: Some(WritePolicy::WriteThrough),
+            warmup_frac: Some(0.1),
+            ..Params::default()
+        };
+        let out = fig7(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), 2, "baseline + 6MB");
+        let default = Params {
+            networks: Some(vec!["squeezenet".into()]),
+            capacities_mb: Some(vec![6]),
+            ..Params::default()
+        };
+        let base = fig7(Engine::shared(), &default);
+        // Same CSV schema either way.
+        assert_eq!(out.csvs[0].0, base.csvs[0].0);
+        assert_eq!(out.csvs[1].1.len(), base.csvs[1].1.len());
     }
 
     #[test]

@@ -14,17 +14,19 @@
 //! `repro all` runs the whole registry.
 
 pub mod figures_iso;
+pub mod figures_policy;
 pub mod figures_profile;
 pub mod figures_scale;
 pub mod tables;
 
 use crate::engine::Engine;
+use crate::gpusim::{CacheConfig, Replacement, WritePolicy};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 
 /// CLI-plumbed experiment parameters. `None` everywhere (the default)
 /// reproduces the paper's configuration exactly.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Params {
     /// Restrict network-driven experiments to these networks (matched
     /// case-insensitively, ignoring punctuation: `resnet18` == `ResNet-18`).
@@ -33,6 +35,15 @@ pub struct Params {
     pub capacities_mb: Option<Vec<u64>>,
     /// Override the batch-size grid (Fig 6).
     pub batches: Option<Vec<u64>>,
+    /// Override the simulated L2 write policy (fig7; figWP's base config).
+    pub write_policy: Option<WritePolicy>,
+    /// Override the simulated L2 replacement policy (fig7, figWP).
+    pub replacement: Option<Replacement>,
+    /// Simulate the aggregate L1 in front of the L2 (fig7, figWP).
+    pub l1: Option<bool>,
+    /// Replay this fraction of each trace as cache warmup before counters
+    /// start (fig7, figWP); `None` = no warmup.
+    pub warmup_frac: Option<f64>,
 }
 
 /// Canonical form for network-name matching: lowercase alphanumerics.
@@ -94,6 +105,23 @@ impl Params {
     /// type either. Shared by the registry-aware figures (fig3, fig7).
     pub fn workload_selected(&self, label: &str, id: &str) -> bool {
         self.row_selected(label) || self.network_selected(id)
+    }
+
+    /// The simulated cache configuration the policy-aware figures run
+    /// under (unset knobs fall back to the seed defaults).
+    pub fn cache_config(&self) -> CacheConfig {
+        CacheConfig {
+            replacement: self.replacement.unwrap_or_default(),
+            write: self.write_policy.unwrap_or_default(),
+            l1: self.l1.unwrap_or(false),
+        }
+    }
+
+    /// Whether any cache-simulation knob departs from the seed defaults
+    /// (which gates the single-pass-sweep fast path and the process-wide
+    /// default-run memoizations).
+    pub fn has_cache_overrides(&self) -> bool {
+        !self.cache_config().is_default() || self.warmup_frac.is_some()
     }
 }
 
@@ -214,8 +242,14 @@ pub fn registry() -> Vec<Experiment> {
         Experiment {
             id: "fig7",
             title: "DRAM access reduction vs L2 capacity (GPGPU-Sim substitute)",
-            params: "networks, capacities",
+            params: "networks, capacities, write-policy, replacement, l1, warmup-frac",
             run: figures_scale::fig7,
+        },
+        Experiment {
+            id: "figWP",
+            title: "Write-policy sensitivity: per-network EDP under wb/wt/bypass (SRAM/STT/SOT)",
+            params: "networks, replacement, l1, warmup-frac",
+            run: figures_policy::figwp,
         },
         Experiment {
             id: "fig8",
@@ -270,11 +304,11 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
         for want in [
             "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "fig5", "fig6",
-            "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+            "fig7", "figWP", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }
-        assert_eq!(ids.len(), 16);
+        assert_eq!(ids.len(), 17);
     }
 
     #[test]
@@ -282,7 +316,7 @@ mod tests {
         let mut ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids.len(), 16);
+        assert_eq!(ids.len(), 17);
     }
 
     #[test]
@@ -296,7 +330,11 @@ mod tests {
         for e in registry() {
             assert!(!e.params.is_empty(), "{}: empty params help", e.id);
         }
-        assert_eq!(by_id("fig7").unwrap().params, "networks, capacities");
+        assert_eq!(
+            by_id("fig7").unwrap().params,
+            "networks, capacities, write-policy, replacement, l1, warmup-frac"
+        );
+        assert!(by_id("figWP").unwrap().params.contains("warmup-frac"));
     }
 
     #[test]
@@ -333,5 +371,19 @@ mod tests {
         assert!(!p.is_default());
         assert_eq!(p.capacities_or(&[1, 2]), vec![8]);
         assert_eq!(p.batches_or(&[4]), vec![4]);
+    }
+
+    #[test]
+    fn cache_knobs_compose_into_a_config() {
+        let p = Params::default();
+        assert!(p.cache_config().is_default());
+        assert!(!p.has_cache_overrides());
+        let p = Params { write_policy: Some(WritePolicy::WriteBypass), ..Params::default() };
+        assert!(p.has_cache_overrides());
+        assert_eq!(p.cache_config().write, WritePolicy::WriteBypass);
+        assert_eq!(p.cache_config().replacement, Replacement::Lru);
+        // Warmup alone is an override (it leaves the single-pass path).
+        let p = Params { warmup_frac: Some(0.25), ..Params::default() };
+        assert!(p.cache_config().is_default() && p.has_cache_overrides());
     }
 }

@@ -26,8 +26,11 @@
 
 use std::sync::OnceLock;
 
-use crate::engine::{descriptor, Engine, IsoMode, Query, TechSpec, TECH_SOT, TECH_SRAM, TECH_STT};
+use crate::engine::{
+    descriptor, Engine, IsoMode, ProfileModel, Query, TechSpec, TECH_SOT, TECH_SRAM, TECH_STT,
+};
 use crate::experiments::normalize_name;
+use crate::gpusim::{CacheConfig, Replacement, WritePolicy};
 use crate::util::err::msg;
 use crate::util::units::MB;
 use crate::workloads::memstats::Phase;
@@ -45,6 +48,13 @@ pub enum Axis {
     Batch(Vec<u64>),
     /// Workloads (suite labels, e.g. `AlexNet-I`, `GPT-Block-T`).
     Workload(Vec<Workload>),
+    /// L2 write policies (`wb`, `wt`, `bypass`) — profiling runs through
+    /// the trace-driven simulator for non-default values.
+    Write(Vec<WritePolicy>),
+    /// L2 replacement policies (`lru`, `plru`, `srrip`).
+    Repl(Vec<Replacement>),
+    /// Whether the aggregate L1 level is simulated (`on`, `off`).
+    L1(Vec<bool>),
     /// Numeric override of a [`TechSpec`] field (see [`spec_field_names`]).
     Spec { field: String, values: Vec<f64> },
 }
@@ -57,6 +67,9 @@ impl Axis {
             Axis::CapacityMb(_) => "capacity_mb".to_string(),
             Axis::Batch(_) => "batch".to_string(),
             Axis::Workload(_) => "workload".to_string(),
+            Axis::Write(_) => "write_policy".to_string(),
+            Axis::Repl(_) => "replacement".to_string(),
+            Axis::L1(_) => "l1".to_string(),
             Axis::Spec { field, .. } => field.clone(),
         }
     }
@@ -68,6 +81,9 @@ impl Axis {
             Axis::CapacityMb(v) => v.len(),
             Axis::Batch(v) => v.len(),
             Axis::Workload(v) => v.len(),
+            Axis::Write(v) => v.len(),
+            Axis::Repl(v) => v.len(),
+            Axis::L1(v) => v.len(),
             Axis::Spec { values, .. } => values.len(),
         }
     }
@@ -84,6 +100,9 @@ impl Axis {
             Axis::CapacityMb(v) => v[i].to_string(),
             Axis::Batch(v) => v[i].to_string(),
             Axis::Workload(v) => workload_label(&v[i]),
+            Axis::Write(v) => v[i].name().to_string(),
+            Axis::Repl(v) => v[i].name().to_string(),
+            Axis::L1(v) => (if v[i] { "on" } else { "off" }).to_string(),
             Axis::Spec { values, .. } => values[i].to_string(),
         }
     }
@@ -240,6 +259,10 @@ pub struct Space {
     pub axes: Vec<Axis>,
     /// Capacity interpretation for every candidate query.
     pub iso: IsoMode,
+    /// The cache-hierarchy configuration candidates start from (a
+    /// descriptor file's `[cache]` section, or the seed default); cache
+    /// axes override individual fields per candidate.
+    pub base_cache: CacheConfig,
 }
 
 impl Default for Space {
@@ -251,7 +274,14 @@ impl Default for Space {
 impl Space {
     /// An empty space (normalization fills in default axes).
     pub fn new() -> Space {
-        Space { axes: Vec::new(), iso: IsoMode::Capacity }
+        Space { axes: Vec::new(), iso: IsoMode::Capacity, base_cache: CacheConfig::default() }
+    }
+
+    /// Set the base cache-hierarchy configuration (fields without a
+    /// dedicated axis).
+    pub fn with_base_cache(mut self, cache: CacheConfig) -> Space {
+        self.base_cache = cache;
+        self
     }
 
     /// Add a technology axis (registry ids).
@@ -275,6 +305,24 @@ impl Space {
     /// Add a workload axis.
     pub fn workload(mut self, ws: impl IntoIterator<Item = Workload>) -> Space {
         self.axes.push(Axis::Workload(ws.into_iter().collect()));
+        self
+    }
+
+    /// Add an L2 write-policy axis.
+    pub fn write_policy(mut self, ps: impl IntoIterator<Item = WritePolicy>) -> Space {
+        self.axes.push(Axis::Write(ps.into_iter().collect()));
+        self
+    }
+
+    /// Add an L2 replacement-policy axis.
+    pub fn replacement(mut self, rs: impl IntoIterator<Item = Replacement>) -> Space {
+        self.axes.push(Axis::Repl(rs.into_iter().collect()));
+        self
+    }
+
+    /// Add an L1 on/off axis.
+    pub fn l1(mut self, vs: impl IntoIterator<Item = bool>) -> Space {
+        self.axes.push(Axis::L1(vs.into_iter().collect()));
         self
     }
 
@@ -393,6 +441,7 @@ impl Space {
         let mut capacity_mb: Option<u64> = None;
         let mut batch: Option<u64> = None;
         let mut workload: Option<Workload> = None;
+        let mut cache = self.base_cache;
         let mut overrides: Vec<(String, f64)> = Vec::new();
         let mut labels = Vec::with_capacity(self.axes.len());
         for (axis, &i) in self.axes.iter().zip(coords) {
@@ -405,6 +454,9 @@ impl Space {
                 Axis::CapacityMb(v) => capacity_mb = Some(v[i]),
                 Axis::Batch(v) => batch = Some(v[i]),
                 Axis::Workload(v) => workload = Some(v[i].clone()),
+                Axis::Write(v) => cache.write = v[i],
+                Axis::Repl(v) => cache.replacement = v[i],
+                Axis::L1(v) => cache.l1 = v[i],
                 Axis::Spec { field, values } => overrides.push((field.clone(), values[i])),
             }
         }
@@ -434,12 +486,27 @@ impl Space {
             derived.name = id.clone();
             engine.register_if_absent(derived)?
         };
+        // When the space varies (or re-bases) the cache configuration,
+        // every candidate — including the write-back default corner — is
+        // profiled by the trace simulator, so policy deltas measure the
+        // policy and never an analytical-vs-simulated model switch.
+        let cache_sensitive = self.base_cache != CacheConfig::default()
+            || self
+                .axes
+                .iter()
+                .any(|a| matches!(a, Axis::Write(_) | Axis::Repl(_) | Axis::L1(_)));
         let query = Query {
             tech,
             capacity_bytes: capacity_mb * MB,
             workload,
             batch,
             iso: self.iso,
+            cache,
+            profile_model: if cache_sensitive {
+                ProfileModel::Simulate
+            } else {
+                ProfileModel::Auto
+            },
         };
         Ok(Candidate { coords: coords.to_vec(), labels, query })
     }
@@ -475,6 +542,27 @@ impl Space {
                 "workload" => {
                     space.axes.push(Axis::Workload(parse_workloads(engine, &items)?));
                 }
+                "write_policy" => {
+                    let ps: Vec<WritePolicy> = items
+                        .iter()
+                        .map(|s| WritePolicy::parse(s))
+                        .collect::<crate::Result<_>>()?;
+                    space.axes.push(Axis::Write(ps));
+                }
+                "replacement" => {
+                    let rs: Vec<Replacement> = items
+                        .iter()
+                        .map(|s| Replacement::parse(s))
+                        .collect::<crate::Result<_>>()?;
+                    space.axes.push(Axis::Repl(rs));
+                }
+                "l1" => {
+                    let vs: Vec<bool> = items
+                        .iter()
+                        .map(|s| parse_l1(s))
+                        .collect::<crate::Result<_>>()?;
+                    space.axes.push(Axis::L1(vs));
+                }
                 "iso" => {
                     if items.len() != 1 {
                         return Err(msg("[space] iso: expected a single value"));
@@ -504,7 +592,8 @@ impl Space {
                 other => {
                     return Err(msg(format!(
                         "[space] unknown key '{other}' (known: tech, capacity_mb, batch, \
-                         workload, iso, or a spec field path like mtj.tau0)"
+                         workload, write_policy, replacement, l1, iso, or a spec field path \
+                         like mtj.tau0)"
                     )))
                 }
             }
@@ -520,9 +609,11 @@ impl Space {
     /// Parse a descriptor file's text into a space. The file must carry a
     /// `[space]` section; when it also carries a `[tech]` descriptor, that
     /// technology is registered (idempotently) and becomes the default
-    /// technology axis if the space declares none. A file without `[tech]`
-    /// must be pure `[space]` — any other section is rejected as a likely
-    /// misspelling rather than silently ignored.
+    /// technology axis if the space declares none, and a `[cache]` section
+    /// becomes the base cache configuration every candidate starts from
+    /// (cache axes override individual fields). A file without `[tech]`
+    /// must be pure `[space]`/`[cache]` — any other section is rejected as
+    /// a likely misspelling rather than silently ignored.
     pub fn from_descriptor(engine: &Engine, text: &str) -> crate::Result<Space> {
         let entries = descriptor::space_section(text)?
             .ok_or_else(|| msg("descriptor has no [space] section"))?;
@@ -533,9 +624,17 @@ impl Space {
             descriptor::ensure_only_space(text)?;
             None
         };
-        Space::from_entries(engine, &entries, base.as_deref())
+        let mut space = Space::from_entries(engine, &entries, base.as_deref())?;
+        if let Some(cache) = descriptor::cache_section(text)? {
+            space.base_cache = cache;
+        }
+        Ok(space)
     }
 }
+
+// One L1 on/off grammar for every surface (CLI flag, `[space]` axes,
+// `[cache]` sections) — defined next to the policy parsers in `gpusim`.
+pub use crate::gpusim::config::parse_l1;
 
 fn parse_u64s(key: &str, items: &[&str]) -> crate::Result<Vec<u64>> {
     items
@@ -738,6 +837,83 @@ mod tests {
         let s = Space::from_entries(&engine, &entries, Some("my_reram")).unwrap();
         let tech_axis = s.axes.iter().find(|a| matches!(a, Axis::Tech(_))).unwrap();
         assert_eq!(tech_axis.value_label(0), "my_reram");
+    }
+
+    #[test]
+    fn cache_axes_materialize_into_query_configs() {
+        let engine = Engine::new();
+        let space = Space::new()
+            .tech(["stt"])
+            .capacity_mb([2])
+            .write_policy([WritePolicy::WriteBack, WritePolicy::WriteBypass])
+            .l1([false, true])
+            .normalized()
+            .unwrap();
+        assert_eq!(space.size(), 4);
+        // Flat order varies the last axis fastest: (wb,off) (wb,on)
+        // (bypass,off) (bypass,on)... with the workload default appended
+        // after l1, so recompute via coords.
+        let mut seen_default = 0;
+        for flat in 0..space.size() {
+            let c = space.candidate(&engine, &space.coords(flat)).unwrap();
+            if c.query.cache.is_default() {
+                seen_default += 1;
+            }
+            assert_eq!(c.query.cache.replacement, Replacement::Lru);
+            // Cache axes force one model for every corner, wb included.
+            assert_eq!(c.query.profile_model, ProfileModel::Simulate);
+        }
+        assert_eq!(seen_default, 1, "exactly one corner is the seed default");
+        // A space without cache axes keeps the legacy Auto model.
+        let plain = Space::new().tech(["stt"]).capacity_mb([2]).normalized().unwrap();
+        let c = plain.candidate(&engine, &plain.coords(0)).unwrap();
+        assert_eq!(c.query.profile_model, ProfileModel::Auto);
+        // Labels render the policy names.
+        let c = space.candidate(&engine, &space.coords(space.size() - 1)).unwrap();
+        assert!(c.labels.contains(&"bypass".to_string()), "{:?}", c.labels);
+        assert!(c.labels.contains(&"on".to_string()), "{:?}", c.labels);
+        assert_eq!(c.query.cache.write, WritePolicy::WriteBypass);
+        assert!(c.query.cache.l1);
+    }
+
+    #[test]
+    fn cache_section_sets_the_base_config_axes_override() {
+        let engine = Engine::new();
+        let text = "[space]\ntech = stt\ncapacity_mb = 2\nwrite_policy = wb, bypass\n\
+                    \n[cache]\nreplacement = \"srrip\"\nl1 = \"on\"\n";
+        let space = Space::from_descriptor(&engine, text).unwrap().normalized().unwrap();
+        assert_eq!(space.base_cache.replacement, Replacement::Srrip);
+        assert!(space.base_cache.l1);
+        for flat in 0..space.size() {
+            let c = space.candidate(&engine, &space.coords(flat)).unwrap();
+            assert_eq!(c.query.cache.replacement, Replacement::Srrip, "base survives");
+            assert!(c.query.cache.l1);
+        }
+        // The write_policy axis still varies per candidate.
+        let writes: std::collections::HashSet<WritePolicy> = (0..space.size())
+            .map(|f| space.candidate(&engine, &space.coords(f)).unwrap().query.cache.write)
+            .collect();
+        assert_eq!(writes.len(), 2);
+    }
+
+    #[test]
+    fn space_grammar_accepts_cache_axes() {
+        let engine = Engine::new();
+        let entries = vec![
+            ("capacity_mb".to_string(), "2".to_string()),
+            ("l1".to_string(), "on, off".to_string()),
+            ("replacement".to_string(), "lru, srrip".to_string()),
+            ("write_policy".to_string(), "wb, wt, bypass".to_string()),
+        ];
+        let s = Space::from_entries(&engine, &entries, Some("stt")).unwrap();
+        assert_eq!(s.size(), 2 * 2 * 3);
+        let bad = vec![("write_policy".to_string(), "wombat".to_string())];
+        let e = Space::from_entries(&engine, &bad, Some("stt")).unwrap_err().to_string();
+        assert!(e.contains("unknown write policy"), "{e}");
+        let bad = vec![("l1".to_string(), "maybe".to_string())];
+        let e = Space::from_entries(&engine, &bad, Some("stt")).unwrap_err().to_string();
+        assert!(e.contains("expected on/off"), "{e}");
+        assert!(parse_l1("ON").unwrap() && !parse_l1("off").unwrap());
     }
 
     #[test]

@@ -1,17 +1,35 @@
-//! Set-associative cache model with true-LRU replacement and write-back /
-//! write-allocate policy — the L1/L2 building block of the trace-driven
-//! simulator.
+//! Policy-generic set-associative cache model — the L1/L2 building block
+//! of the trace-driven simulator.
+//!
+//! The tag array is shared SoA state (`tags` + per-set `dirty` bitmask);
+//! what varies is *policy*, split along the two axes that matter for NVM
+//! caches:
+//!
+//! * [`ReplacementPolicy`] — victim selection. [`TrueLru`] is bit-identical
+//!   to the original fused-scan implementation (pinned in
+//!   `tests/golden.rs`); [`TreePlru`] and [`Srrip`] are the standard
+//!   cheaper/scan-resistant alternatives.
+//! * [`WritePolicy`] — write handling. NVM write energy dominates
+//!   (DeepNVM++ charges read and write transactions separately), so how
+//!   many writes actually touch the array is a first-order design knob:
+//!   write-back/write-allocate (the default), write-through/no-allocate,
+//!   and an NVM-aware *write-bypass* mode that streams write misses past
+//!   the cache to DRAM while keeping write hits cached.
 //!
 //! Performance note (this is the simulator's hot path): sets are flat
-//! arrays of `(tag, lru_counter)` pairs; a lookup scans at most `assoc`
-//! entries. With 16 ways that beats any pointer-chasing LRU list at these
-//! sizes, and the layout is cache-friendly for the *host* CPU.
+//! arrays scanned at most `assoc` entries deep. With 16 ways that beats
+//! any pointer-chasing LRU list at these sizes, and the layout is
+//! cache-friendly for the *host* CPU. Policy dispatch is monomorphized
+//! ([`PolicyCache`] is generic over the replacement policy); the
+//! config-driven simulator selects the instantiation once per run, not
+//! per access.
 
 /// Access outcome.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Outcome {
     Hit,
-    /// Miss; evicted line was clean (or set had an empty way).
+    /// Miss; no dirty line was evicted (empty way, clean victim, or a
+    /// no-allocate write miss that bypassed the cache).
     Miss,
     /// Miss that evicted a dirty line (costs a write-back).
     MissDirtyEvict,
@@ -20,49 +38,355 @@ pub enum Outcome {
 /// Invalid-way sentinel in the tag array.
 const EMPTY: u64 = u64::MAX;
 
-/// A set-associative write-back cache.
+/// How writes are handled (the NVM-critical axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WritePolicy {
+    /// Write-back / write-allocate: write misses fill the line, dirty
+    /// lines write back on eviction (the seed behavior, and the default).
+    #[default]
+    WriteBack,
+    /// Write-through / no-allocate: every write also goes to the next
+    /// level; write misses do not allocate. Nothing is ever dirty.
+    WriteThrough,
+    /// Write-back for hits, no-allocate for write misses: streaming write
+    /// misses go straight to DRAM instead of costing an NVM fill+write —
+    /// the paper-motivated mode for write-asymmetric STT/SOT arrays.
+    WriteBypass,
+}
+
+impl WritePolicy {
+    /// All policies, in documentation order.
+    pub const ALL: [WritePolicy; 3] =
+        [WritePolicy::WriteBack, WritePolicy::WriteThrough, WritePolicy::WriteBypass];
+
+    /// Short name used in CLI flags, `[space]`/`[cache]` sections and CSVs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WritePolicy::WriteBack => "wb",
+            WritePolicy::WriteThrough => "wt",
+            WritePolicy::WriteBypass => "bypass",
+        }
+    }
+
+    /// Parse a CLI/descriptor spelling.
+    pub fn parse(s: &str) -> crate::Result<WritePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "wb" | "writeback" | "write-back" => Ok(WritePolicy::WriteBack),
+            "wt" | "writethrough" | "write-through" => Ok(WritePolicy::WriteThrough),
+            "bypass" | "write-bypass" | "wb-nwa" => Ok(WritePolicy::WriteBypass),
+            other => Err(crate::util::err::msg(format!(
+                "unknown write policy {other:?} (known: wb, wt, bypass)"
+            ))),
+        }
+    }
+}
+
+/// Replacement-policy selector — the data-side handle for the
+/// [`ReplacementPolicy`] implementations, used wherever the policy is
+/// configuration rather than a type parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Replacement {
+    /// True LRU (per-way timestamps) — the seed behavior, and the default.
+    #[default]
+    Lru,
+    /// Tree pseudo-LRU (one bit per tag-array node).
+    TreePlru,
+    /// Static RRIP (2-bit re-reference prediction, hit promotion).
+    Srrip,
+}
+
+impl Replacement {
+    /// All replacement policies, in documentation order.
+    pub const ALL: [Replacement; 3] =
+        [Replacement::Lru, Replacement::TreePlru, Replacement::Srrip];
+
+    /// Short name used in CLI flags, `[space]`/`[cache]` sections and CSVs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Replacement::Lru => "lru",
+            Replacement::TreePlru => "plru",
+            Replacement::Srrip => "srrip",
+        }
+    }
+
+    /// Parse a CLI/descriptor spelling.
+    pub fn parse(s: &str) -> crate::Result<Replacement> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lru" => Ok(Replacement::Lru),
+            "plru" | "tree-plru" | "treeplru" => Ok(Replacement::TreePlru),
+            "srrip" | "rrip" => Ok(Replacement::Srrip),
+            other => Err(crate::util::err::msg(format!(
+                "unknown replacement policy {other:?} (known: lru, plru, srrip)"
+            ))),
+        }
+    }
+}
+
+/// Victim selection over the shared tag array. All state is **set-local**
+/// (touching way `w` of set `s` reads/writes only set `s`'s metadata) —
+/// the invariant the set-sharded parallel simulator rests on.
+pub trait ReplacementPolicy {
+    /// Fresh metadata for a `sets × assoc` array.
+    fn new(sets: usize, assoc: usize) -> Self;
+    /// Promote `way` after a hit.
+    fn touch(&mut self, set: usize, way: usize);
+    /// Install into `way` after a miss fill.
+    fn fill(&mut self, set: usize, way: usize);
+    /// Pick the eviction way. Only called on a full set.
+    fn victim(&mut self, set: usize) -> usize;
+}
+
+/// True LRU: one timestamp per way, victim = oldest. Equivalent to the
+/// seed's fused scan: the tick increments once per touch/fill, so the
+/// relative order of timestamps — all victim selection uses — matches the
+/// original access-counter scheme exactly.
+#[derive(Debug, Clone)]
+pub struct TrueLru {
+    assoc: usize,
+    tick: u64,
+    lru: Vec<u64>,
+}
+
+impl ReplacementPolicy for TrueLru {
+    fn new(sets: usize, assoc: usize) -> TrueLru {
+        TrueLru { assoc, tick: 0, lru: vec![0; sets * assoc] }
+    }
+
+    #[inline]
+    fn touch(&mut self, set: usize, way: usize) {
+        self.tick += 1;
+        self.lru[set * self.assoc + way] = self.tick;
+    }
+
+    #[inline]
+    fn fill(&mut self, set: usize, way: usize) {
+        self.touch(set, way);
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        let base = set * self.assoc;
+        let slice = &self.lru[base..base + self.assoc];
+        let mut victim = 0usize;
+        let mut victim_lru = u64::MAX;
+        for (i, &l) in slice.iter().enumerate() {
+            if l < victim_lru {
+                victim_lru = l;
+                victim = i;
+            }
+        }
+        victim
+    }
+}
+
+/// Tree pseudo-LRU: a binary tree of direction bits per set (packed into
+/// one `u64`, so `assoc <= 64`). Touching a way points every node on its
+/// root path away from it; the victim walk follows the bits. Non-power-
+/// of-two associativities use the next power-of-two tree with the
+/// out-of-range leaves statically skipped.
+#[derive(Debug, Clone)]
+pub struct TreePlru {
+    assoc: usize,
+    /// Leaf count: `assoc` rounded up to a power of two.
+    leaves: usize,
+    /// One direction-bit word per set (bit `n-1` = internal node `n`).
+    bits: Vec<u64>,
+}
+
+impl TreePlru {
+    /// Way index of the leftmost leaf under heap node `n`.
+    #[inline]
+    fn leftmost_way(mut n: usize, leaves: usize) -> usize {
+        while n < leaves {
+            n <<= 1;
+        }
+        n - leaves
+    }
+}
+
+impl ReplacementPolicy for TreePlru {
+    fn new(sets: usize, assoc: usize) -> TreePlru {
+        assert!(assoc <= 64, "tree-PLRU packs at most 64 ways per set word");
+        TreePlru { assoc, leaves: assoc.next_power_of_two(), bits: vec![0; sets] }
+    }
+
+    #[inline]
+    fn touch(&mut self, set: usize, way: usize) {
+        let bits = &mut self.bits[set];
+        let mut node = self.leaves + way;
+        while node > 1 {
+            let parent = node / 2;
+            let bit = 1u64 << (parent - 1);
+            if node & 1 == 0 {
+                // `way` lives left of `parent`: point the victim walk right.
+                *bits |= bit;
+            } else {
+                *bits &= !bit;
+            }
+            node = parent;
+        }
+    }
+
+    #[inline]
+    fn fill(&mut self, set: usize, way: usize) {
+        self.touch(set, way);
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        let bits = self.bits[set];
+        let mut node = 1usize;
+        while node < self.leaves {
+            let b = ((bits >> (node - 1)) & 1) as usize;
+            let mut next = 2 * node + b;
+            // A subtree whose leftmost way is out of range holds no real
+            // way at all (leaves are ordered): take the sibling.
+            if Self::leftmost_way(next, self.leaves) >= self.assoc {
+                next = 2 * node + (1 - b);
+            }
+            node = next;
+        }
+        node - self.leaves
+    }
+}
+
+/// SRRIP re-reference ceiling (2-bit RRPV).
+const RRPV_MAX: u8 = 3;
+
+/// Static RRIP (SRRIP-HP): 2-bit re-reference prediction values per way.
+/// Fills install at "long" (`RRPV_MAX - 1`), hits promote to 0, the
+/// victim is the first way at `RRPV_MAX` (aging the set until one
+/// exists) — scan-resistant where LRU thrashes.
+#[derive(Debug, Clone)]
+pub struct Srrip {
+    assoc: usize,
+    rrpv: Vec<u8>,
+}
+
+impl ReplacementPolicy for Srrip {
+    fn new(sets: usize, assoc: usize) -> Srrip {
+        Srrip { assoc, rrpv: vec![RRPV_MAX; sets * assoc] }
+    }
+
+    #[inline]
+    fn touch(&mut self, set: usize, way: usize) {
+        self.rrpv[set * self.assoc + way] = 0;
+    }
+
+    #[inline]
+    fn fill(&mut self, set: usize, way: usize) {
+        self.rrpv[set * self.assoc + way] = RRPV_MAX - 1;
+    }
+
+    #[inline]
+    fn victim(&mut self, set: usize) -> usize {
+        let base = set * self.assoc;
+        let slice = &mut self.rrpv[base..base + self.assoc];
+        loop {
+            if let Some(i) = slice.iter().position(|&r| r == RRPV_MAX) {
+                return i;
+            }
+            for r in slice.iter_mut() {
+                *r += 1;
+            }
+        }
+    }
+}
+
+/// Counter snapshot of one cache level (all in accesses/lines, not
+/// transactions).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    /// Dirty evictions (write-back traffic to the next level).
+    pub writebacks: u64,
+    pub write_hits: u64,
+    pub write_misses: u64,
+    /// Writes that updated this array (hit updates + write-allocate
+    /// installs) — what NVM write energy is charged on.
+    pub array_writes: u64,
+    /// Line fills from the next level (== misses under write-allocate).
+    pub fills: u64,
+    /// Writes forwarded directly to the next level (write-through
+    /// traffic, and no-allocate write misses under through/bypass).
+    pub direct_writes: u64,
+}
+
+/// A set-associative cache over a [`ReplacementPolicy`], with a
+/// configurable [`WritePolicy`].
 ///
 /// Perf (§Perf in EXPERIMENTS.md): structure-of-arrays layout — the tag
 /// probe is a branch-light scan over a contiguous `u64` slice the
-/// compiler vectorizes, with LRU counters and dirty bits in side arrays
-/// touched only on their respective paths. ~25% faster trace replay than
-/// the array-of-structs `(tag, lru, valid, dirty)` version.
+/// compiler vectorizes, with replacement metadata and dirty bits in side
+/// arrays touched only on their respective paths.
 #[derive(Debug, Clone)]
-pub struct Cache {
+pub struct PolicyCache<P: ReplacementPolicy> {
     sets: usize,
     assoc: usize,
     line: u64,
+    write: WritePolicy,
     /// Line tag per way (`EMPTY` = invalid), `sets × assoc`.
     tags: Vec<u64>,
-    /// LRU timestamp per way.
-    lru: Vec<u64>,
     /// Dirty bitmask per set (bit i = way i), assoc ≤ 64.
     dirty: Vec<u64>,
-    tick: u64,
+    policy: P,
     pub hits: u64,
     pub misses: u64,
     pub writebacks: u64,
+    pub write_hits: u64,
+    pub write_misses: u64,
+    pub array_writes: u64,
+    pub fills: u64,
+    pub direct_writes: u64,
 }
 
-impl Cache {
-    /// Build a cache of `capacity` bytes with `line`-byte lines and
-    /// `assoc` ways. Capacity must divide evenly into sets.
-    pub fn new(capacity: u64, line: u64, assoc: u64) -> Cache {
-        let lines = capacity / line;
-        assert!(lines >= assoc && assoc > 0, "degenerate cache geometry");
+/// The default cache: true-LRU with a configurable write policy — the
+/// seed's exact model under [`WritePolicy::WriteBack`].
+pub type Cache = PolicyCache<TrueLru>;
+
+impl<P: ReplacementPolicy> PolicyCache<P> {
+    /// Build a write-back cache of `capacity` bytes with `line`-byte lines
+    /// and `assoc` ways.
+    pub fn new(capacity: u64, line: u64, assoc: u64) -> PolicyCache<P> {
+        PolicyCache::with_write_policy(capacity, line, assoc, WritePolicy::WriteBack)
+    }
+
+    /// [`PolicyCache::new`] with an explicit write policy. Geometry must
+    /// divide exactly: a capacity that silently truncated to fewer lines
+    /// would simulate a smaller cache than asked for.
+    pub fn with_write_policy(
+        capacity: u64,
+        line: u64,
+        assoc: u64,
+        write: WritePolicy,
+    ) -> PolicyCache<P> {
+        assert!(line > 0 && assoc > 0 && capacity > 0, "degenerate cache geometry");
         assert!(assoc <= 64, "dirty bitmask holds at most 64 ways");
-        let sets = (lines / assoc) as usize;
-        Cache {
+        assert!(
+            capacity % (line * assoc) == 0,
+            "cache geometry: capacity {capacity} B is not a whole number of {assoc}-way sets \
+             of {line} B lines (needs a multiple of {} B; {} B would be dropped)",
+            line * assoc,
+            capacity % (line * assoc)
+        );
+        let sets = ((capacity / line) / assoc) as usize;
+        PolicyCache {
             sets,
             assoc: assoc as usize,
             line,
+            write,
             tags: vec![EMPTY; sets * assoc as usize],
-            lru: vec![0; sets * assoc as usize],
             dirty: vec![0; sets],
-            tick: 0,
+            policy: P::new(sets, assoc as usize),
             hits: 0,
             misses: 0,
             writebacks: 0,
+            write_hits: 0,
+            write_misses: 0,
+            array_writes: 0,
+            fills: 0,
+            direct_writes: 0,
         }
     }
 
@@ -73,46 +397,72 @@ impl Cache {
         (set, line_addr)
     }
 
-    /// Access `addr`; returns the outcome and updates LRU/dirty state.
+    /// Access `addr`; returns the outcome and updates replacement/dirty
+    /// state per the configured policies.
     #[inline]
     pub fn access(&mut self, addr: u64, is_write: bool) -> Outcome {
-        self.tick += 1;
         let (set, tag) = self.set_of(addr);
         let base = set * self.assoc;
-        let tags = &mut self.tags[base..base + self.assoc];
-        let lru = &mut self.lru[base..base + self.assoc];
-
-        // Hit + victim in one fused scan over the SoA slices (branch-lean:
-        // the victim bookkeeping is two compares on already-loaded words).
-        let mut victim = 0usize;
-        let mut victim_lru = u64::MAX;
-        for (i, (&t, &l)) in tags.iter().zip(lru.iter()).enumerate() {
+        // One fused scan resolves both the hit probe and the fill way:
+        // ways fill first-empty-first and tags never invalidate, so EMPTY
+        // ways are a suffix — hitting one ends the probe (the tag cannot
+        // sit past it) and names the fill way in the same pass.
+        let mut hit_way: Option<usize> = None;
+        let mut empty_way: Option<usize> = None;
+        for (i, &t) in self.tags[base..base + self.assoc].iter().enumerate() {
             if t == tag {
-                lru[i] = self.tick;
-                if is_write {
-                    self.dirty[set] |= 1 << i;
-                }
-                self.hits += 1;
-                return Outcome::Hit;
+                hit_way = Some(i);
+                break;
             }
-            let key = if t == EMPTY { 0 } else { l };
-            if key < victim_lru {
-                victim_lru = key;
-                victim = i;
+            if t == EMPTY {
+                empty_way = Some(i);
+                break;
             }
         }
+
+        if let Some(way) = hit_way {
+            self.policy.touch(set, way);
+            self.hits += 1;
+            if is_write {
+                self.write_hits += 1;
+                self.array_writes += 1;
+                match self.write {
+                    WritePolicy::WriteBack | WritePolicy::WriteBypass => {
+                        self.dirty[set] |= 1 << way;
+                    }
+                    WritePolicy::WriteThrough => self.direct_writes += 1,
+                }
+            }
+            return Outcome::Hit;
+        }
+
         self.misses += 1;
-        let was_valid = tags[victim] != EMPTY;
-        let dirty_evict = was_valid && (self.dirty[set] >> victim) & 1 == 1;
+        if is_write {
+            self.write_misses += 1;
+            if self.write != WritePolicy::WriteBack {
+                // No-allocate: the write streams past this level.
+                self.direct_writes += 1;
+                return Outcome::Miss;
+            }
+        }
+
+        // Allocate: first empty way, else the policy's victim.
+        self.fills += 1;
+        let way = match empty_way {
+            Some(w) => w,
+            None => self.policy.victim(set),
+        };
+        let dirty_evict = (self.dirty[set] >> way) & 1 == 1;
         if dirty_evict {
             self.writebacks += 1;
         }
-        tags[victim] = tag;
-        lru[victim] = self.tick;
+        self.tags[base + way] = tag;
+        self.policy.fill(set, way);
         if is_write {
-            self.dirty[set] |= 1 << victim;
+            self.array_writes += 1;
+            self.dirty[set] |= 1 << way;
         } else {
-            self.dirty[set] &= !(1 << victim);
+            self.dirty[set] &= !(1 << way);
         }
         if dirty_evict {
             Outcome::MissDirtyEvict
@@ -129,11 +479,31 @@ impl Cache {
         self.misses as f64 / self.accesses().max(1) as f64
     }
 
-    /// Reset counters (state retained) — used between warmup and measure.
+    /// Counter snapshot (for merging sharded results).
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits,
+            misses: self.misses,
+            writebacks: self.writebacks,
+            write_hits: self.write_hits,
+            write_misses: self.write_misses,
+            array_writes: self.array_writes,
+            fills: self.fills,
+            direct_writes: self.direct_writes,
+        }
+    }
+
+    /// Reset counters (state retained) — the warmup/measure boundary of
+    /// [`simulate`](super::sim::simulate)'s `--warmup-frac` mode.
     pub fn reset_counters(&mut self) {
         self.hits = 0;
         self.misses = 0;
         self.writebacks = 0;
+        self.write_hits = 0;
+        self.write_misses = 0;
+        self.array_writes = 0;
+        self.fills = 0;
+        self.direct_writes = 0;
     }
 }
 
@@ -206,6 +576,7 @@ mod tests {
         c.access(0, true);
         c.reset_counters();
         assert_eq!(c.accesses(), 0);
+        assert_eq!(c.counters(), CacheCounters::default());
         assert_eq!(c.access(0, false), Outcome::Hit, "state retained");
     }
 
@@ -213,5 +584,152 @@ mod tests {
     #[should_panic(expected = "degenerate")]
     fn zero_assoc_panics() {
         let _ = Cache::new(1024, 64, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "960 B would be dropped")]
+    fn truncating_capacity_is_rejected_loudly() {
+        // 10000 B over 64B × 4-way sets: 10000 % 256 == 16... use numbers
+        // whose remainder is stated in the assertion.
+        let _ = Cache::new(4 * 1024 + 960, 64, 16);
+    }
+
+    #[test]
+    fn plru_and_srrip_behave_like_caches() {
+        // Basic cache identities hold for every replacement policy:
+        // repeated access hits, a working set that fits stops missing.
+        // 96KB divides into 6-way sets of 128B lines exactly (128 sets).
+        let mut p: PolicyCache<TreePlru> = PolicyCache::new(96 * 1024, 128, 6);
+        let mut s: PolicyCache<Srrip> = PolicyCache::new(64 * 1024, 128, 16);
+        for pass in 0..2 {
+            for line in 0..128u64 {
+                let op = p.access(line * 128, false);
+                let os = s.access(line * 128, false);
+                if pass > 0 {
+                    assert_eq!(op, Outcome::Hit, "plru line {line}");
+                    assert_eq!(os, Outcome::Hit, "srrip line {line}");
+                }
+            }
+        }
+        assert_eq!(p.misses, 128);
+        assert_eq!(s.misses, 128);
+    }
+
+    #[test]
+    fn plru_single_set_evicts_an_untouched_way() {
+        // 4 ways, one set. Fill A B C D, touch A and B again: the PLRU
+        // victim must be C or D, never the freshly touched ways.
+        let mut c: PolicyCache<TreePlru> = PolicyCache::new(4 * 64, 64, 4);
+        for a in [0u64, 64, 128, 192] {
+            c.access(a, false);
+        }
+        c.access(0, false);
+        c.access(64, false);
+        c.access(256, false); // evicts one of C/D
+        assert_eq!(c.access(0, false), Outcome::Hit, "A protected");
+        assert_eq!(c.access(64, false), Outcome::Hit, "B protected");
+    }
+
+    #[test]
+    fn plru_non_pow2_assoc_stays_in_range() {
+        // 6 ways (the Table 4 L1): the padded tree must never evict a
+        // phantom way >= assoc. Exercise heavily under conflict.
+        let mut c: PolicyCache<TreePlru> = PolicyCache::new(6 * 64, 64, 6);
+        for i in 0..1000u64 {
+            c.access((i % 13) * 64, i % 3 == 0);
+        }
+        assert_eq!(c.hits + c.misses, 1000);
+    }
+
+    #[test]
+    fn srrip_resists_a_scan() {
+        // A hot line re-referenced between one-shot scan lines survives
+        // under SRRIP in a single set where LRU would keep churning.
+        let mut c: PolicyCache<Srrip> = PolicyCache::new(4 * 64, 64, 4);
+        c.access(0, false); // hot
+        c.access(0, false); // promoted to RRPV 0
+        for i in 1..64u64 {
+            c.access(i * 64, false); // scan (install at long)
+            assert_eq!(c.access(0, false), Outcome::Hit, "hot line evicted at scan {i}");
+        }
+    }
+
+    #[test]
+    fn write_through_never_writes_back() {
+        let mut c: Cache = PolicyCache::with_write_policy(128, 64, 2, WritePolicy::WriteThrough);
+        c.access(0, true); // write miss: no allocate, direct
+        assert_eq!(c.access(0, false), Outcome::Miss, "write miss did not allocate");
+        c.access(0, true); // write hit: array update + through
+        c.access(64, false);
+        c.access(128, false); // evicts — nothing dirty
+        assert_eq!(c.writebacks, 0);
+        assert_eq!(c.direct_writes, 2);
+        assert_eq!(c.array_writes, 1, "only the write hit touched the array");
+        assert_eq!(c.fills, 3, "read misses still fill");
+    }
+
+    #[test]
+    fn write_bypass_keeps_write_hits_cached() {
+        let mut c: Cache = PolicyCache::with_write_policy(128, 64, 2, WritePolicy::WriteBypass);
+        c.access(0, false); // read fill
+        c.access(0, true); // write hit: cached + dirty (no direct write)
+        c.access(512, true); // write miss: bypassed
+        assert_eq!(c.access(512, false), Outcome::Miss, "bypassed write did not allocate");
+        assert_eq!(c.direct_writes, 1);
+        assert_eq!(c.write_hits, 1);
+        // The dirty hit line (LRU after 512 filled the other way) writes
+        // back on eviction, like write-back.
+        let out = c.access(64, false);
+        assert_eq!(out, Outcome::MissDirtyEvict);
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn counter_identities_hold_per_policy() {
+        for write in WritePolicy::ALL {
+            let mut c: Cache = PolicyCache::with_write_policy(8 * 1024, 128, 4, write);
+            let mut state = 9u64;
+            for _ in 0..5000 {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let addr = ((state >> 16) % 4096) * 128;
+                let wr = state % 3 == 0;
+                c.access(addr, wr);
+            }
+            assert_eq!(c.hits + c.misses, 5000, "{write:?}");
+            assert!(c.write_hits <= c.hits && c.write_misses <= c.misses, "{write:?}");
+            assert!(c.writebacks <= c.fills, "{write:?}");
+            match write {
+                WritePolicy::WriteBack => {
+                    assert_eq!(c.direct_writes, 0);
+                    assert_eq!(c.fills, c.misses);
+                    assert_eq!(c.array_writes, c.write_hits + c.write_misses);
+                }
+                WritePolicy::WriteThrough => {
+                    assert_eq!(c.writebacks, 0);
+                    assert_eq!(c.direct_writes, c.write_hits + c.write_misses);
+                    assert_eq!(c.array_writes, c.write_hits);
+                    assert_eq!(c.fills, c.misses - c.write_misses);
+                }
+                WritePolicy::WriteBypass => {
+                    assert_eq!(c.direct_writes, c.write_misses);
+                    assert_eq!(c.array_writes, c.write_hits);
+                    assert_eq!(c.fills, c.misses - c.write_misses);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policy_names_parse_back() {
+        for w in WritePolicy::ALL {
+            assert_eq!(WritePolicy::parse(w.name()).unwrap(), w);
+        }
+        for r in Replacement::ALL {
+            assert_eq!(Replacement::parse(r.name()).unwrap(), r);
+        }
+        assert_eq!(WritePolicy::parse("write-back").unwrap(), WritePolicy::WriteBack);
+        assert_eq!(Replacement::parse("tree-plru").unwrap(), Replacement::TreePlru);
+        assert!(WritePolicy::parse("wombat").is_err());
+        assert!(Replacement::parse("fifo").is_err());
     }
 }

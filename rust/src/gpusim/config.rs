@@ -1,5 +1,8 @@
-//! GPU model configuration — paper Table 4 (NVIDIA GTX 1080 Ti).
+//! GPU model configuration — paper Table 4 (NVIDIA GTX 1080 Ti) — and the
+//! cache-hierarchy configuration ([`CacheConfig`]) that selects the
+//! simulated policies.
 
+use super::cache::{Replacement, WritePolicy};
 use crate::util::units::{KB, MB};
 
 /// Table 4, verbatim.
@@ -63,6 +66,69 @@ impl GpuConfig {
     pub fn l2_cycle(&self) -> f64 {
         1.0 / self.l2_clock
     }
+
+    /// L2 set count.
+    pub fn l2_sets(&self) -> u64 {
+        (self.l2_bytes / self.l2_line) / self.l2_assoc
+    }
+
+    /// Aggregate L1 capacity across all SMs — the Table 4 `l1_*` fields
+    /// modeled as one shared filter in front of the L2 (per-SM address
+    /// interleaving is not simulated; the aggregate captures the capacity
+    /// effect on the L2-visible stream).
+    pub fn l1_aggregate_bytes(&self) -> u64 {
+        self.cores as u64 * self.l1_bytes
+    }
+
+    /// Set count of the aggregate L1.
+    pub fn l1_aggregate_sets(&self) -> u64 {
+        (self.l1_aggregate_bytes() / self.l1_line) / self.l1_assoc
+    }
+}
+
+/// Cache-hierarchy configuration: which policies the trace-driven
+/// simulator runs, and whether the L1 level is simulated at all. This is
+/// *data* — it rides in engine [`Query`](crate::engine::Query) values
+/// (memo-cache keyed), `[cache]` descriptor sections, explore axes, and
+/// the `--write-policy/--replacement/--l1` CLI flags. The default is
+/// bit-identical to the seed simulator: true-LRU, write-back, L1 off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct CacheConfig {
+    /// L2 replacement policy.
+    pub replacement: Replacement,
+    /// L2 write policy.
+    pub write: WritePolicy,
+    /// Simulate the aggregate L1 in front of the L2 (reads that hit in L1
+    /// never reach L2; writes pass through).
+    pub l1: bool,
+}
+
+/// Parse an L1 on/off value — the one grammar shared by the `--l1` CLI
+/// flag, `[space]` axes, and `[cache]` descriptor sections (next to
+/// [`WritePolicy::parse`] and [`Replacement::parse`]).
+pub fn parse_l1(s: &str) -> crate::Result<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => Err(crate::util::err::msg(format!("l1: expected on/off, got {other:?}"))),
+    }
+}
+
+impl CacheConfig {
+    /// Compact human/CSV rendering (`lru/wb/l1-off`).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{}/l1-{}",
+            self.replacement.name(),
+            self.write.name(),
+            if self.l1 { "on" } else { "off" }
+        )
+    }
+
+    /// Whether this is the seed-equivalent default configuration.
+    pub fn is_default(&self) -> bool {
+        *self == CacheConfig::default()
+    }
 }
 
 #[cfg(test)]
@@ -89,5 +155,26 @@ mod tests {
         let g = GpuConfig::gtx_1080_ti().with_l2(24 * MB);
         assert_eq!(g.l2_bytes, 24 * MB);
         assert_eq!(g.cores, 28);
+    }
+
+    #[test]
+    fn derived_set_counts_match_table4() {
+        let g = GpuConfig::gtx_1080_ti();
+        assert_eq!(g.l2_sets(), 1536, "3MB / 128B / 16-way");
+        assert_eq!(g.l1_aggregate_bytes(), 28 * 48 * KB);
+        assert_eq!(g.l1_aggregate_sets(), 1792, "28x48KB / 128B / 6-way");
+    }
+
+    #[test]
+    fn cache_config_default_is_seed_equivalent() {
+        let c = CacheConfig::default();
+        assert!(c.is_default());
+        assert_eq!(c.replacement, Replacement::Lru);
+        assert_eq!(c.write, WritePolicy::WriteBack);
+        assert!(!c.l1);
+        assert_eq!(c.describe(), "lru/wb/l1-off");
+        let custom = CacheConfig { write: WritePolicy::WriteBypass, ..c };
+        assert!(!custom.is_default());
+        assert_eq!(custom.describe(), "lru/bypass/l1-off");
     }
 }

@@ -6,21 +6,39 @@
 //! answers it by simulating AlexNet at L2 capacities from 3MB (the real
 //! GTX 1080 Ti) doubled up to 24MB. Here:
 //!
-//! * [`config`] — the Table 4 GPU configuration.
-//! * [`cache`] — a set-associative write-back cache with true LRU.
+//! * [`config`] — the Table 4 GPU configuration plus [`CacheConfig`], the
+//!   data-driven hierarchy configuration (replacement policy × write
+//!   policy × L1 on/off) threaded through engine queries, explore axes,
+//!   `.tech` descriptor `[cache]` sections and the CLI.
+//! * [`cache`] — the policy-generic set-associative cache:
+//!   [`ReplacementPolicy`] implementations (true LRU — bit-identical to
+//!   the seed, pinned in `tests/golden.rs` — tree-PLRU, SRRIP) and
+//!   [`WritePolicy`] handling (write-back, write-through, and the
+//!   NVM-aware write-bypass that streams write misses past the LLC).
 //! * [`trace`] — streaming address-trace compilation from the workload
 //!   IR (im2col + tiled sgemm for CNN ops, scratch-tensor attention and
 //!   gather/stream rules for the sequence ops): an
 //!   `Iterator<Item = Access>`, never a materialized trace.
-//! * [`sim`] — the simulation loop and the Fig 7 capacity sweep, run as a
-//!   single-pass multi-capacity (Mattson stack-distance) simulation.
+//! * [`sim`] — the simulation loop: the [`Hierarchy`] (optional
+//!   per-SM-aggregate L1 in front of the L2), warmup-then-measure
+//!   support, the **set-sharded parallel** replay engine
+//!   ([`simulate_sharded`] — exact counter equality with sequential
+//!   replay), and the Fig 7 capacity sweep (single-pass Mattson
+//!   stack-distance for the LRU/write-back default,
+//!   [`capacity_sweep_config`] per-capacity sharded replay otherwise).
 
 pub mod cache;
 pub mod config;
 pub mod sim;
 pub mod trace;
 
-pub use cache::{Cache, Outcome};
-pub use config::GpuConfig;
-pub use sim::{capacity_sweep, fig7_capacities, simulate, CapacitySweepSim, SimResult, SweepPoint};
+pub use cache::{
+    Cache, CacheCounters, Outcome, PolicyCache, Replacement, ReplacementPolicy, Srrip, TreePlru,
+    TrueLru, WritePolicy,
+};
+pub use config::{parse_l1, CacheConfig, GpuConfig};
+pub use sim::{
+    capacity_sweep, capacity_sweep_config, fig7_capacities, simulate, simulate_config,
+    simulate_sharded, CapacitySweepSim, Hierarchy, L1Result, SimResult, SweepPoint,
+};
 pub use trace::{net_trace, Access, TraceGen};

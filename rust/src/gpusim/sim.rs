@@ -1,66 +1,402 @@
-//! The trace-driven simulation loop and the Fig 7 capacity sweep.
+//! The trace-driven simulation loop, the Fig 7 capacity sweep, and the
+//! set-sharded parallel replay engine.
 //!
-//! The sweep is a **single-pass multi-capacity** simulation: one traversal
-//! of the (streamed) trace computes exact hits/misses/writebacks for every
-//! capacity at once via per-set LRU recency stacks (Mattson's stack
-//! algorithm generalized to set-associative caches). All swept capacities
-//! share the L2 line size and associativity, so each capacity only changes
-//! the set count; capacities whose set counts are integer multiples of a
-//! common base share one stack walk — a line's LRU stack distance within a
-//! member's set is the number of more-recently-touched distinct lines of
-//! the same residue class, and the access hits iff that distance is below
-//! the associativity. Capacities with incommensurate set counts (7 MB and
-//! 10 MB in the Fig 7 sweep) fall back to a plain set-associative model,
-//! still fed by the same single trace traversal.
+//! Three simulation strategies share one counter vocabulary
+//! ([`SimResult`]):
 //!
-//! Versus the old replay-per-capacity loop this turns O(trace × capacities)
-//! work + O(trace) memory into one O(trace) pass + O(working set) memory,
-//! and lets trace generation fuse with simulation (no materialized
-//! `Vec<Access>`).
+//! * [`simulate`] / [`simulate_config`] — sequential replay of one trace
+//!   through one [`Hierarchy`] (optional aggregate L1 in front of the
+//!   policy-configured L2), with an optional warmup prefix whose counters
+//!   are discarded (`--warmup-frac`).
+//! * [`simulate_sharded`] — the same replay partitioned **by set index**
+//!   across `par_map` workers. Cache state is set-local (tags, dirty
+//!   bits, and every replacement policy's metadata touch only the
+//!   accessed set), so a partition of the trace by set residue class
+//!   replays each set's access subsequence in order and the merged
+//!   counters are *exactly* the sequential counters — verified per access
+//!   class in `tests/hierarchy.rs`.
+//! * [`CapacitySweepSim`] — the **single-pass multi-capacity** simulation
+//!   for the LRU/write-back default: one traversal of the (streamed)
+//!   trace computes exact hits/misses/writebacks for every capacity at
+//!   once via per-set LRU recency stacks (Mattson's stack algorithm
+//!   generalized to set-associative caches). All swept capacities share
+//!   the L2 line size and associativity, so each capacity only changes
+//!   the set count; capacities whose set counts are integer multiples of
+//!   a common base share one stack walk — a line's LRU stack distance
+//!   within a member's set is the number of more-recently-touched
+//!   distinct lines of the same residue class, and the access hits iff
+//!   that distance is below the associativity. Capacities with
+//!   incommensurate set counts (7 MB and 10 MB in the Fig 7 sweep) fall
+//!   back to a plain set-associative model, still fed by the same single
+//!   trace traversal.
+//!
+//! Mattson stacks assume an inclusion-ordered policy, so the single-pass
+//! sweep applies to the default configuration only; non-default policies
+//! (PLRU/SRRIP, write-through/bypass, L1 on) sweep capacities by
+//! [`capacity_sweep_config`]'s per-capacity sharded replay instead.
+//!
+//! Versus the old replay-per-capacity loop the single-pass sweep turns
+//! O(trace × capacities) work + O(trace) memory into one O(trace) pass +
+//! O(working set) memory, and lets trace generation fuse with simulation
+//! (no materialized `Vec<Access>`).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
-use super::cache::Cache;
-use super::config::GpuConfig;
+use super::cache::{Cache, Outcome, PolicyCache, Replacement, Srrip, TreePlru, WritePolicy};
+use super::config::{CacheConfig, GpuConfig};
 use super::trace::Access;
+use crate::util::pool::par_map;
 use crate::util::units::MB;
 
 /// Result of running one trace through one cache configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SimResult {
     /// L2 capacity simulated (bytes).
     pub l2_bytes: u64,
+    /// Accesses the L2 observed (post-L1 when the L1 level is enabled).
     pub l2_accesses: u64,
     pub l2_hits: u64,
     pub l2_misses: u64,
+    /// Dirty evictions (write-back DRAM traffic).
     pub writebacks: u64,
+    pub l2_write_hits: u64,
+    pub l2_write_misses: u64,
+    /// Writes that updated the L2 array (hit updates + write-allocate
+    /// installs) — the quantity NVM write energy is charged on.
+    pub l2_array_writes: u64,
+    /// Line fills from DRAM (== `l2_misses` under write-allocate; smaller
+    /// under no-allocate write policies).
+    pub dram_fills: u64,
+    /// DRAM-bound writes: writebacks plus through/bypassed write traffic.
+    pub dram_writes: u64,
+    /// Accesses replayed (and discarded) as cache warmup before counting.
+    pub warmup_accesses: u64,
+    /// Present when the L1 level was simulated.
+    pub l1: Option<L1Result>,
+}
+
+/// Counters of the aggregate L1 level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct L1Result {
+    /// Accesses offered to the hierarchy (pre-filtering).
+    pub accesses: u64,
+    /// L1 hits (read hits are filtered from the L2 stream; writes pass
+    /// through regardless).
+    pub hits: u64,
 }
 
 impl SimResult {
-    /// DRAM transactions: every L2 miss fetches a line, every dirty
-    /// eviction writes one back.
+    fn zero(l2_bytes: u64) -> SimResult {
+        SimResult {
+            l2_bytes,
+            l2_accesses: 0,
+            l2_hits: 0,
+            l2_misses: 0,
+            writebacks: 0,
+            l2_write_hits: 0,
+            l2_write_misses: 0,
+            l2_array_writes: 0,
+            dram_fills: 0,
+            dram_writes: 0,
+            warmup_accesses: 0,
+            l1: None,
+        }
+    }
+
+    /// DRAM transactions: every line fill plus every DRAM-bound write
+    /// (dirty evictions, write-through, and bypassed write misses). Equals
+    /// the classic `misses + writebacks` under the default configuration.
     pub fn dram_accesses(&self) -> u64 {
-        self.l2_misses + self.writebacks
+        self.dram_fills + self.dram_writes
     }
 
     pub fn l2_hit_rate(&self) -> f64 {
         self.l2_hits as f64 / self.l2_accesses.max(1) as f64
     }
+
+    fn merge_from(&mut self, other: &SimResult) {
+        self.l2_accesses += other.l2_accesses;
+        self.l2_hits += other.l2_hits;
+        self.l2_misses += other.l2_misses;
+        self.writebacks += other.writebacks;
+        self.l2_write_hits += other.l2_write_hits;
+        self.l2_write_misses += other.l2_write_misses;
+        self.l2_array_writes += other.l2_array_writes;
+        self.dram_fills += other.dram_fills;
+        self.dram_writes += other.dram_writes;
+        self.warmup_accesses += other.warmup_accesses;
+        self.l1 = match (self.l1, other.l1) {
+            (None, b) => b,
+            (a, None) => a,
+            (Some(a), Some(b)) => {
+                Some(L1Result { accesses: a.accesses + b.accesses, hits: a.hits + b.hits })
+            }
+        };
+    }
 }
 
-/// Run `trace` through the shared L2 of `config`.
+/// The L2 level with its replacement policy selected at runtime — one
+/// `match` per run setup, monomorphized loops per access.
+enum L2 {
+    Lru(PolicyCache<super::cache::TrueLru>),
+    Plru(PolicyCache<TreePlru>),
+    Srrip(PolicyCache<Srrip>),
+}
+
+impl L2 {
+    fn new(config: &GpuConfig, cache: CacheConfig) -> L2 {
+        let (cap, line, assoc) = (config.l2_bytes, config.l2_line, config.l2_assoc);
+        match cache.replacement {
+            Replacement::Lru => {
+                L2::Lru(PolicyCache::with_write_policy(cap, line, assoc, cache.write))
+            }
+            Replacement::TreePlru => {
+                L2::Plru(PolicyCache::with_write_policy(cap, line, assoc, cache.write))
+            }
+            Replacement::Srrip => {
+                L2::Srrip(PolicyCache::with_write_policy(cap, line, assoc, cache.write))
+            }
+        }
+    }
+
+    #[inline]
+    fn access(&mut self, addr: u64, write: bool) -> Outcome {
+        match self {
+            L2::Lru(c) => c.access(addr, write),
+            L2::Plru(c) => c.access(addr, write),
+            L2::Srrip(c) => c.access(addr, write),
+        }
+    }
+
+    fn counters(&self) -> super::cache::CacheCounters {
+        match self {
+            L2::Lru(c) => c.counters(),
+            L2::Plru(c) => c.counters(),
+            L2::Srrip(c) => c.counters(),
+        }
+    }
+
+    fn reset_counters(&mut self) {
+        match self {
+            L2::Lru(c) => c.reset_counters(),
+            L2::Plru(c) => c.reset_counters(),
+            L2::Srrip(c) => c.reset_counters(),
+        }
+    }
+}
+
+/// The simulated memory hierarchy: an optional aggregate L1 (Table 4
+/// `l1_*` fields, write-through / no-write-allocate, true-LRU) in front
+/// of the policy-configured L2. Read hits in L1 are filtered from the
+/// L2-visible stream; writes pass through (GPU L1s are write-through), so
+/// enabling the L1 changes the L2's read mix but never its write mix.
+pub struct Hierarchy {
+    l1: Option<Cache>,
+    l2: L2,
+    l2_bytes: u64,
+    /// Accesses offered to the hierarchy since the last counter reset.
+    offered: u64,
+    warmup: u64,
+}
+
+impl Hierarchy {
+    pub fn new(config: &GpuConfig, cache: CacheConfig) -> Hierarchy {
+        let l1 = cache.l1.then(|| {
+            PolicyCache::with_write_policy(
+                config.l1_aggregate_bytes(),
+                config.l1_line,
+                config.l1_assoc,
+                WritePolicy::WriteThrough,
+            )
+        });
+        Hierarchy {
+            l1,
+            l2: L2::new(config, cache),
+            l2_bytes: config.l2_bytes,
+            offered: 0,
+            warmup: 0,
+        }
+    }
+
+    /// Feed one access through the hierarchy.
+    #[inline]
+    pub fn access(&mut self, addr: u64, write: bool) {
+        self.offered += 1;
+        let to_l2 = match &mut self.l1 {
+            None => true,
+            Some(l1) => {
+                let out = l1.access(addr, write);
+                // Writes always reach L2 (write-through); reads only on miss.
+                write || out != Outcome::Hit
+            }
+        };
+        if to_l2 {
+            self.l2.access(addr, write);
+        }
+    }
+
+    /// End the warmup phase: discard counters (cache contents retained)
+    /// and record how many accesses warmed the hierarchy.
+    pub fn start_measurement(&mut self) {
+        self.warmup += self.offered;
+        self.offered = 0;
+        self.l2.reset_counters();
+        if let Some(l1) = &mut self.l1 {
+            l1.reset_counters();
+        }
+    }
+
+    /// Final counters as a [`SimResult`].
+    pub fn finish(self) -> SimResult {
+        let c = self.l2.counters();
+        SimResult {
+            l2_bytes: self.l2_bytes,
+            l2_accesses: c.hits + c.misses,
+            l2_hits: c.hits,
+            l2_misses: c.misses,
+            writebacks: c.writebacks,
+            l2_write_hits: c.write_hits,
+            l2_write_misses: c.write_misses,
+            l2_array_writes: c.array_writes,
+            dram_fills: c.fills,
+            dram_writes: c.writebacks + c.direct_writes,
+            warmup_accesses: self.warmup,
+            l1: self.l1.map(|l1| L1Result { accesses: self.offered, hits: l1.hits }),
+        }
+    }
+}
+
+/// Run `trace` through the shared L2 of `config` — the seed entrypoint
+/// (default policies, no L1, no warmup).
 pub fn simulate(trace: impl IntoIterator<Item = Access>, config: &GpuConfig) -> SimResult {
-    let mut l2 = Cache::new(config.l2_bytes, config.l2_line, config.l2_assoc);
-    for a in trace {
-        l2.access(a.addr, a.write);
+    simulate_config(trace, config, CacheConfig::default(), 0)
+}
+
+/// Sequential replay under an explicit [`CacheConfig`]. The first
+/// `warmup_accesses` accesses warm the hierarchy without counting
+/// (`SimResult::warmup_accesses` records how many actually ran).
+pub fn simulate_config(
+    trace: impl IntoIterator<Item = Access>,
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup_accesses: u64,
+) -> SimResult {
+    let mut h = Hierarchy::new(config, cache);
+    let mut it = trace.into_iter();
+    if warmup_accesses > 0 {
+        for a in it.by_ref().take(warmup_accesses as usize) {
+            h.access(a.addr, a.write);
+        }
+        h.start_measurement();
     }
-    SimResult {
-        l2_bytes: config.l2_bytes,
-        l2_accesses: l2.accesses(),
-        l2_hits: l2.hits,
-        l2_misses: l2.misses,
-        writebacks: l2.writebacks,
+    for a in it {
+        h.access(a.addr, a.write);
     }
+    h.finish()
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+/// Set-sharded parallel replay: partition the trace by set residue class
+/// into at most `max_shards` shards, replay each shard on its own
+/// [`Hierarchy`] through the thread pool, and merge counters. Counter
+/// totals are **exactly** the sequential [`simulate_config`] totals:
+/// every outcome depends only on the accessed set's prior state, and the
+/// shard key (`line_address mod g`, with `g` dividing every simulated
+/// level's set count) keeps each set's accesses together and in order.
+///
+/// The partition pass materializes the trace (O(trace) memory) — the
+/// price of parallelism; the streaming single-pass sweep remains the
+/// memory-frugal default-configuration path.
+pub fn simulate_sharded(
+    trace: impl IntoIterator<Item = Access>,
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup_accesses: u64,
+    max_shards: usize,
+) -> SimResult {
+    let group = shard_group(config, cache);
+    let shards = group.min(max_shards.max(1) as u64).max(1) as usize;
+    if shards <= 1 {
+        return simulate_config(trace, config, cache, warmup_accesses);
+    }
+    let parts = partition(trace, config.l2_line, group, shards, warmup_accesses);
+    replay_parts(&parts, config, cache, warmup_accesses > 0)
+}
+
+/// Largest shard-key modulus valid for one hierarchy: the shard key must
+/// be constant across every set an access touches. Without an L1 that is
+/// the L2 set count (any divisor works); with an L1 it must also respect
+/// the L1 set mapping, which shares the key's `addr / line` granularity
+/// only when the line sizes agree (1 = sharding disabled).
+fn shard_group(config: &GpuConfig, cache: CacheConfig) -> u64 {
+    if cache.l1 {
+        if config.l1_line == config.l2_line {
+            gcd(config.l2_sets(), config.l1_aggregate_sets())
+        } else {
+            1
+        }
+    } else {
+        config.l2_sets()
+    }
+}
+
+/// Partition a trace by set residue class (`(addr / line) mod group`,
+/// folded onto `shards` buckets), tracking each bucket's share of the
+/// global warmup prefix — order within a bucket is preserved, so the
+/// prefix boundary maps to a per-bucket count.
+fn partition(
+    trace: impl IntoIterator<Item = Access>,
+    line: u64,
+    group: u64,
+    shards: usize,
+    warmup_accesses: u64,
+) -> Vec<(Vec<Access>, u64)> {
+    let mut parts: Vec<(Vec<Access>, u64)> = (0..shards).map(|_| (Vec::new(), 0)).collect();
+    for (i, a) in trace.into_iter().enumerate() {
+        let k = (((a.addr / line) % group) % shards as u64) as usize;
+        if (i as u64) < warmup_accesses {
+            parts[k].1 += 1;
+        }
+        parts[k].0.push(a);
+    }
+    parts
+}
+
+/// Replay partitioned buckets on per-bucket hierarchies through the
+/// thread pool and merge counters exactly.
+fn replay_parts(
+    parts: &[(Vec<Access>, u64)],
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup: bool,
+) -> SimResult {
+    let results = par_map(parts, |(accesses, warm)| {
+        let mut h = Hierarchy::new(config, cache);
+        let warm = *warm as usize;
+        for a in &accesses[..warm] {
+            h.access(a.addr, a.write);
+        }
+        if warmup {
+            h.start_measurement();
+        }
+        for a in &accesses[warm..] {
+            h.access(a.addr, a.write);
+        }
+        h.finish()
+    });
+    let mut out = SimResult::zero(config.l2_bytes);
+    for r in &results {
+        out.merge_from(r);
+    }
+    out
 }
 
 /// One resident-or-remembered line in a per-set recency stack.
@@ -87,6 +423,8 @@ struct Member {
     hits: u64,
     misses: u64,
     writebacks: u64,
+    write_hits: u64,
+    write_misses: u64,
 }
 
 /// Capacities whose set counts are integer multiples of a common base,
@@ -129,6 +467,8 @@ impl StackChain {
                     hits: 0,
                     misses: 0,
                     writebacks: 0,
+                    write_hits: 0,
+                    write_misses: 0,
                 }
             })
             .collect();
@@ -193,6 +533,9 @@ impl StackChain {
                         // `assoc` set-mates are more recent: member k
                         // misses, and this entry is the LRU way it evicts.
                         m.misses += 1;
+                        if write {
+                            m.write_misses += 1;
+                        }
                         if stack[i].dirty & bit != 0 {
                             m.writebacks += 1;
                         }
@@ -238,6 +581,7 @@ impl StackChain {
                     } else {
                         m.hits += 1;
                         if write {
+                            m.write_hits += 1;
                             e.dirty |= bit;
                         }
                     }
@@ -250,6 +594,9 @@ impl StackChain {
                         // Fewer than `assoc` set-mates above: the member
                         // set still has a free way — miss, no eviction.
                         m.misses += 1;
+                        if write {
+                            m.write_misses += 1;
+                        }
                     }
                 }
                 let dirty = if write { all_mask } else { 0 };
@@ -309,6 +656,16 @@ enum Chain {
     Stacked(StackChain),
 }
 
+/// Per-capacity counter bundle collected by [`CapacitySweepSim::finish`].
+#[derive(Debug, Clone, Copy)]
+struct CapCounters {
+    hits: u64,
+    misses: u64,
+    writebacks: u64,
+    write_hits: u64,
+    write_misses: u64,
+}
+
 /// Exact single-pass simulator for several L2 capacities sharing one line
 /// size and associativity. Feed it each access once; [`finish`] returns
 /// one [`SimResult`] per requested capacity, bit-identical to running
@@ -334,8 +691,13 @@ impl CapacitySweepSim {
         // capacity of each group is the chain base.
         let mut groups: Vec<(u64, Vec<u64>)> = Vec::new();
         for &cap in &uniq {
+            assert!(
+                cap % (line * assoc) == 0 && cap > 0,
+                "cache geometry: swept capacity {cap} B is not a whole number of {assoc}-way \
+                 sets of {line} B lines ({} B would be dropped)",
+                cap % (line * assoc)
+            );
             let sets = (cap / line) / assoc;
-            assert!(sets >= 1, "capacity {cap} below one set");
             match groups.iter_mut().find(|(base, _)| sets % *base == 0) {
                 Some((_, caps)) => caps.push(cap),
                 None => groups.push((sets, vec![cap])),
@@ -384,28 +746,56 @@ impl CapacitySweepSim {
             accesses,
             ..
         } = self;
-        let mut per_cap: HashMap<u64, (u64, u64, u64)> = HashMap::new();
+        let mut per_cap: HashMap<u64, CapCounters> = HashMap::new();
         for chain in chains {
             match chain {
                 Chain::Single { cap, cache } => {
-                    per_cap.insert(cap, (cache.hits, cache.misses, cache.writebacks));
+                    per_cap.insert(
+                        cap,
+                        CapCounters {
+                            hits: cache.hits,
+                            misses: cache.misses,
+                            writebacks: cache.writebacks,
+                            write_hits: cache.write_hits,
+                            write_misses: cache.write_misses,
+                        },
+                    );
                 }
                 Chain::Stacked(sc) => {
                     for m in sc.members {
-                        per_cap.insert(m.cap, (m.hits, m.misses, m.writebacks));
+                        per_cap.insert(
+                            m.cap,
+                            CapCounters {
+                                hits: m.hits,
+                                misses: m.misses,
+                                writebacks: m.writebacks,
+                                write_hits: m.write_hits,
+                                write_misses: m.write_misses,
+                            },
+                        );
                     }
                 }
             }
         }
         caps.iter()
             .map(|&cap| {
-                let (l2_hits, l2_misses, writebacks) = per_cap[&cap];
+                let c = per_cap[&cap];
                 SimResult {
                     l2_bytes: cap,
                     l2_accesses: accesses,
-                    l2_hits,
-                    l2_misses,
-                    writebacks,
+                    l2_hits: c.hits,
+                    l2_misses: c.misses,
+                    writebacks: c.writebacks,
+                    l2_write_hits: c.write_hits,
+                    l2_write_misses: c.write_misses,
+                    // The sweep is write-back/write-allocate by
+                    // construction: every write touches the array, every
+                    // miss fills, DRAM writes are exactly the writebacks.
+                    l2_array_writes: c.write_hits + c.write_misses,
+                    dram_fills: c.misses,
+                    dram_writes: c.writebacks,
+                    warmup_accesses: 0,
+                    l1: None,
                 }
             })
             .collect()
@@ -418,6 +808,17 @@ pub struct SweepPoint {
     pub result: SimResult,
     /// DRAM-access reduction vs the 3MB baseline (%), Fig 7's y-axis.
     pub dram_reduction_pct: f64,
+}
+
+fn reductions(results: Vec<SimResult>) -> Vec<SweepPoint> {
+    let baseline = results[0].dram_accesses() as f64;
+    results
+        .into_iter()
+        .map(|result| SweepPoint {
+            result,
+            dram_reduction_pct: 100.0 * (1.0 - result.dram_accesses() as f64 / baseline),
+        })
+        .collect()
 }
 
 /// The Fig 7 experiment: run the trace at the baseline 3MB plus the given
@@ -436,15 +837,58 @@ pub fn capacity_sweep(
     for a in trace {
         sim.access(a.addr, a.write);
     }
-    let results = sim.finish();
-    let baseline = results[0].dram_accesses() as f64;
-    results
-        .into_iter()
-        .map(|result| SweepPoint {
-            result,
-            dram_reduction_pct: 100.0 * (1.0 - result.dram_accesses() as f64 / baseline),
-        })
-        .collect()
+    reductions(sim.finish())
+}
+
+/// [`capacity_sweep`] under an explicit cache configuration. The default
+/// configuration without warmup takes the single-pass stack-distance
+/// path; anything else (non-LRU replacement, through/bypass writes, L1
+/// on, or a warmup prefix) materializes and partitions the trace **once**
+/// — the shard modulus is the gcd of every swept capacity's valid
+/// grouping, so one partition serves all capacities — and replays each
+/// capacity through the set-sharded parallel simulator. `warmup_frac` is
+/// the fraction of the trace replayed as cache warmup before counting.
+pub fn capacity_sweep_config(
+    trace: impl IntoIterator<Item = Access>,
+    capacities: &[u64],
+    cache: CacheConfig,
+    warmup_frac: Option<f64>,
+    max_shards: usize,
+) -> Vec<SweepPoint> {
+    if cache.is_default() && warmup_frac.is_none() {
+        return capacity_sweep(trace, capacities);
+    }
+    let base_cfg = GpuConfig::gtx_1080_ti();
+    let mut caps: Vec<u64> = Vec::with_capacity(capacities.len() + 1);
+    caps.push(base_cfg.l2_bytes);
+    caps.extend_from_slice(capacities);
+    let all: Vec<Access> = trace.into_iter().collect();
+    let warmup = warmup_frac.map_or(0, |f| (f * all.len() as f64) as u64);
+    let group = caps
+        .iter()
+        .map(|&cap| shard_group(&base_cfg.clone().with_l2(cap), cache))
+        .fold(0, gcd);
+    let shards = group.min(max_shards.max(1) as u64).max(1) as usize;
+    let results: Vec<SimResult> = if shards <= 1 {
+        caps.iter()
+            .map(|&cap| {
+                simulate_config(
+                    all.iter().copied(),
+                    &base_cfg.clone().with_l2(cap),
+                    cache,
+                    warmup,
+                )
+            })
+            .collect()
+    } else {
+        let parts = partition(all, base_cfg.l2_line, group, shards, warmup);
+        caps.iter()
+            .map(|&cap| {
+                replay_parts(&parts, &base_cfg.clone().with_l2(cap), cache, warmup > 0)
+            })
+            .collect()
+    };
+    reductions(results)
 }
 
 /// The paper's Fig 7 capacity set: the 3MB baseline doubled up to 24MB,
@@ -522,21 +966,10 @@ mod tests {
                 let cfg = GpuConfig::gtx_1080_ti().with_l2(p.result.l2_bytes);
                 let direct = simulate(trace.iter().copied(), &cfg);
                 assert_eq!(
-                    p.result.l2_hits, direct.l2_hits,
-                    "{} hits at {}B",
+                    p.result, direct,
+                    "{} at {}B",
                     net.name, p.result.l2_bytes
                 );
-                assert_eq!(
-                    p.result.l2_misses, direct.l2_misses,
-                    "{} misses at {}B",
-                    net.name, p.result.l2_bytes
-                );
-                assert_eq!(
-                    p.result.writebacks, direct.writebacks,
-                    "{} writebacks at {}B",
-                    net.name, p.result.l2_bytes
-                );
-                assert_eq!(p.result.l2_accesses, direct.l2_accesses);
             }
         }
     }
@@ -558,5 +991,119 @@ mod tests {
         assert_eq!(r[0].l2_hits, r[2].l2_hits, "duplicate capacities agree");
         assert_eq!(r[0].writebacks, r[2].writebacks);
         assert!(r[0].l2_hits >= r[3].l2_hits, "24MB >= 3MB hits");
+    }
+
+    #[test]
+    fn sharded_replay_matches_sequential_on_a_real_trace() {
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        for cache in [
+            CacheConfig::default(),
+            CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() },
+            CacheConfig { replacement: Replacement::Srrip, l1: true, ..CacheConfig::default() },
+        ] {
+            let seq = simulate_config(trace.iter().copied(), &gpu, cache, 0);
+            let par = simulate_sharded(trace.iter().copied(), &gpu, cache, 0, 8);
+            assert_eq!(seq, par, "{}", cache.describe());
+        }
+    }
+
+    #[test]
+    fn warmup_discards_the_prefix_but_keeps_state() {
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let warm = (trace.len() / 4) as u64;
+        let full = simulate(trace.iter().copied(), &gpu);
+        let warmed = simulate_config(trace.iter().copied(), &gpu, CacheConfig::default(), warm);
+        assert_eq!(warmed.warmup_accesses, warm);
+        assert_eq!(warmed.l2_accesses, full.l2_accesses - warm);
+        assert!(warmed.l2_hits < full.l2_hits);
+        // Warmed measurement is exactly the tail of the full run: replay
+        // the prefix on a fresh hierarchy, reset, replay the rest.
+        let mut h = Hierarchy::new(&gpu, CacheConfig::default());
+        for a in &trace[..warm as usize] {
+            h.access(a.addr, a.write);
+        }
+        h.start_measurement();
+        for a in &trace[warm as usize..] {
+            h.access(a.addr, a.write);
+        }
+        assert_eq!(h.finish(), warmed);
+        // And the sharded path agrees with the sequential warmup exactly.
+        let sharded =
+            simulate_sharded(trace.iter().copied(), &gpu, CacheConfig::default(), warm, 8);
+        assert_eq!(sharded, warmed);
+    }
+
+    #[test]
+    fn l1_filters_reads_but_not_writes() {
+        let net = nets::squeezenet();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let off = simulate(net_trace(&net, 1), &gpu);
+        let cache = CacheConfig { l1: true, ..CacheConfig::default() };
+        let on = simulate_config(net_trace(&net, 1), &gpu, cache, 0);
+        let l1 = on.l1.expect("L1 level simulated");
+        assert_eq!(l1.accesses, off.l2_accesses, "hierarchy sees the full trace");
+        assert!(l1.hits > 0, "the aggregate L1 captures short-distance reuse");
+        assert!(on.l2_accesses < off.l2_accesses, "read hits are filtered");
+        // Writes pass through: the L2 write mix is unchanged.
+        assert_eq!(
+            on.l2_write_hits + on.l2_write_misses,
+            off.l2_write_hits + off.l2_write_misses
+        );
+    }
+
+    #[test]
+    fn policy_sweep_falls_back_to_replay_and_matches_shapes() {
+        let net = nets::squeezenet();
+        let caps = vec![6 * MB, 12 * MB];
+        let cache = CacheConfig { write: WritePolicy::WriteThrough, ..CacheConfig::default() };
+        let sweep = capacity_sweep_config(net_trace(&net, 1), &caps, cache, None, 4);
+        assert_eq!(sweep.len(), 3, "baseline + 2 capacities");
+        assert!(sweep[0].dram_reduction_pct.abs() < 1e-9);
+        for p in &sweep {
+            assert_eq!(p.result.writebacks, 0, "write-through never writes back");
+            assert!(p.result.dram_writes > 0, "through traffic reaches DRAM");
+        }
+        // The swept replay is per-capacity exact: each point matches a
+        // standalone simulation under the same config (incl. warmup).
+        let warmed = capacity_sweep_config(net_trace(&net, 1), &caps, cache, Some(0.25), 4);
+        let total = net_trace(&net, 1).count() as u64;
+        let warm = (0.25 * total as f64) as u64;
+        for p in &warmed {
+            let gpu = GpuConfig::gtx_1080_ti().with_l2(p.result.l2_bytes);
+            let direct = simulate_config(net_trace(&net, 1), &gpu, cache, warm);
+            assert_eq!(p.result, direct, "at {}B", p.result.l2_bytes);
+        }
+        // Default config routes to the identical single-pass path.
+        let a = capacity_sweep_config(net_trace(&net, 1), &caps, CacheConfig::default(), None, 4);
+        let b = capacity_sweep(net_trace(&net, 1), &caps);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.result, y.result);
+        }
+    }
+
+    #[test]
+    fn bypass_cuts_array_writes_on_streaming_workloads() {
+        // The NVM story: im2col conv traces stream large write regions
+        // through the L2; bypassing write misses slashes array writes.
+        let net = nets::alexnet();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let wb = simulate(net_trace(&net, 4), &gpu);
+        let byp = simulate_config(
+            net_trace(&net, 4),
+            &gpu,
+            CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() },
+            0,
+        );
+        assert!(
+            byp.l2_array_writes < wb.l2_array_writes / 2,
+            "bypass {} vs wb {}",
+            byp.l2_array_writes,
+            wb.l2_array_writes
+        );
+        assert!(byp.dram_fills < wb.dram_fills, "no write-miss fills");
     }
 }

@@ -21,7 +21,10 @@
 //!    HPCG — all profiled by an IR-driven analytical L2/DRAM transaction
 //!    model standing in for nvprof.
 //! 4. [`gpusim`] — a trace-driven GPU memory-hierarchy simulator standing in
-//!    for GPGPU-Sim; quantifies DRAM-access reduction at iso-area capacities.
+//!    for GPGPU-Sim: a policy-generic multi-level hierarchy (LRU/PLRU/SRRIP
+//!    replacement, write-back/through/bypass policies, optional aggregate
+//!    L1) with exact set-sharded parallel replay; quantifies DRAM-access
+//!    reduction at iso-area capacities and write-policy EDP sensitivity.
 //! 5. [`analysis`] — the cross-layer roll-up: dynamic/leakage energy,
 //!    latency, and EDP for iso-capacity, iso-area, batch-size and
 //!    scalability studies.

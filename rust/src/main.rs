@@ -21,10 +21,16 @@
 //!   --networks a,b            restrict network-driven experiments
 //!   --capacities 1,2,4        capacity grid in MB
 //!   --batches 1,8,64          batch-size grid (fig6)
+//!   --write-policy wb|wt|bypass   simulated L2 write policy (fig7; figWP
+//!                             sweeps all three policies itself)
+//!   --replacement lru|plru|srrip  simulated L2 replacement (fig7, figWP)
+//!   --l1 on|off               simulate the aggregate L1 filter (fig7, figWP)
+//!   --warmup-frac 0.25        replay this trace fraction as cache warmup
 //!
 //! Explore options (EXPERIMENTS.md §"Design-space exploration"):
 //!   --space FILE              `.tech` file with a [space] section
 //!   --tech a,b  --capacities 1,2  --batches 4,64  --workloads alexnet-i
+//!   --write-policy wb,bypass  --replacement lru,srrip  --l1 on,off
 //!                             declare axes inline instead of a file
 //!                             (--workloads all = the whole registry)
 //!   --spec "mtj.tau0=1e-9,2e-9;nv.i_write=1e-4,2e-4"
@@ -38,13 +44,15 @@
 use deepnvm::coordinator::{persist_explore, run_all, run_one, RunnerConfig};
 use deepnvm::engine::Engine;
 use deepnvm::experiments::{registry, Params};
-use deepnvm::explore::space::parse_workloads;
+use deepnvm::explore::space::{parse_l1, parse_workloads};
 use deepnvm::explore::{Objective, SearchConfig, Space, Strategy};
+use deepnvm::gpusim::{Replacement, WritePolicy};
 use deepnvm::runtime::{Runtime, TensorF32};
 use deepnvm::util::cli::Args;
 use deepnvm::util::rng;
 use deepnvm::util::table::{fnum, Table};
 use deepnvm::util::units::{to_mm2, to_mw, to_nj, to_ns, to_ps, MB};
+use deepnvm::workloads::hpcg::HpcgSize;
 
 fn main() {
     let args = Args::from_env();
@@ -91,8 +99,11 @@ fn usage() {
          examples:\n\
            repro experiment table2 fig5\n\
            repro experiment fig7 --networks resnet18,vgg16 --capacities 4,8,16\n\
+           repro experiment fig7 --write-policy bypass --l1 on --warmup-frac 0.25\n\
+           repro experiment figWP --networks alexnet\n\
            repro all --results-dir results/\n\
            repro explore --tech stt,sot --capacities 1,2,4,8 --objectives edp,area\n\
+           repro explore --tech stt --write-policy wb,bypass --batches 1 --budget 16\n\
            repro explore --space relaxed_stt.tech --strategy adaptive --budget 32 --seed 7\n\
            repro tune --tech sot --cap 10\n\
            repro tune --tech-file my_mram.tech --tech my_mram --cap 4\n\
@@ -130,10 +141,38 @@ fn runner_cfg(args: &Args) -> RunnerConfig {
 }
 
 fn params_from(args: &Args) -> Result<Params, String> {
+    let write_policy = match args.get("write-policy") {
+        None => None,
+        Some(v) => Some(WritePolicy::parse(v).map_err(|e| e.to_string())?),
+    };
+    let replacement = match args.get("replacement") {
+        None => None,
+        Some(v) => Some(Replacement::parse(v).map_err(|e| e.to_string())?),
+    };
+    let l1 = match args.get("l1") {
+        None => None,
+        Some(v) => Some(parse_l1(v).map_err(|e| e.to_string())?),
+    };
+    let warmup_frac = match args.get("warmup-frac") {
+        None => None,
+        Some(v) => {
+            let f: f64 = v
+                .parse()
+                .map_err(|_| format!("invalid value for --warmup-frac: {v:?}"))?;
+            if !(0.0..1.0).contains(&f) {
+                return Err(format!("--warmup-frac must be in [0, 1), got {f}"));
+            }
+            Some(f)
+        }
+    };
     Ok(Params {
         networks: args.get_list("networks"),
         capacities_mb: args.get_parse_list::<u64>("capacities")?,
         batches: args.get_parse_list::<u64>("batches")?,
+        write_policy,
+        replacement,
+        l1,
+        warmup_frac,
     })
 }
 
@@ -143,7 +182,11 @@ fn cmd_list() -> i32 {
         t.row_str(&[e.id, e.title, e.params]);
     }
     println!("{}", t.render());
-    println!("params plumb from the CLI: --networks a,b  --capacities 1,2,4  --batches 1,8,64");
+    println!(
+        "params plumb from the CLI: --networks a,b  --capacities 1,2,4  --batches 1,8,64\n\
+         cache-simulation params:   --write-policy wb|wt|bypass  --replacement lru|plru|srrip  \
+         --l1 on|off  --warmup-frac 0.25"
+    );
     0
 }
 
@@ -159,6 +202,14 @@ fn cmd_experiment(engine: &Engine, args: &Args) -> i32 {
             return 2;
         }
     };
+    // figWP sweeps every write policy itself; a --write-policy flag aimed
+    // only at it would otherwise be silently ignored.
+    if params.write_policy.is_some()
+        && args.positional.iter().any(|id| id == "figWP")
+        && !args.positional.iter().any(|id| id == "fig7")
+    {
+        eprintln!("note: figWP sweeps all write policies itself; --write-policy only affects fig7");
+    }
     let cfg = runner_cfg(args);
     for id in &args.positional {
         if run_one(engine, id, &params, &cfg).is_none() {
@@ -173,7 +224,15 @@ fn cmd_all(engine: &Engine, args: &Args) -> i32 {
     // `all` regenerates the paper's artifacts byte-for-byte with default
     // params; silently ignoring narrowing flags would run the full grids
     // against the user's intent.
-    for flag in ["networks", "capacities", "batches"] {
+    for flag in [
+        "networks",
+        "capacities",
+        "batches",
+        "write-policy",
+        "replacement",
+        "l1",
+        "warmup-frac",
+    ] {
         if args.get(flag).is_some() {
             eprintln!(
                 "all: --{flag} applies to `repro experiment <id>` only \
@@ -205,7 +264,17 @@ fn explore_space_from(engine: &Engine, args: &Args) -> Result<Space, String> {
     if let Some(path) = args.get("space") {
         // Axes come from the file; silently ignoring inline axis flags
         // would explore a different space than the user asked for.
-        for flag in ["tech", "capacities", "batches", "workloads", "spec", "iso-area"] {
+        for flag in [
+            "tech",
+            "capacities",
+            "batches",
+            "workloads",
+            "write-policy",
+            "replacement",
+            "l1",
+            "spec",
+            "iso-area",
+        ] {
             if args.get(flag).is_some() {
                 return Err(format!(
                     "--{flag} conflicts with --space {path} (declare axes in the file's \
@@ -230,6 +299,27 @@ fn explore_space_from(engine: &Engine, args: &Args) -> Result<Space, String> {
     if let Some(names) = args.get_list("workloads") {
         let workloads = parse_workloads(engine, &names).map_err(|e| e.to_string())?;
         space = space.workload(workloads);
+    }
+    if let Some(ps) = args.get_list("write-policy") {
+        let ps: Vec<_> = ps
+            .iter()
+            .map(|s| WritePolicy::parse(s).map_err(|e| e.to_string()))
+            .collect::<Result<_, String>>()?;
+        space = space.write_policy(ps);
+    }
+    if let Some(rs) = args.get_list("replacement") {
+        let rs: Vec<_> = rs
+            .iter()
+            .map(|s| Replacement::parse(s).map_err(|e| e.to_string()))
+            .collect::<Result<_, String>>()?;
+        space = space.replacement(rs);
+    }
+    if let Some(vs) = args.get_list("l1") {
+        let vs: Vec<bool> = vs
+            .iter()
+            .map(|s| parse_l1(s).map_err(|e| e.to_string()))
+            .collect::<Result<_, String>>()?;
+        space = space.l1(vs);
     }
     if let Some(spec) = args.get("spec") {
         for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
@@ -478,6 +568,22 @@ fn cmd_workloads(engine: &Engine) -> i32 {
                 Some(e) => fnum(e, 2),
                 None => "-".to_string(),
             },
+        ]);
+    }
+    // The analytical (non-net) workloads: HPCG's three paper
+    // configurations, addressable by the same ids everywhere a workload
+    // name is accepted (`repro explore --workloads hpcg_s`, fig3 rows).
+    for size in HpcgSize::ALL {
+        t.row(&[
+            size.id().to_string(),
+            size.name().to_string(),
+            format!("{0}x{0}x{0} grid", size.dim()),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
         ]);
     }
     println!("{}", t.render());

@@ -5,7 +5,28 @@
 //! module provides the one primitive the sweeps need: an order-preserving
 //! parallel map over an indexed work list, built on `std::thread::scope`.
 
+use std::cell::Cell;
 use std::sync::Mutex;
+
+thread_local! {
+    /// Set for the lifetime of every spawned pool worker thread.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is a pool worker — lets nested parallel
+/// primitives (e.g. the set-sharded cache simulator invoked from a
+/// `par_map`-fanned engine query) fall back to sequential execution
+/// instead of oversubscribing the machine with workers × workers threads.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+/// Thread budget for a nested parallel primitive already fanned out over
+/// `outer` items: splits [`num_threads`] so outer-parallelism ×
+/// inner-parallelism stays ≈ the core count.
+pub fn split_threads(outer: usize) -> usize {
+    (num_threads() / outer.max(1)).max(1)
+}
 
 /// Number of worker threads to use: respects `DEEPNVM_THREADS`, defaults to
 /// available parallelism, and is always at least 1.
@@ -59,12 +80,15 @@ pub fn par_map_indexed<T: Sync, R: Send>(
     );
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let Some((start, range)) = queue.lock().unwrap().pop() else {
-                    break;
-                };
-                for (off, slot) in range.iter_mut().enumerate() {
-                    *slot = Some(f(start + off, &items[start + off]));
+            scope.spawn(|| {
+                IN_WORKER.with(|c| c.set(true));
+                loop {
+                    let Some((start, range)) = queue.lock().unwrap().pop() else {
+                        break;
+                    };
+                    for (off, slot) in range.iter_mut().enumerate() {
+                        *slot = Some(f(start + off, &items[start + off]));
+                    }
                 }
             });
         }
@@ -115,5 +139,18 @@ mod tests {
     fn thread_env_override_is_respected() {
         // num_threads() >= 1 always; with env set it parses.
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_flag_marks_pool_threads_only() {
+        assert!(!in_worker(), "the caller thread is not a worker");
+        let items: Vec<u32> = (0..64).collect();
+        let flags = par_map(&items, |_| in_worker());
+        // With >1 worker every item runs on a flagged pool thread; with a
+        // single worker par_map runs inline on the (unflagged) caller.
+        if num_threads() > 1 {
+            assert!(flags.iter().all(|&f| f), "pool threads carry the flag");
+        }
+        assert!(!in_worker(), "flag does not leak back to the caller");
     }
 }

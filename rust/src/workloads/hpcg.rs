@@ -52,6 +52,18 @@ impl HpcgSize {
         }
     }
 
+    /// Stable registry-style id, so the non-net workloads are addressable
+    /// exactly like net ids everywhere a workload name is parsed
+    /// (`repro workloads` rows, `--workloads hpcg_s`, `[space]` entries —
+    /// the name matcher folds `hpcg_s` and `HPCG-S` to the same key).
+    pub fn id(&self) -> &'static str {
+        match self {
+            HpcgSize::Small => "hpcg_s",
+            HpcgSize::Medium => "hpcg_m",
+            HpcgSize::Large => "hpcg_l",
+        }
+    }
+
     pub const ALL: [HpcgSize; 3] = [HpcgSize::Small, HpcgSize::Medium, HpcgSize::Large];
 }
 
@@ -154,5 +166,18 @@ mod tests {
         let small_cache = hpcg_stats(HpcgSize::Large, 3 * MB);
         let big_cache = hpcg_stats(HpcgSize::Large, 24 * MB);
         assert!(big_cache.dram_reads < small_cache.dram_reads);
+    }
+
+    #[test]
+    fn ids_resolve_through_the_workload_parser() {
+        use crate::explore::space::parse_workload;
+        use crate::workloads::profiler::Workload;
+        let engine = crate::engine::Engine::new();
+        for size in HpcgSize::ALL {
+            let by_id = parse_workload(&engine, size.id()).unwrap();
+            let by_name = parse_workload(&engine, size.name()).unwrap();
+            assert_eq!(by_id, Workload::Hpcg(size), "{}", size.id());
+            assert_eq!(by_id, by_name);
+        }
     }
 }

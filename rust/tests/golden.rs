@@ -20,7 +20,7 @@ use deepnvm::device::bitcell::{BitcellKind, BitcellParams};
 use deepnvm::device::characterize::characterize_kind;
 use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
 use deepnvm::experiments::{tables, Output, Params};
-use deepnvm::gpusim::net_trace;
+use deepnvm::gpusim::{net_trace, simulate, simulate_sharded, CacheConfig, GpuConfig};
 use deepnvm::nvsim::optimizer::explore;
 use deepnvm::util::units::MB;
 use deepnvm::workloads::memstats::{net_stats, MemStats, Phase};
@@ -324,6 +324,38 @@ fn table3_traces_bit_identical_to_seed() {
         assert_eq!(total, want_total, "{id} trace length");
         assert_eq!(writes, want_writes, "{id} trace writes");
         assert_eq!(csum, want_csum, "{id} trace prefix checksum");
+    }
+}
+
+/// Seed simulation counters under the default configuration (3MB L2,
+/// 128B lines, 16-way, true-LRU, write-back/write-allocate, L1 off) at
+/// the Fig 7 batch sizes: `(id, batch, hits, misses, writebacks)`,
+/// computed from the pre-refactor fused-scan cache (the u64-exact mirror
+/// in `rust/tools/goldgen.py::cache_sim`).
+const GOLDEN_SIM: [(&str, u64, u64, u64, u64); 5] = [
+    ("alexnet", 4, 712829, 3139197, 465978),
+    ("googlenet", 1, 866771, 763329, 318435),
+    ("vgg16", 1, 2173258, 13475574, 3025736),
+    ("resnet18", 1, 472494, 1385222, 508388),
+    ("squeezenet", 1, 541182, 457195, 277090),
+];
+
+/// Golden 4c: the policy-generic hierarchy refactor left the default
+/// configuration bit-identical to the seed simulator on every Table 3
+/// network — sequentially AND through the set-sharded parallel engine.
+#[test]
+fn table3_default_sim_counters_bit_identical_to_seed() {
+    let gpu = GpuConfig::gtx_1080_ti();
+    for (id, batch, hits, misses, writebacks) in GOLDEN_SIM {
+        let net = registry::builtin_net(id).expect("table3 builtin");
+        let seq = simulate(net_trace(&net, batch), &gpu);
+        assert_eq!(seq.l2_hits, hits, "{id} hits");
+        assert_eq!(seq.l2_misses, misses, "{id} misses");
+        assert_eq!(seq.writebacks, writebacks, "{id} writebacks");
+        assert_eq!(seq.dram_accesses(), misses + writebacks, "{id} dram identity");
+        let sharded =
+            simulate_sharded(net_trace(&net, batch), &gpu, CacheConfig::default(), 0, 8);
+        assert_eq!(seq, sharded, "{id}: sharded replay drifted from sequential");
     }
 }
 

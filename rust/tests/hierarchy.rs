@@ -1,0 +1,215 @@
+//! Differential tests for the policy-generic cache hierarchy: the
+//! set-sharded parallel simulator must be counter-identical to sequential
+//! replay for every policy combination, every geometry, any shard count,
+//! and any warmup boundary — the exactness guarantee the Fig 7 / figWP
+//! numbers rest on.
+
+use deepnvm::gpusim::{
+    simulate_config, simulate_sharded, Access, CacheConfig, GpuConfig, Replacement, WritePolicy,
+};
+use deepnvm::util::check::forall_explain;
+use deepnvm::util::rng::Rng;
+use deepnvm::util::units::KB;
+
+/// A small GPU model for differential testing: `l2_kb` of 128B-line L2 at
+/// the given associativity, with a 4-SM × 4KB aggregate L1 (2-way) in
+/// front when enabled.
+fn toy_gpu(l2_kb: u64, l2_assoc: u64) -> GpuConfig {
+    let mut g = GpuConfig::gtx_1080_ti();
+    g.l2_bytes = l2_kb * KB;
+    g.l2_line = 128;
+    g.l2_assoc = l2_assoc;
+    g.cores = 4;
+    g.l1_bytes = 4 * KB;
+    g.l1_line = 128;
+    g.l1_assoc = 2;
+    g
+}
+
+/// The policy cross-product the refactor opened up.
+fn all_configs() -> Vec<CacheConfig> {
+    let mut out = Vec::new();
+    for replacement in Replacement::ALL {
+        for write in WritePolicy::ALL {
+            for l1 in [false, true] {
+                out.push(CacheConfig { replacement, write, l1 });
+            }
+        }
+    }
+    out
+}
+
+fn random_trace(rng: &mut Rng, n: usize, span_lines: u64) -> Vec<Access> {
+    (0..n)
+        .map(|_| Access { addr: rng.gen_range(span_lines) * 128, write: rng.chance(0.4) })
+        .collect()
+}
+
+/// Sharded == sequential, exactly, for all policies × several geometries
+/// × random shard counts on random traces. 18 configurations per
+/// geometry; `SimResult` equality covers every counter (hit/miss split,
+/// writebacks, array writes, fills, direct writes, L1 counters).
+#[test]
+fn sharded_replay_is_counter_identical_across_policies_and_geometries() {
+    // Geometries exercise: power-of-two assoc, the L1's non-pow2 6-way,
+    // and a 16-way like the real L2.
+    let gpus = [toy_gpu(64, 4), toy_gpu(96, 6), toy_gpu(256, 16)];
+    forall_explain(
+        0x5A5A,
+        8,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(500, 3000);
+            let span = *rng.pick(&[256u64, 1024, 4096]);
+            let shards = *rng.pick(&[2usize, 3, 7, 8, 64]);
+            (random_trace(rng, n, span), shards)
+        },
+        |(trace, shards)| {
+            for gpu in &gpus {
+                for cache in all_configs() {
+                    let seq = simulate_config(trace.iter().copied(), gpu, cache, 0);
+                    let par = simulate_sharded(trace.iter().copied(), gpu, cache, 0, *shards);
+                    if seq != par {
+                        return Err(format!(
+                            "{} @ {}B L2, {} shards: seq {seq:?} vs par {par:?}",
+                            cache.describe(),
+                            gpu.l2_bytes,
+                            shards
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Warmup equivalence: for any boundary, (a) sequential warmup equals
+/// manual prefix-replay-then-reset, and (b) sharded warmup equals
+/// sequential warmup — including boundaries past the trace end.
+#[test]
+fn warmup_boundaries_are_exact_under_sharding() {
+    let gpu = toy_gpu(64, 4);
+    forall_explain(
+        0xA11,
+        12,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(200, 2000);
+            let warm = rng.usize_in(0, n + 100) as u64;
+            let cache = CacheConfig {
+                replacement: *rng.pick(&Replacement::ALL),
+                write: *rng.pick(&WritePolicy::ALL),
+                l1: rng.chance(0.5),
+            };
+            (random_trace(rng, n, 1024), warm, cache)
+        },
+        |(trace, warm, cache)| {
+            let seq = simulate_config(trace.iter().copied(), &gpu, *cache, *warm);
+            let par = simulate_sharded(trace.iter().copied(), &gpu, *cache, *warm, 8);
+            if seq != par {
+                return Err(format!(
+                    "{} warm {warm}: seq {seq:?} vs par {par:?}",
+                    cache.describe()
+                ));
+            }
+            let consumed = (*warm).min(trace.len() as u64);
+            if seq.warmup_accesses != consumed {
+                return Err(format!(
+                    "warmup accounting: {} vs consumed {consumed}",
+                    seq.warmup_accesses
+                ));
+            }
+            // Measured + warmup covers the whole trace (L1 off only:
+            // with L1 on, l2_accesses is the filtered stream).
+            if !cache.l1 && seq.l2_accesses + seq.warmup_accesses != trace.len() as u64 {
+                return Err("measured + warmup != trace length".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Policy-level invariants on random streams: write-through never dirties,
+/// bypass and write-through never write-allocate, every policy conserves
+/// accesses, and the L1 filter only ever removes read traffic.
+#[test]
+fn policy_invariants_on_random_streams() {
+    let gpu = toy_gpu(64, 4);
+    forall_explain(
+        0xF00D,
+        20,
+        |rng: &mut Rng| random_trace(rng, 2000, 1024),
+        |trace| {
+            let n = trace.len() as u64;
+            let writes_offered =
+                trace.iter().filter(|a| a.write).count() as u64;
+            for cache in all_configs() {
+                let r = simulate_config(trace.iter().copied(), &gpu, cache, 0);
+                let hits_misses = r.l2_hits + r.l2_misses;
+                if !cache.l1 && hits_misses != n {
+                    return Err(format!("{}: lost accesses", cache.describe()));
+                }
+                if r.l2_write_hits + r.l2_write_misses != writes_offered {
+                    return Err(format!(
+                        "{}: writes must always reach the L2 (write-through L1)",
+                        cache.describe()
+                    ));
+                }
+                match cache.write {
+                    WritePolicy::WriteBack => {
+                        if r.dram_fills != r.l2_misses || r.dram_writes != r.writebacks {
+                            return Err(format!("{}: WB identities", cache.describe()));
+                        }
+                    }
+                    WritePolicy::WriteThrough => {
+                        if r.writebacks != 0 {
+                            return Err(format!("{}: WT wrote back", cache.describe()));
+                        }
+                        if r.dram_writes != writes_offered {
+                            return Err(format!(
+                                "{}: WT must stream every write to DRAM",
+                                cache.describe()
+                            ));
+                        }
+                    }
+                    WritePolicy::WriteBypass => {
+                        if r.dram_fills != r.l2_misses - r.l2_write_misses {
+                            return Err(format!(
+                                "{}: bypassed write misses must not fill",
+                                cache.describe()
+                            ));
+                        }
+                        if r.l2_array_writes != r.l2_write_hits {
+                            return Err(format!(
+                                "{}: only write hits touch the array",
+                                cache.describe()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// When the working set fits, victim selection never runs — every
+/// replacement policy must produce identical counters (compulsory misses
+/// only). A policy that diverges here has a bookkeeping bug, not a
+/// quality difference.
+#[test]
+fn replacement_policies_agree_when_there_is_nothing_to_decide() {
+    let gpu = toy_gpu(64, 4);
+    // Working set fits: every policy sees compulsory misses only.
+    let fitting: Vec<Access> = (0..3)
+        .flat_map(|_| (0..256u64).map(|l| Access { addr: l * 128, write: false }))
+        .collect();
+    let mut results = Vec::new();
+    for replacement in Replacement::ALL {
+        let cache = CacheConfig { replacement, ..CacheConfig::default() };
+        let r = simulate_config(fitting.iter().copied(), &gpu, cache, 0);
+        assert_eq!(r.l2_misses, 256, "{}: compulsory only", replacement.name());
+        results.push(r);
+    }
+    assert_eq!(results[0], results[1]);
+    assert_eq!(results[0], results[2]);
+}

@@ -549,6 +549,47 @@ def fingerprint(runs, prefix_n):
     return total, writes, csum & MASK
 
 
+# ---------------- cache simulation (mirror of gpusim/cache.rs) ----------------
+#
+# Exact mirror of the pre-refactor set-associative true-LRU write-back /
+# write-allocate cache: per set, an ordered line -> dirty map where order
+# is recency (OrderedDict move_to_end == the Rust LRU-counter scan: the
+# victim is the first empty way, else the least-recently-touched way).
+# Used to pin the (hits, misses, writebacks) goldens the policy-generic
+# refactor must reproduce bit for bit under the default configuration.
+
+from collections import OrderedDict
+
+
+def cache_sim(runs, capacity, line, assoc):
+    # Trace expansion steps at the trace's own LINE granularity; the cache
+    # geometry divides by `line`. These coincide for the modeled L2 — keep
+    # the assert so a future non-128B-geometry golden isn't silently
+    # generated against a mis-stepped trace.
+    assert line == LINE, "cache_sim assumes the cache line equals the trace line"
+    sets = (capacity // line) // assoc
+    state = [OrderedDict() for _ in range(sets)]
+    hits = misses = writebacks = 0
+    for base, nbytes, wr in runs:
+        lines = ceil_div(nbytes, LINE)
+        for j in range(lines):
+            la = (base + j * LINE) // line
+            s = state[la % sets]
+            if la in s:
+                hits += 1
+                s.move_to_end(la)
+                if wr:
+                    s[la] = True
+            else:
+                misses += 1
+                if len(s) == assoc:
+                    _victim, dirty = s.popitem(last=False)
+                    if dirty:
+                        writebacks += 1
+                s[la] = wr
+    return hits, misses, writebacks
+
+
 def main():
     cnns = [("alexnet", alexnet(), 4), ("googlenet", googlenet(), 1),
             ("vgg16", vgg16(), 1), ("resnet18", resnet18(), 1),
@@ -591,6 +632,14 @@ def main():
     for _id, net, b in cnns:
         total, writes, csum = fingerprint(seed_trace_runs(net, b), 100_000)
         print(f'("{_id}", {b}, {total}, {writes}, {csum}),')
+
+    # 3b) golden default-config simulation counters: the pre-refactor
+    # LRU / write-back / write-allocate L2 (3MB, 128B lines, 16-way — the
+    # GTX 1080 Ti default) over each net's fig7-batch trace.
+    print("\n// ---- golden sim counters (3MB L2, 128B line, 16-way, LRU/WB) ----")
+    for _id, net, b in cnns:
+        h, m, w = cache_sim(seed_trace_runs(net, b), 3 * MB, 128, 16)
+        print(f'("{_id}", {b}, {h}, {m}, {w}),')
 
     # 4) new workloads sanity at defaults
     print("\n// ---- new workloads ----")

@@ -1,0 +1,105 @@
+//! Fault-injection overhead benchmarks (custom harness; §Perf record).
+//!
+//! The headline pair is `faults: fault-free accesses/sec` vs `faults:
+//! faulty accesses/sec` on the AlexNet batch-4 trace (CI asserts both
+//! keys exist in `BENCH_faults.json`). The bench also *asserts* the
+//! contract the reliability subsystem is built on: with no injector
+//! attached, the fault-aware entry point must replay within 5% of the
+//! plain simulator (it is the same hot path — the injector is an
+//! `Option` checked per access) and produce bit-identical counters, and
+//! sharded faulty replay must match sequential faulty replay exactly.
+//!
+//! Results print to stdout and land in `BENCH_faults.json` (override the
+//! path with `DEEPNVM_BENCH_FAULTS_JSON`).
+
+use std::hint::black_box;
+
+use deepnvm::gpusim::{
+    net_trace, simulate, simulate_with_faults, Access, CacheConfig, GpuConfig,
+};
+use deepnvm::reliability::{FaultConfig, RelSpec};
+use deepnvm::util::bench::BenchHarness;
+use deepnvm::util::pool::num_threads;
+use deepnvm::workloads::nets;
+
+fn main() {
+    println!("== fault-injection benchmarks ==");
+    let mut h = BenchHarness::new();
+
+    let net = nets::alexnet();
+    let trace: Vec<Access> = net_trace(&net, 4).collect();
+    let n = trace.len() as f64;
+    let gpu = GpuConfig::gtx_1080_ti();
+    let cache = CacheConfig::default();
+    let threads = num_threads();
+    let faults = FaultConfig { rel: RelSpec::stt_default(), seed: 0xF417 };
+    println!("alexnet b4 trace: {} accesses, {threads} worker threads", trace.len());
+
+    // Two interleaved rounds per side, best-of for the overhead check:
+    // both sides run the identical code path (the injector is None), so
+    // the assertion tolerance only has to absorb scheduler noise.
+    let base = h
+        .bench("faults: baseline simulate (AlexNet b4)", 3, || {
+            black_box(simulate(trace.iter().copied(), &gpu));
+        })
+        .min(h.bench("faults: baseline simulate (round 2)", 3, || {
+            black_box(simulate(trace.iter().copied(), &gpu));
+        }));
+    let free = h
+        .bench("faults: fault-free replay (faults=None)", 3, || {
+            black_box(simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, 1, None));
+        })
+        .min(h.bench("faults: fault-free replay (round 2)", 3, || {
+            black_box(simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, 1, None));
+        }));
+    h.record("faults: fault-free accesses/sec", n / free.max(1e-12));
+    let overhead = free / base.max(1e-12) - 1.0;
+    h.record("faults: fault-free overhead frac", overhead);
+    println!("  -> fault-free overhead vs baseline simulate: {:.2}%", overhead * 100.0);
+    assert!(
+        overhead <= 0.05,
+        "fault-free replay must stay within 5% of the plain simulator (got {:.2}%)",
+        overhead * 100.0
+    );
+
+    // The injected path: per-access CDF draws + wear accounting.
+    let faulty = h.bench("faults: faulty replay (STT card, sequential)", 3, || {
+        black_box(simulate_with_faults(
+            trace.iter().copied(),
+            &gpu,
+            cache,
+            0,
+            1,
+            Some(faults),
+        ));
+    });
+    h.record("faults: faulty accesses/sec", n / faulty.max(1e-12));
+    println!(
+        "  -> injection cost: x{:.2} vs fault-free ({:.2}M vs {:.2}M accesses/sec)",
+        faulty / free.max(1e-12),
+        n / faulty / 1e6,
+        n / free / 1e6
+    );
+    let sharded = h.bench("faults: faulty replay (STT card, sharded)", 3, || {
+        black_box(simulate_with_faults(
+            trace.iter().copied(),
+            &gpu,
+            cache,
+            0,
+            threads,
+            Some(faults),
+        ));
+    });
+    h.record("faults: faulty sharded accesses/sec", n / sharded.max(1e-12));
+
+    // Exactness double-checks while we are here: the bench must never
+    // record a throughput for a fault path that drifted.
+    let a = simulate(trace.iter().copied(), &gpu);
+    let b = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, threads, None);
+    assert_eq!(a, b, "fault-free fault-aware replay must match the plain simulator");
+    let seq = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, 1, Some(faults));
+    let par = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, threads, Some(faults));
+    assert_eq!(seq, par, "sharded fault counts must match sequential exactly");
+
+    h.write_json("DEEPNVM_BENCH_FAULTS_JSON", "BENCH_faults.json");
+}

@@ -11,6 +11,7 @@
 
 use crate::gpusim::SimResult;
 use crate::nvsim::cache::CachePpa;
+use crate::reliability::{RelEval, RelSpec, SECONDS_PER_YEAR};
 use crate::workloads::memstats::{MemStats, TRANS_BYTES as SECTOR_BYTES};
 
 /// GPU L2 clock (Table 4) — latencies are quantized to whole cycles
@@ -100,6 +101,39 @@ pub fn stats_from_sim(sim: &SimResult, line_bytes: u64) -> MemStats {
         l2_writes: sim.l2_array_writes * t,
         dram_reads: sim.dram_fills * t,
         dram_writes: sim.dram_writes * t,
+    }
+}
+
+/// Roll fault-campaign counters up into the reliability figures of merit.
+///
+/// * **UBER** — uncorrectable (silent) bit errors per bit read: the line
+///   delivers `line_bits` bits per access, so the denominator is
+///   `l2_accesses × line_bits` (0 accesses → 0.0, not NaN).
+/// * **Lifetime** — the most-worn line absorbed `max_line_writes`
+///   physical writes over the workload's `total_time_s`; running that
+///   write rate against the endurance budget gives the array lifetime,
+///   reported in years ([`f64::INFINITY`] when the campaign wrote
+///   nothing — an idle array never wears out).
+pub fn rel_from_sim(
+    rel: &RelSpec,
+    sim: &SimResult,
+    line_bits: u64,
+    total_time_s: f64,
+) -> RelEval {
+    let bits_read = (sim.l2_accesses * line_bits) as f64;
+    let uber = if bits_read > 0.0 { sim.faults_silent as f64 / bits_read } else { 0.0 };
+    let lifetime_years = if sim.max_line_writes == 0 {
+        f64::INFINITY
+    } else {
+        rel.endurance_cycles / sim.max_line_writes as f64 * total_time_s / SECONDS_PER_YEAR
+    };
+    RelEval {
+        uber,
+        lifetime_years,
+        corrected: sim.faults_corrected,
+        detected: sim.faults_detected,
+        silent: sim.faults_silent,
+        retired_ways: sim.retired_ways,
     }
 }
 
@@ -195,6 +229,50 @@ mod tests {
             assert!(e.edp_with_dram() > e.edp_cache());
             assert!(e.total_energy() > e.cache_energy());
         }
+    }
+
+    #[test]
+    fn rel_rollup_handles_idle_arrays_and_scales_with_wear() {
+        let rel = RelSpec::stt_default();
+        let mut sim = SimResult {
+            l2_bytes: 0,
+            l2_accesses: 0,
+            l2_hits: 0,
+            l2_misses: 0,
+            writebacks: 0,
+            l2_write_hits: 0,
+            l2_write_misses: 0,
+            l2_array_writes: 0,
+            dram_fills: 0,
+            dram_writes: 0,
+            warmup_accesses: 0,
+            faults_corrected: 0,
+            faults_detected: 0,
+            faults_silent: 0,
+            retired_ways: 0,
+            max_line_writes: 0,
+            l1: None,
+        };
+        let idle = rel_from_sim(&rel, &sim, 1024, 1.0);
+        assert_eq!(idle.uber, 0.0, "no bits read, no error rate");
+        assert!(idle.lifetime_years.is_infinite(), "an idle array never wears out");
+        sim.l2_accesses = 1000;
+        sim.faults_silent = 2;
+        sim.faults_corrected = 7;
+        sim.max_line_writes = 100;
+        let r = rel_from_sim(&rel, &sim, 1024, 2.0);
+        assert!((r.uber - 2.0 / (1000.0 * 1024.0)).abs() < 1e-12 * r.uber, "uber {}", r.uber);
+        let expect = rel.endurance_cycles / 100.0 * 2.0 / SECONDS_PER_YEAR;
+        assert!(
+            (r.lifetime_years - expect).abs() < 1e-9 * expect,
+            "lifetime {} vs {expect}",
+            r.lifetime_years
+        );
+        assert_eq!((r.corrected, r.silent), (7, 2));
+        // Doubling the wear rate halves the lifetime.
+        sim.max_line_writes = 200;
+        let faster = rel_from_sim(&rel, &sim, 1024, 2.0);
+        assert!((faster.lifetime_years - expect / 2.0).abs() < 1e-9 * expect);
     }
 
     #[test]

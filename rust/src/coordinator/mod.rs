@@ -10,4 +10,6 @@
 
 pub mod runner;
 
-pub use runner::{persist_csvs, persist_explore, run_all, run_one, RunReport, RunnerConfig};
+pub use runner::{
+    persist_csvs, persist_explore, run_all, run_ids, run_one, RunReport, RunnerConfig,
+};

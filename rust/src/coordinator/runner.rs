@@ -11,7 +11,7 @@ use crate::engine::{CacheCounts, Engine};
 use crate::experiments::{by_id, registry, Output, Params};
 use crate::explore::ExploreResult;
 use crate::util::csv::Csv;
-use crate::util::pool::par_map;
+use crate::util::pool::{panic_message, par_map};
 
 /// Runner configuration.
 #[derive(Debug, Clone)]
@@ -142,21 +142,56 @@ pub fn run_one(
     })
 }
 
-/// Run the full registry with default params. Experiments execute in
-/// parallel against the shared engine (characterization, tuning and
-/// profiling each compute at most once per unique key across the whole
-/// run — the manifest's cache counters verify this); tables print in
-/// registry order.
-pub fn run_all(engine: &Engine, cfg: &RunnerConfig) -> Vec<RunReport> {
-    let ids: Vec<&'static str> = registry().iter().map(|e| e.id).collect();
+/// Run a list of experiment ids with per-experiment fault isolation: a
+/// generator that panics (or an unknown id) becomes a `failed: <msg>`
+/// record instead of taking down the whole run, and the manifest is
+/// always written — partial results with an explicit `ok`/`failed` status
+/// per experiment. Returns the successful reports plus the failure
+/// records, both in input order.
+pub fn run_ids(
+    engine: &Engine,
+    ids: &[&str],
+    params: &Params,
+    cfg: &RunnerConfig,
+) -> (Vec<RunReport>, Vec<(String, String)>) {
     let quiet = RunnerConfig {
         print_tables: false,
         ..cfg.clone()
     };
-    let params = Params::default();
-    let reports = par_map(&ids, |id| {
-        run_one(engine, id, &params, &quiet).expect("registry id")
+    let outcomes: Vec<Result<RunReport, (String, String)>> = par_map(ids, |id| {
+        // AssertUnwindSafe: the engine fork inside run_one is dropped on
+        // the failure path; shared memo caches only ever hold completed
+        // entries (get_or_compute inserts after the closure returns).
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_one(engine, id, params, &quiet)
+        }));
+        match run {
+            Ok(Some(report)) => Ok(report),
+            Ok(None) => Err((id.to_string(), format!("unknown experiment id {id:?}"))),
+            Err(payload) => Err((id.to_string(), panic_message(payload))),
+        }
     });
+    let mut reports = Vec::new();
+    let mut failures = Vec::new();
+    for outcome in outcomes {
+        match outcome {
+            Ok(r) => reports.push(r),
+            Err(f) => failures.push(f),
+        }
+    }
+    write_manifest(engine, &reports, &failures, cfg);
+    (reports, failures)
+}
+
+/// Run the full registry with default params. Experiments execute in
+/// parallel against the shared engine (characterization, tuning and
+/// profiling each compute at most once per unique key across the whole
+/// run — the manifest's cache counters verify this); tables print in
+/// registry order. A failing experiment is reported and recorded in the
+/// manifest; the rest of the registry still completes.
+pub fn run_all(engine: &Engine, cfg: &RunnerConfig) -> Vec<RunReport> {
+    let ids: Vec<&'static str> = registry().iter().map(|e| e.id).collect();
+    let (reports, failures) = run_ids(engine, &ids, &Params::default(), cfg);
     if cfg.print_tables {
         for r in &reports {
             for t in &r.rendered_tables {
@@ -168,14 +203,22 @@ pub fn run_all(engine: &Engine, cfg: &RunnerConfig) -> Vec<RunReport> {
             println!("  [{} completed in {:.2}s]\n", r.id, r.seconds);
         }
     }
-    write_manifest(engine, &reports, cfg);
+    for (id, msg) in &failures {
+        eprintln!("error: [{id}] failed: {msg}");
+    }
     reports
 }
 
 /// Persist the run manifest: headlines + engine-cache counters per
-/// experiment, and the engine-wide totals that verify each pipeline stage
-/// computed at most once per unique key.
-fn write_manifest(engine: &Engine, reports: &[RunReport], cfg: &RunnerConfig) {
+/// experiment with an explicit `ok` status, a `failed: <msg>` line per
+/// failed experiment, and the engine-wide totals that verify each
+/// pipeline stage computed at most once per unique key.
+fn write_manifest(
+    engine: &Engine,
+    reports: &[RunReport],
+    failures: &[(String, String)],
+    cfg: &RunnerConfig,
+) {
     let path = cfg.results_dir.join("manifest.txt");
     if let Some(parent) = path.parent() {
         let _ = fs::create_dir_all(parent);
@@ -185,13 +228,16 @@ fn write_manifest(engine: &Engine, reports: &[RunReport], cfg: &RunnerConfig) {
         // run (sampling, interleaving) reproduces via `repro --seed N`.
         let _ = writeln!(f, "seed: {}", crate::util::rng::global_seed());
         for r in reports {
-            let _ = writeln!(f, "[{}] {} ({:.2}s)", r.id, r.title, r.seconds);
+            let _ = writeln!(f, "[{}] ok: {} ({:.2}s)", r.id, r.title, r.seconds);
             for h in &r.headlines {
                 let _ = writeln!(f, "    {h}");
             }
             if r.cache.calls() > 0 {
                 let _ = writeln!(f, "    engine cache: {}", r.cache.summary());
             }
+        }
+        for (id, msg) in failures {
+            let _ = writeln!(f, "[{id}] failed: {msg}");
         }
         let totals = engine.totals();
         let _ = writeln!(f, "engine totals: {}", totals.summary());
@@ -283,6 +329,26 @@ mod tests {
         let frontier =
             std::fs::read_to_string(cfg.results_dir.join("explore_frontier.csv")).unwrap();
         assert!(frontier.starts_with("tech,capacity_mb,workload,edp,area,knee"), "{frontier}");
+        let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    }
+
+    #[test]
+    fn partial_manifest_records_ok_and_failed_statuses() {
+        let cfg = test_cfg("partial");
+        let (reports, failures) = run_ids(
+            Engine::shared(),
+            &["table3", "fig99"],
+            &Params::default(),
+            &cfg,
+        );
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].id, "table3");
+        assert_eq!(failures.len(), 1);
+        assert_eq!(failures[0].0, "fig99");
+        assert!(failures[0].1.contains("unknown experiment id"), "{}", failures[0].1);
+        let manifest = std::fs::read_to_string(cfg.results_dir.join("manifest.txt")).unwrap();
+        assert!(manifest.contains("[table3] ok:"), "{manifest}");
+        assert!(manifest.contains("[fig99] failed: unknown experiment id"), "{manifest}");
         let _ = std::fs::remove_dir_all(&cfg.results_dir);
     }
 

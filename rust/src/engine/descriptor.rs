@@ -62,6 +62,21 @@
 //! replacement = "srrip"      # lru | plru | srrip
 //! l1 = "on"                  # on | off
 //! ```
+//!
+//! An optional `[rel]` section attaches a reliability card (see
+//! [`crate::reliability`]) and arms fault injection for the technology.
+//! All rate fields are validated against physical range at parse time —
+//! a negative rate or a probability above 1 fails loudly with the
+//! offending key and value:
+//!
+//! ```text
+//! [rel]
+//! write_error_rate = 1e-7    # per-cell write-error probability [0, 1]
+//! retention_tau = 1.0        # retention time constant (s), > 0
+//! read_disturb_rate = 1e-12  # per-cell read-disturb probability [0, 1]
+//! endurance_cycles = 4e12    # write-endurance budget, >= 1
+//! ecc = "secded"             # none | secded   (default secded)
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -69,6 +84,7 @@ use super::spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec};
 
 use crate::device::bitcell::NvCal;
 use crate::gpusim::{parse_l1, CacheConfig, Replacement, WritePolicy};
+use crate::reliability::{EccMode, RelSpec};
 use crate::util::err::msg;
 
 struct Fields {
@@ -275,6 +291,16 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
             "t_write_extra",
         ],
     ),
+    (
+        "rel",
+        &[
+            "write_error_rate",
+            "retention_tau",
+            "read_disturb_rate",
+            "endurance_cycles",
+            "ecc",
+        ],
+    ),
 ];
 
 fn check_known(f: &Fields) -> crate::Result<()> {
@@ -378,7 +404,26 @@ pub fn parse(text: &str) -> crate::Result<TechSpec> {
         t_write_extra: f.f64_or("nv", "t_write_extra", 0.0)?,
     };
 
-    Ok(TechSpec { id, name, class, mtj, device, nv })
+    let rel = if f.values.keys().any(|(s, _)| s == "rel") {
+        let r = RelSpec {
+            write_error_rate: f.f64("rel", "write_error_rate")?,
+            retention_tau: f.f64("rel", "retention_tau")?,
+            read_disturb_rate: f.f64("rel", "read_disturb_rate")?,
+            endurance_cycles: f.f64("rel", "endurance_cycles")?,
+            ecc: match f.get("rel", "ecc") {
+                None => EccMode::Secded,
+                Some(v) => EccMode::parse(v).map_err(|e| msg(format!("[rel] ecc: {e}")))?,
+            },
+        };
+        // Physical-range screen: errors carry the offending key and value
+        // in descriptor syntax (`[rel] key = value: why`).
+        r.validate().map_err(msg)?;
+        Some(r)
+    } else {
+        None
+    };
+
+    Ok(TechSpec { id, name, class, mtj, device, nv, rel })
 }
 
 fn push_f64(out: &mut String, key: &str, v: f64) {
@@ -452,6 +497,14 @@ pub fn serialize(spec: &TechSpec) -> String {
     push_f64(&mut out, "csa_overhead", nv.csa_overhead);
     push_f64(&mut out, "t_read_extra", nv.t_read_extra);
     push_f64(&mut out, "t_write_extra", nv.t_write_extra);
+    if let Some(r) = &spec.rel {
+        out.push_str("\n[rel]\n");
+        push_f64(&mut out, "write_error_rate", r.write_error_rate);
+        push_f64(&mut out, "retention_tau", r.retention_tau);
+        push_f64(&mut out, "read_disturb_rate", r.read_disturb_rate);
+        push_f64(&mut out, "endurance_cycles", r.endurance_cycles);
+        out.push_str(&format!("ecc = \"{}\"\n", r.ecc.name()));
+    }
     out
 }
 
@@ -577,6 +630,63 @@ mod tests {
         assert!(e.contains("rail_em_limits"), "{e}");
         let e = parse("[tch]\nid = \"x\"\n").unwrap_err().to_string();
         assert!(e.contains("unknown section"), "{e}");
+    }
+
+    #[test]
+    fn rel_sections_round_trip_exactly() {
+        // Property: any physically-valid reliability card survives
+        // serialize → parse bit-exactly (shortest-float formatting).
+        use crate::util::check::forall;
+        use crate::util::rng::Rng;
+        forall(
+            0x2E1,
+            40,
+            |rng: &mut Rng| {
+                let mut spec = TechSpec::stt();
+                spec.rel = Some(RelSpec {
+                    write_error_rate: rng.f64(),
+                    retention_tau: rng.f64_in(1e-9, 1e9),
+                    read_disturb_rate: rng.f64(),
+                    endurance_cycles: rng.f64_in(1.0, 1e16),
+                    ecc: *rng.pick(&EccMode::ALL),
+                });
+                spec
+            },
+            |spec| parse(&serialize(spec)).map(|back| back == *spec).unwrap_or(false),
+        );
+        // And a rel-free spec emits no [rel] section at all.
+        assert!(!serialize(&TechSpec::stt()).contains("[rel]"));
+    }
+
+    #[test]
+    fn rel_defaults_and_validation() {
+        let mut text = serialize(&TechSpec::stt());
+        text.push_str(
+            "\n[rel]\nwrite_error_rate = 1e-7\nretention_tau = 1\n\
+             read_disturb_rate = 1e-12\nendurance_cycles = 4e12\n",
+        );
+        let spec = parse(&text).unwrap();
+        let rel = spec.rel.unwrap();
+        assert_eq!(rel.ecc, EccMode::Secded, "ecc defaults to secded");
+        assert_eq!(rel.write_error_rate, 1e-7);
+
+        // Out-of-range fields are rejected naming the key and the value.
+        let bad = text.replace("write_error_rate = 1e-7", "write_error_rate = -3e-2");
+        let e = parse(&bad).unwrap_err().to_string();
+        assert!(e.contains("write_error_rate") && e.contains("-0.03"), "{e}");
+        let bad = text.replace("read_disturb_rate = 1e-12", "read_disturb_rate = 1.25");
+        let e = parse(&bad).unwrap_err().to_string();
+        assert!(e.contains("read_disturb_rate") && e.contains("1.25"), "{e}");
+        let bad = text.replace("endurance_cycles = 4e12", "endurance_cycles = 0");
+        let e = parse(&bad).unwrap_err().to_string();
+        assert!(e.contains("endurance_cycles") && e.contains('0'), "{e}");
+        let bad = text.replace("retention_tau = 1", "retention_tau = -1");
+        assert!(parse(&bad).unwrap_err().to_string().contains("retention_tau"));
+        // Unknown ecc modes and unknown [rel] keys fail loudly.
+        let bad = format!("{text}ecc = \"hamming\"\n");
+        assert!(parse(&bad).unwrap_err().to_string().contains("hamming"));
+        let bad = format!("{text}uber = 1e-15\n");
+        assert!(parse(&bad).unwrap_err().to_string().contains("uber"));
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //! profiling (per workload key × batch × capacity × [`CacheConfig`]; the
 //! workload key is open, so descriptor-registered nets memoize exactly
 //! like builtins, and non-default cache configurations route through the
-//! trace-driven simulator) — with per-stage hit/miss counters. [`Engine::fork`] hands out a handle
+//! trace-driven simulator), plus a fourth fault-campaign stage (per
+//! technology × workload × batch × capacity × cache config × seed) for
+//! technologies carrying a `[rel]` reliability block — with per-stage
+//! hit/miss counters. [`Engine::fork`] hands out a handle
 //! that shares the caches but counts its own traffic, which is how the
 //! experiment runner attributes exact per-experiment cache statistics
 //! even when experiments run in parallel.
@@ -39,11 +42,13 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::analysis::model;
 use crate::device::bitcell::BitcellParams;
 use crate::device::characterize::{characterize_spec, CharacterizationReport};
-use crate::gpusim::{net_trace, simulate_sharded, GpuConfig};
+use crate::gpusim::{net_trace, simulate_sharded, simulate_with_faults, GpuConfig, SimResult};
 use crate::nvsim::geometry::enumerate;
 use crate::nvsim::optimizer::{explore_cell, TunedCache};
+use crate::reliability::{self, FaultConfig, RelSpec};
 use crate::util::err::msg;
 use crate::util::pool::{in_worker, num_threads, par_map};
+use crate::util::rng::global_seed;
 use crate::util::units::MB;
 use crate::workloads::hpcg::HpcgSize;
 use crate::workloads::ir::NetIr;
@@ -73,19 +78,22 @@ pub struct CacheCounts {
     pub characterize: HitMiss,
     pub tune: HitMiss,
     pub profile: HitMiss,
+    pub faults: HitMiss,
 }
 
 impl CacheCounts {
     /// One-line rendering for the run manifest.
     pub fn summary(&self) -> String {
         format!(
-            "characterize {}h/{}m · tune {}h/{}m · profile {}h/{}m",
+            "characterize {}h/{}m · tune {}h/{}m · profile {}h/{}m · faults {}h/{}m",
             self.characterize.hits,
             self.characterize.misses,
             self.tune.hits,
             self.tune.misses,
             self.profile.hits,
-            self.profile.misses
+            self.profile.misses,
+            self.faults.hits,
+            self.faults.misses
         )
     }
 
@@ -97,6 +105,8 @@ impl CacheCounts {
             + self.tune.misses
             + self.profile.hits
             + self.profile.misses
+            + self.faults.hits
+            + self.faults.misses
     }
 }
 
@@ -106,6 +116,7 @@ struct StageCounters {
     characterize: [AtomicU64; 2],
     tune: [AtomicU64; 2],
     profile: [AtomicU64; 2],
+    faults: [AtomicU64; 2],
 }
 
 #[derive(Clone, Copy)]
@@ -113,6 +124,7 @@ enum Stage {
     Characterize,
     Tune,
     Profile,
+    Faults,
 }
 
 impl StageCounters {
@@ -121,6 +133,7 @@ impl StageCounters {
             Stage::Characterize => &self.characterize,
             Stage::Tune => &self.tune,
             Stage::Profile => &self.profile,
+            Stage::Faults => &self.faults,
         };
         pair[usize::from(computed)].fetch_add(1, Ordering::Relaxed);
     }
@@ -134,6 +147,7 @@ impl StageCounters {
             characterize: read(&self.characterize),
             tune: read(&self.tune),
             profile: read(&self.profile),
+            faults: read(&self.faults),
         }
     }
 }
@@ -184,6 +198,14 @@ struct Core {
     /// Keyed by workload × batch × capacity × cache config × whether the
     /// trace simulator (vs the analytical model) produced the profile.
     profiles: Memo<(Workload, u64, u64, CacheConfig, bool), ProfiledWorkload>,
+    /// Fault-campaign replays, keyed by technology id × workload × batch ×
+    /// capacity × cache config × seed. Separate from `profiles` because
+    /// that stage is technology-independent (one trace replay serves every
+    /// technology at a capacity), while a fault campaign samples the
+    /// technology's `[rel]` error rates. The id is a sound key: the
+    /// registry rejects re-registration of an id with different
+    /// parameters.
+    faults: Memo<(String, Workload, u64, u64, CacheConfig, u64), SimResult>,
     /// Engine-wide counters (all forks aggregated).
     totals: StageCounters,
 }
@@ -215,6 +237,7 @@ impl Engine {
                 cells: Memo::default(),
                 tuned: Memo::default(),
                 profiles: Memo::default(),
+                faults: Memo::default(),
                 totals: StageCounters::default(),
             }),
             stats: Arc::new(StageCounters::default()),
@@ -556,6 +579,56 @@ impl Engine {
             .collect()
     }
 
+    /// Stage 4 — the reliability fault campaign: replay the workload's
+    /// forward trace with the technology's `[rel]` fault injector armed
+    /// on the L2 (memoized per technology × workload × batch × capacity ×
+    /// cache config × seed). Like every trace replay this applies to net
+    /// workloads in the inference phase only; callers gate on that. Fault
+    /// counts are seed-deterministic and worker-count-invariant (per-set
+    /// RNG streams — see [`crate::reliability`]).
+    fn fault_campaign(
+        &self,
+        tech_id: &str,
+        rel: RelSpec,
+        workload: &Workload,
+        batch: u64,
+        l2_capacity: u64,
+        cache: CacheConfig,
+        seed: u64,
+    ) -> crate::Result<SimResult> {
+        let net = match workload {
+            Workload::Net { id, .. } => self.net(id).ok_or_else(|| {
+                let known: Vec<String> = self.nets().iter().map(|n| n.id.clone()).collect();
+                msg(format!("unknown workload '{id}' (registered: {})", known.join(", ")))
+            })?,
+            Workload::Hpcg(_) => {
+                return Err(msg("fault campaigns replay net traces; HPCG has no trace"))
+            }
+        };
+        let key = (tech_id.to_string(), workload.clone(), batch, l2_capacity, cache, seed);
+        let (out, computed) = self.core.faults.get_or_compute(key, || {
+            let gpu = GpuConfig::gtx_1080_ti().with_l2(l2_capacity);
+            if l2_capacity % (gpu.l2_line * gpu.l2_assoc) != 0 {
+                return Err(format!(
+                    "fault campaigns simulate the L2 directly: capacity {l2_capacity} B is \
+                     not a whole number of {}-way sets of {} B lines",
+                    gpu.l2_assoc, gpu.l2_line
+                ));
+            }
+            let shards = if in_worker() { 1 } else { num_threads() };
+            Ok(simulate_with_faults(
+                net_trace(&net, batch),
+                &gpu,
+                cache,
+                0,
+                shards,
+                Some(FaultConfig { rel, seed }),
+            ))
+        });
+        self.bump(Stage::Faults, computed);
+        out.map_err(msg)
+    }
+
     // --- queries ---
 
     /// Largest capacity (1–16 MB grid) of `tech` whose tuned area fits the
@@ -586,8 +659,12 @@ impl Engine {
 
     /// Answer one typed query: resolve the iso mode, tune the cache, and —
     /// when the query names a workload — profile it and roll up the
-    /// cross-layer energy/latency model.
+    /// cross-layer energy/latency model. Technologies carrying a `[rel]`
+    /// reliability block additionally run the stage-4 fault campaign on
+    /// trace-replayable (net inference) workloads, unless fault injection
+    /// is globally disabled.
     pub fn evaluate(&self, query: &Query) -> crate::Result<Evaluation> {
+        let spec = self.tech_or_err(&query.tech)?;
         let capacity = match query.iso {
             IsoMode::Capacity => query.capacity_bytes,
             IsoMode::Area => self.fit_iso_area(&query.tech, query.capacity_bytes)?,
@@ -613,11 +690,30 @@ impl Engine {
                 })
             }
         };
+        let rel = match (spec.rel, &query.workload, &workload) {
+            (Some(r), Some(w @ Workload::Net { phase: Phase::Inference, .. }), Some(we))
+                if reliability::faults_enabled() =>
+            {
+                let sim = self.fault_campaign(
+                    &spec.id,
+                    r,
+                    w,
+                    we.batch,
+                    capacity,
+                    query.cache,
+                    global_seed(),
+                )?;
+                let line_bits = GpuConfig::gtx_1080_ti().l2_line * 8;
+                Some(model::rel_from_sim(&r, &sim, line_bits, we.rollup.total_time()))
+            }
+            _ => None,
+        };
         Ok(Evaluation {
             tech: query.tech.clone(),
             capacity_bytes: capacity,
             design,
             workload,
+            rel,
         })
     }
 
@@ -855,6 +951,45 @@ mod tests {
         let ev = e.evaluate(&q).unwrap();
         let we = ev.workload.expect("workload roll-up present");
         assert!(we.stats.l2_reads > 0 && we.rollup.total_energy() > 0.0);
+    }
+
+    #[test]
+    fn rel_techs_run_the_fault_campaign_and_memoize() {
+        use crate::reliability::set_faults_enabled;
+        use crate::util::rng::SEED_TEST_LOCK;
+        // The campaign keys on the global seed and gates on the global
+        // fault switch; hold the knob lock so concurrent tests can't
+        // shift either under us.
+        let _guard = SEED_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let e = Engine::new();
+        let mut faulty = TechSpec::stt();
+        faulty.id = "stt_rel".into();
+        faulty.rel = Some(crate::reliability::RelSpec::stt_default());
+        e.register(faulty).unwrap();
+        let w = Workload::net("squeezenet", Phase::Inference);
+        let q = Query::tune("stt_rel", 2 * MB).with_workload(w.clone()).with_batch(1);
+        let ev = e.evaluate(&q).unwrap();
+        let rel = ev.rel.expect("[rel] tech on a net inference workload runs the campaign");
+        assert!(rel.lifetime_years > 0.0 && rel.lifetime_years.is_finite());
+        assert_eq!(e.stats().faults.misses, 1);
+        let again = e.evaluate(&q).unwrap();
+        assert_eq!(e.stats().faults, HitMiss { hits: 1, misses: 1 }, "campaign memoizes");
+        assert_eq!(again.rel, ev.rel, "memoized campaign is deterministic");
+        // No [rel] block → no campaign; the builtins stay rel-free.
+        let plain = e
+            .evaluate(&Query::tune("stt", 2 * MB).with_workload(w.clone()).with_batch(1))
+            .unwrap();
+        assert!(plain.rel.is_none());
+        // Tune-only queries have no trace to replay.
+        assert!(e.evaluate(&Query::tune("stt_rel", 2 * MB)).unwrap().rel.is_none());
+        // The global switch disarms the stage without touching the rest
+        // of the evaluation.
+        set_faults_enabled(false);
+        let off = e.evaluate(&q).unwrap();
+        set_faults_enabled(true);
+        assert!(off.rel.is_none());
+        assert!(off.workload.is_some(), "profiling still runs with faults off");
+        assert_eq!(e.stats().faults, HitMiss { hits: 1, misses: 1 }, "no campaign traffic");
     }
 
     #[test]

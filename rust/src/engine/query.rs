@@ -9,6 +9,7 @@
 use crate::analysis::model;
 use crate::gpusim::CacheConfig;
 use crate::nvsim::optimizer::TunedCache;
+use crate::reliability::RelEval;
 use crate::workloads::memstats::MemStats;
 use crate::workloads::profiler::Workload;
 
@@ -133,6 +134,13 @@ pub struct Evaluation {
     pub design: TunedCache,
     /// Present when the query named a workload.
     pub workload: Option<WorkloadEval>,
+    /// Reliability roll-up from the fault campaign. Present only when the
+    /// technology carries a `[rel]` block, fault injection is globally
+    /// enabled (see [`crate::reliability::set_faults_enabled`]), and the
+    /// query named a trace-replayable workload (net inference) — `None`
+    /// otherwise, so `[rel]`-free evaluations stay bit-identical to a
+    /// pre-reliability build.
+    pub rel: Option<RelEval>,
 }
 
 #[cfg(test)]

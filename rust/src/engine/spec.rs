@@ -14,6 +14,7 @@
 use crate::device::bitcell::{BitcellKind, NvCal, SOT_HEIGHT_CPP, STT_HEIGHT_CPP};
 use crate::device::characterize::cal;
 use crate::device::mtj::{Mtj, MtjKind};
+use crate::reliability::RelSpec;
 
 /// Registry id of the built-in SRAM baseline.
 pub const TECH_SRAM: &str = "sram";
@@ -165,6 +166,11 @@ pub struct TechSpec {
     pub device: DeviceCal,
     /// Cache-level calibration stamped into the characterized bitcell.
     pub nv: NvCal,
+    /// Reliability card (`[rel]` descriptor section): fault rates, ECC
+    /// mode, and endurance budget for Monte Carlo fault campaigns. `None`
+    /// (the built-ins' default) means no fault injection — evaluation is
+    /// bit-identical to a pre-reliability build.
+    pub rel: Option<RelSpec>,
 }
 
 impl TechSpec {
@@ -189,6 +195,7 @@ impl TechSpec {
                 t_read_extra: 0.0,
                 t_write_extra: 0.0,
             },
+            rel: None,
         }
     }
 
@@ -227,6 +234,7 @@ impl TechSpec {
                 t_read_extra: 0.0,
                 t_write_extra: 0.0,
             },
+            rel: None,
         }
     }
 
@@ -267,6 +275,7 @@ impl TechSpec {
                 t_read_extra: 1.15e-9,
                 t_write_extra: 0.45e-9,
             },
+            rel: None,
         }
     }
 

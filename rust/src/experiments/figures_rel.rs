@@ -1,0 +1,346 @@
+//! figRel: Monte Carlo fault campaign — ECC outcome counters, silent
+//! bit-error rate (UBER), and extrapolated array lifetime for the NVM
+//! technologies across capacity × write policy.
+//!
+//! The paper's EDP/area comparison treats NVM arrays as perfect; this
+//! campaign quantifies the reliability cost of the same design points.
+//! Each cell (technology card × L2 capacity × write policy) replays the
+//! suite trace through the fault-injecting simulator `--trials` times
+//! under decorrelated seeds and aggregates: fault counters sum across
+//! trials, UBER and lifetime report the per-trial mean. The reliability
+//! cards are the representative [`RelSpec`] defaults — the *builtin*
+//! `stt`/`sot` technologies stay `[rel]`-free, so every other experiment
+//! remains bit-identical to the fault-free build. Write policy matters
+//! twice here: it moves which writes reach the array (write-error
+//! exposure) and the hottest line's write count (the wear pacemaker
+//! lifetime is extrapolated from).
+
+use super::figures_scale::fig7_selected_suite;
+use super::{Output, Params};
+use crate::analysis::model;
+use crate::engine::Engine;
+use crate::gpusim::{net_trace, simulate_with_faults, Access, CacheConfig, GpuConfig, WritePolicy};
+use crate::nvsim::cache::CachePpa;
+use crate::reliability::{campaign_seed, FaultConfig, RelSpec};
+use crate::util::csv::Csv;
+use crate::util::pool::{par_map, split_threads};
+use crate::util::rng::global_seed;
+use crate::util::table::{fnum, Table};
+use crate::workloads::ir::NetIr;
+use crate::workloads::nets;
+
+const MB: u64 = 1 << 20;
+
+/// Monte Carlo trials per cell when `--trials` is absent.
+pub(crate) const DEFAULT_TRIALS: u64 = 3;
+
+/// The campaigned technologies, in paper order (SRAM has no fault model).
+const TECHS: [&str; 2] = ["stt", "sot"];
+
+/// Default capacity grid (MB): the 1MB stress corner and the paper's 3MB
+/// baseline.
+const CAPS_MB: [u64; 2] = [1, 3];
+
+/// The representative reliability card for one campaigned technology.
+fn rel_card(tech: &str) -> RelSpec {
+    match tech {
+        "stt" => RelSpec::stt_default(),
+        "sot" => RelSpec::sot_default(),
+        other => unreachable!("no reliability card for {other}"),
+    }
+}
+
+/// One aggregated campaign cell.
+#[derive(Debug, Clone)]
+struct RelRow {
+    tech: &'static str,
+    net: String,
+    batch: u64,
+    cap_mb: u64,
+    policy: WritePolicy,
+    trials: u64,
+    /// ECC outcome counters, summed across trials.
+    corrected: u64,
+    detected: u64,
+    silent: u64,
+    retired_ways: u64,
+    /// Hottest line's write count — max across trials (the trials replay
+    /// the same trace, so wear only varies through retirement reshaping).
+    max_line_writes: u64,
+    /// Mean per-trial silent bit-error rate per bit read.
+    uber: f64,
+    /// Mean per-trial extrapolated lifetime (years); infinite when the
+    /// trace never wrote the array (an idle cell never wears out).
+    lifetime_years: f64,
+}
+
+/// Run the campaign for one network: `trials` seeded fault replays per
+/// (tech, capacity, policy) cell, cells fanned across the pool with the
+/// shard budget split so cell-parallelism × shard-parallelism stays ≈ the
+/// core count.
+#[allow(clippy::too_many_arguments)]
+fn campaign_net(
+    net: &NetIr,
+    batch: u64,
+    caps: &[u64],
+    ppas: &[Vec<CachePpa>],
+    base: CacheConfig,
+    warmup_frac: Option<f64>,
+    trials: u64,
+    seed: u64,
+) -> Vec<RelRow> {
+    let trace: Vec<Access> = net_trace(net, batch).collect();
+    let warmup = match warmup_frac {
+        None => 0,
+        Some(f) => (f * trace.len() as f64) as u64,
+    };
+    let mut cells: Vec<(usize, usize, WritePolicy)> = Vec::new();
+    for (t_i, _) in TECHS.iter().enumerate() {
+        for (c_i, _) in caps.iter().enumerate() {
+            for &policy in &WritePolicy::ALL {
+                cells.push((t_i, c_i, policy));
+            }
+        }
+    }
+    let shards = split_threads(cells.len());
+    par_map(&cells, |&(t_i, c_i, policy)| {
+        let tech = TECHS[t_i];
+        let rel = rel_card(tech);
+        let cap_mb = caps[c_i];
+        let gpu = GpuConfig::gtx_1080_ti().with_l2(cap_mb * MB);
+        let cache = CacheConfig { write: policy, ..base };
+        let line_bits = gpu.l2_line * 8;
+        let mut row = RelRow {
+            tech,
+            net: net.name.clone(),
+            batch,
+            cap_mb,
+            policy,
+            trials,
+            corrected: 0,
+            detected: 0,
+            silent: 0,
+            retired_ways: 0,
+            max_line_writes: 0,
+            uber: 0.0,
+            lifetime_years: 0.0,
+        };
+        for t in 0..trials {
+            let faults = FaultConfig { rel, seed: campaign_seed(seed, t) };
+            let sim = simulate_with_faults(
+                trace.iter().copied(),
+                &gpu,
+                cache,
+                warmup,
+                shards,
+                Some(faults),
+            );
+            let stats = model::stats_from_sim(&sim, gpu.l2_line);
+            let time = model::evaluate(&ppas[t_i][c_i], &stats).total_time();
+            let ev = model::rel_from_sim(&rel, &sim, line_bits, time);
+            row.corrected += ev.corrected;
+            row.detected += ev.detected;
+            row.silent += ev.silent;
+            row.retired_ways += ev.retired_ways;
+            row.max_line_writes = row.max_line_writes.max(sim.max_line_writes);
+            row.uber += ev.uber / trials as f64;
+            row.lifetime_years += ev.lifetime_years / trials as f64;
+        }
+        row
+    })
+}
+
+/// figRel generator: the Monte Carlo fault campaign. Defaults replay
+/// AlexNet (batch 4) only — the campaign multiplies out to
+/// tech × capacity × policy × trials replays, so the suite axis stays
+/// narrow unless `--networks` widens it. `--write-policy` is ignored (the
+/// campaign sweeps all three policies itself).
+pub fn figrel(engine: &Engine, params: &Params) -> Output {
+    let trials = params.trials.unwrap_or(DEFAULT_TRIALS).max(1);
+    let suite: Vec<(NetIr, u64)> = if params.networks.is_none() {
+        vec![(nets::alexnet(), 4)]
+    } else {
+        fig7_selected_suite(engine, params)
+    };
+    let caps = params.capacities_or(&CAPS_MB);
+    let base = CacheConfig { write: WritePolicy::WriteBack, ..params.cache_config() };
+    let seed = global_seed();
+
+    // EDAP-tuned designs per (tech, capacity): the timing context the
+    // lifetime extrapolation scales by. Tuned up front (memoized,
+    // engine-parallel) so pool workers never tune.
+    let ppas: Vec<Vec<CachePpa>> = TECHS
+        .iter()
+        .map(|t| {
+            caps.iter()
+                .map(|&mb| {
+                    engine
+                        .tuned(t, mb * MB)
+                        .expect("builtin technologies tune at campaign capacities")
+                        .ppa
+                })
+                .collect()
+        })
+        .collect();
+
+    let rows: Vec<RelRow> = suite
+        .iter()
+        .flat_map(|(net, batch)| {
+            campaign_net(net, *batch, &caps, &ppas, base, params.warmup_frac, trials, seed)
+        })
+        .collect();
+
+    let mut t = Table::new(
+        format!(
+            "figRel: Monte Carlo fault campaign ({} trials/cell, seed {seed:#x}; \
+             counters summed, UBER/lifetime per-trial means)",
+            trials
+        ),
+        &[
+            "tech",
+            "network",
+            "cap (MB)",
+            "policy",
+            "corrected",
+            "detected",
+            "silent",
+            "UBER",
+            "retired",
+            "lifetime (y)",
+        ],
+    );
+    let mut csv = Csv::new(&[
+        "tech",
+        "capacity_mb",
+        "write",
+        "net",
+        "batch",
+        "trials",
+        "corrected",
+        "detected",
+        "silent",
+        "uber",
+        "retired_ways",
+        "max_line_writes",
+        "lifetime_years",
+    ]);
+    for row in &rows {
+        t.row(&[
+            row.tech.to_string(),
+            row.net.clone(),
+            row.cap_mb.to_string(),
+            row.policy.name().to_string(),
+            row.corrected.to_string(),
+            row.detected.to_string(),
+            row.silent.to_string(),
+            format!("{:.2e}", row.uber),
+            row.retired_ways.to_string(),
+            format!("{:.3e}", row.lifetime_years),
+        ]);
+        csv.rowd(&[
+            &row.tech,
+            &row.cap_mb,
+            &row.policy.name(),
+            &row.net,
+            &row.batch,
+            &row.trials,
+            &row.corrected,
+            &row.detected,
+            &row.silent,
+            &row.uber,
+            &row.retired_ways,
+            &row.max_line_writes,
+            &row.lifetime_years,
+        ]);
+    }
+
+    let find = |tech: &str, policy: WritePolicy| -> Option<&RelRow> {
+        let cap = rows.iter().filter(|r| r.tech == tech).map(|r| r.cap_mb).max()?;
+        rows.iter().find(|r| r.tech == tech && r.policy == policy && r.cap_mb == cap)
+    };
+    let mut out = Output::default();
+    if let (Some(stt), Some(sot)) =
+        (find("stt", WritePolicy::WriteBack), find("sot", WritePolicy::WriteBack))
+    {
+        out = out.headline(format!(
+            "figRel ({} × b{}, {} trials): STT wb@{}MB — {} corrected / {} detected / {} silent \
+             (UBER {:.1e}), lifetime {:.2e} y",
+            stt.net, stt.batch, trials, stt.cap_mb, stt.corrected, stt.detected, stt.silent,
+            stt.uber, stt.lifetime_years,
+        ));
+        let headroom = if stt.lifetime_years > 0.0 && stt.lifetime_years.is_finite() {
+            format!(" ({:.0}x STT's endurance headroom)", sot.lifetime_years / stt.lifetime_years)
+        } else {
+            String::new()
+        };
+        out = out.headline(format!(
+            "figRel: SOT wb@{}MB — {} corrected / {} silent, lifetime {:.2e} y{headroom}",
+            sot.cap_mb, sot.corrected, sot.silent, sot.lifetime_years,
+        ));
+    }
+    if let (Some(wb), Some(byp)) =
+        (find("stt", WritePolicy::WriteBack), find("stt", WritePolicy::WriteBypass))
+    {
+        if byp.max_line_writes > 0 {
+            out = out.headline(format!(
+                "figRel: write-bypass holds STT's hottest line to {} writes vs {} under \
+                 write-back (x{} wear pacemaker relief)",
+                byp.max_line_writes,
+                wb.max_line_writes,
+                fnum(wb.max_line_writes as f64 / byp.max_line_writes as f64, 2),
+            ));
+        }
+    }
+    if out.headlines.is_empty() {
+        out =
+            out.headline(format!("figRel: {} campaign cells, {} trials each", rows.len(), trials));
+    }
+    out.table(t).csv("figrel_reliability", csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figrel_covers_tech_x_capacity_x_policy() {
+        let params = Params {
+            capacities_mb: Some(vec![1]),
+            trials: Some(1),
+            ..Params::default()
+        };
+        let out = figrel(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), TECHS.len() * 3, "tech × cap × policy rows");
+        assert_eq!(out.csvs[0].0, "figrel_reliability");
+        assert_eq!(out.csvs[0].1.len(), TECHS.len() * 3);
+        assert!(!out.headlines.is_empty());
+        let rendered = out.tables[0].render();
+        assert!(rendered.contains("stt") && rendered.contains("sot"), "{rendered}");
+        assert!(rendered.contains("bypass"), "{rendered}");
+    }
+
+    #[test]
+    fn figrel_is_deterministic_under_a_pinned_seed() {
+        let _guard = crate::util::rng::SEED_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let params = Params {
+            networks: Some(vec!["squeezenet".into()]),
+            capacities_mb: Some(vec![1]),
+            trials: Some(2),
+            ..Params::default()
+        };
+        let a = figrel(Engine::shared(), &params);
+        let b = figrel(Engine::shared(), &params);
+        assert_eq!(a.csvs[0].1.to_string(), b.csvs[0].1.to_string());
+        // SOT's reliability card strictly dominates STT's, so at equal
+        // seeds it never sees more ECC events and always outlives it.
+        let csv = a.csvs[0].1.to_string();
+        let cell = |line: &str, i: usize| line.split(',').nth(i).unwrap().to_string();
+        let lines: Vec<&str> = csv.lines().skip(1).collect();
+        let stt_wb = lines.iter().find(|l| l.starts_with("stt,1,wb")).unwrap();
+        let sot_wb = lines.iter().find(|l| l.starts_with("sot,1,wb")).unwrap();
+        let corrected = |l: &str| cell(l, 6).parse::<u64>().unwrap();
+        assert!(corrected(sot_wb) <= corrected(stt_wb), "{csv}");
+        let life = |l: &str| cell(l, 12).parse::<f64>().unwrap();
+        assert!(life(sot_wb) > life(stt_wb), "{csv}");
+    }
+}

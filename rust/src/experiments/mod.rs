@@ -16,6 +16,7 @@
 pub mod figures_iso;
 pub mod figures_policy;
 pub mod figures_profile;
+pub mod figures_rel;
 pub mod figures_scale;
 pub mod tables;
 
@@ -44,6 +45,8 @@ pub struct Params {
     /// Replay this fraction of each trace as cache warmup before counters
     /// start (fig7, figWP); `None` = no warmup.
     pub warmup_frac: Option<f64>,
+    /// Monte Carlo trials per fault-campaign cell (figRel); `None` = 3.
+    pub trials: Option<u64>,
 }
 
 /// Canonical form for network-name matching: lowercase alphanumerics.
@@ -252,6 +255,12 @@ pub fn registry() -> Vec<Experiment> {
             run: figures_policy::figwp,
         },
         Experiment {
+            id: "figRel",
+            title: "Monte Carlo fault campaign: ECC outcomes, UBER, array lifetime (STT/SOT)",
+            params: "networks, capacities, replacement, l1, warmup-frac, trials",
+            run: figures_rel::figrel,
+        },
+        Experiment {
             id: "fig8",
             title: "Iso-area dynamic + leakage energy (normalized to SRAM)",
             params: "networks",
@@ -304,11 +313,11 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
         for want in [
             "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "fig5", "fig6",
-            "fig7", "figWP", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+            "fig7", "figWP", "figRel", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }
-        assert_eq!(ids.len(), 17);
+        assert_eq!(ids.len(), 18);
     }
 
     #[test]
@@ -316,7 +325,7 @@ mod tests {
         let mut ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids.len(), 17);
+        assert_eq!(ids.len(), 18);
     }
 
     #[test]
@@ -335,6 +344,7 @@ mod tests {
             "networks, capacities, write-policy, replacement, l1, warmup-frac"
         );
         assert!(by_id("figWP").unwrap().params.contains("warmup-frac"));
+        assert!(by_id("figRel").unwrap().params.contains("trials"));
     }
 
     #[test]

@@ -22,18 +22,27 @@ pub enum Objective {
     Latency,
     /// Tuned cache area (m²).
     Area,
-    /// Effective cache capacity (bytes) — the one *maximized* objective.
+    /// Effective cache capacity (bytes) — maximized.
     Capacity,
+    /// Projected array lifetime in years from the fault campaign's wear
+    /// pacemaker — maximized. Needs a `[rel]` technology (see
+    /// [`Evaluation::rel`]).
+    Lifetime,
+    /// Uncorrectable (silent) bit-error rate from the fault campaign —
+    /// minimized. Needs a `[rel]` technology.
+    Uber,
 }
 
 impl Objective {
     /// All objectives, in presentation order.
-    pub const ALL: [Objective; 5] = [
+    pub const ALL: [Objective; 7] = [
         Objective::Edp,
         Objective::Energy,
         Objective::Latency,
         Objective::Area,
         Objective::Capacity,
+        Objective::Lifetime,
+        Objective::Uber,
     ];
 
     /// CLI/CSV name.
@@ -44,12 +53,15 @@ impl Objective {
             Objective::Latency => "latency",
             Objective::Area => "area",
             Objective::Capacity => "capacity",
+            Objective::Lifetime => "lifetime",
+            Objective::Uber => "uber",
         }
     }
 
-    /// Whether the objective is minimized (everything except capacity).
+    /// Whether the objective is minimized (everything except capacity and
+    /// lifetime).
     pub fn minimize(&self) -> bool {
-        !matches!(self, Objective::Capacity)
+        !matches!(self, Objective::Capacity | Objective::Lifetime)
     }
 
     /// Parse one objective name.
@@ -81,7 +93,9 @@ impl Objective {
     }
 
     /// Raw objective value of an evaluation. `None` when the objective
-    /// needs a workload roll-up the evaluation lacks (tune-only query).
+    /// needs a roll-up the evaluation lacks (workload objectives on a
+    /// tune-only query; reliability objectives without a `[rel]`
+    /// technology or with fault injection disabled).
     pub fn value(&self, ev: &Evaluation) -> Option<f64> {
         match self {
             Objective::Edp => ev.workload.as_ref().map(|w| w.rollup.edp_with_dram()),
@@ -89,6 +103,8 @@ impl Objective {
             Objective::Latency => ev.workload.as_ref().map(|w| w.rollup.total_time()),
             Objective::Area => Some(ev.design.ppa.area),
             Objective::Capacity => Some(ev.capacity_bytes as f64),
+            Objective::Lifetime => ev.rel.as_ref().map(|r| r.lifetime_years),
+            Objective::Uber => ev.rel.as_ref().map(|r| r.uber),
         }
     }
 
@@ -203,6 +219,12 @@ mod tests {
         assert!(Objective::parse_list("").is_err());
         assert!(Objective::Edp.minimize());
         assert!(!Objective::Capacity.minimize());
+        assert_eq!(Objective::parse("lifetime").unwrap(), Objective::Lifetime);
+        assert!(!Objective::Lifetime.minimize(), "longer lifetimes are better");
+        assert!(Objective::Uber.minimize());
+        for o in Objective::ALL {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o, "names round-trip");
+        }
     }
 
     #[test]

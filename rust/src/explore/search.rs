@@ -257,6 +257,15 @@ fn evaluate_flats(
                     }
                 }
                 match missing {
+                    Some(o @ (Objective::Lifetime | Objective::Uber)) => errors.push((
+                        describe,
+                        format!(
+                            "objective '{}' needs a reliability roll-up (a technology with a \
+                             [rel] block, on a net inference workload, with fault injection \
+                             enabled)",
+                            o.name()
+                        ),
+                    )),
                     Some(o) => errors.push((
                         describe,
                         format!("objective '{}' needs a workload roll-up", o.name()),

@@ -192,6 +192,10 @@ pub fn spec_field_names() -> &'static [&'static str] {
         "nv.csa_overhead",
         "nv.t_read_extra",
         "nv.t_write_extra",
+        "rel.write_error_rate",
+        "rel.retention_tau",
+        "rel.read_disturb_rate",
+        "rel.endurance_cycles",
     ]
 }
 
@@ -225,13 +229,18 @@ fn spec_field_mut<'a>(spec: &'a mut TechSpec, field: &str) -> Option<&'a mut f64
         "nv.csa_overhead" => Some(&mut spec.nv.csa_overhead),
         "nv.t_read_extra" => Some(&mut spec.nv.t_read_extra),
         "nv.t_write_extra" => Some(&mut spec.nv.t_write_extra),
+        "rel.write_error_rate" => spec.rel.as_mut().map(|r| &mut r.write_error_rate),
+        "rel.retention_tau" => spec.rel.as_mut().map(|r| &mut r.retention_tau),
+        "rel.read_disturb_rate" => spec.rel.as_mut().map(|r| &mut r.read_disturb_rate),
+        "rel.endurance_cycles" => spec.rel.as_mut().map(|r| &mut r.endurance_cycles),
         _ => None,
     }
 }
 
 /// Apply one spec-axis override to a cloned spec. Errors on an unknown
 /// field path, or a known path that doesn't apply to the technology (an
-/// `mtj.*` override on an SRAM-class spec with no `[mtj]` section).
+/// `mtj.*` override on an SRAM-class spec with no `[mtj]` section, or a
+/// `rel.*` override on a technology with no `[rel]` reliability block).
 pub fn apply_spec_override(spec: &mut TechSpec, field: &str, value: f64) -> crate::Result<()> {
     if !is_spec_field(field) {
         return Err(msg(format!(
@@ -243,11 +252,22 @@ pub fn apply_spec_override(spec: &mut TechSpec, field: &str, value: f64) -> crat
     match spec_field_mut(spec, field) {
         Some(slot) => {
             *slot = value;
+            // Reliability overrides re-validate the block: a sweep that
+            // lands outside the physical ranges (negative rates, p > 1,
+            // zero endurance) fails here, naming the offending key, not
+            // deep inside a fault campaign.
+            if let Some(r) = spec.rel.filter(|_| field.starts_with("rel.")) {
+                r.validate().map_err(msg)?;
+            }
             Ok(())
         }
-        None => Err(msg(format!(
-            "spec field '{field}' does not apply to technology '{id}' (no [mtj] section)"
-        ))),
+        None => {
+            let section = field.split('.').next().unwrap_or(field);
+            Err(msg(format!(
+                "spec field '{field}' does not apply to technology '{id}' \
+                 (no [{section}] section)"
+            )))
+        }
     }
 }
 
@@ -767,6 +787,21 @@ mod tests {
         // SRAM nv-card fields are overridable.
         apply_spec_override(&mut sram, "nv.cell_area_mult", 2.5).unwrap();
         assert_eq!(sram.nv.cell_area_mult, 2.5);
+        // rel.* fields override technologies carrying a [rel] block and
+        // re-validate in place; rel-free techs get the section named.
+        let mut faulty = TechSpec::stt();
+        faulty.rel = Some(crate::reliability::RelSpec::stt_default());
+        apply_spec_override(&mut faulty, "rel.retention_tau", 0.25).unwrap();
+        assert_eq!(faulty.rel.unwrap().retention_tau, 0.25);
+        let e = apply_spec_override(&mut faulty, "rel.write_error_rate", -1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("write_error_rate"), "{e}");
+        let mut plain = TechSpec::stt();
+        let e = apply_spec_override(&mut plain, "rel.retention_tau", 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("no [rel] section"), "{e}");
     }
 
     #[test]

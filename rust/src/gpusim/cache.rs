@@ -35,8 +35,18 @@ pub enum Outcome {
     MissDirtyEvict,
 }
 
+use crate::reliability::FaultState;
+
 /// Invalid-way sentinel in the tag array.
 const EMPTY: u64 = u64::MAX;
+
+/// Retired-way sentinel in the tag array: the way crossed its endurance
+/// budget and holds no line. It matches no real tag (line addresses near
+/// `u64::MAX` would need an address space of 2⁶⁴ lines) and is not
+/// `EMPTY`, so the fused probe skips it without a dedicated branch — and
+/// since a way only wears by being written, a retired slot was always
+/// previously filled, keeping the EMPTY-suffix invariant intact.
+const RETIRED: u64 = u64::MAX - 1;
 
 /// How writes are handled (the NVM-critical axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -331,6 +341,9 @@ pub struct PolicyCache<P: ReplacementPolicy> {
     /// Dirty bitmask per set (bit i = way i), assoc ≤ 64.
     dirty: Vec<u64>,
     policy: P,
+    /// Fault injector (L2 under a `[rel]`-carrying technology only);
+    /// `None` keeps every access on the exact fault-free path.
+    faults: Option<FaultState>,
     pub hits: u64,
     pub misses: u64,
     pub writebacks: u64,
@@ -379,6 +392,7 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
             tags: vec![EMPTY; sets * assoc as usize],
             dirty: vec![0; sets],
             policy: P::new(sets, assoc as usize),
+            faults: None,
             hits: 0,
             misses: 0,
             writebacks: 0,
@@ -398,15 +412,36 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
     }
 
     /// Access `addr`; returns the outcome and updates replacement/dirty
-    /// state per the configured policies.
+    /// state per the configured policies. With a fault injector attached,
+    /// each physical array interaction additionally samples the fault
+    /// model (reads: retention + disturb; writes/fills: write errors +
+    /// wear) — without one, every fault branch is a predicted-false check
+    /// on a `None` and the path is bit-identical to the fault-free build.
     #[inline]
     pub fn access(&mut self, addr: u64, is_write: bool) -> Outcome {
         let (set, tag) = self.set_of(addr);
         let base = set * self.assoc;
+
+        // A set whose every way has worn out caches nothing: the access
+        // goes to DRAM. Writes are charged as direct (DRAM-bound) writes;
+        // reads fetch without installing, so they count as fill-less
+        // misses (degraded-mode accounting, documented in EXPERIMENTS.md).
+        if let Some(f) = &self.faults {
+            if f.all_retired(set) {
+                self.misses += 1;
+                if is_write {
+                    self.write_misses += 1;
+                    self.direct_writes += 1;
+                }
+                return Outcome::Miss;
+            }
+        }
+
         // One fused scan resolves both the hit probe and the fill way:
         // ways fill first-empty-first and tags never invalidate, so EMPTY
         // ways are a suffix — hitting one ends the probe (the tag cannot
-        // sit past it) and names the fill way in the same pass.
+        // sit past it) and names the fill way in the same pass. RETIRED
+        // slots match neither arm and are skipped.
         let mut hit_way: Option<usize> = None;
         let mut empty_way: Option<usize> = None;
         for (i, &t) in self.tags[base..base + self.assoc].iter().enumerate() {
@@ -432,6 +467,13 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
                     }
                     WritePolicy::WriteThrough => self.direct_writes += 1,
                 }
+                if let Some(f) = &mut self.faults {
+                    if f.sample_write(set, way) {
+                        self.retire_way(set, way);
+                    }
+                }
+            } else if let Some(f) = &mut self.faults {
+                f.sample_read(set);
             }
             return Outcome::Hit;
         }
@@ -440,17 +482,19 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
         if is_write {
             self.write_misses += 1;
             if self.write != WritePolicy::WriteBack {
-                // No-allocate: the write streams past this level.
+                // No-allocate: the write streams past this level (never
+                // touching the array, so nothing to fault or wear).
                 self.direct_writes += 1;
                 return Outcome::Miss;
             }
         }
 
-        // Allocate: first empty way, else the policy's victim.
+        // Allocate: first empty way, else the policy's victim (skipping
+        // retired ways when a fault injector is live).
         self.fills += 1;
         let way = match empty_way {
             Some(w) => w,
-            None => self.policy.victim(set),
+            None => self.live_victim(set),
         };
         let dirty_evict = (self.dirty[set] >> way) & 1 == 1;
         if dirty_evict {
@@ -464,11 +508,68 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
         } else {
             self.dirty[set] &= !(1 << way);
         }
+        // The fill itself is a physical array write: it faults and wears
+        // like one (wear is therefore a superset of `array_writes`, which
+        // charges demand writes only).
+        if let Some(f) = &mut self.faults {
+            if f.sample_write(set, way) {
+                self.retire_way(set, way);
+            }
+        }
         if dirty_evict {
             Outcome::MissDirtyEvict
         } else {
             Outcome::Miss
         }
+    }
+
+    /// The replacement policy's victim, excluding retired ways. Touching
+    /// a retired way steers every policy's next choice elsewhere (LRU:
+    /// newest timestamp; PLRU: root path flipped away; SRRIP: RRPV 0
+    /// while live ways age), so the retry loop terminates; a bounded
+    /// guard falls back to a linear scan regardless.
+    #[inline]
+    fn live_victim(&mut self, set: usize) -> usize {
+        let Some(f) = &self.faults else {
+            return self.policy.victim(set);
+        };
+        if f.retired_ways == 0 {
+            return self.policy.victim(set);
+        }
+        for _ in 0..4 * self.assoc {
+            let way = self.policy.victim(set);
+            match &self.faults {
+                Some(f) if f.is_retired(set, way) => self.policy.touch(set, way),
+                _ => return way,
+            }
+        }
+        let f = self.faults.as_ref().expect("guarded above");
+        (0..self.assoc)
+            .find(|&w| !f.is_retired(set, w))
+            .expect("fully-retired sets never allocate")
+    }
+
+    /// Retire `(set, way)` after its wear crossed the endurance budget:
+    /// flush the line it holds (a dirty line costs a final write-back),
+    /// mark the slot RETIRED, and shrink the set's live associativity.
+    fn retire_way(&mut self, set: usize, way: usize) {
+        if (self.dirty[set] >> way) & 1 == 1 {
+            self.writebacks += 1;
+            self.dirty[set] &= !(1 << way);
+        }
+        self.tags[set * self.assoc + way] = RETIRED;
+        self.faults.as_mut().expect("retire without injector").retire(set, way);
+    }
+
+    /// Attach a fault injector (the simulator arms the L2 only). The
+    /// injector must have been built for this cache's geometry.
+    pub fn attach_faults(&mut self, faults: FaultState) {
+        self.faults = Some(faults);
+    }
+
+    /// The attached fault injector's state, if any.
+    pub fn faults(&self) -> Option<&FaultState> {
+        self.faults.as_ref()
     }
 
     pub fn accesses(&self) -> u64 {
@@ -504,6 +605,14 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
         self.array_writes = 0;
         self.fills = 0;
         self.direct_writes = 0;
+        // ECC outcome counters are measurement counters and reset with
+        // the rest; wear and retirement are physical state and persist
+        // (a warmup prefix ages the array exactly as real accesses do).
+        if let Some(f) = &mut self.faults {
+            f.corrected = 0;
+            f.detected = 0;
+            f.silent = 0;
+        }
     }
 }
 
@@ -717,6 +826,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn worn_ways_retire_and_the_set_degrades() {
+        use crate::reliability::{FaultConfig, FaultState, RelSpec};
+        // One 2-way set with a 3-cycle endurance budget; rates zeroed so
+        // only wear mechanics act.
+        let rel = RelSpec {
+            endurance_cycles: 3.0,
+            write_error_rate: 0.0,
+            read_disturb_rate: 0.0,
+            retention_tau: 1e12,
+            ..RelSpec::stt_default()
+        };
+        let mut c = Cache::new(128, 64, 2);
+        c.attach_faults(FaultState::new(&FaultConfig { rel, seed: 9 }, 1, 2, 512));
+        c.access(0, false); // fill: wear 1
+        c.access(0, true); // write hit: wear 2, dirty
+        assert_eq!(c.writebacks, 0);
+        c.access(0, true); // wear 3: crosses the budget — retire + flush
+        assert_eq!(c.writebacks, 1, "retiring a dirty way writes it back");
+        assert_eq!(c.faults().unwrap().retired_ways, 1);
+        // The line is gone: re-access misses and fills the survivor.
+        assert_eq!(c.access(0, false), Outcome::Miss);
+        assert_eq!(c.access(0, false), Outcome::Hit);
+        // Wear out the second way too (fill was 1, two write hits).
+        c.access(0, true);
+        c.access(0, true);
+        assert!(c.faults().unwrap().all_retired(0));
+        // The set is now uncacheable: everything misses, writes go
+        // direct to DRAM, reads neither fill nor hit.
+        let (fills, direct) = (c.fills, c.direct_writes);
+        assert_eq!(c.access(0, false), Outcome::Miss);
+        assert_eq!(c.access(0, true), Outcome::Miss);
+        assert_eq!(c.fills, fills);
+        assert_eq!(c.direct_writes, direct + 1);
+        assert_eq!(c.faults().unwrap().max_wear(), 3);
+    }
+
+    #[test]
+    fn victim_selection_skips_retired_ways_for_every_policy() {
+        use crate::reliability::{FaultConfig, FaultState, RelSpec};
+        fn churn<P: ReplacementPolicy>(name: &str) {
+            let rel = RelSpec {
+                endurance_cycles: 6.0,
+                write_error_rate: 0.0,
+                read_disturb_rate: 0.0,
+                retention_tau: 1e12,
+                ..RelSpec::stt_default()
+            };
+            // One 4-way set, 24 total write cycles before full wear-out.
+            let mut c: PolicyCache<P> = PolicyCache::new(4 * 64, 64, 4);
+            c.attach_faults(FaultState::new(&FaultConfig { rel, seed: 5 }, 1, 4, 512));
+            for i in 0..200u64 {
+                c.access((i % 8) * 64, true);
+            }
+            let f = c.faults().unwrap();
+            assert!(f.all_retired(0), "{name}: 200 writes exhaust a 24-cycle set");
+            assert_eq!(f.retired_ways, 4, "{name}");
+            assert_eq!(f.max_wear(), 6, "{name}: no way wears past its budget");
+            assert_eq!(c.hits + c.misses, 200, "{name}: accesses conserved");
+        }
+        churn::<TrueLru>("lru");
+        churn::<TreePlru>("plru");
+        churn::<Srrip>("srrip");
     }
 
     #[test]

@@ -114,6 +114,16 @@ pub fn parse_l1(s: &str) -> crate::Result<bool> {
     }
 }
 
+/// Parse the `--faults on|off` CLI value (the global fault-injection
+/// switch; see [`crate::reliability::set_faults_enabled`]).
+pub fn parse_faults(s: &str) -> crate::Result<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => Err(crate::util::err::msg(format!("faults: expected on/off, got {other:?}"))),
+    }
+}
+
 impl CacheConfig {
     /// Compact human/CSV rendering (`lru/wb/l1-off`).
     pub fn describe(&self) -> String {

@@ -25,7 +25,11 @@
 //!   ([`simulate_sharded`] — exact counter equality with sequential
 //!   replay), and the Fig 7 capacity sweep (single-pass Mattson
 //!   stack-distance for the LRU/write-back default,
-//!   [`capacity_sweep_config`] per-capacity sharded replay otherwise).
+//!   [`capacity_sweep_config`] per-capacity sharded replay otherwise),
+//!   plus [`simulate_with_faults`] — the same replay with a
+//!   [`crate::reliability`] injector armed on the L2, shard-deterministic
+//!   by per-set RNG streams and bit-identical to the fault-free paths
+//!   when disarmed.
 
 pub mod cache;
 pub mod config;
@@ -36,9 +40,10 @@ pub use cache::{
     Cache, CacheCounters, Outcome, PolicyCache, Replacement, ReplacementPolicy, Srrip, TreePlru,
     TrueLru, WritePolicy,
 };
-pub use config::{parse_l1, CacheConfig, GpuConfig};
+pub use config::{parse_faults, parse_l1, CacheConfig, GpuConfig};
 pub use sim::{
     capacity_sweep, capacity_sweep_config, fig7_capacities, simulate, simulate_config,
-    simulate_sharded, CapacitySweepSim, Hierarchy, L1Result, SimResult, SweepPoint,
+    simulate_sharded, simulate_with_faults, CapacitySweepSim, Hierarchy, L1Result, SimResult,
+    SweepPoint,
 };
 pub use trace::{net_trace, Access, TraceGen};

@@ -45,6 +45,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use super::cache::{Cache, Outcome, PolicyCache, Replacement, Srrip, TreePlru, WritePolicy};
 use super::config::{CacheConfig, GpuConfig};
 use super::trace::Access;
+use crate::reliability::{FaultConfig, FaultState};
 use crate::util::pool::par_map;
 use crate::util::units::MB;
 
@@ -71,6 +72,18 @@ pub struct SimResult {
     pub dram_writes: u64,
     /// Accesses replayed (and discarded) as cache warmup before counting.
     pub warmup_accesses: u64,
+    /// Faults the ECC layer corrected in flight (fault injection only;
+    /// identically zero on fault-free runs, like the three below).
+    pub faults_corrected: u64,
+    /// Detected-but-uncorrectable faults (refetch/stall events).
+    pub faults_detected: u64,
+    /// Faults that escaped ECC undetected — the UBER numerator.
+    pub faults_silent: u64,
+    /// L2 ways retired after crossing the endurance budget.
+    pub retired_ways: u64,
+    /// Heaviest per-line physical write count (wear pacemaker; array
+    /// lifetime is extrapolated from it).
+    pub max_line_writes: u64,
     /// Present when the L1 level was simulated.
     pub l1: Option<L1Result>,
 }
@@ -99,6 +112,11 @@ impl SimResult {
             dram_fills: 0,
             dram_writes: 0,
             warmup_accesses: 0,
+            faults_corrected: 0,
+            faults_detected: 0,
+            faults_silent: 0,
+            retired_ways: 0,
+            max_line_writes: 0,
             l1: None,
         }
     }
@@ -125,6 +143,13 @@ impl SimResult {
         self.dram_fills += other.dram_fills;
         self.dram_writes += other.dram_writes;
         self.warmup_accesses += other.warmup_accesses;
+        self.faults_corrected += other.faults_corrected;
+        self.faults_detected += other.faults_detected;
+        self.faults_silent += other.faults_silent;
+        self.retired_ways += other.retired_ways;
+        // Shards own disjoint sets, so the global wear maximum is the
+        // maximum over shards.
+        self.max_line_writes = self.max_line_writes.max(other.max_line_writes);
         self.l1 = match (self.l1, other.l1) {
             (None, b) => b,
             (a, None) => a,
@@ -176,6 +201,22 @@ impl L2 {
         }
     }
 
+    fn attach_faults(&mut self, faults: FaultState) {
+        match self {
+            L2::Lru(c) => c.attach_faults(faults),
+            L2::Plru(c) => c.attach_faults(faults),
+            L2::Srrip(c) => c.attach_faults(faults),
+        }
+    }
+
+    fn faults(&self) -> Option<&FaultState> {
+        match self {
+            L2::Lru(c) => c.faults(),
+            L2::Plru(c) => c.faults(),
+            L2::Srrip(c) => c.faults(),
+        }
+    }
+
     fn reset_counters(&mut self) {
         match self {
             L2::Lru(c) => c.reset_counters(),
@@ -201,6 +242,18 @@ pub struct Hierarchy {
 
 impl Hierarchy {
     pub fn new(config: &GpuConfig, cache: CacheConfig) -> Hierarchy {
+        Hierarchy::with_faults(config, cache, None)
+    }
+
+    /// [`Hierarchy::new`] with an optional fault injector armed on the L2
+    /// (the NVM array; the SRAM L1 is never injected). The injector's
+    /// per-set RNG streams are keyed by global set index, so building one
+    /// per shard and replaying disjoint set subsets merges exactly.
+    pub fn with_faults(
+        config: &GpuConfig,
+        cache: CacheConfig,
+        faults: Option<FaultConfig>,
+    ) -> Hierarchy {
         let l1 = cache.l1.then(|| {
             PolicyCache::with_write_policy(
                 config.l1_aggregate_bytes(),
@@ -209,9 +262,19 @@ impl Hierarchy {
                 WritePolicy::WriteThrough,
             )
         });
+        let mut l2 = L2::new(config, cache);
+        if let Some(fc) = faults {
+            let sets = (config.l2_bytes / config.l2_line / config.l2_assoc) as usize;
+            l2.attach_faults(FaultState::new(
+                &fc,
+                sets,
+                config.l2_assoc as usize,
+                config.l2_line * 8,
+            ));
+        }
         Hierarchy {
             l1,
-            l2: L2::new(config, cache),
+            l2,
             l2_bytes: config.l2_bytes,
             offered: 0,
             warmup: 0,
@@ -249,6 +312,11 @@ impl Hierarchy {
     /// Final counters as a [`SimResult`].
     pub fn finish(self) -> SimResult {
         let c = self.l2.counters();
+        let f = self.l2.faults();
+        let (corrected, detected, silent, retired, max_wear) = match f {
+            None => (0, 0, 0, 0, 0),
+            Some(f) => (f.corrected, f.detected, f.silent, f.retired_ways, f.max_wear()),
+        };
         SimResult {
             l2_bytes: self.l2_bytes,
             l2_accesses: c.hits + c.misses,
@@ -261,6 +329,11 @@ impl Hierarchy {
             dram_fills: c.fills,
             dram_writes: c.writebacks + c.direct_writes,
             warmup_accesses: self.warmup,
+            faults_corrected: corrected,
+            faults_detected: detected,
+            faults_silent: silent,
+            retired_ways: retired,
+            max_line_writes: max_wear,
             l1: self.l1.map(|l1| L1Result { accesses: self.offered, hits: l1.hits }),
         }
     }
@@ -281,7 +354,18 @@ pub fn simulate_config(
     cache: CacheConfig,
     warmup_accesses: u64,
 ) -> SimResult {
-    let mut h = Hierarchy::new(config, cache);
+    simulate_seq(trace, config, cache, warmup_accesses, None)
+}
+
+/// Sequential replay with an optional fault injector.
+fn simulate_seq(
+    trace: impl IntoIterator<Item = Access>,
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup_accesses: u64,
+    faults: Option<FaultConfig>,
+) -> SimResult {
+    let mut h = Hierarchy::with_faults(config, cache, faults);
     let mut it = trace.into_iter();
     if warmup_accesses > 0 {
         for a in it.by_ref().take(warmup_accesses as usize) {
@@ -322,13 +406,31 @@ pub fn simulate_sharded(
     warmup_accesses: u64,
     max_shards: usize,
 ) -> SimResult {
+    simulate_with_faults(trace, config, cache, warmup_accesses, max_shards, None)
+}
+
+/// [`simulate_sharded`] with an optional fault injector armed on the L2.
+/// Fault counts are **shard-deterministic**: per-set RNG streams are
+/// keyed by set index and advance only on that set's accesses, and the
+/// set-sharded partition preserves per-set order — so any worker count
+/// (including 1) yields bit-identical fault counters for a given seed
+/// (pinned in `tests/reliability.rs`). With `faults: None` this is
+/// exactly [`simulate_sharded`].
+pub fn simulate_with_faults(
+    trace: impl IntoIterator<Item = Access>,
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup_accesses: u64,
+    max_shards: usize,
+    faults: Option<FaultConfig>,
+) -> SimResult {
     let group = shard_group(config, cache);
     let shards = group.min(max_shards.max(1) as u64).max(1) as usize;
     if shards <= 1 {
-        return simulate_config(trace, config, cache, warmup_accesses);
+        return simulate_seq(trace, config, cache, warmup_accesses, faults);
     }
     let parts = partition(trace, config.l2_line, group, shards, warmup_accesses);
-    replay_parts(&parts, config, cache, warmup_accesses > 0)
+    replay_parts(&parts, config, cache, warmup_accesses > 0, faults)
 }
 
 /// Largest shard-key modulus valid for one hierarchy: the shard key must
@@ -377,9 +479,10 @@ fn replay_parts(
     config: &GpuConfig,
     cache: CacheConfig,
     warmup: bool,
+    faults: Option<FaultConfig>,
 ) -> SimResult {
     let results = par_map(parts, |(accesses, warm)| {
-        let mut h = Hierarchy::new(config, cache);
+        let mut h = Hierarchy::with_faults(config, cache, faults);
         let warm = *warm as usize;
         for a in &accesses[..warm] {
             h.access(a.addr, a.write);
@@ -795,6 +898,13 @@ impl CapacitySweepSim {
                     dram_fills: c.misses,
                     dram_writes: c.writebacks,
                     warmup_accesses: 0,
+                    // The Mattson sweep is fault-free by construction
+                    // (fault injection requires a concrete replay).
+                    faults_corrected: 0,
+                    faults_detected: 0,
+                    faults_silent: 0,
+                    retired_ways: 0,
+                    max_line_writes: 0,
                     l1: None,
                 }
             })
@@ -884,7 +994,7 @@ pub fn capacity_sweep_config(
         let parts = partition(all, base_cfg.l2_line, group, shards, warmup);
         caps.iter()
             .map(|&cap| {
-                replay_parts(&parts, &base_cfg.clone().with_l2(cap), cache, warmup > 0)
+                replay_parts(&parts, &base_cfg.clone().with_l2(cap), cache, warmup > 0, None)
             })
             .collect()
     };

@@ -39,9 +39,14 @@
 //!    frontiers with knee-point selection.
 //! 8. [`experiments`] — one generator per paper table/figure, each a thin
 //!    parameterized consumer of the engine.
-//! 9. [`coordinator`] — orchestration: experiment runner, CSV persistence,
-//!    run manifest with per-experiment engine-cache accounting.
-//! 10. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//! 9. [`reliability`] — stochastic NVM fault injection (write errors,
+//!    retention decay, read disturb), SECDED ECC accounting, wear
+//!    tracking, and endurance-driven way retirement, threaded through the
+//!    [`gpusim`] hot path with shard-deterministic per-set RNG streams.
+//! 10. [`coordinator`] — orchestration: experiment runner, CSV
+//!     persistence, run manifest with per-experiment engine-cache
+//!     accounting.
+//! 11. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
 //!     workloads (build-time Python; never on the analysis hot path).
 
 pub mod analysis;
@@ -52,6 +57,7 @@ pub mod experiments;
 pub mod explore;
 pub mod gpusim;
 pub mod nvsim;
+pub mod reliability;
 pub mod runtime;
 pub mod util;
 pub mod workloads;

@@ -16,6 +16,8 @@
 //!   --tech-file F[,F..]       register custom technology descriptors
 //!   --net-file F[,F..]        register custom workload descriptors (.net)
 //!   --seed N                  base seed for every stochastic component
+//!   --faults on|off           fault injection for [rel] technologies
+//!                             (default on; off pins fault-free behaviour)
 //!
 //! Experiment params (see `repro list` for which experiment takes what):
 //!   --networks a,b            restrict network-driven experiments
@@ -26,6 +28,8 @@
 //!   --replacement lru|plru|srrip  simulated L2 replacement (fig7, figWP)
 //!   --l1 on|off               simulate the aggregate L1 filter (fig7, figWP)
 //!   --warmup-frac 0.25        replay this trace fraction as cache warmup
+//!   --trials N                Monte Carlo trials per fault-campaign cell
+//!                             (figRel; default 3)
 //!
 //! Explore options (EXPERIMENTS.md §"Design-space exploration"):
 //!   --space FILE              `.tech` file with a [space] section
@@ -37,7 +41,9 @@
 //!                             spec-override axes (';'-separated)
 //!   --iso-area                interpret capacities as SRAM footprints
 //!   --objectives edp,area     frontier objectives (edp, energy, latency,
-//!                             area, capacity)
+//!                             area, capacity, lifetime, uber — the last
+//!                             two need a [rel] technology on a net
+//!                             inference workload)
 //!   --strategy grid|random|adaptive   search strategy (default grid)
 //!   --budget N                max full evaluations (default 256)
 
@@ -60,6 +66,16 @@ fn main() {
     if let Err(e) = args.apply_global_seed() {
         eprintln!("{e}");
         std::process::exit(2);
+    }
+    // Install the global fault-injection switch before any evaluation.
+    if let Some(v) = args.get("faults") {
+        match deepnvm::gpusim::parse_faults(v) {
+            Ok(on) => deepnvm::reliability::set_faults_enabled(on),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
     }
     let engine = match engine_from(&args) {
         Ok(e) => e,
@@ -101,6 +117,7 @@ fn usage() {
            repro experiment fig7 --networks resnet18,vgg16 --capacities 4,8,16\n\
            repro experiment fig7 --write-policy bypass --l1 on --warmup-frac 0.25\n\
            repro experiment figWP --networks alexnet\n\
+           repro experiment figRel --trials 5 --capacities 1,3\n\
            repro all --results-dir results/\n\
            repro explore --tech stt,sot --capacities 1,2,4,8 --objectives edp,area\n\
            repro explore --tech stt --write-policy wb,bypass --batches 1 --budget 16\n\
@@ -165,6 +182,18 @@ fn params_from(args: &Args) -> Result<Params, String> {
             Some(f)
         }
     };
+    let trials = match args.get("trials") {
+        None => None,
+        Some(v) => {
+            let n: u64 = v
+                .parse()
+                .map_err(|_| format!("invalid value for --trials: {v:?}"))?;
+            if n == 0 {
+                return Err("--trials must be at least 1".to_string());
+            }
+            Some(n)
+        }
+    };
     Ok(Params {
         networks: args.get_list("networks"),
         capacities_mb: args.get_parse_list::<u64>("capacities")?,
@@ -173,6 +202,7 @@ fn params_from(args: &Args) -> Result<Params, String> {
         replacement,
         l1,
         warmup_frac,
+        trials,
     })
 }
 
@@ -185,7 +215,8 @@ fn cmd_list() -> i32 {
     println!(
         "params plumb from the CLI: --networks a,b  --capacities 1,2,4  --batches 1,8,64\n\
          cache-simulation params:   --write-policy wb|wt|bypass  --replacement lru|plru|srrip  \
-         --l1 on|off  --warmup-frac 0.25"
+         --l1 on|off  --warmup-frac 0.25\n\
+         fault-campaign params:     --trials 5 (figRel); global --faults on|off"
     );
     0
 }
@@ -232,6 +263,7 @@ fn cmd_all(engine: &Engine, args: &Args) -> i32 {
         "replacement",
         "l1",
         "warmup-frac",
+        "trials",
     ] {
         if args.get(flag).is_some() {
             eprintln!(

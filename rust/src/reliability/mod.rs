@@ -1,0 +1,464 @@
+//! NVM reliability modeling: stochastic fault injection, ECC accounting,
+//! write-endurance wear tracking, and graceful way retirement.
+//!
+//! The paper's EDP/area wins assume every write lands and every bit
+//! retains; real MRAM arrays fail stochastically. This module makes those
+//! failure mechanisms first-class:
+//!
+//! * [`RelSpec`] — the per-technology reliability block (`[rel]` in
+//!   `.tech` descriptors): per-cell write-error rate, retention time
+//!   constant `tau`, read-disturb rate, endurance budget, and ECC mode.
+//! * [`FaultState`] — the seeded fault injector the L2 simulation hot
+//!   path samples. Faults are classified per access at line granularity
+//!   against precomputed per-mechanism CDFs (exact under a per-64-bit-ECC-
+//!   word binomial model), so the hot-path cost is one `f64` draw per
+//!   sampled mechanism. RNG streams are **keyed by set index**, not by
+//!   worker id, and advance only on accesses to that set — the set-sharded
+//!   parallel replay preserves per-set access order, so sharded fault
+//!   counts equal sequential fault counts exactly for any worker count.
+//! * Wear tracking and retirement: every physical array write increments
+//!   the written way's wear counter; a way whose wear crosses the
+//!   endurance budget is retired at runtime (associativity shrinks, the
+//!   simulation continues degraded instead of being wrong).
+//!
+//! Fault-free runs (no `[rel]` block, or `--faults off`) take none of
+//! these paths and stay bit-identical to the pre-reliability golden
+//! counters.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::rng::Rng;
+
+/// Mean line residency window (s) the retention mechanism is evaluated
+/// over: the probability a resident bit flips before the *next* access to
+/// its line is `1 - exp(-window / tau)`. One nominal constant — a line-age
+/// tracker would be exact but puts a per-line timestamp in the hot path;
+/// at cache residencies (µs) against retention targets (ms..years) the
+/// first-order behaviour is captured by the fixed window.
+pub const RETENTION_WINDOW_S: f64 = 1.0e-6;
+
+/// Seconds per Julian year (for array-lifetime extrapolation).
+pub const SECONDS_PER_YEAR: f64 = 3.155_76e7;
+
+static FAULTS_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable fault injection (the CLI's `--faults on|off`).
+/// Technologies without a `[rel]` block never inject regardless.
+pub fn set_faults_enabled(on: bool) {
+    FAULTS_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether fault injection is globally enabled (default: enabled).
+pub fn faults_enabled() -> bool {
+    FAULTS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Error-correction layer modeled on top of the raw bit-error process,
+/// at 64-bit ECC word granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EccMode {
+    /// No correction: any flipped bit is consumed silently.
+    None,
+    /// Single-error-correct, double-error-detect per 64-bit word: one
+    /// flip corrects, two detect (and stall/refetch), three or more
+    /// escape silently.
+    Secded,
+}
+
+impl EccMode {
+    pub const ALL: [EccMode; 2] = [EccMode::None, EccMode::Secded];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EccMode::None => "none",
+            EccMode::Secded => "secded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EccMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" => Ok(EccMode::None),
+            "secded" => Ok(EccMode::Secded),
+            other => Err(format!("unknown ecc mode '{other}' (none|secded)")),
+        }
+    }
+}
+
+/// The reliability block of a technology descriptor (`[rel]` section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RelSpec {
+    /// Per-cell probability a write leaves the bit wrong (write error).
+    pub write_error_rate: f64,
+    /// Retention time constant τ (s): a resident bit flips within a
+    /// window `w` with probability `1 - exp(-w/τ)`.
+    pub retention_tau: f64,
+    /// Per-cell probability a read disturbs (flips) the bit it senses.
+    pub read_disturb_rate: f64,
+    /// Write-endurance budget (cycles) per cell before the way is
+    /// considered worn out and retired.
+    pub endurance_cycles: f64,
+    /// Error-correction layer.
+    pub ecc: EccMode,
+}
+
+impl RelSpec {
+    /// Representative STT-MRAM reliability card: write errors dominate
+    /// (thermally activated switching), seconds-class retention at the
+    /// relaxed-Δ cache corner, endurance in the 10¹² range. Illustrative
+    /// defaults for the `figRel` campaign, not a foundry datasheet.
+    pub fn stt_default() -> RelSpec {
+        RelSpec {
+            write_error_rate: 1.0e-7,
+            retention_tau: 1.0,
+            read_disturb_rate: 1.0e-12,
+            endurance_cycles: 4.0e12,
+            ecc: EccMode::Secded,
+        }
+    }
+
+    /// Representative SOT-MRAM reliability card: the decoupled write path
+    /// buys orders of magnitude on write error rate and endurance, and the
+    /// high-Δ free layer retains for years.
+    pub fn sot_default() -> RelSpec {
+        RelSpec {
+            write_error_rate: 1.0e-9,
+            retention_tau: 3.2e8,
+            read_disturb_rate: 1.0e-13,
+            endurance_cycles: 1.0e15,
+            ecc: EccMode::Secded,
+        }
+    }
+
+    /// Validate physical ranges. Errors name the offending key and value
+    /// in descriptor syntax (`[rel] key = value: why`).
+    pub fn validate(&self) -> Result<(), String> {
+        let prob = |key: &str, v: f64| -> Result<(), String> {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                return Err(format!(
+                    "[rel] {key} = {v}: must be a probability in [0, 1]"
+                ));
+            }
+            Ok(())
+        };
+        prob("write_error_rate", self.write_error_rate)?;
+        prob("read_disturb_rate", self.read_disturb_rate)?;
+        if !self.retention_tau.is_finite() || self.retention_tau <= 0.0 {
+            return Err(format!(
+                "[rel] retention_tau = {}: must be a positive time constant in seconds",
+                self.retention_tau
+            ));
+        }
+        if !self.endurance_cycles.is_finite() || self.endurance_cycles < 1.0 {
+            return Err(format!(
+                "[rel] endurance_cycles = {}: must be at least one write cycle",
+                self.endurance_cycles
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-bit error probability of one read: the sensed value is wrong
+    /// if the read disturbs it or it decayed since the last access.
+    pub fn read_bit_error(&self) -> f64 {
+        let retain = (-RETENTION_WINDOW_S / self.retention_tau).exp();
+        1.0 - (1.0 - self.read_disturb_rate) * retain
+    }
+}
+
+/// A fault-injection request: a reliability card plus the campaign seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub rel: RelSpec,
+    pub seed: u64,
+}
+
+/// Derive a decorrelated campaign seed for one Monte Carlo trial (or any
+/// other numbered stream) from a base seed. Same finalizer the injector
+/// uses for its per-set streams, so trial seeds and set streams never
+/// collide structurally.
+pub fn campaign_seed(base: u64, stream: u64) -> u64 {
+    mix(base, stream.wrapping_add(0x5EED_0000_0000_0000))
+}
+
+/// splitmix64 finalizer — decorrelates per-set RNG streams derived from
+/// one campaign seed.
+fn mix(seed: u64, set: u64) -> u64 {
+    let mut z = seed.wrapping_add(set.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Exact line-level fault CDF under a binomial per-bit error model with
+/// SECDED at 64-bit word granularity. For per-bit probability `p` the
+/// per-word multiplicities are `w0 = (1-p)^64` (clean), `w1 = 64·p·(1-p)^63`
+/// (one flip: corrected), `w2 = C(64,2)·p²·(1-p)^62` (two flips: detected);
+/// a line of `W` words is clean/correctable/detectable iff every word is.
+/// Returned as cumulative thresholds `[clean, ≤corrected, ≤detected]` for
+/// one uniform draw; without ECC every non-clean outcome is silent.
+fn line_cdf(p_bit: f64, line_bits: u64, ecc: EccMode) -> [f64; 3] {
+    let p = p_bit.clamp(0.0, 1.0);
+    let q = 1.0 - p;
+    let w0 = q.powi(64);
+    let w1 = 64.0 * p * q.powi(63);
+    let w2 = 2016.0 * p * p * q.powi(62);
+    let words = line_bits.div_ceil(64).max(1).min(i32::MAX as u64) as i32;
+    let clean = w0.powi(words);
+    match ecc {
+        EccMode::None => [clean, clean, clean],
+        EccMode::Secded => [clean, (w0 + w1).powi(words), (w0 + w1 + w2).powi(words)],
+    }
+}
+
+/// The runtime fault injector attached to one simulated L2: per-set RNG
+/// streams, per-(set, way) wear counters, per-set retirement bitmasks, and
+/// the ECC outcome counters. One instance per [`Hierarchy`]; under
+/// set-sharded replay each shard holds a full-geometry instance but only
+/// its own sets ever advance, so merged counters are exactly sequential.
+///
+/// [`Hierarchy`]: crate::gpusim::Hierarchy
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    read_cdf: [f64; 3],
+    write_cdf: [f64; 3],
+    /// Endurance budget in whole write cycles.
+    endurance: u64,
+    assoc: usize,
+    /// Full-set retirement mask (`assoc` low bits).
+    full_mask: u64,
+    /// One decorrelated stream per set, keyed by set index.
+    rngs: Vec<Rng>,
+    /// Physical array writes per (set, way) — `set * assoc + way`. This
+    /// counts wear (hit updates *and* line fills), a superset of the
+    /// energy counter `l2_array_writes` which charges demand writes only.
+    wear: Vec<u64>,
+    /// Per-set bitmask of retired ways.
+    retired: Vec<u64>,
+    /// Reads whose line came back with a correctable (single-bit/word)
+    /// error ECC repaired in flight.
+    pub corrected: u64,
+    /// Reads with a detected-but-uncorrectable error (refetch/stall).
+    pub detected: u64,
+    /// Errors that escaped the ECC layer undetected.
+    pub silent: u64,
+    /// Ways retired after crossing the endurance budget.
+    pub retired_ways: u64,
+}
+
+impl FaultState {
+    /// Build the injector for a cache of `sets × assoc` lines of
+    /// `line_bits` bits each.
+    pub fn new(config: &FaultConfig, sets: usize, assoc: usize, line_bits: u64) -> FaultState {
+        assert!(sets > 0 && assoc > 0 && assoc <= 64, "degenerate fault geometry");
+        let rel = config.rel;
+        FaultState {
+            read_cdf: line_cdf(rel.read_bit_error(), line_bits, rel.ecc),
+            write_cdf: line_cdf(rel.write_error_rate, line_bits, rel.ecc),
+            endurance: rel.endurance_cycles.min(u64::MAX as f64).max(1.0) as u64,
+            assoc,
+            full_mask: mask_of(assoc),
+            rngs: (0..sets).map(|s| Rng::new(mix(config.seed, s as u64))).collect(),
+            wear: vec![0; sets * assoc],
+            retired: vec![0; sets],
+            corrected: 0,
+            detected: 0,
+            silent: 0,
+            retired_ways: 0,
+        }
+    }
+
+    #[inline]
+    fn classify(&mut self, set: usize, cdf: [f64; 3]) {
+        // Always consume exactly one draw per sampled mechanism so the
+        // per-set stream position depends only on the set's access
+        // history, never on fault outcomes.
+        let u = self.rngs[set].f64();
+        if u < cdf[0] {
+            return;
+        }
+        if u < cdf[1] {
+            self.corrected += 1;
+        } else if u < cdf[2] {
+            self.detected += 1;
+        } else {
+            self.silent += 1;
+        }
+    }
+
+    /// Sample the read mechanism (retention decay + read disturb) for one
+    /// line read in `set`.
+    #[inline]
+    pub fn sample_read(&mut self, set: usize) {
+        let cdf = self.read_cdf;
+        self.classify(set, cdf);
+    }
+
+    /// Sample the write mechanism for one physical array write to
+    /// `(set, way)` and charge wear. Returns `true` when this write
+    /// crossed the endurance budget — the caller must retire the way.
+    #[inline]
+    pub fn sample_write(&mut self, set: usize, way: usize) -> bool {
+        let cdf = self.write_cdf;
+        self.classify(set, cdf);
+        let w = &mut self.wear[set * self.assoc + way];
+        *w += 1;
+        *w >= self.endurance && self.retired[set] & (1 << way) == 0
+    }
+
+    /// Mark `(set, way)` retired. Idempotent.
+    pub fn retire(&mut self, set: usize, way: usize) {
+        let bit = 1u64 << way;
+        if self.retired[set] & bit == 0 {
+            self.retired[set] |= bit;
+            self.retired_ways += 1;
+        }
+    }
+
+    #[inline]
+    pub fn is_retired(&self, set: usize, way: usize) -> bool {
+        self.retired[set] & (1 << way) != 0
+    }
+
+    /// Whether every way of `set` has been retired (the set is uncached).
+    #[inline]
+    pub fn all_retired(&self, set: usize) -> bool {
+        self.retired[set] == self.full_mask
+    }
+
+    /// Heaviest per-line write count observed — the wear-out pacemaker
+    /// array lifetime is extrapolated from.
+    pub fn max_wear(&self) -> u64 {
+        self.wear.iter().copied().max().unwrap_or(0)
+    }
+}
+
+fn mask_of(assoc: usize) -> u64 {
+    if assoc >= 64 { u64::MAX } else { (1u64 << assoc) - 1 }
+}
+
+/// Reliability roll-up of one evaluated design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RelEval {
+    /// Uncorrectable (silent) bit-error rate per bit read.
+    pub uber: f64,
+    /// Extrapolated array lifetime in years: the endurance budget divided
+    /// by the hottest line's write rate over the workload interval.
+    pub lifetime_years: f64,
+    pub corrected: u64,
+    pub detected: u64,
+    pub silent: u64,
+    pub retired_ways: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_is_monotone_and_degenerate_at_zero() {
+        let z = line_cdf(0.0, 1024, EccMode::Secded);
+        assert_eq!(z, [1.0, 1.0, 1.0], "p = 0 never faults");
+        let c = line_cdf(1e-4, 1024, EccMode::Secded);
+        assert!(c[0] < c[1] && c[1] < c[2] && c[2] < 1.0);
+        assert!(c[0] > 0.8, "1024 bits at 1e-4 are usually clean: {}", c[0]);
+        let none = line_cdf(1e-4, 1024, EccMode::None);
+        assert_eq!(none[0], none[1]);
+        assert_eq!(none[1], none[2]);
+        assert_eq!(none[0], c[0], "clean probability is ECC-independent");
+    }
+
+    #[test]
+    fn secded_absorbs_single_bit_errors() {
+        // At small p almost all faulty lines carry exactly one flipped
+        // bit, so SECDED turns nearly the whole fault mass into
+        // corrections: silent mass (1 - cdf[2]) must be orders of
+        // magnitude below raw fault mass (1 - cdf[0]).
+        let c = line_cdf(1e-6, 1024, EccMode::Secded);
+        let raw = 1.0 - c[0];
+        let silent = 1.0 - c[2];
+        assert!(silent < raw * 1e-6, "raw {raw:e} vs silent {silent:e}");
+    }
+
+    #[test]
+    fn validation_names_key_and_value() {
+        let mut r = RelSpec::stt_default();
+        assert!(r.validate().is_ok());
+        r.write_error_rate = -0.5;
+        let e = r.validate().unwrap_err();
+        assert!(e.contains("write_error_rate") && e.contains("-0.5"), "{e}");
+        r = RelSpec::stt_default();
+        r.read_disturb_rate = 1.5;
+        let e = r.validate().unwrap_err();
+        assert!(e.contains("read_disturb_rate") && e.contains("1.5"), "{e}");
+        r = RelSpec::stt_default();
+        r.retention_tau = 0.0;
+        assert!(r.validate().unwrap_err().contains("retention_tau"));
+        r = RelSpec::stt_default();
+        r.endurance_cycles = 0.0;
+        assert!(r.validate().unwrap_err().contains("endurance_cycles"));
+        r = RelSpec::stt_default();
+        r.retention_tau = f64::NAN;
+        assert!(r.validate().is_err(), "NaN tau must be rejected");
+    }
+
+    #[test]
+    fn ecc_modes_parse_back() {
+        for m in EccMode::ALL {
+            assert_eq!(EccMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(EccMode::parse("hamming").is_err());
+    }
+
+    #[test]
+    fn per_set_streams_are_set_keyed_and_order_only() {
+        let rel = RelSpec { write_error_rate: 0.3, ..RelSpec::stt_default() };
+        let cfg = FaultConfig { rel, seed: 7 };
+        // Interleaving accesses across sets must not change any set's
+        // stream: sampling sets [0,1,0,1] equals sampling [0,0] then [1,1].
+        let mut a = FaultState::new(&cfg, 4, 2, 1024);
+        for s in [0usize, 1, 0, 1] {
+            a.sample_write(s, 0);
+        }
+        let mut b = FaultState::new(&cfg, 4, 2, 1024);
+        for s in [0usize, 0, 1, 1] {
+            b.sample_write(s, 0);
+        }
+        assert_eq!(
+            (a.corrected, a.detected, a.silent),
+            (b.corrected, b.detected, b.silent)
+        );
+        assert_eq!(a.wear, [2, 0, 2, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn wear_crossing_triggers_retirement_once() {
+        let rel = RelSpec { endurance_cycles: 3.0, ..RelSpec::stt_default() };
+        let mut f = FaultState::new(&FaultConfig { rel, seed: 1 }, 2, 2, 1024);
+        assert!(!f.sample_write(0, 1));
+        assert!(!f.sample_write(0, 1));
+        assert!(f.sample_write(0, 1), "third write crosses the budget");
+        f.retire(0, 1);
+        assert!(f.is_retired(0, 1) && !f.is_retired(0, 0));
+        assert!(!f.sample_write(0, 1), "already retired: no re-trigger");
+        assert_eq!(f.retired_ways, 1);
+        f.retire(0, 1);
+        assert_eq!(f.retired_ways, 1, "retire is idempotent");
+        assert!(!f.all_retired(0));
+        f.retire(0, 0);
+        assert!(f.all_retired(0));
+        assert_eq!(f.max_wear(), 4);
+    }
+
+    #[test]
+    fn read_bit_error_combines_disturb_and_retention() {
+        let r = RelSpec {
+            retention_tau: RETENTION_WINDOW_S,
+            read_disturb_rate: 0.0,
+            ..RelSpec::stt_default()
+        };
+        let p = r.read_bit_error();
+        assert!((p - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+        let sot = RelSpec::sot_default().read_bit_error();
+        assert!(sot < 1e-12, "years-class tau barely decays: {sot:e}");
+    }
+}

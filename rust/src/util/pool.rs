@@ -48,6 +48,18 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec
     par_map_indexed(items, |_, item| f(item))
 }
 
+/// Render a caught panic payload as a message (panics carry `&str` or
+/// `String` payloads in practice; anything else gets a placeholder).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Like [`par_map`] but the closure also receives the item index.
 ///
 /// Results land in a preallocated buffer via **chunked ownership**: the
@@ -56,17 +68,39 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec
 /// chunk instead of the old per-item `Mutex<Option<R>>` (one allocation
 /// and two lock ops per element, which dominated large sweeps). Chunks are
 /// oversubscribed 4× the worker count so uneven items still balance.
+///
+/// # Panics
+///
+/// A panic in `f` is caught per chunk: the remaining chunks still drain
+/// (no worker dies holding the queue lock, so no poison cascade and no
+/// silent half-filled result), then `par_map` aborts with a structured
+/// message naming the poisoned chunk and its item range. The sequential
+/// fallback raises the same shape, so callers see one failure mode
+/// regardless of core count.
 pub fn par_map_indexed<T: Sync, R: Send>(
     items: &[T],
     f: impl Fn(usize, &T) -> R + Sync,
 ) -> Vec<R> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = num_threads().min(n);
     if workers <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        let mut out = Vec::with_capacity(n);
+        for (i, t) in items.iter().enumerate() {
+            match catch_unwind(AssertUnwindSafe(|| f(i, t))) {
+                Ok(r) => out.push(r),
+                Err(payload) => panic!(
+                    "par_map: chunk {i} (items {i}..{}) panicked: {}",
+                    i + 1,
+                    panic_message(payload)
+                ),
+            }
+        }
+        return out;
     }
     let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
@@ -78,22 +112,50 @@ pub fn par_map_indexed<T: Sync, R: Send>(
             .map(|(c, range)| (c * chunk, range))
             .collect(),
     );
+    // (chunk index, first item, one-past-last item, panic message) per
+    // poisoned chunk.
+    let failures: Mutex<Vec<(usize, usize, usize, String)>> = Mutex::new(Vec::new());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
                 IN_WORKER.with(|c| c.set(true));
                 loop {
-                    let Some((start, range)) = queue.lock().unwrap().pop() else {
+                    // Tolerate the poison flag: a panicking closure is
+                    // caught below, but being robust here costs nothing.
+                    let popped = queue.lock().unwrap_or_else(|e| e.into_inner()).pop();
+                    let Some((start, range)) = popped else {
                         break;
                     };
-                    for (off, slot) in range.iter_mut().enumerate() {
-                        *slot = Some(f(start + off, &items[start + off]));
+                    let len = range.len();
+                    // AssertUnwindSafe: on a caught panic the whole map
+                    // aborts, so nobody observes the half-written chunk.
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        for (off, slot) in range.iter_mut().enumerate() {
+                            *slot = Some(f(start + off, &items[start + off]));
+                        }
+                    }));
+                    if let Err(payload) = run {
+                        failures
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .push((start / chunk, start, start + len, panic_message(payload)));
                     }
                 }
             });
         }
     });
     drop(queue);
+    let mut failures = failures.into_inner().unwrap_or_else(|e| e.into_inner());
+    if !failures.is_empty() {
+        failures.sort();
+        let more = if failures.len() > 1 {
+            format!(" (+{} more poisoned chunks)", failures.len() - 1)
+        } else {
+            String::new()
+        };
+        let (c, a, b, why) = &failures[0];
+        panic!("par_map: chunk {c} (items {a}..{b}) panicked: {why}{more}");
+    }
     slots
         .into_iter()
         .map(|s| s.expect("worker filled every slot"))
@@ -139,6 +201,43 @@ mod tests {
     fn thread_env_override_is_respected() {
         // num_threads() >= 1 always; with env set it parses.
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked: boom")]
+    fn poisoned_chunk_aborts_loudly() {
+        let items: Vec<u32> = (0..64).collect();
+        let _ = par_map(&items, |&x| {
+            if x == 13 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn poisoned_chunk_abort_names_chunk_and_item_range() {
+        let items: Vec<u32> = (0..64).collect();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par_map(&items, |&x| {
+                if x >= 32 {
+                    panic!("shard died");
+                }
+                x
+            })
+        }))
+        .unwrap_err();
+        let msg = panic_message(err);
+        assert!(msg.starts_with("par_map: chunk "), "{msg}");
+        assert!(msg.contains("items "), "{msg}");
+        assert!(msg.contains("panicked: shard died"), "{msg}");
+    }
+
+    #[test]
+    fn panic_payloads_render_as_messages() {
+        assert_eq!(panic_message(Box::new("static")), "static");
+        assert_eq!(panic_message(Box::new(String::from("owned"))), "owned");
+        assert_eq!(panic_message(Box::new(42u32)), "non-string panic payload");
     }
 
     #[test]

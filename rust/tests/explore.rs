@@ -264,6 +264,45 @@ fn random_and_adaptive_replay_exactly_under_a_seed() {
     assert!(r.outcome.evaluated.len() <= 6);
 }
 
+/// Reliability objectives ride the same machinery: candidates on a
+/// `[rel]` technology carry lifetime/uber roll-ups, rel-free candidates
+/// are skipped with an explanation, and `rel.*` spec axes derive
+/// retention-relaxed variants.
+#[test]
+fn reliability_objectives_explore_end_to_end() {
+    use deepnvm::engine::TechSpec;
+    use deepnvm::reliability::RelSpec;
+    let engine = Engine::new();
+    let mut faulty = TechSpec::stt();
+    faulty.id = "stt_rel".into();
+    faulty.name = "STT-rel".into();
+    faulty.rel = Some(RelSpec::stt_default());
+    engine.register(faulty).unwrap();
+    let space = Space::new()
+        .tech(["stt_rel", "stt"])
+        .capacity_mb([2])
+        .workload([alexnet_i()])
+        .batch([1]);
+    let objectives = [Objective::Edp, Objective::Lifetime, Objective::Uber];
+    let r = explore::run(&engine, &space, &objectives, &SearchConfig::default()).unwrap();
+    assert_eq!(r.outcome.evaluated.len(), 1, "{:?}", r.outcome.errors);
+    assert_eq!(r.outcome.errors.len(), 1, "rel-free stt skips with an explanation");
+    assert!(r.outcome.errors[0].1.contains("reliability roll-up"), "{:?}", r.outcome.errors);
+    let objs = &r.outcome.evaluated[0].objectives;
+    assert!(objs[1] > 0.0 && objs[1].is_finite(), "lifetime years: {objs:?}");
+    assert!(objs[2] >= 0.0, "uber: {objs:?}");
+
+    let relaxed = Space::new()
+        .tech(["stt_rel"])
+        .capacity_mb([2])
+        .workload([alexnet_i()])
+        .batch([1])
+        .spec_axis("rel.retention_tau", [1.0, 0.5]);
+    let r2 = explore::run(&engine, &relaxed, &objectives, &SearchConfig::default()).unwrap();
+    assert_eq!(r2.outcome.evaluated.len(), 2, "{:?}", r2.outcome.errors);
+    assert!(engine.tech("stt_rel+rel.retention_tau=0.5").is_some(), "derived tech registered");
+}
+
 /// `[space]` descriptor text drives the full pipeline: a custom
 /// technology plus a space over it, in one file, end to end.
 #[test]

@@ -1,0 +1,479 @@
+#!/usr/bin/env python3
+"""Reference mirror + fuzz harness for the fault-injection subsystem.
+
+Ports the risk-bearing algorithms of `deepnvm::reliability` and the
+fault hooks in `deepnvm::gpusim::cache` to Python in exact u64
+arithmetic (same spirit as goldgen.py), then fuzzes the invariants the
+Rust tests pin:
+
+  1. Set-sharded replay merges to *bit-identical* fault and cache
+     counters for any partition of the sets (the per-set RNG streams are
+     keyed by set index, never by shard).
+  2. An armed-but-benign injector (p = 0, huge endurance) is invisible:
+     cache counters match the unarmed cache exactly.
+  3. ECC mass conservation: under one seed, `None`-mode silent events
+     equal the Secded corrected+detected+silent total (classification
+     re-buckets the same draws; it never creates or destroys events).
+  4. Wear/retirement mechanics: wear counts every physical array write,
+     ways retire exactly once at the endurance crossing, a fully retired
+     set degrades to fill-less misses.
+  5. `campaign_seed` streams are decorrelated and replay-stable.
+  6. `line_cdf` is a monotone CDF, degenerate at p = 0.
+
+Run: python3 tools/relgen.py  (from rust/; no deps beyond stdlib)
+"""
+
+import math
+import random
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E37_79B9_7F4A_7C15
+
+# ---------------------------------------------------------------- RNG --
+
+
+class Rng:
+    """xorshift64* — mirror of util/rng.rs in exact u64 arithmetic."""
+
+    def __init__(self, seed):
+        self.state = seed if seed != 0 else GOLDEN
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545_F491_4F6C_DD1D) & MASK
+
+    def f64(self):
+        return (self.next_u64() >> 11) * 2.0**-53
+
+
+def mix(seed, stream):
+    """splitmix64 finalizer — mirror of reliability::mix."""
+    z = (seed + (stream * GOLDEN & MASK)) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK
+    return z ^ (z >> 31)
+
+
+def campaign_seed(base, stream):
+    return mix(base, (stream + 0x5EED_0000_0000_0000) & MASK)
+
+
+# ---------------------------------------------------- fault model --
+
+
+def powi(x, n):
+    """Exponentiation by squaring — mirrors f64::powi rounding."""
+    acc = 1.0
+    base = x
+    while n > 0:
+        if n & 1:
+            acc *= base
+        base *= base
+        n >>= 1
+    return acc
+
+
+def line_cdf(p_bit, line_bits, ecc):
+    p = min(max(p_bit, 0.0), 1.0)
+    q = 1.0 - p
+    w0 = powi(q, 64)
+    w1 = 64.0 * p * powi(q, 63)
+    w2 = 2016.0 * p * p * powi(q, 62)
+    words = max((line_bits + 63) // 64, 1)
+    clean = powi(w0, words)
+    if ecc == "none":
+        return [clean, clean, clean]
+    return [clean, powi(w0 + w1, words), powi(w0 + w1 + w2, words)]
+
+
+RETENTION_WINDOW_S = 1.0e-6
+
+
+class RelSpec:
+    def __init__(self, write_error_rate, retention_tau, read_disturb_rate,
+                 endurance_cycles, ecc):
+        self.write_error_rate = write_error_rate
+        self.retention_tau = retention_tau
+        self.read_disturb_rate = read_disturb_rate
+        self.endurance_cycles = endurance_cycles
+        self.ecc = ecc
+
+    def read_bit_error(self):
+        retain = math.exp(-RETENTION_WINDOW_S / self.retention_tau)
+        return 1.0 - (1.0 - self.read_disturb_rate) * retain
+
+
+class FaultState:
+    """Mirror of reliability::FaultState (per-set streams, wear, masks)."""
+
+    def __init__(self, rel, seed, sets, assoc, line_bits):
+        assert sets > 0 and 0 < assoc <= 64
+        self.read_cdf = line_cdf(rel.read_bit_error(), line_bits, rel.ecc)
+        self.write_cdf = line_cdf(rel.write_error_rate, line_bits, rel.ecc)
+        self.endurance = int(min(max(rel.endurance_cycles, 1.0), float(MASK)))
+        self.assoc = assoc
+        self.full_mask = MASK if assoc >= 64 else (1 << assoc) - 1
+        self.rngs = [Rng(mix(seed, s)) for s in range(sets)]
+        self.wear = [0] * (sets * assoc)
+        self.retired = [0] * sets
+        self.corrected = 0
+        self.detected = 0
+        self.silent = 0
+        self.retired_ways = 0
+
+    def classify(self, set_, cdf):
+        u = self.rngs[set_].f64()
+        if u < cdf[0]:
+            return
+        if u < cdf[1]:
+            self.corrected += 1
+        elif u < cdf[2]:
+            self.detected += 1
+        else:
+            self.silent += 1
+
+    def sample_read(self, set_):
+        self.classify(set_, self.read_cdf)
+
+    def sample_write(self, set_, way):
+        self.classify(set_, self.write_cdf)
+        i = set_ * self.assoc + way
+        self.wear[i] += 1
+        return self.wear[i] >= self.endurance and self.retired[set_] & (1 << way) == 0
+
+    def retire(self, set_, way):
+        bit = 1 << way
+        if self.retired[set_] & bit == 0:
+            self.retired[set_] |= bit
+            self.retired_ways += 1
+
+    def is_retired(self, set_, way):
+        return self.retired[set_] & (1 << way) != 0
+
+    def all_retired(self, set_):
+        return self.retired[set_] == self.full_mask
+
+    def max_wear(self):
+        return max(self.wear) if self.wear else 0
+
+
+# ------------------------------------------------------------- cache --
+
+EMPTY = -1
+RETIRED = -2
+
+
+class TrueLru:
+    def __init__(self, sets, assoc):
+        self.assoc = assoc
+        self.tick = 0
+        self.lru = [0] * (sets * assoc)
+
+    def touch(self, set_, way):
+        self.tick += 1
+        self.lru[set_ * self.assoc + way] = self.tick
+
+    def fill(self, set_, way):
+        self.touch(set_, way)
+
+    def victim(self, set_):
+        base = set_ * self.assoc
+        best, best_lru = 0, None
+        for i in range(self.assoc):
+            l = self.lru[base + i]
+            if best_lru is None or l < best_lru:
+                best_lru, best = l, i
+        return best
+
+
+class Cache:
+    """Mirror of PolicyCache<TrueLru> incl. the fault hooks in access()."""
+
+    def __init__(self, capacity, line, assoc, write="wb"):
+        assert capacity % (line * assoc) == 0
+        self.sets = (capacity // line) // assoc
+        self.assoc = assoc
+        self.line = line
+        self.write = write
+        self.tags = [EMPTY] * (self.sets * assoc)
+        self.dirty = [0] * self.sets
+        self.policy = TrueLru(self.sets, assoc)
+        self.faults = None
+        self.hits = self.misses = self.writebacks = 0
+        self.write_hits = self.write_misses = 0
+        self.array_writes = self.fills = self.direct_writes = 0
+
+    def set_of(self, addr):
+        line_addr = addr // self.line
+        return line_addr % self.sets, line_addr
+
+    def access(self, addr, is_write):
+        set_, tag = self.set_of(addr)
+        base = set_ * self.assoc
+
+        if self.faults is not None and self.faults.all_retired(set_):
+            self.misses += 1
+            if is_write:
+                self.write_misses += 1
+                self.direct_writes += 1
+            return "miss"
+
+        hit_way = empty_way = None
+        for i in range(self.assoc):
+            t = self.tags[base + i]
+            if t == tag:
+                hit_way = i
+                break
+            if t == EMPTY:
+                empty_way = i
+                break
+
+        if hit_way is not None:
+            self.policy.touch(set_, hit_way)
+            self.hits += 1
+            if is_write:
+                self.write_hits += 1
+                self.array_writes += 1
+                if self.write in ("wb", "bypass"):
+                    self.dirty[set_] |= 1 << hit_way
+                else:
+                    self.direct_writes += 1
+                if self.faults is not None and self.faults.sample_write(set_, hit_way):
+                    self.retire_way(set_, hit_way)
+            elif self.faults is not None:
+                self.faults.sample_read(set_)
+            return "hit"
+
+        self.misses += 1
+        if is_write:
+            self.write_misses += 1
+            if self.write != "wb":
+                self.direct_writes += 1
+                return "miss"
+
+        self.fills += 1
+        way = empty_way if empty_way is not None else self.live_victim(set_)
+        dirty_evict = (self.dirty[set_] >> way) & 1 == 1
+        if dirty_evict:
+            self.writebacks += 1
+        self.tags[base + way] = tag
+        self.policy.fill(set_, way)
+        if is_write:
+            self.array_writes += 1
+            self.dirty[set_] |= 1 << way
+        else:
+            self.dirty[set_] &= ~(1 << way)
+        if self.faults is not None and self.faults.sample_write(set_, way):
+            self.retire_way(set_, way)
+        return "miss_dirty_evict" if dirty_evict else "miss"
+
+    def live_victim(self, set_):
+        if self.faults is None or self.faults.retired_ways == 0:
+            return self.policy.victim(set_)
+        for _ in range(4 * self.assoc):
+            way = self.policy.victim(set_)
+            if self.faults.is_retired(set_, way):
+                self.policy.touch(set_, way)
+            else:
+                return way
+        for w in range(self.assoc):
+            if not self.faults.is_retired(set_, w):
+                return w
+        raise AssertionError("fully-retired sets never allocate")
+
+    def retire_way(self, set_, way):
+        if (self.dirty[set_] >> way) & 1 == 1:
+            self.writebacks += 1
+            self.dirty[set_] &= ~(1 << way)
+        self.tags[set_ * self.assoc + way] = RETIRED
+        self.faults.retire(set_, way)
+
+    def counters(self):
+        return (self.hits, self.misses, self.writebacks, self.write_hits,
+                self.write_misses, self.array_writes, self.fills,
+                self.direct_writes)
+
+
+# ----------------------------------------------------------- harness --
+
+
+def run(trace, capacity, line, assoc, write, rel, seed):
+    """Sequential reference run; returns (counters, faults-or-None)."""
+    c = Cache(capacity, line, assoc, write)
+    if rel is not None:
+        c.faults = FaultState(rel, seed, c.sets, assoc, line * 8)
+    for addr, is_write in trace:
+        c.access(addr, is_write)
+    return c
+
+
+def run_sharded(trace, capacity, line, assoc, write, rel, seed, owner):
+    """Set-sharded replay: `owner(set) -> shard`. Each shard holds a
+    full-geometry cache + injector but only replays its own sets, in
+    trace order — the mirror of sim.rs's partitioned replay."""
+    probe = Cache(capacity, line, assoc, write)
+    shards = {}
+    for addr, is_write in trace:
+        set_, _ = probe.set_of(addr)
+        k = owner(set_)
+        if k not in shards:
+            shards[k] = ([], Cache(capacity, line, assoc, write))
+            shards[k][1].faults = FaultState(rel, seed, probe.sets, assoc, line * 8)
+        shards[k][0].append((addr, is_write))
+    for sub, c in shards.values():
+        for addr, is_write in sub:
+            c.access(addr, is_write)
+    # Merge: counters and fault tallies sum (state is set-local and the
+    # partition is disjoint); wear merges element-wise, max_wear by max.
+    merged = [0] * 8
+    f_sum = [0, 0, 0, 0]
+    wear = [0] * (probe.sets * assoc)
+    retired = [0] * probe.sets
+    for _, c in shards.values():
+        for i, v in enumerate(c.counters()):
+            merged[i] += v
+        f = c.faults
+        for i, v in enumerate((f.corrected, f.detected, f.silent, f.retired_ways)):
+            f_sum[i] += v
+        for i, w in enumerate(f.wear):
+            wear[i] += w
+        for i, m in enumerate(f.retired):
+            retired[i] |= m
+    return tuple(merged), tuple(f_sum), wear, retired
+
+
+def mk_trace(rnd, n, span, write_frac, hot=None):
+    """Random trace; `hot=(addr, frac)` skews a fraction onto one line."""
+    out = []
+    for _ in range(n):
+        if hot and rnd.random() < hot[1]:
+            addr = hot[0]
+        else:
+            addr = rnd.randrange(span)
+        out.append((addr, rnd.random() < write_frac))
+    return out
+
+
+def fault_tuple(f):
+    return (f.corrected, f.detected, f.silent, f.retired_ways)
+
+
+def check_shard_equality(rnd):
+    cases = 0
+    for capacity, line, assoc in [(4096, 128, 2), (16384, 128, 4), (32768, 64, 8)]:
+        sets = (capacity // line) // assoc
+        for write in ("wb", "wt", "bypass"):
+            for endurance in (12.0, 1e12):
+                rel = RelSpec(2e-3, 1e-7, 1e-4, endurance, "secded")
+                seed = rnd.getrandbits(64)
+                trace = mk_trace(rnd, 4000, capacity * 4, 0.4)
+                ref = run(trace, capacity, line, assoc, write, rel, seed)
+                partitions = [lambda s, k=k: s % k for k in (2, 3, 7)]
+                assign = [rnd.randrange(5) for _ in range(sets)]
+                partitions.append(lambda s: assign[s])
+                for owner in partitions:
+                    ctr, fs, wear, retired = run_sharded(
+                        trace, capacity, line, assoc, write, rel, seed, owner)
+                    assert ctr == ref.counters(), (write, endurance, ctr, ref.counters())
+                    assert fs == fault_tuple(ref.faults), (write, endurance, fs)
+                    assert wear == ref.faults.wear
+                    assert retired == ref.faults.retired
+                    assert max(wear) == ref.faults.max_wear()
+                    cases += 1
+    print(f"PASS shard equality: {cases} partition cases bit-identical")
+
+
+def check_benign_armed(rnd):
+    rel = RelSpec(0.0, 10.0, 0.0, 1e18, "secded")
+    for write in ("wb", "wt", "bypass"):
+        trace = mk_trace(rnd, 3000, 65536, 0.5)
+        plain = run(trace, 16384, 128, 4, write, None, 0)
+        armed = run(trace, 16384, 128, 4, write, rel, 123)
+        assert armed.counters() == plain.counters(), write
+        assert fault_tuple(armed.faults) == (0, 0, 0, 0)
+    print("PASS benign armed == unarmed: cache counters identical, zero events")
+
+
+def check_ecc_conservation(rnd):
+    for _ in range(6):
+        seed = rnd.getrandbits(64)
+        trace = mk_trace(rnd, 3000, 65536, 0.5)
+        sec = RelSpec(5e-3, 1e-7, 1e-3, 1e12, "secded")
+        raw = RelSpec(5e-3, 1e-7, 1e-3, 1e12, "none")
+        a = run(trace, 16384, 128, 4, "wb", sec, seed).faults
+        b = run(trace, 16384, 128, 4, "wb", raw, seed).faults
+        assert a.corrected + a.detected + a.silent == b.silent, (
+            fault_tuple(a), fault_tuple(b))
+        assert a.wear == b.wear, "ECC mode must not perturb wear"
+    print("PASS ECC mass conservation: none.silent == secded total, wear invariant")
+
+
+def check_retirement(rnd):
+    capacity, line, assoc = 2048, 128, 4  # 4 sets x 4 ways
+    rel = RelSpec(1e-6, 1.0, 1e-9, 6.0, "secded")
+    seed = 42
+    # Hammer writes across one set's address images until it fully wears.
+    sets = (capacity // line) // assoc
+    hot_set = 1
+    trace = [((hot_set + k * sets) * line, True) for k in range(64) for _ in range(8)]
+    c = run(trace, capacity, line, assoc, "wb", rel, seed)
+    f = c.faults
+    assert f.all_retired(hot_set), "hammered set must fully retire"
+    assert f.retired_ways == assoc
+    assert all(f.wear[hot_set * assoc + w] >= f.endurance for w in range(assoc))
+    popcount = sum(bin(m).count("1") for m in f.retired)
+    assert popcount == f.retired_ways
+    # Degraded mode: further accesses miss without filling.
+    fills0, misses0, direct0 = c.fills, c.misses, c.direct_writes
+    c.access(hot_set * line, True)
+    c.access(hot_set * line, False)
+    assert c.fills == fills0, "degraded set must not fill"
+    assert c.misses == misses0 + 2
+    assert c.direct_writes == direct0 + 1, "degraded write goes straight to DRAM"
+    print("PASS retirement: endurance crossing retires, full set degrades")
+
+
+def check_campaign_seed():
+    base = 0x5EED_CAFE
+    streams = [campaign_seed(base, s) for s in range(64)]
+    assert len(set(streams)) == 64, "campaign streams collided"
+    assert streams == [campaign_seed(base, s) for s in range(64)], "not replayable"
+    rnd = random.Random(7)
+    trace = mk_trace(rnd, 2000, 65536, 0.5)
+    rel = RelSpec(2e-3, 1e-7, 1e-4, 1e12, "secded")
+    a = fault_tuple(run(trace, 16384, 128, 4, "wb", rel, streams[0]).faults)
+    b = fault_tuple(run(trace, 16384, 128, 4, "wb", rel, streams[1]).faults)
+    assert a != b, "two trials sampled the same realization"
+    assert a == fault_tuple(run(trace, 16384, 128, 4, "wb", rel, streams[0]).faults)
+    print("PASS campaign_seed: 64 distinct replay-stable streams, trials diverge")
+
+
+def check_cdf(rnd):
+    assert line_cdf(0.0, 1024, "secded") == [1.0, 1.0, 1.0]
+    for _ in range(2000):
+        p = rnd.random() * 1e-2
+        bits = rnd.choice([64, 512, 1024, 4096])
+        c = line_cdf(p, bits, "secded")
+        assert 0.0 <= c[0] <= c[1] <= c[2] <= 1.0, (p, bits, c)
+        n = line_cdf(p, bits, "none")
+        assert n[0] == n[1] == n[2] == c[0], "clean mass is ECC-independent"
+    print("PASS line_cdf: monotone CDF over 2000 fuzz points, p=0 degenerate")
+
+
+def main():
+    rnd = random.Random(0xDEE9)
+    check_cdf(rnd)
+    check_campaign_seed()
+    check_benign_armed(rnd)
+    check_ecc_conservation(rnd)
+    check_retirement(rnd)
+    check_shard_equality(rnd)
+    print("all reliability-mirror invariants hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+//! Main-memory backend overhead benchmarks (custom harness; §Perf record).
+//!
+//! The headline pair is `mem: fixed-latency accesses/sec` vs `mem:
+//! dram-model accesses/sec` on the AlexNet batch-4 trace (CI asserts both
+//! keys exist in `BENCH_mem.json`). The bench also *asserts* the contract
+//! the subsystem is built on: with the fixed-latency backend, the
+//! backend-aware entry point must replay within 2% of the plain sharded
+//! simulator (it is the same hot path — the backend is an enum
+//! discriminant checked per access) and produce bit-identical counters,
+//! and sharded banked replay must match sequential banked replay exactly.
+//!
+//! Results print to stdout and land in `BENCH_mem.json` (override the
+//! path with `DEEPNVM_BENCH_MEM_JSON`).
+
+use std::hint::black_box;
+
+use deepnvm::gpusim::{
+    net_trace, simulate_backend, simulate_sharded, Access, CacheConfig, GpuConfig,
+};
+use deepnvm::membackend::{DramConfig, MemBackendConfig};
+use deepnvm::util::bench::BenchHarness;
+use deepnvm::util::pool::num_threads;
+use deepnvm::workloads::nets;
+
+fn main() {
+    println!("== main-memory backend benchmarks ==");
+    let mut h = BenchHarness::new();
+
+    let net = nets::alexnet();
+    let trace: Vec<Access> = net_trace(&net, 4).collect();
+    let n = trace.len() as f64;
+    let gpu = GpuConfig::gtx_1080_ti();
+    let cache = CacheConfig::default();
+    let threads = num_threads();
+    let fixed = MemBackendConfig::FixedLatency;
+    let dram = MemBackendConfig::Dram(DramConfig::default());
+    println!("alexnet b4 trace: {} accesses, {threads} worker threads", trace.len());
+
+    // Two interleaved rounds per side, best-of for the overhead check:
+    // both sides run the identical sharded code path (the backend slot
+    // holds the no-op device), so the assertion tolerance only has to
+    // absorb scheduler noise.
+    let base = h
+        .bench("mem: plain sharded simulate (AlexNet b4)", 3, || {
+            black_box(simulate_sharded(trace.iter().copied(), &gpu, cache, 0, threads));
+        })
+        .min(h.bench("mem: plain sharded simulate (round 2)", 3, || {
+            black_box(simulate_sharded(trace.iter().copied(), &gpu, cache, 0, threads));
+        }));
+    let fixed_t = h
+        .bench("mem: fixed-latency replay (backend armed)", 3, || {
+            black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &fixed));
+        })
+        .min(h.bench("mem: fixed-latency replay (round 2)", 3, || {
+            black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &fixed));
+        }));
+    h.record("mem: fixed-latency accesses/sec", n / fixed_t.max(1e-12));
+    let overhead = fixed_t / base.max(1e-12) - 1.0;
+    h.record("mem: fixed-latency overhead frac", overhead);
+    println!("  -> fixed-latency overhead vs plain sharded simulate: {:.2}%", overhead * 100.0);
+    assert!(
+        overhead <= 0.02,
+        "fixed-latency replay must stay within 2% of the plain simulator (got {:.2}%)",
+        overhead * 100.0
+    );
+
+    // The banked path: address decode + open-row bookkeeping per miss
+    // and writeback (hits never reach the backend).
+    let banked = h.bench("mem: banked replay (default card, sequential)", 3, || {
+        black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, 1, &dram));
+    });
+    h.record("mem: dram-model accesses/sec", n / banked.max(1e-12));
+    println!(
+        "  -> banked-model cost: x{:.2} vs fixed-latency ({:.2}M vs {:.2}M accesses/sec)",
+        banked / fixed_t.max(1e-12),
+        n / banked / 1e6,
+        n / fixed_t / 1e6
+    );
+    let sharded = h.bench("mem: banked replay (default card, sharded)", 3, || {
+        black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &dram));
+    });
+    h.record("mem: dram-model sharded accesses/sec", n / sharded.max(1e-12));
+
+    // Exactness double-checks while we are here: the bench must never
+    // record a throughput for a backend path that drifted.
+    let a = simulate_sharded(trace.iter().copied(), &gpu, cache, 0, threads);
+    let b = simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &fixed);
+    assert_eq!(a, b, "fixed-latency backend replay must match the plain simulator");
+    let seq = simulate_backend(trace.iter().copied(), &gpu, cache, 0, 1, &dram);
+    let par = simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &dram);
+    assert_eq!(seq, par, "sharded banked counters must match sequential exactly");
+    assert!(seq.dram.accesses() > 0, "the banked model must observe the miss stream");
+
+    h.write_json("DEEPNVM_BENCH_MEM_JSON", "BENCH_mem.json");
+}

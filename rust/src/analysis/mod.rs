@@ -16,4 +16,4 @@ pub mod isocapacity;
 pub mod model;
 pub mod scalability;
 
-pub use model::{evaluate, Evaluation};
+pub use model::{evaluate, evaluate_with_dram, Evaluation};

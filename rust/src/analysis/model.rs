@@ -10,6 +10,7 @@
 //! per-transaction energy.
 
 use crate::gpusim::SimResult;
+use crate::membackend::{DramConfig, DramStats};
 use crate::nvsim::cache::CachePpa;
 use crate::reliability::{RelEval, RelSpec, SECONDS_PER_YEAR};
 use crate::workloads::memstats::{MemStats, TRANS_BYTES as SECTOR_BYTES};
@@ -157,6 +158,50 @@ pub fn evaluate(ppa: &CachePpa, stats: &MemStats) -> Evaluation {
     }
 }
 
+/// [`evaluate`] with the banked-DRAM observation of a
+/// [`crate::membackend::DramModel`] run: the flat bandwidth/flat-energy
+/// DRAM term is replaced by row-class latencies and energies from the
+/// model's counters, a queue penalty for bank imbalance, the card's
+/// per-access read/write energies (the NVM-DIMM knobs), and its
+/// background (refresh/standby) power integrated over the workload's
+/// total runtime. The cache-side terms are identical to [`evaluate`],
+/// and an all-zero `dram` (a fixed-latency run) falls back to it
+/// exactly, so LLC-only results are unchanged.
+///
+/// The background-power term makes the DRAM energy
+/// technology-dependent even at iso-capacity (where the miss streams
+/// are identical): a slower cache keeps the DIMM powered longer.
+pub fn evaluate_with_dram(
+    ppa: &CachePpa,
+    stats: &MemStats,
+    dram: &DramStats,
+    card: &DramConfig,
+) -> Evaluation {
+    let base = evaluate(ppa, stats);
+    if dram.accesses() == 0 {
+        return base;
+    }
+    // Row-class service time, serialized per channel (ideal channel
+    // parallelism), plus one column access of wait per queued line —
+    // per-bank occupancy beyond the fair share (FR-FCFS approximation).
+    let service = dram.row_hits as f64 * card.t_row_hit
+        + dram.row_misses as f64 * card.t_row_miss
+        + dram.row_conflicts as f64 * card.t_row_conflict;
+    let dram_time =
+        service / f64::from(card.channels) + dram.queue_excess() as f64 * card.t_row_hit;
+    let access_energy = dram.row_hits as f64 * card.e_row_hit
+        + dram.row_misses as f64 * card.e_row_miss
+        + dram.row_conflicts as f64 * card.e_row_conflict
+        + dram.reads as f64 * card.e_read
+        + dram.writes as f64 * card.e_write;
+    let dram_energy = access_energy + card.leakage_w * (base.cache_time + dram_time);
+    Evaluation {
+        dram_energy,
+        dram_time,
+        ..base
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,6 +296,7 @@ mod tests {
             faults_silent: 0,
             retired_ways: 0,
             max_line_writes: 0,
+            dram: DramStats::default(),
             l1: None,
         };
         let idle = rel_from_sim(&rel, &sim, 1024, 1.0);
@@ -273,6 +319,42 @@ mod tests {
         sim.max_line_writes = 200;
         let faster = rel_from_sim(&rel, &sim, 1024, 2.0);
         assert!((faster.lifetime_years - expect / 2.0).abs() < 1e-9 * expect);
+    }
+
+    #[test]
+    fn dram_rollup_is_nonzero_and_technology_dependent() {
+        use crate::gpusim::{net_trace, simulate_backend, CacheConfig, GpuConfig};
+        use crate::membackend::MemBackendConfig;
+        use crate::workloads::nets;
+        let gpu = GpuConfig::gtx_1080_ti();
+        let card = DramConfig::default();
+        let sim = simulate_backend(
+            net_trace(&nets::squeezenet(), 1),
+            &gpu,
+            CacheConfig::default(),
+            0,
+            8,
+            &MemBackendConfig::Dram(card),
+        );
+        let stats = stats_from_sim(&sim, gpu.l2_line);
+        let sram = tuned_cache(BitcellKind::Sram, 3 * MB).ppa;
+        let sot = tuned_cache(BitcellKind::SotMram, 3 * MB).ppa;
+        let a = evaluate_with_dram(&sram, &stats, &sim.dram, &card);
+        let b = evaluate_with_dram(&sot, &stats, &sim.dram, &card);
+        assert!(a.dram_energy > 0.0 && a.dram_time > 0.0);
+        // Same miss stream, different cache time: the background-power
+        // term makes the DRAM energy differ across technologies.
+        assert_ne!(a.cache_time, b.cache_time);
+        assert_ne!(a.dram_energy, b.dram_energy);
+        // Cache-side terms are evaluate()'s, to the bit.
+        let flat = evaluate(&sram, &stats);
+        assert_eq!(a.dynamic_energy, flat.dynamic_energy);
+        assert_eq!(a.leakage_energy, flat.leakage_energy);
+        assert_eq!(a.cache_time, flat.cache_time);
+        // An all-zero observation (fixed-latency run) falls back exactly.
+        let zero = evaluate_with_dram(&sram, &stats, &DramStats::default(), &card);
+        assert_eq!(zero.dram_energy, flat.dram_energy);
+        assert_eq!(zero.dram_time, flat.dram_time);
     }
 
     #[test]

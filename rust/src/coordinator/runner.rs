@@ -41,6 +41,12 @@ pub struct RunReport {
     /// even under parallel execution: each experiment runs on its own
     /// engine fork).
     pub cache: CacheCounts,
+    /// The main-memory backend the run's params carried (`--dram`):
+    /// `"default"` when unset (each experiment's own default), else the
+    /// card's short descriptor (`"dram(c4r1b16 row2048)"` / `"fixed"`) —
+    /// recorded in the manifest so a results directory names its memory
+    /// model.
+    pub backend: String,
     pub csv_files: Vec<PathBuf>,
     pub headlines: Vec<String>,
     pub rendered_tables: Vec<String>,
@@ -136,6 +142,10 @@ pub fn run_one(
         title: exp.title,
         seconds,
         cache,
+        backend: match &params.dram {
+            None => "default".to_string(),
+            Some(b) => b.describe(),
+        },
         csv_files,
         headlines: output.headlines,
         rendered_tables: rendered,
@@ -231,6 +241,11 @@ fn write_manifest(
             let _ = writeln!(f, "[{}] ok: {} ({:.2}s)", r.id, r.title, r.seconds);
             for h in &r.headlines {
                 let _ = writeln!(f, "    {h}");
+            }
+            // Only a non-default backend is worth a line: the default run
+            // reproduces the paper and its manifest stays byte-stable.
+            if r.backend != "default" {
+                let _ = writeln!(f, "    memory backend: {}", r.backend);
             }
             if r.cache.calls() > 0 {
                 let _ = writeln!(f, "    engine cache: {}", r.cache.summary());
@@ -349,6 +364,26 @@ mod tests {
         let manifest = std::fs::read_to_string(cfg.results_dir.join("manifest.txt")).unwrap();
         assert!(manifest.contains("[table3] ok:"), "{manifest}");
         assert!(manifest.contains("[fig99] failed: unknown experiment id"), "{manifest}");
+        let _ = std::fs::remove_dir_all(&cfg.results_dir);
+    }
+
+    #[test]
+    fn manifest_records_a_non_default_memory_backend() {
+        use crate::membackend::{DramConfig, MemBackendConfig};
+        let cfg = test_cfg("backend");
+        let params = Params {
+            capacities_mb: Some(vec![1]),
+            dram: Some(MemBackendConfig::Dram(DramConfig::stt_dimm())),
+            ..Params::default()
+        };
+        let (reports, failures) = run_ids(Engine::shared(), &["figMem"], &params, &cfg);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(reports[0].backend.starts_with("dram("), "{}", reports[0].backend);
+        let manifest = std::fs::read_to_string(cfg.results_dir.join("manifest.txt")).unwrap();
+        assert!(manifest.contains("memory backend: dram("), "{manifest}");
+        // Default-params runs keep the manifest backend-silent.
+        let r = run("table3", &cfg).unwrap();
+        assert_eq!(r.backend, "default");
         let _ = std::fs::remove_dir_all(&cfg.results_dir);
     }
 

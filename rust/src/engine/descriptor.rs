@@ -77,6 +77,23 @@
 //! endurance_cycles = 4e12    # write-endurance budget, >= 1
 //! ecc = "secded"             # none | secded   (default secded)
 //! ```
+//!
+//! An optional `[dram]` section puts the banked main-memory model (see
+//! [`crate::membackend`]) behind the LLC for every query the descriptor's
+//! runs issue. Unset keys keep the default card's values; geometry is
+//! validated at parse time (power-of-two channel/rank/bank counts fail
+//! loudly, not at simulation time):
+//!
+//! ```text
+//! [dram]
+//! channels = 4               # power of two, <= 8
+//! ranks = 1                  # power of two, <= 4
+//! banks = 16                 # power of two, ranks*banks <= 32
+//! row_bytes = 2048           # row-buffer width, power of two
+//! t_row_hit = 15e-9          # open-row access latency (s)
+//! e_row_miss = 16e-9         # empty-row access energy (J)
+//! leakage = 0.5              # background/refresh power (W)
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -84,6 +101,7 @@ use super::spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec};
 
 use crate::device::bitcell::NvCal;
 use crate::gpusim::{parse_l1, CacheConfig, Replacement, WritePolicy};
+use crate::membackend::DramConfig;
 use crate::reliability::{EccMode, RelSpec};
 use crate::util::err::msg;
 
@@ -195,14 +213,14 @@ pub fn has_section(text: &str, name: &str) -> crate::Result<bool> {
     Ok(f.values.keys().any(|(s, _)| s == name))
 }
 
-/// Validate that `text` declares only `[space]` (and `[cache]`) entries —
-/// the pure-space file case, where a misspelled `[tech]`/`[device]`/…
-/// section would otherwise be silently ignored and the built-in defaults
-/// explored instead of the user's device.
+/// Validate that `text` declares only `[space]` (and `[cache]`/`[dram]`)
+/// entries — the pure-space file case, where a misspelled
+/// `[tech]`/`[device]`/… section would otherwise be silently ignored and
+/// the built-in defaults explored instead of the user's device.
 pub fn ensure_only_space(text: &str) -> crate::Result<()> {
     let f = split_fields(text)?;
     for (section, _) in f.values.keys() {
-        if section != "space" && section != "cache" {
+        if section != "space" && section != "cache" && section != "dram" {
             return Err(msg(format!(
                 "section [{section}] has no effect without a [tech] descriptor in the same file \
                  (is it misspelled?)"
@@ -234,6 +252,27 @@ pub fn cache_section(text: &str) -> crate::Result<Option<CacheConfig>> {
     Ok(Some(cfg))
 }
 
+/// The `[dram]` section as a [`DramConfig`] card, or `None` when the text
+/// declares none. Unset keys keep the default card's values; the
+/// assembled card is geometry-validated here, so a non-power-of-two
+/// channel count fails at parse time, not mid-simulation.
+pub fn dram_section(text: &str) -> crate::Result<Option<DramConfig>> {
+    let f = split_fields(text)?;
+    if !f.values.keys().any(|(s, _)| s == "dram") {
+        return Ok(None);
+    }
+    check_known(&f)?;
+    let mut card = DramConfig::default();
+    for field in DramConfig::FIELDS {
+        if f.get("dram", field).is_some() {
+            card.set_field(field, f.f64("dram", field)?)
+                .map_err(|e| msg(format!("[dram] {e}")))?;
+        }
+    }
+    card.validate().map_err(|e| msg(format!("[dram] {e}")))?;
+    Ok(Some(card))
+}
+
 /// The `[space]` section's key → value pairs (sorted by key), or `None`
 /// when the text declares none. The grammar of the values is owned by
 /// [`crate::explore::space`], which turns them into search axes.
@@ -256,6 +295,9 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
     // Cache-hierarchy configuration (extracted by `cache_section`; the
     // tech spec itself ignores it, like `[space]`).
     ("cache", &["write_policy", "replacement", "l1"]),
+    // Main-memory card (extracted by `dram_section`, same ride-along
+    // contract). Keys mirror `DramConfig::FIELDS` — keep in sync.
+    ("dram", &DramConfig::FIELDS),
     ("mtj", &["r_p", "r_ap", "ic_set", "ic_reset", "tau0", "r_rail"]),
     (
         "device",
@@ -619,6 +661,37 @@ mod tests {
         assert!(e.contains("unknown write policy"), "{e}");
         let e = parse(&format!("{text}\n[cache]\nvictim = \"x\"\n"));
         assert!(e.is_err(), "unknown [cache] keys are rejected");
+    }
+
+    #[test]
+    fn dram_sections_parse_and_ride_along() {
+        let mut text = serialize(&TechSpec::stt());
+        text.push_str("\n[dram]\nchannels = 2\ne_write = 10e-9\nleakage = 0\n");
+        // The tech spec parses unchanged with the [dram] section present…
+        assert_eq!(parse(&text).unwrap(), TechSpec::stt());
+        // …and the card extracts with unset keys at their defaults.
+        let card = dram_section(&text).unwrap().unwrap();
+        assert_eq!(card.channels, 2);
+        assert_eq!(card.e_write, 10e-9);
+        assert_eq!(card.leakage_w, 0.0);
+        assert_eq!(card.banks, DramConfig::default().banks, "unset keys keep defaults");
+        // Files without one report None (a bare header counts as absent).
+        assert!(dram_section(&serialize(&TechSpec::stt())).unwrap().is_none());
+        assert!(dram_section("[dram]\n").unwrap().is_none());
+        // Geometry is screened at parse time, loudly.
+        let e = dram_section("[dram]\nchannels = 3\n").unwrap_err().to_string();
+        assert!(e.contains("power of two") && e.contains('3'), "{e}");
+        let e = dram_section("[dram]\nbanks = 2.5\n").unwrap_err().to_string();
+        assert!(e.contains("integer"), "{e}");
+        // Unknown and duplicate keys fail like every other section.
+        let e = dram_section("[dram]\nrows = 4\n").unwrap_err().to_string();
+        assert!(e.contains("unknown key 'rows'") && e.contains("[dram]"), "{e}");
+        let e = dram_section("[dram]\nchannels = 2\nchannels = 4\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("duplicate key 'channels'"), "{e}");
+        // A pure space+dram file is a valid --space payload.
+        ensure_only_space("[space]\ncapacity_mb = 1, 2\n[dram]\nchannels = 2\n").unwrap();
     }
 
     #[test]

@@ -42,7 +42,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::analysis::model;
 use crate::device::bitcell::BitcellParams;
 use crate::device::characterize::{characterize_spec, CharacterizationReport};
-use crate::gpusim::{net_trace, simulate_sharded, simulate_with_faults, GpuConfig, SimResult};
+use crate::gpusim::{net_trace, simulate_backend, simulate_with_faults, GpuConfig, SimResult};
 use crate::nvsim::geometry::enumerate;
 use crate::nvsim::optimizer::{explore_cell, TunedCache};
 use crate::reliability::{self, FaultConfig, RelSpec};
@@ -59,6 +59,7 @@ use crate::workloads::registry::NetRegistry;
 
 pub use crate::device::bitcell::NvCal;
 pub use crate::gpusim::{CacheConfig, Replacement, WritePolicy};
+pub use crate::membackend::{DramConfig, DramStats, MemBackendConfig};
 pub use query::{Evaluation, IsoMode, ProfileModel, Query, WorkloadEval};
 pub use spec::{DeviceCal, MtjSpec, ReadPort, TechClass, TechSpec, TECH_SOT, TECH_SRAM, TECH_STT};
 
@@ -195,9 +196,10 @@ struct Core {
     nets: NetRegistry,
     cells: Memo<String, Arc<CharacterizationReport>>,
     tuned: Memo<(String, u64), TunedCache>,
-    /// Keyed by workload × batch × capacity × cache config × whether the
-    /// trace simulator (vs the analytical model) produced the profile.
-    profiles: Memo<(Workload, u64, u64, CacheConfig, bool), ProfiledWorkload>,
+    /// Keyed by workload × batch × capacity × cache config × memory
+    /// backend × whether the trace simulator (vs the analytical model)
+    /// produced the profile.
+    profiles: Memo<(Workload, u64, u64, CacheConfig, MemBackendConfig, bool), ProfiledWorkload>,
     /// Fault-campaign replays, keyed by technology id × workload × batch ×
     /// capacity × cache config × seed. Separate from `profiles` because
     /// that stage is technology-independent (one trace replay serves every
@@ -483,7 +485,32 @@ impl Engine {
         cache: CacheConfig,
         model: ProfileModel,
     ) -> crate::Result<ProfiledWorkload> {
-        let simulate = model == ProfileModel::Simulate || !cache.is_default();
+        self.profile_backend(
+            workload,
+            batch,
+            l2_capacity,
+            cache,
+            model,
+            &MemBackendConfig::FixedLatency,
+        )
+    }
+
+    /// [`Engine::profile_configured`] with an explicit memory backend. A
+    /// DRAM backend forces the trace simulator (the analytical model has
+    /// no main-memory observation) and fills `ProfiledWorkload::dram`
+    /// with the banked model's counters; the fixed-latency default is
+    /// exactly [`Engine::profile_configured`].
+    pub fn profile_backend(
+        &self,
+        workload: Workload,
+        batch: u64,
+        l2_capacity: u64,
+        cache: CacheConfig,
+        model: ProfileModel,
+        backend: &MemBackendConfig,
+    ) -> crate::Result<ProfiledWorkload> {
+        let simulate =
+            model == ProfileModel::Simulate || !cache.is_default() || !backend.is_fixed();
         // Resolve the open id *before* entering the memo (mirroring
         // `tech_or_err` on the technology side): a failed lookup must not
         // be cached, so registering the net afterwards heals the query.
@@ -496,10 +523,11 @@ impl Engine {
             })?),
             Workload::Hpcg(_) => None,
         };
+        let key = (workload.clone(), batch, l2_capacity, cache, *backend, simulate);
         let (out, computed) = self
             .core
             .profiles
-            .get_or_compute((workload.clone(), batch, l2_capacity, cache, simulate), || {
+            .get_or_compute(key, || {
                 match &workload {
                     Workload::Net { phase, .. } if !simulate => {
                         let net = net.as_ref().expect("resolved above");
@@ -516,18 +544,28 @@ impl Engine {
                                 gpu.l2_assoc, gpu.l2_line
                             ));
                         }
+                        if let Some(card) = backend.dram() {
+                            card.validate().map_err(|e| e.to_string())?;
+                        }
                         // Full shard budget for a standalone query; inside
                         // a pool worker (evaluate_many / explore fan-out)
                         // the outer parallelism already fills the cores,
                         // so replay sequentially instead of spawning
                         // workers × workers threads.
                         let shards = if in_worker() { 1 } else { num_threads() };
-                        let sim =
-                            simulate_sharded(net_trace(net, batch), &gpu, cache, 0, shards);
+                        let sim = simulate_backend(
+                            net_trace(net, batch),
+                            &gpu,
+                            cache,
+                            0,
+                            shards,
+                            backend,
+                        );
                         Ok(ProfiledWorkload {
                             workload: workload.clone(),
                             label: profiler::net_label(&net.name, Phase::Inference),
                             stats: model::stats_from_sim(&sim, gpu.l2_line),
+                            dram: sim.dram,
                         })
                     }
                     Workload::Net { .. } => Err(format!(
@@ -674,18 +712,28 @@ impl Engine {
             None => None,
             Some(w) => {
                 let batch = query.batch.unwrap_or_else(|| profiler::default_batch(w));
-                let profiled = self.profile_configured(
+                let profiled = self.profile_backend(
                     w.clone(),
                     batch,
                     capacity,
                     query.cache,
                     query.profile_model,
+                    &query.dram,
                 )?;
-                let rollup = model::evaluate(&design.ppa, &profiled.stats);
+                let rollup = match query.dram.dram() {
+                    None => model::evaluate(&design.ppa, &profiled.stats),
+                    Some(card) => model::evaluate_with_dram(
+                        &design.ppa,
+                        &profiled.stats,
+                        &profiled.dram,
+                        card,
+                    ),
+                };
                 Some(WorkloadEval {
                     label: profiled.label,
                     batch,
                     stats: profiled.stats,
+                    dram: profiled.dram,
                     rollup,
                 })
             }
@@ -939,6 +987,60 @@ mod tests {
             gpu.l2_line,
         );
         assert_eq!(simulated.stats, direct);
+    }
+
+    #[test]
+    fn dram_backend_keys_the_memo_and_fills_the_rollup() {
+        use crate::membackend::DramConfig;
+        let e = Engine::new();
+        let w = Workload::net("squeezenet", Phase::Inference);
+        let backend = MemBackendConfig::Dram(DramConfig::default());
+        let plain = e.profile(w.clone(), 1, 3 * MB).unwrap();
+        assert_eq!(plain.dram.accesses(), 0, "analytical profile observes no DRAM");
+        let dram = e
+            .profile_backend(
+                w.clone(),
+                1,
+                3 * MB,
+                CacheConfig::default(),
+                ProfileModel::Auto,
+                &backend,
+            )
+            .unwrap();
+        assert!(dram.dram.accesses() > 0, "banked backend observes the miss stream");
+        assert_eq!(e.stats().profile, HitMiss { hits: 0, misses: 2 }, "backend keys the memo");
+        let again = e
+            .profile_backend(
+                w.clone(),
+                1,
+                3 * MB,
+                CacheConfig::default(),
+                ProfileModel::Auto,
+                &backend,
+            )
+            .unwrap();
+        assert_eq!(e.stats().profile, HitMiss { hits: 1, misses: 2 });
+        assert_eq!(again.dram, dram.dram, "memoized observation is stable");
+        // End to end: the query roll-up carries the banked DRAM term.
+        let q = Query::tune("stt", 3 * MB).with_workload(w).with_batch(1).with_dram(backend);
+        let ev = e.evaluate(&q).unwrap();
+        let we = ev.workload.expect("workload roll-up present");
+        assert_eq!(we.dram, dram.dram);
+        assert!(we.rollup.dram_energy > 0.0 && we.rollup.dram_time > 0.0);
+        // An invalid card errors loudly instead of simulating nonsense.
+        let bad = MemBackendConfig::Dram(DramConfig { channels: 3, ..DramConfig::default() });
+        let err = e
+            .profile_backend(
+                Workload::net("squeezenet", Phase::Inference),
+                1,
+                3 * MB,
+                CacheConfig::default(),
+                ProfileModel::Auto,
+                &bad,
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("power of two"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::analysis::model;
 use crate::gpusim::CacheConfig;
+use crate::membackend::{DramStats, MemBackendConfig};
 use crate::nvsim::optimizer::TunedCache;
 use crate::reliability::RelEval;
 use crate::workloads::memstats::MemStats;
@@ -60,6 +61,13 @@ pub struct Query {
     pub cache: CacheConfig,
     /// Profile-model selection (see [`ProfileModel`]).
     pub profile_model: ProfileModel,
+    /// The main-memory backend behind the LLC. The default
+    /// [`MemBackendConfig::FixedLatency`] keeps the flat DRAM term
+    /// (bit-identical to the seed); a DRAM card routes the profile
+    /// through the trace simulator with the banked model armed and the
+    /// roll-up through
+    /// [`evaluate_with_dram`](crate::analysis::model::evaluate_with_dram).
+    pub dram: MemBackendConfig,
 }
 
 impl Query {
@@ -73,6 +81,7 @@ impl Query {
             iso: IsoMode::Capacity,
             cache: CacheConfig::default(),
             profile_model: ProfileModel::Auto,
+            dram: MemBackendConfig::FixedLatency,
         }
     }
 
@@ -107,6 +116,12 @@ impl Query {
         self.profile_model = ProfileModel::Simulate;
         self
     }
+
+    /// Put a memory backend behind the LLC (see [`MemBackendConfig`]).
+    pub fn with_dram(mut self, dram: MemBackendConfig) -> Query {
+        self.dram = dram;
+        self
+    }
 }
 
 /// The workload half of an evaluation: the profiled memory statistics and
@@ -119,6 +134,9 @@ pub struct WorkloadEval {
     pub batch: u64,
     /// nvprof-equivalent counters at the evaluated capacity.
     pub stats: MemStats,
+    /// Main-memory observations (all-zero unless the query carried a
+    /// DRAM backend).
+    pub dram: DramStats,
     /// The §4 roll-up (dynamic/leakage/DRAM energy, cache/DRAM time).
     pub rollup: model::Evaluation,
 }
@@ -185,5 +203,14 @@ mod tests {
         assert_eq!(q.iso, IsoMode::Capacity);
         assert!(q.workload.is_none() && q.batch.is_none());
         assert!(q.cache.is_default(), "default query profiles the seed-equivalent model");
+        assert!(q.dram.is_fixed(), "default query keeps the flat DRAM term");
+    }
+
+    #[test]
+    fn with_dram_selects_the_banked_backend() {
+        use crate::membackend::DramConfig;
+        let card = DramConfig::default();
+        let q = Query::tune("stt", MB).with_dram(MemBackendConfig::Dram(card));
+        assert_eq!(q.dram.dram(), Some(&card));
     }
 }

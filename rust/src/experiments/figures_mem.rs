@@ -1,0 +1,280 @@
+//! figMem: end-to-end EDP with the banked DRAM/HBM model behind the LLC.
+//!
+//! The paper's DRAM term is a flat per-transaction energy plus a
+//! bandwidth-derived latency — capacity moves it only through the miss
+//! count. This campaign replays the same miss stream through the banked
+//! open-page model (see [`crate::membackend`]) and rolls the observed
+//! row-buffer behavior into the §4 EDP: each cell (technology × L2
+//! capacity) tunes the cache, simulates the workload trace with the DRAM
+//! backend armed, and reports the row-class counters next to the
+//! cache-only and end-to-end EDPs. The DRAM card's background power makes
+//! the DRAM energy *technology-dependent* even at iso-capacity — a slower
+//! cache holds the DIMM powered longer — which is exactly the coupling
+//! the flat term cannot express. `--dram` swaps the default card (e.g.
+//! `--dram stt` for the non-volatile DIMM with zero background power).
+
+use super::figures_scale::fig7_selected_suite;
+use super::{Output, Params};
+use crate::engine::{Engine, Query};
+use crate::membackend::{DramConfig, DramStats, MemBackendConfig};
+use crate::util::csv::Csv;
+use crate::util::pool::par_map;
+use crate::util::table::Table;
+use crate::workloads::memstats::Phase;
+use crate::workloads::nets;
+use crate::workloads::profiler::Workload;
+
+const MB: u64 = 1 << 20;
+
+/// The compared technologies, in paper order.
+const TECHS: [&str; 3] = ["sram", "stt", "sot"];
+
+/// Default capacity grid (MB). Small capacities keep the default run
+/// quick (one trace simulation per capacity — the profile stage is
+/// technology-independent, so the engine memo shares it across techs).
+const CAPS_MB: [u64; 3] = [1, 2, 4];
+
+/// One campaign cell.
+#[derive(Debug, Clone)]
+struct MemRow {
+    tech: &'static str,
+    net: String,
+    batch: u64,
+    cap_mb: u64,
+    dram: DramStats,
+    dram_energy: f64,
+    dram_time: f64,
+    edp_cache: f64,
+    edp_total: f64,
+}
+
+/// The DRAM card the campaign runs: the `--dram` override when it names
+/// one, the default DDR-class card otherwise (`--dram off` has nothing to
+/// measure here, so it also falls back to the default card).
+fn campaign_card(params: &Params) -> DramConfig {
+    match &params.dram {
+        Some(MemBackendConfig::Dram(card)) => *card,
+        _ => DramConfig::default(),
+    }
+}
+
+/// figMem generator: technology × capacity with the banked model armed.
+/// Defaults replay SqueezeNet (batch 1) — the smallest trace in the suite
+/// — and `--networks` widens to the fig7 selection.
+pub fn figmem(engine: &Engine, params: &Params) -> Output {
+    let card = campaign_card(params);
+    let suite: Vec<(String, String, u64)> = if params.networks.is_none() {
+        let net = nets::squeezenet();
+        vec![(net.id.clone(), net.name.clone(), 1)]
+    } else {
+        fig7_selected_suite(engine, params)
+            .into_iter()
+            .map(|(net, batch)| (net.id.clone(), net.name.clone(), batch))
+            .collect()
+    };
+    let caps = params.capacities_or(&CAPS_MB);
+
+    // Pre-tune every (tech, capacity) on the engine's own parallelism so
+    // pool workers only simulate and roll up.
+    for tech in TECHS {
+        for &mb in &caps {
+            engine.tuned(tech, mb * MB).expect("builtin technologies tune at campaign capacities");
+        }
+    }
+
+    let mut cells: Vec<(&'static str, usize, u64)> = Vec::new();
+    for (n_i, _) in suite.iter().enumerate() {
+        for tech in TECHS {
+            for &mb in &caps {
+                cells.push((tech, n_i, mb));
+            }
+        }
+    }
+    let rows: Vec<MemRow> = par_map(&cells, |&(tech, n_i, cap_mb)| {
+        let (id, name, batch) = &suite[n_i];
+        let q = Query::tune(tech, cap_mb * MB)
+            .with_workload(Workload::net(id.clone(), Phase::Inference))
+            .with_batch(*batch)
+            .with_dram(MemBackendConfig::Dram(card));
+        let ev = engine.evaluate(&q).expect("figMem queries evaluate on builtin techs");
+        let w = ev.workload.expect("query carried a workload");
+        MemRow {
+            tech,
+            net: name.clone(),
+            batch: *batch,
+            cap_mb,
+            dram: w.dram,
+            dram_energy: w.rollup.dram_energy,
+            dram_time: w.rollup.dram_time,
+            edp_cache: w.rollup.edp_cache(),
+            edp_total: w.rollup.edp_with_dram(),
+        }
+    });
+
+    let mut t = Table::new(
+        format!("figMem: end-to-end EDP behind a {} main memory", card_label(&card)),
+        &[
+            "tech",
+            "network",
+            "cap (MB)",
+            "dram rd",
+            "dram wr",
+            "row hit%",
+            "conflicts",
+            "E_dram (J)",
+            "t_dram (s)",
+            "EDP cache",
+            "EDP total",
+        ],
+    );
+    let mut csv = Csv::new(&[
+        "tech",
+        "capacity_mb",
+        "net",
+        "batch",
+        "dram_reads",
+        "dram_writes",
+        "row_hits",
+        "row_misses",
+        "row_conflicts",
+        "row_hit_rate",
+        "queue_excess",
+        "dram_energy_j",
+        "dram_time_s",
+        "edp_cache",
+        "edp_total",
+    ]);
+    for row in &rows {
+        t.row(&[
+            row.tech.to_string(),
+            row.net.clone(),
+            row.cap_mb.to_string(),
+            row.dram.reads.to_string(),
+            row.dram.writes.to_string(),
+            format!("{:.1}", 100.0 * row.dram.row_hit_rate()),
+            row.dram.row_conflicts.to_string(),
+            format!("{:.3e}", row.dram_energy),
+            format!("{:.3e}", row.dram_time),
+            format!("{:.3e}", row.edp_cache),
+            format!("{:.3e}", row.edp_total),
+        ]);
+        csv.rowd(&[
+            &row.tech,
+            &row.cap_mb,
+            &row.net,
+            &row.batch,
+            &row.dram.reads,
+            &row.dram.writes,
+            &row.dram.row_hits,
+            &row.dram.row_misses,
+            &row.dram.row_conflicts,
+            &row.dram.row_hit_rate(),
+            &row.dram.queue_excess(),
+            &row.dram_energy,
+            &row.dram_time,
+            &row.edp_cache,
+            &row.edp_total,
+        ]);
+    }
+
+    let top_cap = caps.iter().copied().max().unwrap_or(0);
+    let find = |tech: &str| rows.iter().find(|r| r.tech == tech && r.cap_mb == top_cap);
+    let mut out = Output::default();
+    if let (Some(sram), Some(stt), Some(sot)) = (find("sram"), find("stt"), find("sot")) {
+        out = out.headline(format!(
+            "figMem ({} × b{}, {}): end-to-end EDP @{}MB — SRAM {:.3e}, STT {:.3e}, \
+             SOT {:.3e} (cache-only {:.3e}/{:.3e}/{:.3e})",
+            sram.net,
+            sram.batch,
+            card_label(&card),
+            top_cap,
+            sram.edp_total,
+            stt.edp_total,
+            sot.edp_total,
+            sram.edp_cache,
+            stt.edp_cache,
+            sot.edp_cache,
+        ));
+        out = out.headline(format!(
+            "figMem: {} DRAM reads / {} writes @{}MB, row-hit rate {:.1}% \
+             ({} conflicts, queue excess {})",
+            sram.dram.reads,
+            sram.dram.writes,
+            top_cap,
+            100.0 * sram.dram.row_hit_rate(),
+            sram.dram.row_conflicts,
+            sram.dram.queue_excess(),
+        ));
+    }
+    if out.headlines.is_empty() {
+        out = out.headline(format!("figMem: {} campaign cells", rows.len()));
+    }
+    out.table(t).csv("figmem_end_to_end", csv)
+}
+
+/// Short card descriptor for the table title and headline
+/// (`dram(c4r1b16 row2048)`).
+fn card_label(card: &DramConfig) -> String {
+    MemBackendConfig::Dram(*card).describe()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figmem_covers_tech_x_capacity_with_nonzero_dram_terms() {
+        let params = Params { capacities_mb: Some(vec![1]), ..Params::default() };
+        let out = figmem(Engine::shared(), &params);
+        assert_eq!(out.tables[0].len(), TECHS.len(), "tech × cap rows");
+        assert_eq!(out.csvs[0].0, "figmem_end_to_end");
+        assert_eq!(out.csvs[0].1.len(), TECHS.len());
+        assert!(!out.headlines.is_empty());
+        let csv = out.csvs[0].1.to_string();
+        let cell = |line: &str, i: usize| line.split(',').nth(i).unwrap().to_string();
+        let lines: Vec<&str> = csv.lines().skip(1).collect();
+        let sram = lines.iter().find(|l| l.starts_with("sram,1,")).unwrap();
+        let sot = lines.iter().find(|l| l.starts_with("sot,1,")).unwrap();
+        // The banked model observed traffic and the roll-up carries it.
+        assert!(cell(sram, 4).parse::<u64>().unwrap() > 0, "dram reads: {csv}");
+        let energy = |l: &str| cell(l, 11).parse::<f64>().unwrap();
+        assert!(energy(sram) > 0.0, "{csv}");
+        // The identical miss stream lands on identical device counters…
+        for i in 4..=10 {
+            assert_eq!(cell(sram, i), cell(sot, i), "col {i}: {csv}");
+        }
+        // …but the background-power term makes the DRAM energy follow the
+        // cache's time — the technology dependence the flat term lacks.
+        assert_ne!(energy(sram), energy(sot), "{csv}");
+    }
+
+    #[test]
+    fn figmem_is_deterministic_and_honors_the_dram_override() {
+        let params = Params { capacities_mb: Some(vec![1]), ..Params::default() };
+        let a = figmem(Engine::shared(), &params);
+        let b = figmem(Engine::shared(), &params);
+        assert_eq!(a.csvs[0].1.to_string(), b.csvs[0].1.to_string());
+        // A zero-background-power card (the STT DIMM) collapses the
+        // technology dependence at iso-capacity but keeps the access term.
+        let nv = Params {
+            capacities_mb: Some(vec![1]),
+            dram: Some(MemBackendConfig::Dram(DramConfig::stt_dimm())),
+            ..Params::default()
+        };
+        let out = figmem(Engine::shared(), &nv);
+        let csv = out.csvs[0].1.to_string();
+        let cell = |line: &str, i: usize| line.split(',').nth(i).unwrap().to_string();
+        let lines: Vec<&str> = csv.lines().skip(1).collect();
+        let sram = lines.iter().find(|l| l.starts_with("sram,1,")).unwrap();
+        let sot = lines.iter().find(|l| l.starts_with("sot,1,")).unwrap();
+        let energy = |l: &str| cell(l, 11).parse::<f64>().unwrap();
+        assert!(energy(sram) > 0.0);
+        assert_eq!(energy(sram), energy(sot), "no leakage → no tech coupling: {csv}");
+        // And the card actually changed the numbers vs the default run.
+        assert_ne!(energy(sram), {
+            let l = a.csvs[0].1.to_string();
+            let line = l.lines().skip(1).find(|l| l.starts_with("sram,1,")).unwrap().to_string();
+            cell(&line, 11).parse::<f64>().unwrap()
+        });
+    }
+}

@@ -14,6 +14,7 @@
 //! `repro all` runs the whole registry.
 
 pub mod figures_iso;
+pub mod figures_mem;
 pub mod figures_policy;
 pub mod figures_profile;
 pub mod figures_rel;
@@ -22,6 +23,7 @@ pub mod tables;
 
 use crate::engine::Engine;
 use crate::gpusim::{CacheConfig, Replacement, WritePolicy};
+use crate::membackend::MemBackendConfig;
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 
@@ -47,6 +49,9 @@ pub struct Params {
     pub warmup_frac: Option<f64>,
     /// Monte Carlo trials per fault-campaign cell (figRel); `None` = 3.
     pub trials: Option<u64>,
+    /// Main-memory backend override (`--dram`): figMem swaps its default
+    /// card for this one; `None` = each experiment's own default.
+    pub dram: Option<MemBackendConfig>,
 }
 
 /// Canonical form for network-name matching: lowercase alphanumerics.
@@ -261,6 +266,12 @@ pub fn registry() -> Vec<Experiment> {
             run: figures_rel::figrel,
         },
         Experiment {
+            id: "figMem",
+            title: "End-to-end EDP with the banked DRAM/HBM model behind the LLC (SRAM/STT/SOT)",
+            params: "networks, capacities, dram",
+            run: figures_mem::figmem,
+        },
+        Experiment {
             id: "fig8",
             title: "Iso-area dynamic + leakage energy (normalized to SRAM)",
             params: "networks",
@@ -313,11 +324,12 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
         for want in [
             "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "fig5", "fig6",
-            "fig7", "figWP", "figRel", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+            "fig7", "figWP", "figRel", "figMem", "fig8", "fig9", "fig10", "fig11", "fig12",
+            "fig13",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }
-        assert_eq!(ids.len(), 18);
+        assert_eq!(ids.len(), 19);
     }
 
     #[test]
@@ -325,7 +337,7 @@ mod tests {
         let mut ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids.len(), 18);
+        assert_eq!(ids.len(), 19);
     }
 
     #[test]
@@ -345,6 +357,7 @@ mod tests {
         );
         assert!(by_id("figWP").unwrap().params.contains("warmup-frac"));
         assert!(by_id("figRel").unwrap().params.contains("trials"));
+        assert!(by_id("figMem").unwrap().params.contains("dram"));
     }
 
     #[test]

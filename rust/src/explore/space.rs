@@ -31,6 +31,7 @@ use crate::engine::{
 };
 use crate::experiments::normalize_name;
 use crate::gpusim::{CacheConfig, Replacement, WritePolicy};
+use crate::membackend::{DramConfig, MemBackendConfig};
 use crate::util::err::msg;
 use crate::util::units::MB;
 use crate::workloads::memstats::Phase;
@@ -57,6 +58,11 @@ pub enum Axis {
     L1(Vec<bool>),
     /// Numeric override of a [`TechSpec`] field (see [`spec_field_names`]).
     Spec { field: String, values: Vec<f64> },
+    /// Numeric override of a main-memory card field (`dram.channels = 2,
+    /// 4`; see [`DramConfig::FIELDS`]). Declaring any DRAM axis arms the
+    /// banked backend for every candidate, starting from the space's
+    /// `base_dram` card (or the default card when the base is fixed).
+    Dram { field: String, values: Vec<f64> },
 }
 
 impl Axis {
@@ -71,6 +77,7 @@ impl Axis {
             Axis::Repl(_) => "replacement".to_string(),
             Axis::L1(_) => "l1".to_string(),
             Axis::Spec { field, .. } => field.clone(),
+            Axis::Dram { field, .. } => format!("dram.{field}"),
         }
     }
 
@@ -85,6 +92,7 @@ impl Axis {
             Axis::Repl(v) => v.len(),
             Axis::L1(v) => v.len(),
             Axis::Spec { values, .. } => values.len(),
+            Axis::Dram { values, .. } => values.len(),
         }
     }
 
@@ -104,6 +112,7 @@ impl Axis {
             Axis::Repl(v) => v[i].name().to_string(),
             Axis::L1(v) => (if v[i] { "on" } else { "off" }).to_string(),
             Axis::Spec { values, .. } => values[i].to_string(),
+            Axis::Dram { values, .. } => values[i].to_string(),
         }
     }
 }
@@ -283,6 +292,11 @@ pub struct Space {
     /// descriptor file's `[cache]` section, or the seed default); cache
     /// axes override individual fields per candidate.
     pub base_cache: CacheConfig,
+    /// The main-memory backend candidates start from (a descriptor file's
+    /// `[dram]` section, or the fixed-latency default); `dram.*` axes
+    /// override individual card fields per candidate, arming the banked
+    /// model even when the base is fixed.
+    pub base_dram: MemBackendConfig,
 }
 
 impl Default for Space {
@@ -294,13 +308,25 @@ impl Default for Space {
 impl Space {
     /// An empty space (normalization fills in default axes).
     pub fn new() -> Space {
-        Space { axes: Vec::new(), iso: IsoMode::Capacity, base_cache: CacheConfig::default() }
+        Space {
+            axes: Vec::new(),
+            iso: IsoMode::Capacity,
+            base_cache: CacheConfig::default(),
+            base_dram: MemBackendConfig::FixedLatency,
+        }
     }
 
     /// Set the base cache-hierarchy configuration (fields without a
     /// dedicated axis).
     pub fn with_base_cache(mut self, cache: CacheConfig) -> Space {
         self.base_cache = cache;
+        self
+    }
+
+    /// Set the base main-memory backend (card fields without a dedicated
+    /// axis).
+    pub fn with_base_dram(mut self, dram: MemBackendConfig) -> Space {
+        self.base_dram = dram;
         self
     }
 
@@ -359,6 +385,20 @@ impl Space {
         self
     }
 
+    /// Add a DRAM-card axis over a [`DramConfig`] field (bare field name,
+    /// no `dram.` prefix).
+    pub fn dram_axis(
+        mut self,
+        field: impl Into<String>,
+        values: impl IntoIterator<Item = f64>,
+    ) -> Space {
+        self.axes.push(Axis::Dram {
+            field: field.into(),
+            values: values.into_iter().collect(),
+        });
+        self
+    }
+
     /// Interpret capacities as SRAM-baseline footprints (iso-area).
     pub fn iso_area(mut self) -> Space {
         self.iso = IsoMode::Area;
@@ -382,6 +422,14 @@ impl Space {
                     return Err(msg(format!(
                         "unknown spec field '{field}' (known: {})",
                         spec_field_names().join(", ")
+                    )));
+                }
+            }
+            if let Axis::Dram { field, .. } = axis {
+                if !DramConfig::FIELDS.contains(&field.as_str()) {
+                    return Err(msg(format!(
+                        "unknown dram field '{field}' (known: {})",
+                        DramConfig::FIELDS.join(", ")
                     )));
                 }
             }
@@ -462,6 +510,7 @@ impl Space {
         let mut batch: Option<u64> = None;
         let mut workload: Option<Workload> = None;
         let mut cache = self.base_cache;
+        let mut dram_card: Option<DramConfig> = self.base_dram.dram().copied();
         let mut overrides: Vec<(String, f64)> = Vec::new();
         let mut labels = Vec::with_capacity(self.axes.len());
         for (axis, &i) in self.axes.iter().zip(coords) {
@@ -478,8 +527,25 @@ impl Space {
                 Axis::Repl(v) => cache.replacement = v[i],
                 Axis::L1(v) => cache.l1 = v[i],
                 Axis::Spec { field, values } => overrides.push((field.clone(), values[i])),
+                Axis::Dram { field, values } => {
+                    // A DRAM axis arms the banked model even when the
+                    // base is fixed-latency.
+                    dram_card
+                        .get_or_insert_with(DramConfig::default)
+                        .set_field(field, values[i])?;
+                }
             }
         }
+        let dram = match dram_card {
+            None => MemBackendConfig::FixedLatency,
+            Some(card) => {
+                // Geometry is re-screened per candidate: an axis value
+                // like `dram.channels = 3` fails here, naming the field,
+                // not deep inside a sharded simulation.
+                card.validate()?;
+                MemBackendConfig::Dram(card)
+            }
+        };
         let base = base_tech.ok_or_else(|| msg("space has no technology axis"))?;
         let capacity_mb = capacity_mb.ok_or_else(|| msg("space has no capacity axis"))?;
         let tech = if overrides.is_empty() {
@@ -506,11 +572,13 @@ impl Space {
             derived.name = id.clone();
             engine.register_if_absent(derived)?
         };
-        // When the space varies (or re-bases) the cache configuration,
-        // every candidate — including the write-back default corner — is
-        // profiled by the trace simulator, so policy deltas measure the
-        // policy and never an analytical-vs-simulated model switch.
-        let cache_sensitive = self.base_cache != CacheConfig::default()
+        // When the space varies (or re-bases) the cache configuration or
+        // the memory backend, every candidate — including the default
+        // corner — is profiled by the trace simulator, so policy deltas
+        // measure the policy and never an analytical-vs-simulated model
+        // switch.
+        let model_sensitive = self.base_cache != CacheConfig::default()
+            || !dram.is_fixed()
             || self
                 .axes
                 .iter()
@@ -522,11 +590,12 @@ impl Space {
             batch,
             iso: self.iso,
             cache,
-            profile_model: if cache_sensitive {
+            profile_model: if model_sensitive {
                 ProfileModel::Simulate
             } else {
                 ProfileModel::Auto
             },
+            dram,
         };
         Ok(Candidate { coords: coords.to_vec(), labels, query })
     }
@@ -597,6 +666,19 @@ impl Space {
                         }
                     };
                 }
+                field if field.starts_with("dram.") => {
+                    let card_field = &field["dram.".len()..];
+                    if !DramConfig::FIELDS.contains(&card_field) {
+                        return Err(msg(format!(
+                            "[space] unknown dram field '{card_field}' (known: {})",
+                            DramConfig::FIELDS.join(", ")
+                        )));
+                    }
+                    space.axes.push(Axis::Dram {
+                        field: card_field.to_string(),
+                        values: parse_f64s(key, &items)?,
+                    });
+                }
                 field if field.contains('.') => {
                     if !is_spec_field(field) {
                         return Err(msg(format!(
@@ -612,8 +694,8 @@ impl Space {
                 other => {
                     return Err(msg(format!(
                         "[space] unknown key '{other}' (known: tech, capacity_mb, batch, \
-                         workload, write_policy, replacement, l1, iso, or a spec field path \
-                         like mtj.tau0)"
+                         workload, write_policy, replacement, l1, iso, a spec field path \
+                         like mtj.tau0, or a dram card field like dram.channels)"
                     )))
                 }
             }
@@ -631,9 +713,11 @@ impl Space {
     /// technology is registered (idempotently) and becomes the default
     /// technology axis if the space declares none, and a `[cache]` section
     /// becomes the base cache configuration every candidate starts from
-    /// (cache axes override individual fields). A file without `[tech]`
-    /// must be pure `[space]`/`[cache]` — any other section is rejected as
-    /// a likely misspelling rather than silently ignored.
+    /// (cache axes override individual fields), and a `[dram]` section the
+    /// base memory backend (`dram.*` axes likewise). A file without
+    /// `[tech]` must be pure `[space]`/`[cache]`/`[dram]` — any other
+    /// section is rejected as a likely misspelling rather than silently
+    /// ignored.
     pub fn from_descriptor(engine: &Engine, text: &str) -> crate::Result<Space> {
         let entries = descriptor::space_section(text)?
             .ok_or_else(|| msg("descriptor has no [space] section"))?;
@@ -647,6 +731,9 @@ impl Space {
         let mut space = Space::from_entries(engine, &entries, base.as_deref())?;
         if let Some(cache) = descriptor::cache_section(text)? {
             space.base_cache = cache;
+        }
+        if let Some(card) = descriptor::dram_section(text)? {
+            space.base_dram = MemBackendConfig::Dram(card);
         }
         Ok(space)
     }
@@ -949,6 +1036,69 @@ mod tests {
         let e = Space::from_entries(&engine, &bad, Some("stt")).unwrap_err().to_string();
         assert!(e.contains("expected on/off"), "{e}");
         assert!(parse_l1("ON").unwrap() && !parse_l1("off").unwrap());
+    }
+
+    #[test]
+    fn dram_axes_materialize_banked_queries() {
+        let engine = Engine::new();
+        let entries = vec![
+            ("capacity_mb".to_string(), "2".to_string()),
+            ("dram.channels".to_string(), "2, 4".to_string()),
+        ];
+        let s = Space::from_entries(&engine, &entries, Some("stt")).unwrap();
+        assert_eq!(s.size(), 2);
+        assert!(s.base_dram.is_fixed(), "the axis, not the base, arms the model");
+        let chans: Vec<u32> = (0..s.size())
+            .map(|f| {
+                let c = s.candidate(&engine, &s.coords(f)).unwrap();
+                // A DRAM axis forces one (simulated) model for every
+                // candidate and arms the banked backend.
+                assert_eq!(c.query.profile_model, ProfileModel::Simulate);
+                c.query.dram.dram().unwrap().channels
+            })
+            .collect();
+        assert_eq!(chans, vec![2, 4]);
+        // Unset card fields keep their defaults.
+        let c = s.candidate(&engine, &s.coords(0)).unwrap();
+        assert_eq!(c.query.dram.dram().unwrap().banks, DramConfig::default().banks);
+        // A space without DRAM axes stays on the fixed-latency baseline.
+        let plain = Space::new().tech(["stt"]).capacity_mb([2]).normalized().unwrap();
+        let c = plain.candidate(&engine, &plain.coords(0)).unwrap();
+        assert!(c.query.dram.is_fixed());
+        // Unknown card fields and bad geometry fail loudly.
+        let bad = vec![("dram.rows".to_string(), "4".to_string())];
+        let e = Space::from_entries(&engine, &bad, Some("stt")).unwrap_err().to_string();
+        assert!(e.contains("unknown dram field 'rows'"), "{e}");
+        let odd = vec![("dram.channels".to_string(), "3".to_string())];
+        let s = Space::from_entries(&engine, &odd, Some("stt")).unwrap();
+        let e = s.candidate(&engine, &s.coords(0)).unwrap_err().to_string();
+        assert!(e.contains("power of two"), "{e}");
+        assert!(Space::new().dram_axis("rows", [1.0]).validate().is_err());
+    }
+
+    #[test]
+    fn dram_section_sets_the_base_card_axes_override() {
+        let engine = Engine::new();
+        let text = "[space]\ntech = stt\ncapacity_mb = 2\ndram.banks = 8, 16\n\
+                    \n[dram]\nchannels = 2\nleakage = 0\n";
+        let space = Space::from_descriptor(&engine, text).unwrap().normalized().unwrap();
+        assert_eq!(space.base_dram.dram().unwrap().channels, 2);
+        let banks: std::collections::HashSet<u32> = (0..space.size())
+            .map(|f| {
+                let c = space.candidate(&engine, &space.coords(f)).unwrap();
+                let card = c.query.dram.dram().unwrap();
+                assert_eq!(card.channels, 2, "base card survives");
+                assert_eq!(card.leakage_w, 0.0);
+                card.banks
+            })
+            .collect();
+        assert_eq!(banks.len(), 2, "the dram.banks axis still varies");
+        // A base [dram] card alone (no dram axes) arms the model too.
+        let text = "[space]\ntech = stt\ncapacity_mb = 2\n\n[dram]\nchannels = 2\n";
+        let space = Space::from_descriptor(&engine, text).unwrap().normalized().unwrap();
+        let c = space.candidate(&engine, &space.coords(0)).unwrap();
+        assert_eq!(c.query.dram.dram().unwrap().channels, 2);
+        assert_eq!(c.query.profile_model, ProfileModel::Simulate);
     }
 
     #[test]

@@ -29,7 +29,10 @@
 //!   plus [`simulate_with_faults`] — the same replay with a
 //!   [`crate::reliability`] injector armed on the L2, shard-deterministic
 //!   by per-set RNG streams and bit-identical to the fault-free paths
-//!   when disarmed.
+//!   when disarmed — and [`simulate_backend`] / [`simulate_full`], which
+//!   put a [`crate::membackend`] memory device behind the L2 (row-buffer
+//!   and bank-traffic counters in `SimResult::dram`, merged exactly
+//!   across shards).
 
 pub mod cache;
 pub mod config;
@@ -42,8 +45,8 @@ pub use cache::{
 };
 pub use config::{parse_faults, parse_l1, CacheConfig, GpuConfig};
 pub use sim::{
-    capacity_sweep, capacity_sweep_config, fig7_capacities, simulate, simulate_config,
-    simulate_sharded, simulate_with_faults, CapacitySweepSim, Hierarchy, L1Result, SimResult,
-    SweepPoint,
+    capacity_sweep, capacity_sweep_config, fig7_capacities, simulate, simulate_backend,
+    simulate_config, simulate_full, simulate_sharded, simulate_with_faults, CapacitySweepSim,
+    Hierarchy, L1Result, SimResult, SweepPoint,
 };
 pub use trace::{net_trace, Access, TraceGen};

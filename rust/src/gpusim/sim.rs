@@ -45,6 +45,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use super::cache::{Cache, Outcome, PolicyCache, Replacement, Srrip, TreePlru, WritePolicy};
 use super::config::{CacheConfig, GpuConfig};
 use super::trace::Access;
+use crate::membackend::{DramStats, MemBackend, MemBackendConfig, MemoryBackend};
 use crate::reliability::{FaultConfig, FaultState};
 use crate::util::pool::par_map;
 use crate::util::units::MB;
@@ -84,6 +85,11 @@ pub struct SimResult {
     /// Heaviest per-line physical write count (wear pacemaker; array
     /// lifetime is extrapolated from it).
     pub max_line_writes: u64,
+    /// Main-memory backend observations (row hits/misses/conflicts,
+    /// per-channel and per-bank traffic). Identically zero under the
+    /// default [`MemBackendConfig::FixedLatency`] backend, so default
+    /// results stay bit-identical to the pre-backend seed.
+    pub dram: DramStats,
     /// Present when the L1 level was simulated.
     pub l1: Option<L1Result>,
 }
@@ -117,6 +123,7 @@ impl SimResult {
             faults_silent: 0,
             retired_ways: 0,
             max_line_writes: 0,
+            dram: DramStats::default(),
             l1: None,
         }
     }
@@ -150,6 +157,8 @@ impl SimResult {
         // Shards own disjoint sets, so the global wear maximum is the
         // maximum over shards.
         self.max_line_writes = self.max_line_writes.max(other.max_line_writes);
+        // Plain sums: commutative, so shard merge order is irrelevant.
+        self.dram.merge_from(&other.dram);
         self.l1 = match (self.l1, other.l1) {
             (None, b) => b,
             (a, None) => a,
@@ -235,6 +244,12 @@ pub struct Hierarchy {
     l1: Option<Cache>,
     l2: L2,
     l2_bytes: u64,
+    l2_line: u64,
+    /// The memory device behind the L2. The fixed-latency baseline costs
+    /// one discriminant check per L2 access; the DRAM model additionally
+    /// snapshots the L2 counters around the access to classify the
+    /// emitted line traffic.
+    backend: MemBackend,
     /// Accesses offered to the hierarchy since the last counter reset.
     offered: u64,
     warmup: u64,
@@ -253,6 +268,19 @@ impl Hierarchy {
         config: &GpuConfig,
         cache: CacheConfig,
         faults: Option<FaultConfig>,
+    ) -> Hierarchy {
+        Hierarchy::with_backend(config, cache, faults, &MemBackendConfig::FixedLatency)
+    }
+
+    /// [`Hierarchy::with_faults`] with an explicit memory backend behind
+    /// the L2. The DRAM model's open-row state is keyed by the L2 set
+    /// index, the same modulus the set-sharded partition respects, so
+    /// per-shard backends merge exactly (see [`crate::membackend`]).
+    pub fn with_backend(
+        config: &GpuConfig,
+        cache: CacheConfig,
+        faults: Option<FaultConfig>,
+        backend: &MemBackendConfig,
     ) -> Hierarchy {
         let l1 = cache.l1.then(|| {
             PolicyCache::with_write_policy(
@@ -276,6 +304,8 @@ impl Hierarchy {
             l1,
             l2,
             l2_bytes: config.l2_bytes,
+            l2_line: config.l2_line,
+            backend: MemBackend::from_config(backend, config.l2_line, config.l2_sets()),
             offered: 0,
             warmup: 0,
         }
@@ -294,7 +324,31 @@ impl Hierarchy {
             }
         };
         if to_l2 {
-            self.l2.access(addr, write);
+            if self.backend.is_fixed() {
+                self.l2.access(addr, write);
+            } else {
+                // Classify the line traffic this access emits by the L2
+                // counter deltas: Δfills is the DRAM read, Δ(writebacks +
+                // direct_writes) the DRAM-bound writes (a dirty eviction,
+                // a through/bypassed store, or both when a fault
+                // retirement flushes alongside). The victim's address is
+                // not surfaced by the cache, so writebacks are attributed
+                // to the triggering line — same set, hence same shard
+                // context, which keeps sharded replay exact. Reads are
+                // modeled before writes within one access.
+                let before = self.l2.counters();
+                self.l2.access(addr, write);
+                let after = self.l2.counters();
+                let line_addr = addr / self.l2_line;
+                for _ in 0..after.fills - before.fills {
+                    self.backend.read(line_addr);
+                }
+                let writes = (after.writebacks + after.direct_writes)
+                    - (before.writebacks + before.direct_writes);
+                for _ in 0..writes {
+                    self.backend.write(line_addr);
+                }
+            }
         }
     }
 
@@ -304,6 +358,7 @@ impl Hierarchy {
         self.warmup += self.offered;
         self.offered = 0;
         self.l2.reset_counters();
+        self.backend.reset_stats();
         if let Some(l1) = &mut self.l1 {
             l1.reset_counters();
         }
@@ -312,6 +367,7 @@ impl Hierarchy {
     /// Final counters as a [`SimResult`].
     pub fn finish(self) -> SimResult {
         let c = self.l2.counters();
+        let dram = self.backend.stats();
         let f = self.l2.faults();
         let (corrected, detected, silent, retired, max_wear) = match f {
             None => (0, 0, 0, 0, 0),
@@ -334,6 +390,7 @@ impl Hierarchy {
             faults_silent: silent,
             retired_ways: retired,
             max_line_writes: max_wear,
+            dram,
             l1: self.l1.map(|l1| L1Result { accesses: self.offered, hits: l1.hits }),
         }
     }
@@ -354,18 +411,26 @@ pub fn simulate_config(
     cache: CacheConfig,
     warmup_accesses: u64,
 ) -> SimResult {
-    simulate_seq(trace, config, cache, warmup_accesses, None)
+    simulate_seq(
+        trace,
+        config,
+        cache,
+        warmup_accesses,
+        None,
+        &MemBackendConfig::FixedLatency,
+    )
 }
 
-/// Sequential replay with an optional fault injector.
+/// Sequential replay with an optional fault injector and memory backend.
 fn simulate_seq(
     trace: impl IntoIterator<Item = Access>,
     config: &GpuConfig,
     cache: CacheConfig,
     warmup_accesses: u64,
     faults: Option<FaultConfig>,
+    backend: &MemBackendConfig,
 ) -> SimResult {
-    let mut h = Hierarchy::with_faults(config, cache, faults);
+    let mut h = Hierarchy::with_backend(config, cache, faults, backend);
     let mut it = trace.into_iter();
     if warmup_accesses > 0 {
         for a in it.by_ref().take(warmup_accesses as usize) {
@@ -409,6 +474,24 @@ pub fn simulate_sharded(
     simulate_with_faults(trace, config, cache, warmup_accesses, max_shards, None)
 }
 
+/// [`simulate_sharded`] with an explicit memory backend behind the L2.
+/// [`MemBackendConfig::FixedLatency`] reproduces [`simulate_sharded`]
+/// bit-identically (zero [`DramStats`]); the DRAM model fills
+/// `SimResult::dram` with row-buffer and bank-traffic counters whose
+/// sharded merge equals the sequential run exactly — the open-row state
+/// is keyed by L2 set index, which every shard partition respects
+/// (differential tests in `tests/membackend.rs`).
+pub fn simulate_backend(
+    trace: impl IntoIterator<Item = Access>,
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup_accesses: u64,
+    max_shards: usize,
+    backend: &MemBackendConfig,
+) -> SimResult {
+    simulate_full(trace, config, cache, warmup_accesses, max_shards, None, backend)
+}
+
 /// [`simulate_sharded`] with an optional fault injector armed on the L2.
 /// Fault counts are **shard-deterministic**: per-set RNG streams are
 /// keyed by set index and advance only on that set's accesses, and the
@@ -424,13 +507,35 @@ pub fn simulate_with_faults(
     max_shards: usize,
     faults: Option<FaultConfig>,
 ) -> SimResult {
+    simulate_full(
+        trace,
+        config,
+        cache,
+        warmup_accesses,
+        max_shards,
+        faults,
+        &MemBackendConfig::FixedLatency,
+    )
+}
+
+/// The fully general sharded entrypoint: fault injector and memory
+/// backend together. Every other `simulate_*` function delegates here.
+pub fn simulate_full(
+    trace: impl IntoIterator<Item = Access>,
+    config: &GpuConfig,
+    cache: CacheConfig,
+    warmup_accesses: u64,
+    max_shards: usize,
+    faults: Option<FaultConfig>,
+    backend: &MemBackendConfig,
+) -> SimResult {
     let group = shard_group(config, cache);
     let shards = group.min(max_shards.max(1) as u64).max(1) as usize;
     if shards <= 1 {
-        return simulate_seq(trace, config, cache, warmup_accesses, faults);
+        return simulate_seq(trace, config, cache, warmup_accesses, faults, backend);
     }
     let parts = partition(trace, config.l2_line, group, shards, warmup_accesses);
-    replay_parts(&parts, config, cache, warmup_accesses > 0, faults)
+    replay_parts(&parts, config, cache, warmup_accesses > 0, faults, backend)
 }
 
 /// Largest shard-key modulus valid for one hierarchy: the shard key must
@@ -480,9 +585,10 @@ fn replay_parts(
     cache: CacheConfig,
     warmup: bool,
     faults: Option<FaultConfig>,
+    backend: &MemBackendConfig,
 ) -> SimResult {
     let results = par_map(parts, |(accesses, warm)| {
-        let mut h = Hierarchy::with_faults(config, cache, faults);
+        let mut h = Hierarchy::with_backend(config, cache, faults, backend);
         let warm = *warm as usize;
         for a in &accesses[..warm] {
             h.access(a.addr, a.write);
@@ -905,6 +1011,9 @@ impl CapacitySweepSim {
                     faults_silent: 0,
                     retired_ways: 0,
                     max_line_writes: 0,
+                    // Sweeps never run a backend; zero stats match the
+                    // fixed-latency direct simulation bit-exactly.
+                    dram: DramStats::default(),
                     l1: None,
                 }
             })
@@ -994,7 +1103,14 @@ pub fn capacity_sweep_config(
         let parts = partition(all, base_cfg.l2_line, group, shards, warmup);
         caps.iter()
             .map(|&cap| {
-                replay_parts(&parts, &base_cfg.clone().with_l2(cap), cache, warmup > 0, None)
+                replay_parts(
+                    &parts,
+                    &base_cfg.clone().with_l2(cap),
+                    cache,
+                    warmup > 0,
+                    None,
+                    &MemBackendConfig::FixedLatency,
+                )
             })
             .collect()
     };
@@ -1192,6 +1308,82 @@ mod tests {
         let b = capacity_sweep(net_trace(&net, 1), &caps);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.result, y.result);
+        }
+    }
+
+    #[test]
+    fn fixed_backend_is_bit_identical_to_the_plain_entrypoints() {
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let plain = simulate(trace.iter().copied(), &gpu);
+        let explicit = simulate_backend(
+            trace.iter().copied(),
+            &gpu,
+            CacheConfig::default(),
+            0,
+            8,
+            &MemBackendConfig::FixedLatency,
+        );
+        assert_eq!(plain, explicit);
+        assert_eq!(explicit.dram, DramStats::default());
+    }
+
+    #[test]
+    fn dram_backend_counts_match_the_fill_and_write_counters() {
+        use crate::membackend::DramConfig;
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let backend = MemBackendConfig::Dram(DramConfig::default());
+        for cache in [
+            CacheConfig::default(),
+            CacheConfig { write: WritePolicy::WriteThrough, ..CacheConfig::default() },
+            CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() },
+        ] {
+            let r = simulate_backend(trace.iter().copied(), &gpu, cache, 0, 1, &backend);
+            assert_eq!(r.dram.reads, r.dram_fills, "{}", cache.describe());
+            assert_eq!(r.dram.writes, r.dram_writes, "{}", cache.describe());
+            assert_eq!(
+                r.dram.row_hits + r.dram.row_misses + r.dram.row_conflicts,
+                r.dram.accesses(),
+                "every access classifies into exactly one row outcome"
+            );
+            let per_channel: u64 = r.dram.channel_accesses.iter().sum();
+            assert_eq!(per_channel, r.dram.accesses());
+            // L2 counters are untouched by the observing backend.
+            let base = simulate_config(trace.iter().copied(), &gpu, cache, 0);
+            assert_eq!((r.l2_hits, r.l2_misses), (base.l2_hits, base.l2_misses));
+        }
+    }
+
+    #[test]
+    fn dram_backend_sharded_matches_sequential_bit_exactly() {
+        use crate::membackend::DramConfig;
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let backend = MemBackendConfig::Dram(DramConfig::default());
+        let warm = (trace.len() / 5) as u64;
+        let seq = simulate_backend(
+            trace.iter().copied(),
+            &gpu,
+            CacheConfig::default(),
+            warm,
+            1,
+            &backend,
+        );
+        assert!(seq.dram.accesses() > 0, "miss traffic reaches the model");
+        for shards in [2usize, 3, 8] {
+            let par = simulate_backend(
+                trace.iter().copied(),
+                &gpu,
+                CacheConfig::default(),
+                warm,
+                shards,
+                &backend,
+            );
+            assert_eq!(seq, par, "{shards} shards");
         }
     }
 

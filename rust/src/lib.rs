@@ -39,14 +39,22 @@
 //!    frontiers with knee-point selection.
 //! 8. [`experiments`] — one generator per paper table/figure, each a thin
 //!    parameterized consumer of the engine.
-//! 9. [`reliability`] — stochastic NVM fault injection (write errors,
+//! 9. [`membackend`] — the main memory behind the LLC: a
+//!    [`MemoryBackend`](membackend::MemoryBackend) trait with a
+//!    zero-cost fixed-latency baseline and a banked open-page DRAM/HBM
+//!    model (channels/ranks/banks, row-buffer hit/miss/conflict timing
+//!    and energy, per-bank occupancy queuing), threaded through
+//!    [`gpusim`] with exact set-sharded merging so end-to-end EDP
+//!    includes off-chip traffic — and, via its read/write/leakage energy
+//!    knobs, the NVM-as-main-memory scenario.
+//! 10. [`reliability`] — stochastic NVM fault injection (write errors,
 //!    retention decay, read disturb), SECDED ECC accounting, wear
 //!    tracking, and endurance-driven way retirement, threaded through the
 //!    [`gpusim`] hot path with shard-deterministic per-set RNG streams.
-//! 10. [`coordinator`] — orchestration: experiment runner, CSV
+//! 11. [`coordinator`] — orchestration: experiment runner, CSV
 //!     persistence, run manifest with per-experiment engine-cache
 //!     accounting.
-//! 11. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//! 12. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
 //!     workloads (build-time Python; never on the analysis hot path).
 
 pub mod analysis;
@@ -56,6 +64,7 @@ pub mod engine;
 pub mod experiments;
 pub mod explore;
 pub mod gpusim;
+pub mod membackend;
 pub mod nvsim;
 pub mod reliability;
 pub mod runtime;

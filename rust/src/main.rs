@@ -30,6 +30,9 @@
 //!   --warmup-frac 0.25        replay this trace fraction as cache warmup
 //!   --trials N                Monte Carlo trials per fault-campaign cell
 //!                             (figRel; default 3)
+//!   --dram on|off|stt|"channels=2;row_bytes=1024"
+//!                             main-memory card behind the LLC (figMem's
+//!                             campaign card; `stt` = non-volatile DIMM)
 //!
 //! Explore options (EXPERIMENTS.md §"Design-space exploration"):
 //!   --space FILE              `.tech` file with a [space] section
@@ -37,8 +40,10 @@
 //!   --write-policy wb,bypass  --replacement lru,srrip  --l1 on,off
 //!                             declare axes inline instead of a file
 //!                             (--workloads all = the whole registry)
-//!   --spec "mtj.tau0=1e-9,2e-9;nv.i_write=1e-4,2e-4"
-//!                             spec-override axes (';'-separated)
+//!   --spec "mtj.tau0=1e-9,2e-9;dram.channels=2,4"
+//!                             spec- and dram-override axes (';'-separated;
+//!                             dram.* paths arm the banked memory model)
+//!   --dram on|stt|...         base main-memory card for every candidate
 //!   --iso-area                interpret capacities as SRAM footprints
 //!   --objectives edp,area     frontier objectives (edp, energy, latency,
 //!                             area, capacity, lifetime, uber — the last
@@ -118,8 +123,10 @@ fn usage() {
            repro experiment fig7 --write-policy bypass --l1 on --warmup-frac 0.25\n\
            repro experiment figWP --networks alexnet\n\
            repro experiment figRel --trials 5 --capacities 1,3\n\
+           repro experiment figMem --dram stt --capacities 1,2,4\n\
            repro all --results-dir results/\n\
            repro explore --tech stt,sot --capacities 1,2,4,8 --objectives edp,area\n\
+           repro explore --tech sram,sot --capacities 2 --spec \"dram.channels=2,4\" --budget 8\n\
            repro explore --tech stt --write-policy wb,bypass --batches 1 --budget 16\n\
            repro explore --space relaxed_stt.tech --strategy adaptive --budget 32 --seed 7\n\
            repro tune --tech sot --cap 10\n\
@@ -194,6 +201,10 @@ fn params_from(args: &Args) -> Result<Params, String> {
             Some(n)
         }
     };
+    let dram = match args.get("dram") {
+        None => None,
+        Some(v) => Some(deepnvm::membackend::parse_dram_flag(v).map_err(|e| e.to_string())?),
+    };
     Ok(Params {
         networks: args.get_list("networks"),
         capacities_mb: args.get_parse_list::<u64>("capacities")?,
@@ -203,6 +214,7 @@ fn params_from(args: &Args) -> Result<Params, String> {
         l1,
         warmup_frac,
         trials,
+        dram,
     })
 }
 
@@ -216,7 +228,8 @@ fn cmd_list() -> i32 {
         "params plumb from the CLI: --networks a,b  --capacities 1,2,4  --batches 1,8,64\n\
          cache-simulation params:   --write-policy wb|wt|bypass  --replacement lru|plru|srrip  \
          --l1 on|off  --warmup-frac 0.25\n\
-         fault-campaign params:     --trials 5 (figRel); global --faults on|off"
+         fault-campaign params:     --trials 5 (figRel); global --faults on|off\n\
+         main-memory params:        --dram on|off|stt|\"channels=2;row_bytes=1024\" (figMem)"
     );
     0
 }
@@ -264,6 +277,7 @@ fn cmd_all(engine: &Engine, args: &Args) -> i32 {
         "l1",
         "warmup-frac",
         "trials",
+        "dram",
     ] {
         if args.get(flag).is_some() {
             eprintln!(
@@ -305,6 +319,7 @@ fn explore_space_from(engine: &Engine, args: &Args) -> Result<Space, String> {
             "replacement",
             "l1",
             "spec",
+            "dram",
             "iso-area",
         ] {
             if args.get(flag).is_some() {
@@ -365,8 +380,19 @@ fn explore_space_from(engine: &Engine, args: &Args) -> Result<Space, String> {
                         .map_err(|_| format!("--spec {field}: invalid number {v:?}"))?,
                 );
             }
-            space = space.spec_axis(field.trim(), values);
+            // One inline grammar for both override families: dram.* paths
+            // declare DRAM-card axes (arming the banked memory model),
+            // everything else is a TechSpec field path.
+            let field = field.trim();
+            match field.strip_prefix("dram.") {
+                Some(card_field) => space = space.dram_axis(card_field, values),
+                None => space = space.spec_axis(field, values),
+            }
         }
+    }
+    if let Some(v) = args.get("dram") {
+        let base = deepnvm::membackend::parse_dram_flag(v).map_err(|e| e.to_string())?;
+        space = space.with_base_dram(base);
     }
     if args.flag("iso-area") {
         space = space.iso_area();

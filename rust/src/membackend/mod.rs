@@ -1,0 +1,791 @@
+//! Main-memory backend behind the LLC: fixed-latency baseline and a
+//! banked open-page DRAM/HBM model.
+//!
+//! Every number upstream of this module stops at the L2: an LLC miss is
+//! a counter in [`SimResult`](crate::gpusim::SimResult), not a cost.
+//! This module puts a memory device behind those misses. Two backends
+//! implement [`MemoryBackend`]:
+//!
+//! * [`FixedLatency`] — the implicit model the analysis layer has always
+//!   used (flat per-transaction DRAM energy and bandwidth-limited
+//!   latency, see `analysis::model`). It observes nothing and costs one
+//!   enum-discriminant check per access, so default simulations stay
+//!   bit-identical to the pre-backend seed.
+//! * [`DramModel`] — a banked, open-page DRAM/HBM model: configurable
+//!   channels/ranks/banks, per-bank row buffers with distinct
+//!   row-hit/row-miss/row-conflict latency and energy, line-interleaved
+//!   address mapping (channel bits first, then bank bits, then row), and
+//!   FR-FCFS-ish queuing approximated by per-bank occupancy counters.
+//!   Pure Rust, deterministic, no FFI.
+//!
+//! ## Sharding exactness
+//!
+//! `gpusim` replays traces set-sharded: shard `k` sees exactly the
+//! accesses whose line address satisfies `(line % group) % shards == k`,
+//! in trace order, where `group` divides the L2 set count. The DRAM
+//! model keys all mutable state (the open-row registers) by
+//! `ctx = line % ctx_group` with `ctx_group` equal to the L2 set count,
+//! so every context's access subsequence lands wholly inside one shard
+//! *in order* — any per-context state machine then produces the same
+//! transition counts sharded as sequentially. The [`DramStats`]
+//! counters merge by plain addition (order-insensitive), and the
+//! queue-delay estimate is a pure function of the merged per-bank sums,
+//! so `sharded == sequential` holds bit-exactly (pinned in
+//! `tests/membackend.rs` differential tests).
+//!
+//! ## NVM as main memory
+//!
+//! The per-access energy terms (`e_read`/`e_write`) and the background
+//! power (`leakage_w`) are plain knobs on [`DramConfig`], so an
+//! STT-class DIMM is one `[dram]` descriptor away: raise `e_write` to
+//! the MTJ write energy, drop `leakage` to the non-volatile floor. See
+//! [`DramConfig::stt_dimm`] and EXPERIMENTS.md §Main-memory backend.
+
+use std::hash::{Hash, Hasher};
+
+use crate::util::err::msg;
+
+/// Hard cap on channels (DramStats carries a fixed `[u64; MAX_CHANNELS]`).
+pub const MAX_CHANNELS: usize = 8;
+/// Hard cap on ranks × banks per channel (fixed `[u64; MAX_BANKS]`).
+pub const MAX_BANKS: usize = 32;
+
+/// Sentinel for a closed row buffer.
+const ROW_NONE: u64 = u64::MAX;
+
+/// Banked DRAM/HBM device card: geometry, row-buffer timing/energy, and
+/// the per-access + background terms that let an NVM DIMM reuse it.
+///
+/// All latencies are seconds per line access, energies are joules per
+/// line access, `leakage_w` is watts of background (refresh + standby)
+/// power charged for the whole runtime. [`DramConfig::validate`]
+/// rejects non-power-of-two geometry loudly; construction of a
+/// [`DramModel`] from an invalid card panics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramConfig {
+    /// Independent channels; line addresses interleave across them.
+    pub channels: u32,
+    /// Ranks per channel (power of two).
+    pub ranks: u32,
+    /// Banks per rank (power of two; `ranks * banks <= MAX_BANKS`).
+    pub banks: u32,
+    /// Row-buffer (page) size in bytes.
+    pub row_bytes: u64,
+    /// Latency when the access hits the open row (column access only).
+    pub t_row_hit: f64,
+    /// Latency when the bank's row buffer is closed (activate + column).
+    pub t_row_miss: f64,
+    /// Latency when another row is open (precharge + activate + column).
+    pub t_row_conflict: f64,
+    /// Energy per row-hit line access.
+    pub e_row_hit: f64,
+    /// Energy per row-miss line access.
+    pub e_row_miss: f64,
+    /// Energy per row-conflict line access.
+    pub e_row_conflict: f64,
+    /// Extra energy per read line access (NVM sense amplifiers etc.).
+    pub e_read: f64,
+    /// Extra energy per written line access (NVM write asymmetry).
+    pub e_write: f64,
+    /// Background power (refresh + standby) charged over total time.
+    pub leakage_w: f64,
+}
+
+impl Default for DramConfig {
+    /// A GDDR-class card: 4 channels × 16 banks, 2 KiB rows, timings in
+    /// the tRCD/tRP ballpark, and access energies bracketing the flat
+    /// 4 nJ/32 B-transaction constant the analytical model has always
+    /// charged (16 nJ per 128 B line).
+    fn default() -> DramConfig {
+        DramConfig {
+            channels: 4,
+            ranks: 1,
+            banks: 16,
+            row_bytes: 2048,
+            t_row_hit: 15.0e-9,
+            t_row_miss: 30.0e-9,
+            t_row_conflict: 45.0e-9,
+            e_row_hit: 12.0e-9,
+            e_row_miss: 16.0e-9,
+            e_row_conflict: 20.0e-9,
+            e_read: 0.0,
+            e_write: 0.0,
+            leakage_w: 0.5,
+        }
+    }
+}
+
+// `Eq`/`Hash` are safe despite the f64 fields: `validate` rejects NaN,
+// and the hash normalizes -0.0 so equal cards hash equally. The card
+// keys the engine's profile memo.
+impl Eq for DramConfig {}
+
+fn hash_f64<H: Hasher>(x: f64, state: &mut H) {
+    let bits = if x == 0.0 { 0 } else { x.to_bits() };
+    bits.hash(state);
+}
+
+impl Hash for DramConfig {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.channels.hash(state);
+        self.ranks.hash(state);
+        self.banks.hash(state);
+        self.row_bytes.hash(state);
+        for x in [
+            self.t_row_hit,
+            self.t_row_miss,
+            self.t_row_conflict,
+            self.e_row_hit,
+            self.e_row_miss,
+            self.e_row_conflict,
+            self.e_read,
+            self.e_write,
+            self.leakage_w,
+        ] {
+            hash_f64(x, state);
+        }
+    }
+}
+
+impl DramConfig {
+    /// Settable field names, as accepted by [`DramConfig::set_field`]
+    /// (and, with a `dram.` prefix, by the explore space).
+    pub const FIELDS: [&'static str; 13] = [
+        "channels",
+        "ranks",
+        "banks",
+        "row_bytes",
+        "t_row_hit",
+        "t_row_miss",
+        "t_row_conflict",
+        "e_row_hit",
+        "e_row_miss",
+        "e_row_conflict",
+        "e_read",
+        "e_write",
+        "leakage",
+    ];
+
+    /// An STT-class DIMM riding the same geometry: non-volatile (no
+    /// refresh floor), asymmetric write energy. The worked example in
+    /// EXPERIMENTS.md points a `TechSpec`-derived card here.
+    pub fn stt_dimm() -> DramConfig {
+        DramConfig {
+            e_read: 2.0e-9,
+            e_write: 10.0e-9,
+            leakage_w: 0.0,
+            ..DramConfig::default()
+        }
+    }
+
+    /// Banks addressable within one channel (`ranks * banks`).
+    pub fn banks_total(&self) -> u64 {
+        u64::from(self.ranks) * u64::from(self.banks)
+    }
+
+    /// Loudly reject malformed cards: non-power-of-two geometry,
+    /// over-cap counts, non-finite or negative timing/energy.
+    pub fn validate(&self) -> crate::Result<()> {
+        let pow2 = |name: &str, v: u64, max: u64| -> crate::Result<()> {
+            if v == 0 || !v.is_power_of_two() || v > max {
+                return Err(msg(format!(
+                    "dram.{name} must be a power of two in 1..={max}, got {v}"
+                )));
+            }
+            Ok(())
+        };
+        pow2("channels", u64::from(self.channels), MAX_CHANNELS as u64)?;
+        pow2("ranks", u64::from(self.ranks), 4)?;
+        pow2("banks", u64::from(self.banks), MAX_BANKS as u64)?;
+        if self.banks_total() > MAX_BANKS as u64 {
+            return Err(msg(format!(
+                "dram.ranks * dram.banks must be <= {MAX_BANKS}, got {}",
+                self.banks_total()
+            )));
+        }
+        if !self.row_bytes.is_power_of_two() || !(256..=65536).contains(&self.row_bytes) {
+            return Err(msg(format!(
+                "dram.row_bytes must be a power of two in 256..=65536, got {}",
+                self.row_bytes
+            )));
+        }
+        let positive = [
+            ("t_row_hit", self.t_row_hit),
+            ("t_row_miss", self.t_row_miss),
+            ("t_row_conflict", self.t_row_conflict),
+        ];
+        for (name, v) in positive {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(msg(format!("dram.{name} must be finite and > 0, got {v}")));
+            }
+        }
+        let nonneg = [
+            ("e_row_hit", self.e_row_hit),
+            ("e_row_miss", self.e_row_miss),
+            ("e_row_conflict", self.e_row_conflict),
+            ("e_read", self.e_read),
+            ("e_write", self.e_write),
+            ("leakage", self.leakage_w),
+        ];
+        for (name, v) in nonneg {
+            if !v.is_finite() || v < 0.0 {
+                return Err(msg(format!("dram.{name} must be finite and >= 0, got {v}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Set one field by name (integer fields reject fractional values).
+    /// Callers validate the finished card with [`DramConfig::validate`].
+    pub fn set_field(&mut self, field: &str, value: f64) -> crate::Result<()> {
+        let as_int = |name: &str| -> crate::Result<u64> {
+            if value.fract() != 0.0 || value < 0.0 || value > u64::MAX as f64 {
+                return Err(msg(format!(
+                    "dram.{name} wants a non-negative integer, got {value}"
+                )));
+            }
+            Ok(value as u64)
+        };
+        match field {
+            "channels" => self.channels = as_int(field)? as u32,
+            "ranks" => self.ranks = as_int(field)? as u32,
+            "banks" => self.banks = as_int(field)? as u32,
+            "row_bytes" => self.row_bytes = as_int(field)?,
+            "t_row_hit" => self.t_row_hit = value,
+            "t_row_miss" => self.t_row_miss = value,
+            "t_row_conflict" => self.t_row_conflict = value,
+            "e_row_hit" => self.e_row_hit = value,
+            "e_row_miss" => self.e_row_miss = value,
+            "e_row_conflict" => self.e_row_conflict = value,
+            "e_read" => self.e_read = value,
+            "e_write" => self.e_write = value,
+            "leakage" => self.leakage_w = value,
+            other => {
+                return Err(msg(format!(
+                    "unknown dram field '{other}' (known: {})",
+                    DramConfig::FIELDS.join(", ")
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which memory device sits behind the LLC.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum MemBackendConfig {
+    /// Today's implicit model: flat per-transaction energy, bandwidth
+    /// latency. Observes nothing; default simulations stay bit-identical.
+    #[default]
+    FixedLatency,
+    /// The banked open-page model.
+    Dram(DramConfig),
+}
+
+impl MemBackendConfig {
+    /// True for the zero-cost baseline.
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, MemBackendConfig::FixedLatency)
+    }
+
+    /// The DRAM card, if one is configured.
+    pub fn dram(&self) -> Option<&DramConfig> {
+        match self {
+            MemBackendConfig::FixedLatency => None,
+            MemBackendConfig::Dram(d) => Some(d),
+        }
+    }
+
+    /// Short human label for manifests and `repro list` ("fixed" or
+    /// "dram(c4r1b16 row2048)").
+    pub fn describe(&self) -> String {
+        match self {
+            MemBackendConfig::FixedLatency => "fixed".to_string(),
+            MemBackendConfig::Dram(d) => format!(
+                "dram(c{}r{}b{} row{})",
+                d.channels, d.ranks, d.banks, d.row_bytes
+            ),
+        }
+    }
+}
+
+/// Parse the `--dram` CLI flag: `off` → FixedLatency, `on` → the default
+/// card, otherwise `;`-separated `field=value` overrides of the default
+/// (`--dram "channels=2;banks=8;e_write=1e-8"`). The finished card is
+/// validated.
+pub fn parse_dram_flag(s: &str) -> crate::Result<MemBackendConfig> {
+    match s.trim() {
+        "off" | "fixed" => return Ok(MemBackendConfig::FixedLatency),
+        "on" | "default" => return Ok(MemBackendConfig::Dram(DramConfig::default())),
+        "stt" | "stt_dimm" => return Ok(MemBackendConfig::Dram(DramConfig::stt_dimm())),
+        _ => {}
+    }
+    let mut card = DramConfig::default();
+    for part in s.split(';').filter(|p| !p.trim().is_empty()) {
+        let (field, value) = part
+            .split_once('=')
+            .ok_or_else(|| msg(format!("--dram expects field=value, got '{part}'")))?;
+        let value: f64 = value
+            .trim()
+            .parse()
+            .map_err(|_| msg(format!("--dram {}: bad number '{}'", field.trim(), value)))?;
+        card.set_field(field.trim(), value)?;
+    }
+    card.validate()?;
+    Ok(MemBackendConfig::Dram(card))
+}
+
+/// Merged per-run DRAM observation counters. All fields sum across
+/// shards (order-insensitive), so sharded replay merges exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DramStats {
+    /// Line reads issued to the device (LLC fills).
+    pub reads: u64,
+    /// Line writes issued (dirty writebacks + write-through stores).
+    pub writes: u64,
+    /// Accesses that hit the open row.
+    pub row_hits: u64,
+    /// Accesses to a bank with a closed row buffer.
+    pub row_misses: u64,
+    /// Accesses that evicted another open row (precharge + activate).
+    pub row_conflicts: u64,
+    /// Per-channel access counts (indices `>= channels` stay zero).
+    pub channel_accesses: [u64; MAX_CHANNELS],
+    /// Per-bank occupancy counters, folded over channels (indices
+    /// `>= ranks * banks` stay zero). Basis of the queue estimate.
+    pub bank_accesses: [u64; MAX_BANKS],
+}
+
+impl DramStats {
+    /// Total line accesses observed.
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    /// Row-hit fraction in [0, 1]; 0 for an empty run.
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.accesses();
+        if total == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / total as f64
+    }
+
+    /// FR-FCFS-ish queue-delay estimate, in line accesses: the volume
+    /// that sat behind a hotter-than-fair-share bank assuming ideal
+    /// inter-bank parallelism. A pure function of the merged per-bank
+    /// sums, so it is order-insensitive and exact under sharding.
+    pub fn queue_excess(&self) -> u64 {
+        let total: u64 = self.bank_accesses.iter().sum();
+        let used = self.bank_accesses.iter().filter(|&&n| n > 0).count() as u64;
+        if used == 0 {
+            return 0;
+        }
+        let fair = total.div_ceil(used);
+        self.bank_accesses
+            .iter()
+            .map(|&n| n.saturating_sub(fair))
+            .sum()
+    }
+
+    /// Fold another shard's counters in. Plain sums: commutative and
+    /// associative, so shard merge order cannot change the result.
+    pub fn merge_from(&mut self, other: &DramStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.row_hits += other.row_hits;
+        self.row_misses += other.row_misses;
+        self.row_conflicts += other.row_conflicts;
+        for (a, b) in self
+            .channel_accesses
+            .iter_mut()
+            .zip(other.channel_accesses.iter())
+        {
+            *a += b;
+        }
+        for (a, b) in self.bank_accesses.iter_mut().zip(other.bank_accesses.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// A memory device behind the LLC: observes the line traffic the cache
+/// emits and accumulates [`DramStats`].
+pub trait MemoryBackend {
+    /// Observe one line read (an LLC fill).
+    fn read(&mut self, line_addr: u64);
+    /// Observe one line write (dirty writeback or write-through store).
+    fn write(&mut self, line_addr: u64);
+    /// Counters accumulated since the last reset.
+    fn stats(&self) -> DramStats;
+    /// Zero the counters (device state — open rows — persists, matching
+    /// the cache-warmup semantics of `start_measurement`).
+    fn reset_stats(&mut self);
+}
+
+/// The zero-cost baseline: observes nothing, reports all-zero stats.
+/// With this backend every simulation result is bit-identical to the
+/// pre-backend seed (pinned in `tests/golden.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FixedLatency;
+
+impl MemoryBackend for FixedLatency {
+    fn read(&mut self, _line_addr: u64) {}
+    fn write(&mut self, _line_addr: u64) {}
+    fn stats(&self) -> DramStats {
+        DramStats::default()
+    }
+    fn reset_stats(&mut self) {}
+}
+
+/// The banked open-page model.
+///
+/// Address mapping is line-interleaved: `channel = line % channels`,
+/// then `bank = (line / channels) % (ranks * banks)`, then the row
+/// index from the remaining bits and the row size. Open-row registers
+/// are keyed by `(ctx, bank)` with `ctx = line % ctx_group`, which is
+/// what makes set-sharded replay exact (see the module docs).
+#[derive(Debug, Clone)]
+pub struct DramModel {
+    cfg: DramConfig,
+    banks_total: u64,
+    lines_per_row: u64,
+    ctx_group: u64,
+    /// Open row per `(ctx, bank)`; `ROW_NONE` = closed.
+    open: Vec<u64>,
+    stats: DramStats,
+}
+
+impl DramModel {
+    /// Build a model for a validated card. `line_bytes` is the LLC line
+    /// size; `ctx_group` is the LLC set count (state-partition key —
+    /// shard groups divide it, see the module docs). Panics on an
+    /// invalid card, mirroring the cache constructors' geometry asserts.
+    pub fn new(cfg: DramConfig, line_bytes: u64, ctx_group: u64) -> DramModel {
+        cfg.validate().expect("invalid DRAM configuration");
+        assert!(line_bytes > 0, "line_bytes must be positive");
+        let banks_total = cfg.banks_total();
+        let lines_per_row = (cfg.row_bytes / line_bytes).max(1);
+        let ctx_group = ctx_group.max(1);
+        DramModel {
+            cfg,
+            banks_total,
+            lines_per_row,
+            ctx_group,
+            open: vec![ROW_NONE; (ctx_group * banks_total) as usize],
+            stats: DramStats::default(),
+        }
+    }
+
+    /// The card this model was built from.
+    pub fn config(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn touch(&mut self, line_addr: u64) {
+        let channel = (line_addr % u64::from(self.cfg.channels)) as usize;
+        let rest = line_addr / u64::from(self.cfg.channels);
+        let bank = rest % self.banks_total;
+        let row = (rest / self.banks_total) / self.lines_per_row;
+        let ctx = line_addr % self.ctx_group;
+        let slot = &mut self.open[(ctx * self.banks_total + bank) as usize];
+        if *slot == row {
+            self.stats.row_hits += 1;
+        } else if *slot == ROW_NONE {
+            self.stats.row_misses += 1;
+            *slot = row;
+        } else {
+            self.stats.row_conflicts += 1;
+            *slot = row;
+        }
+        self.stats.channel_accesses[channel] += 1;
+        self.stats.bank_accesses[bank as usize] += 1;
+    }
+}
+
+impl MemoryBackend for DramModel {
+    fn read(&mut self, line_addr: u64) {
+        self.stats.reads += 1;
+        self.touch(line_addr);
+    }
+
+    fn write(&mut self, line_addr: u64) {
+        self.stats.writes += 1;
+        self.touch(line_addr);
+    }
+
+    fn stats(&self) -> DramStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = DramStats::default();
+    }
+}
+
+/// Runtime-selected backend: the slot `gpusim::Hierarchy` holds.
+/// Dispatches [`MemoryBackend`] over the two concrete devices.
+#[derive(Debug, Clone)]
+pub enum MemBackend {
+    /// Zero-cost baseline.
+    Fixed(FixedLatency),
+    /// Banked model (boxed: the open-row table is per-set-sized).
+    Dram(Box<DramModel>),
+}
+
+impl MemBackend {
+    /// Instantiate the device a config selects. `line_bytes`/`ctx_group`
+    /// come from the cache geometry (see [`DramModel::new`]).
+    pub fn from_config(cfg: &MemBackendConfig, line_bytes: u64, ctx_group: u64) -> MemBackend {
+        match cfg {
+            MemBackendConfig::FixedLatency => MemBackend::Fixed(FixedLatency),
+            MemBackendConfig::Dram(card) => {
+                MemBackend::Dram(Box::new(DramModel::new(*card, line_bytes, ctx_group)))
+            }
+        }
+    }
+
+    /// True for the zero-cost baseline (the hot path branches on this).
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, MemBackend::Fixed(_))
+    }
+}
+
+impl MemoryBackend for MemBackend {
+    fn read(&mut self, line_addr: u64) {
+        if let MemBackend::Dram(m) = self {
+            m.read(line_addr);
+        }
+    }
+
+    fn write(&mut self, line_addr: u64) {
+        if let MemBackend::Dram(m) = self {
+            m.write(line_addr);
+        }
+    }
+
+    fn stats(&self) -> DramStats {
+        match self {
+            MemBackend::Fixed(_) => DramStats::default(),
+            MemBackend::Dram(m) => m.stats(),
+        }
+    }
+
+    fn reset_stats(&mut self) {
+        if let MemBackend::Dram(m) = self {
+            m.reset_stats();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::hash_map::DefaultHasher;
+
+    fn hash_of(c: &DramConfig) -> u64 {
+        let mut h = DefaultHasher::new();
+        c.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn default_card_validates() {
+        DramConfig::default().validate().unwrap();
+        DramConfig::stt_dimm().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_geometry_loudly() {
+        let base = DramConfig::default();
+        let c = DramConfig { channels: 3, ..base };
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("dram.channels") && e.contains("power of two"), "{e}");
+
+        assert!(DramConfig { banks: 64, ..base }.validate().is_err());
+
+        // 64 banks total > MAX_BANKS.
+        let c = DramConfig { ranks: 4, banks: 16, ..base };
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("ranks * dram.banks"), "{e}");
+
+        assert!(DramConfig { row_bytes: 3000, ..base }.validate().is_err());
+        assert!(DramConfig { t_row_hit: 0.0, ..base }.validate().is_err());
+        assert!(DramConfig { e_write: f64::NAN, ..base }.validate().is_err());
+    }
+
+    #[test]
+    fn set_field_round_trips_every_field() {
+        let mut c = DramConfig::default();
+        for (i, f) in DramConfig::FIELDS.iter().enumerate() {
+            // Power-of-two-friendly values for the integer fields.
+            let v = if i < 4 {
+                2.0_f64.powi(i as i32 + 1)
+            } else {
+                1.0e-9 * (i as f64)
+            };
+            c.set_field(f, v).unwrap();
+        }
+        assert_eq!(c.channels, 2);
+        assert_eq!(c.ranks, 4);
+        assert_eq!(c.banks, 8);
+        assert_eq!(c.row_bytes, 16); // out of range, but set_field only stores
+        assert!(c.validate().is_err()); // ...validate flags it
+        assert!(c.set_field("channels", 2.5).is_err());
+        let e = c.set_field("rows", 1.0).unwrap_err().to_string();
+        assert!(e.contains("unknown dram field 'rows'"), "{e}");
+    }
+
+    #[test]
+    fn equal_cards_hash_equally_including_negative_zero() {
+        let a = DramConfig::default();
+        let mut b = a;
+        assert_eq!(a, b);
+        assert_eq!(hash_of(&a), hash_of(&b));
+        b.e_read = -0.0;
+        assert_eq!(a, b, "-0.0 == 0.0");
+        assert_eq!(hash_of(&a), hash_of(&b), "hash must agree with Eq");
+        b.e_read = 1.0e-9;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn parse_dram_flag_grammar() {
+        assert!(parse_dram_flag("off").unwrap().is_fixed());
+        assert_eq!(
+            parse_dram_flag("on").unwrap(),
+            MemBackendConfig::Dram(DramConfig::default())
+        );
+        assert_eq!(
+            parse_dram_flag("stt").unwrap(),
+            MemBackendConfig::Dram(DramConfig::stt_dimm())
+        );
+        let cfg = parse_dram_flag("channels=2;banks=8;e_write=1e-8").unwrap();
+        let d = *cfg.dram().unwrap();
+        assert_eq!((d.channels, d.banks), (2, 8));
+        assert_eq!(d.e_write, 1.0e-8);
+        assert!(parse_dram_flag("channels=3").is_err(), "validated");
+        assert!(parse_dram_flag("bogus=1").is_err());
+        assert!(parse_dram_flag("channels").is_err());
+    }
+
+    #[test]
+    fn describe_labels_are_stable() {
+        assert_eq!(MemBackendConfig::FixedLatency.describe(), "fixed");
+        assert_eq!(
+            MemBackendConfig::Dram(DramConfig::default()).describe(),
+            "dram(c4r1b16 row2048)"
+        );
+    }
+
+    #[test]
+    fn address_mapping_interleaves_lines_across_channels() {
+        let mut m = DramModel::new(DramConfig::default(), 128, 16);
+        for line in 0..8u64 {
+            m.read(line);
+        }
+        // 8 consecutive lines over 4 channels: 2 accesses each.
+        assert_eq!(m.stats().channel_accesses[..4], [2, 2, 2, 2]);
+        assert_eq!(m.stats().channel_accesses[4..], [0, 0, 0, 0]);
+        assert_eq!(m.stats().reads, 8);
+        assert_eq!(m.stats().writes, 0);
+    }
+
+    #[test]
+    fn row_transitions_count_miss_then_hit_then_conflict() {
+        // 1 channel, 1 bank, 2 lines of 128 B per row: everything collides.
+        let cfg = DramConfig {
+            channels: 1,
+            ranks: 1,
+            banks: 1,
+            row_bytes: 256,
+            ..DramConfig::default()
+        };
+        let mut m = DramModel::new(cfg, 128, 1);
+        m.read(0); // row 0: cold bank -> miss
+        m.read(1); // row 0 again -> hit
+        m.write(2); // row 1 -> conflict
+        m.read(3); // row 1 -> hit
+        m.read(0); // row 0 -> conflict
+        let s = m.stats();
+        assert_eq!((s.row_misses, s.row_hits, s.row_conflicts), (1, 2, 2));
+        assert_eq!((s.reads, s.writes), (4, 1));
+        assert_eq!(s.accesses(), 5);
+        assert!((s.row_hit_rate() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contexts_partition_row_state() {
+        // Same bank, different ctx: no conflict between contexts.
+        let cfg = DramConfig {
+            channels: 1,
+            ranks: 1,
+            banks: 1,
+            ..DramConfig::default()
+        };
+        let mut m = DramModel::new(cfg, 128, 4);
+        m.read(0); // ctx 0 -> miss
+        m.read(1); // ctx 1 -> miss
+        m.read(0); // ctx 0, same row -> hit
+        let s = m.stats();
+        assert_eq!((s.row_misses, s.row_hits, s.row_conflicts), (2, 1, 0));
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let cfg = DramConfig::default();
+        let mut a = DramModel::new(cfg, 128, 8);
+        let mut b = DramModel::new(cfg, 128, 8);
+        for i in 0..100u64 {
+            a.read(i * 3);
+            b.write(i * 7 + 1);
+        }
+        let mut ab = a.stats();
+        ab.merge_from(&b.stats());
+        let mut ba = b.stats();
+        ba.merge_from(&a.stats());
+        assert_eq!(ab, ba);
+        assert_eq!(ab.accesses(), 200);
+    }
+
+    #[test]
+    fn queue_excess_measures_bank_imbalance() {
+        let mut s = DramStats::default();
+        assert_eq!(s.queue_excess(), 0);
+        s.bank_accesses[0] = 100;
+        s.bank_accesses[1] = 100;
+        assert_eq!(s.queue_excess(), 0, "balanced banks queue nothing");
+        s.bank_accesses[0] = 300;
+        // total 400 over 2 banks -> fair 200; bank 0 exceeds by 100.
+        assert_eq!(s.queue_excess(), 100);
+    }
+
+    #[test]
+    fn fixed_latency_observes_nothing() {
+        let mut f = FixedLatency;
+        f.read(1);
+        f.write(2);
+        assert_eq!(f.stats(), DramStats::default());
+        let mut b = MemBackend::from_config(&MemBackendConfig::FixedLatency, 128, 1536);
+        assert!(b.is_fixed());
+        b.read(1);
+        b.write(2);
+        assert_eq!(b.stats(), DramStats::default());
+    }
+
+    #[test]
+    fn reset_stats_keeps_open_rows() {
+        let cfg = DramConfig {
+            channels: 1,
+            banks: 1,
+            ..DramConfig::default()
+        };
+        let mut m = DramModel::new(cfg, 128, 1);
+        m.read(0);
+        m.reset_stats();
+        assert_eq!(m.stats(), DramStats::default());
+        m.read(1); // same row as the pre-reset access -> hit, not miss
+        assert_eq!(m.stats().row_hits, 1);
+    }
+}

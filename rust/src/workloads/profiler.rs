@@ -13,6 +13,7 @@ use super::hpcg::{hpcg_stats, HpcgSize};
 use super::ir::NetIr;
 use super::memstats::{net_stats, MemStats, Phase};
 use super::registry;
+use crate::membackend::DramStats;
 use crate::util::err::msg;
 use crate::util::units::MB;
 
@@ -44,6 +45,10 @@ pub struct ProfiledWorkload {
     pub workload: Workload,
     pub label: String,
     pub stats: MemStats,
+    /// Main-memory observations when the profile ran through the
+    /// simulator with a DRAM backend; all-zero for the analytical model
+    /// and fixed-latency runs (see [`crate::membackend`]).
+    pub dram: DramStats,
 }
 
 /// Suite-style label (`AlexNet-I`, `GPT-Block-T`) from a net's display
@@ -59,6 +64,7 @@ pub fn profile_net(net: &NetIr, phase: Phase, batch: u64, l2_capacity: u64) -> P
         workload: Workload::net(net.id.clone(), phase),
         label: net_label(&net.name, phase),
         stats: net_stats(net, phase, batch, l2_capacity),
+        dram: DramStats::default(),
     }
 }
 
@@ -68,6 +74,7 @@ pub fn profile_hpcg(size: HpcgSize, l2_capacity: u64) -> ProfiledWorkload {
         workload: Workload::Hpcg(size),
         label: size.name().to_string(),
         stats: hpcg_stats(size, l2_capacity),
+        dram: DramStats::default(),
     }
 }
 

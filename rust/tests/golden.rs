@@ -15,16 +15,23 @@
 //! 5. `.net` workload descriptors round-trip exactly for every builtin.
 //! 6. Transformer workloads (builtin and descriptor-defined) evaluate end
 //!    to end through `Engine::evaluate_many`.
+//! 7. The main-memory backend is **opt-in**: the explicit fixed-latency
+//!    backend reproduces the seed simulator's counters with an all-zero
+//!    DRAM observation block, and the fig3/fig7/figWP artifacts still
+//!    carry the seed constants after the membackend threading.
 
 use deepnvm::device::bitcell::{BitcellKind, BitcellParams};
 use deepnvm::device::characterize::characterize_kind;
 use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
-use deepnvm::experiments::{tables, Output, Params};
-use deepnvm::gpusim::{net_trace, simulate, simulate_sharded, CacheConfig, GpuConfig};
+use deepnvm::experiments::{by_id, tables, Output, Params};
+use deepnvm::gpusim::{
+    net_trace, simulate, simulate_backend, simulate_sharded, CacheConfig, GpuConfig,
+};
+use deepnvm::membackend::{DramStats, MemBackendConfig};
 use deepnvm::nvsim::optimizer::explore;
 use deepnvm::util::units::MB;
 use deepnvm::workloads::memstats::{net_stats, MemStats, Phase};
-use deepnvm::workloads::profiler::Workload;
+use deepnvm::workloads::profiler::{net_label, Workload};
 use deepnvm::workloads::{netdesc, nets, registry};
 
 fn assert_bits(a: f64, b: f64, what: &str) {
@@ -481,5 +488,124 @@ fn table3_identities_survive_the_ir() {
         assert_eq!(net.conv_layers(), *conv, "{id}");
         assert_eq!(net.fc_layers(), *fc, "{id}");
         assert_eq!(net.attention_ops(), 0, "{id}: CNNs have no attention");
+    }
+}
+
+// ===== Main-memory backend golden regressions =====
+//
+// The membackend subsystem threads a `MemoryBackend` through the
+// hierarchy, the roll-up model, and the figure generators. These pins
+// hold the *default* path to the seed: the fixed-latency backend must be
+// the seed simulator (not merely close to it), and the paper artifacts
+// that predate the backend must not move by a single digit.
+
+/// 32B transactions per 128B L2 line — the unit `MemStats` counts in.
+const LINE_TX: u64 = 4;
+
+fn csv_named(out: &Output, name: &str) -> String {
+    out.csvs
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("no csv named {name}"))
+        .1
+        .to_string()
+}
+
+/// Golden 7a: the explicit fixed-latency backend IS the seed simulator —
+/// bit-identical counters on every Table 3 network, with the DRAM
+/// observation block all-zero (nothing behind the LLC was modeled).
+#[test]
+fn fixed_latency_backend_is_bit_identical_to_seed() {
+    let gpu = GpuConfig::gtx_1080_ti();
+    for (id, batch, hits, misses, writebacks) in GOLDEN_SIM {
+        let net = registry::builtin_net(id).expect("table3 builtin");
+        let r = simulate_backend(
+            net_trace(&net, batch),
+            &gpu,
+            CacheConfig::default(),
+            0,
+            8,
+            &MemBackendConfig::FixedLatency,
+        );
+        assert_eq!(r.l2_hits, hits, "{id} hits");
+        assert_eq!(r.l2_misses, misses, "{id} misses");
+        assert_eq!(r.writebacks, writebacks, "{id} writebacks");
+        assert_eq!(r.dram, DramStats::default(), "{id}: fixed backend observed DRAM traffic");
+        let plain = simulate(net_trace(&net, batch), &gpu);
+        assert_eq!(r, plain, "{id}: backend entrypoint drifted from the seed path");
+    }
+}
+
+/// Golden 7b: fig3's artifact still carries the seed memstats counters —
+/// the profiler gained a DRAM observation field, and the default profile
+/// must not feel it.
+#[test]
+fn fig3_rows_pin_to_seed_memstats() {
+    let fig3 = by_id("fig3").expect("registered");
+    let out = (fig3.run)(Engine::shared(), &Params::default());
+    let csv = csv_named(&out, "fig3_rw_ratios");
+    for (id, inference, training) in GOLDEN_MEMSTATS {
+        let name = registry::builtin_net(id).expect("table3 builtin").name.clone();
+        for (phase, want) in [(Phase::Inference, inference), (Phase::Training, training)] {
+            let label = net_label(&name, phase);
+            let row = csv
+                .lines()
+                .find(|l| l.starts_with(&format!("{label},")))
+                .unwrap_or_else(|| panic!("no {label} row in fig3 csv"));
+            let cols: Vec<&str> = row.split(',').collect();
+            assert_eq!(cols[1], want[0].to_string(), "{label} l2_reads");
+            assert_eq!(cols[2], want[1].to_string(), "{label} l2_writes");
+        }
+    }
+}
+
+/// Golden 7c: fig7's per-network sweep still reports the seed DRAM-access
+/// counts at the 3MB baseline (`misses + writebacks`, in lines).
+#[test]
+fn fig7_baseline_rows_pin_to_seed_sim_counters() {
+    let fig7 = by_id("fig7").expect("registered");
+    let out = (fig7.run)(Engine::shared(), &Params::default());
+    let csv = csv_named(&out, "fig7_networks");
+    for (id, _batch, _hits, misses, writebacks) in GOLDEN_SIM {
+        let name = registry::builtin_net(id).expect("table3 builtin").name.clone();
+        let row = csv
+            .lines()
+            .find(|l| {
+                let c: Vec<&str> = l.split(',').collect();
+                c[0] == name && c[2] == "3"
+            })
+            .unwrap_or_else(|| panic!("no {name} 3MB row in fig7_networks csv"));
+        let dram: u64 = row.split(',').nth(3).unwrap().parse().unwrap();
+        assert_eq!(dram, misses + writebacks, "{name} 3MB dram accesses");
+    }
+}
+
+/// Golden 7d: figWP's write-back rows still carry the seed transaction
+/// counts — derivable exactly from the pinned trace fingerprints and sim
+/// counters (`l2_reads = (total − writes)·4`, `dram_reads = misses·4`, …).
+#[test]
+fn figwp_writeback_rows_pin_to_seed_transactions() {
+    let figwp = by_id("figWP").expect("registered");
+    let out = (figwp.run)(Engine::shared(), &Params::default());
+    let csv = csv_named(&out, "figwp_write_policy");
+    for (sim, trace) in GOLDEN_SIM.iter().zip(GOLDEN_TRACES.iter()) {
+        let &(id, batch, _hits, misses, writebacks) = sim;
+        let &(tid, tbatch, total, writes, _csum) = trace;
+        assert_eq!(id, tid, "constant tables stay aligned");
+        assert_eq!(batch, tbatch, "constant tables stay aligned");
+        let name = registry::builtin_net(id).expect("table3 builtin").name.clone();
+        let row = csv
+            .lines()
+            .find(|l| {
+                let c: Vec<&str> = l.split(',').collect();
+                c[0] == name && c[2] == "wb"
+            })
+            .unwrap_or_else(|| panic!("no {name} write-back row in figwp csv"));
+        let cols: Vec<&str> = row.split(',').collect();
+        let tx = |i: usize| cols[i].parse::<u64>().unwrap();
+        assert_eq!(tx(3), (total - writes) * LINE_TX, "{name} l2_reads");
+        assert_eq!(tx(4), writes * LINE_TX, "{name} l2_writes");
+        assert_eq!(tx(5), misses * LINE_TX, "{name} dram_reads");
+        assert_eq!(tx(6), writebacks * LINE_TX, "{name} dram_writes");
     }
 }

@@ -1,0 +1,203 @@
+//! Differential tests for the main-memory backend: with the banked DRAM
+//! model armed, the set-sharded parallel simulator must be
+//! counter-identical — cache counters AND `DramStats` — to sequential
+//! replay for every cache-policy combination, several DRAM cards, and
+//! any shard count: the exactness guarantee figMem rests on. Plus the
+//! conservation laws tying the observed DRAM traffic to the cache's own
+//! transaction counters under every write policy, and the fixed-latency
+//! no-op equivalence on arbitrary streams.
+
+use deepnvm::gpusim::{
+    simulate_backend, simulate_config, Access, CacheConfig, GpuConfig, Replacement, WritePolicy,
+};
+use deepnvm::membackend::{DramConfig, MemBackendConfig};
+use deepnvm::util::check::forall_explain;
+use deepnvm::util::rng::Rng;
+use deepnvm::util::units::KB;
+
+/// A small GPU model for differential testing: `l2_kb` of 128B-line L2 at
+/// the given associativity, with a 4-SM × 4KB aggregate L1 (2-way) in
+/// front when enabled.
+fn toy_gpu(l2_kb: u64, l2_assoc: u64) -> GpuConfig {
+    let mut g = GpuConfig::gtx_1080_ti();
+    g.l2_bytes = l2_kb * KB;
+    g.l2_line = 128;
+    g.l2_assoc = l2_assoc;
+    g.cores = 4;
+    g.l1_bytes = 4 * KB;
+    g.l1_line = 128;
+    g.l1_assoc = 2;
+    g
+}
+
+/// The policy cross-product the hierarchy refactor opened up.
+fn all_configs() -> Vec<CacheConfig> {
+    let mut out = Vec::new();
+    for replacement in Replacement::ALL {
+        for write in WritePolicy::ALL {
+            for l1 in [false, true] {
+                out.push(CacheConfig { replacement, write, l1 });
+            }
+        }
+    }
+    out
+}
+
+/// DRAM cards spanning the validated geometry range: the default
+/// DDR-class card, the non-volatile DIMM, a wide multi-rank card with
+/// small rows, and the degenerate single-channel single-bank device.
+fn all_cards() -> Vec<DramConfig> {
+    let mut wide = DramConfig::default();
+    for (field, v) in [("channels", 2.0), ("ranks", 2.0), ("banks", 4.0), ("row_bytes", 512.0)] {
+        wide.set_field(field, v).unwrap();
+    }
+    let mut single = DramConfig::default();
+    for (field, v) in [("channels", 1.0), ("ranks", 1.0), ("banks", 1.0)] {
+        single.set_field(field, v).unwrap();
+    }
+    vec![DramConfig::default(), DramConfig::stt_dimm(), wide, single]
+}
+
+fn random_trace(rng: &mut Rng, n: usize, span_lines: u64) -> Vec<Access> {
+    (0..n)
+        .map(|_| Access { addr: rng.gen_range(span_lines) * 128, write: rng.chance(0.4) })
+        .collect()
+}
+
+/// Sharded == sequential, exactly, with the banked model armed: open-row
+/// state is keyed by line context, so replaying disjoint set subsets and
+/// summing the counters must reproduce the sequential run bit for bit —
+/// for all 18 policy combinations × every card × random shard counts.
+#[test]
+fn dram_model_sharded_replay_is_counter_identical() {
+    let gpus = [toy_gpu(64, 4), toy_gpu(256, 16)];
+    let cards = all_cards();
+    forall_explain(
+        0xD7A5,
+        6,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(500, 3000);
+            let span = *rng.pick(&[256u64, 1024, 4096]);
+            let shards = *rng.pick(&[2usize, 3, 7, 8, 64]);
+            let card = rng.usize_in(0, cards.len());
+            (random_trace(rng, n, span), shards, card)
+        },
+        |(trace, shards, card)| {
+            let backend = MemBackendConfig::Dram(cards[*card]);
+            for gpu in &gpus {
+                for cache in all_configs() {
+                    let seq =
+                        simulate_backend(trace.iter().copied(), gpu, cache, 0, 1, &backend);
+                    let par = simulate_backend(
+                        trace.iter().copied(),
+                        gpu,
+                        cache,
+                        0,
+                        *shards,
+                        &backend,
+                    );
+                    if seq != par {
+                        return Err(format!(
+                            "{} @ {}B L2, {} shards, card {}: seq {:?} vs par {:?}",
+                            cache.describe(),
+                            gpu.l2_bytes,
+                            shards,
+                            backend.describe(),
+                            seq.dram,
+                            par.dram
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The explicit fixed-latency backend is a no-op on arbitrary streams:
+/// every counter (including the all-zero DRAM block) matches the plain
+/// simulator under every policy combination.
+#[test]
+fn fixed_latency_backend_is_a_no_op_on_random_streams() {
+    let gpu = toy_gpu(64, 4);
+    forall_explain(
+        0xF1DE,
+        10,
+        |rng: &mut Rng| random_trace(rng, 2000, 1024),
+        |trace| {
+            for cache in all_configs() {
+                let plain = simulate_config(trace.iter().copied(), &gpu, cache, 0);
+                let fixed = simulate_backend(
+                    trace.iter().copied(),
+                    &gpu,
+                    cache,
+                    0,
+                    8,
+                    &MemBackendConfig::FixedLatency,
+                );
+                if plain != fixed {
+                    return Err(format!("{}: fixed backend perturbed", cache.describe()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Conservation laws under the banked model, including warmup: the
+/// backend observes exactly the line traffic the cache emits in the
+/// measured window (`reads == dram_fills`, `writes == dram_writes`),
+/// every access lands in exactly one row class, and the channel/bank
+/// histograms each sum to the access total.
+#[test]
+fn dram_traffic_conserves_the_cache_counters() {
+    let gpu = toy_gpu(64, 4);
+    let cards = all_cards();
+    forall_explain(
+        0xC0DE,
+        10,
+        |rng: &mut Rng| {
+            let n = rng.usize_in(500, 2500);
+            let warm = rng.usize_in(0, n / 2) as u64;
+            let card = rng.usize_in(0, cards.len());
+            (random_trace(rng, n, 1024), warm, card)
+        },
+        |(trace, warm, card)| {
+            let cfg = cards[*card];
+            let backend = MemBackendConfig::Dram(cfg);
+            for cache in all_configs() {
+                let r =
+                    simulate_backend(trace.iter().copied(), &gpu, cache, *warm, 8, &backend);
+                let d = &r.dram;
+                if d.reads != r.dram_fills || d.writes != r.dram_writes {
+                    return Err(format!(
+                        "{} warm {warm}: backend saw {}r/{}w, cache emitted {}f/{}w",
+                        cache.describe(),
+                        d.reads,
+                        d.writes,
+                        r.dram_fills,
+                        r.dram_writes
+                    ));
+                }
+                let total = d.accesses();
+                if d.row_hits + d.row_misses + d.row_conflicts != total {
+                    return Err(format!("{}: row classes lost accesses", cache.describe()));
+                }
+                if d.channel_accesses.iter().sum::<u64>() != total
+                    || d.bank_accesses.iter().sum::<u64>() != total
+                {
+                    return Err(format!("{}: histograms disagree", cache.describe()));
+                }
+                let used_channels =
+                    d.channel_accesses.iter().filter(|&&n| n > 0).count() as u64;
+                if used_channels > u64::from(cfg.channels)
+                    || d.bank_accesses.iter().filter(|&&n| n > 0).count() as u64
+                        > cfg.banks_total()
+                {
+                    return Err(format!("{}: traffic outside the card", cache.describe()));
+                }
+            }
+            Ok(())
+        },
+    );
+}

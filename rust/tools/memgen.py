@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Mirror of the banked main-memory model (src/membackend/mod.rs) wired
+behind the goldgen cache mirror, in exact integer arithmetic.
+
+Validates the sharding-exactness argument numerically — open-row
+registers keyed by (line-context, bank) make set-sharded replay
+counter-identical to sequential replay, for any shard count whose groups
+partition the set index — and prints the device counters quoted in
+EXPERIMENTS.md §Main-memory backend.
+
+The cache side mirrors the default configuration only (true-LRU,
+write-back/write-allocate, L1 off): under it every miss is a fill (one
+DRAM line read) and every dirty eviction a writeback (one DRAM line
+write), attributed to the *triggering* line address — exactly the
+counter-delta classification gpusim::Hierarchy::access performs.
+"""
+
+from collections import OrderedDict
+import random
+
+import goldgen as g
+
+LINE = g.LINE
+
+# (channels, ranks, banks, row_bytes) — geometry is all that moves the
+# device counters; energies/latencies only scale the roll-up.
+DEFAULT_CARD = (4, 1, 16, 2048)
+WIDE_CARD = (2, 2, 4, 512)
+SINGLE_CARD = (1, 1, 1, 2048)
+
+
+class Dram:
+    """membackend::DramModel: line-interleaved banked open-page device."""
+
+    def __init__(self, card, ctx_group):
+        self.channels, ranks, banks, self.row_bytes = card
+        self.banks_total = ranks * banks
+        self.lines_per_row = max(1, self.row_bytes // LINE)
+        self.ctx_group = max(1, ctx_group)
+        self.open = {}  # (ctx, bank) -> open row
+        self.reads = self.writes = 0
+        self.row_hits = self.row_misses = self.row_conflicts = 0
+        self.chan = [0] * 8
+        self.bank = [0] * 32
+
+    def touch(self, la):
+        ch = la % self.channels
+        rest = la // self.channels
+        bank = rest % self.banks_total
+        row = (rest // self.banks_total) // self.lines_per_row
+        key = (la % self.ctx_group, bank)
+        cur = self.open.get(key)
+        if cur == row:
+            self.row_hits += 1
+        elif cur is None:
+            self.row_misses += 1
+            self.open[key] = row
+        else:
+            self.row_conflicts += 1
+            self.open[key] = row
+        self.chan[ch] += 1
+        self.bank[bank] += 1
+
+    def read(self, la):
+        self.reads += 1
+        self.touch(la)
+
+    def write(self, la):
+        self.writes += 1
+        self.touch(la)
+
+    def stats(self):
+        return {
+            "reads": self.reads,
+            "writes": self.writes,
+            "row_hits": self.row_hits,
+            "row_misses": self.row_misses,
+            "row_conflicts": self.row_conflicts,
+            "chan": tuple(self.chan),
+            "bank": tuple(self.bank),
+        }
+
+
+def merge(drams):
+    """DramStats::merge_from — plain sums, order-insensitive."""
+    out = {
+        "reads": 0,
+        "writes": 0,
+        "row_hits": 0,
+        "row_misses": 0,
+        "row_conflicts": 0,
+        "chan": (0,) * 8,
+        "bank": (0,) * 32,
+    }
+    for d in drams:
+        s = d.stats()
+        for k in ("reads", "writes", "row_hits", "row_misses", "row_conflicts"):
+            out[k] += s[k]
+        out["chan"] = tuple(a + b for a, b in zip(out["chan"], s["chan"]))
+        out["bank"] = tuple(a + b for a, b in zip(out["bank"], s["bank"]))
+    return out
+
+
+def queue_excess(bank):
+    """DramStats::queue_excess — volume behind hotter-than-fair banks."""
+    total = sum(bank)
+    used = sum(1 for n in bank if n)
+    if not used:
+        return 0
+    fair = g.ceil_div(total, used)
+    return sum(max(0, n - fair) for n in bank)
+
+
+def expand(runs):
+    """Run-list -> per-line (line_addr, write) stream at the L2 line."""
+    for base, nbytes, wr in runs:
+        for j in range(g.ceil_div(nbytes, LINE)):
+            yield (base + j * LINE) // LINE, wr
+
+
+def sim_backend(accesses, capacity, assoc, card, shards):
+    """goldgen.cache_sim with `shards` DRAM mirrors behind it. Each shard
+    owns the contexts `set % shards == shard`, so it observes exactly the
+    subsequence the Rust set-sharded replay would feed it, in order."""
+    sets = (capacity // LINE) // assoc
+    state = [OrderedDict() for _ in range(sets)]
+    drams = [Dram(card, sets) for _ in range(shards)]
+    hits = misses = writebacks = 0
+    for la, wr in accesses:
+        set_i = la % sets
+        d = drams[set_i % shards]
+        s = state[set_i]
+        fill = dirty_evict = False
+        if la in s:
+            hits += 1
+            s.move_to_end(la)
+            if wr:
+                s[la] = True
+        else:
+            misses += 1
+            fill = True
+            if len(s) == assoc:
+                _victim, dirty = s.popitem(last=False)
+                if dirty:
+                    writebacks += 1
+                    dirty_evict = True
+            s[la] = wr
+        # Counter-delta classification: Δfills first, then Δwritebacks,
+        # both at the triggering line address.
+        if fill:
+            d.read(la)
+        if dirty_evict:
+            d.write(la)
+    return (hits, misses, writebacks), merge(drams)
+
+
+def check_sharding(accesses, capacity, assoc, card, label):
+    seq_cache, seq_dram = sim_backend(accesses, capacity, assoc, card, 1)
+    for shards in (2, 3, 7, 8, 64):
+        par_cache, par_dram = sim_backend(accesses, capacity, assoc, card, shards)
+        assert par_cache == seq_cache, (label, shards, par_cache, seq_cache)
+        assert par_dram == seq_dram, (label, shards, par_dram, seq_dram)
+    h, m, w = seq_cache
+    assert seq_dram["reads"] == m, (label, "fills")
+    assert seq_dram["writes"] == w, (label, "writebacks")
+    total = m + w
+    classes = seq_dram["row_hits"] + seq_dram["row_misses"] + seq_dram["row_conflicts"]
+    assert classes == total == sum(seq_dram["chan"]) == sum(seq_dram["bank"]), label
+    print(f"  {label}: sharded == sequential for shards 2,3,7,8,64 "
+          f"({total} line accesses)")
+    return seq_cache, seq_dram
+
+
+def report(label, cache, dram):
+    h, m, w = cache
+    total = dram["reads"] + dram["writes"]
+    hit_rate = 100.0 * dram["row_hits"] / total if total else 0.0
+    print(f"  {label}:")
+    print(f"    dram reads {dram['reads']}, writes {dram['writes']}")
+    print(f"    row hits {dram['row_hits']} / misses {dram['row_misses']}"
+          f" / conflicts {dram['row_conflicts']}  (hit rate {hit_rate:.1f}%)")
+    print(f"    queue excess {queue_excess(dram['bank'])}")
+
+
+def main():
+    print("== membackend mirror: sharding exactness ==")
+    suite = [
+        ("alexnet b4 @ 3MB", g.alexnet(), 4, 3 * g.MB),
+        ("squeezenet b1 @ 1MB", g.squeezenet(), 1, 1 * g.MB),
+    ]
+    results = {}
+    for label, net, batch, cap in suite:
+        accesses = list(expand(g.seed_trace_runs(net, batch)))
+        for card_name, card in (("default", DEFAULT_CARD), ("wide", WIDE_CARD)):
+            cache, dram = check_sharding(
+                accesses, cap, 16, card, f"{label} [{card_name}]")
+            results[(label, card_name)] = (cache, dram)
+
+    print("\n== synthetic streams: all cards, random geometry ==")
+    rng = random.Random(0xD7A5)
+    for trial in range(4):
+        n = rng.randint(500, 3000)
+        span = rng.choice((256, 1024, 4096))
+        accesses = [(rng.randrange(span), rng.random() < 0.4) for _ in range(n)]
+        cap = rng.choice((64, 256)) * 1024
+        for card in (DEFAULT_CARD, WIDE_CARD, SINGLE_CARD):
+            check_sharding(accesses, cap, 4, card, f"trial {trial} {card}")
+
+    print("\n== device counters (EXPERIMENTS.md worked example) ==")
+    for key in (("alexnet b4 @ 3MB", "default"), ("squeezenet b1 @ 1MB", "default")):
+        report(f"{key[0]} [{key[1]} card]", *results[key])
+
+
+if __name__ == "__main__":
+    main()

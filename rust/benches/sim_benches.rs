@@ -18,8 +18,9 @@ use deepnvm::gpusim::{
     net_trace, simulate, simulate_config, simulate_sharded, Access, CacheConfig, GpuConfig,
     Replacement, WritePolicy,
 };
+use deepnvm::telemetry;
 use deepnvm::util::bench::BenchHarness;
-use deepnvm::util::pool::num_threads;
+use deepnvm::util::pool::{self, num_threads};
 use deepnvm::workloads::nets;
 
 fn main() {
@@ -53,6 +54,62 @@ fn main() {
         seq / shard,
         n / shard / 1e6,
         n / seq / 1e6
+    );
+    // Load-imbalance evidence for the ROADMAP item 4 work-stealing
+    // scheduler: max/mean per-worker busy time of the replay just timed
+    // (1.0 = perfectly balanced). Collected unconditionally by the pool.
+    let imbalance = pool::last_imbalance();
+    h.record("sim: sharded imbalance (max/mean busy)", imbalance);
+    if let Some(stats) = pool::last_stats() {
+        println!(
+            "  -> shard utilization: {} items over {} workers, imbalance {imbalance:.2}x",
+            stats.items, stats.workers
+        );
+    }
+
+    // Telemetry contract: the sink compiles into this hot path (pool chunk
+    // spans, per-shard spans, finish-time counters), so replay cost with
+    // the sink *enabled* bounds the compiled-in-but-disabled cost from
+    // above — assert the whole bound stays ≤2%. Best-of-2 on both sides
+    // to absorb scheduler noise.
+    let off = shard.min(h.bench("sim: sharded replay (telemetry off, round 2)", 3, || {
+        black_box(simulate_sharded(
+            trace.iter().copied(),
+            &gpu,
+            CacheConfig::default(),
+            0,
+            threads,
+        ));
+    }));
+    telemetry::set_enabled(true);
+    let on = h
+        .bench("sim: sharded replay (telemetry on)", 3, || {
+            black_box(simulate_sharded(
+                trace.iter().copied(),
+                &gpu,
+                CacheConfig::default(),
+                0,
+                threads,
+            ));
+        })
+        .min(h.bench("sim: sharded replay (telemetry on, round 2)", 3, || {
+            black_box(simulate_sharded(
+                trace.iter().copied(),
+                &gpu,
+                CacheConfig::default(),
+                0,
+                threads,
+            ));
+        }));
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let overhead = on / off.max(1e-12) - 1.0;
+    h.record("sim: telemetry overhead frac (enabled)", overhead);
+    println!("  -> telemetry-enabled sharded replay overhead: {:.2}%", overhead * 100.0);
+    assert!(
+        overhead <= 0.02,
+        "telemetry must stay within 2% of the untraced sharded replay (got {:.2}%)",
+        overhead * 100.0
     );
 
     // Exactness double-check while we are here: the bench must never

@@ -168,7 +168,10 @@ pub fn run_ids(
         print_tables: false,
         ..cfg.clone()
     };
-    let outcomes: Vec<Result<RunReport, (String, String)>> = par_map(ids, |id| {
+    // Failures carry `(id, message, seconds)` internally so the manifest
+    // can time them; the public return stays `(id, message)` pairs.
+    let outcomes: Vec<Result<RunReport, (String, String, f64)>> = par_map(ids, |id| {
+        let start = Instant::now();
         // AssertUnwindSafe: the engine fork inside run_one is dropped on
         // the failure path; shared memo caches only ever hold completed
         // entries (get_or_compute inserts after the closure returns).
@@ -177,8 +180,14 @@ pub fn run_ids(
         }));
         match run {
             Ok(Some(report)) => Ok(report),
-            Ok(None) => Err((id.to_string(), format!("unknown experiment id {id:?}"))),
-            Err(payload) => Err((id.to_string(), panic_message(payload))),
+            Ok(None) => Err((
+                id.to_string(),
+                format!("unknown experiment id {id:?}"),
+                start.elapsed().as_secs_f64(),
+            )),
+            Err(payload) => {
+                Err((id.to_string(), panic_message(payload), start.elapsed().as_secs_f64()))
+            }
         }
     });
     let mut reports = Vec::new();
@@ -190,7 +199,7 @@ pub fn run_ids(
         }
     }
     write_manifest(engine, &reports, &failures, cfg);
-    (reports, failures)
+    (reports, failures.into_iter().map(|(id, m, _)| (id, m)).collect())
 }
 
 /// Run the full registry with default params. Experiments execute in
@@ -220,13 +229,16 @@ pub fn run_all(engine: &Engine, cfg: &RunnerConfig) -> Vec<RunReport> {
 }
 
 /// Persist the run manifest: headlines + engine-cache counters per
-/// experiment with an explicit `ok` status, a `failed: <msg>` line per
-/// failed experiment, and the engine-wide totals that verify each
-/// pipeline stage computed at most once per unique key.
+/// experiment with an explicit `ok` status carrying wall time and the
+/// experiment's engine-cache hit rate, a timed `failed: <msg>` line per
+/// failed experiment, the engine-wide totals that verify each pipeline
+/// stage computed at most once per unique key, and — when the telemetry
+/// sink is on — the artifact paths plus run-wide simulated-access totals
+/// read back from the metrics registry.
 fn write_manifest(
     engine: &Engine,
     reports: &[RunReport],
-    failures: &[(String, String)],
+    failures: &[(String, String, f64)],
     cfg: &RunnerConfig,
 ) {
     let path = cfg.results_dir.join("manifest.txt");
@@ -238,7 +250,13 @@ fn write_manifest(
         // run (sampling, interleaving) reproduces via `repro --seed N`.
         let _ = writeln!(f, "seed: {}", crate::util::rng::global_seed());
         for r in reports {
-            let _ = writeln!(f, "[{}] ok: {} ({:.2}s)", r.id, r.title, r.seconds);
+            let cache_note = if r.cache.calls() > 0 {
+                let rate = 100.0 * r.cache.hits() as f64 / r.cache.calls() as f64;
+                format!(" · engine hit rate {rate:.0}% over {} calls", r.cache.calls())
+            } else {
+                String::new()
+            };
+            let _ = writeln!(f, "[{}] ok: {} ({:.2}s{cache_note})", r.id, r.title, r.seconds);
             for h in &r.headlines {
                 let _ = writeln!(f, "    {h}");
             }
@@ -251,8 +269,8 @@ fn write_manifest(
                 let _ = writeln!(f, "    engine cache: {}", r.cache.summary());
             }
         }
-        for (id, msg) in failures {
-            let _ = writeln!(f, "[{id}] failed: {msg}");
+        for (id, msg, secs) in failures {
+            let _ = writeln!(f, "[{id}] failed: {msg} (after {secs:.2}s)");
         }
         let totals = engine.totals();
         let _ = writeln!(f, "engine totals: {}", totals.summary());
@@ -262,6 +280,18 @@ fn write_manifest(
              {} tunings, {} profiles across the whole run)",
             totals.characterize.misses, totals.tune.misses, totals.profile.misses
         );
+        if crate::telemetry::enabled() {
+            let paths = crate::telemetry::artifact_paths();
+            if let Some(p) = &paths.trace {
+                let _ = writeln!(f, "telemetry: trace events -> {}", p.display());
+            }
+            if let Some(p) = &paths.metrics {
+                let _ = writeln!(f, "telemetry: metrics snapshot -> {}", p.display());
+            }
+            if let Some(n) = crate::telemetry::counter_value("gpusim.l2.accesses") {
+                let _ = writeln!(f, "telemetry: {n} simulated L2 accesses across the run");
+            }
+        }
     }
 }
 

@@ -109,6 +109,25 @@ impl CacheCounts {
             + self.faults.hits
             + self.faults.misses
     }
+
+    /// Total lookups answered from the memo caches.
+    pub fn hits(&self) -> u64 {
+        self.characterize.hits + self.tune.hits + self.profile.hits + self.faults.hits
+    }
+
+    /// Mirror these counters into the telemetry metrics registry as
+    /// `<prefix>.<stage>.hits` / `.misses` gauges (no-op while the
+    /// telemetry sink is disabled).
+    pub fn record_metrics(&self, prefix: &str) {
+        let set = |stage: &str, hm: &HitMiss| {
+            crate::telemetry::gauge_set(&format!("{prefix}.{stage}.hits"), hm.hits as f64);
+            crate::telemetry::gauge_set(&format!("{prefix}.{stage}.misses"), hm.misses as f64);
+        };
+        set("characterize", &self.characterize);
+        set("tune", &self.tune);
+        set("profile", &self.profile);
+        set("faults", &self.faults);
+    }
 }
 
 #[derive(Debug, Default)]
@@ -404,6 +423,7 @@ impl Engine {
             .core
             .cells
             .get_or_compute(spec.id.clone(), || {
+                let _span = crate::span!("engine.characterize", tech = spec.id);
                 characterize_spec(&spec).map(Arc::new).map_err(|e| e.to_string())
             });
         self.bump(Stage::Characterize, computed);
@@ -424,6 +444,7 @@ impl Engine {
             .core
             .tuned
             .get_or_compute((tech.to_string(), capacity_bytes), || {
+                let _span = crate::span!("engine.tune", tech = tech, bytes = capacity_bytes);
                 let bitcell = self.bitcell(tech).map_err(|e| e.to_string())?;
                 if enumerate(capacity_bytes).is_empty() {
                     return Err(format!(
@@ -528,6 +549,16 @@ impl Engine {
             .core
             .profiles
             .get_or_compute(key, || {
+                let wl = match &workload {
+                    Workload::Net { id, .. } => id.as_str(),
+                    Workload::Hpcg(_) => "hpcg",
+                };
+                let _span = crate::span!(
+                    "engine.profile",
+                    workload = wl,
+                    batch = batch,
+                    bytes = l2_capacity,
+                );
                 match &workload {
                     Workload::Net { phase, .. } if !simulate => {
                         let net = net.as_ref().expect("resolved above");
@@ -645,6 +676,7 @@ impl Engine {
         };
         let key = (tech_id.to_string(), workload.clone(), batch, l2_capacity, cache, seed);
         let (out, computed) = self.core.faults.get_or_compute(key, || {
+            let _span = crate::span!("engine.faults", tech = tech_id, batch = batch, seed = seed);
             let gpu = GpuConfig::gtx_1080_ti().with_l2(l2_capacity);
             if l2_capacity % (gpu.l2_line * gpu.l2_assoc) != 0 {
                 return Err(format!(
@@ -702,6 +734,8 @@ impl Engine {
     /// trace-replayable (net inference) workloads, unless fault injection
     /// is globally disabled.
     pub fn evaluate(&self, query: &Query) -> crate::Result<Evaluation> {
+        let _span =
+            crate::span!("engine.evaluate", tech = query.tech, bytes = query.capacity_bytes);
         let spec = self.tech_or_err(&query.tech)?;
         let capacity = match query.iso {
             IsoMode::Capacity => query.capacity_bytes,

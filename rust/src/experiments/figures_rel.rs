@@ -126,6 +126,13 @@ fn campaign_net(
             lifetime_years: 0.0,
         };
         for t in 0..trials {
+            let _span = crate::span!(
+                "figrel.trial",
+                tech = tech,
+                cap_mb = cap_mb,
+                policy = policy.name(),
+                trial = t,
+            );
             let faults = FaultConfig { rel, seed: campaign_seed(seed, t) };
             let sim = simulate_with_faults(
                 trace.iter().copied(),

@@ -122,6 +122,7 @@ pub fn search(
     if cfg.budget == 0 {
         return Err(msg("--budget must be at least 1"));
     }
+    let _span = crate::span!("explore.search", strategy = cfg.strategy.name(), budget = cfg.budget);
     let space = space.normalized()?;
     let size = space.size();
     let budget = cfg.budget as u128;
@@ -217,6 +218,7 @@ fn evaluate_flats(
     flats: &[u128],
     proxy: bool,
 ) -> (Vec<Explored>, Vec<(String, String)>) {
+    let _span = crate::span!("explore.evaluate_flats", candidates = flats.len(), proxy = proxy);
     let mut errors: Vec<(String, String)> = Vec::new();
     let mut candidates: Vec<Candidate> = Vec::new();
     for &flat in flats {

@@ -47,7 +47,7 @@ use super::config::{CacheConfig, GpuConfig};
 use super::trace::Access;
 use crate::membackend::{DramStats, MemBackend, MemBackendConfig, MemoryBackend};
 use crate::reliability::{FaultConfig, FaultState};
-use crate::util::pool::par_map;
+use crate::util::pool::par_map_indexed;
 use crate::util::units::MB;
 
 /// Result of running one trace through one cache configuration.
@@ -373,7 +373,7 @@ impl Hierarchy {
             None => (0, 0, 0, 0, 0),
             Some(f) => (f.corrected, f.detected, f.silent, f.retired_ways, f.max_wear()),
         };
-        SimResult {
+        let out = SimResult {
             l2_bytes: self.l2_bytes,
             l2_accesses: c.hits + c.misses,
             l2_hits: c.hits,
@@ -392,8 +392,37 @@ impl Hierarchy {
             max_line_writes: max_wear,
             dram,
             l1: self.l1.map(|l1| L1Result { accesses: self.offered, hits: l1.hits }),
-        }
+        };
+        record_finish_metrics(&out);
+        out
     }
+}
+
+/// Mirror one finished hierarchy's counters into the telemetry metrics
+/// registry. Every replay — each parallel shard, the sequential path, a
+/// fault-campaign trial — finishes exactly once, so counter sums across a
+/// process equal the merged totals. Zero deltas still register their
+/// keys, so a fixed-latency run reports explicit zero DRAM row-class
+/// counters. No-op while the sink is disabled.
+fn record_finish_metrics(r: &SimResult) {
+    if !crate::telemetry::enabled() {
+        return;
+    }
+    use crate::telemetry::counter_add;
+    counter_add("gpusim.replays", 1);
+    counter_add("gpusim.l2.accesses", r.l2_accesses);
+    counter_add("gpusim.l2.hits", r.l2_hits);
+    counter_add("gpusim.l2.misses", r.l2_misses);
+    counter_add("gpusim.dram.fills", r.dram_fills);
+    counter_add("gpusim.dram.writes", r.dram_writes);
+    counter_add("membackend.row_hits", r.dram.row_hits);
+    counter_add("membackend.row_misses", r.dram.row_misses);
+    counter_add("membackend.row_conflicts", r.dram.row_conflicts);
+    counter_add("membackend.queue_excess", r.dram.queue_excess());
+    counter_add("reliability.corrected", r.faults_corrected);
+    counter_add("reliability.detected", r.faults_detected);
+    counter_add("reliability.silent", r.faults_silent);
+    counter_add("reliability.retired_ways", r.retired_ways);
 }
 
 /// Run `trace` through the shared L2 of `config` — the seed entrypoint
@@ -430,6 +459,9 @@ fn simulate_seq(
     faults: Option<FaultConfig>,
     backend: &MemBackendConfig,
 ) -> SimResult {
+    // One shard: keep the span vocabulary of the sharded path so traces
+    // show a `gpusim.shard` replay regardless of core count.
+    let _span = crate::span!("gpusim.shard", shard = 0);
     let mut h = Hierarchy::with_backend(config, cache, faults, backend);
     let mut it = trace.into_iter();
     if warmup_accesses > 0 {
@@ -587,7 +619,8 @@ fn replay_parts(
     faults: Option<FaultConfig>,
     backend: &MemBackendConfig,
 ) -> SimResult {
-    let results = par_map(parts, |(accesses, warm)| {
+    let results = par_map_indexed(parts, |shard, (accesses, warm)| {
+        let _span = crate::span!("gpusim.shard", shard = shard, accesses = accesses.len());
         let mut h = Hierarchy::with_backend(config, cache, faults, backend);
         let warm = *warm as usize;
         for a in &accesses[..warm] {
@@ -601,9 +634,16 @@ fn replay_parts(
         }
         h.finish()
     });
+    let t_merge = std::time::Instant::now();
     let mut out = SimResult::zero(config.l2_bytes);
     for r in &results {
         out.merge_from(r);
+    }
+    if crate::telemetry::enabled() {
+        crate::telemetry::observe("gpusim.merge_s", t_merge.elapsed().as_secs_f64());
+        for (accesses, _) in parts {
+            crate::telemetry::observe("gpusim.shard.accesses", accesses.len() as f64);
+        }
     }
     out
 }

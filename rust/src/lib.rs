@@ -56,6 +56,11 @@
 //!     accounting.
 //! 12. [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
 //!     workloads (build-time Python; never on the analysis hot path).
+//! 13. [`telemetry`] — observability for the simulator itself: RAII
+//!     tracing spans ([`span!`] → Chrome `trace_event` JSON + flame
+//!     summary) and a counters/gauges/histograms registry snapshotted to
+//!     `run_metrics.json`, zero-cost behind a relaxed-atomic switch
+//!     (`--trace` / `--metrics` on the CLI).
 
 pub mod analysis;
 pub mod coordinator;
@@ -68,6 +73,7 @@ pub mod membackend;
 pub mod nvsim;
 pub mod reliability;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod workloads;
 

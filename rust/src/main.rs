@@ -18,6 +18,11 @@
 //!   --seed N                  base seed for every stochastic component
 //!   --faults on|off           fault injection for [rel] technologies
 //!                             (default on; off pins fault-free behaviour)
+//!   --trace PATH              enable telemetry and write tracing spans as
+//!                             Chrome trace_event JSON (chrome://tracing)
+//!   --metrics [PATH]          enable telemetry and write the metrics
+//!                             registry snapshot (default
+//!                             <results-dir>/run_metrics.json)
 //!
 //! Experiment params (see `repro list` for which experiment takes what):
 //!   --networks a,b            restrict network-driven experiments
@@ -52,6 +57,8 @@
 //!   --strategy grid|random|adaptive   search strategy (default grid)
 //!   --budget N                max full evaluations (default 256)
 
+use std::path::{Path, PathBuf};
+
 use deepnvm::coordinator::{persist_explore, run_all, run_one, RunnerConfig};
 use deepnvm::engine::Engine;
 use deepnvm::experiments::{registry, Params};
@@ -82,6 +89,9 @@ fn main() {
             }
         }
     }
+    // Arm the telemetry sink (if --trace/--metrics ask for it) before any
+    // evaluation runs, so the very first span lands in the trace.
+    telemetry_from(&args);
     let engine = match engine_from(&args) {
         Ok(e) => e,
         Err(e) => {
@@ -109,7 +119,58 @@ fn main() {
             0
         }
     };
+    finish_telemetry(engine);
     std::process::exit(code);
+}
+
+/// Parse the global `--trace <path>` / `--metrics [path]` pair: either
+/// flag enables the telemetry sink and records where the artifacts land
+/// (the run manifest cites the paths). A bare `--metrics` defaults to
+/// `<results-dir>/run_metrics.json`.
+fn telemetry_from(args: &Args) {
+    let trace = args.get("trace").map(PathBuf::from);
+    let metrics = match args.get("metrics") {
+        None => None,
+        // The bare-flag form parses as the value "true" (see util::cli).
+        Some("true") => {
+            let dir = args.get_any(&["results-dir", "results"]).unwrap_or("results");
+            Some(Path::new(dir).join("run_metrics.json"))
+        }
+        Some(p) => Some(PathBuf::from(p)),
+    };
+    if trace.is_some() || metrics.is_some() {
+        deepnvm::telemetry::set_artifact_paths(deepnvm::telemetry::ArtifactPaths {
+            trace,
+            metrics,
+        });
+        deepnvm::telemetry::set_enabled(true);
+    }
+}
+
+/// Export the telemetry artifacts on the way out: mirror the engine's
+/// stage counters into the registry, print the flame summary, and write
+/// the trace / metrics JSON files `--trace`/`--metrics` asked for.
+fn finish_telemetry(engine: &Engine) {
+    if !deepnvm::telemetry::enabled() {
+        return;
+    }
+    engine.totals().record_metrics("engine");
+    if let Some(t) = deepnvm::telemetry::flame_summary() {
+        println!("{}", t.render());
+    }
+    let paths = deepnvm::telemetry::artifact_paths();
+    if let Some(path) = &paths.trace {
+        match deepnvm::telemetry::write_trace_json(path) {
+            Ok(n) => println!("wrote {n} trace events to {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+    if let Some(path) = &paths.metrics {
+        match deepnvm::telemetry::write_metrics_json(path) {
+            Ok(n) => println!("wrote {n} metrics to {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
 }
 
 fn usage() {
@@ -121,7 +182,7 @@ fn usage() {
            repro experiment table2 fig5\n\
            repro experiment fig7 --networks resnet18,vgg16 --capacities 4,8,16\n\
            repro experiment fig7 --write-policy bypass --l1 on --warmup-frac 0.25\n\
-           repro experiment figWP --networks alexnet\n\
+           repro experiment figWP --networks alexnet --trace trace.json --metrics\n\
            repro experiment figRel --trials 5 --capacities 1,3\n\
            repro experiment figMem --dram stt --capacities 1,2,4\n\
            repro all --results-dir results/\n\

@@ -1,0 +1,279 @@
+//! The run-metrics registry: named counters, gauges, and histograms.
+//!
+//! One flat, process-global namespace (dotted `subsystem.metric` names,
+//! e.g. `gpusim.l2.hits`) that the instrumented layers push into while
+//! the sink is enabled, snapshotted at process exit into the
+//! `run_metrics.json` artifact. Three shapes:
+//!
+//! * **counter** ([`counter_add`]) — monotonically summed `u64`, exact
+//!   under sharded/parallel recording (plain sums commute).
+//! * **gauge** ([`gauge_set`]) — last-written `f64` (e.g. a derived
+//!   ratio, or per-worker busy time of the most recent pool run).
+//! * **histogram** ([`observe`]) — running count/sum/min/max of an `f64`
+//!   stream (e.g. per-shard access counts); exported as
+//!   `<name>.count/.sum/.mean/.min/.max`.
+//!
+//! Like the span sink, every entry point is gated on
+//! [`enabled`](super::enabled) and is a no-op when telemetry is off.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// One registered metric value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic sum.
+    Counter(u64),
+    /// Last-written value.
+    Gauge(f64),
+    /// Running aggregate of an observation stream.
+    Hist {
+        /// Number of observations.
+        count: u64,
+        /// Sum of observations.
+        sum: f64,
+        /// Smallest observation.
+        min: f64,
+        /// Largest observation.
+        max: f64,
+    },
+}
+
+static METRICS: Mutex<BTreeMap<String, MetricValue>> = Mutex::new(BTreeMap::new());
+
+fn with_map<R>(f: impl FnOnce(&mut BTreeMap<String, MetricValue>) -> R) -> R {
+    f(&mut METRICS.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+/// Add `delta` to the named counter (created at zero on first touch, so
+/// a zero delta still registers the key). No-op while disabled. A name
+/// previously used with a different shape is overwritten as a counter.
+pub fn counter_add(name: &str, delta: u64) {
+    if !super::enabled() {
+        return;
+    }
+    with_map(|map| {
+        let entry = map.entry(name.to_string()).or_insert(MetricValue::Counter(0));
+        match entry {
+            MetricValue::Counter(total) => *total += delta,
+            other => *other = MetricValue::Counter(delta),
+        }
+    });
+}
+
+/// Set the named gauge (last write wins). Non-finite values are dropped
+/// so the JSON artifact stays valid. No-op while disabled.
+pub fn gauge_set(name: &str, value: f64) {
+    if !super::enabled() || !value.is_finite() {
+        return;
+    }
+    with_map(|map| {
+        map.insert(name.to_string(), MetricValue::Gauge(value));
+    });
+}
+
+/// Fold one observation into the named histogram. Non-finite values are
+/// dropped. No-op while disabled.
+pub fn observe(name: &str, value: f64) {
+    if !super::enabled() || !value.is_finite() {
+        return;
+    }
+    with_map(|map| {
+        let entry = map.entry(name.to_string()).or_insert(MetricValue::Hist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        });
+        match entry {
+            MetricValue::Hist { count, sum, min, max } => {
+                *count += 1;
+                *sum += value;
+                *min = min.min(value);
+                *max = max.max(value);
+            }
+            other => {
+                *other = MetricValue::Hist {
+                    count: 1,
+                    sum: value,
+                    min: value,
+                    max: value,
+                };
+            }
+        }
+    });
+}
+
+/// Look up one metric by exact name.
+pub fn metric(name: &str) -> Option<MetricValue> {
+    with_map(|map| map.get(name).copied())
+}
+
+/// Convenience: the named metric's value if it is a counter.
+pub fn counter_value(name: &str) -> Option<u64> {
+    match metric(name) {
+        Some(MetricValue::Counter(total)) => Some(total),
+        _ => None,
+    }
+}
+
+/// A sorted copy of the whole registry.
+pub fn metrics_snapshot() -> Vec<(String, MetricValue)> {
+    with_map(|map| map.iter().map(|(k, v)| (k.clone(), *v)).collect())
+}
+
+/// Drop every metric whose name starts with `prefix` (used by the pool
+/// to clear stale `pool.last.workerN.*` keys from a wider earlier run).
+pub(crate) fn clear_prefix(prefix: &str) {
+    with_map(|map| map.retain(|k, _| !k.starts_with(prefix)));
+}
+
+pub(crate) fn clear() {
+    with_map(|map| map.clear());
+}
+
+/// The registry flattened to `name -> f64` pairs: counters and gauges
+/// map directly; a histogram expands to `.count/.sum/.mean/.min/.max`.
+pub fn flat_snapshot() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (name, value) in metrics_snapshot() {
+        match value {
+            MetricValue::Counter(total) => out.push((name, total as f64)),
+            MetricValue::Gauge(v) => out.push((name, v)),
+            MetricValue::Hist { count, sum, min, max } => {
+                let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+                out.push((format!("{name}.count"), count as f64));
+                out.push((format!("{name}.sum"), sum));
+                out.push((format!("{name}.mean"), mean));
+                out.push((format!("{name}.min"), min));
+                out.push((format!("{name}.max"), max));
+            }
+        }
+    }
+    out
+}
+
+fn fmt_number(value: f64) -> String {
+    // Integral values (counters, counts) print without a fraction so the
+    // artifact diffs cleanly; everything else keeps full f64 precision.
+    if value.fract() == 0.0 && value.abs() < 9.0e15 {
+        format!("{}", value as i64)
+    } else {
+        format!("{value}")
+    }
+}
+
+/// Render the flat snapshot as a stable, sorted JSON object.
+pub fn render_metrics_json() -> String {
+    let flat = flat_snapshot();
+    let mut out = String::from("{\n");
+    let last = flat.len();
+    for (i, (name, value)) in flat.iter().enumerate() {
+        let comma = if i + 1 < last { "," } else { "" };
+        let _ = writeln!(out, "  \"{}\": {}{}", name, fmt_number(*value), comma);
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Write [`render_metrics_json`] to `path` (parent directories are
+/// created). Returns the number of flattened keys written.
+pub fn write_metrics_json(path: &Path) -> std::io::Result<usize> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let count = flat_snapshot().len();
+    std::fs::write(path, render_metrics_json())?;
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Metric names below are unique to this module so concurrent unit
+    // tests (which may record their own metrics) cannot interfere; the
+    // sink is force-enabled for the duration of the test body under the
+    // crate-wide telemetry test lock.
+    fn recording<R>(f: impl FnOnce() -> R) -> R {
+        let _guard = super::super::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        super::super::set_enabled(true);
+        let out = f();
+        super::super::set_enabled(false);
+        clear_prefix("unit.metrics.");
+        out
+    }
+
+    #[test]
+    fn counter_sums_and_registers_zero() {
+        recording(|| {
+            counter_add("unit.metrics.counter", 0);
+            assert_eq!(counter_value("unit.metrics.counter"), Some(0));
+            counter_add("unit.metrics.counter", 3);
+            counter_add("unit.metrics.counter", 4);
+            assert_eq!(counter_value("unit.metrics.counter"), Some(7));
+        });
+    }
+
+    #[test]
+    fn gauge_last_write_wins_and_drops_non_finite() {
+        recording(|| {
+            gauge_set("unit.metrics.gauge", 1.5);
+            gauge_set("unit.metrics.gauge", 2.5);
+            gauge_set("unit.metrics.gauge", f64::NAN);
+            assert_eq!(metric("unit.metrics.gauge"), Some(MetricValue::Gauge(2.5)));
+        });
+    }
+
+    #[test]
+    fn histogram_aggregates_and_flattens() {
+        recording(|| {
+            observe("unit.metrics.hist", 2.0);
+            observe("unit.metrics.hist", 6.0);
+            observe("unit.metrics.hist", 1.0);
+            let Some(MetricValue::Hist { count, sum, min, max }) = metric("unit.metrics.hist")
+            else {
+                panic!("expected a histogram");
+            };
+            assert_eq!((count, sum, min, max), (3, 9.0, 1.0, 6.0));
+            let flat = flat_snapshot();
+            let get = |suffix: &str| {
+                flat.iter()
+                    .find(|(k, _)| k == &format!("unit.metrics.hist.{suffix}"))
+                    .map(|(_, v)| *v)
+            };
+            assert_eq!(get("count"), Some(3.0));
+            assert_eq!(get("mean"), Some(3.0));
+            assert_eq!(get("min"), Some(1.0));
+            assert_eq!(get("max"), Some(6.0));
+        });
+    }
+
+    #[test]
+    fn json_rendering_is_flat_and_sorted() {
+        recording(|| {
+            counter_add("unit.metrics.json.b", 2);
+            gauge_set("unit.metrics.json.a", 0.5);
+            let json = render_metrics_json();
+            assert!(json.contains("\"unit.metrics.json.b\": 2"), "{json}");
+            assert!(json.contains("\"unit.metrics.json.a\": 0.5"), "{json}");
+            assert!(
+                json.find("unit.metrics.json.a").unwrap()
+                    < json.find("unit.metrics.json.b").unwrap(),
+                "keys must be sorted: {json}"
+            );
+        });
+    }
+
+    #[test]
+    fn integral_values_print_without_fraction() {
+        assert_eq!(fmt_number(3.0), "3");
+        assert_eq!(fmt_number(0.25), "0.25");
+        assert_eq!(fmt_number(-2.0), "-2");
+        assert_eq!(fmt_number(1.0e18), "1000000000000000000");
+    }
+}

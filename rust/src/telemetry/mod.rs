@@ -1,0 +1,226 @@
+//! Tracing spans, run metrics, and shard-utilization profiling.
+//!
+//! The pipeline (characterize → tune → profile → faults → DRAM → explore)
+//! fans out over threads in several layers — engine batch evaluation,
+//! `util::pool` chunked workers, `gpusim` set-sharded replay — and until
+//! this module the only visibility into where time and work went was
+//! scattered ad-hoc state (engine memo counters, BENCH_*.json emitters).
+//! `telemetry` unifies that into one process-global sink with two faces:
+//!
+//! * **Spans** ([`trace`]): hierarchical RAII timing guards created with
+//!   the [`span!`](crate::span!) macro, recorded per worker thread with
+//!   wall-clock start/duration, exportable as Chrome `trace_event` JSON
+//!   (loadable in `chrome://tracing` / [Perfetto](https://ui.perfetto.dev))
+//!   and as a human-readable flame summary table.
+//! * **Metrics** ([`metrics`]): a registry of named counters / gauges /
+//!   histograms snapshotted into a `run_metrics.json` artifact — engine
+//!   stage hit/miss, pool per-worker busy time (the ROADMAP item 4
+//!   load-imbalance evidence), gpusim per-shard access counts, membackend
+//!   row-class counters, reliability fault tallies.
+//!
+//! # Zero cost when disabled
+//!
+//! The sink is off by default. Every recording entry point is gated on
+//! [`enabled`], a single relaxed atomic load that the branch predictor
+//! eats; the `span!` macro additionally skips all argument formatting
+//! when the sink is off. BENCH_sim asserts the compiled-in-but-disabled
+//! overhead stays ≤2% on the sharded replay hot path, and the golden
+//! tests pin that results are bit-identical either way.
+//!
+//! # Usage
+//!
+//! ```
+//! deepnvm::telemetry::set_enabled(true);
+//! {
+//!     let _span = deepnvm::span!("demo.outer", items = 3);
+//!     deepnvm::telemetry::counter_add("demo.count", 3);
+//! }
+//! assert_eq!(deepnvm::telemetry::spans_snapshot().len(), 1);
+//! deepnvm::telemetry::set_enabled(false);
+//! deepnvm::telemetry::reset();
+//! ```
+//!
+//! On the CLI, `repro <command> --trace trace.json --metrics [path]`
+//! enables the sink for the whole run and writes both artifacts on exit
+//! (see EXPERIMENTS.md §Telemetry & profiling).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    counter_add, counter_value, gauge_set, metric, metrics_snapshot, observe,
+    render_metrics_json, write_metrics_json, MetricValue,
+};
+pub use trace::{
+    begin_span, flame_summary, render_trace_json, spans_snapshot, write_trace_json, Span,
+    SpanInfo,
+};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Process-global on/off switch. Off by default; flipped by the CLI's
+/// `--trace` / `--metrics` flags (or tests/benches directly).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the telemetry sink recording? A single relaxed load — cheap enough
+/// for the innermost hot paths (the whole point of the design).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the process-global sink on or off. Enabling also pins the trace
+/// epoch (the `Instant` all span timestamps are relative to) so the first
+/// recorded span starts near `ts = 0`.
+pub fn set_enabled(on: bool) {
+    if on {
+        trace::init_epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Drop all recorded spans and metrics (the enabled flag is untouched).
+/// Tests and benches call this between phases; per-run CLI processes
+/// never need to.
+pub fn reset() {
+    trace::clear();
+    metrics::clear();
+}
+
+/// Where the CLI should write the artifacts at process exit. Stored
+/// globally so the coordinator can echo the paths into its manifest.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArtifactPaths {
+    /// Chrome `trace_event` JSON target (`--trace <path>`).
+    pub trace: Option<PathBuf>,
+    /// Metrics snapshot target (`--metrics [path]`).
+    pub metrics: Option<PathBuf>,
+}
+
+static ARTIFACTS: Mutex<ArtifactPaths> = Mutex::new(ArtifactPaths {
+    trace: None,
+    metrics: None,
+});
+
+/// Record the artifact targets for this run (CLI flag parsing calls this).
+pub fn set_artifact_paths(paths: ArtifactPaths) {
+    *ARTIFACTS.lock().unwrap_or_else(|e| e.into_inner()) = paths;
+}
+
+/// The artifact targets recorded by [`set_artifact_paths`] (empty when
+/// the run was started without telemetry flags).
+pub fn artifact_paths() -> ArtifactPaths {
+    ARTIFACTS.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Create (record) a hierarchical timing span. Expands to a cheap
+/// enabled-check; when the sink is off no formatting or allocation
+/// happens and a dummy guard is returned.
+///
+/// ```
+/// deepnvm::telemetry::set_enabled(true);
+/// let _plain = deepnvm::span!("stage.name");
+/// let _args = deepnvm::span!("stage.name", net = "alexnet", batch = 4);
+/// deepnvm::telemetry::set_enabled(false);
+/// deepnvm::telemetry::reset();
+/// ```
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::telemetry::begin_span($name, ::std::string::String::new())
+    };
+    ($name:expr, $($key:ident = $value:expr),+ $(,)?) => {
+        if $crate::telemetry::enabled() {
+            let mut _args = ::std::string::String::new();
+            $(
+                {
+                    use ::std::fmt::Write as _;
+                    if !_args.is_empty() {
+                        _args.push(' ');
+                    }
+                    let _ = ::std::write!(
+                        _args,
+                        concat!(stringify!($key), "={}"),
+                        $value
+                    );
+                }
+            )+
+            $crate::telemetry::begin_span($name, _args)
+        } else {
+            $crate::telemetry::Span::disabled()
+        }
+    };
+}
+
+/// Telemetry state is process-global and the crate's unit tests share a
+/// process: every in-crate test that flips [`set_enabled`] must hold
+/// this lock so it cannot leak an enabled sink into a test asserting
+/// disabled behavior.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Other unit tests may run `par_map` concurrently and add their own
+    // pool spans, so assertions here filter by names unique to this
+    // module.
+
+    fn count_spans(name: &str) -> usize {
+        spans_snapshot().iter().filter(|s| s.name == name).count()
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        {
+            let _span = crate::span!("unit.mod.disabled", k = 1);
+            counter_add("unit.mod.disabled.count", 7);
+            gauge_set("unit.mod.disabled.gauge", 1.0);
+            observe("unit.mod.disabled.hist", 1.0);
+        }
+        assert_eq!(count_spans("unit.mod.disabled"), 0);
+        assert!(metric("unit.mod.disabled.count").is_none());
+        assert!(metric("unit.mod.disabled.gauge").is_none());
+        assert!(metric("unit.mod.disabled.hist").is_none());
+    }
+
+    #[test]
+    fn enabled_sink_records_spans_with_args() {
+        let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        {
+            let _outer = crate::span!("unit.mod.outer", net = "alexnet", batch = 4);
+            let _inner = crate::span!("unit.mod.inner");
+        }
+        set_enabled(false);
+        assert_eq!(count_spans("unit.mod.outer"), 1);
+        assert_eq!(count_spans("unit.mod.inner"), 1);
+        let spans = spans_snapshot();
+        let outer = spans.iter().find(|s| s.name == "unit.mod.outer").unwrap();
+        let inner = spans.iter().find(|s| s.name == "unit.mod.inner").unwrap();
+        assert_eq!(outer.args, "net=alexnet batch=4");
+        assert_eq!(inner.depth, outer.depth + 1);
+        assert_eq!(inner.tid, outer.tid);
+        // The inner span closed first and is contained in the outer one.
+        assert!(outer.start_ns <= inner.start_ns);
+        assert!(outer.start_ns + outer.dur_ns >= inner.start_ns + inner.dur_ns);
+        trace::clear();
+    }
+
+    #[test]
+    fn artifact_paths_round_trip() {
+        let paths = ArtifactPaths {
+            trace: Some(PathBuf::from("/tmp/trace.json")),
+            metrics: None,
+        };
+        set_artifact_paths(paths.clone());
+        assert_eq!(artifact_paths(), paths);
+        set_artifact_paths(ArtifactPaths::default());
+        assert_eq!(artifact_paths(), ArtifactPaths::default());
+    }
+}

@@ -1,0 +1,290 @@
+//! Hierarchical tracing spans and the Chrome `trace_event` exporter.
+//!
+//! A [`Span`] is an RAII guard: created via [`begin_span`] (normally
+//! through the [`span!`](crate::span!) macro), it notes the wall-clock
+//! start, and on drop appends one [`SpanInfo`] record to the process-wide
+//! buffer. Records carry a per-thread id (worker threads get fresh ids)
+//! and a per-thread nesting depth, which is enough to reconstruct the
+//! span tree: a span's parent is the enclosing same-thread span one
+//! depth level up.
+//!
+//! Export targets:
+//! * [`write_trace_json`] — Chrome `trace_event` "complete event" array
+//!   (`ph = "X"`), loadable in `chrome://tracing` or Perfetto; timestamps
+//!   are microseconds since the trace epoch with nanosecond decimals.
+//! * [`flame_summary`] — a per-span-name aggregate table (count, total,
+//!   mean, share of wall time) for terminal output.
+
+use std::cell::Cell;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::table::Table;
+
+/// One completed span, as recorded by a dropped [`Span`] guard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanInfo {
+    /// Span name (dotted `subsystem.stage` convention, e.g. `pool.chunk`).
+    pub name: String,
+    /// Pre-formatted `key=value` argument string (may be empty).
+    pub args: String,
+    /// Recording thread's telemetry id (1-based; fresh per OS thread).
+    pub tid: u64,
+    /// Nesting depth on that thread when the span opened (0 = root).
+    pub depth: u32,
+    /// Wall-clock start, nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    /// Wall-clock duration in nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// The instant all span timestamps are measured from. Pinned the first
+/// time the sink is enabled so traces start near `ts = 0`.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+pub(crate) fn init_epoch() {
+    let _ = EPOCH.get_or_init(Instant::now);
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Completed-span buffer. A plain mutex is fine: spans push once on drop
+/// (hot paths hold the guard for one `Vec::push`) and the disabled path
+/// never touches it.
+static SPANS: Mutex<Vec<SpanInfo>> = Mutex::new(Vec::new());
+
+/// Telemetry thread-id allocator (0 is reserved for "unassigned").
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// This thread's telemetry id (lazily drawn from [`NEXT_TID`]).
+    static TID: Cell<u64> = const { Cell::new(0) };
+    /// This thread's current span nesting depth.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+fn current_tid() -> u64 {
+    TID.with(|cell| {
+        let id = cell.get();
+        if id != 0 {
+            return id;
+        }
+        let fresh = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        cell.set(fresh);
+        fresh
+    })
+}
+
+struct ActiveSpan {
+    name: &'static str,
+    args: String,
+    tid: u64,
+    depth: u32,
+    start: Instant,
+}
+
+/// RAII span guard: records a [`SpanInfo`] when dropped. Create through
+/// the [`span!`](crate::span!) macro (or [`begin_span`] directly).
+#[must_use = "a span measures the scope it lives in; binding it to `_` drops it immediately"]
+pub struct Span(Option<ActiveSpan>);
+
+impl Span {
+    /// The no-op guard handed out while the sink is disabled.
+    pub fn disabled() -> Span {
+        Span(None)
+    }
+}
+
+/// Open a span. Returns the no-op guard when the sink is disabled, so
+/// callers (and the `span!` macro) never need their own gate. `name`
+/// is `&'static str` by design: span names are code, not data — dynamic
+/// detail belongs in `args`.
+pub fn begin_span(name: &'static str, args: String) -> Span {
+    if !super::enabled() {
+        return Span(None);
+    }
+    let tid = current_tid();
+    let depth = DEPTH.with(|d| {
+        let depth = d.get();
+        d.set(depth + 1);
+        depth
+    });
+    Span(Some(ActiveSpan {
+        name,
+        args,
+        tid,
+        depth,
+        start: Instant::now(),
+    }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(active) = self.0.take() else {
+            return;
+        };
+        let dur_ns = active.start.elapsed().as_nanos() as u64;
+        let start_ns = active.start.saturating_duration_since(epoch()).as_nanos() as u64;
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        SPANS.lock().unwrap_or_else(|e| e.into_inner()).push(SpanInfo {
+            name: active.name.to_string(),
+            args: active.args,
+            tid: active.tid,
+            depth: active.depth,
+            start_ns,
+            dur_ns,
+        });
+    }
+}
+
+/// A copy of every span recorded so far (completion order).
+pub fn spans_snapshot() -> Vec<SpanInfo> {
+    SPANS.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+pub(crate) fn clear() {
+    SPANS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render all recorded spans as a Chrome `trace_event` JSON array of
+/// complete events (`ph = "X"`), sorted by thread then start time.
+/// `ts`/`dur` are microseconds with three decimals (nanosecond grain).
+pub fn render_trace_json() -> String {
+    let mut spans = spans_snapshot();
+    spans.sort_by_key(|s| (s.tid, s.start_ns, std::cmp::Reverse(s.dur_ns)));
+    let mut out = String::from("[\n");
+    let last = spans.len();
+    for (i, s) in spans.iter().enumerate() {
+        let comma = if i + 1 < last { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "  {{\"name\":\"{}\",\"cat\":\"deepnvm\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{}.{:03},\"dur\":{}.{:03},\"args\":{{\"detail\":\"{}\"}}}}{}",
+            json_escape(&s.name),
+            s.tid,
+            s.start_ns / 1_000,
+            s.start_ns % 1_000,
+            s.dur_ns / 1_000,
+            s.dur_ns % 1_000,
+            json_escape(&s.args),
+            comma,
+        );
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write [`render_trace_json`] to `path` (parent directories are
+/// created). Returns the number of spans written.
+pub fn write_trace_json(path: &Path) -> std::io::Result<usize> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let rendered = render_trace_json();
+    let count = SPANS.lock().unwrap_or_else(|e| e.into_inner()).len();
+    std::fs::write(path, rendered)?;
+    Ok(count)
+}
+
+/// Aggregate recorded spans by name into a terminal flame summary:
+/// count, total/mean time, and share of the trace's wall-clock window
+/// (summed self-times can exceed 100% — parallel workers overlap).
+/// `None` when no spans were recorded.
+pub fn flame_summary() -> Option<Table> {
+    let spans = spans_snapshot();
+    if spans.is_empty() {
+        return None;
+    }
+    let t0 = spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    let t1 = spans.iter().map(|s| s.start_ns + s.dur_ns).max().unwrap_or(0);
+    let wall_ns = t1.saturating_sub(t0).max(1);
+
+    use std::collections::BTreeMap;
+    struct Agg {
+        count: u64,
+        total_ns: u64,
+        max_ns: u64,
+    }
+    let mut by_name: BTreeMap<&str, Agg> = BTreeMap::new();
+    for s in &spans {
+        let agg = by_name.entry(s.name.as_str()).or_insert(Agg {
+            count: 0,
+            total_ns: 0,
+            max_ns: 0,
+        });
+        agg.count += 1;
+        agg.total_ns += s.dur_ns;
+        agg.max_ns = agg.max_ns.max(s.dur_ns);
+    }
+    let mut rows: Vec<(&str, Agg)> = by_name.into_iter().collect();
+    rows.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns).then(a.0.cmp(b.0)));
+
+    let wall_s = wall_ns as f64 / 1e9;
+    let mut table = Table::new(
+        format!("flame summary ({} spans, {wall_s:.3}s wall)", spans.len()),
+        &["span", "count", "total ms", "mean us", "max us", "% wall", ""],
+    );
+    for (name, agg) in rows {
+        let pct = 100.0 * agg.total_ns as f64 / wall_ns as f64;
+        let bar = "#".repeat(((pct / 5.0).round() as usize).min(20));
+        table.row(&[
+            name.to_string(),
+            agg.count.to_string(),
+            format!("{:.3}", agg.total_ns as f64 / 1e6),
+            format!("{:.1}", agg.total_ns as f64 / 1e3 / agg.count as f64),
+            format!("{:.1}", agg.max_ns as f64 / 1e3),
+            format!("{pct:.1}"),
+            bar,
+        ]);
+    }
+    Some(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn disabled_begin_span_is_inert() {
+        // Regardless of the global switch, an explicitly disabled guard
+        // records nothing and does not touch the depth counter.
+        let before = DEPTH.with(|d| d.get());
+        {
+            let _span = Span::disabled();
+        }
+        assert_eq!(DEPTH.with(|d| d.get()), before);
+    }
+}

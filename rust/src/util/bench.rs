@@ -19,9 +19,24 @@ impl BenchHarness {
         BenchHarness { records: Vec::new() }
     }
 
+    /// Abort on a name collision: records are JSON keys, so a duplicate
+    /// would silently last-write-win and corrupt the perf trajectory.
+    fn assert_fresh(&self, name: &str) {
+        assert!(
+            !self.records.iter().any(|(existing, _)| existing == name),
+            "BenchHarness: duplicate record name {name:?} — records are JSON keys; \
+             rename one of the entries"
+        );
+    }
+
     /// Time `f` over `iters` iterations (after one warmup call), print
     /// the per-iteration time, record it, and return it in seconds.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `name` was already recorded (see [`Self::record`]).
     pub fn bench<F: FnMut()>(&mut self, name: &str, iters: u32, mut f: F) -> f64 {
+        self.assert_fresh(name);
         // Warmup.
         f();
         let t0 = Instant::now();
@@ -46,7 +61,13 @@ impl BenchHarness {
     /// Record a derived metric (e.g. a lines/sec throughput computed from
     /// a timed run) under `name`. It lands in the JSON next to the timed
     /// entries; the name should carry the unit.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `name` was already recorded — names become JSON keys and
+    /// a silent overwrite would corrupt the perf trajectory.
     pub fn record(&mut self, name: &str, value: f64) {
+        self.assert_fresh(name);
         self.records.push((name.to_string(), value));
     }
 
@@ -89,5 +110,21 @@ mod tests {
         h.record("trace: lines/sec", 1.25e6);
         assert_eq!(h.records.len(), 1);
         assert_eq!(h.records[0], ("trace: lines/sec".to_string(), 1.25e6));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate record name")]
+    fn duplicate_record_name_panics() {
+        let mut h = BenchHarness::new();
+        h.record("same", 1.0);
+        h.record("same", 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate record name")]
+    fn duplicate_bench_name_panics() {
+        let mut h = BenchHarness::new();
+        h.record("same", 1.0);
+        let _ = h.bench("same", 1, || {});
     }
 }

@@ -7,6 +7,7 @@
 
 use std::cell::Cell;
 use std::sync::Mutex;
+use std::time::Instant;
 
 thread_local! {
     /// Set for the lifetime of every spawned pool worker thread.
@@ -46,6 +47,77 @@ pub fn num_threads() -> usize {
 /// reference) and items are taken by reference.
 pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
     par_map_indexed(items, |_, item| f(item))
+}
+
+/// Shard-utilization record of the most recent *top-level* [`par_map`] /
+/// [`par_map_indexed`] call (nested maps made from inside pool workers
+/// run sequentially and do not overwrite it). Collected unconditionally —
+/// the bookkeeping is two `Instant` reads per chunk — so BENCH_sim can
+/// print the load-imbalance baseline ROADMAP item 4's work-stealing
+/// scheduler will be judged against, even without telemetry enabled.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PoolRunStats {
+    /// Items mapped.
+    pub items: usize,
+    /// Workers used (1 = the sequential inline fallback).
+    pub workers: usize,
+    /// Per-worker `(items processed, busy seconds)`, indexed by worker.
+    pub per_worker: Vec<(usize, f64)>,
+}
+
+impl PoolRunStats {
+    /// Load imbalance as max/mean per-worker busy time: `1.0` is a
+    /// perfectly balanced (or single-worker) run; `2.0` means the
+    /// slowest worker was busy twice as long as the average.
+    pub fn imbalance(&self) -> f64 {
+        if self.per_worker.is_empty() {
+            return 1.0;
+        }
+        let max = self.per_worker.iter().map(|&(_, b)| b).fold(0.0_f64, f64::max);
+        let mean =
+            self.per_worker.iter().map(|&(_, b)| b).sum::<f64>() / self.per_worker.len() as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+}
+
+static LAST_STATS: Mutex<Option<PoolRunStats>> = Mutex::new(None);
+
+/// Stats of the most recent top-level parallel map (`None` before any
+/// has run in this process).
+pub fn last_stats() -> Option<PoolRunStats> {
+    LAST_STATS.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Max/mean busy-time imbalance of the most recent top-level parallel
+/// map (`1.0` when none has run yet). See [`PoolRunStats::imbalance`].
+pub fn last_imbalance() -> f64 {
+    last_stats().map(|s| s.imbalance()).unwrap_or(1.0)
+}
+
+/// Store a finished run's stats (top-level calls only) and mirror them
+/// into the telemetry metrics registry when the sink is enabled.
+fn record_run(stats: PoolRunStats) {
+    if in_worker() {
+        return;
+    }
+    if crate::telemetry::enabled() {
+        // Clear stale per-worker keys from a wider earlier run before
+        // overwriting, so `pool.last.*` always describes one run.
+        crate::telemetry::metrics::clear_prefix("pool.last.");
+        crate::telemetry::gauge_set("pool.last.items", stats.items as f64);
+        crate::telemetry::gauge_set("pool.last.workers", stats.workers as f64);
+        crate::telemetry::gauge_set("pool.last.imbalance", stats.imbalance());
+        for (w, &(items, busy)) in stats.per_worker.iter().enumerate() {
+            crate::telemetry::gauge_set(&format!("pool.last.worker{w}.items"), items as f64);
+            crate::telemetry::gauge_set(&format!("pool.last.worker{w}.busy_s"), busy);
+            crate::telemetry::observe("pool.worker.busy_s", busy);
+        }
+    }
+    *LAST_STATS.lock().unwrap_or_else(|e| e.into_inner()) = Some(stats);
 }
 
 /// Render a caught panic payload as a message (panics carry `&str` or
@@ -89,6 +161,9 @@ pub fn par_map_indexed<T: Sync, R: Send>(
     }
     let workers = num_threads().min(n);
     if workers <= 1 {
+        // The inline fallback is one chunk: one span, one busy interval.
+        let _span = crate::span!("pool.chunk", worker = 0, start = 0, len = n);
+        let t0 = Instant::now();
         let mut out = Vec::with_capacity(n);
         for (i, t) in items.iter().enumerate() {
             match catch_unwind(AssertUnwindSafe(|| f(i, t))) {
@@ -100,6 +175,11 @@ pub fn par_map_indexed<T: Sync, R: Send>(
                 ),
             }
         }
+        record_run(PoolRunStats {
+            items: n,
+            workers: 1,
+            per_worker: vec![(n, t0.elapsed().as_secs_f64())],
+        });
         return out;
     }
     let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
@@ -115,10 +195,19 @@ pub fn par_map_indexed<T: Sync, R: Send>(
     // (chunk index, first item, one-past-last item, panic message) per
     // poisoned chunk.
     let failures: Mutex<Vec<(usize, usize, usize, String)>> = Mutex::new(Vec::new());
+    // Per-worker `(worker, items, busy seconds)` utilization, pushed once
+    // per worker on drain.
+    let worker_stats: Mutex<Vec<(usize, usize, f64)>> = Mutex::new(Vec::new());
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
+        let queue = &queue;
+        let failures = &failures;
+        let worker_stats = &worker_stats;
+        let f = &f;
+        for w in 0..workers {
+            scope.spawn(move || {
                 IN_WORKER.with(|c| c.set(true));
+                let mut my_items = 0usize;
+                let mut my_busy = 0.0_f64;
                 loop {
                     // Tolerate the poison flag: a panicking closure is
                     // caught below, but being robust here costs nothing.
@@ -127,6 +216,8 @@ pub fn par_map_indexed<T: Sync, R: Send>(
                         break;
                     };
                     let len = range.len();
+                    let _span = crate::span!("pool.chunk", worker = w, start = start, len = len);
+                    let t0 = Instant::now();
                     // AssertUnwindSafe: on a caught panic the whole map
                     // aborts, so nobody observes the half-written chunk.
                     let run = catch_unwind(AssertUnwindSafe(|| {
@@ -134,17 +225,30 @@ pub fn par_map_indexed<T: Sync, R: Send>(
                             *slot = Some(f(start + off, &items[start + off]));
                         }
                     }));
+                    my_busy += t0.elapsed().as_secs_f64();
+                    my_items += len;
                     if let Err(payload) = run {
-                        failures
-                            .lock()
-                            .unwrap_or_else(|e| e.into_inner())
-                            .push((start / chunk, start, start + len, panic_message(payload)));
+                        failures.lock().unwrap_or_else(|e| e.into_inner()).push((
+                            start / chunk,
+                            start,
+                            start + len,
+                            panic_message(payload),
+                        ));
                     }
                 }
+                worker_stats
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push((w, my_items, my_busy));
             });
         }
     });
     drop(queue);
+    let mut per_worker: Vec<(usize, f64)> = vec![(0, 0.0); workers];
+    for (w, done, busy) in worker_stats.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        per_worker[w] = (done, busy);
+    }
+    record_run(PoolRunStats { items: n, workers, per_worker });
     let mut failures = failures.into_inner().unwrap_or_else(|e| e.into_inner());
     if !failures.is_empty() {
         failures.sort();
@@ -238,6 +342,38 @@ mod tests {
         assert_eq!(panic_message(Box::new("static")), "static");
         assert_eq!(panic_message(Box::new(String::from("owned"))), "owned");
         assert_eq!(panic_message(Box::new(42u32)), "non-string panic payload");
+    }
+
+    #[test]
+    fn run_stats_are_internally_consistent() {
+        let items: Vec<u64> = (0..512).collect();
+        let _ = par_map(&items, |&x| x + 1);
+        // Other unit tests may run their own top-level maps concurrently,
+        // so assert the invariants every recorded run must satisfy rather
+        // than pinning this run's shape.
+        let stats = last_stats().expect("a top-level run was recorded");
+        assert_eq!(stats.per_worker.len(), stats.workers);
+        let covered: usize = stats.per_worker.iter().map(|&(done, _)| done).sum();
+        assert_eq!(covered, stats.items, "workers account for every item");
+        assert!(stats.imbalance() >= 1.0 - 1e-9, "{}", stats.imbalance());
+        assert!(last_imbalance() >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean_busy_time() {
+        let stats = PoolRunStats {
+            items: 4,
+            workers: 2,
+            per_worker: vec![(2, 3.0), (2, 1.0)],
+        };
+        assert!((stats.imbalance() - 1.5).abs() < 1e-12);
+        assert_eq!(PoolRunStats::default().imbalance(), 1.0);
+        let idle = PoolRunStats {
+            items: 1,
+            workers: 1,
+            per_worker: vec![(1, 0.0)],
+        };
+        assert_eq!(idle.imbalance(), 1.0, "all-zero busy times are balanced");
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Integration tests for the telemetry subsystem: span trees reconstruct
+//! under any pool worker count, the Chrome `trace_event` JSON round-trips
+//! through a minimal hand-rolled parser, the metrics snapshot agrees with
+//! the engine's own stage counters, and the disabled sink is invisible —
+//! silent in the buffers and bit-identical in simulation results.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use deepnvm::engine::{Engine, Query};
+use deepnvm::gpusim::{net_trace, simulate_sharded, Access, CacheConfig, GpuConfig};
+use deepnvm::telemetry::{self, MetricValue, SpanInfo};
+use deepnvm::util::pool::par_map;
+use deepnvm::util::units::MB;
+use deepnvm::workloads::nets;
+
+/// Telemetry state is process-global and this binary's tests run on
+/// parallel harness threads: every test here flips the switch, so they
+/// serialize on this lock.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn span_end(s: &SpanInfo) -> u64 {
+    s.start_ns + s.dur_ns
+}
+
+/// `inner` lies within `outer` (inclusive — zero-length spans allowed).
+fn contains(outer: &SpanInfo, inner: &SpanInfo) -> bool {
+    outer.start_ns <= inner.start_ns && span_end(inner) <= span_end(outer)
+}
+
+#[test]
+fn span_tree_reconstructs_under_any_worker_count() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for workers in [1usize, 2, 7] {
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        std::env::set_var("DEEPNVM_THREADS", workers.to_string());
+        let items: Vec<u64> = (0..40).collect();
+        {
+            let _outer = deepnvm::span!("test.run", workers = workers);
+            let doubled = par_map(&items, |&x| {
+                let _span = deepnvm::span!("test.item", x = x);
+                x * 2
+            });
+            assert_eq!(doubled.len(), items.len());
+        }
+        std::env::remove_var("DEEPNVM_THREADS");
+        telemetry::set_enabled(false);
+        let spans = telemetry::spans_snapshot();
+        telemetry::reset();
+
+        let count = |name: &str| spans.iter().filter(|s| s.name == name).count();
+        assert_eq!(count("test.run"), 1, "workers={workers}");
+        assert_eq!(count("test.item"), items.len(), "workers={workers}");
+        assert!(count("pool.chunk") >= 1, "workers={workers}");
+
+        // Same-thread spans must form a tree: any two either nest or are
+        // disjoint, and every nested span has a parent one level up.
+        for a in &spans {
+            for b in &spans {
+                if a.tid != b.tid {
+                    continue;
+                }
+                assert!(
+                    span_end(a) <= b.start_ns
+                        || span_end(b) <= a.start_ns
+                        || contains(a, b)
+                        || contains(b, a),
+                    "workers={workers}: same-tid spans overlap without nesting: {a:?} / {b:?}"
+                );
+            }
+        }
+        for s in &spans {
+            if s.depth == 0 {
+                continue;
+            }
+            assert!(
+                spans
+                    .iter()
+                    .any(|p| p.tid == s.tid && p.depth == s.depth - 1 && contains(p, s)),
+                "workers={workers}: no parent at depth {} encloses {s:?}",
+                s.depth - 1
+            );
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_json_round_trips() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    {
+        let _outer = deepnvm::span!("test.json.outer", label = "quote\"and\\slash", n = 2);
+        let _inner = deepnvm::span!("test.json.inner");
+    }
+    telemetry::set_enabled(false);
+    let recorded = telemetry::spans_snapshot().len();
+    let json = telemetry::render_trace_json();
+    telemetry::reset();
+
+    let events = parse_events(&json);
+    assert_eq!(events.len(), recorded);
+    for ev in &events {
+        assert_eq!(ev["ph"], "X");
+        assert_eq!(ev["cat"], "deepnvm");
+        assert_eq!(ev["pid"], "1");
+        for key in ["name", "tid", "ts", "dur", "args.detail"] {
+            assert!(ev.contains_key(key), "missing {key}: {ev:?}");
+        }
+        let ts: f64 = ev["ts"].parse().expect("ts must be numeric");
+        let dur: f64 = ev["dur"].parse().expect("dur must be numeric");
+        assert!(ts >= 0.0 && dur >= 0.0);
+    }
+    let outer = events.iter().find(|e| e["name"] == "test.json.outer").unwrap();
+    assert_eq!(outer["args.detail"], "label=quote\"and\\slash n=2");
+}
+
+#[test]
+fn metrics_snapshot_matches_engine_stage_counters() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    // A fresh engine so the counters are exactly this test's traffic: the
+    // first batch misses, the repeat hits the memo.
+    let engine = Engine::new();
+    let queries =
+        vec![Query::tune("stt", MB), Query::tune("stt", 2 * MB), Query::tune("sot", MB)];
+    for r in engine.evaluate_many(&queries).iter().chain(engine.evaluate_many(&queries).iter()) {
+        assert!(r.is_ok(), "{r:?}");
+    }
+    let totals = engine.totals();
+    totals.record_metrics("engine");
+    telemetry::set_enabled(false);
+    let gauge = |key: &str| match telemetry::metric(key) {
+        Some(MetricValue::Gauge(v)) => v as u64,
+        other => panic!("{key}: expected a gauge, got {other:?}"),
+    };
+    assert!(totals.tune.misses > 0 && totals.tune.hits > 0, "{totals:?}");
+    for (stage, hm) in [
+        ("characterize", &totals.characterize),
+        ("tune", &totals.tune),
+        ("profile", &totals.profile),
+        ("faults", &totals.faults),
+    ] {
+        assert_eq!(gauge(&format!("engine.{stage}.hits")), hm.hits, "{stage}");
+        assert_eq!(gauge(&format!("engine.{stage}.misses")), hm.misses, "{stage}");
+    }
+    telemetry::reset();
+}
+
+#[test]
+fn disabled_sink_is_invisible_and_bit_identical() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let net = nets::alexnet();
+    let trace: Vec<Access> = net_trace(&net, 1).collect();
+    let gpu = GpuConfig::gtx_1080_ti();
+    let off = simulate_sharded(trace.iter().copied(), &gpu, CacheConfig::default(), 0, 4);
+    assert!(telemetry::spans_snapshot().is_empty(), "disabled runs must record no spans");
+    assert!(telemetry::metrics_snapshot().is_empty(), "disabled runs must record no metrics");
+    telemetry::set_enabled(true);
+    let on = simulate_sharded(trace.iter().copied(), &gpu, CacheConfig::default(), 0, 4);
+    telemetry::set_enabled(false);
+    let spans = telemetry::spans_snapshot();
+    telemetry::reset();
+    assert_eq!(off, on, "telemetry must not perturb simulation counters");
+    assert!(spans.iter().any(|s| s.name == "gpusim.shard"), "shard spans must record");
+    assert!(spans.iter().any(|s| s.name == "pool.chunk"), "pool spans must record");
+}
+
+// ---------------------------------------------------------------------
+// Minimal hand-rolled parser for the subset of JSON the trace emitter
+// produces: an array of flat objects whose values are strings, numbers,
+// or one level of nested object (`args`); nested keys flatten to
+// `outer.inner`. Panics (failing the test) on anything malformed.
+
+type Stream<'a> = std::iter::Peekable<std::str::Chars<'a>>;
+
+fn parse_events(json: &str) -> Vec<BTreeMap<String, String>> {
+    let mut c = json.chars().peekable();
+    skip_ws(&mut c);
+    expect(&mut c, '[');
+    let mut events = Vec::new();
+    loop {
+        skip_ws(&mut c);
+        match c.peek() {
+            Some(']') => {
+                c.next();
+                break;
+            }
+            Some('{') => {
+                let mut flat = BTreeMap::new();
+                parse_object(&mut c, "", &mut flat);
+                events.push(flat);
+                skip_ws(&mut c);
+                if c.peek() == Some(&',') {
+                    c.next();
+                }
+            }
+            other => panic!("unexpected token {other:?} in trace JSON"),
+        }
+    }
+    skip_ws(&mut c);
+    assert!(c.next().is_none(), "trailing garbage after the trace array");
+    events
+}
+
+fn skip_ws(c: &mut Stream<'_>) {
+    while matches!(c.peek(), Some(' ' | '\n' | '\r' | '\t')) {
+        c.next();
+    }
+}
+
+fn expect(c: &mut Stream<'_>, want: char) {
+    assert_eq!(c.next(), Some(want), "expected {want:?}");
+}
+
+fn parse_string(c: &mut Stream<'_>) -> String {
+    expect(c, '"');
+    let mut out = String::new();
+    loop {
+        match c.next().expect("unterminated string") {
+            '"' => return out,
+            '\\' => match c.next().expect("unterminated escape") {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                'r' => out.push('\r'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String =
+                        (0..4).map(|_| c.next().expect("short \\u escape")).collect();
+                    let code = u32::from_str_radix(&hex, 16).expect("bad \\u escape");
+                    out.push(char::from_u32(code).expect("bad code point"));
+                }
+                other => panic!("unknown escape \\{other}"),
+            },
+            ch => out.push(ch),
+        }
+    }
+}
+
+fn parse_object(c: &mut Stream<'_>, prefix: &str, flat: &mut BTreeMap<String, String>) {
+    expect(c, '{');
+    skip_ws(c);
+    if c.peek() == Some(&'}') {
+        c.next();
+        return;
+    }
+    loop {
+        skip_ws(c);
+        let key = parse_string(c);
+        let full = if prefix.is_empty() { key } else { format!("{prefix}.{key}") };
+        skip_ws(c);
+        expect(c, ':');
+        skip_ws(c);
+        match c.peek() {
+            Some('"') => {
+                let value = parse_string(c);
+                flat.insert(full, value);
+            }
+            Some('{') => parse_object(c, &full, flat),
+            _ => {
+                let mut num = String::new();
+                while let Some(&ch) = c.peek() {
+                    if ch.is_ascii_digit() || matches!(ch, '-' | '+' | '.' | 'e' | 'E') {
+                        num.push(ch);
+                        c.next();
+                    } else {
+                        break;
+                    }
+                }
+                assert!(!num.is_empty(), "expected a value for {full}");
+                flat.insert(full, num);
+            }
+        }
+        skip_ws(c);
+        match c.next() {
+            Some(',') => continue,
+            Some('}') => break,
+            other => panic!("unexpected {other:?} in object"),
+        }
+    }
+}

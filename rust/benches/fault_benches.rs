@@ -19,7 +19,7 @@ use deepnvm::gpusim::{
 };
 use deepnvm::reliability::{FaultConfig, RelSpec};
 use deepnvm::util::bench::BenchHarness;
-use deepnvm::util::pool::num_threads;
+use deepnvm::util::pool::{num_threads, recommended_shards};
 use deepnvm::workloads::nets;
 
 fn main() {
@@ -32,8 +32,12 @@ fn main() {
     let gpu = GpuConfig::gtx_1080_ti();
     let cache = CacheConfig::default();
     let threads = num_threads();
+    let shards = recommended_shards();
     let faults = FaultConfig { rel: RelSpec::stt_default(), seed: 0xF417 };
-    println!("alexnet b4 trace: {} accesses, {threads} worker threads", trace.len());
+    println!(
+        "alexnet b4 trace: {} accesses, {threads} worker threads, {shards} shards",
+        trace.len()
+    );
 
     // Two interleaved rounds per side, best-of for the overhead check:
     // both sides run the identical code path (the injector is None), so
@@ -86,7 +90,7 @@ fn main() {
             &gpu,
             cache,
             0,
-            threads,
+            shards,
             Some(faults),
         ));
     });
@@ -95,10 +99,10 @@ fn main() {
     // Exactness double-checks while we are here: the bench must never
     // record a throughput for a fault path that drifted.
     let a = simulate(trace.iter().copied(), &gpu);
-    let b = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, threads, None);
+    let b = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, shards, None);
     assert_eq!(a, b, "fault-free fault-aware replay must match the plain simulator");
     let seq = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, 1, Some(faults));
-    let par = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, threads, Some(faults));
+    let par = simulate_with_faults(trace.iter().copied(), &gpu, cache, 0, shards, Some(faults));
     assert_eq!(seq, par, "sharded fault counts must match sequential exactly");
 
     h.write_json("DEEPNVM_BENCH_FAULTS_JSON", "BENCH_faults.json");

@@ -21,7 +21,9 @@ use deepnvm::analysis::evaluate;
 use deepnvm::device::bitcell::BitcellKind;
 use deepnvm::device::characterize::characterize_kind;
 use deepnvm::gpusim::cache::Cache;
-use deepnvm::gpusim::{capacity_sweep, fig7_capacities, net_trace, simulate, Access, GpuConfig};
+use deepnvm::gpusim::{
+    capacity_sweep, fig7_capacities, net_trace, simulate, Access, CompressedTrace, GpuConfig,
+};
 use deepnvm::nvsim::optimizer::{explore, tuned_cache};
 use deepnvm::util::bench::BenchHarness;
 use deepnvm::util::pool::par_map;
@@ -57,6 +59,28 @@ fn main() {
     h.bench("gpusim: AlexNet trace through 3MB L2", 3, || {
         black_box(simulate(trace.iter().copied(), &GpuConfig::gtx_1080_ti()));
     });
+
+    // Compressed trace streaming: density plus encode/decode throughput
+    // (the decode loop is what every sharded replay now pays per access
+    // instead of reading a 16-byte struct).
+    let ct = CompressedTrace::from_accesses(trace.iter().copied());
+    let bpa = ct.byte_len() as f64 / ct.len().max(1) as f64;
+    h.record("gpusim: compressed trace bytes/access", bpa);
+    println!(
+        "  -> compressed trace: {} bytes for {} accesses ({bpa:.2} B/access vs 16 B raw)",
+        ct.byte_len(),
+        ct.len()
+    );
+    assert!(bpa < 16.0, "compression must beat the raw Access struct ({bpa:.2} B/access)");
+    let tn = trace.len() as f64;
+    let enc = h.bench("gpusim: trace compress encode (AlexNet b4)", 5, || {
+        black_box(CompressedTrace::from_accesses(trace.iter().copied()).byte_len());
+    });
+    h.record("gpusim: compress encode accesses/sec", tn / enc.max(1e-12));
+    let dec = h.bench("gpusim: trace compress decode (AlexNet b4)", 5, || {
+        black_box(ct.iter().fold(0u64, |acc, a| acc.wrapping_add(a.addr)));
+    });
+    h.record("gpusim: compress decode accesses/sec", tn / dec.max(1e-12));
 
     // The Fig 7 before/after set. The seed algorithm replayed the
     // materialized trace once per swept capacity; its wall-clock shape

@@ -19,7 +19,7 @@ use deepnvm::gpusim::{
 };
 use deepnvm::membackend::{DramConfig, MemBackendConfig};
 use deepnvm::util::bench::BenchHarness;
-use deepnvm::util::pool::num_threads;
+use deepnvm::util::pool::{num_threads, recommended_shards};
 use deepnvm::workloads::nets;
 
 fn main() {
@@ -37,9 +37,13 @@ fn main() {
     let gpu = GpuConfig::gtx_1080_ti();
     let cache = CacheConfig::default();
     let threads = num_threads();
+    let shards = recommended_shards();
     let fixed = MemBackendConfig::FixedLatency;
     let dram = MemBackendConfig::Dram(DramConfig::default());
-    println!("alexnet b4 trace: {} accesses, {threads} worker threads", trace.len());
+    println!(
+        "alexnet b4 trace: {} accesses, {threads} worker threads, {shards} shards",
+        trace.len()
+    );
 
     // Two interleaved rounds per side, best-of for the overhead check:
     // both sides run the identical sharded code path (the backend slot
@@ -47,17 +51,17 @@ fn main() {
     // absorb scheduler noise.
     let base = h
         .bench("mem: plain sharded simulate (AlexNet b4)", 3, || {
-            black_box(simulate_sharded(trace.iter().copied(), &gpu, cache, 0, threads));
+            black_box(simulate_sharded(trace.iter().copied(), &gpu, cache, 0, shards));
         })
         .min(h.bench("mem: plain sharded simulate (round 2)", 3, || {
-            black_box(simulate_sharded(trace.iter().copied(), &gpu, cache, 0, threads));
+            black_box(simulate_sharded(trace.iter().copied(), &gpu, cache, 0, shards));
         }));
     let fixed_t = h
         .bench("mem: fixed-latency replay (backend armed)", 3, || {
-            black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &fixed));
+            black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, shards, &fixed));
         })
         .min(h.bench("mem: fixed-latency replay (round 2)", 3, || {
-            black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &fixed));
+            black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, shards, &fixed));
         }));
     h.record("mem: fixed-latency accesses/sec", n / fixed_t.max(1e-12));
     let overhead = fixed_t / base.max(1e-12) - 1.0;
@@ -82,17 +86,17 @@ fn main() {
         n / fixed_t / 1e6
     );
     let sharded = h.bench("mem: banked replay (default card, sharded)", 3, || {
-        black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &dram));
+        black_box(simulate_backend(trace.iter().copied(), &gpu, cache, 0, shards, &dram));
     });
     h.record("mem: dram-model sharded accesses/sec", n / sharded.max(1e-12));
 
     // Exactness double-checks while we are here: the bench must never
     // record a throughput for a backend path that drifted.
-    let a = simulate_sharded(trace.iter().copied(), &gpu, cache, 0, threads);
-    let b = simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &fixed);
+    let a = simulate_sharded(trace.iter().copied(), &gpu, cache, 0, shards);
+    let b = simulate_backend(trace.iter().copied(), &gpu, cache, 0, shards, &fixed);
     assert_eq!(a, b, "fixed-latency backend replay must match the plain simulator");
     let seq = simulate_backend(trace.iter().copied(), &gpu, cache, 0, 1, &dram);
-    let par = simulate_backend(trace.iter().copied(), &gpu, cache, 0, threads, &dram);
+    let par = simulate_backend(trace.iter().copied(), &gpu, cache, 0, shards, &dram);
     assert_eq!(seq, par, "sharded banked counters must match sequential exactly");
     assert!(seq.dram.accesses() > 0, "the banked model must observe the miss stream");
 

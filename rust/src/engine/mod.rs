@@ -47,7 +47,7 @@ use crate::nvsim::geometry::enumerate;
 use crate::nvsim::optimizer::{explore_cell, TunedCache};
 use crate::reliability::{self, FaultConfig, RelSpec};
 use crate::util::err::msg;
-use crate::util::pool::{in_worker, num_threads, par_map};
+use crate::util::pool::{par_map, recommended_shards};
 use crate::util::rng::global_seed;
 use crate::util::units::MB;
 use crate::workloads::hpcg::HpcgSize;
@@ -578,12 +578,13 @@ impl Engine {
                         if let Some(card) = backend.dram() {
                             card.validate().map_err(|e| e.to_string())?;
                         }
-                        // Full shard budget for a standalone query; inside
-                        // a pool worker (evaluate_many / explore fan-out)
-                        // the outer parallelism already fills the cores,
-                        // so replay sequentially instead of spawning
-                        // workers × workers threads.
-                        let shards = if in_worker() { 1 } else { num_threads() };
+                        // Full (oversubscribed) shard budget for a
+                        // standalone query; inside a pool worker
+                        // (evaluate_many / explore fan-out) the outer
+                        // parallelism already fills the cores, so replay
+                        // sequentially instead of spawning workers ×
+                        // workers threads.
+                        let shards = recommended_shards();
                         let sim = simulate_backend(
                             net_trace(net, batch),
                             &gpu,
@@ -685,7 +686,7 @@ impl Engine {
                     gpu.l2_assoc, gpu.l2_line
                 ));
             }
-            let shards = if in_worker() { 1 } else { num_threads() };
+            let shards = recommended_shards();
             Ok(simulate_with_faults(
                 net_trace(&net, batch),
                 &gpu,

@@ -239,6 +239,15 @@ fn evaluate_flats(
         })
         .collect();
     let results = engine.evaluate_many(&queries);
+    if crate::telemetry::enabled() {
+        // How evenly the candidate fan-out spread over pool workers —
+        // `explore.pool_imbalance` sits next to the explore spans in run
+        // reports (1.0 = perfectly balanced, see `pool.last.*`).
+        crate::telemetry::gauge_set(
+            "explore.pool_imbalance",
+            crate::util::pool::last_imbalance(),
+        );
+    }
     let mut evaluated = Vec::new();
     for (candidate, result) in candidates.into_iter().zip(results) {
         let describe = candidate.labels.join(" ");

@@ -16,13 +16,17 @@
 //!   and an NVM-aware *write-bypass* mode that streams write misses past
 //!   the cache to DRAM while keeping write hits cached.
 //!
-//! Performance note (this is the simulator's hot path): sets are flat
-//! arrays scanned at most `assoc` entries deep. With 16 ways that beats
-//! any pointer-chasing LRU list at these sizes, and the layout is
-//! cache-friendly for the *host* CPU. Policy dispatch is monomorphized
-//! ([`PolicyCache`] is generic over the replacement policy); the
-//! config-driven simulator selects the instantiation once per run, not
-//! per access.
+//! Performance note (this is the simulator's hot path): each set is one
+//! **packed record** in a single contiguous `u64` array — `assoc` tag
+//! words, then the dirty bitmask word, then the replacement policy's
+//! packed metadata words ([`ReplacementPolicy::meta_words`]). One access
+//! therefore touches one short run of host cache lines (probe scan,
+//! dirty update and metadata update all land in the same record) instead
+//! of striding three parallel arrays, and the probe is still a
+//! branch-light scan the compiler vectorizes. Policy dispatch is
+//! monomorphized ([`PolicyCache`] is generic over the replacement
+//! policy); the config-driven simulator selects the instantiation once
+//! per run, not per access.
 
 /// Access outcome.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -132,54 +136,68 @@ impl Replacement {
     }
 }
 
-/// Victim selection over the shared tag array. All state is **set-local**
-/// (touching way `w` of set `s` reads/writes only set `s`'s metadata) —
-/// the invariant the set-sharded parallel simulator rests on.
+/// Victim selection over one set's **packed metadata slice** — the
+/// `meta_words` words stored right after the set's tags and dirty word in
+/// the cache's per-set record. All per-set state lives in that slice
+/// (touching way `w` of set `s` reads/writes only set `s`'s record); the
+/// policy object itself carries only *global scalar* state such as the
+/// LRU tick. Set-locality is the invariant the set-sharded parallel
+/// simulator rests on.
 pub trait ReplacementPolicy {
-    /// Fresh metadata for a `sets × assoc` array.
-    fn new(sets: usize, assoc: usize) -> Self;
+    /// Global scalar state for an `assoc`-way cache.
+    fn new(assoc: usize) -> Self;
+    /// Packed metadata words needed per set for `assoc` ways.
+    fn meta_words(assoc: usize) -> usize;
+    /// Initialize one set's packed metadata (slice length is
+    /// `meta_words(assoc)`).
+    fn init_meta(meta: &mut [u64], assoc: usize);
     /// Promote `way` after a hit.
-    fn touch(&mut self, set: usize, way: usize);
+    fn touch(&mut self, meta: &mut [u64], way: usize);
     /// Install into `way` after a miss fill.
-    fn fill(&mut self, set: usize, way: usize);
+    fn fill(&mut self, meta: &mut [u64], way: usize);
     /// Pick the eviction way. Only called on a full set.
-    fn victim(&mut self, set: usize) -> usize;
+    fn victim(&mut self, meta: &mut [u64]) -> usize;
 }
 
-/// True LRU: one timestamp per way, victim = oldest. Equivalent to the
-/// seed's fused scan: the tick increments once per touch/fill, so the
-/// relative order of timestamps — all victim selection uses — matches the
-/// original access-counter scheme exactly.
+/// True LRU: one timestamp word per way in the set record, victim =
+/// oldest. Equivalent to the seed's fused scan: the (global) tick
+/// increments once per touch/fill, so the relative order of timestamps —
+/// all victim selection uses — matches the original access-counter
+/// scheme exactly.
 #[derive(Debug, Clone)]
 pub struct TrueLru {
-    assoc: usize,
     tick: u64,
-    lru: Vec<u64>,
 }
 
 impl ReplacementPolicy for TrueLru {
-    fn new(sets: usize, assoc: usize) -> TrueLru {
-        TrueLru { assoc, tick: 0, lru: vec![0; sets * assoc] }
+    fn new(_assoc: usize) -> TrueLru {
+        TrueLru { tick: 0 }
+    }
+
+    fn meta_words(assoc: usize) -> usize {
+        assoc
+    }
+
+    fn init_meta(meta: &mut [u64], _assoc: usize) {
+        meta.fill(0);
     }
 
     #[inline]
-    fn touch(&mut self, set: usize, way: usize) {
+    fn touch(&mut self, meta: &mut [u64], way: usize) {
         self.tick += 1;
-        self.lru[set * self.assoc + way] = self.tick;
+        meta[way] = self.tick;
     }
 
     #[inline]
-    fn fill(&mut self, set: usize, way: usize) {
-        self.touch(set, way);
+    fn fill(&mut self, meta: &mut [u64], way: usize) {
+        self.touch(meta, way);
     }
 
     #[inline]
-    fn victim(&mut self, set: usize) -> usize {
-        let base = set * self.assoc;
-        let slice = &self.lru[base..base + self.assoc];
+    fn victim(&mut self, meta: &mut [u64]) -> usize {
         let mut victim = 0usize;
         let mut victim_lru = u64::MAX;
-        for (i, &l) in slice.iter().enumerate() {
+        for (i, &l) in meta.iter().enumerate() {
             if l < victim_lru {
                 victim_lru = l;
                 victim = i;
@@ -190,17 +208,15 @@ impl ReplacementPolicy for TrueLru {
 }
 
 /// Tree pseudo-LRU: a binary tree of direction bits per set (packed into
-/// one `u64`, so `assoc <= 64`). Touching a way points every node on its
-/// root path away from it; the victim walk follows the bits. Non-power-
-/// of-two associativities use the next power-of-two tree with the
-/// out-of-range leaves statically skipped.
+/// the set record's single metadata word, so `assoc <= 64`). Touching a
+/// way points every node on its root path away from it; the victim walk
+/// follows the bits. Non-power-of-two associativities use the next
+/// power-of-two tree with the out-of-range leaves statically skipped.
 #[derive(Debug, Clone)]
 pub struct TreePlru {
     assoc: usize,
     /// Leaf count: `assoc` rounded up to a power of two.
     leaves: usize,
-    /// One direction-bit word per set (bit `n-1` = internal node `n`).
-    bits: Vec<u64>,
 }
 
 impl TreePlru {
@@ -215,14 +231,23 @@ impl TreePlru {
 }
 
 impl ReplacementPolicy for TreePlru {
-    fn new(sets: usize, assoc: usize) -> TreePlru {
+    fn new(assoc: usize) -> TreePlru {
         assert!(assoc <= 64, "tree-PLRU packs at most 64 ways per set word");
-        TreePlru { assoc, leaves: assoc.next_power_of_two(), bits: vec![0; sets] }
+        TreePlru { assoc, leaves: assoc.next_power_of_two() }
+    }
+
+    fn meta_words(_assoc: usize) -> usize {
+        1
+    }
+
+    fn init_meta(meta: &mut [u64], _assoc: usize) {
+        meta[0] = 0;
     }
 
     #[inline]
-    fn touch(&mut self, set: usize, way: usize) {
-        let bits = &mut self.bits[set];
+    fn touch(&mut self, meta: &mut [u64], way: usize) {
+        // Direction-bit word: bit `n-1` = internal node `n`.
+        let bits = &mut meta[0];
         let mut node = self.leaves + way;
         while node > 1 {
             let parent = node / 2;
@@ -238,13 +263,13 @@ impl ReplacementPolicy for TreePlru {
     }
 
     #[inline]
-    fn fill(&mut self, set: usize, way: usize) {
-        self.touch(set, way);
+    fn fill(&mut self, meta: &mut [u64], way: usize) {
+        self.touch(meta, way);
     }
 
     #[inline]
-    fn victim(&mut self, set: usize) -> usize {
-        let bits = self.bits[set];
+    fn victim(&mut self, meta: &mut [u64]) -> usize {
+        let bits = meta[0];
         let mut node = 1usize;
         while node < self.leaves {
             let b = ((bits >> (node - 1)) & 1) as usize;
@@ -263,41 +288,72 @@ impl ReplacementPolicy for TreePlru {
 /// SRRIP re-reference ceiling (2-bit RRPV).
 const RRPV_MAX: u8 = 3;
 
-/// Static RRIP (SRRIP-HP): 2-bit re-reference prediction values per way.
-/// Fills install at "long" (`RRPV_MAX - 1`), hits promote to 0, the
-/// victim is the first way at `RRPV_MAX` (aging the set until one
-/// exists) — scan-resistant where LRU thrashes.
+/// Read the 2-bit RRPV field for `way` from a set's packed metadata
+/// (32 ways per word, little-endian field order).
+#[inline]
+fn rrpv_get(meta: &[u64], way: usize) -> u8 {
+    ((meta[way / 32] >> (2 * (way % 32))) & 3) as u8
+}
+
+/// Write the 2-bit RRPV field for `way` in a set's packed metadata.
+#[inline]
+fn rrpv_set(meta: &mut [u64], way: usize, v: u8) {
+    let (word, shift) = (way / 32, 2 * (way % 32));
+    meta[word] = (meta[word] & !(3u64 << shift)) | (u64::from(v) << shift);
+}
+
+/// Static RRIP (SRRIP-HP): 2-bit re-reference prediction values per way,
+/// packed 32 to a metadata word. Fills install at "long"
+/// (`RRPV_MAX - 1`), hits promote to 0, the victim is the first way at
+/// `RRPV_MAX` (aging the set until one exists) — scan-resistant where
+/// LRU thrashes.
 #[derive(Debug, Clone)]
 pub struct Srrip {
     assoc: usize,
-    rrpv: Vec<u8>,
 }
 
 impl ReplacementPolicy for Srrip {
-    fn new(sets: usize, assoc: usize) -> Srrip {
-        Srrip { assoc, rrpv: vec![RRPV_MAX; sets * assoc] }
+    fn new(assoc: usize) -> Srrip {
+        Srrip { assoc }
+    }
+
+    fn meta_words(assoc: usize) -> usize {
+        assoc.div_ceil(32)
+    }
+
+    fn init_meta(meta: &mut [u64], assoc: usize) {
+        // Every real way starts at RRPV_MAX (0b11), exactly like the
+        // unpacked `vec![RRPV_MAX; ..]`; padding fields past `assoc` stay
+        // 0 and are never read (all loops run `0..assoc`).
+        meta.fill(0);
+        for way in 0..assoc {
+            rrpv_set(meta, way, RRPV_MAX);
+        }
     }
 
     #[inline]
-    fn touch(&mut self, set: usize, way: usize) {
-        self.rrpv[set * self.assoc + way] = 0;
+    fn touch(&mut self, meta: &mut [u64], way: usize) {
+        rrpv_set(meta, way, 0);
     }
 
     #[inline]
-    fn fill(&mut self, set: usize, way: usize) {
-        self.rrpv[set * self.assoc + way] = RRPV_MAX - 1;
+    fn fill(&mut self, meta: &mut [u64], way: usize) {
+        rrpv_set(meta, way, RRPV_MAX - 1);
     }
 
     #[inline]
-    fn victim(&mut self, set: usize) -> usize {
-        let base = set * self.assoc;
-        let slice = &mut self.rrpv[base..base + self.assoc];
+    fn victim(&mut self, meta: &mut [u64]) -> usize {
         loop {
-            if let Some(i) = slice.iter().position(|&r| r == RRPV_MAX) {
-                return i;
+            for way in 0..self.assoc {
+                if rrpv_get(meta, way) == RRPV_MAX {
+                    return way;
+                }
             }
-            for r in slice.iter_mut() {
-                *r += 1;
+            // Age everyone (all fields are < RRPV_MAX here, so the +1
+            // never carries out of a 2-bit field).
+            for way in 0..self.assoc {
+                let v = rrpv_get(meta, way);
+                rrpv_set(meta, way, v + 1);
             }
         }
     }
@@ -326,20 +382,23 @@ pub struct CacheCounters {
 /// A set-associative cache over a [`ReplacementPolicy`], with a
 /// configurable [`WritePolicy`].
 ///
-/// Perf (§Perf in EXPERIMENTS.md): structure-of-arrays layout — the tag
-/// probe is a branch-light scan over a contiguous `u64` slice the
-/// compiler vectorizes, with replacement metadata and dirty bits in side
-/// arrays touched only on their respective paths.
+/// Perf (§Raw-speed pass in EXPERIMENTS.md): packed per-set records —
+/// each set is `assoc` tag words (`EMPTY` = invalid), one dirty-bitmask
+/// word (bit i = way i, so assoc ≤ 64), then the policy's packed
+/// metadata words, contiguous in a single `u64` array. The tag probe is
+/// still a branch-light scan the compiler vectorizes, and the dirty and
+/// metadata updates that follow land in the same record the probe just
+/// pulled into host cache.
 #[derive(Debug, Clone)]
 pub struct PolicyCache<P: ReplacementPolicy> {
     sets: usize,
     assoc: usize,
     line: u64,
     write: WritePolicy,
-    /// Line tag per way (`EMPTY` = invalid), `sets × assoc`.
-    tags: Vec<u64>,
-    /// Dirty bitmask per set (bit i = way i), assoc ≤ 64.
-    dirty: Vec<u64>,
+    /// Words per set record: `assoc` tags + 1 dirty word + policy meta.
+    stride: usize,
+    /// Packed per-set records, `sets × stride` words.
+    data: Vec<u64>,
     policy: P,
     /// Fault injector (L2 under a `[rel]`-carrying technology only);
     /// `None` keeps every access on the exact fault-free path.
@@ -384,14 +443,23 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
             capacity % (line * assoc)
         );
         let sets = ((capacity / line) / assoc) as usize;
+        let assoc = assoc as usize;
+        let stride = assoc + 1 + P::meta_words(assoc);
+        let mut data = vec![0u64; sets * stride];
+        for set in 0..sets {
+            let base = set * stride;
+            data[base..base + assoc].fill(EMPTY);
+            // Dirty word (base + assoc) starts 0; policy meta follows.
+            P::init_meta(&mut data[base + assoc + 1..base + stride], assoc);
+        }
         PolicyCache {
             sets,
-            assoc: assoc as usize,
+            assoc,
             line,
             write,
-            tags: vec![EMPTY; sets * assoc as usize],
-            dirty: vec![0; sets],
-            policy: P::new(sets, assoc as usize),
+            stride,
+            data,
+            policy: P::new(assoc),
             faults: None,
             hits: 0,
             misses: 0,
@@ -420,7 +488,12 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
     #[inline]
     pub fn access(&mut self, addr: u64, is_write: bool) -> Outcome {
         let (set, tag) = self.set_of(addr);
-        let base = set * self.assoc;
+        // The set's packed record: tags, then the dirty word, then the
+        // policy metadata.
+        let base = set * self.stride;
+        let dirty_at = base + self.assoc;
+        let meta_at = dirty_at + 1;
+        let rec_end = base + self.stride;
 
         // A set whose every way has worn out caches nothing: the access
         // goes to DRAM. Writes are charged as direct (DRAM-bound) writes;
@@ -444,7 +517,7 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
         // slots match neither arm and are skipped.
         let mut hit_way: Option<usize> = None;
         let mut empty_way: Option<usize> = None;
-        for (i, &t) in self.tags[base..base + self.assoc].iter().enumerate() {
+        for (i, &t) in self.data[base..base + self.assoc].iter().enumerate() {
             if t == tag {
                 hit_way = Some(i);
                 break;
@@ -456,21 +529,26 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
         }
 
         if let Some(way) = hit_way {
-            self.policy.touch(set, way);
+            {
+                let (policy, data) = (&mut self.policy, &mut self.data);
+                policy.touch(&mut data[meta_at..rec_end], way);
+            }
             self.hits += 1;
             if is_write {
                 self.write_hits += 1;
                 self.array_writes += 1;
                 match self.write {
                     WritePolicy::WriteBack | WritePolicy::WriteBypass => {
-                        self.dirty[set] |= 1 << way;
+                        self.data[dirty_at] |= 1 << way;
                     }
                     WritePolicy::WriteThrough => self.direct_writes += 1,
                 }
-                if let Some(f) = &mut self.faults {
-                    if f.sample_write(set, way) {
-                        self.retire_way(set, way);
-                    }
+                let worn = match &mut self.faults {
+                    Some(f) => f.sample_write(set, way),
+                    None => false,
+                };
+                if worn {
+                    self.retire_way(set, way);
                 }
             } else if let Some(f) = &mut self.faults {
                 f.sample_read(set);
@@ -496,25 +574,30 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
             Some(w) => w,
             None => self.live_victim(set),
         };
-        let dirty_evict = (self.dirty[set] >> way) & 1 == 1;
+        let dirty_evict = (self.data[dirty_at] >> way) & 1 == 1;
         if dirty_evict {
             self.writebacks += 1;
         }
-        self.tags[base + way] = tag;
-        self.policy.fill(set, way);
+        self.data[base + way] = tag;
+        {
+            let (policy, data) = (&mut self.policy, &mut self.data);
+            policy.fill(&mut data[meta_at..rec_end], way);
+        }
         if is_write {
             self.array_writes += 1;
-            self.dirty[set] |= 1 << way;
+            self.data[dirty_at] |= 1 << way;
         } else {
-            self.dirty[set] &= !(1 << way);
+            self.data[dirty_at] &= !(1 << way);
         }
         // The fill itself is a physical array write: it faults and wears
         // like one (wear is therefore a superset of `array_writes`, which
         // charges demand writes only).
-        if let Some(f) = &mut self.faults {
-            if f.sample_write(set, way) {
-                self.retire_way(set, way);
-            }
+        let worn = match &mut self.faults {
+            Some(f) => f.sample_write(set, way),
+            None => false,
+        };
+        if worn {
+            self.retire_way(set, way);
         }
         if dirty_evict {
             Outcome::MissDirtyEvict
@@ -530,18 +613,27 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
     /// guard falls back to a linear scan regardless.
     #[inline]
     fn live_victim(&mut self, set: usize) -> usize {
-        let Some(f) = &self.faults else {
-            return self.policy.victim(set);
+        let meta_at = set * self.stride + self.assoc + 1;
+        let rec_end = set * self.stride + self.stride;
+        let no_retired = match &self.faults {
+            None => true,
+            Some(f) => f.retired_ways == 0,
         };
-        if f.retired_ways == 0 {
-            return self.policy.victim(set);
+        if no_retired {
+            let (policy, data) = (&mut self.policy, &mut self.data);
+            return policy.victim(&mut data[meta_at..rec_end]);
         }
         for _ in 0..4 * self.assoc {
-            let way = self.policy.victim(set);
-            match &self.faults {
-                Some(f) if f.is_retired(set, way) => self.policy.touch(set, way),
-                _ => return way,
+            let way = {
+                let (policy, data) = (&mut self.policy, &mut self.data);
+                policy.victim(&mut data[meta_at..rec_end])
+            };
+            let retired = self.faults.as_ref().is_some_and(|f| f.is_retired(set, way));
+            if !retired {
+                return way;
             }
+            let (policy, data) = (&mut self.policy, &mut self.data);
+            policy.touch(&mut data[meta_at..rec_end], way);
         }
         let f = self.faults.as_ref().expect("guarded above");
         (0..self.assoc)
@@ -553,11 +645,12 @@ impl<P: ReplacementPolicy> PolicyCache<P> {
     /// flush the line it holds (a dirty line costs a final write-back),
     /// mark the slot RETIRED, and shrink the set's live associativity.
     fn retire_way(&mut self, set: usize, way: usize) {
-        if (self.dirty[set] >> way) & 1 == 1 {
+        let dirty_at = set * self.stride + self.assoc;
+        if (self.data[dirty_at] >> way) & 1 == 1 {
             self.writebacks += 1;
-            self.dirty[set] &= !(1 << way);
+            self.data[dirty_at] &= !(1 << way);
         }
-        self.tags[set * self.assoc + way] = RETIRED;
+        self.data[set * self.stride + way] = RETIRED;
         self.faults.as_mut().expect("retire without injector").retire(set, way);
     }
 
@@ -891,6 +984,28 @@ mod tests {
         churn::<TrueLru>("lru");
         churn::<TreePlru>("plru");
         churn::<Srrip>("srrip");
+    }
+
+    #[test]
+    fn packed_meta_widths_match_policy_needs() {
+        // The per-set record budget each policy declares: LRU needs a
+        // timestamp word per way, PLRU one direction word, SRRIP packs
+        // 32 2-bit fields per word.
+        assert_eq!(<TrueLru as ReplacementPolicy>::meta_words(16), 16);
+        assert_eq!(<TreePlru as ReplacementPolicy>::meta_words(16), 1);
+        assert_eq!(<Srrip as ReplacementPolicy>::meta_words(16), 1);
+        assert_eq!(<Srrip as ReplacementPolicy>::meta_words(32), 1);
+        assert_eq!(<Srrip as ReplacementPolicy>::meta_words(33), 2);
+        // Packed RRPV fields read back what was written, without
+        // clobbering neighbors.
+        let mut meta = [0u64; 2];
+        Srrip::init_meta(&mut meta, 33);
+        assert_eq!(rrpv_get(&meta, 0), RRPV_MAX);
+        assert_eq!(rrpv_get(&meta, 32), RRPV_MAX);
+        rrpv_set(&mut meta, 7, 1);
+        assert_eq!(rrpv_get(&meta, 7), 1);
+        assert_eq!(rrpv_get(&meta, 6), RRPV_MAX);
+        assert_eq!(rrpv_get(&meta, 8), RRPV_MAX);
     }
 
     #[test]

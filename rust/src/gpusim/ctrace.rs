@@ -1,0 +1,284 @@
+//! Delta/varint-compressed access-trace blocks — the streaming trace
+//! representation the sharded replay engine holds in memory.
+//!
+//! A materialized [`Access`] costs 16 bytes; DNN traces are dominated by
+//! short strides inside one region (im2col walks, GEMM tiles), so the
+//! byte-address *delta* between consecutive accesses is small and
+//! repetitive. Each access encodes as one varint of the zigzagged delta
+//! with the write bit folded into the first byte:
+//!
+//! ```text
+//! zz     = zigzag(addr - prev_addr)         (zigzag(d) = (d << 1) ^ (d >> 63),
+//!                                            arithmetic shift, mod 2^64)
+//! byte 0 = cont << 7 | zz[5:0] << 1 | write
+//! byte k = cont << 7 | zz[6+7(k-1) : ...]   (LEB128 continuation, LSB first)
+//! ```
+//!
+//! which lands at 1–3 bytes for typical strides (≈5–8× smaller than the
+//! struct, measured per net in BENCH_hotpath's `bytes/access` records).
+//! Every [`BLOCK_ACCESSES`] accesses the delta predictor resets to 0 and
+//! the block's byte offset is recorded, so blocks decode independently —
+//! [`CompressedTrace::iter_blocks`] can start mid-trace without decoding
+//! the prefix.
+//!
+//! The encoding is **lossless for any `u64` address sequence** (deltas
+//! wrap mod 2⁶⁴ and unwrap the same way; line-alignment is *not*
+//! assumed), so the sharded replay's bit-exactness guarantee is
+//! untouched: decoding yields the exact `Access` stream that was pushed,
+//! pinned against the golden trace checksums in `tests/golden.rs`.
+
+use super::trace::Access;
+
+/// Accesses per independently-decodable block (the delta predictor
+/// resets at each block boundary).
+pub const BLOCK_ACCESSES: usize = 8192;
+
+/// A delta/varint-compressed `Access` stream (append-only; decode with
+/// [`CompressedTrace::iter`]).
+#[derive(Debug, Clone, Default)]
+pub struct CompressedTrace {
+    bytes: Vec<u8>,
+    /// Accesses encoded.
+    len: usize,
+    /// Byte offset where each block starts (block `b` covers accesses
+    /// `b * BLOCK_ACCESSES ..`).
+    blocks: Vec<usize>,
+    /// Encoder state: previous address (reset to 0 at block starts).
+    prev_addr: u64,
+}
+
+impl CompressedTrace {
+    /// An empty trace.
+    pub fn new() -> CompressedTrace {
+        CompressedTrace::default()
+    }
+
+    /// Append one access.
+    #[inline]
+    pub fn push(&mut self, a: Access) {
+        if self.len % BLOCK_ACCESSES == 0 {
+            self.blocks.push(self.bytes.len());
+            self.prev_addr = 0;
+        }
+        let delta = a.addr.wrapping_sub(self.prev_addr);
+        self.prev_addr = a.addr;
+        // Zigzag the wrapped delta (interpreted as i64) so small negative
+        // strides stay small. The write bit rides in the first byte next
+        // to the low 6 zigzag bits, so a full 64-bit zz still fits.
+        let zz = (delta << 1) ^ (((delta as i64) >> 63) as u64);
+        let first = (((zz << 1) as u8) & 0x7e) | u8::from(a.write);
+        let mut rest = zz >> 6;
+        if rest == 0 {
+            self.bytes.push(first);
+        } else {
+            self.bytes.push(first | 0x80);
+            loop {
+                let byte = (rest & 0x7f) as u8;
+                rest >>= 7;
+                if rest == 0 {
+                    self.bytes.push(byte);
+                    break;
+                }
+                self.bytes.push(byte | 0x80);
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Compress an entire access stream.
+    pub fn from_accesses(accesses: impl IntoIterator<Item = Access>) -> CompressedTrace {
+        let mut ct = CompressedTrace::new();
+        for a in accesses {
+            ct.push(a);
+        }
+        ct
+    }
+
+    /// Accesses encoded.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the trace holds no accesses.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Encoded size in bytes (the number BENCH_hotpath divides by
+    /// [`CompressedTrace::len`] for its bytes/access record).
+    pub fn byte_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Number of blocks (`len` rounded up to [`BLOCK_ACCESSES`]).
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Decode the whole stream.
+    pub fn iter(&self) -> Decoder<'_> {
+        self.iter_blocks(0)
+    }
+
+    /// Decode from the start of block `b` (0-indexed) to the end of the
+    /// stream; `b == num_blocks()` yields an empty decoder. Panics if
+    /// `b` exceeds the block count.
+    pub fn iter_blocks(&self, b: usize) -> Decoder<'_> {
+        assert!(
+            b <= self.blocks.len(),
+            "block {b} out of range ({} blocks)",
+            self.blocks.len()
+        );
+        if b == self.blocks.len() {
+            return Decoder { bytes: &[], pos: 0, prev_addr: 0, remaining: 0, until_reset: 0 };
+        }
+        Decoder {
+            bytes: &self.bytes,
+            pos: self.blocks[b],
+            prev_addr: 0,
+            remaining: self.len - b * BLOCK_ACCESSES,
+            until_reset: BLOCK_ACCESSES,
+        }
+    }
+}
+
+impl<'a> IntoIterator for &'a CompressedTrace {
+    type Item = Access;
+    type IntoIter = Decoder<'a>;
+
+    fn into_iter(self) -> Decoder<'a> {
+        self.iter()
+    }
+}
+
+/// Streaming decoder over a [`CompressedTrace`] — yields the exact
+/// pushed `Access` sequence, one varint at a time, in (host) cache.
+#[derive(Debug, Clone)]
+pub struct Decoder<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    prev_addr: u64,
+    remaining: usize,
+    /// Accesses left before the delta predictor resets (block boundary).
+    until_reset: usize,
+}
+
+impl Iterator for Decoder<'_> {
+    type Item = Access;
+
+    #[inline]
+    fn next(&mut self) -> Option<Access> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if self.until_reset == 0 {
+            self.prev_addr = 0;
+            self.until_reset = BLOCK_ACCESSES;
+        }
+        let first = self.bytes[self.pos];
+        self.pos += 1;
+        let write = first & 1 == 1;
+        let mut zz = u64::from((first >> 1) & 0x3f);
+        if first & 0x80 != 0 {
+            let mut shift = 6u32;
+            loop {
+                let byte = self.bytes[self.pos];
+                self.pos += 1;
+                zz |= u64::from(byte & 0x7f) << shift;
+                if byte & 0x80 == 0 {
+                    break;
+                }
+                shift += 7;
+            }
+        }
+        // Un-zigzag: (zz >> 1) ^ -(zz & 1), in wrapping u64 arithmetic.
+        let delta = (zz >> 1) ^ (zz & 1).wrapping_neg();
+        let addr = self.prev_addr.wrapping_add(delta);
+        self.prev_addr = addr;
+        self.remaining -= 1;
+        self.until_reset -= 1;
+        Some(Access { addr, write })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for Decoder<'_> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(accesses: &[Access]) {
+        let ct = CompressedTrace::from_accesses(accesses.iter().copied());
+        assert_eq!(ct.len(), accesses.len());
+        let back: Vec<Access> = ct.iter().collect();
+        assert_eq!(back, accesses, "decode must reproduce the pushed stream");
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        roundtrip(&[]);
+        assert!(CompressedTrace::new().is_empty());
+        assert_eq!(CompressedTrace::new().iter().count(), 0);
+    }
+
+    #[test]
+    fn small_strides_roundtrip_in_one_or_two_bytes() {
+        let accesses: Vec<Access> = (0..1000u64)
+            .map(|i| Access { addr: 0x1_0000_0000 + i * 128, write: i % 3 == 0 })
+            .collect();
+        let ct = CompressedTrace::from_accesses(accesses.iter().copied());
+        // First token carries the big base address; the other 999 are a
+        // constant +128-byte stride = 2-byte varints.
+        assert!(ct.byte_len() <= 6 + 999 * 2, "{} bytes", ct.byte_len());
+        assert_eq!(ct.iter().collect::<Vec<_>>(), accesses);
+    }
+
+    #[test]
+    fn extreme_and_backward_addresses_roundtrip() {
+        roundtrip(&[
+            Access { addr: 0, write: false },
+            Access { addr: u64::MAX, write: true },
+            Access { addr: 1, write: true },
+            Access { addr: u64::MAX / 2, write: false },
+            Access { addr: u64::MAX / 2 + 1, write: false },
+            Access { addr: 0, write: true },
+            Access { addr: 127, write: false }, // not line-aligned
+        ]);
+    }
+
+    #[test]
+    fn blocks_decode_independently() {
+        let accesses: Vec<Access> = (0..3 * BLOCK_ACCESSES as u64 + 17)
+            .map(|i| Access { addr: (i * 37) % 9973 * 128, write: i % 5 == 0 })
+            .collect();
+        let ct = CompressedTrace::from_accesses(accesses.iter().copied());
+        assert_eq!(ct.num_blocks(), 4);
+        for b in 0..ct.num_blocks() {
+            let tail: Vec<Access> = ct.iter_blocks(b).collect();
+            assert_eq!(tail, accesses[b * BLOCK_ACCESSES..], "block {b}");
+        }
+        assert_eq!(ct.iter_blocks(ct.num_blocks()).count(), 0, "one-past-end is empty");
+    }
+
+    #[test]
+    fn decoder_reports_exact_length() {
+        let accesses: Vec<Access> =
+            (0..100u64).map(|i| Access { addr: i * 64, write: false }).collect();
+        let ct = CompressedTrace::from_accesses(accesses.iter().copied());
+        let mut it = ct.iter();
+        assert_eq!(it.len(), 100);
+        it.next();
+        assert_eq!(it.len(), 99);
+        assert_eq!(it.size_hint(), (99, Some(99)));
+        // `take(warm)` splitting — how replay separates warmup from
+        // measurement — sees the right elements.
+        let warm: Vec<Access> = ct.iter().take(10).collect();
+        assert_eq!(warm, accesses[..10]);
+        let rest: Vec<Access> = ct.iter().skip(10).collect();
+        assert_eq!(rest, accesses[10..]);
+    }
+}

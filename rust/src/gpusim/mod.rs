@@ -19,6 +19,10 @@
 //!   IR (im2col + tiled sgemm for CNN ops, scratch-tensor attention and
 //!   gather/stream rules for the sequence ops): an
 //!   `Iterator<Item = Access>`, never a materialized trace.
+//! * [`ctrace`] — delta/varint-compressed trace blocks
+//!   ([`CompressedTrace`]): what the sharded replay engine holds in
+//!   memory instead of wide `Access` records, decoded streaming per
+//!   shard (≈5–8× smaller; lossless, so counters are untouched).
 //! * [`sim`] — the simulation loop: the [`Hierarchy`] (optional
 //!   per-SM-aggregate L1 in front of the L2), warmup-then-measure
 //!   support, the **set-sharded parallel** replay engine
@@ -36,6 +40,7 @@
 
 pub mod cache;
 pub mod config;
+pub mod ctrace;
 pub mod sim;
 pub mod trace;
 
@@ -44,9 +49,10 @@ pub use cache::{
     TrueLru, WritePolicy,
 };
 pub use config::{parse_faults, parse_l1, CacheConfig, GpuConfig};
+pub use ctrace::{CompressedTrace, Decoder, BLOCK_ACCESSES};
 pub use sim::{
     capacity_sweep, capacity_sweep_config, fig7_capacities, simulate, simulate_backend,
     simulate_config, simulate_full, simulate_sharded, simulate_with_faults, CapacitySweepSim,
-    Hierarchy, L1Result, SimResult, SweepPoint,
+    Hierarchy, L1Result, ShardedTrace, SimResult, SweepPoint,
 };
 pub use trace::{net_trace, Access, TraceGen};

@@ -44,6 +44,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 
 use super::cache::{Cache, Outcome, PolicyCache, Replacement, Srrip, TreePlru, WritePolicy};
 use super::config::{CacheConfig, GpuConfig};
+use super::ctrace::CompressedTrace;
 use super::trace::Access;
 use crate::membackend::{DramStats, MemBackend, MemBackendConfig, MemoryBackend};
 use crate::reliability::{FaultConfig, FaultState};
@@ -493,9 +494,11 @@ fn gcd(mut a: u64, mut b: u64) -> u64 {
 /// shard key (`line_address mod g`, with `g` dividing every simulated
 /// level's set count) keeps each set's accesses together and in order.
 ///
-/// The partition pass materializes the trace (O(trace) memory) — the
-/// price of parallelism; the streaming single-pass sweep remains the
-/// memory-frugal default-configuration path.
+/// The partition pass materializes the trace, but in delta/varint
+/// compressed form ([`CompressedTrace`], ≈2–3 bytes per access instead of
+/// a 16-byte `Access`); each shard decodes its stream on the fly during
+/// replay. The streaming single-pass sweep remains the memory-frugal
+/// default-configuration path.
 pub fn simulate_sharded(
     trace: impl IntoIterator<Item = Access>,
     config: &GpuConfig,
@@ -566,8 +569,9 @@ pub fn simulate_full(
     if shards <= 1 {
         return simulate_seq(trace, config, cache, warmup_accesses, faults, backend);
     }
-    let parts = partition(trace, config.l2_line, group, shards, warmup_accesses);
-    replay_parts(&parts, config, cache, warmup_accesses > 0, faults, backend)
+    let parts =
+        ShardedTrace::partition_by(trace, config.l2_line, group, shards, warmup_accesses);
+    parts.replay(config, cache, faults, backend)
 }
 
 /// Largest shard-key modulus valid for one hierarchy: the shard key must
@@ -587,65 +591,130 @@ fn shard_group(config: &GpuConfig, cache: CacheConfig) -> u64 {
     }
 }
 
-/// Partition a trace by set residue class (`(addr / line) mod group`,
-/// folded onto `shards` buckets), tracking each bucket's share of the
-/// global warmup prefix — order within a bucket is preserved, so the
-/// prefix boundary maps to a per-bucket count.
-fn partition(
-    trace: impl IntoIterator<Item = Access>,
-    line: u64,
-    group: u64,
-    shards: usize,
-    warmup_accesses: u64,
-) -> Vec<(Vec<Access>, u64)> {
-    let mut parts: Vec<(Vec<Access>, u64)> = (0..shards).map(|_| (Vec::new(), 0)).collect();
-    for (i, a) in trace.into_iter().enumerate() {
-        let k = (((a.addr / line) % group) % shards as u64) as usize;
-        if (i as u64) < warmup_accesses {
-            parts[k].1 += 1;
-        }
-        parts[k].0.push(a);
-    }
-    parts
+/// A trace partitioned by set residue class into per-shard compressed
+/// streams — the sharded replay engine's in-memory representation.
+/// Partition once, replay many times: the capacity sweep replays one
+/// partition per capacity, and the scheduler benchmarks time [`replay`]
+/// with the (serial) partition cost excluded.
+///
+/// Each shard holds a [`CompressedTrace`] (delta/varint blocks, ≈2–3
+/// bytes per access) that replay decodes on the fly; decoding is lossless
+/// so counters are bit-identical to replaying the raw `Access` stream.
+///
+/// [`replay`]: ShardedTrace::replay
+#[derive(Debug, Clone)]
+pub struct ShardedTrace {
+    /// Per-shard compressed stream and its share of the warmup prefix.
+    parts: Vec<(CompressedTrace, u64)>,
+    /// Whether a warmup prefix was requested (replay resets counters
+    /// after it even for shards whose own share is empty).
+    warmup: bool,
 }
 
-/// Replay partitioned buckets on per-bucket hierarchies through the
-/// thread pool and merge counters exactly.
-fn replay_parts(
-    parts: &[(Vec<Access>, u64)],
-    config: &GpuConfig,
-    cache: CacheConfig,
-    warmup: bool,
-    faults: Option<FaultConfig>,
-    backend: &MemBackendConfig,
-) -> SimResult {
-    let results = par_map_indexed(parts, |shard, (accesses, warm)| {
-        let _span = crate::span!("gpusim.shard", shard = shard, accesses = accesses.len());
-        let mut h = Hierarchy::with_backend(config, cache, faults, backend);
-        let warm = *warm as usize;
-        for a in &accesses[..warm] {
-            h.access(a.addr, a.write);
-        }
-        if warmup {
-            h.start_measurement();
-        }
-        for a in &accesses[warm..] {
-            h.access(a.addr, a.write);
-        }
-        h.finish()
-    });
-    let t_merge = std::time::Instant::now();
-    let mut out = SimResult::zero(config.l2_bytes);
-    for r in &results {
-        out.merge_from(r);
+impl ShardedTrace {
+    /// Partition `trace` for hierarchies of this `config`/`cache` shape:
+    /// shard key `(addr / line) mod group` folded onto at most
+    /// `max_shards` buckets, the first `warmup_accesses` accesses flagged
+    /// as the warmup prefix.
+    pub fn partition(
+        trace: impl IntoIterator<Item = Access>,
+        config: &GpuConfig,
+        cache: CacheConfig,
+        warmup_accesses: u64,
+        max_shards: usize,
+    ) -> ShardedTrace {
+        let group = shard_group(config, cache);
+        let shards = group.min(max_shards.max(1) as u64).max(1) as usize;
+        ShardedTrace::partition_by(trace, config.l2_line, group, shards, warmup_accesses)
     }
-    if crate::telemetry::enabled() {
-        crate::telemetry::observe("gpusim.merge_s", t_merge.elapsed().as_secs_f64());
-        for (accesses, _) in parts {
-            crate::telemetry::observe("gpusim.shard.accesses", accesses.len() as f64);
+
+    /// Partition with an explicit shard-key modulus (`group` must divide
+    /// every simulated level's set count — [`ShardedTrace::partition`]
+    /// derives it from the configuration).
+    fn partition_by(
+        trace: impl IntoIterator<Item = Access>,
+        line: u64,
+        group: u64,
+        shards: usize,
+        warmup_accesses: u64,
+    ) -> ShardedTrace {
+        let mut parts: Vec<(CompressedTrace, u64)> =
+            (0..shards).map(|_| (CompressedTrace::new(), 0)).collect();
+        for (i, a) in trace.into_iter().enumerate() {
+            let k = (((a.addr / line) % group) % shards as u64) as usize;
+            if (i as u64) < warmup_accesses {
+                parts[k].1 += 1;
+            }
+            parts[k].0.push(a);
         }
+        ShardedTrace { parts, warmup: warmup_accesses > 0 }
     }
-    out
+
+    /// Number of shard buckets.
+    pub fn num_shards(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total accesses across shards.
+    pub fn len(&self) -> usize {
+        self.parts.iter().map(|(t, _)| t.len()).sum()
+    }
+
+    /// Whether every shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.parts.iter().all(|(t, _)| t.is_empty())
+    }
+
+    /// Accesses in shard `s` (the skewed-load bench asserts its hot-shard
+    /// fraction through this).
+    pub fn shard_len(&self, s: usize) -> usize {
+        self.parts[s].0.len()
+    }
+
+    /// Total encoded bytes across shards (BENCH_sim divides by
+    /// [`ShardedTrace::len`] for its bytes/access record).
+    pub fn byte_len(&self) -> usize {
+        self.parts.iter().map(|(t, _)| t.byte_len()).sum()
+    }
+
+    /// Replay every shard on its own [`Hierarchy`] through the thread
+    /// pool and merge counters — bit-identical to sequential replay of
+    /// the unpartitioned trace, for any worker count.
+    pub fn replay(
+        &self,
+        config: &GpuConfig,
+        cache: CacheConfig,
+        faults: Option<FaultConfig>,
+        backend: &MemBackendConfig,
+    ) -> SimResult {
+        let results = par_map_indexed(&self.parts, |shard, (accesses, warm)| {
+            let _span = crate::span!("gpusim.shard", shard = shard, accesses = accesses.len());
+            let mut h = Hierarchy::with_backend(config, cache, faults, backend);
+            let mut it = accesses.iter();
+            for a in it.by_ref().take(*warm as usize) {
+                h.access(a.addr, a.write);
+            }
+            if self.warmup {
+                h.start_measurement();
+            }
+            for a in it {
+                h.access(a.addr, a.write);
+            }
+            h.finish()
+        });
+        let t_merge = std::time::Instant::now();
+        let mut out = SimResult::zero(config.l2_bytes);
+        for r in &results {
+            out.merge_from(r);
+        }
+        if crate::telemetry::enabled() {
+            crate::telemetry::observe("gpusim.merge_s", t_merge.elapsed().as_secs_f64());
+            for (accesses, _) in &self.parts {
+                crate::telemetry::observe("gpusim.shard.accesses", accesses.len() as f64);
+            }
+        }
+        out
+    }
 }
 
 /// One resident-or-remembered line in a per-set recency stack.
@@ -1102,7 +1171,7 @@ pub fn capacity_sweep(
 /// [`capacity_sweep`] under an explicit cache configuration. The default
 /// configuration without warmup takes the single-pass stack-distance
 /// path; anything else (non-LRU replacement, through/bypass writes, L1
-/// on, or a warmup prefix) materializes and partitions the trace **once**
+/// on, or a warmup prefix) compresses and partitions the trace **once**
 /// — the shard modulus is the gcd of every swept capacity's valid
 /// grouping, so one partition serves all capacities — and replays each
 /// capacity through the set-sharded parallel simulator. `warmup_frac` is
@@ -1121,7 +1190,8 @@ pub fn capacity_sweep_config(
     let mut caps: Vec<u64> = Vec::with_capacity(capacities.len() + 1);
     caps.push(base_cfg.l2_bytes);
     caps.extend_from_slice(capacities);
-    let all: Vec<Access> = trace.into_iter().collect();
+    // Compress once; every per-capacity replay decodes the same blocks.
+    let all = CompressedTrace::from_accesses(trace);
     let warmup = warmup_frac.map_or(0, |f| (f * all.len() as f64) as u64);
     let group = caps
         .iter()
@@ -1131,23 +1201,17 @@ pub fn capacity_sweep_config(
     let results: Vec<SimResult> = if shards <= 1 {
         caps.iter()
             .map(|&cap| {
-                simulate_config(
-                    all.iter().copied(),
-                    &base_cfg.clone().with_l2(cap),
-                    cache,
-                    warmup,
-                )
+                simulate_config(all.iter(), &base_cfg.clone().with_l2(cap), cache, warmup)
             })
             .collect()
     } else {
-        let parts = partition(all, base_cfg.l2_line, group, shards, warmup);
+        let parts =
+            ShardedTrace::partition_by(all.iter(), base_cfg.l2_line, group, shards, warmup);
         caps.iter()
             .map(|&cap| {
-                replay_parts(
-                    &parts,
+                parts.replay(
                     &base_cfg.clone().with_l2(cap),
                     cache,
-                    warmup > 0,
                     None,
                     &MemBackendConfig::FixedLatency,
                 )
@@ -1273,6 +1337,29 @@ mod tests {
             let par = simulate_sharded(trace.iter().copied(), &gpu, cache, 0, 8);
             assert_eq!(seq, par, "{}", cache.describe());
         }
+    }
+
+    #[test]
+    fn sharded_trace_partitions_once_and_replays_exactly() {
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let cache = CacheConfig::default();
+        let st = ShardedTrace::partition(trace.iter().copied(), &gpu, cache, 0, 8);
+        assert_eq!(st.len(), trace.len());
+        assert_eq!(st.num_shards(), 8);
+        assert_eq!((0..8).map(|s| st.shard_len(s)).sum::<usize>(), trace.len());
+        assert!(
+            st.byte_len() < trace.len() * 16,
+            "compressed shards beat the raw 16 B/access struct: {} B for {} accesses",
+            st.byte_len(),
+            trace.len()
+        );
+        let seq = simulate_config(trace.iter().copied(), &gpu, cache, 0);
+        let a = st.replay(&gpu, cache, None, &MemBackendConfig::FixedLatency);
+        let b = st.replay(&gpu, cache, None, &MemBackendConfig::FixedLatency);
+        assert_eq!(a, seq, "compressed sharded replay is bit-identical");
+        assert_eq!(b, seq, "replay is repeatable from one partition");
     }
 
     #[test]

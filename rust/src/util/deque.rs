@@ -1,0 +1,219 @@
+//! Fixed-capacity Chase–Lev work-stealing deque over small task ids.
+//!
+//! The pool's scheduler ([`crate::util::pool`]) seeds every worker with a
+//! contiguous share of chunk indices before any worker starts, so the
+//! deque never grows and never stores anything wider than a `usize` —
+//! which lets the classic Chase–Lev ring (owner pushes/pops at the
+//! *bottom*, thieves take from the *top*) be written entirely in safe
+//! Rust: the ring slots are `AtomicUsize`, so a stale read race is a
+//! benign value re-read, not a data race, and the `top` CAS still decides
+//! ownership exactly once per task.
+//!
+//! Memory ordering follows Lê et al., "Correct and Efficient
+//! Work-Stealing for Weak Memory Models" (PPoPP '13): `SeqCst` fences on
+//! the owner's pop and the thief's top/bottom read pair, a `Release`
+//! fence between writing a slot and publishing `bottom`.
+
+use std::sync::atomic::{fence, AtomicIsize, AtomicUsize, Ordering};
+
+/// Outcome of a [`WsDeque::steal`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal {
+    /// The deque was observed empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth retrying.
+    Retry,
+    /// Took the oldest task.
+    Task(usize),
+}
+
+/// A single-owner, multi-thief deque of `usize` task ids with a fixed
+/// capacity chosen at construction (the pool pushes all tasks up front;
+/// overflow tasks go through its shared injector instead).
+pub struct WsDeque {
+    buf: Box<[AtomicUsize]>,
+    mask: usize,
+    /// Thieves' end (oldest task). Monotonically increasing.
+    top: AtomicIsize,
+    /// Owner's end (one past the newest task).
+    bottom: AtomicIsize,
+}
+
+impl WsDeque {
+    /// An empty deque able to hold at least `cap` tasks.
+    pub fn with_capacity(cap: usize) -> WsDeque {
+        let cap = cap.max(1).next_power_of_two();
+        WsDeque {
+            buf: (0..cap).map(|_| AtomicUsize::new(0)).collect(),
+            mask: cap - 1,
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+        }
+    }
+
+    /// Owner-only: push a task at the bottom. Panics if the deque is
+    /// full — the pool sizes each deque for its seeded share, so a full
+    /// deque is a scheduler bug, not an expected condition.
+    pub fn push(&self, task: usize) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        assert!(b - t < self.buf.len() as isize, "WsDeque over capacity");
+        self.buf[(b as usize) & self.mask].store(task, Ordering::Relaxed);
+        // Publish the slot before the new bottom becomes visible to
+        // thieves.
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only: pop the most recently pushed task (LIFO).
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let task = self.buf[(b as usize) & self.mask].load(Ordering::Relaxed);
+            if t == b {
+                // Last task: race the thieves for it via the top CAS,
+                // then restore the canonical empty state either way.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                won.then_some(task)
+            } else {
+                Some(task)
+            }
+        } else {
+            // Already empty; undo the speculative decrement.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Any-thread: try to steal the oldest task (FIFO) — in the pool's
+    /// seeding order that is the owner's *farthest-future* chunk, which
+    /// keeps thieves off the owner's cache-warm work.
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let task = self.buf[(t as usize) & self.mask].load(Ordering::Relaxed);
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                Steal::Task(task)
+            } else {
+                Steal::Retry
+            }
+        } else {
+            Steal::Empty
+        }
+    }
+
+    /// Whether the deque currently looks empty (advisory: a concurrent
+    /// owner or thief may change this immediately).
+    pub fn is_empty(&self) -> bool {
+        self.top.load(Ordering::Acquire) >= self.bottom.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64};
+
+    #[test]
+    fn owner_pop_is_lifo() {
+        let d = WsDeque::with_capacity(8);
+        for t in 0..5 {
+            d.push(t);
+        }
+        assert_eq!(d.pop(), Some(4));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), Some(0));
+        assert_eq!(d.pop(), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn thief_steal_is_fifo() {
+        let d = WsDeque::with_capacity(8);
+        for t in 0..4 {
+            d.push(t);
+        }
+        assert_eq!(d.steal(), Steal::Task(0));
+        assert_eq!(d.steal(), Steal::Task(1));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.steal(), Steal::Task(2));
+        assert_eq!(d.steal(), Steal::Empty);
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        let d = WsDeque::with_capacity(5);
+        for t in 0..8 {
+            d.push(t); // 5 rounds up to 8; all fit
+        }
+        assert_eq!(d.steal(), Steal::Task(0));
+        d.push(8); // slot freed by the steal
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn push_past_capacity_panics() {
+        let d = WsDeque::with_capacity(2);
+        for t in 0..3 {
+            d.push(t);
+        }
+    }
+
+    /// Concurrency smoke: one owner popping, several thieves stealing —
+    /// every task claimed exactly once, none lost. (Single-core boxes
+    /// still interleave via preemption; the test is deterministic in
+    /// outcome, not schedule.)
+    #[test]
+    fn concurrent_steals_claim_each_task_once() {
+        const TASKS: usize = 10_000;
+        let d = WsDeque::with_capacity(TASKS);
+        for t in 0..TASKS {
+            d.push(t);
+        }
+        let sum = AtomicU64::new(0);
+        let count = AtomicU64::new(0);
+        let done = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| loop {
+                    match d.steal() {
+                        Steal::Task(t) => {
+                            sum.fetch_add(t as u64, Ordering::Relaxed);
+                            count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => {
+                            if done.load(Ordering::Acquire) {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            while let Some(t) = d.pop() {
+                sum.fetch_add(t as u64, Ordering::Relaxed);
+                count.fetch_add(1, Ordering::Relaxed);
+            }
+            done.store(true, Ordering::Release);
+        });
+        assert_eq!(count.load(Ordering::Relaxed) as usize, TASKS);
+        assert_eq!(sum.load(Ordering::Relaxed) as usize, TASKS * (TASKS - 1) / 2);
+    }
+}

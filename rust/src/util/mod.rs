@@ -10,6 +10,7 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod deque;
 pub mod err;
 pub mod pool;
 pub mod rng;

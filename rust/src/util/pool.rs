@@ -1,17 +1,62 @@
-//! Scoped thread-pool `map` for embarrassingly-parallel sweeps.
+//! Scoped work-stealing thread-pool `map` for embarrassingly-parallel
+//! sweeps.
 //!
 //! The coordinator fans experiment sweeps (capacity × technology ×
 //! workload) across cores. With no `rayon` in the offline registry, this
 //! module provides the one primitive the sweeps need: an order-preserving
 //! parallel map over an indexed work list, built on `std::thread::scope`.
+//!
+//! Two schedulers share the same contract (item-order results, per-chunk
+//! panic reporting, per-worker utilization stats):
+//!
+//! * [`Scheduler::Stealing`] (default) — chunks are seeded into
+//!   per-worker Chase–Lev deques ([`crate::util::deque`]) as contiguous
+//!   shares, with overflow in a shared injector; a worker drains its own
+//!   deque LIFO (cache-warm, ascending chunk order), then claims from
+//!   the injector, then steals the *oldest* chunk from a victim. Skewed
+//!   item costs rebalance automatically: whoever lands the hot chunk
+//!   keeps it, everyone else redistributes the cold tail.
+//! * [`Scheduler::Chunked`] — the PR 6 static scheduler (shared LIFO
+//!   chunk queue, 4× oversubscription), kept callable so benches can
+//!   measure the stealing scheduler against the baseline it replaced.
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::thread::LocalKey;
 use std::time::Instant;
+
+use super::deque::{Steal, WsDeque};
+
+/// Target chunks per worker for the stealing scheduler: fine enough to
+/// rebalance a single hot chunk, coarse enough that chunk bookkeeping
+/// (one uncontended lock + one atomic per chunk) stays negligible.
+const CHUNKS_PER_WORKER: usize = 16;
+/// Chunks seeded into each worker's deque; a share beyond this flows
+/// through the shared injector instead (bounding deque capacity).
+const DEQUE_SEED: usize = 8;
+/// Shard oversubscription factor for [`recommended_shards`]: more shards
+/// than workers gives the stealing scheduler room to rebalance when one
+/// shard (set residue class) runs hot.
+const SHARD_OVERSUB: usize = 4;
 
 thread_local! {
     /// Set for the lifetime of every spawned pool worker thread.
     static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// Scoped [`with_threads`] override, consulted before the env var.
+    static THREADS_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+    /// Scoped [`with_scheduler`] override, consulted before the env var.
+    static SCHED_OVERRIDE: Cell<Option<Scheduler>> = const { Cell::new(None) };
+}
+
+/// Restores a thread-local `Cell` to its previous value on drop, so the
+/// scoped overrides unwind correctly through panics.
+struct Restore<T: Copy + 'static>(&'static LocalKey<Cell<T>>, T);
+
+impl<T: Copy + 'static> Drop for Restore<T> {
+    fn drop(&mut self) {
+        self.0.with(|c| c.set(self.1));
+    }
 }
 
 /// Whether the current thread is a pool worker — lets nested parallel
@@ -29,9 +74,13 @@ pub fn split_threads(outer: usize) -> usize {
     (num_threads() / outer.max(1)).max(1)
 }
 
-/// Number of worker threads to use: respects `DEEPNVM_THREADS`, defaults to
-/// available parallelism, and is always at least 1.
+/// Number of worker threads to use: a scoped [`with_threads`] override
+/// first, then `DEEPNVM_THREADS`, then available parallelism; always at
+/// least 1.
 pub fn num_threads() -> usize {
+    if let Some(n) = THREADS_OVERRIDE.with(|c| c.get()) {
+        return n;
+    }
     if let Ok(v) = std::env::var("DEEPNVM_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -40,6 +89,61 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Run `f` with [`num_threads`] pinned to `n` on this thread (nested
+/// calls compose; the previous value is restored on exit, including
+/// panic unwinds). This is how the differential tests sweep worker
+/// counts and how outer sweeps hand a [`split_threads`] budget to a
+/// nested sharded simulation without touching the process environment.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREADS_OVERRIDE.with(|c| c.replace(Some(n.max(1))));
+    let _restore = Restore(&THREADS_OVERRIDE, prev);
+    f()
+}
+
+/// Shard budget for a set-sharded simulation: oversubscribes the worker
+/// count ([`SHARD_OVERSUB`]× chunks of rebalanceable work) so the
+/// stealing scheduler can absorb shard-cost skew, and collapses to 1
+/// inside a pool worker so nested simulations run sequentially.
+pub fn recommended_shards() -> usize {
+    if in_worker() {
+        1
+    } else {
+        num_threads().saturating_mul(SHARD_OVERSUB)
+    }
+}
+
+/// Which `par_map` execution strategy to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduler {
+    /// Per-worker Chase–Lev deques + shared injector (default).
+    Stealing,
+    /// The pre-stealing statically-chunked shared queue (benchmark
+    /// baseline).
+    Chunked,
+}
+
+/// The scheduler `par_map` will use on this thread: a scoped
+/// [`with_scheduler`] override first, then `DEEPNVM_SCHED`
+/// (`chunked` selects the baseline), else [`Scheduler::Stealing`].
+pub fn current_scheduler() -> Scheduler {
+    if let Some(s) = SCHED_OVERRIDE.with(|c| c.get()) {
+        return s;
+    }
+    match std::env::var("DEEPNVM_SCHED") {
+        Ok(v) if v.eq_ignore_ascii_case("chunked") => Scheduler::Chunked,
+        _ => Scheduler::Stealing,
+    }
+}
+
+/// Run `f` with `par_map` pinned to `sched` on this thread (restored on
+/// exit, panic-safe) — the hook BENCH_sim uses to time
+/// chunked-vs-stealing on the same workload.
+pub fn with_scheduler<R>(sched: Scheduler, f: impl FnOnce() -> R) -> R {
+    let prev = SCHED_OVERRIDE.with(|c| c.replace(Some(sched)));
+    let _restore = Restore(&SCHED_OVERRIDE, prev);
+    f()
 }
 
 /// Parallel, order-preserving map: applies `f` to each item of `items`
@@ -53,8 +157,7 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec
 /// [`par_map_indexed`] call (nested maps made from inside pool workers
 /// run sequentially and do not overwrite it). Collected unconditionally —
 /// the bookkeeping is two `Instant` reads per chunk — so BENCH_sim can
-/// print the load-imbalance baseline ROADMAP item 4's work-stealing
-/// scheduler will be judged against, even without telemetry enabled.
+/// record the load-imbalance the stealing scheduler is judged on.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct PoolRunStats {
     /// Items mapped.
@@ -63,12 +166,16 @@ pub struct PoolRunStats {
     pub workers: usize,
     /// Per-worker `(items processed, busy seconds)`, indexed by worker.
     pub per_worker: Vec<(usize, f64)>,
+    /// Chunks obtained by stealing from another worker's deque (0 under
+    /// the chunked scheduler and on sequential runs).
+    pub steals: usize,
 }
 
 impl PoolRunStats {
     /// Load imbalance as max/mean per-worker busy time: `1.0` is a
-    /// perfectly balanced (or single-worker) run; `2.0` means the
-    /// slowest worker was busy twice as long as the average.
+    /// perfectly balanced (or single-worker, or zero-item) run; `2.0`
+    /// means the slowest worker was busy twice as long as the average.
+    /// Always a defined, finite value ≥ 1.0 up to rounding.
     pub fn imbalance(&self) -> f64 {
         if self.per_worker.is_empty() {
             return 1.0;
@@ -111,6 +218,7 @@ fn record_run(stats: PoolRunStats) {
         crate::telemetry::gauge_set("pool.last.items", stats.items as f64);
         crate::telemetry::gauge_set("pool.last.workers", stats.workers as f64);
         crate::telemetry::gauge_set("pool.last.imbalance", stats.imbalance());
+        crate::telemetry::gauge_set("pool.last.steals", stats.steals as f64);
         for (w, &(items, busy)) in stats.per_worker.iter().enumerate() {
             crate::telemetry::gauge_set(&format!("pool.last.worker{w}.items"), items as f64);
             crate::telemetry::gauge_set(&format!("pool.last.worker{w}.busy_s"), busy);
@@ -132,23 +240,40 @@ pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Abort with the structured par_map panic message if any chunk was
+/// poisoned: remaining chunks drained first, so callers see one failure
+/// mode naming the first poisoned chunk and its item range.
+fn raise_failures(failures: Mutex<Vec<(usize, usize, usize, String)>>) {
+    let mut failures = failures.into_inner().unwrap_or_else(|e| e.into_inner());
+    if failures.is_empty() {
+        return;
+    }
+    failures.sort();
+    let more = if failures.len() > 1 {
+        format!(" (+{} more poisoned chunks)", failures.len() - 1)
+    } else {
+        String::new()
+    };
+    let (c, a, b, why) = &failures[0];
+    panic!("par_map: chunk {c} (items {a}..{b}) panicked: {why}{more}");
+}
+
 /// Like [`par_map`] but the closure also receives the item index.
 ///
 /// Results land in a preallocated buffer via **chunked ownership**: the
-/// buffer is split into disjoint `&mut` ranges up front, and each worker
-/// pops whole ranges from a shared work list — one lock operation per
-/// chunk instead of the old per-item `Mutex<Option<R>>` (one allocation
-/// and two lock ops per element, which dominated large sweeps). Chunks are
-/// oversubscribed 4× the worker count so uneven items still balance.
+/// buffer is split into disjoint `&mut` ranges up front, and the worker
+/// that claims chunk `c` — from its own deque, the injector, or a steal —
+/// takes range `c` exactly once (one uncontended lock operation per
+/// chunk). See [`Scheduler`] for the two claiming strategies.
 ///
 /// # Panics
 ///
 /// A panic in `f` is caught per chunk: the remaining chunks still drain
-/// (no worker dies holding the queue lock, so no poison cascade and no
-/// silent half-filled result), then `par_map` aborts with a structured
-/// message naming the poisoned chunk and its item range. The sequential
-/// fallback raises the same shape, so callers see one failure mode
-/// regardless of core count.
+/// (no worker dies holding work, so no poison cascade and no silent
+/// half-filled result), then `par_map` aborts with a structured message
+/// naming the poisoned chunk and its item range. The sequential fallback
+/// raises the same shape, so callers see one failure mode regardless of
+/// core count.
 pub fn par_map_indexed<T: Sync, R: Send>(
     items: &[T],
     f: impl Fn(usize, &T) -> R + Sync,
@@ -157,6 +282,9 @@ pub fn par_map_indexed<T: Sync, R: Send>(
 
     let n = items.len();
     if n == 0 {
+        // Still a defined run: the imbalance gauges must read 1.0, not a
+        // stale or NaN value, after a degenerate zero-item sweep.
+        record_run(PoolRunStats { items: 0, workers: 1, per_worker: vec![(0, 0.0)], steals: 0 });
         return Vec::new();
     }
     let workers = num_threads().min(n);
@@ -179,9 +307,170 @@ pub fn par_map_indexed<T: Sync, R: Send>(
             items: n,
             workers: 1,
             per_worker: vec![(n, t0.elapsed().as_secs_f64())],
+            steals: 0,
         });
         return out;
     }
+    match current_scheduler() {
+        Scheduler::Stealing => par_map_stealing(items, &f, workers),
+        Scheduler::Chunked => par_map_chunked(items, &f, workers),
+    }
+}
+
+/// The work-stealing executor: chunk ids live in per-worker Chase–Lev
+/// deques (seeded with contiguous shares, pushed in reverse so the
+/// owner's LIFO pop walks its share in ascending item order) plus a
+/// shared injector for overflow; idle workers claim injector chunks,
+/// then steal the oldest chunk from a victim, and exit once every chunk
+/// has been executed (`remaining` hits zero with nothing stealable).
+fn par_map_stealing<T: Sync, R: Send>(
+    items: &[T],
+    f: &(impl Fn(usize, &T) -> R + Sync),
+    workers: usize,
+) -> Vec<R> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let n = items.len();
+    let chunk = n.div_ceil(workers * CHUNKS_PER_WORKER).max(1);
+    let n_chunks = n.div_ceil(chunk);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    // Chunk c's disjoint slice of the result buffer, taken exactly once
+    // by whichever worker claims chunk c.
+    let ranges: Vec<Mutex<Option<&mut [Option<R>]>>> =
+        slots.chunks_mut(chunk).map(|r| Mutex::new(Some(r))).collect();
+    // Seed worker w with the first DEQUE_SEED chunks of its contiguous
+    // share; the rest of every share lands in the injector (ascending).
+    let per = n_chunks.div_ceil(workers);
+    let mut injected: Vec<usize> = Vec::new();
+    let deques: Vec<WsDeque> = (0..workers)
+        .map(|w| {
+            let share = (w * per).min(n_chunks)..((w + 1) * per).min(n_chunks);
+            let seed_end = (share.start + DEQUE_SEED).min(share.end);
+            let d = WsDeque::with_capacity(DEQUE_SEED);
+            for c in (share.start..seed_end).rev() {
+                d.push(c);
+            }
+            injected.extend(seed_end..share.end);
+            d
+        })
+        .collect();
+    injected.sort_unstable();
+    let injector = AtomicUsize::new(0);
+    let remaining = AtomicUsize::new(n_chunks);
+    // (chunk index, first item, one-past-last item, panic message) per
+    // poisoned chunk.
+    let failures: Mutex<Vec<(usize, usize, usize, String)>> = Mutex::new(Vec::new());
+    // Per-worker `(worker, items, busy seconds, steals)`, pushed once per
+    // worker on exit.
+    let worker_stats: Mutex<Vec<(usize, usize, f64, usize)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        let (ranges, deques, injected) = (&ranges, &deques, &injected);
+        let (injector, remaining) = (&injector, &remaining);
+        let (failures, worker_stats) = (&failures, &worker_stats);
+        for w in 0..workers {
+            scope.spawn(move || {
+                IN_WORKER.with(|c| c.set(true));
+                let mut my_items = 0usize;
+                let mut my_busy = 0.0_f64;
+                let mut my_steals = 0usize;
+                {
+                    let mut run_chunk = |c: usize| {
+                        let start = c * chunk;
+                        let range = ranges[c]
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .take()
+                            .expect("deque/injector claim is exactly-once");
+                        let len = range.len();
+                        let _span =
+                            crate::span!("pool.chunk", worker = w, start = start, len = len);
+                        let t0 = Instant::now();
+                        // AssertUnwindSafe: on a caught panic the whole
+                        // map aborts, so nobody observes the half-written
+                        // chunk.
+                        let run = catch_unwind(AssertUnwindSafe(|| {
+                            for (off, slot) in range.iter_mut().enumerate() {
+                                *slot = Some(f(start + off, &items[start + off]));
+                            }
+                        }));
+                        my_busy += t0.elapsed().as_secs_f64();
+                        my_items += len;
+                        if let Err(payload) = run {
+                            failures.lock().unwrap_or_else(|e| e.into_inner()).push((
+                                c,
+                                start,
+                                start + len,
+                                panic_message(payload),
+                            ));
+                        }
+                        // A poisoned chunk still counts as executed —
+                        // the map drains fully before aborting.
+                        remaining.fetch_sub(1, Ordering::Release);
+                    };
+                    'work: loop {
+                        if let Some(c) = deques[w].pop() {
+                            run_chunk(c);
+                            continue;
+                        }
+                        if injector.load(Ordering::Relaxed) < injected.len() {
+                            let i = injector.fetch_add(1, Ordering::Relaxed);
+                            if i < injected.len() {
+                                run_chunk(injected[i]);
+                                continue;
+                            }
+                        }
+                        let mut saw_retry = false;
+                        for off in 1..workers {
+                            match deques[(w + off) % workers].steal() {
+                                Steal::Task(c) => {
+                                    my_steals += 1;
+                                    run_chunk(c);
+                                    continue 'work;
+                                }
+                                Steal::Retry => saw_retry = true,
+                                Steal::Empty => {}
+                            }
+                        }
+                        // Nothing visible: done iff every chunk has been
+                        // executed; otherwise someone is still busy (all
+                        // claimed chunks run immediately) — yield to them.
+                        if !saw_retry && remaining.load(Ordering::Acquire) == 0 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+                worker_stats
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push((w, my_items, my_busy, my_steals));
+            });
+        }
+    });
+    drop(ranges);
+    let mut per_worker: Vec<(usize, f64)> = vec![(0, 0.0); workers];
+    let mut steals = 0usize;
+    for (w, done, busy, stolen) in worker_stats.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        per_worker[w] = (done, busy);
+        steals += stolen;
+    }
+    record_run(PoolRunStats { items: n, workers, per_worker, steals });
+    raise_failures(failures);
+    slots.into_iter().map(|s| s.expect("worker filled every slot")).collect()
+}
+
+/// The pre-stealing statically-chunked executor (PR 6): a shared LIFO
+/// queue of 4×-oversubscribed chunks. Kept as the measurable baseline
+/// behind [`Scheduler::Chunked`].
+fn par_map_chunked<T: Sync, R: Send>(
+    items: &[T],
+    f: &(impl Fn(usize, &T) -> R + Sync),
+    workers: usize,
+) -> Vec<R> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let n = items.len();
     let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
     let chunk = n.div_ceil(workers * 4).max(1);
@@ -192,17 +481,12 @@ pub fn par_map_indexed<T: Sync, R: Send>(
             .map(|(c, range)| (c * chunk, range))
             .collect(),
     );
-    // (chunk index, first item, one-past-last item, panic message) per
-    // poisoned chunk.
     let failures: Mutex<Vec<(usize, usize, usize, String)>> = Mutex::new(Vec::new());
-    // Per-worker `(worker, items, busy seconds)` utilization, pushed once
-    // per worker on drain.
     let worker_stats: Mutex<Vec<(usize, usize, f64)>> = Mutex::new(Vec::new());
     std::thread::scope(|scope| {
         let queue = &queue;
         let failures = &failures;
         let worker_stats = &worker_stats;
-        let f = &f;
         for w in 0..workers {
             scope.spawn(move || {
                 IN_WORKER.with(|c| c.set(true));
@@ -218,8 +502,6 @@ pub fn par_map_indexed<T: Sync, R: Send>(
                     let len = range.len();
                     let _span = crate::span!("pool.chunk", worker = w, start = start, len = len);
                     let t0 = Instant::now();
-                    // AssertUnwindSafe: on a caught panic the whole map
-                    // aborts, so nobody observes the half-written chunk.
                     let run = catch_unwind(AssertUnwindSafe(|| {
                         for (off, slot) in range.iter_mut().enumerate() {
                             *slot = Some(f(start + off, &items[start + off]));
@@ -248,27 +530,15 @@ pub fn par_map_indexed<T: Sync, R: Send>(
     for (w, done, busy) in worker_stats.into_inner().unwrap_or_else(|e| e.into_inner()) {
         per_worker[w] = (done, busy);
     }
-    record_run(PoolRunStats { items: n, workers, per_worker });
-    let mut failures = failures.into_inner().unwrap_or_else(|e| e.into_inner());
-    if !failures.is_empty() {
-        failures.sort();
-        let more = if failures.len() > 1 {
-            format!(" (+{} more poisoned chunks)", failures.len() - 1)
-        } else {
-            String::new()
-        };
-        let (c, a, b, why) = &failures[0];
-        panic!("par_map: chunk {c} (items {a}..{b}) panicked: {why}{more}");
-    }
-    slots
-        .into_iter()
-        .map(|s| s.expect("worker filled every slot"))
-        .collect()
+    record_run(PoolRunStats { items: n, workers, per_worker, steals: 0 });
+    raise_failures(failures);
+    slots.into_iter().map(|s| s.expect("worker filled every slot")).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
     use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
@@ -295,6 +565,26 @@ mod tests {
     }
 
     #[test]
+    fn zero_item_run_records_defined_imbalance() {
+        // The shape a zero-item run records: exactly one idle worker.
+        let zero = PoolRunStats { items: 0, workers: 1, per_worker: vec![(0, 0.0)], steals: 0 };
+        assert_eq!(zero.imbalance(), 1.0);
+        // And par_map actually records it (other tests' maps may race on
+        // the global slot, so observe our own run with a few attempts).
+        for _ in 0..64 {
+            let _: Vec<u8> = par_map(&[], |_: &u8| unreachable!());
+            let stats = last_stats().expect("zero-item run was recorded");
+            assert!(stats.imbalance().is_finite());
+            if stats.items == 0 {
+                assert_eq!(stats, zero);
+                assert_eq!(stats.imbalance(), 1.0);
+                return;
+            }
+        }
+        panic!("zero-item run stats never observed");
+    }
+
+    #[test]
     fn indexed_variant_sees_indices() {
         let items = vec!["a", "b", "c"];
         let out = par_map_indexed(&items, |i, s| format!("{i}{s}"));
@@ -305,6 +595,66 @@ mod tests {
     fn thread_env_override_is_respected() {
         // num_threads() >= 1 always; with env set it parses.
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let ambient = num_threads();
+        assert_eq!(with_threads(7, num_threads), 7);
+        assert_eq!(with_threads(7, || with_threads(2, num_threads)), 2);
+        assert_eq!(with_threads(0, num_threads), 1, "clamped to at least 1");
+        assert_eq!(num_threads(), ambient, "override does not leak");
+        let _ = catch_unwind(AssertUnwindSafe(|| with_threads(3, || panic!("boom"))));
+        assert_eq!(num_threads(), ambient, "override restored across unwinds");
+    }
+
+    #[test]
+    fn with_scheduler_overrides_and_restores() {
+        let ambient = current_scheduler();
+        assert_eq!(with_scheduler(Scheduler::Chunked, current_scheduler), Scheduler::Chunked);
+        assert_eq!(with_scheduler(Scheduler::Stealing, current_scheduler), Scheduler::Stealing);
+        assert_eq!(current_scheduler(), ambient);
+    }
+
+    #[test]
+    fn recommended_shards_nesting_contract() {
+        assert_eq!(with_threads(3, recommended_shards), 12);
+        // Inside a (real, parallel) pool worker the budget collapses to 1.
+        let nested = with_threads(2, || par_map(&[0u8, 1u8], |_| recommended_shards()));
+        assert_eq!(nested, vec![1, 1]);
+    }
+
+    /// Satellite determinism property: both schedulers return results in
+    /// item order for every worker count in the differential set.
+    #[test]
+    fn schedulers_agree_across_worker_counts() {
+        let items: Vec<u64> = (0..1003).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        for threads in [1usize, 2, 7, 16] {
+            for sched in [Scheduler::Stealing, Scheduler::Chunked] {
+                let out = with_threads(threads, || {
+                    with_scheduler(sched, || par_map(&items, |&x| x * 3 + 1))
+                });
+                assert_eq!(out, expect, "{sched:?} with {threads} workers");
+            }
+        }
+    }
+
+    /// A hot first item forces real redistribution: order must still hold.
+    #[test]
+    fn stealing_preserves_order_under_skewed_cost() {
+        let items: Vec<u64> = (0..300).collect();
+        let out = with_threads(7, || {
+            with_scheduler(Scheduler::Stealing, || {
+                par_map(&items, |&x| {
+                    if x == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    x * 2
+                })
+            })
+        });
+        assert_eq!(out, (0..300).map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]
@@ -322,7 +672,7 @@ mod tests {
     #[test]
     fn poisoned_chunk_abort_names_chunk_and_item_range() {
         let items: Vec<u32> = (0..64).collect();
-        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let err = catch_unwind(AssertUnwindSafe(|| {
             par_map(&items, |&x| {
                 if x >= 32 {
                     panic!("shard died");
@@ -335,6 +685,31 @@ mod tests {
         assert!(msg.starts_with("par_map: chunk "), "{msg}");
         assert!(msg.contains("items "), "{msg}");
         assert!(msg.contains("panicked: shard died"), "{msg}");
+    }
+
+    /// The stealing executor reports the same structured abort as the
+    /// chunked one, including the poisoned-chunk count, with parallelism
+    /// forced on regardless of the host's core count.
+    #[test]
+    fn poisoned_chunks_report_structurally_under_stealing() {
+        let items: Vec<u32> = (0..256).collect();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                with_scheduler(Scheduler::Stealing, || {
+                    par_map(&items, |&x| {
+                        if x % 100 == 37 {
+                            panic!("boom {x}");
+                        }
+                        x
+                    })
+                })
+            })
+        }))
+        .unwrap_err();
+        let msg = panic_message(err);
+        assert!(msg.starts_with("par_map: chunk "), "{msg}");
+        assert!(msg.contains("panicked: boom 37"), "{msg}");
+        assert!(msg.contains("(+2 more poisoned chunks)"), "{msg}");
     }
 
     #[test]
@@ -365,14 +740,11 @@ mod tests {
             items: 4,
             workers: 2,
             per_worker: vec![(2, 3.0), (2, 1.0)],
+            steals: 0,
         };
         assert!((stats.imbalance() - 1.5).abs() < 1e-12);
         assert_eq!(PoolRunStats::default().imbalance(), 1.0);
-        let idle = PoolRunStats {
-            items: 1,
-            workers: 1,
-            per_worker: vec![(1, 0.0)],
-        };
+        let idle = PoolRunStats { items: 1, workers: 1, per_worker: vec![(1, 0.0)], steals: 0 };
         assert_eq!(idle.imbalance(), 1.0, "all-zero busy times are balanced");
     }
 

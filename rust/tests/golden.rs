@@ -25,7 +25,8 @@ use deepnvm::device::characterize::characterize_kind;
 use deepnvm::engine::{descriptor, Engine, Query, TechSpec};
 use deepnvm::experiments::{by_id, tables, Output, Params};
 use deepnvm::gpusim::{
-    net_trace, simulate, simulate_backend, simulate_sharded, CacheConfig, GpuConfig,
+    net_trace, simulate, simulate_backend, simulate_sharded, CacheConfig, CompressedTrace,
+    GpuConfig,
 };
 use deepnvm::membackend::{DramStats, MemBackendConfig};
 use deepnvm::nvsim::optimizer::explore;
@@ -331,6 +332,39 @@ fn table3_traces_bit_identical_to_seed() {
         assert_eq!(total, want_total, "{id} trace length");
         assert_eq!(writes, want_writes, "{id} trace writes");
         assert_eq!(csum, want_csum, "{id} trace prefix checksum");
+    }
+}
+
+/// Golden 4b': the delta/varint trace codec is transparent — decoding a
+/// compressed Table 3 trace reproduces the same pinned fingerprints
+/// (length, write mix, prefix checksum) as the plain stream, so the
+/// sharded replay's switch to compressed blocks cannot perturb a single
+/// access.
+#[test]
+fn table3_compressed_traces_keep_the_pinned_checksums() {
+    for (id, batch, want_total, want_writes, want_csum) in GOLDEN_TRACES {
+        let net = registry::builtin_net(id).expect("table3 builtin");
+        let ct = CompressedTrace::from_accesses(net_trace(&net, batch));
+        assert_eq!(ct.len() as u64, want_total, "{id} compressed length");
+        let (mut total, mut writes, mut csum) = (0u64, 0u64, 0u64);
+        for (i, a) in ct.iter().enumerate() {
+            total += 1;
+            writes += a.write as u64;
+            if i < 100_000 {
+                csum = csum.wrapping_add(
+                    ((i as u64) + 1).wrapping_mul(a.addr.wrapping_add(a.write as u64)),
+                );
+            }
+        }
+        assert_eq!(total, want_total, "{id} decoded length");
+        assert_eq!(writes, want_writes, "{id} decoded writes");
+        assert_eq!(csum, want_csum, "{id} decoded prefix checksum");
+        assert!(
+            ct.byte_len() < 16 * ct.len(),
+            "{id}: codec must beat the 16-byte raw record ({} bytes / {} accesses)",
+            ct.byte_len(),
+            ct.len()
+        );
     }
 }
 

@@ -128,6 +128,47 @@ fn warmup_boundaries_are_exact_under_sharding() {
     );
 }
 
+/// Scheduler determinism: for worker counts {1, 2, 7, 16}, both pool
+/// schedulers, and repeated runs, sharded counters are bit-identical to
+/// sequential replay — the property the work-stealing scheduler must
+/// uphold to be a pure perf change. The shard count is pinned above the
+/// widest worker count so every run replays the identical partition.
+#[test]
+fn sharded_counters_are_bit_identical_across_worker_counts_and_schedulers() {
+    use deepnvm::util::pool::{with_scheduler, with_threads, Scheduler};
+    let gpu = toy_gpu(256, 16);
+    let mut rng = Rng::new(0xD1CE);
+    let trace = random_trace(&mut rng, 4000, 4096);
+    for cache in [
+        CacheConfig::default(),
+        CacheConfig {
+            replacement: Replacement::Srrip,
+            write: WritePolicy::WriteBypass,
+            l1: false,
+        },
+        CacheConfig { l1: true, ..CacheConfig::default() },
+    ] {
+        let seq = simulate_config(trace.iter().copied(), &gpu, cache, 0);
+        for workers in [1usize, 2, 7, 16] {
+            for sched in [Scheduler::Stealing, Scheduler::Chunked] {
+                for run in 0..2 {
+                    let par = with_threads(workers, || {
+                        with_scheduler(sched, || {
+                            simulate_sharded(trace.iter().copied(), &gpu, cache, 0, 64)
+                        })
+                    });
+                    assert_eq!(
+                        seq,
+                        par,
+                        "{} with {workers} workers, {sched:?}, run {run}",
+                        cache.describe()
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Policy-level invariants on random streams: write-through never dirties,
 /// bypass and write-through never write-allocate, every policy conserves
 /// accesses, and the L1 filter only ever removes read traffic.

@@ -114,6 +114,34 @@ fn dram_model_sharded_replay_is_counter_identical() {
     );
 }
 
+/// Scheduler determinism with the banked model armed: DRAM counters —
+/// the most merge-order-sensitive state in the pipeline — stay
+/// bit-identical to sequential replay for worker counts {1, 2, 7, 16},
+/// both pool schedulers, and repeated runs over a fixed partition.
+#[test]
+fn dram_counters_are_bit_identical_across_worker_counts_and_schedulers() {
+    use deepnvm::util::pool::{with_scheduler, with_threads, Scheduler};
+    let gpu = toy_gpu(256, 16);
+    let backend = MemBackendConfig::Dram(DramConfig::default());
+    let cache = CacheConfig::default();
+    let mut rng = Rng::new(0xBEEF);
+    let trace = random_trace(&mut rng, 4000, 4096);
+    let seq = simulate_backend(trace.iter().copied(), &gpu, cache, 0, 1, &backend);
+    assert!(seq.dram.accesses() > 0, "the banked model must observe traffic");
+    for workers in [1usize, 2, 7, 16] {
+        for sched in [Scheduler::Stealing, Scheduler::Chunked] {
+            for run in 0..2 {
+                let par = with_threads(workers, || {
+                    with_scheduler(sched, || {
+                        simulate_backend(trace.iter().copied(), &gpu, cache, 0, 64, &backend)
+                    })
+                });
+                assert_eq!(seq, par, "{workers} workers, {sched:?}, run {run}");
+            }
+        }
+    }
+}
+
 /// The explicit fixed-latency backend is a no-op on arbitrary streams:
 /// every counter (including the all-zero DRAM block) matches the plain
 /// simulator under every policy combination.

@@ -342,6 +342,57 @@ fn net_descriptor_round_trip_property() {
     );
 }
 
+/// Trace-compression round-trip property: for arbitrary random nets (the
+/// same generator the `.net` round-trip uses), compressing the generated
+/// access trace and decoding it back reproduces the exact `Access`
+/// stream — including block-aligned mid-trace decode — and never costs
+/// more bytes than the raw struct stream.
+#[test]
+fn compressed_trace_round_trips_random_net_traces() {
+    use deepnvm::gpusim::{net_trace, Access, CompressedTrace, BLOCK_ACCESSES};
+    forall_explain(
+        0xC0DEC,
+        20,
+        |rng: &mut Rng| {
+            let net = random_net(rng);
+            let batch = *rng.pick(&[1u64, 2, 4]);
+            (net, batch)
+        },
+        |(net, batch)| {
+            let accesses: Vec<Access> = net_trace(net, *batch).collect();
+            let ct = CompressedTrace::from_accesses(accesses.iter().copied());
+            if ct.len() != accesses.len() {
+                return Err(format!("length drifted: {} vs {}", ct.len(), accesses.len()));
+            }
+            let back: Vec<Access> = ct.iter().collect();
+            if back != accesses {
+                let at = back
+                    .iter()
+                    .zip(&accesses)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(accesses.len());
+                return Err(format!("decode drifted at access {at}"));
+            }
+            if !accesses.is_empty() && ct.byte_len() >= accesses.len() * 16 {
+                return Err(format!(
+                    "compression expanded: {} B for {} accesses",
+                    ct.byte_len(),
+                    accesses.len()
+                ));
+            }
+            // A mid-trace block decodes independently of its prefix.
+            if ct.num_blocks() > 1 {
+                let b = ct.num_blocks() - 1;
+                let tail: Vec<Access> = ct.iter_blocks(b).collect();
+                if tail != accesses[b * BLOCK_ACCESSES..] {
+                    return Err(format!("block {b} decode drifted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The five Table 3 CNN descriptors keep their regression identity
 /// through a serialize → parse cycle (weights/MACs/layer counts).
 #[test]

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""CI perf gate: diff bench JSON records against a committed baseline.
+
+Usage: bench_compare.py <baseline.json> [bench-dir]
+
+The baseline maps bench-record filenames (as written by
+`util::bench::BenchHarness::write_json`, e.g. `BENCH_sim.json`) to the
+keys being gated. Each gated key carries bounds on the *recorded value*:
+
+    "min": v        hard lower bound (value < v fails)
+    "max": v        hard upper bound (value > v fails)
+    "ref" + "tol" + "dir":
+                    tolerance band around an expected value: with
+                    dir="higher" (higher is better) the gate fails when
+                    value < ref*(1-tol); with dir="lower" it fails when
+                    value > ref*(1+tol).
+
+Only dimensionless or machine-portable quantities belong here (speedup
+ratios, overhead fractions, bytes/access) — raw seconds and accesses/sec
+vary with the runner and would make the gate flaky. Keys starting with
+an underscore are comments and skipped.
+
+Exit status is non-zero iff any gated key is missing, its bench file is
+unreadable, or any bound is violated; every violation is listed, none
+are silently tolerated.
+"""
+
+import json
+import os
+import sys
+
+
+def check(name, value, spec, failures):
+    ok = True
+    if "min" in spec and value < spec["min"]:
+        failures.append(f"{name}: {value:.6g} < min {spec['min']:.6g}")
+        ok = False
+    if "max" in spec and value > spec["max"]:
+        failures.append(f"{name}: {value:.6g} > max {spec['max']:.6g}")
+        ok = False
+    if "ref" in spec:
+        ref, tol, dir_ = spec["ref"], spec["tol"], spec["dir"]
+        if dir_ == "higher" and value < ref * (1.0 - tol):
+            failures.append(
+                f"{name}: {value:.6g} regressed below ref {ref:.6g} -{tol:.0%}"
+            )
+            ok = False
+        elif dir_ == "lower" and value > ref * (1.0 + tol):
+            failures.append(
+                f"{name}: {value:.6g} regressed above ref {ref:.6g} +{tol:.0%}"
+            )
+            ok = False
+    return ok
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    baseline_path = sys.argv[1]
+    bench_dir = sys.argv[2] if len(sys.argv) > 2 else "."
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    failures = []
+    checked = 0
+    for fname, keys in baseline.items():
+        if fname.startswith("_"):
+            continue
+        path = os.path.join(bench_dir, fname)
+        try:
+            with open(path) as f:
+                record = json.load(f)
+        except OSError as e:
+            failures.append(f"{fname}: unreadable bench record ({e})")
+            continue
+        for key, spec in keys.items():
+            if key.startswith("_"):
+                continue
+            if key not in record:
+                failures.append(f"{fname}: gated key missing: {key!r}")
+                continue
+            value = record[key]
+            ok = check(f"{fname} :: {key}", value, spec, failures)
+            checked += 1
+            bounds = ", ".join(
+                f"{k}={spec[k]:.6g}" if isinstance(spec[k], float) else f"{k}={spec[k]}"
+                for k in ("min", "max", "ref", "tol", "dir")
+                if k in spec
+            )
+            print(f"  {'ok  ' if ok else 'FAIL'} {key} = {value:.6g}  [{bounds}]")
+
+    if failures:
+        print(f"\nperf gate FAILED ({len(failures)} violation(s)):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nperf gate passed: {checked} gated key(s) within bounds")
+
+
+if __name__ == "__main__":
+    main()

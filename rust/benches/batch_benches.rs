@@ -1,0 +1,131 @@
+//! Batched-replay benchmarks: decode-once multi-configuration replay
+//! ([`simulate_group`]) vs the per-candidate path it replaces (custom
+//! harness; §Perf record).
+//!
+//! The workload is the explore fan-out in miniature: a 16-candidate grid
+//! (4 capacities × 2 replacement policies × 2 write policies) over one
+//! network trace. The per-candidate baseline runs `simulate_full` per
+//! grid point — each call regenerates, compiles, partitions, and decodes
+//! the trace, exactly like sixteen independent explore evaluations before
+//! batching. The grouped side runs one `simulate_group` call: the trace
+//! is generated and partitioned once and each shard block is decoded once
+//! per config chunk, so the 16 candidates share the decode
+//! (`16 / ceil(16 / GROUP_CHUNK)` = the amortization factor).
+//!
+//! CI asserts the grouped path stays ≥2x faster than per-candidate on
+//! multi-core runners and that the amortization factor holds; both sides
+//! are cross-checked for bit-identical counters before any throughput is
+//! recorded.
+//!
+//! Results print to stdout and land in `BENCH_batch.json` (override the
+//! path with `DEEPNVM_BENCH_BATCH_JSON`), next to `BENCH_sim.json`.
+
+use std::hint::black_box;
+
+use deepnvm::gpusim::{
+    net_trace, simulate_full, simulate_group, CacheConfig, GpuConfig, Replacement, ReplayConfig,
+    WritePolicy, GROUP_CHUNK,
+};
+use deepnvm::util::bench::BenchHarness;
+use deepnvm::util::pool::{self, num_threads};
+use deepnvm::util::units::MB;
+use deepnvm::workloads::nets;
+
+/// The 16-candidate grid: capacities chosen so the shared shard-key
+/// modulus (gcd of the per-capacity set counts) stays 512 — every member
+/// replays from the same partition.
+fn grid() -> Vec<ReplayConfig> {
+    let mut out = Vec::new();
+    for &cap_mb in &[1u64, 2, 3, 6] {
+        for replacement in [Replacement::Lru, Replacement::TreePlru] {
+            for write in [WritePolicy::WriteBack, WritePolicy::WriteBypass] {
+                let gpu = GpuConfig::gtx_1080_ti().with_l2(cap_mb * MB);
+                out.push(ReplayConfig::new(gpu, CacheConfig { replacement, write, l1: false }));
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("== batched-replay benchmarks ==");
+    let mut h = BenchHarness::new();
+
+    let net = nets::alexnet();
+    let accesses = net_trace(&net, 1).count() as f64;
+    let configs = grid();
+    let k = configs.len() as f64;
+    let threads = num_threads();
+    let shards = pool::recommended_shards();
+    let chunks = configs.len().div_ceil(GROUP_CHUNK) as f64;
+    println!(
+        "alexnet b1 grid: {} candidates over a {:.0}-access trace, {threads} worker threads, \
+         {shards} shards, {chunks:.0} config chunks",
+        configs.len(),
+        accesses
+    );
+
+    // Exactness first: the bench must never record a speedup for a
+    // grouped replay that drifted from the per-candidate counters.
+    let grouped_sims = simulate_group(net_trace(&net, 1), &configs, 0, shards);
+    for (i, (rc, g)) in configs.iter().zip(&grouped_sims).enumerate() {
+        let solo = simulate_full(
+            net_trace(&net, 1),
+            &rc.config,
+            rc.cache,
+            0,
+            shards,
+            rc.faults,
+            &rc.backend,
+        );
+        assert_eq!(*g, solo, "grid member {i} must match per-candidate replay exactly");
+    }
+
+    // Per-candidate baseline: the pre-batching explore path — every
+    // candidate regenerates, compiles, partitions, and decodes the trace.
+    let per = h.bench("batch: per-candidate replay (16-candidate grid)", 2, || {
+        for rc in &configs {
+            black_box(simulate_full(
+                net_trace(&net, 1),
+                &rc.config,
+                rc.cache,
+                0,
+                shards,
+                rc.faults,
+                &rc.backend,
+            ));
+        }
+    });
+    h.record("batch: per-candidate candidates/sec", k / per.max(1e-12));
+
+    // Grouped: one trace generation, one partition, decode shared across
+    // each chunk of GROUP_CHUNK configs.
+    let grouped = h.bench("batch: grouped replay (16-candidate grid)", 2, || {
+        black_box(simulate_group(net_trace(&net, 1), &configs, 0, shards));
+    });
+    h.record("batch: grouped candidates/sec", k / grouped.max(1e-12));
+
+    let speedup = per / grouped.max(1e-12);
+    h.record("batch: grouped speedup vs per-candidate", speedup);
+    let amortization = k / chunks;
+    h.record("batch: decode amortization factor", amortization);
+    println!(
+        "  -> grouped speedup: {speedup:.2}x on {threads} threads \
+         ({:.1} vs {:.1} candidates/sec), {amortization:.1}x decode amortization",
+        k / grouped.max(1e-12),
+        k / per.max(1e-12)
+    );
+
+    // The ≥2x acceptance bound needs real parallelism headroom;
+    // single-core hosts time both paths inline and skip it.
+    let cores = std::thread::available_parallelism().map_or(1, |p| p.get());
+    if threads >= 2 && cores >= 2 {
+        assert!(
+            speedup >= 2.0,
+            "grouped replay must beat per-candidate by ≥2x on the 16-candidate grid \
+             (got {speedup:.2}x on {threads} workers)"
+        );
+    }
+
+    h.write_json("DEEPNVM_BENCH_BATCH_JSON", "BENCH_batch.json");
+}

@@ -33,7 +33,7 @@ pub mod descriptor;
 pub mod query;
 pub mod spec;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,7 +42,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::analysis::model;
 use crate::device::bitcell::BitcellParams;
 use crate::device::characterize::{characterize_spec, CharacterizationReport};
-use crate::gpusim::{net_trace, simulate_backend, simulate_with_faults, GpuConfig, SimResult};
+use crate::gpusim::{
+    group_modulus, net_trace, simulate_backend, simulate_with_faults, GpuConfig, ReplayConfig,
+    ShardedTrace, SimResult,
+};
 use crate::nvsim::geometry::enumerate;
 use crate::nvsim::optimizer::{explore_cell, TunedCache};
 use crate::reliability::{self, FaultConfig, RelSpec};
@@ -206,6 +209,15 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
             .clone();
         (out, computed)
     }
+
+    /// Whether `key` already holds a finished value (or cached error) —
+    /// the batch planner's "was this computed by an earlier round?" test.
+    /// Never blocks on an in-flight computation (one still counts as
+    /// absent, which at worst schedules a redundant replay whose result
+    /// the `OnceLock` then discards).
+    fn peek(&self, key: &K) -> bool {
+        self.map.lock().unwrap().get(key).is_some_and(|slot| slot.get().is_some())
+    }
 }
 
 struct Core {
@@ -227,8 +239,32 @@ struct Core {
     /// registry rejects re-registration of an id with different
     /// parameters.
     faults: Memo<(String, Workload, u64, u64, CacheConfig, u64), SimResult>,
+    /// Partitioned traces for the batch (multi-configuration) replay
+    /// path, keyed by net id × batch × L2 line × shard-key modulus ×
+    /// shard count — everything the partition depends on. `Arc`'d so
+    /// grouped replays borrow the compressed shards without cloning them;
+    /// repeated explore rounds over one net hit this memo instead of
+    /// re-compiling, re-compressing, and re-partitioning the trace.
+    traces: Memo<(String, u64, u64, u64, usize), Arc<ShardedTrace>>,
     /// Engine-wide counters (all forks aggregated).
     totals: StageCounters,
+}
+
+/// Memo key of the profile stage (see [`Core::profiles`]).
+type ProfileKey = (Workload, u64, u64, CacheConfig, MemBackendConfig, bool);
+/// Memo key of the fault-campaign stage (see [`Core::faults`]).
+type FaultKey = (String, Workload, u64, u64, CacheConfig, u64);
+
+/// One planned member of a batch replay group: the configuration to drive
+/// through the shared trace plus the memo slot its counters land in.
+struct SimSlot {
+    rc: ReplayConfig,
+    kind: SlotKind,
+}
+
+enum SlotKind {
+    Profile { key: ProfileKey, label: String },
+    Fault { key: FaultKey },
 }
 
 /// The query-engine facade. Cheap to clone via [`Engine::fork`]: forks
@@ -259,6 +295,7 @@ impl Engine {
                 tuned: Memo::default(),
                 profiles: Memo::default(),
                 faults: Memo::default(),
+                traces: Memo::default(),
                 totals: StageCounters::default(),
             }),
             stats: Arc::new(StageCounters::default()),
@@ -802,8 +839,167 @@ impl Engine {
 
     /// Batch entrypoint: answer many queries through the thread pool.
     /// Order is preserved; each query gets its own `Result`.
+    ///
+    /// Simulation-bound queries (trace-profiled and/or fault-campaign
+    /// stages) are first grouped by trace identity and run through the
+    /// multi-configuration single-pass replay
+    /// ([`crate::gpusim::simulate_group`]): each (net × batch) group's
+    /// trace is compiled, compressed, and partitioned once — memoized in
+    /// [`Core::traces`], so repeated explore rounds skip even that — and
+    /// every decoded block probes all member hierarchies, seeding the
+    /// profile/fault memos with counters bit-identical to standalone
+    /// replays. The per-query evaluations then hit the warm caches.
     pub fn evaluate_many(&self, queries: &[Query]) -> Vec<crate::Result<Evaluation>> {
+        self.prefetch_groups(queries);
         par_map(queries, |q| self.evaluate(q))
+    }
+
+    /// Plan and run the batched (decode-once, probe-many) replays behind
+    /// a query set: group simulation-bound queries by trace identity
+    /// (net × batch), dedupe their memo keys, and hand each group of two
+    /// or more pending replays to [`Engine::run_group`]. Planning is
+    /// conservative — a query whose resolution would error (unknown
+    /// technology or net, unfittable iso-area, ragged capacity, invalid
+    /// DRAM card) is skipped silently so [`Engine::evaluate`] reproduces
+    /// the exact error on the normal path.
+    fn prefetch_groups(&self, queries: &[Query]) {
+        if crate::telemetry::enabled() {
+            for name in [
+                "sim.group.replays",
+                "sim.group.configs",
+                "sim.group.trace_memo.hits",
+                "sim.group.trace_memo.misses",
+            ] {
+                crate::telemetry::counter_add(name, 0);
+            }
+        }
+        let mut groups: HashMap<(String, u64), Vec<SimSlot>> = HashMap::new();
+        let mut seen_profiles: HashSet<ProfileKey> = HashSet::new();
+        let mut seen_faults: HashSet<FaultKey> = HashSet::new();
+        for q in queries {
+            let Some(workload) = &q.workload else { continue };
+            let Workload::Net { id: net_id, phase: Phase::Inference } = workload else {
+                continue;
+            };
+            let Ok(spec) = self.tech_or_err(&q.tech) else { continue };
+            let rel_spec = if reliability::faults_enabled() { spec.rel } else { None };
+            let wants_profile = q.simulates_profile();
+            if !wants_profile && rel_spec.is_none() {
+                continue;
+            }
+            let Some(net) = self.net(net_id) else { continue };
+            let capacity = match q.iso {
+                IsoMode::Capacity => q.capacity_bytes,
+                IsoMode::Area => match self.fit_iso_area(&q.tech, q.capacity_bytes) {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                },
+            };
+            let gpu = GpuConfig::gtx_1080_ti().with_l2(capacity);
+            if capacity % (gpu.l2_line * gpu.l2_assoc) != 0 {
+                continue;
+            }
+            let batch = q.batch.unwrap_or_else(|| profiler::default_batch(workload));
+            let group = groups.entry((net_id.clone(), batch)).or_default();
+            if wants_profile {
+                if q.dram.dram().is_some_and(|card| card.validate().is_err()) {
+                    continue; // the profile error aborts the whole query
+                }
+                let key = (workload.clone(), batch, capacity, q.cache, q.dram, true);
+                if !self.core.profiles.peek(&key) && seen_profiles.insert(key.clone()) {
+                    let label = profiler::net_label(&net.name, Phase::Inference);
+                    group.push(SimSlot {
+                        rc: ReplayConfig {
+                            config: gpu.clone(),
+                            cache: q.cache,
+                            faults: None,
+                            backend: q.dram,
+                        },
+                        kind: SlotKind::Profile { key, label },
+                    });
+                }
+            }
+            if let Some(rel) = rel_spec {
+                let seed = global_seed();
+                let key = (spec.id.clone(), workload.clone(), batch, capacity, q.cache, seed);
+                if !self.core.faults.peek(&key) && seen_faults.insert(key.clone()) {
+                    group.push(SimSlot {
+                        rc: ReplayConfig {
+                            config: gpu.clone(),
+                            cache: q.cache,
+                            faults: Some(FaultConfig { rel, seed }),
+                            backend: MemBackendConfig::FixedLatency,
+                        },
+                        kind: SlotKind::Fault { key },
+                    });
+                }
+            }
+        }
+        for ((net_id, batch), slots) in groups {
+            // A singleton gains nothing over the per-query path (one
+            // decode either way); leave it to `evaluate`.
+            if slots.len() < 2 {
+                continue;
+            }
+            self.run_group(&net_id, batch, slots);
+        }
+    }
+
+    /// Run one batch group: fetch (or compute and memoize) the shared
+    /// partitioned trace and drive every slot's configuration through it
+    /// in a single decode-once pass, then seed the stage memos with the
+    /// per-member results.
+    fn run_group(&self, net_id: &str, batch: u64, slots: Vec<SimSlot>) {
+        let Some(net) = self.net(net_id) else { return };
+        let configs: Vec<ReplayConfig> = slots.iter().map(|s| s.rc.clone()).collect();
+        let modulus = group_modulus(&configs);
+        let max_shards = recommended_shards();
+        let shards = modulus.min(max_shards.max(1) as u64).max(1) as usize;
+        let line = configs[0].config.l2_line;
+        let _span = crate::span!(
+            "engine.group",
+            net = net_id,
+            batch = batch,
+            configs = configs.len(),
+            shards = shards,
+        );
+        let trace_key = (net_id.to_string(), batch, line, modulus, shards);
+        let (trace, computed) = self.core.traces.get_or_compute(trace_key, || {
+            Ok(Arc::new(ShardedTrace::partition_group(
+                net_trace(&net, batch),
+                &configs,
+                0,
+                max_shards,
+            )))
+        });
+        if crate::telemetry::enabled() {
+            let name = if computed {
+                "sim.group.trace_memo.misses"
+            } else {
+                "sim.group.trace_memo.hits"
+            };
+            crate::telemetry::counter_add(name, 1);
+        }
+        let Ok(trace) = trace else { return };
+        let sims = trace.replay_group(&configs);
+        for (slot, sim) in slots.into_iter().zip(sims) {
+            match slot.kind {
+                SlotKind::Profile { key, label } => {
+                    let value = ProfiledWorkload {
+                        workload: key.0.clone(),
+                        label,
+                        stats: model::stats_from_sim(&sim, line),
+                        dram: sim.dram,
+                    };
+                    let (_, computed) = self.core.profiles.get_or_compute(key, || Ok(value));
+                    self.bump(Stage::Profile, computed);
+                }
+                SlotKind::Fault { key } => {
+                    let (_, computed) = self.core.faults.get_or_compute(key, || Ok(sim));
+                    self.bump(Stage::Faults, computed);
+                }
+            }
+        }
     }
 
     // --- accounting ---
@@ -1142,5 +1338,58 @@ mod tests {
         assert_eq!(out[0].as_ref().unwrap().tech, "sram");
         assert!(out[1].is_err());
         assert_eq!(out[2].as_ref().unwrap().tech, "stt");
+    }
+
+    #[test]
+    fn evaluate_many_groups_shared_trace_simulations() {
+        use crate::gpusim::WritePolicy;
+        use crate::telemetry;
+        // The assertions read global telemetry counters; serialize with
+        // the other telemetry-touching tests.
+        let _guard = telemetry::TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        telemetry::reset();
+        telemetry::set_enabled(true);
+        let e = Engine::new();
+        let w = Workload::net("squeezenet", Phase::Inference);
+        let base = Query::tune("stt", 2 * MB).with_workload(w).with_batch(1);
+        let queries = vec![
+            base.clone().simulate_profile(),
+            base.clone().with_cache(CacheConfig {
+                write: WritePolicy::WriteThrough,
+                ..CacheConfig::default()
+            }),
+            base.with_cache(CacheConfig {
+                write: WritePolicy::WriteBypass,
+                ..CacheConfig::default()
+            }),
+        ];
+        let grouped = e.evaluate_many(&queries);
+        // One shared partition + one grouped replay served all three
+        // simulation-bound candidates...
+        assert_eq!(telemetry::counter_value("sim.group.replays"), Some(1));
+        assert_eq!(telemetry::counter_value("sim.group.configs"), Some(3));
+        assert_eq!(telemetry::counter_value("sim.group.trace_memo.misses"), Some(1));
+        // ...seeding the profile memo (3 prefetch computes + 3 evaluate
+        // hits).
+        assert_eq!(e.stats().profile, HitMiss { hits: 3, misses: 3 });
+        // Grouped counters are bit-identical to the per-query path.
+        let solo_engine = Engine::new();
+        for (q, g) in queries.iter().zip(&grouped) {
+            let solo = solo_engine.evaluate(q).unwrap();
+            let (gw, sw) = (
+                g.as_ref().unwrap().workload.as_ref().unwrap(),
+                solo.workload.as_ref().unwrap(),
+            );
+            assert_eq!(gw.stats, sw.stats, "grouped replay matches simulate_full");
+        }
+        // A second round finds every key warm: no new replay, no new
+        // trace compile.
+        let again = e.evaluate_many(&queries);
+        assert_eq!(telemetry::counter_value("sim.group.replays"), Some(1));
+        assert_eq!(telemetry::counter_value("sim.group.trace_memo.misses"), Some(1));
+        assert_eq!(e.stats().profile, HitMiss { hits: 6, misses: 3 });
+        assert!(again.iter().all(Result::is_ok));
+        telemetry::set_enabled(false);
+        telemetry::reset();
     }
 }

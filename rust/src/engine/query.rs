@@ -122,6 +122,19 @@ impl Query {
         self.dram = dram;
         self
     }
+
+    /// Whether the profile stage will run the trace simulator for this
+    /// query (rather than the analytical model): a forced
+    /// [`ProfileModel::Simulate`], a non-default cache configuration, or
+    /// a non-fixed memory backend. This mirrors the condition
+    /// `Engine::profile_backend` resolves internally, exposed so the
+    /// batch planner (`Engine::evaluate_many`) can group
+    /// simulation-bound queries without re-deriving it.
+    pub fn simulates_profile(&self) -> bool {
+        self.profile_model == ProfileModel::Simulate
+            || !self.cache.is_default()
+            || !self.dram.is_fixed()
+    }
 }
 
 /// The workload half of an evaluation: the profiled memory statistics and
@@ -212,5 +225,18 @@ mod tests {
         let card = DramConfig::default();
         let q = Query::tune("stt", MB).with_dram(MemBackendConfig::Dram(card));
         assert_eq!(q.dram.dram(), Some(&card));
+    }
+
+    #[test]
+    fn simulates_profile_mirrors_the_profile_stage_routing() {
+        use crate::membackend::DramConfig;
+        let base = Query::tune("stt", 2 * MB);
+        assert!(!base.simulates_profile(), "default query profiles analytically");
+        assert!(base.clone().simulate_profile().simulates_profile());
+        let bypass = CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() };
+        assert!(base.clone().with_cache(bypass).simulates_profile());
+        assert!(base
+            .with_dram(MemBackendConfig::Dram(DramConfig::default()))
+            .simulates_profile());
     }
 }

@@ -18,7 +18,6 @@ use super::{Output, Params};
 use crate::engine::{Engine, Query};
 use crate::membackend::{DramConfig, DramStats, MemBackendConfig};
 use crate::util::csv::Csv;
-use crate::util::pool::par_map;
 use crate::util::table::Table;
 use crate::workloads::memstats::Phase;
 use crate::workloads::nets;
@@ -90,26 +89,43 @@ pub fn figmem(engine: &Engine, params: &Params) -> Output {
             }
         }
     }
-    let rows: Vec<MemRow> = par_map(&cells, |&(tech, n_i, cap_mb)| {
-        let (id, name, batch) = &suite[n_i];
-        let q = Query::tune(tech, cap_mb * MB)
-            .with_workload(Workload::net(id.clone(), Phase::Inference))
-            .with_batch(*batch)
-            .with_dram(MemBackendConfig::Dram(card));
-        let ev = engine.evaluate(&q).expect("figMem queries evaluate on builtin techs");
-        let w = ev.workload.expect("query carried a workload");
-        MemRow {
-            tech,
-            net: name.clone(),
-            batch: *batch,
-            cap_mb,
-            dram: w.dram,
-            dram_energy: w.rollup.dram_energy,
-            dram_time: w.rollup.dram_time,
-            edp_cache: w.rollup.edp_cache(),
-            edp_total: w.rollup.edp_with_dram(),
-        }
-    });
+    let queries: Vec<Query> = cells
+        .iter()
+        .map(|&(tech, n_i, cap_mb)| {
+            let (id, _, batch) = &suite[n_i];
+            Query::tune(tech, cap_mb * MB)
+                .with_workload(Workload::net(id.clone(), Phase::Inference))
+                .with_batch(*batch)
+                .with_dram(MemBackendConfig::Dram(card))
+        })
+        .collect();
+    // One batch call: `evaluate_many` groups each (net × batch)'s
+    // distinct capacities into a decode-once multi-configuration replay,
+    // and the technology-independent profile memo shares every replay
+    // across the three techs.
+    let rows: Vec<MemRow> = engine
+        .evaluate_many(&queries)
+        .into_iter()
+        .zip(&cells)
+        .map(|(res, &(tech, n_i, cap_mb))| {
+            let (_, name, batch) = &suite[n_i];
+            let w = res
+                .expect("figMem queries evaluate on builtin techs")
+                .workload
+                .expect("query carried a workload");
+            MemRow {
+                tech,
+                net: name.clone(),
+                batch: *batch,
+                cap_mb,
+                dram: w.dram,
+                dram_energy: w.rollup.dram_energy,
+                dram_time: w.rollup.dram_time,
+                edp_cache: w.rollup.edp_cache(),
+                edp_total: w.rollup.edp_with_dram(),
+            }
+        })
+        .collect();
 
     let mut t = Table::new(
         format!("figMem: end-to-end EDP behind a {} main memory", card_label(&card)),

@@ -5,19 +5,24 @@
 //! write transactions are the expensive ones (STT write energy is ~5-10×
 //! its read energy at the tuned 3MB designs), so *which writes reach the
 //! array* is a first-order knob the paper's fixed write-back simulator
-//! could not turn. For every Fig 7 network the trace is replayed through
-//! the set-sharded simulator once per policy; the resulting transaction
-//! counters roll up through the §4 model against each technology's
-//! EDAP-tuned 3MB design, and the table reports EDP normalized — per
-//! technology — to that technology's write-back baseline. `--replacement`
-//! / `--l1` / `--warmup-frac` set the shared base configuration;
-//! `--networks` narrows the suite.
+//! could not turn. For every Fig 7 network all three policies ride one
+//! multi-configuration replay ([`simulate_group`]): the trace is
+//! compiled, partitioned, and decoded once, and each block probes the
+//! three hierarchies — bit-identical to three standalone sharded replays
+//! at a third of the decode work. The resulting transaction counters roll
+//! up through the §4 model against each technology's EDAP-tuned 3MB
+//! design, and the table reports EDP normalized — per technology — to
+//! that technology's write-back baseline. `--replacement` / `--l1` /
+//! `--warmup-frac` set the shared base configuration; `--networks`
+//! narrows the suite.
 
 use super::figures_scale::{fig7_selected_suite, fig7_suite};
 use super::{Output, Params};
 use crate::analysis::model;
 use crate::engine::Engine;
-use crate::gpusim::{net_trace, simulate_sharded, Access, CacheConfig, GpuConfig, WritePolicy};
+use crate::gpusim::{
+    net_trace, simulate_group, Access, CacheConfig, GpuConfig, ReplayConfig, WritePolicy,
+};
 use crate::nvsim::cache::CachePpa;
 use crate::util::csv::Csv;
 use crate::util::pool::{par_map, split_threads};
@@ -37,8 +42,10 @@ struct WpRow {
     stats: MemStats,
 }
 
-/// Replay every suite trace under every write policy (one materialized
-/// trace per network, one set-sharded replay per policy).
+/// Replay every suite trace under every write policy: one materialized
+/// trace per network, one grouped decode-once replay driving all three
+/// policy hierarchies (bit-identical per member to a standalone
+/// set-sharded replay).
 fn simulate_suite(
     suite: &[(NetIr, u64)],
     base: CacheConfig,
@@ -54,23 +61,19 @@ fn simulate_suite(
             None => 0,
             Some(f) => (f * trace.len() as f64) as u64,
         };
+        let configs: Vec<ReplayConfig> = WritePolicy::ALL
+            .iter()
+            .map(|&policy| ReplayConfig::new(gpu.clone(), CacheConfig { write: policy, ..base }))
+            .collect();
+        let sims = simulate_group(trace.into_iter(), &configs, warmup, shards);
         WritePolicy::ALL
             .iter()
-            .map(|&policy| {
-                let cache = CacheConfig { write: policy, ..base };
-                let sim = simulate_sharded(
-                    trace.iter().copied(),
-                    &gpu,
-                    cache,
-                    warmup,
-                    shards,
-                );
-                WpRow {
-                    net: net.name.clone(),
-                    batch: *batch,
-                    policy,
-                    stats: model::stats_from_sim(&sim, gpu.l2_line),
-                }
+            .zip(sims)
+            .map(|(&policy, sim)| WpRow {
+                net: net.name.clone(),
+                batch: *batch,
+                policy,
+                stats: model::stats_from_sim(&sim, gpu.l2_line),
             })
             .collect()
     });

@@ -4,10 +4,14 @@
 //!
 //! The paper's EDP/area comparison treats NVM arrays as perfect; this
 //! campaign quantifies the reliability cost of the same design points.
-//! Each cell (technology card × L2 capacity × write policy) replays the
-//! suite trace through the fault-injecting simulator `--trials` times
-//! under decorrelated seeds and aggregates: fault counters sum across
-//! trials, UBER and lifetime report the per-trial mean. The reliability
+//! Every (technology card × L2 capacity × write policy × trial)
+//! hierarchy rides one multi-configuration replay per network
+//! ([`simulate_group`]): the trace is compiled, partitioned, and decoded
+//! once for the whole campaign, and per-set RNG streams keep each
+//! member's fault counters bit-identical to its standalone seeded
+//! replay. Per cell, the `--trials` decorrelated-seed members aggregate:
+//! fault counters sum across trials, UBER and lifetime report the
+//! per-trial mean. The reliability
 //! cards are the representative [`RelSpec`] defaults — the *builtin*
 //! `stt`/`sot` technologies stay `[rel]`-free, so every other experiment
 //! remains bit-identical to the fault-free build. Write policy matters
@@ -19,11 +23,14 @@ use super::figures_scale::fig7_selected_suite;
 use super::{Output, Params};
 use crate::analysis::model;
 use crate::engine::Engine;
-use crate::gpusim::{net_trace, simulate_with_faults, Access, CacheConfig, GpuConfig, WritePolicy};
+use crate::gpusim::{
+    net_trace, simulate_group, Access, CacheConfig, GpuConfig, ReplayConfig, WritePolicy,
+};
+use crate::membackend::MemBackendConfig;
 use crate::nvsim::cache::CachePpa;
 use crate::reliability::{campaign_seed, FaultConfig, RelSpec};
 use crate::util::csv::Csv;
-use crate::util::pool::{par_map, split_threads};
+use crate::util::pool::recommended_shards;
 use crate::util::rng::global_seed;
 use crate::util::table::{fnum, Table};
 use crate::workloads::ir::NetIr;
@@ -74,10 +81,11 @@ struct RelRow {
     lifetime_years: f64,
 }
 
-/// Run the campaign for one network: `trials` seeded fault replays per
-/// (tech, capacity, policy) cell, cells fanned across the pool with the
-/// shard budget split so cell-parallelism × shard-parallelism stays ≈ the
-/// core count.
+/// Run the campaign for one network: every (tech, capacity, policy,
+/// trial) hierarchy flattened into one decode-once grouped replay, then
+/// aggregated per cell. Per-set RNG streams keep each member's fault
+/// counters identical to a standalone seeded replay, so the shared
+/// partition changes wall-time only.
 #[allow(clippy::too_many_arguments)]
 fn campaign_net(
     net: &NetIr,
@@ -102,59 +110,69 @@ fn campaign_net(
             }
         }
     }
-    let shards = split_threads(cells.len());
-    par_map(&cells, |&(t_i, c_i, policy)| {
-        let tech = TECHS[t_i];
-        let rel = rel_card(tech);
-        let cap_mb = caps[c_i];
-        let gpu = GpuConfig::gtx_1080_ti().with_l2(cap_mb * MB);
-        let cache = CacheConfig { write: policy, ..base };
-        let line_bits = gpu.l2_line * 8;
-        let mut row = RelRow {
-            tech,
-            net: net.name.clone(),
-            batch,
-            cap_mb,
-            policy,
-            trials,
-            corrected: 0,
-            detected: 0,
-            silent: 0,
-            retired_ways: 0,
-            max_line_writes: 0,
-            uber: 0.0,
-            lifetime_years: 0.0,
-        };
-        for t in 0..trials {
-            let _span = crate::span!(
-                "figrel.trial",
-                tech = tech,
-                cap_mb = cap_mb,
-                policy = policy.name(),
-                trial = t,
-            );
-            let faults = FaultConfig { rel, seed: campaign_seed(seed, t) };
-            let sim = simulate_with_faults(
-                trace.iter().copied(),
-                &gpu,
+    let configs: Vec<ReplayConfig> = cells
+        .iter()
+        .flat_map(|&(t_i, c_i, policy)| {
+            let gpu = GpuConfig::gtx_1080_ti().with_l2(caps[c_i] * MB);
+            let cache = CacheConfig { write: policy, ..base };
+            (0..trials).map(move |t| ReplayConfig {
+                config: gpu.clone(),
                 cache,
-                warmup,
-                shards,
-                Some(faults),
-            );
-            let stats = model::stats_from_sim(&sim, gpu.l2_line);
-            let time = model::evaluate(&ppas[t_i][c_i], &stats).total_time();
-            let ev = model::rel_from_sim(&rel, &sim, line_bits, time);
-            row.corrected += ev.corrected;
-            row.detected += ev.detected;
-            row.silent += ev.silent;
-            row.retired_ways += ev.retired_ways;
-            row.max_line_writes = row.max_line_writes.max(sim.max_line_writes);
-            row.uber += ev.uber / trials as f64;
-            row.lifetime_years += ev.lifetime_years / trials as f64;
-        }
-        row
-    })
+                faults: Some(FaultConfig {
+                    rel: rel_card(TECHS[t_i]),
+                    seed: campaign_seed(seed, t),
+                }),
+                backend: MemBackendConfig::FixedLatency,
+            })
+        })
+        .collect();
+    let _span = crate::span!(
+        "figrel.campaign",
+        net = net.name,
+        cells = cells.len(),
+        configs = configs.len(),
+    );
+    let sims = simulate_group(trace.into_iter(), &configs, warmup, recommended_shards());
+    let tr = trials as usize;
+    cells
+        .iter()
+        .enumerate()
+        .map(|(cell_i, &(t_i, c_i, policy))| {
+            let tech = TECHS[t_i];
+            let rel = rel_card(tech);
+            let cap_mb = caps[c_i];
+            let gpu = GpuConfig::gtx_1080_ti().with_l2(cap_mb * MB);
+            let line_bits = gpu.l2_line * 8;
+            let mut row = RelRow {
+                tech,
+                net: net.name.clone(),
+                batch,
+                cap_mb,
+                policy,
+                trials,
+                corrected: 0,
+                detected: 0,
+                silent: 0,
+                retired_ways: 0,
+                max_line_writes: 0,
+                uber: 0.0,
+                lifetime_years: 0.0,
+            };
+            for sim in &sims[cell_i * tr..(cell_i + 1) * tr] {
+                let stats = model::stats_from_sim(sim, gpu.l2_line);
+                let time = model::evaluate(&ppas[t_i][c_i], &stats).total_time();
+                let ev = model::rel_from_sim(&rel, sim, line_bits, time);
+                row.corrected += ev.corrected;
+                row.detected += ev.detected;
+                row.silent += ev.silent;
+                row.retired_ways += ev.retired_ways;
+                row.max_line_writes = row.max_line_writes.max(sim.max_line_writes);
+                row.uber += ev.uber / trials as f64;
+                row.lifetime_years += ev.lifetime_years / trials as f64;
+            }
+            row
+        })
+        .collect()
 }
 
 /// figRel generator: the Monte Carlo fault campaign. Defaults replay

@@ -110,6 +110,12 @@ impl ExploreResult {
                 self.outcome.screened
             ));
         }
+        if self.outcome.deduped > 0 {
+            coverage.push_str(&format!(
+                ", {} duplicate candidates deduplicated",
+                self.outcome.deduped
+            ));
+        }
         coverage.push(')');
         out.push(coverage);
         if let Some(k) = self.knee {

@@ -105,6 +105,12 @@ pub struct SearchOutcome {
     /// Adaptive only: pool size screened at the tune-only fidelity
     /// (0 when the budget covered the pool outright).
     pub screened: usize,
+    /// Duplicate candidate queries merged before evaluation — overlapping
+    /// axes can materialize the same query at distinct grid points (and
+    /// the adaptive screen's workload-stripped proxies collapse even
+    /// more). Each duplicate shares its twin's evaluation instead of
+    /// re-entering the engine.
+    pub deduped: usize,
 }
 
 /// Run one search. `space` should be normalized (see
@@ -133,24 +139,28 @@ pub fn search(
             // Even deterministic stride over the flat grid when the
             // budget can't cover it (first point always included).
             let flats: Vec<u128> = (0..n).map(|i| i * size / n).collect();
-            let (evaluated, errors) = evaluate_flats(engine, &space, objectives, &flats, false);
+            let (evaluated, errors, deduped) =
+                evaluate_flats(engine, &space, objectives, &flats, false);
             Ok(SearchOutcome {
                 evaluated,
                 errors,
                 space_size: size,
                 subsampled,
                 screened: 0,
+                deduped,
             })
         }
         Strategy::Random => {
             let flats = sample_distinct(size, size.min(budget) as usize, cfg.seed);
-            let (evaluated, errors) = evaluate_flats(engine, &space, objectives, &flats, false);
+            let (evaluated, errors, deduped) =
+                evaluate_flats(engine, &space, objectives, &flats, false);
             Ok(SearchOutcome {
                 evaluated,
                 errors,
                 space_size: size,
                 subsampled: false,
                 screened: 0,
+                deduped,
             })
         }
         Strategy::Adaptive => {
@@ -158,7 +168,7 @@ pub fn search(
             let pool = sample_distinct(size, pool_n, cfg.seed);
             if pool.len() as u128 <= budget {
                 // The budget covers the whole pool: nothing to screen.
-                let (evaluated, errors) =
+                let (evaluated, errors, deduped) =
                     evaluate_flats(engine, &space, objectives, &pool, false);
                 return Ok(SearchOutcome {
                     evaluated,
@@ -166,10 +176,12 @@ pub fn search(
                     space_size: size,
                     subsampled: false,
                     screened: 0,
+                    deduped,
                 });
             }
             // Fidelity 0: tune-only EDAP screen over the pool.
-            let (proxies, mut errors) = evaluate_flats(engine, &space, objectives, &pool, true);
+            let (proxies, mut errors, proxy_deduped) =
+                evaluate_flats(engine, &space, objectives, &pool, true);
             let screened = pool.len();
             let mut ranked: Vec<(f64, u128)> = proxies
                 .iter()
@@ -184,7 +196,7 @@ pub fn search(
             let survivors: Vec<u128> =
                 ranked.iter().take(cfg.budget).map(|&(_, flat)| flat).collect();
             // Fidelity 1: full cross-layer evaluation of the survivors.
-            let (evaluated, mut full_errors) =
+            let (evaluated, mut full_errors, full_deduped) =
                 evaluate_flats(engine, &space, objectives, &survivors, false);
             errors.append(&mut full_errors);
             Ok(SearchOutcome {
@@ -193,6 +205,7 @@ pub fn search(
                 space_size: size,
                 subsampled: false,
                 screened,
+                deduped: proxy_deduped + full_deduped,
             })
         }
     }
@@ -210,14 +223,16 @@ fn flat_of(space: &Space, candidate: &Candidate) -> u128 {
 /// Materialize and evaluate the candidates at the given flat indices, in
 /// order, through [`Engine::evaluate_many`]. With `proxy` set, queries
 /// run tune-only (workload and batch stripped) — the adaptive screen's
-/// cheap fidelity — and objective vectors are left empty.
+/// cheap fidelity — and objective vectors are left empty. Identical
+/// queries are evaluated once and the result shared (the third return is
+/// the number of duplicates merged).
 fn evaluate_flats(
     engine: &Engine,
     space: &Space,
     objectives: &[Objective],
     flats: &[u128],
     proxy: bool,
-) -> (Vec<Explored>, Vec<(String, String)>) {
+) -> (Vec<Explored>, Vec<(String, String)>, usize) {
     let _span = crate::span!("explore.evaluate_flats", candidates = flats.len(), proxy = proxy);
     let mut errors: Vec<(String, String)> = Vec::new();
     let mut candidates: Vec<Candidate> = Vec::new();
@@ -238,7 +253,31 @@ fn evaluate_flats(
             }
         })
         .collect();
-    let results = engine.evaluate_many(&queries);
+    // Overlapping axes can materialize the same query at distinct grid
+    // points (and proxy stripping collapses workload-only differences):
+    // evaluate each distinct query once and fan the shared result back
+    // out. Linear scan — `Query` is `Eq` but deliberately not `Hash`, and
+    // candidate lists are budget-sized.
+    let mut unique: Vec<Query> = Vec::with_capacity(queries.len());
+    let mut slot_of: Vec<usize> = Vec::with_capacity(queries.len());
+    for q in &queries {
+        match unique.iter().position(|u| u == q) {
+            Some(i) => slot_of.push(i),
+            None => {
+                slot_of.push(unique.len());
+                unique.push(q.clone());
+            }
+        }
+    }
+    let deduped = queries.len() - unique.len();
+    let unique_results = engine.evaluate_many(&unique);
+    let results: Vec<crate::Result<Evaluation>> = slot_of
+        .iter()
+        .map(|&i| match &unique_results[i] {
+            Ok(eval) => Ok(eval.clone()),
+            Err(e) => Err(msg(e.to_string())),
+        })
+        .collect();
     if crate::telemetry::enabled() {
         // How evenly the candidate fan-out spread over pool workers —
         // `explore.pool_imbalance` sits next to the explore spans in run
@@ -286,7 +325,7 @@ fn evaluate_flats(
             }
         }
     }
-    (evaluated, errors)
+    (evaluated, errors, deduped)
 }
 
 /// `n` distinct flat indices drawn uniformly from `[0, size)` with a

@@ -26,6 +26,13 @@
 //! assumed), so the sharded replay's bit-exactness guarantee is
 //! untouched: decoding yields the exact `Access` stream that was pushed,
 //! pinned against the golden trace checksums in `tests/golden.rs`.
+//!
+//! Zero-access streams are first-class, not a caller obligation: an empty
+//! trace encodes to zero bytes and zero blocks, every decode entry point
+//! yields an empty stream, and out-of-range block indices panic loudly
+//! instead of decoding garbage. The multi-configuration replay leans on
+//! this — a shard whose set-residue class received no accesses round
+//! trips as an empty block list.
 
 use super::trace::Access;
 
@@ -110,7 +117,8 @@ impl CompressedTrace {
         self.bytes.len()
     }
 
-    /// Number of blocks (`len` rounded up to [`BLOCK_ACCESSES`]).
+    /// Number of blocks (`len` rounded up to [`BLOCK_ACCESSES`]; zero for
+    /// an empty trace).
     pub fn num_blocks(&self) -> usize {
         self.blocks.len()
     }
@@ -139,6 +147,20 @@ impl CompressedTrace {
             remaining: self.len - b * BLOCK_ACCESSES,
             until_reset: BLOCK_ACCESSES,
         }
+    }
+
+    /// Decode exactly block `b` (up to [`BLOCK_ACCESSES`] accesses) into
+    /// `out`, clearing it first; returns the access count. This is the
+    /// multi-configuration replay's decode-once primitive: one call per
+    /// (shard, block), then every candidate hierarchy probes the same
+    /// decoded buffer. `b == num_blocks()` decodes nothing — the only
+    /// valid index into a zero-access trace — and a larger `b` panics
+    /// like [`CompressedTrace::iter_blocks`].
+    pub fn decode_block(&self, b: usize, out: &mut Vec<Access>) -> usize {
+        out.clear();
+        let n = self.len.saturating_sub(b * BLOCK_ACCESSES).min(BLOCK_ACCESSES);
+        out.extend(self.iter_blocks(b).take(n));
+        n
     }
 }
 
@@ -223,6 +245,51 @@ mod tests {
         roundtrip(&[]);
         assert!(CompressedTrace::new().is_empty());
         assert_eq!(CompressedTrace::new().iter().count(), 0);
+    }
+
+    #[test]
+    fn zero_access_trace_is_losslessly_empty_at_every_entry_point() {
+        let ct = CompressedTrace::from_accesses(std::iter::empty());
+        assert_eq!((ct.len(), ct.byte_len(), ct.num_blocks()), (0, 0, 0));
+        assert_eq!(ct.iter().count(), 0);
+        assert_eq!(ct.iter_blocks(0).count(), 0, "num_blocks() is a valid (empty) index");
+        let mut buf = vec![Access { addr: 99, write: true }];
+        assert_eq!(ct.decode_block(0, &mut buf), 0);
+        assert!(buf.is_empty(), "decode_block clears stale contents");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_block_panics_loudly_on_an_empty_trace() {
+        let mut buf = Vec::new();
+        CompressedTrace::new().decode_block(1, &mut buf);
+    }
+
+    #[test]
+    fn decode_block_matches_the_pushed_slice_per_block() {
+        // Cover both a ragged tail and an exact multiple of the block
+        // size (the boundary where a lazily-pushed final block must not
+        // exist).
+        for len in [3 * BLOCK_ACCESSES + 17, 2 * BLOCK_ACCESSES, 1, 0] {
+            let accesses: Vec<Access> = (0..len as u64)
+                .map(|i| Access { addr: (i * 37) % 9973 * 128, write: i % 5 == 0 })
+                .collect();
+            let ct = CompressedTrace::from_accesses(accesses.iter().copied());
+            assert_eq!(ct.num_blocks(), len.div_ceil(BLOCK_ACCESSES), "len {len}");
+            let mut buf = Vec::new();
+            let mut decoded = Vec::new();
+            for b in 0..ct.num_blocks() {
+                let n = ct.decode_block(b, &mut buf);
+                assert_eq!(n, buf.len());
+                assert_eq!(
+                    buf,
+                    accesses[b * BLOCK_ACCESSES..(b * BLOCK_ACCESSES + n)],
+                    "block {b} of len {len}"
+                );
+                decoded.extend_from_slice(&buf);
+            }
+            assert_eq!(decoded, accesses, "blockwise decode is lossless at len {len}");
+        }
     }
 
     #[test]

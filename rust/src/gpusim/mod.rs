@@ -36,7 +36,11 @@
 //!   when disarmed — and [`simulate_backend`] / [`simulate_full`], which
 //!   put a [`crate::membackend`] memory device behind the L2 (row-buffer
 //!   and bank-traffic counters in `SimResult::dram`, merged exactly
-//!   across shards).
+//!   across shards), and the **multi-configuration single-pass replay**
+//!   ([`simulate_group`]): one shared partition ([`group_modulus`] gcd
+//!   set-residue geometry) drives N independent [`ReplayConfig`]
+//!   hierarchies per decoded block — decode once, probe many — with every
+//!   member bit-identical to its standalone [`simulate_full`] run.
 
 pub mod cache;
 pub mod config;
@@ -51,8 +55,9 @@ pub use cache::{
 pub use config::{parse_faults, parse_l1, CacheConfig, GpuConfig};
 pub use ctrace::{CompressedTrace, Decoder, BLOCK_ACCESSES};
 pub use sim::{
-    capacity_sweep, capacity_sweep_config, fig7_capacities, simulate, simulate_backend,
-    simulate_config, simulate_full, simulate_sharded, simulate_with_faults, CapacitySweepSim,
-    Hierarchy, L1Result, ShardedTrace, SimResult, SweepPoint,
+    capacity_sweep, capacity_sweep_config, fig7_capacities, group_modulus, simulate,
+    simulate_backend, simulate_config, simulate_full, simulate_group, simulate_sharded,
+    simulate_with_faults, CapacitySweepSim, Hierarchy, L1Result, ReplayConfig, ShardedTrace,
+    SimResult, SweepPoint, GROUP_CHUNK,
 };
 pub use trace::{net_trace, Access, TraceGen};

@@ -44,11 +44,11 @@ use std::collections::{HashMap, HashSet, VecDeque};
 
 use super::cache::{Cache, Outcome, PolicyCache, Replacement, Srrip, TreePlru, WritePolicy};
 use super::config::{CacheConfig, GpuConfig};
-use super::ctrace::CompressedTrace;
+use super::ctrace::{CompressedTrace, BLOCK_ACCESSES};
 use super::trace::Access;
 use crate::membackend::{DramStats, MemBackend, MemBackendConfig, MemoryBackend};
 use crate::reliability::{FaultConfig, FaultState};
-use crate::util::pool::par_map_indexed;
+use crate::util::pool::{par_map, par_map_indexed};
 use crate::util::units::MB;
 
 /// Result of running one trace through one cache configuration.
@@ -574,6 +574,23 @@ pub fn simulate_full(
     parts.replay(config, cache, faults, backend)
 }
 
+/// Multi-configuration single-pass replay: partition `trace` once for the
+/// whole group ([`ShardedTrace::partition_group`]) and replay every
+/// member in one decode pass ([`ShardedTrace::replay_group`]). Results
+/// align with `configs`; each is bit-identical to the corresponding
+/// per-candidate [`simulate_full`] call. This is the batched engine the
+/// explore fan-out, figWP/figMem/figRel, and `Engine::evaluate_many`
+/// grouping ride.
+pub fn simulate_group(
+    trace: impl IntoIterator<Item = Access>,
+    configs: &[ReplayConfig],
+    warmup_accesses: u64,
+    max_shards: usize,
+) -> Vec<SimResult> {
+    let parts = ShardedTrace::partition_group(trace, configs, warmup_accesses, max_shards);
+    parts.replay_group(configs)
+}
+
 /// Largest shard-key modulus valid for one hierarchy: the shard key must
 /// be constant across every set an access touches. Without an L1 that is
 /// the L2 set count (any divisor works); with an L1 it must also respect
@@ -589,6 +606,55 @@ fn shard_group(config: &GpuConfig, cache: CacheConfig) -> u64 {
     } else {
         config.l2_sets()
     }
+}
+
+/// One candidate of a multi-configuration single-pass replay (MCSR)
+/// group: the full hierarchy recipe [`simulate_full`] takes, as data. A
+/// slice of these is a *config group* — [`simulate_group`] partitions the
+/// shared trace once and drives every decoded block through each member's
+/// [`Hierarchy`] in one pass (decode once, probe many), with per-member
+/// counters bit-identical to the standalone `simulate_full` call.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// GPU geometry (L2 capacity/line/associativity, L1 shape).
+    pub config: GpuConfig,
+    /// Replacement policy, write policy, and the L1 toggle.
+    pub cache: CacheConfig,
+    /// Optional fault injector armed on the L2.
+    pub faults: Option<FaultConfig>,
+    /// Memory backend behind the L2.
+    pub backend: MemBackendConfig,
+}
+
+impl ReplayConfig {
+    /// The fault-free fixed-latency case (the explore / figWP shape).
+    pub fn new(config: GpuConfig, cache: CacheConfig) -> ReplayConfig {
+        ReplayConfig { config, cache, faults: None, backend: MemBackendConfig::FixedLatency }
+    }
+
+    fn hierarchy(&self) -> Hierarchy {
+        Hierarchy::with_backend(&self.config, self.cache, self.faults, &self.backend)
+    }
+}
+
+/// Configs per MCSR pool task: each (shard × chunk) task decodes its
+/// shard's blocks once and probes up to this many hierarchies from the
+/// same decoded buffer. Small enough that a skewed hot shard still splits
+/// across workers for stealing to balance; large enough to amortize the
+/// decode by close to an order of magnitude (BENCH_batch records the
+/// realized factor).
+pub const GROUP_CHUNK: usize = 8;
+
+/// Largest shard-key modulus valid for **every** member of a config
+/// group: the gcd of the members' per-config moduli. Any common divisor
+/// of every simulated level's set count preserves per-set access order
+/// for all members at once, so one partition serves the whole group —
+/// the same argument [`capacity_sweep_config`] uses for its shared
+/// per-capacity partition. An L1-enabled member with mismatched line
+/// sizes contributes 1, collapsing the group to a single shard (still
+/// exact, just serial per chunk).
+pub fn group_modulus(configs: &[ReplayConfig]) -> u64 {
+    configs.iter().map(|rc| shard_group(&rc.config, rc.cache)).fold(0, gcd).max(1)
 }
 
 /// A trace partitioned by set residue class into per-shard compressed
@@ -714,6 +780,134 @@ impl ShardedTrace {
             }
         }
         out
+    }
+
+    /// Partition `trace` once for a whole config group: the shard-key
+    /// modulus is [`group_modulus`] (valid for every member) folded onto
+    /// at most `max_shards` buckets. Every member must share one L2 line
+    /// size — the shard key works at `addr / line` granularity.
+    pub fn partition_group(
+        trace: impl IntoIterator<Item = Access>,
+        configs: &[ReplayConfig],
+        warmup_accesses: u64,
+        max_shards: usize,
+    ) -> ShardedTrace {
+        assert!(!configs.is_empty(), "a config group needs at least one member");
+        let line = configs[0].config.l2_line;
+        assert!(
+            configs.iter().all(|rc| rc.config.l2_line == line),
+            "a config group shares one L2 line size (the shard-key granularity)"
+        );
+        let group = group_modulus(configs);
+        let shards = group.min(max_shards.max(1) as u64).max(1) as usize;
+        ShardedTrace::partition_by(trace, line, group, shards, warmup_accesses)
+    }
+
+    /// Multi-configuration single-pass replay: decode each shard's blocks
+    /// once per config chunk and probe every member [`Hierarchy`] from the
+    /// same decoded buffer. Results align with `configs`, and each is
+    /// bit-identical to a standalone [`simulate_full`] run of that member
+    /// (any shard modulus dividing every level's set count reproduces the
+    /// sequential counters; the differential matrix lives in
+    /// `tests/mcsr.rs`). The partition must have been built for a group
+    /// modulus every member admits — [`ShardedTrace::partition_group`]
+    /// over a superset of `configs` guarantees that.
+    ///
+    /// Work dispatches through the pool as one task per (shard × chunk of
+    /// [`GROUP_CHUNK`] configs), so the work-stealing scheduler balances
+    /// skewed set-residue classes exactly as in the single-config replay.
+    pub fn replay_group(&self, configs: &[ReplayConfig]) -> Vec<SimResult> {
+        assert!(!configs.is_empty(), "a config group needs at least one member");
+        let chunks: Vec<&[ReplayConfig]> = configs.chunks(GROUP_CHUNK).collect();
+        // Shard-major task order: a shard's chunks replay the same
+        // compressed bytes, so adjacent queue slots share cache footprint.
+        let tasks: Vec<(usize, usize)> = (0..self.parts.len())
+            .flat_map(|s| (0..chunks.len()).map(move |c| (s, c)))
+            .collect();
+        let results = par_map(&tasks, |&(s, c)| self.replay_chunk(s, chunks[c]));
+        let t_merge = std::time::Instant::now();
+        let mut out: Vec<SimResult> =
+            configs.iter().map(|rc| SimResult::zero(rc.config.l2_bytes)).collect();
+        let (mut decode_s, mut probe_s) = (0.0, 0.0);
+        for (&(_, c), (partials, d, p)) in tasks.iter().zip(results) {
+            for (i, r) in partials.iter().enumerate() {
+                out[c * GROUP_CHUNK + i].merge_from(r);
+            }
+            decode_s += d;
+            probe_s += p;
+        }
+        if crate::telemetry::enabled() {
+            crate::telemetry::counter_add("sim.group.replays", 1);
+            crate::telemetry::counter_add("sim.group.configs", configs.len() as u64);
+            crate::telemetry::observe("sim.group.size", configs.len() as f64);
+            crate::telemetry::observe("sim.group.decode_s", decode_s);
+            crate::telemetry::observe("sim.group.probe_s", probe_s);
+            crate::telemetry::observe("gpusim.merge_s", t_merge.elapsed().as_secs_f64());
+        }
+        out
+    }
+
+    /// Replay one shard through one chunk of group members, block by
+    /// block: each block decodes once into a reusable buffer, then every
+    /// member hierarchy replays it (warmup split included). Returns the
+    /// per-member results plus this task's decode/probe wall-time split.
+    fn replay_chunk(&self, shard: usize, chunk: &[ReplayConfig]) -> (Vec<SimResult>, f64, f64) {
+        let (trace, warm) = &self.parts[shard];
+        let _span = crate::span!(
+            "gpusim.group.task",
+            shard = shard,
+            configs = chunk.len(),
+            accesses = trace.len(),
+        );
+        let mut hierarchies: Vec<Hierarchy> = chunk.iter().map(ReplayConfig::hierarchy).collect();
+        let mut buf: Vec<Access> = Vec::with_capacity(BLOCK_ACCESSES.min(trace.len()));
+        let (mut decode_s, mut probe_s) = (0.0, 0.0);
+        // Accesses replayed so far; while below the shard's warmup share
+        // the counters are still pre-measurement.
+        let mut pos: u64 = 0;
+        let mut measuring = !self.warmup;
+        for b in 0..trace.num_blocks() {
+            let t_decode = std::time::Instant::now();
+            trace.decode_block(b, &mut buf);
+            let t_probe = std::time::Instant::now();
+            decode_s += (t_probe - t_decode).as_secs_f64();
+            if measuring {
+                for h in &mut hierarchies {
+                    for a in &buf {
+                        h.access(a.addr, a.write);
+                    }
+                }
+            } else {
+                // The warmup prefix ends inside (or exactly at the end
+                // of) this shard: split the block and reset counters at
+                // the boundary, matching `replay`'s take(warm) split.
+                let split = ((*warm - pos) as usize).min(buf.len());
+                pos += split as u64;
+                let boundary = pos == *warm;
+                for h in &mut hierarchies {
+                    for a in &buf[..split] {
+                        h.access(a.addr, a.write);
+                    }
+                    if boundary {
+                        h.start_measurement();
+                    }
+                    for a in &buf[split..] {
+                        h.access(a.addr, a.write);
+                    }
+                }
+                measuring = boundary;
+            }
+            probe_s += t_probe.elapsed().as_secs_f64();
+        }
+        if !measuring {
+            // Degenerate warmup shard (empty, or fully consumed by the
+            // prefix with no boundary block): `replay` still calls
+            // `start_measurement` after the prefix, so mirror it.
+            for h in &mut hierarchies {
+                h.start_measurement();
+            }
+        }
+        (hierarchies.into_iter().map(Hierarchy::finish).collect(), decode_s, probe_s)
     }
 }
 
@@ -1511,6 +1705,94 @@ mod tests {
                 &backend,
             );
             assert_eq!(seq, par, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn grouped_replay_matches_per_candidate_simulation() {
+        let net = nets::squeezenet();
+        let trace: Vec<Access> = net_trace(&net, 1).collect();
+        let gpu = GpuConfig::gtx_1080_ti();
+        let configs: Vec<ReplayConfig> = [
+            CacheConfig::default(),
+            CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() },
+            CacheConfig { replacement: Replacement::Srrip, ..CacheConfig::default() },
+            CacheConfig { l1: true, ..CacheConfig::default() },
+        ]
+        .into_iter()
+        .map(|cache| ReplayConfig::new(gpu.clone(), cache))
+        .collect();
+        let warm = (trace.len() / 3) as u64;
+        let grouped = simulate_group(trace.iter().copied(), &configs, warm, 8);
+        assert_eq!(grouped.len(), configs.len());
+        for (rc, got) in configs.iter().zip(&grouped) {
+            let direct = simulate_full(
+                trace.iter().copied(),
+                &rc.config,
+                rc.cache,
+                warm,
+                8,
+                rc.faults,
+                &rc.backend,
+            );
+            assert_eq!(*got, direct, "{}", rc.cache.describe());
+        }
+    }
+
+    #[test]
+    fn group_modulus_folds_member_geometries() {
+        let base = GpuConfig::gtx_1080_ti();
+        let one = [ReplayConfig::new(base.clone(), CacheConfig::default())];
+        assert_eq!(group_modulus(&one), base.l2_sets());
+        // 1 MB (512 sets) and 3 MB (1536 sets) share a gcd of 512.
+        let mixed = [
+            ReplayConfig::new(base.clone().with_l2(MB), CacheConfig::default()),
+            ReplayConfig::new(base.clone(), CacheConfig::default()),
+        ];
+        assert_eq!(group_modulus(&mixed), 512);
+        // An L1 member with mismatched line sizes collapses the group.
+        let mut odd_line = base.clone();
+        odd_line.l1_line = base.l2_line / 2;
+        let collapsed = [ReplayConfig::new(
+            odd_line,
+            CacheConfig { l1: true, ..CacheConfig::default() },
+        )];
+        assert_eq!(group_modulus(&collapsed), 1);
+    }
+
+    #[test]
+    fn grouped_replay_handles_empty_and_all_warmup_traces() {
+        let gpu = GpuConfig::gtx_1080_ti();
+        let configs = [
+            ReplayConfig::new(gpu.clone(), CacheConfig::default()),
+            ReplayConfig::new(
+                gpu.clone(),
+                CacheConfig { write: WritePolicy::WriteThrough, ..CacheConfig::default() },
+            ),
+        ];
+        // Zero-access trace: one zeroed result per member.
+        let empty = simulate_group(std::iter::empty(), &configs, 0, 4);
+        assert_eq!(empty.len(), 2);
+        for r in &empty {
+            assert_eq!((r.l2_accesses, r.warmup_accesses), (0, 0));
+        }
+        // A warmup prefix covering the whole trace measures nothing but
+        // still counts the prefix, exactly like the per-candidate path.
+        let trace: Vec<Access> =
+            (0..100u64).map(|i| Access { addr: i * 128, write: i % 2 == 0 }).collect();
+        let all_warm = simulate_group(trace.iter().copied(), &configs, 100, 4);
+        for (rc, got) in configs.iter().zip(&all_warm) {
+            let direct = simulate_full(
+                trace.iter().copied(),
+                &rc.config,
+                rc.cache,
+                100,
+                4,
+                rc.faults,
+                &rc.backend,
+            );
+            assert_eq!(*got, direct);
+            assert_eq!((got.l2_accesses, got.warmup_accesses), (0, 100));
         }
     }
 

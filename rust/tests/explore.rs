@@ -264,6 +264,32 @@ fn random_and_adaptive_replay_exactly_under_a_seed() {
     assert!(r.outcome.evaluated.len() <= 6);
 }
 
+/// Identical candidate queries evaluate once: the adaptive screen's
+/// workload-stripped proxies collapse batch-only differences into one
+/// tune-only query, and the merge count surfaces in the outcome and the
+/// manifest coverage line.
+#[test]
+fn duplicate_candidates_deduplicate_before_evaluation() {
+    let engine = Engine::shared();
+    let space =
+        Space::new().tech(["stt"]).capacity_mb([2]).workload([alexnet_i()]).batch([1, 2, 4, 8]);
+    let cfg = SearchConfig { strategy: Strategy::Adaptive, budget: 2, seed: 7 };
+    let r = explore::run(engine, &space, &[Objective::Edp], &cfg).unwrap();
+    assert_eq!(r.outcome.screened, 4, "{:?}", r.outcome.errors);
+    assert_eq!(r.outcome.deduped, 3, "4 proxies share one tune-only query");
+    assert!(r.outcome.evaluated.len() <= 2);
+    assert!(
+        r.manifest_lines().iter().any(|l| l.contains("3 duplicate candidates deduplicated")),
+        "{:?}",
+        r.manifest_lines()
+    );
+    // A grid of distinct full queries merges nothing (and keeps the
+    // coverage line free of the clause).
+    let g = explore::run(engine, &space, &[Objective::Edp], &SearchConfig::default()).unwrap();
+    assert_eq!(g.outcome.deduped, 0);
+    assert!(g.manifest_lines().iter().all(|l| !l.contains("deduplicated")));
+}
+
 /// Reliability objectives ride the same machinery: candidates on a
 /// `[rel]` technology carry lifetime/uber roll-ups, rel-free candidates
 /// are skipped with an explanation, and `rel.*` spec axes derive

@@ -1,0 +1,214 @@
+//! Differential matrix for the multi-configuration single-pass replay
+//! (MCSR): a grouped replay must be counter-bit-identical to running
+//! `simulate_full` per candidate — across replacement × write policy ×
+//! L1 toggle × capacity, mixed fault-injecting and DRAM-backed members,
+//! shard counts {1, 2, 7, 16}, both pool schedulers, and warmup
+//! boundaries — and the engine's `evaluate_many` grouping must reproduce
+//! per-query `evaluate` exactly. This is the guarantee that makes the
+//! decode-once batch path a pure wall-time optimization.
+
+use deepnvm::engine::{Engine, Query, TechSpec};
+use deepnvm::gpusim::{
+    simulate_full, simulate_group, Access, CacheConfig, GpuConfig, Replacement, ReplayConfig,
+    WritePolicy, GROUP_CHUNK,
+};
+use deepnvm::membackend::{DramConfig, MemBackendConfig};
+use deepnvm::reliability::{FaultConfig, RelSpec};
+use deepnvm::util::pool::{with_scheduler, with_threads, Scheduler};
+use deepnvm::util::rng::Rng;
+use deepnvm::util::units::{KB, MB};
+use deepnvm::workloads::memstats::Phase;
+use deepnvm::workloads::profiler::Workload;
+
+/// A small GPU model (128B lines, 4-SM × 4KB aggregate L1) — same shape
+/// as the `tests/hierarchy.rs` differential geometry.
+fn toy_gpu(l2_kb: u64, l2_assoc: u64) -> GpuConfig {
+    let mut g = GpuConfig::gtx_1080_ti();
+    g.l2_bytes = l2_kb * KB;
+    g.l2_line = 128;
+    g.l2_assoc = l2_assoc;
+    g.cores = 4;
+    g.l1_bytes = 4 * KB;
+    g.l1_line = 128;
+    g.l1_assoc = 2;
+    g
+}
+
+fn random_trace(rng: &mut Rng, n: usize, span_lines: u64) -> Vec<Access> {
+    (0..n)
+        .map(|_| Access { addr: rng.gen_range(span_lines) * 128, write: rng.chance(0.4) })
+        .collect()
+}
+
+/// The full member matrix one group carries: every policy combination at
+/// two geometries, plus fault-injecting and DRAM-backed members mixed in.
+fn matrix_configs() -> Vec<ReplayConfig> {
+    let mut out = Vec::new();
+    for gpu in [toy_gpu(64, 4), toy_gpu(256, 16)] {
+        for replacement in Replacement::ALL {
+            for write in WritePolicy::ALL {
+                for l1 in [false, true] {
+                    out.push(ReplayConfig::new(
+                        gpu.clone(),
+                        CacheConfig { replacement, write, l1 },
+                    ));
+                }
+            }
+        }
+        out.push(ReplayConfig {
+            config: gpu.clone(),
+            cache: CacheConfig::default(),
+            faults: Some(FaultConfig { rel: RelSpec::stt_default(), seed: 0xBEEF }),
+            backend: MemBackendConfig::FixedLatency,
+        });
+        out.push(ReplayConfig {
+            config: gpu.clone(),
+            cache: CacheConfig { write: WritePolicy::WriteBypass, ..CacheConfig::default() },
+            faults: None,
+            backend: MemBackendConfig::Dram(DramConfig::default()),
+        });
+    }
+    out
+}
+
+/// Grouped == per-candidate, member for member, for every shard count ×
+/// scheduler combination. `SimResult` equality covers every counter:
+/// hit/miss split, writebacks, array writes, L1 counters, DRAM row-class
+/// counters, and fault-injection outcomes.
+#[test]
+fn grouped_replay_is_bit_identical_to_per_candidate_simulate_full() {
+    let mut rng = Rng::new(0x6C5);
+    let trace = random_trace(&mut rng, 3000, 2048);
+    let warm = trace.len() as u64 / 3;
+    let configs = matrix_configs();
+    assert!(configs.len() > 2 * GROUP_CHUNK, "matrix spans several config chunks");
+    for shards in [1usize, 2, 7, 16] {
+        // Per-candidate baselines at the same shard budget.
+        let baselines: Vec<_> = configs
+            .iter()
+            .map(|rc| {
+                simulate_full(
+                    trace.iter().copied(),
+                    &rc.config,
+                    rc.cache,
+                    warm,
+                    shards,
+                    rc.faults,
+                    &rc.backend,
+                )
+            })
+            .collect();
+        for sched in [Scheduler::Stealing, Scheduler::Chunked] {
+            let grouped = with_threads(4, || {
+                with_scheduler(sched, || {
+                    simulate_group(trace.iter().copied(), &configs, warm, shards)
+                })
+            });
+            assert_eq!(grouped.len(), configs.len());
+            for (i, (g, b)) in grouped.iter().zip(&baselines).enumerate() {
+                assert_eq!(
+                    g,
+                    b,
+                    "member {i} ({} @ {}B L2, faults {}, {shards} shards, {sched:?})",
+                    configs[i].cache.describe(),
+                    configs[i].config.l2_bytes,
+                    configs[i].faults.is_some()
+                );
+            }
+        }
+    }
+}
+
+/// Warmup edges: boundaries at zero, mid-trace, exactly the trace length,
+/// and past the end all reproduce the per-candidate counters, and a
+/// zero-access trace replays to the per-candidate empty result.
+#[test]
+fn grouped_replay_warmup_and_empty_trace_edges_are_exact() {
+    let mut rng = Rng::new(0xED6E);
+    let trace = random_trace(&mut rng, 900, 512);
+    let configs: Vec<ReplayConfig> = [
+        CacheConfig::default(),
+        CacheConfig { write: WritePolicy::WriteThrough, ..CacheConfig::default() },
+        CacheConfig { replacement: Replacement::Srrip, write: WritePolicy::WriteBypass, l1: true },
+    ]
+    .into_iter()
+    .map(|cache| ReplayConfig::new(toy_gpu(64, 4), cache))
+    .collect();
+    let n = trace.len() as u64;
+    for warm in [0, n / 2, n, n + 7] {
+        let grouped = simulate_group(trace.iter().copied(), &configs, warm, 8);
+        for (rc, g) in configs.iter().zip(&grouped) {
+            let solo = simulate_full(
+                trace.iter().copied(),
+                &rc.config,
+                rc.cache,
+                warm,
+                8,
+                None,
+                &MemBackendConfig::FixedLatency,
+            );
+            assert_eq!(*g, solo, "{} warm {warm}", rc.cache.describe());
+        }
+    }
+    for warm in [0u64, 5] {
+        let grouped = simulate_group(std::iter::empty(), &configs, warm, 8);
+        for (rc, g) in configs.iter().zip(&grouped) {
+            let solo = simulate_full(
+                std::iter::empty(),
+                &rc.config,
+                rc.cache,
+                warm,
+                8,
+                None,
+                &MemBackendConfig::FixedLatency,
+            );
+            assert_eq!(*g, solo, "empty trace, warm {warm}");
+            assert_eq!(g.l2_accesses, 0);
+        }
+    }
+}
+
+/// Engine level: `evaluate_many`'s grouped prefetch (profile, DRAM, and
+/// fault-campaign slots all riding one shared-trace replay) answers every
+/// query identically to a fresh engine evaluating them one at a time.
+#[test]
+fn engine_grouped_prefetch_matches_per_query_evaluation() {
+    let rel_tech = || {
+        let mut t = TechSpec::stt();
+        t.id = "stt_rel_mcsr".into();
+        t.name = "STT-rel-mcsr".into();
+        t.rel = Some(RelSpec::stt_default());
+        t
+    };
+    let grouped_engine = Engine::new();
+    grouped_engine.register(rel_tech()).unwrap();
+    let solo_engine = Engine::new();
+    solo_engine.register(rel_tech()).unwrap();
+    let w = Workload::net("squeezenet", Phase::Inference);
+    let base = Query::tune("stt", 2 * MB).with_workload(w).with_batch(1);
+    let queries = [
+        Query { tech: "stt_rel_mcsr".into(), ..base.clone() },
+        base.clone().with_cache(CacheConfig {
+            write: WritePolicy::WriteBypass,
+            ..CacheConfig::default()
+        }),
+        base.clone().simulate_profile(),
+        base.with_dram(MemBackendConfig::Dram(DramConfig::default())),
+    ];
+    let batch = grouped_engine.evaluate_many(&queries);
+    for (q, b) in queries.iter().zip(&batch) {
+        let b = b.as_ref().unwrap();
+        let s = solo_engine.evaluate(q).unwrap();
+        let (bw, sw) = (b.workload.as_ref().unwrap(), s.workload.as_ref().unwrap());
+        assert_eq!(bw.stats, sw.stats, "{}: profiled counters", q.tech);
+        assert_eq!(bw.dram, sw.dram, "{}: DRAM observation", q.tech);
+        assert_eq!(
+            bw.rollup.total_time().to_bits(),
+            sw.rollup.total_time().to_bits(),
+            "{}: roll-up",
+            q.tech
+        );
+        assert_eq!(b.rel, s.rel, "{}: fault campaign", q.tech);
+    }
+    assert!(batch[0].as_ref().unwrap().rel.is_some(), "[rel] member ran the campaign");
+}
